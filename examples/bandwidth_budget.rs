@@ -1,0 +1,82 @@
+//! Bandwidth-constrained design (the paper's conclusion: "This approach
+//! can be used to design FL systems with bandwidth constraints").
+//!
+//! Given a per-upload byte budget, enumerate the quantizer configurations
+//! that fit, simulate each, and report which reaches the target accuracy
+//! with the least *total* traffic — exposing the paper's trade-off that
+//! compressing harder sends fewer bytes per message but more messages.
+//!
+//! ```sh
+//! cargo run --release --example bandwidth_budget -- [budget_bytes]
+//! ```
+
+use qafel::config::{Algorithm, Config};
+use qafel::quant::parse_spec;
+use qafel::runtime::{Backend as _, QuadraticBackend};
+use qafel::sim::SimEngine;
+
+const D: usize = 256;
+
+fn main() -> anyhow::Result<()> {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200); // bytes per upload
+
+    let mut cfg = Config::default();
+    cfg.fl.buffer_size = 8;
+    cfg.fl.client_lr = 0.12;
+    cfg.fl.server_lr = 1.0;
+    cfg.fl.server_momentum = 0.0;
+    cfg.fl.clip_norm = 0.0;
+    cfg.sim.concurrency = 40;
+    cfg.sim.eval_every = 5;
+    cfg.stop.target_accuracy = 0.95;
+    cfg.stop.max_uploads = 150_000;
+    cfg.stop.max_server_steps = 40_000;
+
+    let candidates = [
+        "qsgd:8", "qsgd:6", "qsgd:4", "qsgd:3", "qsgd:2",
+        "top:0.25", "top:0.1", "rand:0.25", "none",
+    ];
+
+    println!("per-upload budget: {budget} bytes (model d = {D}, full precision = {} bytes)\n", 4 * D);
+    println!("quantizer     bytes/up  fits  uploads  total-MB-up  reached");
+    let mut best: Option<(String, f64)> = None;
+    for spec in candidates {
+        let q = parse_spec(spec)?;
+        let bytes = q.expected_bytes(D);
+        let fits = bytes <= budget;
+        if !fits {
+            println!("{spec:<12} {bytes:>9}   no        -            -        -");
+            continue;
+        }
+        cfg.fl.algorithm = Algorithm::Qafel;
+        cfg.quant.client = spec.to_string();
+        cfg.quant.server = "qsgd:4".to_string();
+        let backend = QuadraticBackend::new(D, 32, 1.0, 0.3, 0.2, 0.02, 1, 1);
+        let r = SimEngine::new(&cfg, &backend, 1).run()?;
+        let p = r.at_target();
+        let reached = r.reached.is_some();
+        println!(
+            "{spec:<12} {bytes:>9}   yes {:>9} {:>12.3}     {}",
+            p.uploads,
+            p.upload_mb,
+            if reached { "yes" } else { "no " }
+        );
+        if reached {
+            let better = best.as_ref().map(|(_, mb)| p.upload_mb < *mb).unwrap_or(true);
+            if better {
+                best = Some((spec.to_string(), p.upload_mb));
+            }
+        }
+        let _ = backend.d();
+    }
+    match best {
+        Some((spec, mb)) => println!(
+            "\nbest within budget: {spec} ({mb:.3} MB total upload to target)"
+        ),
+        None => println!("\nno in-budget quantizer reached the target — raise the budget"),
+    }
+    Ok(())
+}

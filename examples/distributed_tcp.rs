@@ -1,0 +1,69 @@
+//! Real distributed deployment on localhost TCP: one leader + N workers,
+//! each worker running Algorithm 2 with its own hidden-state replica
+//! (Algorithm 3) as a background thread. Every byte on the wire is the
+//! same packed payload the quantizer codecs produce.
+//!
+//! ```sh
+//! cargo run --release --example distributed_tcp -- [n_workers]
+//! ```
+//!
+//! (The `qafel leader` / `qafel worker` subcommands run the same stack as
+//! separate OS processes across machines.)
+
+use qafel::config::{Algorithm, Config};
+use qafel::net::{Leader, Worker};
+use qafel::runtime::{Backend as _, QuadraticBackend};
+
+fn main() -> anyhow::Result<()> {
+    let n_workers: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let mut cfg = Config::default();
+    cfg.fl.algorithm = Algorithm::Qafel;
+    cfg.quant.client = "qsgd:4".into();
+    cfg.quant.server = "qsgd:4".into();
+    cfg.fl.buffer_size = 4;
+    cfg.fl.client_lr = 0.05;
+    cfg.fl.server_lr = 1.0;
+    cfg.fl.server_momentum = 0.0;
+    cfg.fl.staleness_scaling = true;
+    cfg.fl.clip_norm = 0.0;
+    cfg.stop.max_server_steps = 100;
+    cfg.stop.max_uploads = 1_000_000;
+
+    let d = 128;
+    let mk = |seed| QuadraticBackend::new(d, 64, 1.0, 0.3, 0.2, 0.02, 1, seed);
+    let x0 = mk(7).init_params(0)?;
+    let g0 = mk(7).grad_norm_sq(&x0);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    println!("[leader] 127.0.0.1 (ephemeral port), {n_workers} workers, K={}", cfg.fl.buffer_size);
+
+    let leader_cfg = cfg.clone();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || Leader::new(leader_cfg, leader_x0, 1).run_on(listener, n_workers));
+
+    let mut handles = Vec::new();
+    for i in 0..n_workers {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut w = Worker::new(QuadraticBackend::new(128, 64, 1.0, 0.3, 0.2, 0.02, 1, 7));
+            w.round_delay = std::time::Duration::from_millis(2);
+            let r = w.run(&addr).expect("worker failed");
+            println!("[worker {i}] {} uploads, replica caught up to t={}", r.uploads, r.replica_t);
+        }));
+    }
+
+    let report = leader.join().unwrap()?;
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let g1 = mk(7).grad_norm_sq(&report.model);
+    println!("\n[leader] {} server steps, {} uploads", report.server_steps, report.comm.uploads);
+    println!("[leader] kB/upload = {:.3}, kB/broadcast = {:.3}",
+             report.comm.kb_per_upload(), report.comm.kb_per_download());
+    println!("[leader] staleness: mean {:.2}, max {}", report.staleness_mean, report.staleness_max);
+    println!("[leader] |grad f|^2: {g0:.3} -> {g1:.3}");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT compile path: lower the L2/L1 computations to HLO text artifacts.
+
+Runs ONCE at build time (`make artifacts`); python never appears on the
+rust request path. The interchange format is HLO *text*, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, under --out-dir (default ../artifacts):
+  <name>.hlo.txt   one per exported computation (see model.build_fns)
+  manifest.json    machine-readable description: model config, flat-param
+                   layout, and the input/output signature of every
+                   artifact. rust/src/runtime/manifest.rs parses this.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> list:
+    out = []
+    for a in avals:
+        out.append({"dtype": str(a.dtype), "shape": list(a.shape)})
+    return out
+
+
+def build_manifest(cfg: M.ModelConfig, batch: int, local_steps: int,
+                   eval_batch: int, artifacts: dict) -> dict:
+    layers = []
+    off = 0
+    for name, shape in M.param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        layers.append({"name": name, "shape": list(shape),
+                       "offset": off, "size": n})
+        off += n
+    return {
+        "format": "qafel-artifacts-v1",
+        "model": {**dataclasses.asdict(cfg), "d": off, "layers": layers},
+        "train": {"batch": batch, "local_steps": local_steps},
+        "eval_batch": eval_batch,
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="local SGD batch size (LEAF CelebA: 32)")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="P local steps per client round (1 epoch over "
+                         "<=32 samples at batch 32 -> P=1, as in the paper)")
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--channels", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of artifact names")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig(channels=args.channels, n_layers=args.layers)
+    os.makedirs(args.out_dir, exist_ok=True)
+    fns = M.build_fns(cfg, args.batch, args.local_steps, args.eval_batch)
+    only = set(filter(None, args.only.split(",")))
+
+    artifacts = {}
+    for name, (fn, avals) in fns.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*avals)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *avals)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": _sig(avals),
+            "outputs": _sig(out_avals),
+        }
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB, "
+              f"{len(avals)} in / {len(out_avals)} out)")
+
+    manifest = build_manifest(cfg, args.batch, args.local_steps,
+                              args.eval_batch, artifacts)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} (d={manifest['model']['d']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Tiled Pallas matmul kernel (L1).
+
+The kernel tiles (M, N, K) into MXU-friendly blocks expressed with
+`BlockSpec`s: the grid iterates (m, n, k); each step loads an
+(bm, bk) A-tile and a (bk, bn) B-tile from HBM into VMEM and accumulates
+into the (bm, bn) output tile, which Pallas keeps resident in VMEM across
+the innermost k axis (revisiting semantics). This is the HBM<->VMEM
+schedule a CUDA implementation would express with threadblocks + shared
+memory; on TPU the inner `jnp.dot` maps onto the MXU systolic array.
+
+On this testbed the kernel runs with interpret=True (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); correctness is validated against
+ref.matmul_ref and the real-TPU efficiency is estimated from the block
+shapes in DESIGN.md / EXPERIMENTS.md §Perf.
+
+`matmul` is differentiable via a custom VJP whose backward pass reuses the
+same Pallas kernel (dA = g @ B^T, dB = A^T @ g), so jax.grad through the
+L2 model keeps the kernel in both the forward and backward HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes: 128x128 output tiles (MXU native 128x128) with a
+# 128-deep K panel. f32[128,128] * 3 tiles = 192 KiB of VMEM, well under
+# the ~16 MiB/core budget, leaving room for double buffering.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (m, n, k) grid step: o[m,n] += a[m,k] @ b[k,n]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_mul(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                  bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K,
+                  interpret: bool = True) -> jnp.ndarray:
+    """f32 matmul via the tiled Pallas kernel. Shapes need not be aligned;
+    inputs are zero-padded to block multiples and the result is cropped."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    # Never use a block larger than the (padded) dimension itself.
+    bm = min(bm, _ceil_mul(m, 8))
+    bn = min(bn, _ceil_mul(n, 8))
+    bk = min(bk, _ceil_mul(k, 8))
+    mp, kp, np_ = _ceil_mul(m, bm), _ceil_mul(k, bk), _ceil_mul(n, bn)
+    ap = _pad_to(a.astype(jnp.float32), mp, kp)
+    bp = _pad_to(b.astype(jnp.float32), kp, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas matmul (kernel used in fwd AND bwd HLO)."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = matmul_pallas(g, b.T)
+    db = matmul_pallas(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

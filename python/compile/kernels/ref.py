@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (see python/tests/) sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and
+reference. The rust-side native reimplementations (rust/src/quant/) are
+cross-checked against the same math in integration tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 matmul oracle for kernels.matmul.matmul."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def qsgd_quantize_ref(x: jnp.ndarray, u: jnp.ndarray, s: jnp.ndarray,
+                      bucket: int = 128):
+    """Bucketed qsgd_s stochastic quantization oracle (Example B.1 +
+    Alistarh et al.'s bucketing).
+
+    Args:
+      x: f32[d] vector to quantize.
+      u: f32[d] iid U[0,1) noise driving the stochastic rounding.
+      s: scalar f32, number of quantization levels.
+      bucket: coordinates per l2-norm bucket.
+
+    Returns:
+      (levels, norms): levels is i32[d] holding sign(x_i) * xi_i with
+      xi_i in {0..s}; norms are the per-bucket l2 norms. The receiver
+      reconstructs norms[bucket(i)] / s * levels.
+
+    xi_i = floor(|x_i| * s / ||bucket(i)|| + u_i) realizes
+      ceil(a) with probability frac(a), floor(a) otherwise,
+    exactly the distribution in Example B.1, so E[Q(x)] = x (unbiased).
+    """
+    x = x.astype(jnp.float32)
+    d = x.shape[0]
+    dp = ((d + bucket - 1) // bucket) * bucket
+    xp = jnp.pad(x, (0, dp - d))
+    norms = jnp.sqrt(jnp.sum(xp.reshape(-1, bucket) ** 2, axis=1))
+    scale = (s / jnp.maximum(norms, EPS))
+    scale_elem = jnp.repeat(scale, bucket)[:d]
+    a = jnp.abs(x) * scale_elem
+    levels = jnp.floor(a + u)
+    signed = jnp.sign(x) * levels
+    return signed.astype(jnp.int32), norms
+
+
+def qsgd_dequantize_ref(levels: jnp.ndarray, norms: jnp.ndarray,
+                        s: jnp.ndarray, bucket: int = 128) -> jnp.ndarray:
+    """Inverse of qsgd_quantize_ref: norms[bucket(i)] / s * levels."""
+    d = levels.shape[0]
+    unit = norms / jnp.maximum(s, 1.0)
+    unit_elem = jnp.repeat(unit, bucket)[:d]
+    return unit_elem * levels.astype(jnp.float32)
+
+
+def sgd_delta_ref(params, grads_seq, lrs):
+    """Reference for a P-step SGD delta: -sum_p lr_p * g_p (fixed grads)."""
+    delta = jnp.zeros_like(params)
+    for g, lr in zip(grads_seq, lrs):
+        delta = delta - lr * g
+    return delta

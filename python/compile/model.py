@@ -1,0 +1,309 @@
+"""L2: the paper's model + training computation in JAX (build-time only).
+
+The model is the LEAF CelebA CNN as configured by FedBuff / QAFeL (§4 and
+Appendix D of the paper): a four-layer CNN binary classifier with stride 1,
+padding 2, dropout 0.1, and GroupNorm instead of BatchNorm (Wu & He 2018,
+per the FedBuff experimental setup). Input is 32x32x3; each block is
+conv3x3(32) -> GroupNorm -> ReLU -> maxpool2. The classifier head is a
+dense layer to 2 logits, computed with the L1 Pallas matmul kernel so that
+the Pallas kernel lowers into the same HLO as the rest of the model (and
+into its backward pass via the kernel's custom VJP).
+
+Everything here operates on a FLAT f32[d] parameter vector: the rust
+coordinator, quantizers, and wire codecs treat the model as an opaque
+vector, exactly as the algorithm in the paper does. Flatten/unflatten
+happen inside the jitted functions.
+
+Exported computations (lowered to HLO text by aot.py):
+  init_params    seed                                    -> params[d]
+  train_step     params, x, y, mask, lr, seed            -> params', loss, acc
+  client_update  params, xs[P,...], ys, masks, lr, seed  -> delta[d], loss, acc
+  eval_step      params, x, y, mask                      -> loss_sum, correct, count
+  qsgd_quantize  x[d], u[d], s                           -> levels[d], norm
+
+The paper's sign convention: Algorithm 2 computes P local SGD steps from
+the hidden state y_0 = x_hat and uploads the quantized model difference;
+the server applies x^{t+1} = x^t + eta_g * mean(delta). We define
+delta := y_P - y_0 (the descent direction), matching §2's description and
+making the server update a descent step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.qsgd import qsgd_quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (defaults = paper's CelebA model)."""
+    height: int = 32
+    width: int = 32
+    in_channels: int = 3
+    channels: int = 32
+    n_layers: int = 4
+    kernel: int = 3
+    padding: int = 2        # paper: "a padding of 2"
+    stride: int = 1         # paper: "a stride of 1"
+    groups: int = 4         # GroupNorm groups over `channels`
+    dropout: float = 0.1    # paper: "a dropout rate of 0.1"
+    classes: int = 2        # smiling / not smiling
+
+    def spatial_dims(self) -> List[Tuple[int, int]]:
+        """(h, w) after each conv+pool block (conv grows by 2*pad - k + 1)."""
+        h, w = self.height, self.width
+        dims = []
+        for _ in range(self.n_layers):
+            h = h + 2 * self.padding - self.kernel + 1
+            w = w + 2 * self.padding - self.kernel + 1
+            h, w = h // 2, w // 2
+            dims.append((h, w))
+        return dims
+
+    def feature_size(self) -> int:
+        h, w = self.spatial_dims()[-1]
+        return h * w * self.channels
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    c_in = cfg.in_channels
+    for i in range(cfg.n_layers):
+        spec.append((f"conv{i}/w", (cfg.kernel, cfg.kernel, c_in, cfg.channels)))
+        spec.append((f"conv{i}/b", (cfg.channels,)))
+        spec.append((f"gn{i}/scale", (cfg.channels,)))
+        spec.append((f"gn{i}/bias", (cfg.channels,)))
+        c_in = cfg.channels
+    spec.append(("dense/w", (cfg.feature_size(), cfg.classes)))
+    spec.append(("dense/b", (cfg.classes,)))
+    return spec
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    params = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_spec(cfg)])
+
+
+def init_params(cfg: ModelConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    """He-normal conv/dense weights, zero biases, unit GN scales."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("/w"):
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            w = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / fan_in)
+            parts.append(w.reshape(-1))
+        elif "/scale" in name:
+            parts.append(jnp.ones(shape).reshape(-1))
+        else:
+            parts.append(jnp.zeros(shape).reshape(-1))
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+                groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over (H, W, C/G) per group; x is NHWC."""
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def _conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, pad: int,
+                   mm=jnp.dot) -> jnp.ndarray:
+    """conv2d as im2col + matmul (NHWC, stride 1).
+
+    XLA's CPU backend lowers the *weight gradient* of
+    `lax.conv_general_dilated` to a pathologically slow kernel (~3.4 s for
+    a 3x3x32x32 grad at batch 32 on this testbed — measured in
+    EXPERIMENTS.md §Perf). Expressing the conv as patch-matrix x
+    weight-matrix makes both the forward and all gradients plain `dot`s
+    (fast everywhere, and MXU-friendly on TPU). `mm` is pluggable so the
+    L1 Pallas matmul kernel can own this hot-spot on real TPUs; on the
+    CPU-interpret testbed the Pallas while-loop emulation is slower than
+    the fused dot, so the default is `jnp.dot` (see DESIGN.md
+    §Hardware-Adaptation).
+    """
+    kh, kw, cin, cout = w.shape
+    b, h, wd, _ = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = h + 2 * pad - kh + 1
+    ow = wd + 2 * pad - kw + 1
+    cols = [xp[:, i:i + oh, j:j + ow, :] for i in range(kh) for j in range(kw)]
+    patches = jnp.concatenate(cols, axis=-1)
+    out = mm(patches.reshape(-1, kh * kw * cin), w.reshape(-1, cout))
+    return out.reshape(b, oh, ow, cout)
+
+
+def _max_pool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pool, stride 2, floor semantics (crop odd edges)."""
+    b, h, w, c = x.shape
+    h2, w2 = (h // 2) * 2, (w // 2) * 2
+    x = x[:, :h2, :w2, :]
+    return x.reshape(b, h2 // 2, 2, w2 // 2, 2, c).max(axis=(2, 4))
+
+
+def forward(cfg: ModelConfig, flat: jnp.ndarray, x: jnp.ndarray,
+            train: bool, dropout_key) -> jnp.ndarray:
+    """Logits for a batch x[B,H,W,C] (NHWC, f32)."""
+    p = unflatten(cfg, flat)
+    h = x
+    for i in range(cfg.n_layers):
+        h = _conv2d_im2col(h, p[f"conv{i}/w"], cfg.padding) + p[f"conv{i}/b"]
+        h = _group_norm(h, p[f"gn{i}/scale"], p[f"gn{i}/bias"], cfg.groups)
+        h = jax.nn.relu(h)
+        h = _max_pool2(h)
+    feats = h.reshape(h.shape[0], -1)
+    if train and cfg.dropout > 0.0:
+        keep = 1.0 - cfg.dropout
+        dmask = jax.random.bernoulli(dropout_key, keep, feats.shape)
+        feats = feats * dmask / keep
+    # Classifier head through the L1 Pallas matmul kernel.
+    logits = matmul(feats, p["dense/w"]) + p["dense/b"]
+    return logits
+
+
+def _loss_acc(cfg: ModelConfig, flat, x, y, mask, train, dropout_key):
+    """Masked mean cross-entropy + accuracy over a batch."""
+    logits = forward(cfg, flat, x, train, dropout_key)
+    logp = jax.nn.log_softmax(logits)
+    y = y.astype(jnp.int32)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    acc = ((pred == y).astype(jnp.float32) * mask).sum() / denom
+    return loss, acc
+
+
+def train_step(cfg: ModelConfig, flat, x, y, mask, lr, seed):
+    """One local SGD step: params <- params - lr * grad (Algorithm 2 l.3)."""
+    key = jax.random.PRNGKey(seed)
+    (loss, acc), grads = jax.value_and_grad(
+        lambda f: _loss_acc(cfg, f, x, y, mask, True, key), has_aux=True)(flat)
+    return flat - lr * grads, loss, acc
+
+
+def client_update(cfg: ModelConfig, flat, xs, ys, masks, lr, seed):
+    """Algorithm 2: P local SGD steps from the hidden-state snapshot.
+
+    xs: f32[P,B,H,W,C], ys: i32[P,B], masks: f32[P,B].
+    Returns (delta[d] = y_P - y_0, mean loss, mean acc) over the P steps.
+    One PJRT call executes the whole local round (lax.scan over P).
+    """
+    p_steps = xs.shape[0]
+
+    def step(carry, inp):
+        params, i = carry
+        x, y, m = inp
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        (loss, acc), grads = jax.value_and_grad(
+            lambda f: _loss_acc(cfg, f, x, y, m, True, key),
+            has_aux=True)(params)
+        return (params - lr * grads, i + 1), (loss, acc)
+
+    (final, _), (losses, accs) = jax.lax.scan(
+        step, (flat, jnp.int32(0)), (xs, ys, masks), length=p_steps)
+    return final - flat, losses.mean(), accs.mean()
+
+
+def client_update_quantized(cfg: ModelConfig, flat, xs, ys, masks, lr, seed,
+                            u, s):
+    """Algorithm 2 including the upload quantization: the L1 Pallas qsgd
+    kernel quantizes the delta inside the same HLO module, so the full
+    client request path is one executable."""
+    delta, loss, acc = client_update(cfg, flat, xs, ys, masks, lr, seed)
+    levels, norm = qsgd_quantize(delta, u, s)
+    return levels, norm, loss, acc
+
+
+def eval_step(cfg: ModelConfig, flat, x, y, mask):
+    """Validation: summed loss / correct count / count (no dropout)."""
+    logits = forward(cfg, flat, x, False, jax.random.PRNGKey(0))
+    logp = jax.nn.log_softmax(logits)
+    y = y.astype(jnp.int32)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    mask = mask.astype(jnp.float32)
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    correct = ((pred == y).astype(jnp.float32) * mask).sum()
+    return (nll * mask).sum(), correct, mask.sum()
+
+
+def build_fns(cfg: ModelConfig, batch: int, local_steps: int, eval_batch: int):
+    """Concrete jittable entry points + their example argument shapes."""
+    h, w, c = cfg.height, cfg.width, cfg.in_channels
+    d = num_params(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+
+    def sds(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    fns = {
+        "init_params": (
+            functools.partial(init_params, cfg),
+            [sds((), i32)],
+        ),
+        "train_step": (
+            functools.partial(train_step, cfg),
+            [sds((d,)), sds((batch, h, w, c)), sds((batch,), i32),
+             sds((batch,)), sds(()), sds((), i32)],
+        ),
+        "client_update": (
+            functools.partial(client_update, cfg),
+            [sds((d,)), sds((local_steps, batch, h, w, c)),
+             sds((local_steps, batch), i32), sds((local_steps, batch)),
+             sds(()), sds((), i32)],
+        ),
+        "client_update_quantized": (
+            functools.partial(client_update_quantized, cfg),
+            [sds((d,)), sds((local_steps, batch, h, w, c)),
+             sds((local_steps, batch), i32), sds((local_steps, batch)),
+             sds(()), sds((), i32), sds((d,)), sds(())],
+        ),
+        "eval_step": (
+            functools.partial(eval_step, cfg),
+            [sds((d,)), sds((eval_batch, h, w, c)), sds((eval_batch,), i32),
+             sds((eval_batch,))],
+        ),
+        "qsgd_quantize": (
+            lambda x, u, s: qsgd_quantize(x, u, s),
+            [sds((d,)), sds((d,)), sds(())],
+        ),
+    }
+    return fns

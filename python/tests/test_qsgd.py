@@ -1,0 +1,108 @@
+"""L1 Pallas qsgd kernel: exact agreement with the oracle + the paper's
+statistical properties (Definition 2.1 / Example B.1 / Lemma 3.1 of
+Alistarh et al. 2017).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qsgd import qsgd_dequantize, qsgd_quantize
+from compile.kernels.ref import qsgd_dequantize_ref, qsgd_quantize_ref
+
+
+def _xu(d, seed, scale=1.0):
+    kx, ku = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (d,), dtype=jnp.float32) * scale
+    u = jax.random.uniform(ku, (d,), dtype=jnp.float32)
+    return x, u
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 40000),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qsgd_kernel_matches_ref(d, bits, seed):
+    x, u = _xu(d, seed)
+    s = jnp.float32(2 ** (bits - 1) - 1)
+    lv, nrms = qsgd_quantize(x, u, s)
+    lv_r, nrms_r = qsgd_quantize_ref(x, u, s)
+    np.testing.assert_array_equal(np.array(lv), np.array(lv_r))
+    np.testing.assert_allclose(np.array(nrms), np.array(nrms_r), rtol=1e-6)
+    assert nrms.shape[0] == (d + 127) // 128
+
+
+def test_qsgd_dequantize_matches_ref():
+    x, u = _xu(4097, 7)
+    s = jnp.float32(15.0)
+    lv, nrms = qsgd_quantize(x, u, s)
+    xq = qsgd_dequantize(lv, nrms, s)
+    xr = qsgd_dequantize_ref(lv, nrms, s)
+    np.testing.assert_allclose(np.array(xq), np.array(xr), rtol=1e-6)
+
+
+def test_qsgd_levels_bounded():
+    """xi_i <= ceil(|x_i| s / ||x||) <= s for any coordinate."""
+    for bits in (2, 4, 8):
+        s = 2 ** (bits - 1) - 1
+        x, u = _xu(2048, bits)
+        lv, _ = qsgd_quantize(x, u, jnp.float32(s))
+        assert int(jnp.abs(lv).max()) <= s
+
+
+def test_qsgd_unbiased():
+    """E_u[Q(x)] = x: average reconstruction over many noise draws."""
+    d = 512
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,), dtype=jnp.float32)
+    s = jnp.float32(7.0)
+    reps = 300
+    acc = np.zeros(d, np.float64)
+    for r in range(reps):
+        u = jax.random.uniform(jax.random.PRNGKey(1000 + r), (d,))
+        lv, nrms = qsgd_quantize(x, u, s)
+        acc += np.array(qsgd_dequantize(lv, nrms, s), np.float64)
+    mean = acc / reps
+    err = np.linalg.norm(mean - np.array(x)) / np.linalg.norm(np.array(x))
+    # statistical tolerance: the variance of the mean estimate is bounded by
+    # min(2d/s^2, sqrt(2d)/s) ||x||^2 / reps (Lemma 3.1); allow 3 sigma.
+    tol = 3.0 * np.sqrt(min(2 * 128 / float(s) ** 2,
+                            np.sqrt(2 * 128) / float(s)) / reps)
+    assert err < tol, f"bias too large: {err} (tol {tol})"
+
+
+def test_qsgd_variance_bound():
+    """E||Q(x)-x||^2 <= min(2g/s^2, sqrt(2g)/s) ||x||^2 per bucket of
+    size g (Lemma 3.1, Alistarh et al. 2017, bucketed)."""
+    d, s, g = 8192, 15.0, 128
+    bound = min(2 * g / s**2, np.sqrt(2 * g) / s)
+    x = jax.random.normal(jax.random.PRNGKey(3), (d,), dtype=jnp.float32)
+    xn = float(jnp.sum(x * x))
+    errs = []
+    for r in range(40):
+        u = jax.random.uniform(jax.random.PRNGKey(5000 + r), (d,))
+        lv, nrms = qsgd_quantize(x, u, jnp.float32(s))
+        xq = qsgd_dequantize(lv, nrms, jnp.float32(s))
+        errs.append(float(jnp.sum((xq - x) ** 2)))
+    mean_err = np.mean(errs)
+    assert mean_err <= bound * xn * 1.05, (mean_err, bound * xn)
+
+
+def test_qsgd_zero_vector():
+    d = 100
+    lv, nrms = qsgd_quantize(jnp.zeros(d), jnp.full(d, 0.5), jnp.float32(7.0))
+    assert float(np.abs(np.array(nrms)).max()) == 0.0
+    np.testing.assert_array_equal(np.array(lv), np.zeros(d, np.int32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-6, 1e6), seed=st.integers(0, 1000))
+def test_qsgd_scale_invariance_of_levels(scale, seed):
+    """Levels depend on x/||x|| only: scaling x leaves levels unchanged."""
+    x, u = _xu(777, seed)
+    s = jnp.float32(7.0)
+    lv1, _ = qsgd_quantize(x, u, s)
+    lv2, _ = qsgd_quantize(x * scale, u, s)
+    np.testing.assert_array_equal(np.array(lv1), np.array(lv2))

@@ -1,0 +1,118 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `bench(name, iters, f)` warms up, measures `iters` timed runs, and
+//! prints mean / p50 / p95 per-iteration times plus derived throughput.
+//! Set `QAFEL_BENCH_FAST=1` to cut iteration counts (used by CI smoke).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("QAFEL_BENCH_FAST").is_ok()
+}
+
+pub fn scaled(iters: usize) -> usize {
+    if fast_mode() {
+        (iters / 10).max(3)
+    } else {
+        iters
+    }
+}
+
+/// Run and report one benchmark. `f` is called once per iteration; use
+/// `std::hint::black_box` inside to defeat DCE.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    let iters = scaled(iters);
+    // warmup ~10%
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: p50,
+        p95_ns: p95,
+    };
+    print_result(&r, None);
+    r
+}
+
+/// Like [`bench`] but also reports bytes/second given per-iter bytes.
+pub fn bench_throughput<F: FnMut()>(name: &str, iters: usize, bytes_per_iter: usize, f: F) {
+    let r = bench_quiet(name, iters, f);
+    print_result(&r, Some(bytes_per_iter));
+}
+
+pub fn bench_quiet<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    let iters = scaled(iters);
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_ns: samples[samples.len() / 2],
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    }
+}
+
+fn print_result(r: &BenchResult, bytes: Option<usize>) {
+    let human = |ns: f64| -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} us", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    };
+    match bytes {
+        Some(b) => {
+            let gbs = b as f64 / r.mean_ns; // bytes/ns == GB/s
+            println!(
+                "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  {:>7.2} GB/s",
+                r.name,
+                human(r.mean_ns),
+                human(r.p50_ns),
+                human(r.p95_ns),
+                gbs
+            );
+        }
+        None => println!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}   ({} iters)",
+            r.name,
+            human(r.mean_ns),
+            human(r.p50_ns),
+            human(r.p95_ns),
+            r.iters
+        ),
+    }
+}

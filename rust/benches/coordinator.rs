@@ -1,0 +1,92 @@
+//! End-to-end L3 coordinator throughput with compute stubbed out: how
+//! many uploads/second can the server state machine ingest (dequantize,
+//! buffer, momentum step, hidden-state quantize + broadcast)?
+//!
+//! DESIGN.md perf target: >= 10^4 uploads/s at the paper's model size so
+//! L3 is never the bottleneck (one PJRT client_update is ~10-70 ms).
+
+mod common;
+
+use common::{bench, scaled};
+use qafel::config::{Algorithm, Config};
+use qafel::coordinator::{Server, ServerStep};
+use qafel::quant::parse_spec;
+use qafel::util::prng::Prng;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn cfg(algo: Algorithm, qc: &str, qs: &str, k: usize) -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = algo;
+    c.quant.client = qc.into();
+    c.quant.server = qs.into();
+    c.fl.buffer_size = k;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.3;
+    c
+}
+
+fn main() {
+    let d = 29_474;
+    let mut rng = Prng::new(1);
+    let delta: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 1e-3).collect();
+
+    println!("== coordinator ingest throughput (d = {d}, K = 10) ==");
+    for (name, algo, qc, qs) in [
+        ("qafel 4/4", Algorithm::Qafel, "qsgd:4", "qsgd:4"),
+        ("qafel 8/8", Algorithm::Qafel, "qsgd:8", "qsgd:8"),
+        ("fedbuff", Algorithm::FedBuff, "none", "none"),
+        ("directquant 4/4", Algorithm::DirectQuant, "qsgd:4", "qsgd:4"),
+    ] {
+        let c = cfg(algo, qc, qs, 10);
+        let mut server = Server::build(&c, vec![0.0; d], 1).unwrap();
+        let codec = parse_spec(if matches!(algo, Algorithm::FedBuff) { "none" } else { qc }).unwrap();
+        let mut qrng = Prng::new(2);
+        let msg = codec.quantize(&delta, &mut qrng);
+
+        let iters = scaled(20_000);
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let _ = black_box(server.ingest(black_box(&msg), (i % 7) as u64).unwrap());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{name:<18} {:>9.0} uploads/s  ({:.2} us/upload, {} server steps)",
+            iters as f64 / dt,
+            dt / iters as f64 * 1e6,
+            server.t()
+        );
+    }
+
+    println!("\n== full client trip without compute (quantize + ingest) ==");
+    let c = cfg(Algorithm::Qafel, "qsgd:4", "qsgd:4", 10);
+    let mut server = Server::build(&c, vec![0.0; d], 1).unwrap();
+    let codec = parse_spec("qsgd:4").unwrap();
+    let mut qrng = Prng::new(3);
+    bench("quantize+ingest (qsgd:4)", 5000, || {
+        let msg = codec.quantize(black_box(&delta), &mut qrng);
+        let _ = black_box(server.ingest(&msg, 3).unwrap());
+    });
+
+    println!("\n== snapshot cost (Arc clone of hidden state) ==");
+    bench("client_snapshot", 100_000, || {
+        black_box(server.client_snapshot());
+    });
+
+    // guard against silent regression: assert the DESIGN.md target when
+    // not in fast mode
+    if !common::fast_mode() {
+        let c = cfg(Algorithm::Qafel, "qsgd:4", "qsgd:4", 10);
+        let mut server = Server::build(&c, vec![0.0; d], 1).unwrap();
+        let msg = codec.quantize(&delta, &mut qrng);
+        let t0 = Instant::now();
+        let n = 20_000;
+        for i in 0..n {
+            match server.ingest(&msg, (i % 5) as u64).unwrap() {
+                ServerStep::Buffered | ServerStep::Stepped(_) => {}
+            }
+        }
+        let rate = n as f64 / t0.elapsed().as_secs_f64();
+        println!("\nperf target check: {rate:.0} uploads/s (target >= 10000)");
+    }
+}

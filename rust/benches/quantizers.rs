@@ -1,0 +1,59 @@
+//! L3 hot-path microbenchmarks: quantizer encode/decode at the paper's
+//! model dimension (d = 29,474). The coordinator executes one `quantize`
+//! per upload (client side), one `accumulate` per upload (server buffer),
+//! and one `quantize` per broadcast — these ops must stay far below the
+//! PJRT client_update cost (~tens of ms) to keep L3 off the critical
+//! path.
+
+mod common;
+
+use common::{bench, bench_throughput};
+use qafel::quant::parse_spec;
+use qafel::util::prng::Prng;
+use std::hint::black_box;
+
+fn main() {
+    let d = 29_474;
+    let mut rng = Prng::new(1);
+    let x: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    println!("== quantizer codecs at d = {d} (paper model) ==");
+
+    for spec in ["none", "qsgd:8", "qsgd:4", "qsgd:2", "top:0.1", "rand:0.1"] {
+        let q = parse_spec(spec).unwrap();
+        let bytes = q.expected_bytes(d);
+
+        let mut qrng = Prng::new(2);
+        bench_throughput(&format!("quantize   {spec} ({bytes} B)"), 300, d * 4, || {
+            black_box(q.quantize(black_box(&x), &mut qrng));
+        });
+
+        let msg = q.quantize(&x, &mut qrng);
+        let mut acc = vec![0.0f32; d];
+        bench_throughput(&format!("accumulate {spec}"), 300, d * 4, || {
+            q.accumulate(black_box(&msg), 0.1, black_box(&mut acc)).unwrap();
+        });
+    }
+
+    println!("\n== supporting vector kernels ==");
+    let y: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+    let mut acc = vec![0.0f32; d];
+    bench_throughput("vecf::axpy", 2000, d * 4, || {
+        qafel::util::vecf::axpy(black_box(&mut acc), 0.5, black_box(&y));
+    });
+    bench_throughput("vecf::norm2", 2000, d * 4, || {
+        black_box(qafel::util::vecf::norm2(black_box(&y)));
+    });
+    let mut u = vec![0.0f32; d];
+    bench_throughput("prng fill_uniform_f32", 1000, d * 4, || {
+        let mut r = Prng::new(3);
+        r.fill_uniform_f32(black_box(&mut u));
+    });
+
+    println!("\n== server ingest path (dequantize+axpy, qsgd:4) ==");
+    let q = parse_spec("qsgd:4").unwrap();
+    let msg = q.quantize(&x, &mut rng);
+    let mut buffer = vec![0.0f32; d];
+    bench("server ingest (1 upload)", 1000, || {
+        q.accumulate(black_box(&msg), 0.316, black_box(&mut buffer)).unwrap();
+    });
+}

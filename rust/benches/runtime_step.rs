@@ -1,0 +1,84 @@
+//! L2/L1 runtime benchmarks: latency of the AOT executables through PJRT
+//! (the real per-upload compute cost). Skipped when artifacts are absent.
+//!
+//! This is the dominant cost of a simulated upload; EXPERIMENTS.md §Perf
+//! tracks client_update before/after the im2col conv rewrite.
+
+mod common;
+
+use common::bench;
+use qafel::data::Dataset;
+use qafel::runtime::{artifacts_available, Engine};
+use qafel::util::prng::Prng;
+use std::hint::black_box;
+
+fn main() {
+    let dir = std::env::var("QAFEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !artifacts_available(&dir) {
+        println!("runtime_step: artifacts not found in '{dir}' — run `make artifacts`; skipping");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let m = engine.manifest();
+    let d = engine.d();
+    let (p, b, eb) = (m.local_steps, m.batch, m.eval_batch);
+    let img = engine.img_elems();
+    println!("== PJRT executables (d={d}, B={b}, P={p}) ==");
+
+    let params = engine.init_params(0).unwrap();
+    let ds = Dataset::new(&qafel::config::DataConfig::default());
+    let mut rng = Prng::new(7);
+    let mut xs = vec![0.0f32; p * b * img];
+    let mut ys = vec![0i32; p * b];
+    let mut mask = vec![0.0f32; p * b];
+    ds.fill_round(3, &mut rng, p, b, &mut xs, &mut ys, &mut mask);
+
+    bench("client_update (P local steps, 1 PJRT call)", 30, || {
+        black_box(
+            engine
+                .client_update(black_box(&params), &xs, &ys, &mask, 4.7e-6, 1)
+                .unwrap(),
+        );
+    });
+
+    let mut u = vec![0.0f32; d];
+    rng.fill_uniform_f32(&mut u);
+    bench("client_update_quantized (incl. Pallas qsgd)", 30, || {
+        black_box(
+            engine
+                .client_update_quantized(black_box(&params), &xs, &ys, &mask, 4.7e-6, 1, &u, 7.0)
+                .unwrap(),
+        );
+    });
+
+    bench("qsgd_quantize artifact (Pallas kernel alone)", 100, || {
+        black_box(engine.qsgd_quantize(black_box(&params), &u, 7.0).unwrap());
+    });
+
+    // eval batch
+    let mut ex = vec![0.0f32; eb * img];
+    let mut ey = vec![0i32; eb];
+    let emask = vec![1.0f32; eb];
+    let mut slot = 0;
+    'outer: for uidx in 0..ds.num_users() {
+        for j in 0..ds.user(uidx).n_samples {
+            if slot == eb {
+                break 'outer;
+            }
+            ey[slot] = ds.sample_into(uidx, j, &mut ex[slot * img..(slot + 1) * img]) as i32;
+            slot += 1;
+        }
+    }
+    bench(&format!("eval_step (batch {eb})"), 30, || {
+        black_box(engine.eval_step(black_box(&params), &ex, &ey, &emask).unwrap());
+    });
+
+    bench("init_params", 30, || {
+        black_box(engine.init_params(black_box(0)).unwrap());
+    });
+
+    println!("\n== host-side data path ==");
+    bench("dataset fill_round (P batches of B images)", 100, || {
+        ds.fill_round(5, &mut rng, p, b, black_box(&mut xs), &mut ys, &mut mask);
+    });
+}

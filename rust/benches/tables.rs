@@ -1,0 +1,94 @@
+//! End-to-end benches, one per paper table/figure (reduced-scale): runs
+//! the same harness as `qafel exp ...` on the analytic backend and prints
+//! the regenerated rows plus wall time. These validate that each
+//! table/figure pipeline executes end-to-end inside `cargo bench`;
+//! full-scale PJRT numbers are produced by `qafel exp --backend pjrt`
+//! and recorded in EXPERIMENTS.md.
+
+mod common;
+
+use anyhow::Result;
+use qafel::config::{Algorithm, Config};
+use qafel::experiments::{self, runner::BackendFactory};
+use qafel::runtime::QuadraticBackend;
+use qafel::sim::SimOptions;
+use std::time::Instant;
+
+fn base_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.buffer_size = 4;
+    c.fl.client_lr = 0.15;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.sim.concurrency = 10;
+    c.sim.eval_every = 5;
+    c.seeds = if common::fast_mode() { vec![1] } else { vec![1, 2, 3] };
+    c.stop.target_accuracy = 0.95;
+    c.stop.max_uploads = 30_000;
+    c.stop.max_server_steps = 8000;
+    c
+}
+
+fn factory(seed: u64) -> Result<Box<dyn qafel::runtime::Backend>> {
+    Ok(Box::new(QuadraticBackend::new(128, 32, 1.0, 0.3, 0.2, 0.02, 2, seed)))
+}
+
+fn timed<F: FnOnce() -> Result<()>>(name: &str, f: F) {
+    let t0 = Instant::now();
+    f().unwrap();
+    println!(">>> {name}: {:.2}s\n", t0.elapsed().as_secs_f64());
+}
+
+fn main() {
+    let out = std::env::temp_dir().join(format!("qafel-bench-tables-{}", std::process::id()));
+    let out = out.to_str().unwrap().to_string();
+    let opts = SimOptions::default();
+    let f: &BackendFactory = &factory;
+
+    timed("fig3 (concurrency sweep, reduced)", || {
+        let mut cfg = base_cfg();
+        cfg.sim.concurrency = 10; // reduced from 100/500/1000
+        let mut rows = Vec::new();
+        for conc in [10usize, 40] {
+            for (algo, qc, qs) in [
+                (Algorithm::Qafel, "qsgd:4", "qsgd:4"),
+                (Algorithm::FedBuff, "none", "none"),
+            ] {
+                let mut c = cfg.clone();
+                c.fl.algorithm = algo;
+                c.quant.client = qc.into();
+                c.quant.server = qs.into();
+                c.sim.concurrency = conc;
+                c.fl.staleness_scaling = true;
+                let set = experiments::runner::run_seeds(
+                    &c, f, &opts, &format!("{} c={conc}", algo.name()))?;
+                rows.push(experiments::runner::aggregate(&set));
+            }
+        }
+        let md = experiments::runner::report("bench_fig3", &out, &rows)?;
+        println!("{md}");
+        Ok(())
+    });
+
+    timed("table1 (qsgd grid)", || {
+        experiments::table1::run(&base_cfg(), f, &out, &opts).map(|_| ())
+    });
+
+    timed("table2 (biased top_k server)", || {
+        experiments::table2::run(&base_cfg(), f, &out, &opts).map(|_| ())
+    });
+
+    timed("convergence (Prop 3.5)", || {
+        let horizons: &[u64] = if common::fast_mode() { &[40, 160] } else { &[40, 160, 640] };
+        experiments::convergence::run(&base_cfg(), f, &out, horizons).map(|_| ())
+    });
+
+    timed("ablations", || {
+        experiments::ablations::hidden_state(&base_cfg(), f, &out, &opts)?;
+        experiments::ablations::k_sweep(&base_cfg(), f, &out, &opts)?;
+        Ok(())
+    });
+
+    let _ = std::fs::remove_dir_all(&out);
+}

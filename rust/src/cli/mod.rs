@@ -1,0 +1,165 @@
+//! Small command-line parser (no `clap` offline).
+//!
+//! Grammar: `qafel <subcommand> [positional...] [--key value | --key=value
+//! | --flag]...`. Repeated options accumulate (used for `--set a.b=c`
+//! config overrides). Unknown options are rejected by the caller via
+//! [`Args::finish`].
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" ends option parsing
+                    args.positional.extend(it);
+                    break;
+                }
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        // consume the next token as a value unless it looks
+                        // like another option
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.options.entry(key).or_default().push(value);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Last value of a `--key` option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated `--key` option.
+    pub fn opts(&self, key: &str) -> Vec<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.options.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    /// Boolean flag (`--flag` or `--flag true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed option parse.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {s}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn opt_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    /// Error on any option that was never queried (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.options.keys().filter(|k| !consumed.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("exp table1 --config cfg.toml --set fl.buffer_size=5 --set sim.concurrency=500 --verbose");
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "table1");
+        assert_eq!(a.opt("config"), Some("cfg.toml"));
+        assert_eq!(a.opts("set"), vec!["fl.buffer_size=5", "sim.concurrency=500"]);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_typed() {
+        let a = parse("run --seeds=7 --lr=0.5");
+        assert_eq!(a.opt_or::<u64>("seeds", 0).unwrap(), 7);
+        assert_eq!(a.opt_or::<f64>("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.opt_or::<u64>("missing", 42).unwrap(), 42);
+        assert!(a.opt_or::<u64>("lr", 0).is_err());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn finish_rejects_unconsumed() {
+        let a = parse("run --typo-flag 3");
+        assert!(a.finish().is_err());
+        let b = parse("run --ok 3");
+        let _ = b.opt("ok");
+        b.finish().unwrap();
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run -- --not-an-option");
+        assert_eq!(a.positional, vec!["run", "--not-an-option"]);
+    }
+
+    #[test]
+    fn flag_without_value_before_flag() {
+        let a = parse("run --fast --config x.toml");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("config"), Some("x.toml"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Minimal TOML parser (offline environment: no `toml` crate).
+//!
+//! Supports the subset used by qafel config files: comments, `[section]`
+//! and `[dotted.section]` headers, bare/quoted keys, strings, integers,
+//! floats (incl. scientific notation), booleans, and homogeneous arrays.
+//! Parsed documents are represented as [`Json`] objects so the config
+//! layer has a single value type.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse TOML text into a nested [`Json::Obj`].
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+            if inner.is_empty() || inner.starts_with('[') {
+                return Err(err("array-of-tables not supported"));
+            }
+            section = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(err("empty section component"));
+            }
+            // materialize the section so empty sections exist
+            ensure_path(&mut root, &section).map_err(|m| err(&m))?;
+            continue;
+        }
+
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let vtext = line[eq + 1..].trim();
+        let value = parse_value(vtext).map_err(|m| err(&m))?;
+
+        let obj = ensure_path(&mut root, &section).map_err(|m| err(&m))?;
+        if obj.insert(key.clone(), value).is_some() {
+            return Err(err(&format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_path<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(format!("'{part}' is not a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str) -> Result<Json, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = t.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Json::Str(unescape(inner)?));
+    }
+    if t == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(rest) = t.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for piece in split_top_level(inner) {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            items.push(parse_value(piece)?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // numbers: TOML allows underscores as separators
+    let cleaned: String = t.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value '{t}'"))
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape: \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Split an array body on commas that are not nested in strings/brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# qafel experiment config
+name = "table1"
+
+[fl]
+buffer_size = 10
+client_lr = 4.7e-6
+server_lr = 1_000.0
+staleness_scaling = false
+
+[quant]
+client = "qsgd:4"
+server = "qsgd:4"
+
+[sim]
+seeds = [1, 2, 3]
+concurrency = 100     # clients in parallel
+"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("table1"));
+        assert_eq!(v.at(&["fl", "buffer_size"]).unwrap().as_usize(), Some(10));
+        assert!((v.at(&["fl", "client_lr"]).unwrap().as_f64().unwrap() - 4.7e-6).abs() < 1e-12);
+        assert_eq!(v.at(&["fl", "server_lr"]).unwrap().as_f64(), Some(1000.0));
+        assert_eq!(v.at(&["fl", "staleness_scaling"]).unwrap().as_bool(), Some(false));
+        assert_eq!(v.at(&["quant", "client"]).unwrap().as_str(), Some("qsgd:4"));
+        let seeds = v.at(&["sim", "seeds"]).unwrap().as_arr().unwrap();
+        assert_eq!(seeds.len(), 3);
+        assert_eq!(v.at(&["sim", "concurrency"]).unwrap().as_usize(), Some(100));
+    }
+
+    #[test]
+    fn dotted_sections_nest() {
+        let v = parse("[a.b]\nx = 1\n[a.c]\ny = 2\n").unwrap();
+        assert_eq!(v.at(&["a", "b", "x"]).unwrap().as_usize(), Some(1));
+        assert_eq!(v.at(&["a", "c", "y"]).unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let v = parse(r#"s = "a # not comment \n done""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment \n done"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let rows = v.get("m").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].as_arr().unwrap()[0].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("dup = 1\ndup = 2\n").is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Algorithms 2 & 3 — QAFeL-client and its background hidden-state
+//! replica.
+//!
+//! [`ClientLogic`] is the client-side policy shared by the virtual-time
+//! simulator (`sim/`) and the real networked runtime (`net/`):
+//!
+//! 1. copy the hidden state `y_0 <- x̂^t` (snapshot at *start* of local
+//!    training — availability guaranteed by the background replica),
+//! 2. run P local SGD steps through a [`Backend`],
+//! 3. quantize the delta with the client quantizer `Q_c` and upload.
+//!
+//! [`HiddenReplica`] is Algorithm 3: a client-resident copy of the hidden
+//! state advanced by every broadcast `q^t` — used in net mode where each
+//! client owns a physical replica (the simulator shares the server's Arc
+//! instead, which is behaviourally identical under reliable broadcast).
+
+use crate::config::{Algorithm, Config};
+use crate::coordinator::server::Broadcast;
+use crate::quant::{parse_spec, QuantizedMsg, Quantizer};
+use crate::runtime::Backend;
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+
+/// Client-side policy: local training + upload quantization.
+pub struct ClientLogic {
+    quant_c: Box<dyn Quantizer>,
+    client_lr: f32,
+    /// l2 clip applied to the delta before quantization (0 = off).
+    clip_norm: f32,
+    rng: std::cell::RefCell<Prng>,
+}
+
+/// A finished local round ready to send.
+#[derive(Clone, Debug)]
+pub struct Upload {
+    pub msg: QuantizedMsg,
+    pub train_loss: f32,
+    pub train_acc: f32,
+}
+
+impl ClientLogic {
+    pub fn new(cfg: &Config, seed: u64) -> Result<ClientLogic> {
+        let spec = match cfg.fl.algorithm {
+            Algorithm::Qafel | Algorithm::DirectQuant => cfg.quant.client.clone(),
+            Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
+        };
+        Ok(ClientLogic {
+            quant_c: parse_spec(&spec)?,
+            client_lr: cfg.fl.client_lr,
+            clip_norm: cfg.fl.clip_norm,
+            rng: std::cell::RefCell::new(Prng::new(seed).stream("client-quant")),
+        })
+    }
+
+    /// Algorithm 2 for one client trip: P local steps from `snapshot`,
+    /// then quantize the delta. `round_seed` must be unique per upload.
+    pub fn run_round(
+        &self,
+        backend: &dyn Backend,
+        snapshot: &[f32],
+        user: usize,
+        round_seed: u64,
+    ) -> Result<Upload> {
+        let mut out = backend.client_round(snapshot, user, round_seed, self.client_lr)?;
+        // FLSim-style update clipping: keeps a single diverging client (or
+        // a staleness-amplified momentum loop) from poisoning the buffer.
+        if self.clip_norm > 0.0 {
+            let norm = crate::util::vecf::norm2(&out.delta) as f32;
+            if norm > self.clip_norm {
+                crate::util::vecf::scale(&mut out.delta, self.clip_norm / norm);
+            }
+        }
+        let msg = self.quant_c.quantize(&out.delta, &mut self.rng.borrow_mut());
+        Ok(Upload { msg, train_loss: out.loss, train_acc: out.acc })
+    }
+
+    /// Expected upload size for dimension d (for capacity planning).
+    pub fn upload_bytes(&self, d: usize) -> usize {
+        self.quant_c.expected_bytes(d)
+    }
+
+    pub fn quantizer_name(&self) -> String {
+        self.quant_c.name()
+    }
+
+    /// Test helper: quantize an explicit delta (bypasses the backend).
+    pub fn quantize_delta_for_test(&self, delta: &[f32]) -> QuantizedMsg {
+        self.quant_c.quantize(delta, &mut self.rng.borrow_mut())
+    }
+}
+
+/// Algorithm 3 — the background process that keeps a client-resident
+/// hidden-state replica in sync by applying every broadcast `q^t`.
+pub struct HiddenReplica {
+    x_hat: Vec<f32>,
+    /// Server step the replica has caught up to.
+    pub t: u64,
+    quant_s: Box<dyn Quantizer>,
+}
+
+impl HiddenReplica {
+    /// Initialize from the pre-agreed x^0 (Algorithm 3 line 1).
+    pub fn new(cfg: &Config, x0: Vec<f32>) -> Result<HiddenReplica> {
+        let spec = match cfg.fl.algorithm {
+            Algorithm::Qafel | Algorithm::DirectQuant => cfg.quant.server.clone(),
+            Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
+        };
+        Ok(HiddenReplica { x_hat: x0, t: 0, quant_s: parse_spec(&spec)? })
+    }
+
+    /// Apply one broadcast (Algorithm 3 line 4). Broadcasts must be
+    /// applied in order — the hidden state is a running sum.
+    pub fn apply(&mut self, b: &Broadcast) -> Result<()> {
+        if b.t != self.t + 1 {
+            bail!("hidden replica: got broadcast t={} while at t={}", b.t, self.t);
+        }
+        if b.absolute {
+            // DirectQuant mode: message carries the whole quantized model
+            self.quant_s.dequantize_into(&b.msg, &mut self.x_hat)?;
+        } else {
+            self.quant_s.accumulate(&b.msg, 1.0, &mut self.x_hat)?;
+        }
+        self.t = b.t;
+        Ok(())
+    }
+
+    pub fn state(&self) -> &[f32] {
+        &self.x_hat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::server::{Server, ServerStep};
+    use crate::runtime::QuadraticBackend;
+
+    fn qafel_cfg() -> Config {
+        let mut c = Config::default();
+        c.quant.client = "qsgd:8".into();
+        c.quant.server = "qsgd:8".into();
+        c.fl.buffer_size = 2;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c.fl.client_lr = 0.1;
+        c.fl.clip_norm = 0.0;
+        c
+    }
+
+    #[test]
+    fn client_replica_stays_identical_to_server_hidden_state() {
+        // The paper's core invariant: server and every client hold the
+        // SAME hidden state after each broadcast, because both apply the
+        // same quantized increment q^t.
+        let cfg = qafel_cfg();
+        let d = 32;
+        let backend = QuadraticBackend::new(d, 4, 1.0, 0.1, 0.3, 0.05, 1, 5);
+        let x0 = backend.init_params(0).unwrap();
+        let mut server = Server::build(&cfg, x0.clone(), 1).unwrap();
+        let logic = ClientLogic::new(&cfg, 2).unwrap();
+        let mut replica = HiddenReplica::new(&cfg, x0).unwrap();
+
+        for round in 0..20u64 {
+            let snap = server.client_snapshot();
+            let up = logic.run_round(&backend, &snap, (round % 4) as usize, round).unwrap();
+            if let ServerStep::Stepped(b) = server.ingest(&up.msg, 0).unwrap() {
+                replica.apply(&b).unwrap();
+                // bit-identical replicas
+                assert_eq!(replica.state(), server.client_snapshot().as_slice(),
+                           "divergence at t={}", b.t);
+            }
+        }
+        assert_eq!(replica.t, 10);
+    }
+
+    #[test]
+    fn out_of_order_broadcast_rejected() {
+        let cfg = qafel_cfg();
+        let mut replica = HiddenReplica::new(&cfg, vec![0.0; 8]).unwrap();
+        let fake = Broadcast {
+            t: 3,
+            bytes: 0,
+            msg: QuantizedMsg { payload: vec![], d: 8 },
+            absolute: false,
+        };
+        assert!(replica.apply(&fake).is_err());
+    }
+
+    #[test]
+    fn fedbuff_clients_upload_full_precision() {
+        let mut cfg = qafel_cfg();
+        cfg.fl.algorithm = Algorithm::FedBuff;
+        let logic = ClientLogic::new(&cfg, 1).unwrap();
+        assert_eq!(logic.quantizer_name(), "none");
+        assert_eq!(logic.upload_bytes(29_474), 117_896);
+    }
+
+    #[test]
+    fn qafel_upload_is_compressed() {
+        let cfg = qafel_cfg();
+        let logic = ClientLogic::new(&cfg, 1).unwrap();
+        // 8-bit bucketed qsgd: 1 byte per coordinate + one f32 norm per
+        // 128-coordinate bucket
+        let d = 29_474usize;
+        assert_eq!(logic.upload_bytes(d), 4 * d.div_ceil(128) + d);
+    }
+
+    #[test]
+    fn training_actually_descends_through_the_full_loop() {
+        let mut cfg = qafel_cfg();
+        cfg.fl.client_lr = 0.2;
+        let d = 16;
+        let backend = QuadraticBackend::new(d, 4, 1.0, 0.5, 0.2, 0.01, 2, 9);
+        let x0 = backend.init_params(0).unwrap();
+        let g0 = backend.grad_norm_sq(&x0);
+        let mut server = Server::build(&cfg, x0, 1).unwrap();
+        let logic = ClientLogic::new(&cfg, 2).unwrap();
+        for round in 0..600u64 {
+            let snap = server.client_snapshot();
+            let up = logic
+                .run_round(&backend, &snap, (round % 4) as usize, round)
+                .unwrap();
+            let _ = server.ingest(&up.msg, 0).unwrap();
+        }
+        let g1 = backend.grad_norm_sq(server.model());
+        assert!(g1 < g0 * 0.05, "{g0} -> {g1}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Appendix B.1 — the **non-broadcast variant** of QAFeL.
+//!
+//! Networks without broadcast capability replace the per-step broadcast
+//! with per-client catch-up on demand: the server keeps the last `C_max`
+//! hidden-state increments, where `C_max = (model bytes) / (expected
+//! increment bytes)`. When it samples a client whose replica is `s` steps
+//! stale it sends either the `s` missed increments (if `s <= C_max`) or
+//! the full current hidden state. Either way the cost is bounded by one
+//! full-precision model, so "the communication cost of QAFeL is less
+//! than or equal to that of FedBuff" (B.1).
+
+use crate::coordinator::server::Broadcast;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// What the server sends a catching-up client.
+#[derive(Clone, Debug)]
+pub enum CatchUp {
+    /// The increments from `from_t + 1 ..= now` (applied in order).
+    Increments(Vec<Broadcast>),
+    /// Replica too stale: ship the whole hidden state.
+    FullState { t: u64, x_hat: Vec<f32>, bytes: usize },
+}
+
+impl CatchUp {
+    /// Wire bytes of this catch-up response.
+    pub fn bytes(&self) -> usize {
+        match self {
+            CatchUp::Increments(v) => v.iter().map(|b| b.bytes).sum(),
+            CatchUp::FullState { bytes, .. } => *bytes,
+        }
+    }
+}
+
+/// Server-side log of recent hidden-state increments.
+pub struct UpdateLog {
+    log: VecDeque<Broadcast>,
+    /// Maximum retained increments (B.1's C_max).
+    c_max: usize,
+    /// Current hidden state (so full-state responses are available).
+    x_hat: Vec<f32>,
+    /// Step of the newest entry.
+    t: u64,
+    /// Bytes-sent accounting for the unicast downlink.
+    pub bytes_sent: u64,
+    pub full_syncs: u64,
+    pub incremental_syncs: u64,
+}
+
+impl UpdateLog {
+    /// `increment_bytes` is the expected size of one `Q_s` message; C_max
+    /// follows B.1's storage rule.
+    pub fn new(x0: Vec<f32>, increment_bytes: usize) -> UpdateLog {
+        let model_bytes = x0.len() * 4;
+        let c_max = (model_bytes / increment_bytes.max(1)).max(1);
+        UpdateLog {
+            log: VecDeque::with_capacity(c_max),
+            c_max,
+            x_hat: x0,
+            t: 0,
+            bytes_sent: 0,
+            full_syncs: 0,
+            incremental_syncs: 0,
+        }
+    }
+
+    pub fn c_max(&self) -> usize {
+        self.c_max
+    }
+
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// Record a server step's increment (instead of broadcasting it) and
+    /// advance the reference hidden state.
+    pub fn push(&mut self, b: Broadcast, apply: impl FnOnce(&mut Vec<f32>)) -> Result<()> {
+        if b.t != self.t + 1 {
+            bail!("update log: non-contiguous step {} (at {})", b.t, self.t);
+        }
+        apply(&mut self.x_hat);
+        self.t = b.t;
+        if self.log.len() == self.c_max {
+            self.log.pop_front();
+        }
+        self.log.push_back(b);
+        Ok(())
+    }
+
+    /// Build the catch-up response for a client whose replica is at
+    /// `client_t` (Appendix B.1's protocol) and account its bytes.
+    pub fn catch_up(&mut self, client_t: u64) -> Result<CatchUp> {
+        if client_t > self.t {
+            bail!("client claims t={client_t} > server t={}", self.t);
+        }
+        let missing = (self.t - client_t) as usize;
+        let oldest_available = self.t + 1 - self.log.len().min(self.t as usize) as u64;
+        let response = if missing == 0 {
+            CatchUp::Increments(Vec::new())
+        } else if missing <= self.log.len() && client_t + 1 >= oldest_available {
+            let skip = self.log.len() - missing;
+            let incs: Vec<Broadcast> = self.log.iter().skip(skip).cloned().collect();
+            debug_assert_eq!(incs.first().map(|b| b.t), Some(client_t + 1));
+            self.incremental_syncs += 1;
+            CatchUp::Increments(incs)
+        } else {
+            self.full_syncs += 1;
+            CatchUp::FullState {
+                t: self.t,
+                x_hat: self.x_hat.clone(),
+                bytes: self.x_hat.len() * 4,
+            }
+        };
+        self.bytes_sent += response.bytes() as u64;
+        Ok(response)
+    }
+
+    pub fn state(&self) -> &[f32] {
+        &self.x_hat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedMsg;
+
+    fn bc(t: u64, bytes: usize) -> Broadcast {
+        Broadcast { t, bytes, msg: QuantizedMsg { payload: vec![0; bytes], d: 4 }, absolute: false }
+    }
+
+    fn log_with(n: u64, inc_bytes: usize, d: usize) -> UpdateLog {
+        let mut log = UpdateLog::new(vec![0.0; d], inc_bytes);
+        for t in 1..=n {
+            log.push(bc(t, inc_bytes), |x| x[0] += 1.0).unwrap();
+        }
+        log
+    }
+
+    #[test]
+    fn c_max_follows_b1_rule() {
+        // model 4*100=400 bytes, increment 50 bytes -> C_max = 8
+        let log = UpdateLog::new(vec![0.0; 100], 50);
+        assert_eq!(log.c_max(), 8);
+    }
+
+    #[test]
+    fn incremental_catch_up_in_order() {
+        let mut log = log_with(5, 50, 100);
+        match log.catch_up(3).unwrap() {
+            CatchUp::Increments(incs) => {
+                assert_eq!(incs.iter().map(|b| b.t).collect::<Vec<_>>(), vec![4, 5]);
+            }
+            other => panic!("expected increments, got {other:?}"),
+        }
+        assert_eq!(log.incremental_syncs, 1);
+        assert_eq!(log.bytes_sent, 100);
+    }
+
+    #[test]
+    fn up_to_date_client_costs_nothing() {
+        let mut log = log_with(5, 50, 100);
+        let r = log.catch_up(5).unwrap();
+        assert_eq!(r.bytes(), 0);
+        assert_eq!(log.bytes_sent, 0);
+    }
+
+    #[test]
+    fn too_stale_gets_full_state_bounded_by_model_size() {
+        // C_max = 8; after 20 steps a client at t=2 is 18 behind
+        let mut log = log_with(20, 50, 100);
+        match log.catch_up(2).unwrap() {
+            CatchUp::FullState { t, x_hat, bytes } => {
+                assert_eq!(t, 20);
+                assert_eq!(x_hat[0], 20.0);
+                assert_eq!(bytes, 400); // == FedBuff's full download
+            }
+            other => panic!("expected full state, got {other:?}"),
+        }
+        assert_eq!(log.full_syncs, 1);
+        // B.1's claim: cost <= FedBuff's per-download cost
+        assert!(log.bytes_sent <= 400);
+    }
+
+    #[test]
+    fn log_evicts_beyond_c_max() {
+        let log = log_with(30, 50, 100);
+        assert_eq!(log.log.len(), 8);
+        assert_eq!(log.log.front().unwrap().t, 23);
+    }
+
+    #[test]
+    fn rejects_gaps_and_future_clients() {
+        let mut log = log_with(3, 50, 100);
+        assert!(log.push(bc(7, 50), |_| {}).is_err());
+        assert!(log.catch_up(9).is_err());
+    }
+
+    #[test]
+    fn boundary_exactly_c_max_behind_is_incremental() {
+        let mut log = log_with(10, 50, 100); // C_max = 8, log holds t=3..10
+        match log.catch_up(2).unwrap() {
+            CatchUp::Increments(incs) => {
+                assert_eq!(incs.len(), 8);
+                assert_eq!(incs[0].t, 3);
+            }
+            other => panic!("expected increments, got {other:?}"),
+        }
+        // one more step behind -> full state
+        match log.catch_up(1).unwrap() {
+            CatchUp::FullState { .. } => {}
+            other => panic!("expected full state, got {other:?}"),
+        }
+    }
+}

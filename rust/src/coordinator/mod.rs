@@ -1,0 +1,23 @@
+//! The paper's coordination contribution (L3): an asynchronous FL server
+//! with **buffered aggregation** and **bidirectional quantized
+//! communication** through a shared **hidden state**.
+//!
+//! * [`server::Server`] — Algorithm 1 (QAFeL-server): ingest quantized
+//!   client updates into a size-K buffer; on fill, take a momentum server
+//!   step, quantize the hidden-state increment with `Q_s`, broadcast it,
+//!   and advance the shared hidden state.
+//! * [`client::ClientLogic`] — Algorithms 2 & 3 (QAFeL-client +
+//!   background): copy the hidden state, run P local SGD steps (via a
+//!   [`crate::runtime::Backend`]), quantize the delta with `Q_c`.
+//! * Baselines fall out of the same machinery (DESIGN.md S3–S5):
+//!   **FedBuff** = identity quantizers; **FedAsync** = K = 1;
+//!   **DirectQuant** = broadcast `Q_s(x^{t+1})` with *no* hidden state —
+//!   the error-propagating scheme the hidden state exists to avoid.
+
+pub mod client;
+pub mod hidden;
+pub mod server;
+
+pub use client::ClientLogic;
+pub use hidden::{CatchUp, UpdateLog};
+pub use server::{Broadcast, Server, ServerStep};

@@ -1,0 +1,384 @@
+//! Algorithm 1 — QAFeL-server (and its baselines).
+//!
+//! ```text
+//! x̂^0 <- x^0                                  (shared hidden state)
+//! repeat:
+//!   on client update Δ_n (staleness τ_n):
+//!     Δ̄ += w(τ_n) · dequant(Δ_n);  k += 1
+//!   if k == K:
+//!     Δ̄ /= K
+//!     v <- β v + Δ̄                            (server momentum, App. D)
+//!     x^{t+1} <- x^t + η_g v
+//!     broadcast q^t = Q_s(x^{t+1} - x̂^t)      (hidden-state increment)
+//!     x̂^{t+1} <- x̂^t + q^t                    (same update on clients)
+//!     Δ̄ <- 0; k <- 0; t += 1
+//! ```
+//!
+//! `w(τ) = 1/sqrt(1+τ)` when staleness scaling is on (Fig. 3 runs),
+//! otherwise 1. With `Q_c = Q_s = identity` this is exactly FedBuff; with
+//! `hidden_state = false` the server instead broadcasts `Q_s(x^{t+1})`
+//! directly (the DirectQuant baseline), which propagates quantization
+//! error proportional to ‖x‖ rather than ‖x^{t+1} − x̂^t‖.
+
+use crate::config::{Algorithm, Config};
+use crate::metrics::CommMetrics;
+use crate::quant::{parse_spec, QuantizedMsg, Quantizer};
+use crate::util::prng::Prng;
+use crate::util::vecf;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A server->clients broadcast message.
+#[derive(Clone, Debug)]
+pub struct Broadcast {
+    /// Server step index t after this update.
+    pub t: u64,
+    /// Wire bytes of the broadcast payload.
+    pub bytes: usize,
+    /// The message itself (applied by `ClientLogic`/net clients; the
+    /// simulator applies it implicitly through the shared hidden state).
+    pub msg: QuantizedMsg,
+    /// True if the message carries the absolute model (DirectQuant mode)
+    /// rather than a hidden-state increment.
+    pub absolute: bool,
+}
+
+/// Outcome of ingesting one client update.
+#[derive(Clone, Debug)]
+pub enum ServerStep {
+    /// Update buffered; buffer not yet full.
+    Buffered,
+    /// Buffer filled: server step taken, broadcast emitted.
+    Stepped(Broadcast),
+}
+
+/// The QAFeL server state machine.
+pub struct Server {
+    // --- configuration -----------------------------------------------------
+    k_buffer: usize,
+    eta_g: f32,
+    beta: f32,
+    staleness_scaling: bool,
+    hidden_state_mode: bool,
+    quant_s: Box<dyn Quantizer>,
+    /// Codec for *decoding* client uploads (must match the spec clients
+    /// encode with; attach via [`Server::with_client_codec`]).
+    quant_c: Box<dyn Quantizer>,
+    // --- state ---------------------------------------------------------------
+    d: usize,
+    /// Server model x^t.
+    x: Vec<f32>,
+    /// Shared hidden state x̂^t (reference replica; clients hold copies in
+    /// net mode). `Arc` so in-flight clients can snapshot it for free.
+    x_hat: Arc<Vec<f32>>,
+    /// Momentum buffer v.
+    momentum: Vec<f32>,
+    /// Aggregation buffer Δ̄ (pre-division).
+    buffer: Vec<f32>,
+    k_filled: usize,
+    t: u64,
+    /// Randomness for the server quantizer.
+    rng: Prng,
+    /// Scratch for x^{t+1} - x̂^t.
+    diff: Vec<f32>,
+    // --- accounting --------------------------------------------------------
+    pub comm: CommMetrics,
+    /// Staleness histogram data (max observed, sum for mean).
+    pub staleness_max: u64,
+    pub staleness_sum: u64,
+}
+
+impl Server {
+    /// Build from the experiment config and the initial model x^0.
+    pub fn new(cfg: &Config, x0: Vec<f32>, seed: u64) -> Result<Server> {
+        let d = x0.len();
+        // Algorithm presets (DESIGN.md S3-S5)
+        let (quant_s_spec, k_buffer, hidden_state_mode, staleness_scaling) =
+            match cfg.fl.algorithm {
+                Algorithm::Qafel => (
+                    cfg.quant.server.clone(),
+                    cfg.fl.buffer_size,
+                    true,
+                    cfg.fl.staleness_scaling,
+                ),
+                Algorithm::FedBuff => (
+                    "none".to_string(),
+                    cfg.fl.buffer_size,
+                    true,
+                    cfg.fl.staleness_scaling,
+                ),
+                Algorithm::FedAsync => ("none".to_string(), 1, true, true),
+                Algorithm::DirectQuant => (
+                    cfg.quant.server.clone(),
+                    cfg.fl.buffer_size,
+                    false,
+                    cfg.fl.staleness_scaling,
+                ),
+            };
+        let quant_s = parse_spec(&quant_s_spec)?;
+        let quant_c = parse_spec("none")?;
+        Ok(Server {
+            quant_c,
+            k_buffer,
+            eta_g: cfg.fl.server_lr,
+            beta: cfg.fl.server_momentum,
+            staleness_scaling,
+            hidden_state_mode,
+            quant_s,
+            d,
+            x_hat: Arc::new(x0.clone()),
+            momentum: vec![0.0; d],
+            buffer: vec![0.0; d],
+            x: x0,
+            k_filled: 0,
+            t: 0,
+            rng: Prng::new(seed).stream("server-quant"),
+            diff: vec![0.0; d],
+            comm: CommMetrics::default(),
+            staleness_max: 0,
+            staleness_sum: 0,
+        })
+    }
+
+    /// Server step count t.
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Buffer size K.
+    pub fn k_buffer(&self) -> usize {
+        self.k_buffer
+    }
+
+    /// The state a newly sampled client copies (Algorithm 2 line 1):
+    /// the shared hidden state in QAFeL/FedBuff mode, or the latest
+    /// direct-quantized model in DirectQuant mode. Cheap Arc clone.
+    pub fn client_snapshot(&self) -> Arc<Vec<f32>> {
+        self.x_hat.clone()
+    }
+
+    /// True server model x^t (for evaluation — the paper evaluates the
+    /// server model).
+    pub fn model(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Mean observed staleness so far.
+    pub fn staleness_mean(&self) -> f64 {
+        if self.comm.uploads == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.comm.uploads as f64
+        }
+    }
+
+    /// Ingest one quantized client update (Algorithm 1 lines 5–16).
+    ///
+    /// `staleness` is the number of server steps taken since the client
+    /// copied its snapshot (τ_n(t) in the paper).
+    pub fn ingest(&mut self, update: &QuantizedMsg, staleness: u64) -> Result<ServerStep> {
+        self.comm.record_upload(update.wire_bytes());
+        self.staleness_sum += staleness;
+        self.staleness_max = self.staleness_max.max(staleness);
+
+        // scale down stale updates by 1/sqrt(1+τ) (Appendix D / Xie et al.)
+        let w = if self.staleness_scaling {
+            1.0 / ((1.0 + staleness as f64).sqrt() as f32)
+        } else {
+            1.0
+        };
+        // Dequantize straight into the aggregation buffer (no temp alloc),
+        // using the client codec attached via `with_client_codec`.
+        self.quant_c.accumulate(update, w, &mut self.buffer)?;
+        self.k_filled += 1;
+
+        if self.k_filled < self.k_buffer {
+            return Ok(ServerStep::Buffered);
+        }
+
+        // ---- server step (buffer full) -------------------------------------
+        let inv_k = 1.0 / self.k_buffer as f32;
+        // v <- beta * v + delta_bar ; x <- x + eta_g * v
+        for i in 0..self.d {
+            self.momentum[i] = self.beta * self.momentum[i] + self.buffer[i] * inv_k;
+            self.x[i] += self.eta_g * self.momentum[i];
+        }
+        vecf::zero(&mut self.buffer);
+        self.k_filled = 0;
+        self.t += 1;
+
+        let broadcast = if self.hidden_state_mode {
+            // q^t = Q_s(x^{t+1} - x_hat^t); x_hat^{t+1} = x_hat^t + q^t
+            vecf::sub(&mut self.diff, &self.x, &self.x_hat);
+            let msg = self.quant_s.quantize(&self.diff, &mut self.rng);
+            let bytes = msg.wire_bytes();
+            self.comm.record_broadcast(bytes);
+            let x_hat = Arc::make_mut(&mut self.x_hat);
+            self.quant_s.accumulate(&msg, 1.0, x_hat)?;
+            Broadcast { t: self.t, bytes, msg, absolute: false }
+        } else {
+            // DirectQuant baseline: broadcast Q_s(x^{t+1}) itself
+            let msg = self.quant_s.quantize(&self.x, &mut self.rng);
+            let bytes = msg.wire_bytes();
+            self.comm.record_broadcast(bytes);
+            let x_hat = Arc::make_mut(&mut self.x_hat);
+            self.quant_s.dequantize_into(&msg, x_hat)?;
+            Broadcast { t: self.t, bytes, msg, absolute: true }
+        };
+        Ok(ServerStep::Stepped(broadcast))
+    }
+
+    /// Distance between the server model and the shared hidden state —
+    /// the "quantization" error term of Lemma F.9 (‖x^t − x̂^t‖²).
+    pub fn hidden_state_error_sq(&self) -> f64 {
+        vecf::dist2_sq(&self.x, &self.x_hat)
+    }
+}
+
+// The client codec handle lives on the server for decoding; injected at
+// construction time (kept out of `new` above for readability).
+impl Server {
+    /// Attach the client-side quantizer spec used for *decoding* uploads.
+    /// Called by the builder; `Server::build` does this automatically.
+    pub fn with_client_codec(mut self, spec: &str, algorithm: Algorithm) -> Result<Server> {
+        let spec = match algorithm {
+            Algorithm::Qafel | Algorithm::DirectQuant => spec.to_string(),
+            Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
+        };
+        self.quant_c = parse_spec(&spec)?;
+        Ok(self)
+    }
+
+    /// One-call constructor used everywhere: server + matching codecs.
+    pub fn build(cfg: &Config, x0: Vec<f32>, seed: u64) -> Result<Server> {
+        Server::new(cfg, x0, seed)?.with_client_codec(&cfg.quant.client, cfg.fl.algorithm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cfg_with(algorithm: &str, k: usize) -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::parse(algorithm).unwrap();
+        c.fl.buffer_size = k;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c
+    }
+
+    fn upload(server: &mut Server, x: &[f32], staleness: u64) -> ServerStep {
+        let logic = crate::coordinator::ClientLogic::new(
+            &cfg_for_logic(server), 1,
+        ).unwrap();
+        let msg = logic.quantize_delta_for_test(x);
+        server.ingest(&msg, staleness).unwrap()
+    }
+
+    // helper: reconstruct a config whose client quantizer matches "none"
+    fn cfg_for_logic(_server: &Server) -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::FedBuff;
+        c
+    }
+
+    #[test]
+    fn fedbuff_buffer_semantics() {
+        let cfg = cfg_with("fedbuff", 3);
+        let d = 4;
+        let mut s = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        // two updates: still buffered
+        assert!(matches!(upload(&mut s, &[3.0, 0.0, 0.0, 0.0], 0), ServerStep::Buffered));
+        assert!(matches!(upload(&mut s, &[0.0, 3.0, 0.0, 0.0], 0), ServerStep::Buffered));
+        assert_eq!(s.t(), 0);
+        // third fills the buffer: x += eta_g * mean
+        let step = upload(&mut s, &[0.0, 0.0, 3.0, 0.0], 0);
+        assert!(matches!(step, ServerStep::Stepped(_)));
+        assert_eq!(s.t(), 1);
+        assert_eq!(s.model(), &[1.0, 1.0, 1.0, 0.0]);
+        // FedBuff: hidden state == model exactly (identity quantizer)
+        assert_eq!(s.client_snapshot().as_slice(), &[1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(s.hidden_state_error_sq(), 0.0);
+    }
+
+    #[test]
+    fn staleness_scaling_downweights() {
+        let mut cfg = cfg_with("fedbuff", 1);
+        cfg.fl.staleness_scaling = true;
+        let mut s = Server::build(&cfg, vec![0.0; 1], 1).unwrap();
+        upload(&mut s, &[1.0], 3); // w = 1/sqrt(4) = 0.5
+        assert!((s.model()[0] - 0.5).abs() < 1e-6);
+        assert_eq!(s.staleness_max, 3);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut cfg = cfg_with("fedbuff", 1);
+        cfg.fl.server_momentum = 0.5;
+        let mut s = Server::build(&cfg, vec![0.0; 1], 1).unwrap();
+        upload(&mut s, &[1.0], 0); // v=1, x=1
+        upload(&mut s, &[1.0], 0); // v=1.5, x=2.5
+        assert!((s.model()[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn qafel_hidden_state_tracks_model_within_quant_error() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:8".into();
+        let d = 64;
+        let mut s = Server::build(&cfg, vec![0.0; d], 2).unwrap();
+        let mut rng = Prng::new(3);
+        let qc = parse_spec("qsgd:8").unwrap();
+        for round in 0..50 {
+            let delta: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+            let msg = qc.quantize(&delta, &mut rng);
+            let _ = s.ingest(&msg, round % 3).unwrap();
+        }
+        assert_eq!(s.t(), 25);
+        let model_norm_sq: f64 = crate::util::vecf::norm2(s.model()).powi(2);
+        // hidden state must stay close to the model (contraction of Q_s):
+        assert!(
+            s.hidden_state_error_sq() < model_norm_sq.max(1e-6),
+            "err {} vs |x|^2 {}",
+            s.hidden_state_error_sq(),
+            model_norm_sq
+        );
+        // uploads/broadcast accounting
+        assert_eq!(s.comm.uploads, 50);
+        assert_eq!(s.comm.broadcasts, 25);
+    }
+
+    #[test]
+    fn fedasync_forces_k1() {
+        let cfg = cfg_with("fedasync", 10); // K in config ignored
+        let mut s = Server::build(&cfg, vec![0.0; 2], 1).unwrap();
+        assert_eq!(s.k_buffer(), 1);
+        assert!(matches!(upload(&mut s, &[1.0, 0.0], 0), ServerStep::Stepped(_)));
+    }
+
+    #[test]
+    fn directquant_broadcasts_absolute_model() {
+        let mut cfg = cfg_with("directquant", 1);
+        cfg.quant.client = "none".into();
+        cfg.quant.server = "qsgd:4".into();
+        let mut s = Server::build(&cfg, vec![0.0; 16], 1).unwrap();
+        let qc = parse_spec("none").unwrap();
+        let mut rng = Prng::new(9);
+        let delta: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let msg = qc.quantize(&delta, &mut rng);
+        match s.ingest(&msg, 0).unwrap() {
+            ServerStep::Stepped(b) => assert!(b.absolute),
+            _ => panic!("expected step"),
+        }
+        // snapshot is the *quantized* model, not the exact one
+        let snap = s.client_snapshot();
+        assert_ne!(snap.as_slice(), s.model());
+    }
+}

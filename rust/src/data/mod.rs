@@ -1,0 +1,24 @@
+//! Synthetic CelebA-LEAF substitute (DESIGN.md §4 substitution S9).
+//!
+//! The paper evaluates on LEAF's CelebA smile-detection task: 32x32x3
+//! images, non-iid partition over ~9.3k users with 1–32 samples each,
+//! 80/10/10 user split under seed 1549775860. CelebA images are not
+//! available offline, so we generate a *learnable, non-iid* synthetic task
+//! with the same shape: class-template images plus a per-user style
+//! offset and observation noise, with per-user label skew.
+//!
+//! The reproduced metrics (communication to reach a target validation
+//! accuracy) depend on optimization dynamics — gradient noise, client
+//! heterogeneity, staleness, quantization error — not on face semantics,
+//! so this substitution preserves the comparisons the paper makes.
+//!
+//! Images are generated **lazily and deterministically**: sample `j` of
+//! user `u` is a pure function of (dataset seed, u, j), so the dataset
+//! occupies O(users) memory, any client can be replayed bit-exactly, and
+//! the virtual-time simulator can evaluate clients in any order.
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{Partition, Split};
+pub use synth::{Dataset, IMG_C, IMG_ELEMS, IMG_H, IMG_W};

@@ -1,0 +1,351 @@
+//! Deterministic synthetic image generator.
+//!
+//! Construction (per DESIGN.md):
+//! * two **class templates** `T_0, T_1` — smooth low-frequency patterns
+//!   built from a small sum of random 2-D sinusoids, normalized to unit
+//!   RMS. "Smile vs no smile" becomes "which template is present";
+//! * each user has a **style image** `S_u` (another smooth pattern), a
+//!   signal amplitude `alpha_u in [0.7, 1.3]`, a label skew
+//!   `p_u in [0.2, 0.8]` (non-iid label distribution), and a sample count
+//!   `n_u ~ U{min..=max}` (LEAF CelebA: 1..=32);
+//! * sample `j` of user `u`:
+//!   `x = signal * alpha_u * T_y + style * S_u + noise * eps`,
+//!   `y ~ Bernoulli(p_u)`, `eps ~ N(0,1)` iid per pixel.
+//!
+//! Everything derives from `DataConfig::seed` through named PRNG streams.
+
+use crate::config::DataConfig;
+use crate::util::dist::Normal;
+use crate::util::prng::Prng;
+
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+pub const IMG_ELEMS: usize = IMG_H * IMG_W * IMG_C;
+
+/// Per-user metadata (images themselves are generated on demand).
+#[derive(Clone, Debug)]
+pub struct UserMeta {
+    /// Number of local samples (1..=32 for LEAF CelebA).
+    pub n_samples: usize,
+    /// P(y = 1) for this user (label skew — non-iid).
+    pub p_positive: f64,
+    /// Signal amplitude multiplier.
+    pub alpha: f32,
+    /// Seed of the user's style pattern.
+    style_seed: u64,
+}
+
+/// The synthetic dataset.
+pub struct Dataset {
+    cfg: DataConfig,
+    seed: u64,
+    templates: [Vec<f32>; 2],
+    users: Vec<UserMeta>,
+}
+
+/// Smooth unit-RMS pattern: sum of `n_waves` random 2-D sinusoids per
+/// channel with small integer frequencies.
+fn smooth_pattern(seed: u64, n_waves: usize) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    let mut img = vec![0.0f32; IMG_ELEMS];
+    for c in 0..IMG_C {
+        for _ in 0..n_waves {
+            let fx = rng.range(1, 5) as f32;
+            let fy = rng.range(1, 5) as f32;
+            let phase = rng.f32() * std::f32::consts::TAU;
+            let amp = 0.5 + rng.f32();
+            let sign = if rng.bool(0.5) { 1.0 } else { -1.0 };
+            for i in 0..IMG_H {
+                for j in 0..IMG_W {
+                    let v = amp
+                        * sign
+                        * ((fx * i as f32 / IMG_H as f32
+                            + fy * j as f32 / IMG_W as f32)
+                            * std::f32::consts::TAU
+                            + phase)
+                            .sin();
+                    img[(i * IMG_W + j) * IMG_C + c] += v;
+                }
+            }
+        }
+    }
+    // normalize to unit RMS
+    let rms =
+        (img.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / IMG_ELEMS as f64).sqrt();
+    let inv = if rms > 0.0 { (1.0 / rms) as f32 } else { 0.0 };
+    for v in &mut img {
+        *v *= inv;
+    }
+    img
+}
+
+impl Dataset {
+    pub fn new(cfg: &DataConfig) -> Dataset {
+        let root = Prng::new(cfg.seed);
+        let t0 = smooth_pattern(root.stream("template-0").next_u64_clone(), 4);
+        let t1 = smooth_pattern(root.stream("template-1").next_u64_clone(), 4);
+        let mut urng = root.stream("users");
+        let users = (0..cfg.num_users)
+            .map(|_| UserMeta {
+                n_samples: urng.range(cfg.min_samples, cfg.max_samples + 1),
+                p_positive: 0.2 + 0.6 * urng.f64(),
+                alpha: 0.7 + 0.6 * urng.f32(),
+                style_seed: urng.next_u64(),
+            })
+            .collect();
+        Dataset { cfg: cfg.clone(), seed: cfg.seed, templates: [t0, t1], users }
+    }
+
+    pub fn num_users(&self) -> usize {
+        self.users.len()
+    }
+
+    pub fn user(&self, u: usize) -> &UserMeta {
+        &self.users[u]
+    }
+
+    /// Deterministic label of sample `j` of user `u`.
+    pub fn label(&self, u: usize, j: usize) -> u32 {
+        let meta = &self.users[u];
+        let mut rng = Prng::new(self.seed ^ 0xA5A5_5A5A)
+            .stream_u64(u as u64)
+            .stream_u64(j as u64);
+        rng.bool(meta.p_positive) as u32
+    }
+
+    /// Write sample `j` of user `u` into `out` (len IMG_ELEMS); returns
+    /// the label. Pure function of (seed, u, j).
+    pub fn sample_into(&self, u: usize, j: usize, out: &mut [f32]) -> u32 {
+        assert_eq!(out.len(), IMG_ELEMS);
+        let meta = &self.users[u];
+        let y = self.label(u, j);
+        let template = &self.templates[y as usize];
+        let style = smooth_pattern(meta.style_seed, 3);
+        let mut nrng = Prng::new(self.seed ^ 0x3C3C_C3C3)
+            .stream_u64(u as u64)
+            .stream_u64(j as u64);
+        let mut normal = Normal::new();
+        let a = self.cfg.signal * meta.alpha;
+        let st = self.cfg.style;
+        let no = self.cfg.noise;
+        for i in 0..IMG_ELEMS {
+            out[i] =
+                a * template[i] + st * style[i] + no * normal.sample(&mut nrng) as f32;
+        }
+        y
+    }
+
+    /// Fill a training round for a user: `p_steps` batches of `batch`
+    /// samples. LEAF semantics: one epoch over the user's samples in a
+    /// random order; if n_u < batch the remainder is mask-padded; if the
+    /// epoch is exhausted (P > 1), further batches resample with
+    /// replacement. Layouts match the AOT artifact: xs[P,B,H,W,C] (NHWC),
+    /// ys[P,B], mask[P,B].
+    pub fn fill_round(
+        &self,
+        u: usize,
+        rng: &mut Prng,
+        p_steps: usize,
+        batch: usize,
+        xs: &mut [f32],
+        ys: &mut [i32],
+        mask: &mut [f32],
+    ) {
+        assert_eq!(xs.len(), p_steps * batch * IMG_ELEMS);
+        assert_eq!(ys.len(), p_steps * batch);
+        assert_eq!(mask.len(), p_steps * batch);
+        let n = self.users[u].n_samples;
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut cursor = 0usize;
+        for p in 0..p_steps {
+            for b in 0..batch {
+                let slot = p * batch + b;
+                let img = &mut xs[slot * IMG_ELEMS..(slot + 1) * IMG_ELEMS];
+                if cursor < order.len() {
+                    let j = order[cursor];
+                    cursor += 1;
+                    ys[slot] = self.sample_into(u, j, img) as i32;
+                    mask[slot] = 1.0;
+                } else if p == 0 {
+                    // first batch under-full: mask-pad (LEAF one-epoch case)
+                    img.fill(0.0);
+                    ys[slot] = 0;
+                    mask[slot] = 0.0;
+                } else {
+                    // later local steps: resample with replacement
+                    let j = rng.range(0, n);
+                    ys[slot] = self.sample_into(u, j, img) as i32;
+                    mask[slot] = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Total samples across a set of users.
+    pub fn total_samples(&self, users: &[usize]) -> usize {
+        users.iter().map(|&u| self.users[u].n_samples).sum()
+    }
+
+    /// Enumerate up to `limit` (user, sample) pairs across `users`,
+    /// deterministically subsampled with `rng` when the full set is
+    /// larger — used to build the fixed validation set.
+    pub fn eval_index(
+        &self,
+        users: &[usize],
+        limit: usize,
+        rng: &mut Prng,
+    ) -> Vec<(usize, usize)> {
+        let mut all: Vec<(usize, usize)> = users
+            .iter()
+            .flat_map(|&u| (0..self.users[u].n_samples).map(move |j| (u, j)))
+            .collect();
+        if all.len() > limit {
+            rng.shuffle(&mut all);
+            all.truncate(limit);
+            all.sort_unstable();
+        }
+        all
+    }
+}
+
+/// Small helper so template construction can consume one u64 from a
+/// derived stream without threading a mutable borrow around.
+trait NextU64Clone {
+    fn next_u64_clone(&self) -> u64;
+}
+
+impl NextU64Clone for Prng {
+    fn next_u64_clone(&self) -> u64 {
+        let mut c = self.clone();
+        c.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+
+    fn small_cfg() -> DataConfig {
+        DataConfig { num_users: 50, ..DataConfig::default() }
+    }
+
+    #[test]
+    fn deterministic_samples() {
+        let ds1 = Dataset::new(&small_cfg());
+        let ds2 = Dataset::new(&small_cfg());
+        let mut a = vec![0.0f32; IMG_ELEMS];
+        let mut b = vec![0.0f32; IMG_ELEMS];
+        for (u, j) in [(0, 0), (7, 3), (49, 0)] {
+            let ya = ds1.sample_into(u, j, &mut a);
+            let yb = ds2.sample_into(u, j, &mut b);
+            assert_eq!(ya, yb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg2 = small_cfg();
+        cfg2.seed = 99;
+        let ds1 = Dataset::new(&small_cfg());
+        let ds2 = Dataset::new(&cfg2);
+        let mut a = vec![0.0f32; IMG_ELEMS];
+        let mut b = vec![0.0f32; IMG_ELEMS];
+        ds1.sample_into(0, 0, &mut a);
+        ds2.sample_into(0, 0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn user_sample_counts_in_leaf_range() {
+        let ds = Dataset::new(&small_cfg());
+        for u in 0..ds.num_users() {
+            let n = ds.user(u).n_samples;
+            assert!((1..=32).contains(&n));
+        }
+        // heterogeneous: not all equal
+        let first = ds.user(0).n_samples;
+        assert!((0..ds.num_users()).any(|u| ds.user(u).n_samples != first));
+    }
+
+    #[test]
+    fn labels_match_sample_into() {
+        let ds = Dataset::new(&small_cfg());
+        let mut img = vec![0.0f32; IMG_ELEMS];
+        for u in 0..5 {
+            for j in 0..ds.user(u).n_samples.min(4) {
+                assert_eq!(ds.label(u, j), ds.sample_into(u, j, &mut img));
+            }
+        }
+    }
+
+    #[test]
+    fn label_skew_is_per_user() {
+        let cfg = DataConfig { num_users: 30, min_samples: 32, max_samples: 32, ..DataConfig::default() };
+        let ds = Dataset::new(&cfg);
+        let mut rates: Vec<f64> = Vec::new();
+        for u in 0..30 {
+            let pos: usize = (0..32).map(|j| ds.label(u, j) as usize).sum();
+            rates.push(pos as f64 / 32.0);
+        }
+        let spread = rates.iter().cloned().fold(f64::MIN, f64::max)
+            - rates.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.3, "labels look iid across users: {rates:?}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_correlation() {
+        // sanity: the Bayes-ish classifier "corr with T1 - corr with T0"
+        // must beat chance comfortably, or no model could learn this task.
+        let ds = Dataset::new(&small_cfg());
+        let mut img = vec![0.0f32; IMG_ELEMS];
+        let (mut correct, mut total) = (0, 0);
+        for u in 0..ds.num_users() {
+            for j in 0..ds.user(u).n_samples.min(4) {
+                let y = ds.sample_into(u, j, &mut img);
+                let c0 = crate::util::vecf::dot(&img, &ds.templates[0]);
+                let c1 = crate::util::vecf::dot(&img, &ds.templates[1]);
+                let pred = (c1 > c0) as u32;
+                correct += (pred == y) as usize;
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.85, "template classifier accuracy {acc}");
+    }
+
+    #[test]
+    fn fill_round_epoch_then_replacement() {
+        let ds = Dataset::new(&small_cfg());
+        // find a small user
+        let u = (0..ds.num_users()).min_by_key(|&u| ds.user(u).n_samples).unwrap();
+        let n = ds.user(u).n_samples;
+        let (p, b) = (2usize, 8usize);
+        let mut xs = vec![0.0f32; p * b * IMG_ELEMS];
+        let mut ys = vec![0i32; p * b];
+        let mut mask = vec![0.0f32; p * b];
+        let mut rng = Prng::new(1);
+        ds.fill_round(u, &mut rng, p, b, &mut xs, &mut ys, &mut mask);
+        let real_in_first: usize = mask[..b].iter().map(|&m| m as usize).sum();
+        assert_eq!(real_in_first, n.min(b));
+        // second step has no padding (resampled with replacement)
+        let real_in_second: usize = mask[b..].iter().map(|&m| m as usize).sum();
+        assert_eq!(real_in_second, b);
+    }
+
+    #[test]
+    fn eval_index_subsamples_deterministically() {
+        let ds = Dataset::new(&small_cfg());
+        let users: Vec<usize> = (0..20).collect();
+        let mut r1 = Prng::new(5);
+        let mut r2 = Prng::new(5);
+        let e1 = ds.eval_index(&users, 50, &mut r1);
+        let e2 = ds.eval_index(&users, 50, &mut r2);
+        assert_eq!(e1, e2);
+        assert_eq!(e1.len(), 50.min(ds.total_samples(&users)));
+        assert!(e1.iter().all(|&(u, j)| j < ds.user(u).n_samples));
+    }
+}

@@ -1,0 +1,127 @@
+//! E1 — Figure 3: communication metrics to reach the target validation
+//! accuracy for concurrency 100 / 500 / 1000, QAFeL (4-bit qsgd both
+//! directions) vs FedBuff.
+//!
+//! Paper setup (Appendix D): K = 10, staleness-scaled server learning
+//! rate (weight 1/sqrt(1+tau)), arrival rates 125/627/1253 derived from
+//! the half-normal duration's mean. Expected shape: QAFeL uploads count
+//! 1–1.5x FedBuff's, MB uploaded 5.2–8x *lower*, MB broadcast lower by a
+//! further factor K.
+
+use super::runner::{aggregate, report, run_seeds, BackendFactory, Row};
+use crate::config::{Algorithm, Config};
+use crate::sim::SimOptions;
+use anyhow::Result;
+
+/// Concurrency values from the paper.
+pub const CONCURRENCIES: [usize; 3] = [100, 500, 1000];
+
+pub fn run(
+    base: &Config,
+    make_backend: &BackendFactory,
+    out_dir: &str,
+    opts: &SimOptions,
+) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &conc in &CONCURRENCIES {
+        for (algo, qc, qs) in [
+            (Algorithm::Qafel, "qsgd:4", "qsgd:4"),
+            (Algorithm::FedBuff, "none", "none"),
+        ] {
+            let mut cfg = base.clone();
+            cfg.fl.algorithm = algo;
+            cfg.quant.client = qc.into();
+            cfg.quant.server = qs.into();
+            cfg.sim.concurrency = conc;
+            // Fig. 3 runs use staleness-scaled weights (Appendix D)
+            cfg.fl.staleness_scaling = true;
+            let label = format!("{} c={conc}", algo.name());
+            let set = run_seeds(&cfg, make_backend, opts, &label)?;
+            rows.push(aggregate(&set));
+        }
+    }
+    let md = report("fig3", out_dir, &rows)?;
+    println!("{md}");
+    Ok(rows)
+}
+
+/// The comparisons the paper draws from Figure 3, as checks over rows.
+/// Returns human-readable findings (used by tests and EXPERIMENTS.md).
+pub fn findings(rows: &[Row]) -> Vec<String> {
+    let mut out = Vec::new();
+    for chunk in rows.chunks(2) {
+        if chunk.len() < 2 {
+            continue;
+        }
+        let (q, f) = (&chunk[0], &chunk[1]);
+        out.push(format!(
+            "{}: upload-MB ratio fedbuff/qafel = {:.2} (paper: 5.2-8x); \
+             uploads ratio qafel/fedbuff = {:.2} (paper: 1-1.5x); \
+             broadcast-MB ratio = {:.2}",
+            q.label,
+            f.upload_mb_mean / q.upload_mb_mean.max(1e-12),
+            q.uploads_k_mean / f.uploads_k_mean.max(1e-12),
+            f.broadcast_mb_mean / q.broadcast_mb_mean.max(1e-12),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::QuadraticBackend;
+
+    #[test]
+    fn fig3_shape_on_quadratic_backend() {
+        // Small-scale shape check: QAFeL must upload far fewer MB while
+        // needing a similar number of trips.
+        let mut base = Config::default();
+        base.fl.buffer_size = 4;
+        base.fl.client_lr = 0.15;
+        base.fl.server_lr = 1.0;
+        base.fl.server_momentum = 0.0;
+        base.fl.clip_norm = 0.0;
+        base.sim.eval_every = 5;
+        base.seeds = vec![1, 2];
+        base.stop.target_accuracy = 0.95;
+        base.stop.max_uploads = 8000;
+        base.stop.max_server_steps = 2000;
+
+        let factory = |seed: u64| -> Result<Box<dyn crate::runtime::Backend>> {
+            Ok(Box::new(QuadraticBackend::new(64, 10, 1.0, 0.3, 0.2, 0.02, 2, seed)))
+        };
+        let dir = std::env::temp_dir().join(format!("qafel-fig3-{}", std::process::id()));
+        let mut rows = Vec::new();
+        for &conc in &[10usize, 40] {
+            for (algo, qc, qs) in [
+                (Algorithm::Qafel, "qsgd:4", "qsgd:4"),
+                (Algorithm::FedBuff, "none", "none"),
+            ] {
+                let mut cfg = base.clone();
+                cfg.fl.algorithm = algo;
+                cfg.quant.client = qc.into();
+                cfg.quant.server = qs.into();
+                cfg.sim.concurrency = conc;
+                cfg.fl.staleness_scaling = true;
+                let set = run_seeds(&cfg, &factory, &Default::default(),
+                                    &format!("{} c={conc}", algo.name())).unwrap();
+                rows.push(aggregate(&set));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        for pair in rows.chunks(2) {
+            let (q, f) = (&pair[0], &pair[1]);
+            assert!(q.reached_frac > 0.4, "{} rarely converged", q.label);
+            assert!(f.reached_frac > 0.4, "{} rarely converged", f.label);
+            // who wins on bytes: QAFeL by a wide margin
+            let mb_ratio = f.upload_mb_mean / q.upload_mb_mean;
+            assert!(mb_ratio > 2.0, "{}: MB ratio only {mb_ratio:.2}", q.label);
+            // trips: same order (not 5x worse)
+            let trip_ratio = q.uploads_k_mean / f.uploads_k_mean;
+            assert!(trip_ratio < 3.0, "{}: trip ratio {trip_ratio:.2}", q.label);
+        }
+        let f = findings(&rows);
+        assert_eq!(f.len(), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (DESIGN.md §6 experiment index).
+//!
+//! | id | paper artifact | module |
+//! |----|----------------|--------|
+//! | E1 | Figure 3 (concurrency sweep)            | [`fig3`] |
+//! | E2 | Figure 4 + Table 1 (qsgd grid)          | [`table1`] |
+//! | E3 | Table 2 (biased top_k server)           | [`table2`] |
+//! | E4 | Prop. 3.5 order validation              | [`convergence`] |
+//! | E5–E7 | hidden-state / K / staleness ablations | [`ablations`] |
+//!
+//! Each experiment writes `reports/<name>.csv` (raw rows) and
+//! `reports/<name>.md` (a paper-style table) and prints the table.
+
+pub mod ablations;
+pub mod convergence;
+pub mod fig3;
+pub mod runner;
+pub mod table1;
+pub mod table2;
+
+pub use runner::{aggregate, BackendFactory, Row, RunSet};

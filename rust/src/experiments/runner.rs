@@ -1,0 +1,220 @@
+//! Shared machinery: run a config over seeds, aggregate mean ± std the
+//! way the paper reports, and emit csv/markdown.
+
+use crate::config::Config;
+use crate::metrics::csv::CsvWriter;
+use crate::metrics::RunResult;
+use crate::runtime::Backend;
+use crate::sim::{SimEngine, SimOptions};
+use anyhow::Result;
+
+/// Builds a fresh backend for a given run seed. PJRT backends share one
+/// compiled engine behind `Rc`; quadratic backends are rebuilt per seed.
+pub type BackendFactory<'a> = dyn Fn(u64) -> Result<Box<dyn Backend>> + 'a;
+
+/// All runs for one experimental condition (one table row).
+#[derive(Clone, Debug)]
+pub struct RunSet {
+    pub label: String,
+    pub results: Vec<RunResult>,
+}
+
+/// One aggregated table row (mean ± std over seeds, like the paper).
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    /// Client trips to target, in thousands (paper: "Uploads (in
+    /// thousands)").
+    pub uploads_k_mean: f64,
+    pub uploads_k_std: f64,
+    /// Exact codec payload sizes.
+    pub kb_per_upload: f64,
+    pub kb_per_download: f64,
+    pub upload_mb_mean: f64,
+    pub upload_mb_std: f64,
+    pub broadcast_mb_mean: f64,
+    pub broadcast_mb_std: f64,
+    /// Virtual time to target.
+    pub time_mean: f64,
+    /// Fraction of seeds that reached the target accuracy.
+    pub reached_frac: f64,
+    pub final_acc_mean: f64,
+}
+
+/// Run `cfg` once per seed.
+pub fn run_seeds(
+    cfg: &Config,
+    make_backend: &BackendFactory,
+    opts: &SimOptions,
+    label: &str,
+) -> Result<RunSet> {
+    let mut results = Vec::new();
+    for &seed in &cfg.seeds {
+        let backend = make_backend(seed)?;
+        let result = SimEngine::new(cfg, backend.as_ref(), seed).run_with(opts)?;
+        if opts.verbose {
+            eprintln!(
+                "[{label}] seed {seed}: uploads={} reached={} final_acc={:.4} ({:.1}s wall)",
+                result.comm.uploads,
+                result.reached.is_some(),
+                result.final_accuracy,
+                result.wall_seconds
+            );
+        }
+        results.push(result);
+    }
+    Ok(RunSet { label: label.to_string(), results })
+}
+
+/// Aggregate a [`RunSet`] into one table row.
+pub fn aggregate(set: &RunSet) -> Row {
+    let at: Vec<_> = set.results.iter().map(|r| r.at_target()).collect();
+    let uploads_k: Vec<f64> = at.iter().map(|p| p.uploads as f64 / 1000.0).collect();
+    let up_mb: Vec<f64> = at.iter().map(|p| p.upload_mb).collect();
+    let down_mb: Vec<f64> = at.iter().map(|p| p.broadcast_mb).collect();
+    let times: Vec<f64> = at.iter().map(|p| p.time).collect();
+    let kb_up: Vec<f64> = set.results.iter().map(|r| r.comm.kb_per_upload()).collect();
+    let kb_down: Vec<f64> = set.results.iter().map(|r| r.comm.kb_per_download()).collect();
+    let finals: Vec<f64> = set.results.iter().map(|r| r.final_accuracy).collect();
+    let reached = set.results.iter().filter(|r| r.reached.is_some()).count();
+    use crate::util::stats::{mean, std};
+    Row {
+        label: set.label.clone(),
+        uploads_k_mean: mean(&uploads_k),
+        uploads_k_std: std(&uploads_k),
+        kb_per_upload: mean(&kb_up),
+        kb_per_download: mean(&kb_down),
+        upload_mb_mean: mean(&up_mb),
+        upload_mb_std: std(&up_mb),
+        broadcast_mb_mean: mean(&down_mb),
+        broadcast_mb_std: std(&down_mb),
+        time_mean: mean(&times),
+        reached_frac: reached as f64 / set.results.len().max(1) as f64,
+        final_acc_mean: mean(&finals),
+    }
+}
+
+/// Write rows as csv + a paper-style markdown table; returns the markdown.
+pub fn report(name: &str, out_dir: &str, rows: &[Row]) -> Result<String> {
+    let mut csv = CsvWriter::new(&[
+        "label",
+        "uploads_k_mean",
+        "uploads_k_std",
+        "kb_per_upload",
+        "kb_per_download",
+        "upload_mb_mean",
+        "upload_mb_std",
+        "broadcast_mb_mean",
+        "broadcast_mb_std",
+        "time_mean",
+        "reached_frac",
+        "final_acc_mean",
+    ]);
+    for r in rows {
+        csv.row(&[
+            r.label.clone(),
+            format!("{:.3}", r.uploads_k_mean),
+            format!("{:.3}", r.uploads_k_std),
+            format!("{:.3}", r.kb_per_upload),
+            format!("{:.3}", r.kb_per_download),
+            format!("{:.3}", r.upload_mb_mean),
+            format!("{:.3}", r.upload_mb_std),
+            format!("{:.3}", r.broadcast_mb_mean),
+            format!("{:.3}", r.broadcast_mb_std),
+            format!("{:.3}", r.time_mean),
+            format!("{:.2}", r.reached_frac),
+            format!("{:.4}", r.final_acc_mean),
+        ]);
+    }
+    csv.save(format!("{out_dir}/{name}.csv"))?;
+
+    let mut md = String::new();
+    md.push_str(&format!("# {name}\n\n"));
+    md.push_str("| Algorithm | Uploads (thousands) | kB/upload | kB/download | MB uploaded | MB broadcast | reached |\n");
+    md.push_str("|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        md.push_str(&format!(
+            "| {} | {:.1} ± {:.1} | {:.3} | {:.3} | {:.1} ± {:.1} | {:.2} ± {:.2} | {:.0}% |\n",
+            r.label,
+            r.uploads_k_mean,
+            r.uploads_k_std,
+            r.kb_per_upload,
+            r.kb_per_download,
+            r.upload_mb_mean,
+            r.upload_mb_std,
+            r.broadcast_mb_mean,
+            r.broadcast_mb_std,
+            r.reached_frac * 100.0
+        ));
+    }
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/{name}.md"), &md)?;
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Config};
+    use crate::runtime::QuadraticBackend;
+
+    pub(crate) fn quick_cfg() -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::Qafel;
+        c.quant.client = "qsgd:4".into();
+        c.quant.server = "qsgd:4".into();
+        c.fl.buffer_size = 4;
+        c.fl.client_lr = 0.15;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c.fl.clip_norm = 0.0;
+        c.sim.concurrency = 10;
+        c.sim.eval_every = 5;
+        c.seeds = vec![1, 2];
+        c.stop.target_accuracy = 0.97;
+        c.stop.max_uploads = 5000;
+        c.stop.max_server_steps = 1000;
+        c
+    }
+
+    #[test]
+    fn run_and_aggregate() {
+        let cfg = quick_cfg();
+        let factory = |seed: u64| -> Result<Box<dyn crate::runtime::Backend>> {
+            Ok(Box::new(QuadraticBackend::new(16, 8, 1.0, 0.3, 0.2, 0.02, 2, seed)))
+        };
+        let set = run_seeds(&cfg, &factory, &Default::default(), "qafel 4/4").unwrap();
+        assert_eq!(set.results.len(), 2);
+        let row = aggregate(&set);
+        assert_eq!(row.label, "qafel 4/4");
+        assert!(row.uploads_k_mean > 0.0);
+        assert!(row.kb_per_upload > 0.0);
+        // qsgd:4 at d=16: 4 + 8 = 12 bytes
+        assert!((row.kb_per_upload - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let dir = std::env::temp_dir().join(format!("qafel-report-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let row = Row {
+            label: "x".into(),
+            uploads_k_mean: 1.0,
+            uploads_k_std: 0.1,
+            kb_per_upload: 15.0,
+            kb_per_download: 15.0,
+            upload_mb_mean: 15.0,
+            upload_mb_std: 1.0,
+            broadcast_mb_mean: 1.5,
+            broadcast_mb_std: 0.1,
+            time_mean: 3.0,
+            reached_frac: 1.0,
+            final_acc_mean: 0.92,
+        };
+        let md = report("unit", &dir, &[row]).unwrap();
+        assert!(md.contains("| x |"));
+        assert!(std::path::Path::new(&dir).join("unit.csv").exists());
+        assert!(std::path::Path::new(&dir).join("unit.md").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

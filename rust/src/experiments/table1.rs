@@ -1,0 +1,115 @@
+//! E2 — Table 1 / Figure 4: QAFeL with every combination of client and
+//! server n-bit qsgd in {8, 4, 2}, plus the FedBuff reference row.
+//!
+//! Paper's qualitative findings this regenerates:
+//! * fewer server bits => always fewer total download bytes;
+//! * fewer client bits => sometimes MORE uploads (2-bit client needs up
+//!   to ~3x the trips) — the compression/convergence-speed trade-off;
+//! * the client quantizer affects convergence much more than the server
+//!   quantizer (consistent with the 1/sqrt(T) vs 1/T error orders).
+
+use super::runner::{aggregate, report, run_seeds, BackendFactory, Row};
+use crate::config::{Algorithm, Config};
+use crate::sim::SimOptions;
+use anyhow::Result;
+
+pub const BITS: [u32; 3] = [8, 4, 2];
+
+pub fn run(
+    base: &Config,
+    make_backend: &BackendFactory,
+    out_dir: &str,
+    opts: &SimOptions,
+) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+
+    // FedBuff reference row
+    let mut cfg = base.clone();
+    cfg.fl.algorithm = Algorithm::FedBuff;
+    let set = run_seeds(&cfg, make_backend, opts, "fedbuff")?;
+    rows.push(aggregate(&set));
+
+    for &cb in &BITS {
+        for &sb in &BITS {
+            let mut cfg = base.clone();
+            cfg.fl.algorithm = Algorithm::Qafel;
+            cfg.quant.client = format!("qsgd:{cb}");
+            cfg.quant.server = format!("qsgd:{sb}");
+            let label = format!("qafel c{cb}-bit s{sb}-bit");
+            let set = run_seeds(&cfg, make_backend, opts, &label)?;
+            rows.push(aggregate(&set));
+        }
+    }
+    let md = report("table1", out_dir, &rows)?;
+    println!("{md}");
+    Ok(rows)
+}
+
+/// Index helper for the 1 + 3x3 row layout produced by [`run`].
+pub fn row_for<'a>(rows: &'a [Row], client_bits: u32, server_bits: u32) -> &'a Row {
+    let ci = BITS.iter().position(|&b| b == client_bits).unwrap();
+    let si = BITS.iter().position(|&b| b == server_bits).unwrap();
+    &rows[1 + ci * BITS.len() + si]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::QuadraticBackend;
+
+    #[test]
+    fn table1_grid_shape_on_quadratic_backend() {
+        let mut base = Config::default();
+        base.fl.buffer_size = 4;
+        base.fl.client_lr = 0.15;
+        base.fl.server_lr = 1.0;
+        base.fl.server_momentum = 0.0;
+        base.fl.clip_norm = 0.0;
+        base.sim.concurrency = 10;
+        base.sim.eval_every = 5;
+        base.seeds = vec![1, 2, 3];
+        base.stop.target_accuracy = 0.95;
+        base.stop.max_uploads = 20_000;
+        base.stop.max_server_steps = 5000;
+
+        let factory = |seed: u64| -> Result<Box<dyn crate::runtime::Backend>> {
+            Ok(Box::new(QuadraticBackend::new(128, 10, 1.0, 0.3, 0.2, 0.02, 2, seed)))
+        };
+        let dir = std::env::temp_dir().join(format!("qafel-t1-{}", std::process::id()));
+        let rows = run(&base, &factory, dir.to_str().unwrap(), &Default::default()).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(rows.len(), 10);
+
+        // per-message sizes ordered: 8-bit > 4-bit > 2-bit, fedbuff largest
+        assert!(rows[0].kb_per_upload > row_for(&rows, 8, 8).kb_per_upload);
+        assert!(row_for(&rows, 8, 8).kb_per_upload > row_for(&rows, 4, 8).kb_per_upload);
+        assert!(row_for(&rows, 4, 8).kb_per_upload > row_for(&rows, 2, 8).kb_per_upload);
+        // server bits only affect download size
+        assert!(row_for(&rows, 4, 8).kb_per_download > row_for(&rows, 4, 2).kb_per_download);
+        assert_eq!(row_for(&rows, 4, 8).kb_per_upload, row_for(&rows, 4, 2).kb_per_upload);
+        // paper finding: 2-bit client needs more trips / converges slower.
+        // On the quadratic worst case the 2-bit client's quantization
+        // noise floor can sit above the target at fixed lr (the lr
+        // condition (8) scales with (1-delta_c)), so assert the ordering
+        // (at_target falls back to the end-of-run point when unreached):
+        let trips_2 = row_for(&rows, 2, 4).uploads_k_mean;
+        let trips_8 = row_for(&rows, 8, 4).uploads_k_mean;
+        assert!(trips_2 >= trips_8 * 0.9, "2-bit {trips_2} vs 8-bit {trips_8}");
+        assert!(
+            row_for(&rows, 2, 8).final_acc_mean
+                <= row_for(&rows, 8, 8).final_acc_mean + 0.02,
+            "2-bit client unexpectedly beat 8-bit"
+        );
+        // configs inside the paper's convergence condition reach target.
+        // (2-bit qsgd at this dimension has delta <= 0 — sqrt(2d)/s > 1 —
+        // outside Definition 2.1's contraction; on the gaussian-diff
+        // quadratic backend those rows may legitimately miss the target.
+        // Theorem F.1 itself requires delta_s > 0.)
+        for &cb in &[8u32, 4] {
+            for &sb in &[8u32, 4] {
+                let r = row_for(&rows, cb, sb);
+                assert!(r.reached_frac >= 0.5, "{} reached {}", r.label, r.reached_frac);
+            }
+        }
+    }
+}

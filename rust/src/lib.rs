@@ -1,0 +1,38 @@
+//! # QAFeL — Quantized Asynchronous Federated Learning
+//!
+//! Production-quality reproduction of *"Asynchronous Federated Learning
+//! with Bidirectional Quantized Communications and Buffered Aggregation"*
+//! (Ortega & Jafarkhani, 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: an
+//!   asynchronous federated-learning server with buffered aggregation
+//!   (FedBuff), bidirectional quantized communication and a shared hidden
+//!   state ([`coordinator`]), plus the event-driven simulator ([`sim`]),
+//!   a real threaded/TCP runtime ([`net`]), quantizers with exact wire
+//!   codecs ([`quant`]), and the experiment harness ([`experiments`]).
+//! * **L2** — the LEAF-CelebA CNN fwd/bwd in JAX (`python/compile/model.py`),
+//!   AOT-lowered once to HLO text and executed from Rust via PJRT
+//!   ([`runtime`]). Python never runs on the request path.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): tiled matmul and
+//!   the qsgd stochastic-quantization kernel, lowered into the same HLO.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results of every table and figure.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod net;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,393 @@
+//! `qafel` — command-line entry point.
+//!
+//! Subcommands:
+//! * `exp fig3|table1|table2|convergence|ablate` — regenerate the paper's
+//!   figures/tables (DESIGN.md §6) into `reports/`.
+//! * `run` — one simulated training run, printing the curve.
+//! * `leader` / `worker` — the real TCP distributed runtime.
+//! * `info` — inspect an artifact manifest.
+//! * `selfcheck` — cross-validate the rust qsgd codec against the L1
+//!   Pallas kernel artifact, and the full PJRT round-trip.
+//!
+//! Common options: `--config <file.toml>`, repeated `--set a.b=v`
+//! overrides, `--backend pjrt|quadratic`, `--artifacts <dir>`,
+//! `--out <dir>`, `--verbose`.
+
+use anyhow::{anyhow, bail, Result};
+use qafel::runtime::Backend as _;
+use qafel::cli::Args;
+use qafel::config::Config;
+use qafel::experiments::{self, runner::BackendFactory};
+use qafel::net::{Leader, Worker};
+use qafel::runtime::{artifacts_available, artifacts_dir, Engine, PjrtBackend, QuadraticBackend};
+use qafel::sim::{SimEngine, SimOptions};
+use std::rc::Rc;
+
+const USAGE: &str = "\
+qafel <command> [options]
+
+commands:
+  exp <fig3|table1|table2|convergence|ablate>   regenerate paper results
+  run                                           single simulated run
+  leader --addr HOST:PORT --workers N           TCP leader
+  worker --addr HOST:PORT                       TCP worker (quadratic backend)
+  info                                          show artifact manifest
+  selfcheck                                     PJRT + Pallas cross-checks
+
+options:
+  --config FILE      TOML config (defaults = paper Appendix D)
+  --set a.b=v        override one config value (repeatable)
+  --backend KIND     pjrt (default when artifacts exist) | quadratic
+  --artifacts DIR    artifacts directory (default: artifacts)
+  --out DIR          report output directory (default: reports)
+  --horizons LIST    convergence: comma-separated T values
+  --which LIST       ablate: hidden-state,k-sweep,staleness,non-broadcast
+  --verbose          progress logging
+";
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    for assignment in args.opts("set") {
+        cfg.set(assignment)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Tune the analytic backend's hyperparameters (the paper's CelebA values
+/// make no sense for a synthetic quadratic).
+fn preset_quadratic(cfg: &mut Config) {
+    cfg.fl.client_lr = 0.15;
+    cfg.fl.clip_norm = 0.0;
+    cfg.fl.server_lr = 1.0;
+    cfg.fl.server_momentum = 0.0;
+    cfg.sim.concurrency = cfg.sim.concurrency.min(50);
+    cfg.sim.eval_every = 5;
+    cfg.stop.target_accuracy = 0.95;
+    cfg.stop.max_uploads = 100_000;
+    cfg.stop.max_server_steps = 20_000;
+}
+
+enum BackendKind {
+    Pjrt(Rc<Engine>),
+    Quadratic,
+}
+
+fn pick_backend(args: &Args, adir: &str) -> Result<BackendKind> {
+    let kind = args.opt("backend").map(|s| s.to_string()).unwrap_or_else(|| {
+        if artifacts_available(adir) { "pjrt".into() } else { "quadratic".into() }
+    });
+    match kind.as_str() {
+        "pjrt" => {
+            if !artifacts_available(adir) {
+                bail!("artifacts not found in '{adir}' — run `make artifacts` first");
+            }
+            eprintln!("[qafel] loading + compiling artifacts from {adir} ...");
+            let engine = Rc::new(Engine::load_subset(
+                adir,
+                &["init_params", "client_update", "eval_step"],
+            )?);
+            eprintln!("[qafel] engine ready (d = {})", engine.d());
+            Ok(BackendKind::Pjrt(engine))
+        }
+        "quadratic" => Ok(BackendKind::Quadratic),
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+fn make_factory<'a>(
+    kind: &'a BackendKind,
+    cfg: &'a Config,
+) -> Box<dyn Fn(u64) -> Result<Box<dyn qafel::runtime::Backend>> + 'a> {
+    match kind {
+        BackendKind::Pjrt(engine) => {
+            let engine = engine.clone();
+            Box::new(move |seed: u64| {
+                Ok(Box::new(PjrtBackend::new(engine.clone(), &cfg.data, seed)?)
+                    as Box<dyn qafel::runtime::Backend>)
+            })
+        }
+        BackendKind::Quadratic => Box::new(move |seed: u64| {
+            Ok(Box::new(QuadraticBackend::new(
+                128,
+                64,
+                1.0,
+                0.3,
+                0.2,
+                0.02,
+                cfg.fl.local_steps,
+                seed,
+            )) as Box<dyn qafel::runtime::Backend>)
+        }),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("exp needs a target: fig3|table1|table2|convergence|ablate"))?
+        .clone();
+    let mut cfg = load_config(args)?;
+    let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
+    let kind = pick_backend(args, &adir)?;
+    if matches!(kind, BackendKind::Quadratic) && args.opt("config").is_none() {
+        preset_quadratic(&mut cfg);
+        for assignment in args.opts("set") {
+            cfg.set(assignment)?; // re-apply: explicit overrides win
+        }
+    }
+    let out = args.opt("out").unwrap_or("reports").to_string();
+    let opts = SimOptions { verbose: args.flag("verbose"), ..Default::default() };
+    let factory = make_factory(&kind, &cfg);
+    let factory: &BackendFactory = factory.as_ref();
+
+    match which.as_str() {
+        "fig3" => {
+            let rows = experiments::fig3::run(&cfg, factory, &out, &opts)?;
+            for f in experiments::fig3::findings(&rows) {
+                println!("{f}");
+            }
+        }
+        "table1" => {
+            experiments::table1::run(&cfg, factory, &out, &opts)?;
+        }
+        "table2" => {
+            experiments::table2::run(&cfg, factory, &out, &opts)?;
+        }
+        "convergence" => {
+            if !matches!(kind, BackendKind::Quadratic) {
+                bail!("convergence needs --backend quadratic (exact grad norms)");
+            }
+            let horizons: Vec<u64> = args
+                .opt("horizons")
+                .unwrap_or("50,100,200,400,800")
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|e| anyhow!("bad horizon: {e}")))
+                .collect::<Result<_>>()?;
+            experiments::convergence::run(&cfg, factory, &out, &horizons)?;
+        }
+        "ablate" => {
+            let which = args.opt("which").unwrap_or("hidden-state,k-sweep,staleness,non-broadcast");
+            for name in which.split(',') {
+                match name.trim() {
+                    "hidden-state" => {
+                        experiments::ablations::hidden_state(&cfg, factory, &out, &opts)?;
+                    }
+                    "k-sweep" => {
+                        experiments::ablations::k_sweep(&cfg, factory, &out, &opts)?;
+                    }
+                    "staleness" => {
+                        experiments::ablations::staleness(&cfg, factory, &out, &opts)?;
+                    }
+                    "non-broadcast" => {
+                        let (catch_up, full) =
+                            experiments::ablations::non_broadcast_cost(&cfg, factory)?;
+                        println!(
+                            "non-broadcast variant (Appendix B.1): mean catch-up = {:.1} kB \
+                             vs FedBuff full download {:.1} kB",
+                            catch_up / 1000.0,
+                            full / 1000.0
+                        );
+                    }
+                    other => bail!("unknown ablation '{other}'"),
+                }
+            }
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
+    let kind = pick_backend(args, &adir)?;
+    if matches!(kind, BackendKind::Quadratic) && args.opt("config").is_none() {
+        preset_quadratic(&mut cfg);
+        for assignment in args.opts("set") {
+            cfg.set(assignment)?;
+        }
+    }
+    let factory = make_factory(&kind, &cfg);
+    let opts = SimOptions { verbose: true, ..Default::default() };
+    let seed = cfg.seeds[0];
+    let backend = factory(seed)?;
+    let result = SimEngine::new(&cfg, backend.as_ref(), seed).run_with(&opts)?;
+    println!("\nrun complete ({:.1}s wall):", result.wall_seconds);
+    println!("  algorithm      : {}", cfg.fl.algorithm.name());
+    println!("  quantizers     : client {}, server {}", cfg.quant.client, cfg.quant.server);
+    println!("  server steps   : {}", result.server_steps);
+    println!("  uploads        : {}", result.comm.uploads);
+    println!("  kB/upload      : {:.3}", result.comm.kb_per_upload());
+    println!("  kB/download    : {:.3}", result.comm.kb_per_download());
+    println!("  MB uploaded    : {:.2}", result.comm.upload_mb());
+    println!("  MB broadcast   : {:.2}", result.comm.broadcast_mb());
+    println!("  final accuracy : {:.4}", result.final_accuracy);
+    match result.reached {
+        Some(p) => println!(
+            "  reached {:.0}% at: {} uploads / {:.1} MB up / t={:.1}",
+            cfg.stop.target_accuracy * 100.0,
+            p.uploads,
+            p.upload_mb,
+            p.time
+        ),
+        None => println!("  target not reached"),
+    }
+    Ok(())
+}
+
+fn cmd_leader(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7710").to_string();
+    let workers: usize = args.opt_or("workers", 4)?;
+    // leader evaluates nothing; it needs x0 of the right dimension
+    let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
+    let x0 = match pick_backend(args, &adir)? {
+        BackendKind::Pjrt(engine) => engine.init_params(cfg.seeds[0] as i32)?,
+        BackendKind::Quadratic => {
+            QuadraticBackend::new(128, 64, 1.0, 0.3, 0.2, 0.02, cfg.fl.local_steps, cfg.seeds[0])
+                .init_params(0)?
+        }
+    };
+    println!("[leader] serving on {addr}, waiting for {workers} workers ...");
+    let report = Leader::new(cfg, x0, 1).run(&addr, workers)?;
+    println!("[leader] done: {} steps, {} uploads, kB/up {:.3}, staleness max {} mean {:.2}",
+             report.server_steps, report.comm.uploads, report.comm.kb_per_upload(),
+             report.staleness_max, report.staleness_mean);
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7710").to_string();
+    let delay_ms: u64 = args.opt_or("round-delay-ms", 5)?;
+    let mut w = Worker::new(QuadraticBackend::new(
+        128,
+        64,
+        1.0,
+        0.3,
+        0.2,
+        0.02,
+        cfg.fl.local_steps,
+        cfg.seeds[0],
+    ));
+    w.round_delay = std::time::Duration::from_millis(delay_ms);
+    let report = w.run(&addr)?;
+    println!("[worker {}] {} uploads, replica t={}", report.worker_id, report.uploads,
+             report.replica_t);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
+    let m = qafel::runtime::Manifest::load(&adir)?;
+    println!("artifacts: {adir}");
+    println!("model: d={} ({}x{}x{} input, {} conv layers, {} channels)",
+             m.model.d, m.model.height, m.model.width, m.model.in_channels,
+             m.model.n_layers, m.model.channels);
+    println!("train: batch={} local_steps={} eval_batch={}", m.batch, m.local_steps, m.eval_batch);
+    for (name, a) in &m.artifacts {
+        println!("  {name:<28} {} in / {} out   ({})", a.inputs.len(), a.outputs.len(), a.file);
+    }
+    println!("full-precision update: {:.3} kB (paper: 117.128 kB at d=29,282)",
+             m.model.d as f64 * 4.0 / 1000.0);
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    use qafel::quant::qsgd::Qsgd;
+    use qafel::util::prng::Prng;
+    let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
+    let engine = Engine::load(&adir)?;
+    let d = engine.d();
+    println!("[1/3] artifacts compiled (d = {d})");
+
+    // rust qsgd levels == Pallas kernel levels for identical noise
+    let mut rng = Prng::new(42);
+    let x: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let mut u = vec![0.0f32; d];
+    rng.fill_uniform_f32(&mut u);
+    let q = Qsgd::new(4)?;
+    let s = q.levels() as f32;
+    let g = q.bucket();
+    let (levels_pallas, norms_pallas) = engine.qsgd_quantize(&x, &u, s)?;
+    // replicate in rust with the same uniforms (per-bucket norms)
+    let mut mismatches = 0usize;
+    for i in 0..d {
+        let b = i / g;
+        let lo = b * g;
+        let hi = (lo + g).min(d);
+        let norm = qafel::util::vecf::norm2(&x[lo..hi]) as f32;
+        let a = x[i].abs() * s / norm;
+        let lv = (a + u[i]).floor() as i32;
+        let expect = if x[i] < 0.0 { -lv } else { lv };
+        if levels_pallas[i] != expect {
+            mismatches += 1;
+        }
+    }
+    if mismatches > d / 10_000 + 1 {
+        bail!("qsgd mismatch: {mismatches} of {d} levels differ");
+    }
+    println!("[2/3] Pallas qsgd kernel == rust codec ({mismatches} level mismatches of {d})");
+
+    // codec round trip through the wire format
+    let msg = q.encode_levels(&levels_pallas, &norms_pallas);
+    let (n2, lv2) = q.decode_levels(&msg)?;
+    if n2 != norms_pallas || lv2 != levels_pallas {
+        bail!("wire codec round-trip failed");
+    }
+    println!("[3/3] wire codec round-trip exact ({} bytes for d={d}, {:.2} bits/coord)",
+             msg.wire_bytes(), msg.wire_bytes() as f64 * 8.0 / d as f64);
+
+    // end-to-end: one client_update call descends
+    let params = engine.init_params(0)?;
+    let m = engine.manifest();
+    let (p, b) = (m.local_steps, m.batch);
+    let img = engine.img_elems();
+    let cfgd = qafel::config::DataConfig::default();
+    let ds = qafel::data::Dataset::new(&cfgd);
+    let mut xs = vec![0.0f32; p * b * img];
+    let mut ys = vec![0i32; p * b];
+    let mut mask = vec![0.0f32; p * b];
+    let mut brng = Prng::new(7);
+    ds.fill_round(0, &mut brng, p, b, &mut xs, &mut ys, &mut mask);
+    let out = engine.client_update(&params, &xs, &ys, &mask, 0.01, 1)?;
+    println!("client_update: |delta| = {:.4}, loss = {:.4}, acc = {:.3}",
+             qafel::util::vecf::norm2(&out.delta), out.loss, out.acc);
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand() {
+        Some("exp") => cmd_exp(&args),
+        Some("run") => cmd_run(&args),
+        Some("leader") => cmd_leader(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("info") => cmd_info(&args),
+        Some("selfcheck") => cmd_selfcheck(&args),
+        Some("version") => {
+            println!("qafel {}", qafel::version());
+            Ok(())
+        }
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

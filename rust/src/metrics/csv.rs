@@ -1,0 +1,84 @@
+//! Tiny CSV writer for experiment outputs (reports/*.csv).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Build a CSV document in memory, then persist it.
+#[derive(Clone, Debug, Default)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(columns: &[&str]) -> CsvWriter {
+        CsvWriter { header: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; must match the header width.
+    pub fn row(&mut self, values: &[String]) {
+        assert_eq!(values.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(values.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Format helper: fixed-precision float cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let mut w = CsvWriter::new(&["a", "b,c"]);
+        w.row(&["1".into(), "x\"y".into()]);
+        w.row(&[f(1.23456, 2), "plain".into()]);
+        let text = w.to_string();
+        assert_eq!(text, "a,\"b,c\"\n1,\"x\"\"y\"\n1.23,plain\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Communication accounting and training curves — the quantities the
+//! paper's evaluation reports (Figures 3–4, Tables 1–2).
+//!
+//! Conventions (matching the paper's broadcast mode, §2):
+//! * **uploads** — one per client trip; `upload_bytes` is the sum of the
+//!   actual wire payloads produced by the client quantizer codec.
+//! * **broadcasts** — one message per server step (a network broadcast is
+//!   counted once, not per recipient): "the MB broadcasted are simply the
+//!   MB uploaded divided by the buffer size" (Fig. 3 caption).
+
+pub mod csv;
+
+/// Running communication totals for one run.
+#[derive(Clone, Debug, Default)]
+pub struct CommMetrics {
+    /// Client -> server messages (client trips).
+    pub uploads: u64,
+    /// Total bytes uploaded by clients.
+    pub upload_bytes: u64,
+    /// Server -> clients broadcast messages (= server steps).
+    pub broadcasts: u64,
+    /// Total broadcast bytes (one copy per broadcast).
+    pub broadcast_bytes: u64,
+}
+
+impl CommMetrics {
+    pub fn record_upload(&mut self, bytes: usize) {
+        self.uploads += 1;
+        self.upload_bytes += bytes as u64;
+    }
+
+    pub fn record_broadcast(&mut self, bytes: usize) {
+        self.broadcasts += 1;
+        self.broadcast_bytes += bytes as u64;
+    }
+
+    /// Mean kB per upload (the paper's kB/upload column).
+    pub fn kb_per_upload(&self) -> f64 {
+        if self.uploads == 0 {
+            0.0
+        } else {
+            self.upload_bytes as f64 / self.uploads as f64 / 1000.0
+        }
+    }
+
+    /// Mean kB per broadcast (the paper's kB/download column).
+    pub fn kb_per_download(&self) -> f64 {
+        if self.broadcasts == 0 {
+            0.0
+        } else {
+            self.broadcast_bytes as f64 / self.broadcasts as f64 / 1000.0
+        }
+    }
+
+    pub fn upload_mb(&self) -> f64 {
+        self.upload_bytes as f64 / 1e6
+    }
+
+    pub fn broadcast_mb(&self) -> f64 {
+        self.broadcast_bytes as f64 / 1e6
+    }
+}
+
+/// One point on the training curve (recorded at each evaluation).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Virtual time (simulator clock) or wall seconds (net mode).
+    pub time: f64,
+    pub server_steps: u64,
+    pub uploads: u64,
+    pub upload_mb: f64,
+    pub broadcast_mb: f64,
+    pub val_loss: f64,
+    pub val_accuracy: f64,
+    /// ||grad f||^2 when the backend can compute it (analytic backends).
+    pub grad_norm_sq: Option<f64>,
+}
+
+/// Result of one simulated/real run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Evaluation history.
+    pub curve: Vec<CurvePoint>,
+    /// Snapshot at the first eval where val_accuracy >= target (None if
+    /// the run hit a cap first).
+    pub reached: Option<CurvePoint>,
+    /// Final communication totals.
+    pub comm: CommMetrics,
+    /// Totals at the end of the run.
+    pub final_accuracy: f64,
+    pub server_steps: u64,
+    /// Wall-clock seconds the run took to execute (not virtual time).
+    pub wall_seconds: f64,
+}
+
+impl RunResult {
+    /// The paper's headline metrics, taken at target-reach when available
+    /// (otherwise at the end of the run).
+    pub fn at_target(&self) -> CurvePoint {
+        self.reached.or_else(|| self.curve.last().copied()).unwrap_or(CurvePoint {
+            time: 0.0,
+            server_steps: 0,
+            uploads: 0,
+            upload_mb: 0.0,
+            broadcast_mb: 0.0,
+            val_loss: f64::NAN,
+            val_accuracy: 0.0,
+            grad_norm_sq: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_accounting() {
+        let mut m = CommMetrics::default();
+        for _ in 0..10 {
+            m.record_upload(15_000);
+        }
+        m.record_broadcast(15_000);
+        assert_eq!(m.uploads, 10);
+        assert_eq!(m.broadcasts, 1);
+        assert!((m.kb_per_upload() - 15.0).abs() < 1e-9);
+        assert!((m.kb_per_download() - 15.0).abs() < 1e-9);
+        // Fig. 3 caption identity: broadcast MB = upload MB / K when the
+        // same quantizer is used in both directions and K uploads per step
+        assert!((m.broadcast_mb() - m.upload_mb() / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn at_target_prefers_reach_point() {
+        let p1 = CurvePoint {
+            time: 1.0, server_steps: 5, uploads: 50, upload_mb: 1.0,
+            broadcast_mb: 0.1, val_loss: 0.5, val_accuracy: 0.91,
+            grad_norm_sq: None,
+        };
+        let p2 = CurvePoint { time: 2.0, val_accuracy: 0.95, ..p1 };
+        let r = RunResult {
+            curve: vec![p1, p2],
+            reached: Some(p1),
+            comm: CommMetrics::default(),
+            final_accuracy: 0.95,
+            server_steps: 10,
+            wall_seconds: 0.0,
+        };
+        assert_eq!(r.at_target().uploads, 50);
+        let r2 = RunResult { reached: None, ..r };
+        assert_eq!(r2.at_target().time, 2.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! The leader process: accepts workers, runs Algorithm 1 over TCP.
+
+use super::message::Message;
+use super::transport::{write_msg, Conn};
+use crate::config::Config;
+use crate::coordinator::{Server, ServerStep};
+use crate::metrics::CommMetrics;
+use crate::quant::QuantizedMsg;
+use anyhow::{anyhow, Context, Result};
+use std::net::TcpListener;
+use std::sync::mpsc;
+
+/// Final report of a leader run.
+#[derive(Clone, Debug)]
+pub struct LeaderReport {
+    pub comm: CommMetrics,
+    pub server_steps: u64,
+    pub staleness_max: u64,
+    pub staleness_mean: f64,
+    /// Final server model x^T.
+    pub model: Vec<f32>,
+    pub workers: usize,
+}
+
+/// Leader configuration + run loop.
+pub struct Leader {
+    cfg: Config,
+    x0: Vec<f32>,
+    seed: u64,
+}
+
+impl Leader {
+    pub fn new(cfg: Config, x0: Vec<f32>, seed: u64) -> Leader {
+        Leader { cfg, x0, seed }
+    }
+
+    /// Serve on `addr` (e.g. "127.0.0.1:7710"), wait for exactly
+    /// `n_workers` workers, coordinate until a stop cap is hit, shut the
+    /// workers down, and report.
+    pub fn run(&self, addr: &str, n_workers: usize) -> Result<LeaderReport> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        self.run_on(listener, n_workers)
+    }
+
+    /// Like [`Leader::run`] with a pre-bound listener (lets tests use an
+    /// ephemeral port).
+    pub fn run_on(&self, listener: TcpListener, n_workers: usize) -> Result<LeaderReport> {
+        let mut server = Server::build(&self.cfg, self.x0.clone(), self.seed)?;
+        let d = server.d();
+
+        // accept all workers, send Join, spawn reader threads
+        let (tx, rx) = mpsc::channel::<(u32, Option<Message>)>();
+        let mut writers = Vec::new();
+        let mut reader_handles = Vec::new();
+        for worker_id in 0..n_workers as u32 {
+            let (stream, peer) = listener.accept().context("accepting worker")?;
+            let mut conn = Conn::from_stream(stream)?;
+            conn.send(&Message::Join {
+                worker_id,
+                d: d as u32,
+                x0: self.x0.clone(),
+                client_quant: self.cfg.quant.client.clone(),
+                server_quant: self.cfg.quant.server.clone(),
+                client_lr: self.cfg.fl.client_lr,
+            })?;
+            let tx = tx.clone();
+            let mut reader = conn.reader.try_clone().context("cloning reader")?;
+            reader_handles.push(std::thread::spawn(move || {
+                loop {
+                    match super::transport::read_msg(&mut reader) {
+                        Ok(Some(msg)) => {
+                            if tx.send((worker_id, Some(msg))).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(None) | Err(_) => {
+                            let _ = tx.send((worker_id, None));
+                            break;
+                        }
+                    }
+                }
+            }));
+            tracing_log(&format!("leader: worker {worker_id} joined from {peer}"));
+            writers.push(conn.writer);
+        }
+        drop(tx);
+
+        // main coordination loop
+        let mut live = n_workers;
+        let mut byes = 0usize;
+        let mut shutdown_sent = false;
+        while live > 0 {
+            let (worker_id, msg) = rx.recv().map_err(|_| anyhow!("all workers gone"))?;
+            let msg = match msg {
+                Some(m) => m,
+                None => {
+                    live -= 1;
+                    continue;
+                }
+            };
+            match msg {
+                Message::Update { t_start, trip: _, train_loss: _, payload, .. } => {
+                    if shutdown_sent {
+                        continue; // late update after shutdown: drop
+                    }
+                    let qmsg = QuantizedMsg { payload, d };
+                    let staleness = server.t().saturating_sub(t_start);
+                    if let ServerStep::Stepped(b) = server.ingest(&qmsg, staleness)? {
+                        let bmsg = Message::Broadcast {
+                            t: b.t,
+                            absolute: b.absolute,
+                            payload: b.msg.payload,
+                        };
+                        for w in &mut writers {
+                            // a dead worker surfaces via its reader thread
+                            let _ = write_msg(w, &bmsg);
+                        }
+                    }
+                    if server.t() >= self.cfg.stop.max_server_steps
+                        || server.comm.uploads >= self.cfg.stop.max_uploads
+                    {
+                        for w in &mut writers {
+                            let _ = write_msg(w, &Message::Shutdown);
+                        }
+                        shutdown_sent = true;
+                    }
+                }
+                Message::Bye { worker_id: wid, uploads } => {
+                    byes += 1;
+                    tracing_log(&format!("leader: worker {wid} done ({uploads} uploads)"));
+                }
+                other => {
+                    tracing_log(&format!("leader: unexpected message from {worker_id}: {other:?}"));
+                }
+            }
+        }
+        for h in reader_handles {
+            let _ = h.join();
+        }
+        let _ = byes;
+
+        Ok(LeaderReport {
+            comm: server.comm.clone(),
+            server_steps: server.t(),
+            staleness_max: server.staleness_max,
+            staleness_mean: server.staleness_mean(),
+            model: server.model().to_vec(),
+            workers: n_workers,
+        })
+    }
+}
+
+fn tracing_log(msg: &str) {
+    if std::env::var("QAFEL_NET_LOG").is_ok() {
+        eprintln!("{msg}");
+    }
+}

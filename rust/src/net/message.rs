@@ -1,0 +1,262 @@
+//! Wire protocol: length-prefixed binary frames, hand-rolled codec (no
+//! serde offline). All multi-byte integers are little-endian.
+
+use crate::quant::QuantizedMsg;
+use anyhow::{anyhow, bail, Result};
+
+/// Protocol messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// leader -> worker on join: model dimension, initial model x^0, the
+    /// quantizer specs (so both sides build identical codecs), client lr,
+    /// and the worker's id.
+    Join {
+        worker_id: u32,
+        d: u32,
+        x0: Vec<f32>,
+        client_quant: String,
+        server_quant: String,
+        client_lr: f32,
+    },
+    /// worker -> leader: one quantized client update (Algorithm 2 line 6).
+    Update {
+        worker_id: u32,
+        /// Server step the worker's replica was at when training started.
+        t_start: u64,
+        /// Monotone per-worker trip counter (round seed).
+        trip: u64,
+        train_loss: f32,
+        payload: Vec<u8>,
+    },
+    /// leader -> all workers: broadcast q^t (Algorithm 1 line 13).
+    Broadcast { t: u64, absolute: bool, payload: Vec<u8> },
+    /// leader -> workers: training is over; report and exit.
+    Shutdown,
+    /// worker -> leader: goodbye (uploads/bytes accounting echo).
+    Bye { worker_id: u32, uploads: u64 },
+}
+
+const TAG_JOIN: u8 = 1;
+const TAG_UPDATE: u8 = 2;
+const TAG_BROADCAST: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_BYE: u8 = 5;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(tag: u8) -> Writer {
+        Writer { buf: vec![tag] }
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn str(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|e| anyhow!("bad utf8: {e}"))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes in frame");
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Serialize to a frame body (the transport adds the length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Message::Join { worker_id, d, x0, client_quant, server_quant, client_lr } => {
+                let mut w = Writer::new(TAG_JOIN);
+                w.u32(*worker_id);
+                w.u32(*d);
+                w.f32s(x0);
+                w.str(client_quant);
+                w.str(server_quant);
+                w.f32(*client_lr);
+                w.buf
+            }
+            Message::Update { worker_id, t_start, trip, train_loss, payload } => {
+                let mut w = Writer::new(TAG_UPDATE);
+                w.u32(*worker_id);
+                w.u64(*t_start);
+                w.u64(*trip);
+                w.f32(*train_loss);
+                w.bytes(payload);
+                w.buf
+            }
+            Message::Broadcast { t, absolute, payload } => {
+                let mut w = Writer::new(TAG_BROADCAST);
+                w.u64(*t);
+                w.buf.push(*absolute as u8);
+                w.bytes(payload);
+                w.buf
+            }
+            Message::Shutdown => Writer::new(TAG_SHUTDOWN).buf,
+            Message::Bye { worker_id, uploads } => {
+                let mut w = Writer::new(TAG_BYE);
+                w.u32(*worker_id);
+                w.u64(*uploads);
+                w.buf
+            }
+        }
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<Message> {
+        let mut r = Reader::new(frame);
+        let msg = match r.u8()? {
+            TAG_JOIN => Message::Join {
+                worker_id: r.u32()?,
+                d: r.u32()?,
+                x0: r.f32s()?,
+                client_quant: r.str()?,
+                server_quant: r.str()?,
+                client_lr: r.f32()?,
+            },
+            TAG_UPDATE => Message::Update {
+                worker_id: r.u32()?,
+                t_start: r.u64()?,
+                trip: r.u64()?,
+                train_loss: r.f32()?,
+                payload: r.bytes()?,
+            },
+            TAG_BROADCAST => Message::Broadcast {
+                t: r.u64()?,
+                absolute: r.u8()? != 0,
+                payload: r.bytes()?,
+            },
+            TAG_SHUTDOWN => Message::Shutdown,
+            TAG_BYE => Message::Bye { worker_id: r.u32()?, uploads: r.u64()? },
+            tag => bail!("unknown message tag {tag}"),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+
+    /// Wrap a quantized payload for upload.
+    pub fn update_from(
+        worker_id: u32,
+        t_start: u64,
+        trip: u64,
+        train_loss: f32,
+        msg: &QuantizedMsg,
+    ) -> Message {
+        Message::Update { worker_id, t_start, trip, train_loss, payload: msg.payload.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let msgs = vec![
+            Message::Join {
+                worker_id: 3,
+                d: 4,
+                x0: vec![1.0, -2.0, 0.5, 0.0],
+                client_quant: "qsgd:4".into(),
+                server_quant: "top:0.1".into(),
+                client_lr: 4.7e-6,
+            },
+            Message::Update {
+                worker_id: 1,
+                t_start: 17,
+                trip: 99,
+                train_loss: 0.25,
+                payload: vec![1, 2, 3, 255],
+            },
+            Message::Broadcast { t: 5, absolute: true, payload: vec![9; 100] },
+            Message::Shutdown,
+            Message::Bye { worker_id: 2, uploads: 41 },
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            let dec = Message::decode(&enc).unwrap();
+            assert_eq!(m, dec);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[42]).is_err());
+        // truncated Join
+        let good = Message::Join {
+            worker_id: 0,
+            d: 1,
+            x0: vec![0.0],
+            client_quant: "none".into(),
+            server_quant: "none".into(),
+            client_lr: 0.1,
+        }
+        .encode();
+        assert!(Message::decode(&good[..good.len() - 2]).is_err());
+        // trailing bytes
+        let mut padded = good;
+        padded.push(0);
+        assert!(Message::decode(&padded).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Length-prefixed framing over TCP (and any `Read + Write` stream).
+//!
+//! Frame layout: `[ len : u32 LE ][ body : len bytes ]`, body encoded by
+//! [`super::message::Message`]. Max frame size guards against corrupt
+//! peers.
+
+use super::message::Message;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// 64 MiB: generously above the largest possible model broadcast.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Write one message as a frame.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    let body = msg.encode();
+    if body.len() > MAX_FRAME {
+        bail!("frame too large: {} bytes", body.len());
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(&body).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one message; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Message>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("peer sent oversized frame ({len} bytes)");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Ok(Some(Message::decode(&body)?))
+}
+
+/// A connected duplex channel (cloned handles for reader/writer threads).
+pub struct Conn {
+    pub reader: TcpStream,
+    pub writer: TcpStream,
+}
+
+impl Conn {
+    pub fn from_stream(stream: TcpStream) -> Result<Conn> {
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().context("cloning tcp stream")?;
+        Ok(Conn { reader: stream, writer })
+    }
+
+    pub fn connect(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Conn::from_stream(stream)
+    }
+
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        write_msg(&mut self.writer, msg)
+    }
+
+    pub fn recv(&mut self) -> Result<Option<Message>> {
+        read_msg(&mut self.reader)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_over_buffer() {
+        let mut buf = Vec::new();
+        let msgs = vec![
+            Message::Shutdown,
+            Message::Broadcast { t: 1, absolute: false, payload: vec![7; 33] },
+            Message::Bye { worker_id: 9, uploads: 5 },
+        ];
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for m in &msgs {
+            assert_eq!(read_msg(&mut cur).unwrap().unwrap(), *m);
+        }
+        assert!(read_msg(&mut cur).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = Cursor::new(buf);
+        assert!(read_msg(&mut cur).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::from_stream(stream).unwrap();
+            let m = conn.recv().unwrap().unwrap();
+            conn.send(&m).unwrap(); // echo
+        });
+        let mut conn = Conn::connect(&addr.to_string()).unwrap();
+        let msg = Message::Update {
+            worker_id: 1,
+            t_start: 2,
+            trip: 3,
+            train_loss: 0.5,
+            payload: vec![1, 2, 3],
+        };
+        conn.send(&msg).unwrap();
+        assert_eq!(conn.recv().unwrap().unwrap(), msg);
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,212 @@
+//! A worker process: Algorithm 2 (train + quantized upload) with
+//! Algorithm 3 (hidden-state replica) as a real background reader thread.
+
+use super::message::Message;
+use super::transport::Conn;
+use crate::quant::{parse_spec, Quantizer};
+use crate::runtime::Backend;
+use crate::util::prng::Prng;
+use anyhow::{anyhow, bail, Result};
+use std::sync::mpsc;
+
+/// Worker run summary.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub worker_id: u32,
+    pub uploads: u64,
+    /// Final replica step (how far the hidden state advanced).
+    pub replica_t: u64,
+}
+
+/// A worker: owns a compute backend and a hidden-state replica.
+pub struct Worker<B: Backend> {
+    backend: B,
+    /// Sleep this long between rounds to emulate slow clients (tests 0).
+    pub round_delay: std::time::Duration,
+}
+
+impl<B: Backend> Worker<B> {
+    pub fn new(backend: B) -> Worker<B> {
+        Worker { backend, round_delay: std::time::Duration::ZERO }
+    }
+
+    /// Connect to the leader at `addr` and train until Shutdown.
+    pub fn run(&self, addr: &str) -> Result<WorkerReport> {
+        let mut conn = Conn::connect(addr)?;
+        // --- join -----------------------------------------------------------
+        let (worker_id, d, mut x_hat, client_quant, server_quant, client_lr) =
+            match conn.recv()? {
+                Some(Message::Join { worker_id, d, x0, client_quant, server_quant, client_lr }) => {
+                    (worker_id, d as usize, x0, client_quant, server_quant, client_lr)
+                }
+                other => bail!("expected Join, got {other:?}"),
+            };
+        if d != self.backend.d() {
+            bail!("model dim mismatch: leader d={d}, backend d={}", self.backend.d());
+        }
+        let quant_c = parse_spec(&client_quant)?;
+        let quant_s: Box<dyn Quantizer> = parse_spec(&server_quant)?;
+        let mut rng = Prng::new(0xC11E27 ^ worker_id as u64).stream("worker-quant");
+
+        // --- Algorithm 3: background replica thread -------------------------
+        // The reader thread receives broadcasts and forwards them; the
+        // training loop applies them in order between rounds (the replica
+        // is only *read* at round start, so this is equivalent to applying
+        // them the moment they arrive).
+        let (tx, rx) = mpsc::channel::<Message>();
+        let mut reader = conn.reader.try_clone()?;
+        let bg = std::thread::spawn(move || {
+            while let Ok(Some(msg)) = super::transport::read_msg(&mut reader) {
+                let stop = matches!(msg, Message::Shutdown);
+                if tx.send(msg).is_err() || stop {
+                    break;
+                }
+            }
+        });
+
+        let mut replica_t = 0u64;
+        let mut uploads = 0u64;
+        let mut trip = 0u64;
+        'train: loop {
+            // drain all pending broadcasts (Algorithm 3 lines 3-4)
+            loop {
+                match rx.try_recv() {
+                    Ok(Message::Broadcast { t, absolute, payload }) => {
+                        let qmsg = crate::quant::QuantizedMsg { payload, d };
+                        if t != replica_t + 1 {
+                            bail!("worker {worker_id}: broadcast gap {replica_t} -> {t}");
+                        }
+                        if absolute {
+                            quant_s.dequantize_into(&qmsg, &mut x_hat)?;
+                        } else {
+                            quant_s.accumulate(&qmsg, 1.0, &mut x_hat)?;
+                        }
+                        replica_t = t;
+                    }
+                    Ok(Message::Shutdown) => break 'train,
+                    Ok(other) => bail!("worker {worker_id}: unexpected {other:?}"),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => break 'train,
+                }
+            }
+
+            // Algorithm 2: train from the replica snapshot
+            let t_start = replica_t;
+            let user = worker_id as usize;
+            let out = self.backend.client_round(&x_hat, user, trip, client_lr)?;
+            let qmsg = quant_c.quantize(&out.delta, &mut rng);
+            conn.send(&Message::update_from(worker_id, t_start, trip, out.loss, &qmsg))?;
+            uploads += 1;
+            trip += 1;
+            if !self.round_delay.is_zero() {
+                std::thread::sleep(self.round_delay);
+            }
+        }
+
+        // goodbye (best effort; leader may already be closing)
+        let _ = conn.send(&Message::Bye { worker_id, uploads });
+        let _ = bg.join();
+        Ok(WorkerReport { worker_id, uploads, replica_t })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Config};
+    use crate::net::leader::Leader;
+    use crate::runtime::QuadraticBackend;
+
+    fn net_cfg() -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::Qafel;
+        c.quant.client = "qsgd:8".into();
+        c.quant.server = "qsgd:8".into();
+        c.fl.buffer_size = 3;
+        c.fl.client_lr = 0.05;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        // workers in a tight loop can produce arbitrarily stale updates
+        // (Assumption 3.4 bounds staleness in the analysis); scale them
+        // down as the paper's Fig. 3 runs do
+        c.fl.staleness_scaling = true;
+        c.fl.clip_norm = 0.0;
+        c.stop.max_server_steps = 40;
+        c.stop.max_uploads = 100_000;
+        c
+    }
+
+    #[test]
+    fn leader_and_workers_over_tcp() {
+        let cfg = net_cfg();
+        let d = 16;
+        let mk_backend =
+            || QuadraticBackend::new(d, 8, 1.0, 0.3, 0.2, 0.02, 1, 21);
+        let x0 = mk_backend().init_params(0).unwrap();
+        let g0 = mk_backend().grad_norm_sq(&x0);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let leader_cfg = cfg.clone();
+        let leader_x0 = x0.clone();
+        let leader = std::thread::spawn(move || {
+            Leader::new(leader_cfg, leader_x0, 7).run_on(listener, 4).unwrap()
+        });
+
+        let mut workers = Vec::new();
+        for _ in 0..4 {
+            let addr = addr.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut w = Worker::new(QuadraticBackend::new(d, 8, 1.0, 0.3, 0.2, 0.02, 1, 21));
+                // give broadcasts time to propagate between rounds so the
+                // run resembles production pacing rather than a hot spin
+                w.round_delay = std::time::Duration::from_millis(1);
+                w.run(&addr).unwrap()
+            }));
+        }
+
+        let report = leader.join().unwrap();
+        let mut total_uploads = 0;
+        let mut max_replica_t = 0;
+        for w in workers {
+            let r = w.join().unwrap();
+            total_uploads += r.uploads;
+            max_replica_t = max_replica_t.max(r.replica_t);
+        }
+
+        assert_eq!(report.server_steps, 40);
+        assert_eq!(report.comm.broadcasts, 40);
+        // every server step consumed K=3 uploads; workers may have a few
+        // in-flight extras that were dropped after shutdown
+        assert!(report.comm.uploads >= 120, "uploads {}", report.comm.uploads);
+        assert!(total_uploads >= report.comm.uploads);
+        assert!(max_replica_t > 30, "replicas stalled at {max_replica_t}");
+        // training over TCP actually descends
+        let g1 = mk_backend().grad_norm_sq(&report.model);
+        assert!(g1 < g0 * 0.8, "{g0} -> {g1}");
+    }
+
+    #[test]
+    fn worker_rejects_dim_mismatch() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::from_stream(stream).unwrap();
+            conn.send(&Message::Join {
+                worker_id: 0,
+                d: 99,
+                x0: vec![0.0; 99],
+                client_quant: "none".into(),
+                server_quant: "none".into(),
+                client_lr: 0.1,
+            })
+            .unwrap();
+            // keep the socket open until the worker errors out
+            let _ = conn.recv();
+        });
+        let w = Worker::new(QuadraticBackend::new(4, 2, 1.0, 0.5, 0.1, 0.0, 1, 1));
+        assert!(w.run(&addr).is_err());
+        srv.join().unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! Full-precision "quantizer" — the FedBuff baseline's wire format.
+//!
+//! 4 bytes per coordinate, little-endian f32. For the paper's d = 29,282
+//! this is the 117.128 kB/update FedBuff row in Tables 1–2 (ours:
+//! 4 * 29,474 = 117.896 kB).
+
+use super::{QuantizedMsg, Quantizer};
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+
+/// Identity quantizer (no compression).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Quantizer for Identity {
+    fn name(&self) -> String {
+        "none".into()
+    }
+
+    fn quantize(&self, x: &[f32], _rng: &mut Prng) -> QuantizedMsg {
+        let mut payload = Vec::with_capacity(x.len() * 4);
+        for v in x {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        QuantizedMsg { payload, d: x.len() }
+    }
+
+    fn dequantize_into(&self, msg: &QuantizedMsg, out: &mut [f32]) -> Result<()> {
+        if msg.d != out.len() || msg.payload.len() != out.len() * 4 {
+            bail!(
+                "identity: dimension mismatch (msg d={}, out {}, payload {}B)",
+                msg.d,
+                out.len(),
+                msg.payload.len()
+            );
+        }
+        for (i, chunk) in msg.payload.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+
+    fn accumulate(&self, msg: &QuantizedMsg, weight: f32, acc: &mut [f32]) -> Result<()> {
+        if msg.d != acc.len() || msg.payload.len() != acc.len() * 4 {
+            bail!("identity: dimension mismatch");
+        }
+        for (i, chunk) in msg.payload.chunks_exact(4).enumerate() {
+            acc[i] += weight * f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn expected_bytes(&self, d: usize) -> usize {
+        d * 4
+    }
+
+    fn delta(&self, _d: usize) -> f64 {
+        1.0 // exact: E||Q(x)-x||^2 = 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_roundtrip() {
+        let mut rng = Prng::new(1);
+        let x: Vec<f32> = (0..1000).map(|_| rng.f32() * 1e6 - 5e5).collect();
+        let q = Identity;
+        let msg = q.quantize(&x, &mut rng);
+        assert_eq!(msg.wire_bytes(), 4000);
+        let y = q.dequantize(&msg).unwrap();
+        assert_eq!(x, y); // bit-exact
+    }
+
+    #[test]
+    fn paper_scale_full_precision_size() {
+        // d=29,474 -> 117.896 kB (paper's d=29,282 -> 117.128 kB)
+        assert_eq!(Identity.expected_bytes(29_474), 117_896);
+    }
+}

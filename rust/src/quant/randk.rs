@@ -1,0 +1,172 @@
+//! rand_k quantizer (Example B.1): transmit k coordinates chosen
+//! uniformly at random.
+//!
+//! Two variants:
+//! * **unscaled** (the paper's Example B.1): `Q(x)_i = x_i` on the sampled
+//!   set, 0 elsewhere. Biased contraction with delta = k/d (Lemma A.1 of
+//!   Stich et al. 2018).
+//! * **scaled**: multiplies kept coordinates by d/k, making E[Q(x)] = x
+//!   (unbiased), at the price of variance (d/k - 1)||x||^2.
+//!
+//! The chosen index set is derived from an 8-byte seed included in the
+//! message — the receiver regenerates the same k indices, so indices are
+//! never transmitted. Wire: `[ seed : u64 ][ k values : f32 ]`.
+
+use super::{QuantizedMsg, Quantizer};
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+
+/// Keep a random `frac` fraction of coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct RandK {
+    frac: f64,
+    scaled: bool,
+}
+
+impl RandK {
+    pub fn new(frac: f64, scaled: bool) -> Result<Self> {
+        if !(frac > 0.0 && frac <= 1.0) {
+            bail!("rand_k fraction must be in (0, 1] (got {frac})");
+        }
+        Ok(RandK { frac, scaled })
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.frac * d as f64).ceil() as usize).clamp(1, d)
+    }
+
+    fn indices(seed: u64, d: usize, k: usize) -> Vec<usize> {
+        let mut rng = Prng::new(seed);
+        let mut idx = rng.sample_indices(d, k);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+impl Quantizer for RandK {
+    fn name(&self) -> String {
+        format!("{}:{}", if self.scaled { "rand_scaled" } else { "rand" }, self.frac)
+    }
+
+    fn quantize(&self, x: &[f32], rng: &mut Prng) -> QuantizedMsg {
+        let d = x.len();
+        let k = self.k_for(d);
+        let seed = rng.next_u64();
+        let idx = Self::indices(seed, d, k);
+        let mut payload = Vec::with_capacity(8 + 4 * k);
+        payload.extend_from_slice(&seed.to_le_bytes());
+        let gain = if self.scaled { d as f32 / k as f32 } else { 1.0 };
+        for &i in &idx {
+            payload.extend_from_slice(&(x[i] * gain).to_le_bytes());
+        }
+        QuantizedMsg { payload, d }
+    }
+
+    fn dequantize_into(&self, msg: &QuantizedMsg, out: &mut [f32]) -> Result<()> {
+        if msg.d != out.len() {
+            bail!("rand_k: dimension mismatch (msg {}, out {})", msg.d, out.len());
+        }
+        let k = self.k_for(msg.d);
+        if msg.payload.len() != 8 + 4 * k {
+            bail!("rand_k: payload size mismatch");
+        }
+        out.fill(0.0);
+        let seed = u64::from_le_bytes(msg.payload[..8].try_into().unwrap());
+        let idx = Self::indices(seed, msg.d, k);
+        for (j, &i) in idx.iter().enumerate() {
+            let off = 8 + 4 * j;
+            out[i] = f32::from_le_bytes(msg.payload[off..off + 4].try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.scaled
+    }
+
+    fn expected_bytes(&self, d: usize) -> usize {
+        8 + 4 * self.k_for(d)
+    }
+
+    /// Unscaled: delta = k/d (contraction). Scaled: unbiased with
+    /// E||Q(x)-x||^2 = (d/k - 1)||x||^2, i.e. delta = 1 - (d/k - 1)
+    /// (can be <= 0 when k < d/2 — Definition 2.1's constant exceeds 1).
+    fn delta(&self, d: usize) -> f64 {
+        let k = self.k_for(d) as f64;
+        let d = d as f64;
+        if self.scaled {
+            1.0 - (d / k - 1.0)
+        } else {
+            k / d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn receiver_recovers_same_indices() {
+        let mut rng = Prng::new(1);
+        let x: Vec<f32> = (0..500).map(|i| i as f32).collect();
+        let q = RandK::new(0.2, false).unwrap();
+        let msg = q.quantize(&x, &mut rng);
+        let y = q.dequantize(&msg).unwrap();
+        let kept: Vec<usize> = (0..500).filter(|&i| y[i] != 0.0).collect();
+        // +1 for possible x[0]=0 kept; k=100 sampled
+        assert!(kept.len() <= 100 && kept.len() >= 99);
+        for &i in &kept {
+            assert_eq!(y[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn scaled_variant_is_unbiased() {
+        let mut rng = Prng::new(2);
+        let d = 256;
+        let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let q = RandK::new(0.25, true).unwrap();
+        let reps = 2000;
+        let mut acc = vec![0.0f64; d];
+        for _ in 0..reps {
+            let y = q.dequantize(&q.quantize(&x, &mut rng)).unwrap();
+            for i in 0..d {
+                acc[i] += y[i] as f64;
+            }
+        }
+        let mut bias2 = 0.0;
+        let mut xn2 = 0.0;
+        for i in 0..d {
+            let m = acc[i] / reps as f64;
+            bias2 += (m - x[i] as f64).powi(2);
+            xn2 += (x[i] as f64).powi(2);
+        }
+        // E error per rep is (d/k-1)|x|^2 = 3|x|^2; mean over reps shrinks
+        assert!(bias2 < 3.0 * xn2 / reps as f64 * 9.0, "bias2 {bias2}");
+    }
+
+    #[test]
+    fn unscaled_error_is_dropped_mass_on_average() {
+        let mut rng = Prng::new(3);
+        let d = 400;
+        let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let q = RandK::new(0.5, false).unwrap();
+        let xn2 = crate::util::vecf::norm2(&x).powi(2);
+        let reps = 500;
+        let mut err = 0.0;
+        for _ in 0..reps {
+            let y = q.dequantize(&q.quantize(&x, &mut rng)).unwrap();
+            err += crate::util::vecf::dist2_sq(&y, &x);
+        }
+        let mean = err / reps as f64;
+        // E err = (1 - k/d)|x|^2 = 0.5 |x|^2
+        assert!((mean - 0.5 * xn2).abs() / xn2 < 0.05, "mean {mean} xn2 {xn2}");
+    }
+
+    #[test]
+    fn wire_size() {
+        let q = RandK::new(0.1, false).unwrap();
+        assert_eq!(q.expected_bytes(1000), 8 + 4 * 100);
+    }
+}

@@ -1,0 +1,177 @@
+//! top_k quantizer (Example B.1): transmit the k largest-magnitude
+//! coordinates. Biased; contraction delta = k/d (Lemma A.1, Stich et al.
+//! 2018). The paper's Table 2 uses top 10% at the *server* side.
+//!
+//! Wire format: `[ k : u32 ]` then k entries of
+//! `[ index : ceil(log2 d) bits ][ value : f32 ]`, densely bit-packed.
+
+use super::{QuantizedMsg, Quantizer};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+
+/// Keep the top `frac` fraction of coordinates (at least 1).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    frac: f64,
+}
+
+impl TopK {
+    pub fn new(frac: f64) -> Result<Self> {
+        if !(frac > 0.0 && frac <= 1.0) {
+            bail!("top_k fraction must be in (0, 1] (got {frac})");
+        }
+        Ok(TopK { frac })
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.frac * d as f64).ceil() as usize).clamp(1, d)
+    }
+
+    fn index_bits(d: usize) -> u32 {
+        usize::BITS - (d.max(2) - 1).leading_zeros()
+    }
+}
+
+impl Quantizer for TopK {
+    fn name(&self) -> String {
+        format!("top:{}", self.frac)
+    }
+
+    fn quantize(&self, x: &[f32], _rng: &mut Prng) -> QuantizedMsg {
+        let d = x.len();
+        let k = self.k_for(d);
+        // indices of the k largest |x_i| via partial selection
+        let mut idx: Vec<u32> = (0..d as u32).collect();
+        let nth = d - k;
+        idx.select_nth_unstable_by(nth, |&a, &b| {
+            x[a as usize]
+                .abs()
+                .partial_cmp(&x[b as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut top: Vec<u32> = idx[nth..].to_vec();
+        // canonical order on the wire: ascending index
+        top.sort_unstable();
+
+        let ib = Self::index_bits(d);
+        let mut w = BitWriter::with_capacity(32 + k * (ib as usize + 32));
+        w.write_u32(k as u32);
+        for &i in &top {
+            w.write(i as u64, ib);
+            w.write_f32(x[i as usize]);
+        }
+        QuantizedMsg { payload: w.into_bytes(), d }
+    }
+
+    fn dequantize_into(&self, msg: &QuantizedMsg, out: &mut [f32]) -> Result<()> {
+        if msg.d != out.len() {
+            bail!("top_k: dimension mismatch (msg {}, out {})", msg.d, out.len());
+        }
+        out.fill(0.0);
+        let ib = Self::index_bits(msg.d);
+        let mut r = BitReader::new(&msg.payload);
+        let k = match r.read_u32() {
+            Some(k) => k as usize,
+            None => bail!("top_k: truncated payload"),
+        };
+        if k > msg.d {
+            bail!("top_k: k {k} > d {}", msg.d);
+        }
+        for _ in 0..k {
+            let (i, v) = match (r.read(ib), r.read_f32()) {
+                (Some(i), Some(v)) => (i as usize, v),
+                _ => bail!("top_k: truncated payload"),
+            };
+            if i >= msg.d {
+                bail!("top_k: index {i} out of range");
+            }
+            out[i] = v;
+        }
+        Ok(())
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn expected_bytes(&self, d: usize) -> usize {
+        let k = self.k_for(d);
+        let ib = Self::index_bits(d) as usize;
+        4 + (k * (ib + 32)).div_ceil(8)
+    }
+
+    /// Lemma A.1 of Stich et al. 2018: delta = k/d.
+    fn delta(&self, d: usize) -> f64 {
+        self.k_for(d) as f64 / d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_exactly_the_largest_coordinates() {
+        let mut rng = Prng::new(1);
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.05, 1.0, 0.0, -2.0];
+        let q = TopK::new(0.5).unwrap(); // k = 4
+        let msg = q.quantize(&x, &mut rng);
+        let y = q.dequantize(&msg).unwrap();
+        // top-4 by |.|: -5.0, 3.0, -2.0, 1.0
+        assert_eq!(y, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn kept_values_are_bit_exact() {
+        let mut rng = Prng::new(2);
+        let x: Vec<f32> = (0..1000).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let q = TopK::new(0.1).unwrap();
+        let y = q.dequantize(&q.quantize(&x, &mut rng)).unwrap();
+        let kept = y.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(kept, 100);
+        for i in 0..1000 {
+            assert!(y[i] == 0.0 || y[i] == x[i]);
+        }
+    }
+
+    #[test]
+    fn error_equals_dropped_mass() {
+        // ||Q(x)-x||^2 = sum of squares of dropped coords (deterministic)
+        let mut rng = Prng::new(3);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 + 1.0) / 64.0).collect();
+        let q = TopK::new(0.25).unwrap(); // keeps 16 largest = last 16
+        let y = q.dequantize(&q.quantize(&x, &mut rng)).unwrap();
+        let err: f64 = crate::util::vecf::dist2_sq(&y, &x);
+        let dropped: f64 = x[..48].iter().map(|&v| (v as f64) * (v as f64)).sum();
+        assert!((err - dropped).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_at_least_one_and_full_fraction_is_lossless() {
+        let mut rng = Prng::new(4);
+        let q = TopK::new(1e-9).unwrap();
+        assert_eq!(q.k_for(10), 1);
+        let q1 = TopK::new(1.0).unwrap();
+        let x: Vec<f32> = (0..37).map(|_| rng.f32()).collect();
+        let y = q1.dequantize(&q1.quantize(&x, &mut rng)).unwrap();
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn paper_table2_server_size() {
+        // server top 10% of d=29,474: 2948 entries * (15 idx bits + 32) + 4B
+        let q = TopK::new(0.1).unwrap();
+        let b = q.expected_bytes(29_474);
+        assert_eq!(b, 4 + (2948usize * (15 + 32)).div_ceil(8));
+        // paper reports 15.404 kB/download; ours is within ~13%
+        assert!((b as f64 - 15_404.0).abs() / 15_404.0 < 0.15, "{b}");
+    }
+
+    #[test]
+    fn invalid_fraction_rejected() {
+        assert!(TopK::new(0.0).is_err());
+        assert!(TopK::new(1.5).is_err());
+        assert!(TopK::new(-0.1).is_err());
+    }
+}

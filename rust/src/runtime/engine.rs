@@ -1,0 +1,332 @@
+//! PJRT execution engine: loads the HLO-text artifacts and exposes typed
+//! entry points for the computations exported by `python/compile/aot.py`.
+//!
+//! Pattern (see /opt/xla-example/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! the bundled xla_extension 0.5.1 rejects jax≥0.5 serialized protos.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`); an [`Engine`] therefore lives
+//! on one thread. XLA's CPU backend parallelizes *inside* an execution
+//! with its own intra-op thread pool, so a single engine thread saturates
+//! the machine for our batch sizes.
+
+use super::manifest::{DType, Manifest};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A loaded, compiled artifact set.
+pub struct Engine {
+    manifest: Manifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Output of one client round (Algorithm 2 executed in a single PJRT
+/// call: P local SGD steps via lax.scan).
+#[derive(Clone, Debug)]
+pub struct RoundOutput {
+    /// Model delta y_P - y_0 (the descent direction the client uploads).
+    pub delta: Vec<f32>,
+    /// Mean training loss over the P steps.
+    pub loss: f32,
+    /// Mean training accuracy over the P steps.
+    pub acc: f32,
+}
+
+/// Output of `client_update_quantized` — the full client request path
+/// including the L1 Pallas qsgd kernel, in one executable.
+#[derive(Clone, Debug)]
+pub struct QuantizedRoundOutput {
+    /// Signed qsgd levels from the Pallas kernel.
+    pub levels: Vec<i32>,
+    /// Per-bucket l2 norms (bucket = 128, matching quant::qsgd).
+    pub norms: Vec<f32>,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+impl Engine {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on the PJRT CPU client.
+    pub fn load(dir: &str) -> Result<Engine> {
+        Self::load_subset(dir, &[])
+    }
+
+    /// Load only `names` (empty = all). Compiling fewer artifacts speeds
+    /// up tools that need just one entry point.
+    pub fn load_subset(dir: &str, names: &[&str]) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = BTreeMap::new();
+        for name in manifest.artifacts.keys() {
+            if !names.is_empty() && !names.contains(&name.as_str()) {
+                continue;
+            }
+            let path = manifest.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine { manifest, exes })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Flat parameter dimension d.
+    pub fn d(&self) -> usize {
+        self.manifest.model.d
+    }
+
+    /// Elements per input image.
+    pub fn img_elems(&self) -> usize {
+        let m = &self.manifest.model;
+        m.height * m.width * m.in_channels
+    }
+
+    // ---- generic execute ---------------------------------------------------
+
+    /// Execute artifact `name` with validated inputs; returns the output
+    /// tuple as literals.
+    fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let sig = self.manifest.artifact(name)?;
+        if inputs.len() != sig.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", sig.inputs.len(), inputs.len());
+        }
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != sig.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", sig.outputs.len(), parts.len());
+        }
+        Ok(parts)
+    }
+
+    fn lit_f32(&self, name: &str, arg: usize, data: &[f32]) -> Result<xla::Literal> {
+        let sig = &self.manifest.artifact(name)?.inputs[arg];
+        if sig.dtype != DType::F32 || sig.elems() != data.len() {
+            bail!("{name} arg {arg}: want {:?} f32 ({}), got {} values",
+                  sig.shape, sig.elems(), data.len());
+        }
+        let dims: Vec<i64> = sig.shape.iter().map(|&s| s as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape {name} arg {arg}: {e:?}"))
+    }
+
+    fn lit_i32(&self, name: &str, arg: usize, data: &[i32]) -> Result<xla::Literal> {
+        let sig = &self.manifest.artifact(name)?.inputs[arg];
+        if sig.dtype != DType::I32 || sig.elems() != data.len() {
+            bail!("{name} arg {arg}: want {:?} i32, got {} values", sig.shape, data.len());
+        }
+        let dims: Vec<i64> = sig.shape.iter().map(|&s| s as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape {name} arg {arg}: {e:?}"))
+    }
+
+    fn out_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("output to f32: {e:?}"))
+    }
+
+    fn out_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+        lit.to_vec::<i32>().map_err(|e| anyhow!("output to i32: {e:?}"))
+    }
+
+    fn out_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        Ok(Self::out_f32(lit)?[0])
+    }
+
+    // ---- typed entry points --------------------------------------------------
+
+    /// `init_params(seed) -> params[d]` (He-normal init, Appendix D model).
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = self.exec("init_params", &[xla::Literal::scalar(seed)])?;
+        let params = Self::out_f32(&out[0])?;
+        debug_assert_eq!(params.len(), self.d());
+        Ok(params)
+    }
+
+    /// `client_update(params, xs, ys, mask, lr, seed)` — Algorithm 2.
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_update(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        mask: &[f32],
+        lr: f32,
+        seed: i32,
+    ) -> Result<RoundOutput> {
+        let n = "client_update";
+        let out = self.exec(
+            n,
+            &[
+                self.lit_f32(n, 0, params)?,
+                self.lit_f32(n, 1, xs)?,
+                self.lit_i32(n, 2, ys)?,
+                self.lit_f32(n, 3, mask)?,
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(seed),
+            ],
+        )?;
+        Ok(RoundOutput {
+            delta: Self::out_f32(&out[0])?,
+            loss: Self::out_scalar_f32(&out[1])?,
+            acc: Self::out_scalar_f32(&out[2])?,
+        })
+    }
+
+    /// `client_update_quantized(...)` — Algorithm 2 + in-graph Pallas qsgd.
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_update_quantized(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        mask: &[f32],
+        lr: f32,
+        seed: i32,
+        u: &[f32],
+        s_levels: f32,
+    ) -> Result<QuantizedRoundOutput> {
+        let n = "client_update_quantized";
+        let out = self.exec(
+            n,
+            &[
+                self.lit_f32(n, 0, params)?,
+                self.lit_f32(n, 1, xs)?,
+                self.lit_i32(n, 2, ys)?,
+                self.lit_f32(n, 3, mask)?,
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(seed),
+                self.lit_f32(n, 6, u)?,
+                xla::Literal::scalar(s_levels),
+            ],
+        )?;
+        Ok(QuantizedRoundOutput {
+            levels: Self::out_i32(&out[0])?,
+            norms: Self::out_f32(&out[1])?,
+            loss: Self::out_scalar_f32(&out[2])?,
+            acc: Self::out_scalar_f32(&out[3])?,
+        })
+    }
+
+    /// One plain SGD step (`train_step` artifact).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+        seed: i32,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        let n = "train_step";
+        let out = self.exec(
+            n,
+            &[
+                self.lit_f32(n, 0, params)?,
+                self.lit_f32(n, 1, x)?,
+                self.lit_i32(n, 2, y)?,
+                self.lit_f32(n, 3, mask)?,
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(seed),
+            ],
+        )?;
+        Ok((
+            Self::out_f32(&out[0])?,
+            Self::out_scalar_f32(&out[1])?,
+            Self::out_scalar_f32(&out[2])?,
+        ))
+    }
+
+    /// `eval_step(params, x, y, mask) -> (loss_sum, correct, count)`.
+    pub fn eval_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32, f32)> {
+        let n = "eval_step";
+        let out = self.exec(
+            n,
+            &[
+                self.lit_f32(n, 0, params)?,
+                self.lit_f32(n, 1, x)?,
+                self.lit_i32(n, 2, y)?,
+                self.lit_f32(n, 3, mask)?,
+            ],
+        )?;
+        Ok((
+            Self::out_scalar_f32(&out[0])?,
+            Self::out_scalar_f32(&out[1])?,
+            Self::out_scalar_f32(&out[2])?,
+        ))
+    }
+
+    /// `qsgd_quantize(x, u, s) -> (levels, bucket norms)` — the
+    /// standalone L1 Pallas kernel artifact (cross-validates the codec).
+    pub fn qsgd_quantize(&self, x: &[f32], u: &[f32], s_levels: f32) -> Result<(Vec<i32>, Vec<f32>)> {
+        let n = "qsgd_quantize";
+        let out = self.exec(
+            n,
+            &[
+                self.lit_f32(n, 0, x)?,
+                self.lit_f32(n, 1, u)?,
+                xla::Literal::scalar(s_levels),
+            ],
+        )?;
+        Ok((Self::out_i32(&out[0])?, Self::out_f32(&out[1])?))
+    }
+}
+
+/// Resolve the artifacts directory: explicit arg, `QAFEL_ARTIFACTS` env
+/// var, or `artifacts` relative to the working directory.
+pub fn artifacts_dir(explicit: &str) -> String {
+    if !explicit.is_empty() {
+        return explicit.to_string();
+    }
+    std::env::var("QAFEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Quick availability check used by tests to skip when `make artifacts`
+/// hasn't been run.
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests against real artifacts live in rust/tests/ (they need
+    // `make artifacts`); here we only cover pure helpers.
+
+    #[test]
+    fn artifacts_dir_resolution() {
+        assert_eq!(artifacts_dir("x"), "x");
+        std::env::remove_var("QAFEL_ARTIFACTS");
+        assert_eq!(artifacts_dir(""), "artifacts");
+    }
+
+    #[test]
+    fn availability_check() {
+        assert!(!artifacts_available("/nonexistent/path"));
+    }
+}

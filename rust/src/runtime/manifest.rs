@@ -1,0 +1,283 @@
+//! Parser for `artifacts/manifest.json` (emitted by `python -m
+//! compile.aot`): model architecture, flat-parameter layout, and the
+//! input/output signature of every AOT-compiled computation.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype in an artifact signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}' in manifest"),
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One named slice of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Total flat parameter count.
+    pub d: usize,
+    pub height: usize,
+    pub width: usize,
+    pub in_channels: usize,
+    pub channels: usize,
+    pub n_layers: usize,
+    pub layers: Vec<LayerInfo>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    /// Training batch size B baked into the artifacts.
+    pub batch: usize,
+    /// Local steps P baked into the client_update artifact.
+    pub local_steps: usize,
+    /// Eval batch size baked into eval_step.
+    pub eval_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn sig_list(v: &Json) -> Result<Vec<TensorSig>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("signature must be an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                dtype: DType::parse(
+                    t.get("dtype").and_then(|d| d.as_str()).ok_or_else(|| anyhow!("no dtype"))?,
+                )?,
+                shape: t
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow!("no shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let format = doc.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if format != "qafel-artifacts-v1" {
+            bail!("unknown manifest format '{format}'");
+        }
+        let model = doc.get("model").ok_or_else(|| anyhow!("manifest: no model"))?;
+        let geti = |k: &str| -> Result<usize> {
+            model
+                .get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest model.{k} missing"))
+        };
+        let layers = model
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| anyhow!("manifest: no layers"))?
+            .iter()
+            .map(|l| {
+                Ok(LayerInfo {
+                    name: l
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .ok_or_else(|| anyhow!("layer name"))?
+                        .to_string(),
+                    shape: l
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("layer shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<_>>>()?,
+                    offset: l.get("offset").and_then(|o| o.as_usize()).ok_or_else(|| anyhow!("layer offset"))?,
+                    size: l.get("size").and_then(|s| s.as_usize()).ok_or_else(|| anyhow!("layer size"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let d = geti("d")?;
+        // verify the layout tiles [0, d) exactly
+        let mut end = 0usize;
+        for l in &layers {
+            if l.offset != end {
+                bail!("manifest layer {} offset {} != expected {end}", l.name, l.offset);
+            }
+            end += l.size;
+        }
+        if end != d {
+            bail!("manifest layers cover {end} of d={d}");
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in doc
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest: no artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| anyhow!("artifact file"))?
+                        .to_string(),
+                    inputs: sig_list(a.get("inputs").ok_or_else(|| anyhow!("inputs"))?)?,
+                    outputs: sig_list(a.get("outputs").ok_or_else(|| anyhow!("outputs"))?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            model: ModelInfo {
+                d,
+                height: geti("height")?,
+                width: geti("width")?,
+                in_channels: geti("in_channels")?,
+                channels: geti("channels")?,
+                n_layers: geti("n_layers")?,
+                layers,
+            },
+            batch: doc
+                .at(&["train", "batch"])
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest train.batch"))?,
+            local_steps: doc
+                .at(&["train", "local_steps"])
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest train.local_steps"))?,
+            eval_batch: doc
+                .get("eval_batch")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest eval_batch"))?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "qafel-artifacts-v1",
+      "model": {"d": 10, "height": 32, "width": 32, "in_channels": 3,
+                "channels": 2, "n_layers": 1, "kernel": 3, "padding": 2,
+                "stride": 1, "groups": 1, "dropout": 0.1, "classes": 2,
+                "layers": [
+                  {"name": "a", "shape": [2, 3], "offset": 0, "size": 6},
+                  {"name": "b", "shape": [4], "offset": 6, "size": 4}]},
+      "train": {"batch": 4, "local_steps": 2},
+      "eval_batch": 8,
+      "artifacts": {
+        "client_update": {"file": "client_update.hlo.txt",
+          "inputs": [{"dtype": "float32", "shape": [10]},
+                     {"dtype": "int32", "shape": [2, 4]}],
+          "outputs": [{"dtype": "float32", "shape": [10]}]}}
+    }"#;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.model.d, 10);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.local_steps, 2);
+        assert_eq!(m.eval_batch, 8);
+        let a = m.artifact("client_update").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[1].elems(), 8);
+        assert_eq!(m.artifact_path("client_update").unwrap(),
+                   PathBuf::from("/tmp/client_update.hlo.txt"));
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_gapped_layout() {
+        let bad = SAMPLE.replace("\"offset\": 6", "\"offset\": 7");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("qafel-artifacts-v1", "v0");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // integration-ish: when `make artifacts` has run, validate it.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert_eq!(m.model.d, 29474);
+            assert!(m.artifacts.contains_key("client_update"));
+            assert!(m.artifacts.contains_key("qsgd_quantize"));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 ↔ L2 bridge: load the AOT-compiled HLO artifacts and execute them
+//! via the PJRT C API, plus the [`Backend`] abstraction the coordinator
+//! and simulator are written against.
+//!
+//! Python is involved only at build time (`make artifacts`); everything
+//! here is pure rust + the `xla` crate.
+
+pub mod backend;
+pub mod engine;
+pub mod manifest;
+
+pub use backend::{Backend, EvalOutput, PjrtBackend, QuadraticBackend};
+pub use engine::{artifacts_available, artifacts_dir, Engine, QuantizedRoundOutput, RoundOutput};
+pub use manifest::{ArtifactSig, DType, LayerInfo, Manifest, ModelInfo, TensorSig};

@@ -1,0 +1,411 @@
+//! The virtual-time engine driving [`Server`] + [`ClientLogic`] over a
+//! [`Backend`].
+
+use crate::config::Config;
+use crate::coordinator::{ClientLogic, Server, ServerStep};
+use crate::metrics::{CurvePoint, RunResult};
+use crate::runtime::Backend;
+use crate::util::dist::{DurationDist, Exponential, HalfNormal, LogNormal};
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// A scheduled simulator event.
+enum EventKind {
+    /// A new client becomes available and starts training.
+    Arrival,
+    /// A client finishes local training and uploads.
+    Finish {
+        user: usize,
+        /// Hidden-state snapshot taken at start time (Algorithm 2 line 1).
+        snapshot: Arc<Vec<f32>>,
+        /// Server step count at start time (for staleness).
+        t_start: u64,
+        /// Unique per-trip id (drives batch sampling + quantizer noise).
+        trip: u64,
+    },
+}
+
+struct Event {
+    time: f64,
+    /// Tie-breaker making heap order fully deterministic.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap via reversed comparison on (time, seq)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Extra knobs not in the experiment config.
+#[derive(Clone, Debug, Default)]
+pub struct SimOptions {
+    /// Print progress lines.
+    pub verbose: bool,
+    /// Stop once target accuracy is reached (default true). The
+    /// convergence experiment turns this off to run a fixed horizon.
+    pub run_past_target: bool,
+    /// Record ‖x−x̂‖² at each eval (hidden-state error trace, Lemma F.9).
+    pub trace_hidden_error: bool,
+}
+
+/// The simulator.
+pub struct SimEngine<'a> {
+    cfg: &'a Config,
+    backend: &'a dyn Backend,
+    seed: u64,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(cfg: &'a Config, backend: &'a dyn Backend, seed: u64) -> SimEngine<'a> {
+        SimEngine { cfg, backend, seed }
+    }
+
+    fn duration_dist(&self) -> Result<DurationDist> {
+        Ok(match self.cfg.sim.duration.as_str() {
+            "halfnormal" => DurationDist::HalfNormal(HalfNormal::new(self.cfg.sim.duration_sigma)),
+            "lognormal" => DurationDist::LogNormal(LogNormal::new(0.0, self.cfg.sim.duration_sigma)),
+            "fixed" => DurationDist::Fixed(self.cfg.sim.duration_sigma),
+            other => bail!("unknown duration dist '{other}'"),
+        })
+    }
+
+    /// Run one simulation; deterministic in (cfg, backend, seed).
+    pub fn run(&self) -> Result<RunResult> {
+        self.run_with(&SimOptions::default())
+    }
+
+    /// Run, also receiving the hidden-error trace when requested
+    /// (returned as the second element).
+    pub fn run_with(&self, opts: &SimOptions) -> Result<RunResult> {
+        Ok(self.run_traced(opts)?.0)
+    }
+
+    pub fn run_traced(&self, opts: &SimOptions) -> Result<(RunResult, Vec<f64>)> {
+        let wall_start = std::time::Instant::now();
+        let root = Prng::new(self.seed);
+        let mut arrival_rng = root.stream("arrivals");
+        let mut duration_rng = root.stream("durations");
+        let mut sampling_rng = root.stream("client-sampling");
+        let mut duration_dist = self.duration_dist()?;
+
+        // arrival process: constant rate (paper) or Poisson
+        let rate = HalfNormal::new(self.cfg.sim.duration_sigma)
+            .rate_for_concurrency(self.cfg.sim.concurrency as f64)
+            .max(duration_dist_rate_floor(&duration_dist, self.cfg.sim.concurrency));
+        let constant_gap = 1.0 / rate;
+        let poisson = Exponential::new(rate);
+        let use_poisson = self.cfg.sim.arrival == "poisson";
+
+        // initial model: shared x^0 (Algorithm 1 line 1 / Algorithm 3)
+        let x0 = self.backend.init_params(self.seed as i32 & 0x7FFF_FFFF)?;
+        let mut server = Server::build(self.cfg, x0, root.stream("server").next_u64_here())?;
+        let logic = ClientLogic::new(self.cfg, root.stream("client").next_u64_here())?;
+
+        let mut events: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut push = |events: &mut BinaryHeap<Event>, time: f64, kind: EventKind| {
+            let s = seq;
+            seq += 1;
+            events.push(Event { time, seq: s, kind });
+        };
+        push(&mut events, 0.0, EventKind::Arrival);
+
+        let mut trips = 0u64;
+        let mut curve: Vec<CurvePoint> = Vec::new();
+        let mut reached: Option<CurvePoint> = None;
+        let mut hidden_trace: Vec<f64> = Vec::new();
+        let mut last_eval_t = 0u64;
+        let n_users = self.backend.num_train_users();
+
+        // evaluate x^0 so curves start at t=0
+        let ev0 = self.backend.evaluate(server.model())?;
+        curve.push(CurvePoint {
+            time: 0.0,
+            server_steps: 0,
+            uploads: 0,
+            upload_mb: 0.0,
+            broadcast_mb: 0.0,
+            val_loss: ev0.loss,
+            val_accuracy: ev0.accuracy,
+            grad_norm_sq: ev0.grad_norm_sq,
+        });
+
+        let mut clock = 0.0f64;
+        while let Some(ev) = events.pop() {
+            clock = ev.time;
+            match ev.kind {
+                EventKind::Arrival => {
+                    // this client starts training now
+                    let user = sampling_rng.range(0, n_users);
+                    let dur = duration_dist.sample(&mut duration_rng).max(1e-9);
+                    let trip = trips;
+                    trips += 1;
+                    push(
+                        &mut events,
+                        clock + dur,
+                        EventKind::Finish {
+                            user,
+                            snapshot: server.client_snapshot(),
+                            t_start: server.t(),
+                            trip,
+                        },
+                    );
+                    // schedule the next arrival
+                    let gap = if use_poisson { poisson.sample(&mut arrival_rng) } else { constant_gap };
+                    push(&mut events, clock + gap, EventKind::Arrival);
+                }
+                EventKind::Finish { user, snapshot, t_start, trip } => {
+                    // lazy compute against the start-time snapshot
+                    let upload = logic.run_round(self.backend, &snapshot, user, trip)?;
+                    drop(snapshot);
+                    let staleness = server.t() - t_start;
+                    let stepped =
+                        matches!(server.ingest(&upload.msg, staleness)?, ServerStep::Stepped(_));
+
+                    if stepped && server.t() - last_eval_t >= self.cfg.sim.eval_every as u64 {
+                        last_eval_t = server.t();
+                        let ev = self.backend.evaluate(server.model())?;
+                        let point = CurvePoint {
+                            time: clock,
+                            server_steps: server.t(),
+                            uploads: server.comm.uploads,
+                            upload_mb: server.comm.upload_mb(),
+                            broadcast_mb: server.comm.broadcast_mb(),
+                            val_loss: ev.loss,
+                            val_accuracy: ev.accuracy,
+                            grad_norm_sq: ev.grad_norm_sq,
+                        };
+                        if opts.trace_hidden_error {
+                            hidden_trace.push(server.hidden_state_error_sq());
+                        }
+                        if opts.verbose {
+                            eprintln!(
+                                "[sim] t={:>6} uploads={:>7} upMB={:>9.2} acc={:.4} loss={:.4}",
+                                point.server_steps,
+                                point.uploads,
+                                point.upload_mb,
+                                point.val_accuracy,
+                                point.val_loss
+                            );
+                        }
+                        curve.push(point);
+                        if reached.is_none()
+                            && point.val_accuracy >= self.cfg.stop.target_accuracy
+                        {
+                            reached = Some(point);
+                            if !opts.run_past_target {
+                                break;
+                            }
+                        }
+                    }
+                    if server.comm.uploads >= self.cfg.stop.max_uploads
+                        || server.t() >= self.cfg.stop.max_server_steps
+                    {
+                        break;
+                    }
+                }
+            }
+        }
+
+        let final_accuracy = curve.last().map(|p| p.val_accuracy).unwrap_or(0.0);
+        Ok((
+            RunResult {
+                curve,
+                reached,
+                comm: server.comm.clone(),
+                final_accuracy,
+                server_steps: server.t(),
+                wall_seconds: wall_start.elapsed().as_secs_f64(),
+            },
+            hidden_trace,
+        ))
+    }
+}
+
+/// Arrival rate must be positive even for degenerate duration dists.
+fn duration_dist_rate_floor(d: &DurationDist, concurrency: usize) -> f64 {
+    let mean = d.mean().max(1e-9);
+    concurrency as f64 / mean * 1e-6
+}
+
+/// Helper so a derived stream can yield one u64 inline.
+trait NextHere {
+    fn next_u64_here(self) -> u64;
+}
+
+impl NextHere for Prng {
+    fn next_u64_here(mut self) -> u64 {
+        self.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Config};
+    use crate::runtime::QuadraticBackend;
+
+    fn quad_cfg(algorithm: Algorithm) -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = algorithm;
+        c.fl.buffer_size = 4;
+        c.fl.client_lr = 0.15;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c.fl.clip_norm = 0.0; // analytic deltas are O(10)
+        c.quant.client = "qsgd:8".into();
+        c.quant.server = "qsgd:8".into();
+        c.sim.concurrency = 20;
+        c.sim.eval_every = 10;
+        c.stop.target_accuracy = 0.99; // grad_norm proxy: 1/(1+g2)
+        c.stop.max_uploads = 6000;
+        c.stop.max_server_steps = 1500;
+        c
+    }
+
+    fn backend() -> QuadraticBackend {
+        QuadraticBackend::new(24, 10, 1.0, 0.3, 0.3, 0.02, 2, 11)
+    }
+
+    #[test]
+    fn qafel_converges_on_quadratic() {
+        let cfg = quad_cfg(Algorithm::Qafel);
+        let b = backend();
+        let result = SimEngine::new(&cfg, &b, 1).run().unwrap();
+        assert!(
+            result.reached.is_some(),
+            "did not converge: final acc {} after {} uploads",
+            result.final_accuracy,
+            result.comm.uploads
+        );
+        let r = result.reached.unwrap();
+        assert!(r.uploads > 0 && r.upload_mb > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quad_cfg(Algorithm::Qafel);
+        let b = backend();
+        let r1 = SimEngine::new(&cfg, &b, 7).run().unwrap();
+        let r2 = SimEngine::new(&cfg, &b, 7).run().unwrap();
+        assert_eq!(r1.comm.uploads, r2.comm.uploads);
+        assert_eq!(r1.server_steps, r2.server_steps);
+        assert_eq!(r1.final_accuracy, r2.final_accuracy);
+        let r3 = SimEngine::new(&cfg, &b, 8).run().unwrap();
+        // different seed -> different trajectory (virtually certain)
+        assert!(
+            r1.comm.uploads != r3.comm.uploads || r1.final_accuracy != r3.final_accuracy
+        );
+    }
+
+    #[test]
+    fn staleness_grows_with_concurrency() {
+        let b = backend();
+        let mut lo = quad_cfg(Algorithm::FedBuff);
+        lo.sim.concurrency = 5;
+        lo.stop.max_server_steps = 200;
+        lo.stop.target_accuracy = 2.0; // never reached: fixed horizon
+        let mut hi = lo.clone();
+        hi.sim.concurrency = 200;
+        let e_lo = SimEngine::new(&lo, &b, 3);
+        let e_hi = SimEngine::new(&hi, &b, 3);
+        // reach into the server by re-running and checking mean staleness
+        // via RunResult comm totals is not exposed; use uploads/steps:
+        // with K=4 fixed, higher concurrency => more in-flight work =>
+        // strictly more uploads issued for the same number of steps is
+        // not guaranteed, but staleness must rise. We approximate via
+        // the upload overshoot past the final step.
+        let r_lo = e_lo.run().unwrap();
+        let r_hi = e_hi.run().unwrap();
+        assert_eq!(r_lo.server_steps, 200);
+        assert_eq!(r_hi.server_steps, 200);
+        // sanity: both made progress and hi processed >= lo uploads
+        assert!(r_hi.comm.uploads >= r_lo.comm.uploads);
+    }
+
+    #[test]
+    fn quantized_uploads_are_smaller_than_fedbuff() {
+        let b = backend();
+        let mut q = quad_cfg(Algorithm::Qafel);
+        q.quant.client = "qsgd:4".into();
+        q.stop.max_server_steps = 50;
+        q.stop.target_accuracy = 2.0;
+        let mut f = q.clone();
+        f.fl.algorithm = Algorithm::FedBuff;
+        let rq = SimEngine::new(&q, &b, 5).run().unwrap();
+        let rf = SimEngine::new(&f, &b, 5).run().unwrap();
+        let kbq = rq.comm.kb_per_upload();
+        let kbf = rf.comm.kb_per_upload();
+        // 4-bit qsgd ~ 8x smaller than f32 (at d=24 the 4-byte norm
+        // header costs a quarter of the message; ratio 6x here, ~7.9x at
+        // the paper's d=29474)
+        assert!(kbf / kbq >= 5.5, "kb/upload {kbq} vs fedbuff {kbf}");
+    }
+
+    #[test]
+    fn poisson_and_lognormal_ablations_run() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.sim.arrival = "poisson".into();
+        c.sim.duration = "lognormal".into();
+        c.stop.max_server_steps = 30;
+        c.stop.target_accuracy = 2.0;
+        let r = SimEngine::new(&c, &b, 2).run().unwrap();
+        assert_eq!(r.server_steps, 30);
+    }
+
+    #[test]
+    fn curve_is_monotone_in_time_and_uploads() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 100;
+        c.stop.target_accuracy = 2.0;
+        let r = SimEngine::new(&c, &b, 4).run().unwrap();
+        for w in r.curve.windows(2) {
+            assert!(w[1].time >= w[0].time);
+            assert!(w[1].uploads >= w[0].uploads);
+            assert!(w[1].upload_mb >= w[0].upload_mb);
+        }
+        // broadcast MB ~= upload MB / K with identical 8-bit codecs (both
+        // directions quantized, Fig. 3 caption identity)
+        let last = r.curve.last().unwrap();
+        let ratio = last.upload_mb / last.broadcast_mb;
+        assert!((ratio - 4.0).abs() < 0.6, "up/down ratio {ratio}");
+    }
+
+    #[test]
+    fn hidden_error_trace_is_bounded(){
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 120;
+        c.stop.target_accuracy = 2.0;
+        let opts = SimOptions { trace_hidden_error: true, ..Default::default() };
+        let (r, trace) = SimEngine::new(&c, &b, 6).run_traced(&opts).unwrap();
+        assert_eq!(trace.len(), r.curve.len() - 1);
+        // Lemma F.9: hidden error stays bounded (no blow-up)
+        let max0 = trace.iter().take(3).cloned().fold(0.0, f64::max);
+        let max1 = trace.iter().rev().take(3).cloned().fold(0.0, f64::max);
+        assert!(max1 <= (max0 + 1.0) * 50.0, "hidden error exploding: {max0} -> {max1}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Event-driven virtual-time simulator of the asynchronous FL system
+//! (paper §4 / Appendix D timing model).
+//!
+//! * clients **arrive at a constant rate** (or Poisson, for ablations);
+//!   the rate is derived from the target concurrency via
+//!   `rate = concurrency / E[duration]`, reproducing the paper's
+//!   125 / 627 / 1253 clients-per-unit-time for 100 / 500 / 1000;
+//! * each client trains for a **half-normal** duration |N(0, sigma^2)|
+//!   (Meta production model) — log-normal and fixed for ablations;
+//! * a client's model snapshot is the hidden state at its **start** time
+//!   (a cheap `Arc` clone); its update is ingested at its **finish**
+//!   time. Staleness = server steps between the two, exactly the paper's
+//!   `tau_n(t)`. The gradient computation itself happens lazily at the
+//!   finish event, against the start-time snapshot — virtual time is
+//!   completely decoupled from compute time.
+//!
+//! Concurrency 1000 therefore needs no threads: the engine is a binary
+//! heap of (time, event) pairs processed in deterministic order.
+
+pub mod engine;
+
+pub use engine::{SimEngine, SimOptions};

@@ -1,0 +1,10 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! `forall` runs a property over N generated cases; on failure it retries
+//! the case through a simple halving shrinker (for types that implement
+//! [`Shrink`]) and reports the minimal failing input plus the seed needed
+//! to replay the run (`QAFEL_PROP_SEED` env var).
+
+pub mod prop;
+
+pub use prop::{forall, forall_cfg, Gen, PropConfig, Shrink};

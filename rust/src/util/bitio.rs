@@ -1,0 +1,215 @@
+//! Bit-level writer/reader used by the quantizer wire codecs.
+//!
+//! The paper's communication metrics (kB/upload, kB/download) are computed
+//! from the length of the *actual packed buffers* produced here — not from
+//! formulas — so correctness and density of the packing directly affects
+//! the reproduced tables.
+
+/// Append-only bit buffer, LSB-first within each byte.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the last byte (0 => byte-aligned).
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { buf: Vec::new(), used: 0 }
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), used: 0 }
+    }
+
+    /// Write the low `n` bits of `v` (n <= 57; keeps the fast path
+    /// branch-free by staging through a u64 window).
+    #[inline]
+    pub fn write(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57, "write up to 57 bits at a time");
+        debug_assert!(n == 64 || v < (1u64 << n), "value {v} overflows {n} bits");
+        let mut acc = v;
+        let mut left = n;
+        if self.used > 0 {
+            let last = self.buf.len() - 1;
+            let space = 8 - self.used;
+            let take = left.min(space);
+            let mask = (1u64 << take) - 1;
+            self.buf[last] |= ((acc & mask) as u8) << self.used;
+            acc >>= take;
+            left -= take;
+            self.used = (self.used + take) & 7;
+        }
+        while left >= 8 {
+            self.buf.push(acc as u8);
+            acc >>= 8;
+            left -= 8;
+        }
+        if left > 0 {
+            self.buf.push((acc & ((1 << left) - 1)) as u8);
+            self.used = left;
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, b: bool) {
+        self.write(b as u64, 1);
+    }
+
+    /// Write a full f32 (bit pattern, 32 bits).
+    #[inline]
+    pub fn write_f32(&mut self, v: f32) {
+        self.write(v.to_bits() as u64, 32);
+    }
+
+    /// Write a u32 (32 bits).
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(v as u64, 32);
+    }
+
+    /// Total bits written.
+    pub fn bit_len(&self) -> usize {
+        if self.used == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.used as usize
+        }
+    }
+
+    /// Finish and return the byte buffer (zero-padded to a byte boundary).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Reader over a bit buffer produced by [`BitWriter`].
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Absolute bit cursor.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n <= 57). Returns None at end of buffer.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> Option<u64> {
+        let end = self.pos + n as usize;
+        if end > self.buf.len() * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        let mut pos = self.pos;
+        while got < n {
+            let byte = self.buf[pos / 8] as u64;
+            let off = (pos % 8) as u32;
+            let avail = 8 - off;
+            let take = (n - got).min(avail);
+            let bits = (byte >> off) & ((1u64 << take) - 1);
+            out |= bits << got;
+            got += take;
+            pos += take as usize;
+        }
+        self.pos = end;
+        Some(out)
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read(1).map(|b| b != 0)
+    }
+
+    #[inline]
+    pub fn read_f32(&mut self) -> Option<f32> {
+        self.read(32).map(|b| f32::from_bits(b as u32))
+    }
+
+    #[inline]
+    pub fn read_u32(&mut self) -> Option<u32> {
+        self.read(32).map(|b| b as u32)
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write_bit(true);
+        w.write(0xDEAD, 16);
+        w.write_f32(3.5);
+        w.write(0x1FF, 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), Some(0b101));
+        assert_eq!(r.read_bit(), Some(true));
+        assert_eq!(r.read(16), Some(0xDEAD));
+        assert_eq!(r.read_f32(), Some(3.5));
+        assert_eq!(r.read(9), Some(0x1FF));
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = Prng::new(77);
+        for _ in 0..50 {
+            let mut vals = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..500 {
+                let n = 1 + rng.below(57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1).max(1);
+                let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+                w.write(v, n);
+                vals.push((v, n));
+            }
+            let bit_len = w.bit_len();
+            let bytes = w.into_bytes();
+            assert!(bytes.len() * 8 - bit_len < 8);
+            let mut r = BitReader::new(&bytes);
+            for (v, n) in vals {
+                assert_eq!(r.read(n), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write(0b11, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(2), Some(0b11));
+        // padding bits exist up to the byte boundary, but not beyond
+        assert!(r.read(7).is_none());
+    }
+
+    #[test]
+    fn bit_len_tracks_exactly() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bit(true);
+        assert_eq!(w.bit_len(), 1);
+        w.write(0, 8);
+        assert_eq!(w.bit_len(), 9);
+        w.write(0, 55);
+        assert_eq!(w.bit_len(), 64);
+    }
+}

@@ -1,0 +1,208 @@
+//! Probability distributions used by the simulator and experiments.
+//!
+//! The paper (Appendix D, following FedBuff's Appendix C) models client
+//! training durations as a **half-normal** |N(0, sigma^2)| — "the most
+//! accurate representation of the delay distribution observed in Meta's
+//! production FL system" — and client arrivals at a **constant rate**.
+//! We also provide exponential arrivals and log-normal durations for
+//! ablations.
+
+use super::prng::Prng;
+
+/// Standard normal via Box–Muller (polar/Marsaglia variant to avoid
+/// trig), with the spare value cached.
+#[derive(Clone, Debug, Default)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Normal { spare: None }
+    }
+
+    /// One N(0,1) sample.
+    pub fn sample(&mut self, rng: &mut Prng) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * rng.f64() - 1.0;
+            let v = 2.0 * rng.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// One N(mu, sigma^2) sample.
+    pub fn sample_with(&mut self, rng: &mut Prng, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.sample(rng)
+    }
+}
+
+/// Half-normal |N(0, sigma^2)|: the paper's training-duration model.
+///
+/// Mean is `sigma * sqrt(2/pi)`; the paper derives its arrival rates for
+/// concurrency targets from this expectation (Appendix D).
+#[derive(Clone, Debug)]
+pub struct HalfNormal {
+    pub sigma: f64,
+    normal: Normal,
+}
+
+impl HalfNormal {
+    pub fn new(sigma: f64) -> Self {
+        HalfNormal { sigma, normal: Normal::new() }
+    }
+
+    pub fn sample(&mut self, rng: &mut Prng) -> f64 {
+        (self.normal.sample(rng) * self.sigma).abs()
+    }
+
+    /// E[|N(0, sigma^2)|] = sigma * sqrt(2/pi).
+    pub fn mean(&self) -> f64 {
+        self.sigma * (2.0 / std::f64::consts::PI).sqrt()
+    }
+
+    /// The constant client arrival rate that sustains a target expected
+    /// concurrency: rate = concurrency / E[duration]. With sigma = 1 this
+    /// reproduces the paper's 125 / 627 / 1253 clients-per-unit-time for
+    /// concurrencies 100 / 500 / 1000.
+    pub fn rate_for_concurrency(&self, concurrency: f64) -> f64 {
+        concurrency / self.mean()
+    }
+}
+
+/// Exponential(rate) — Poisson inter-arrival ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        Exponential { rate }
+    }
+
+    pub fn sample(&self, rng: &mut Prng) -> f64 {
+        // -ln(1-u)/rate; 1-u in (0,1] avoids ln(0).
+        -(1.0 - rng.f64()).ln() / self.rate
+    }
+}
+
+/// Log-normal duration ablation (heavier tail than half-normal).
+#[derive(Clone, Debug)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+    normal: Normal,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        LogNormal { mu, sigma, normal: Normal::new() }
+    }
+
+    pub fn sample(&mut self, rng: &mut Prng) -> f64 {
+        (self.mu + self.sigma * self.normal.sample(rng)).exp()
+    }
+}
+
+/// Client training-duration models (paper default: HalfNormal(1)).
+#[derive(Clone, Debug)]
+pub enum DurationDist {
+    HalfNormal(HalfNormal),
+    LogNormal(LogNormal),
+    /// Deterministic duration (unit tests / degenerate ablation).
+    Fixed(f64),
+}
+
+impl DurationDist {
+    pub fn sample(&mut self, rng: &mut Prng) -> f64 {
+        match self {
+            DurationDist::HalfNormal(h) => h.sample(rng),
+            DurationDist::LogNormal(l) => l.sample(rng),
+            DurationDist::Fixed(v) => *v,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            DurationDist::HalfNormal(h) => h.mean(),
+            DurationDist::LogNormal(l) => (l.mu + 0.5 * l.sigma * l.sigma).exp(),
+            DurationDist::Fixed(v) => *v,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Prng::new(1);
+        let mut n = Normal::new();
+        let cnt = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..cnt {
+            let x = n.sample(&mut rng);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / cnt as f64;
+        let var = sq / cnt as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn half_normal_mean_matches_formula() {
+        let mut rng = Prng::new(2);
+        let mut h = HalfNormal::new(1.0);
+        let cnt = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..cnt {
+            let x = h.sample(&mut rng);
+            assert!(x >= 0.0);
+            sum += x;
+        }
+        let mean = sum / cnt as f64;
+        assert!((mean - h.mean()).abs() < 0.01, "{mean} vs {}", h.mean());
+    }
+
+    #[test]
+    fn paper_arrival_rates() {
+        // Appendix D: concurrencies 100/500/1000 <- rates 125/627/1253.
+        let h = HalfNormal::new(1.0);
+        assert_eq!(h.rate_for_concurrency(100.0).round() as i64, 125);
+        assert_eq!(h.rate_for_concurrency(500.0).round() as i64, 627);
+        assert_eq!(h.rate_for_concurrency(1000.0).round() as i64, 1253);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Prng::new(3);
+        let e = Exponential::new(4.0);
+        let cnt = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..cnt {
+            sum += e.sample(&mut rng);
+        }
+        assert!((sum / cnt as f64 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut rng = Prng::new(4);
+        let mut l = LogNormal::new(0.0, 0.5);
+        for _ in 0..1000 {
+            assert!(l.sample(&mut rng) > 0.0);
+        }
+    }
+}

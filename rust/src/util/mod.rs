@@ -1,0 +1,13 @@
+//! Foundation utilities built from scratch (the offline build environment
+//! provides no `rand`, `serde`, or similar crates): deterministic PRNG,
+//! probability distributions, descriptive statistics, bit-level I/O and a
+//! JSON parser/writer.
+
+pub mod bitio;
+pub mod dist;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod vecf;
+
+pub use prng::Prng;

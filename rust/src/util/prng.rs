@@ -1,0 +1,272 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All stochastic behaviour in the system (client arrivals, training
+//! durations, batch sampling, quantizer randomness, baseline noise) flows
+//! from a single master seed through *named streams*, so every experiment
+//! is exactly reproducible and independent randomness sources never alias.
+//!
+//! Generator: xoshiro256++ (Blackman & Vigna), seeded via SplitMix64 —
+//! the standard construction recommended by the authors. Not
+//! cryptographic; statistical quality is what matters here.
+
+/// SplitMix64 step: used for seeding and cheap stream derivation.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Create a generator from a 64-bit seed (expanded with SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // xoshiro must not be seeded with all zeros; splitmix cannot
+        // produce four consecutive zeros, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Prng { s }
+    }
+
+    /// Derive an independent generator for a named sub-stream.
+    ///
+    /// Mixes the stream label into the seed with SplitMix64 so that e.g.
+    /// the "arrivals" and "durations" streams of the same experiment are
+    /// decorrelated, and so that per-entity streams (`stream_u64(id)`)
+    /// never collide with each other.
+    pub fn stream(&self, label: &str) -> Prng {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+        for b in label.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        let mut mix = self.s[0] ^ h;
+        let _ = splitmix64(&mut mix);
+        Prng::new(mix)
+    }
+
+    /// Derive an independent generator keyed by an integer (client id,
+    /// round number, ...).
+    pub fn stream_u64(&self, key: u64) -> Prng {
+        let mut mix = self.s[1] ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let _ = splitmix64(&mut mix);
+        Prng::new(mix ^ self.s[2])
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of precision.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi) (half-open range).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fill a slice with iid U[0,1) f32 values (quantizer noise).
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        // Unroll two lanes per u64 for throughput in the hot quant path.
+        let mut chunks = out.chunks_exact_mut(2);
+        for pair in &mut chunks {
+            let bits = self.next_u64();
+            pair[0] = (bits >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
+            pair[1] = ((bits >> 8) & 0xFF_FFFF) as f32 * (1.0 / (1u64 << 24) as f32);
+        }
+        for v in chunks.into_remainder() {
+            *v = self.f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (floyd's algorithm for
+    /// small k, shuffle prefix otherwise).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        // Floyd: guarantees distinctness in O(k) expected time.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j as u64 + 1) as usize;
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn streams_are_decorrelated() {
+        let root = Prng::new(7);
+        let mut s1 = root.stream("arrivals");
+        let mut s2 = root.stream("durations");
+        let mut s1b = root.stream("arrivals");
+        assert_eq!(s1.next_u64(), s1b.next_u64());
+        let same = (0..64).filter(|_| s1.next_u64() == s2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform() {
+        let mut g = Prng::new(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = g.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut g = Prng::new(9);
+        let mut counts = [0usize; 3];
+        let n = 90_000;
+        for _ in 0..n {
+            counts[g.below(3) as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 1.0 / 3.0).abs() < 0.01, "frac {frac}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut g = Prng::new(5);
+        for (n, k) in [(10, 10), (100, 3), (50, 25), (1, 1)] {
+            let idx = g.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn fill_uniform_f32_matches_bounds() {
+        let mut g = Prng::new(11);
+        let mut buf = vec![0f32; 1001];
+        g.fill_uniform_f32(&mut buf);
+        assert!(buf.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean: f32 = buf.iter().sum::<f32>() / buf.len() as f32;
+        assert!((mean - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Prng::new(13);
+        let mut xs: Vec<u32> = (0..50).collect();
+        g.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

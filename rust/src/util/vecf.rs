@@ -1,0 +1,118 @@
+//! Flat f32 vector kernels for the coordinator hot path.
+//!
+//! The whole stack treats model parameters as an opaque `f32[d]` vector
+//! (d ≈ 29.5k for the paper's model); these routines are the only math
+//! the L3 server performs per update, so they are written to autovectorize
+//! (simple indexed loops over slices of equal, asserted length).
+
+/// y += x
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += x[i];
+    }
+}
+
+/// y += a * x (axpy)
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// y = a * y
+#[inline]
+pub fn scale(y: &mut [f32], a: f32) {
+    for v in y.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// l2 norm (f64 accumulation for stability at d ~ 3e4).
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in x {
+        acc += (v as f64) * (v as f64);
+    }
+    acc.sqrt()
+}
+
+/// squared l2 distance between two vectors.
+#[inline]
+pub fn dist2_sq(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// dot product (f64 accumulation).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+/// Set all elements to zero without reallocating.
+#[inline]
+pub fn zero(y: &mut [f32]) {
+    for v in y.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        add_assign(&mut y, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![2.0, 3.0, 4.0]);
+        axpy(&mut y, 2.0, &[1.0, 0.0, -1.0]);
+        assert_eq!(y, vec![4.0, 3.0, 2.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![2.0, 1.5, 1.0]);
+        let mut out = vec![0.0; 3];
+        sub(&mut out, &[3.0, 3.0, 3.0], &y);
+        assert_eq!(out, vec![1.0, 1.5, 2.0]);
+        zero(&mut out);
+        assert_eq!(out, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn norms_and_dots() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+        assert!((dist2_sq(&[0.0, 0.0], &[3.0, 4.0]) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut y = vec![0.0; 2];
+        add_assign(&mut y, &[1.0]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Integration tests over the real AOT artifacts (L1+L2 через PJRT).
+//! Each test skips gracefully when `make artifacts` has not run.
+
+use qafel::config::{Config, DataConfig};
+use qafel::data::Dataset;
+use qafel::quant::qsgd::Qsgd;
+use qafel::quant::Quantizer as _;
+use qafel::runtime::{artifacts_available, Backend as _, Engine, PjrtBackend};
+use qafel::sim::SimEngine;
+use qafel::util::prng::Prng;
+use qafel::util::vecf;
+use std::rc::Rc;
+
+fn engine() -> Option<Rc<Engine>> {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Rc::new(Engine::load("artifacts").expect("engine load")))
+}
+
+#[test]
+fn manifest_matches_model_contract() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    assert_eq!(m.model.d, 29_474, "paper-scale model (117.9 kB updates)");
+    assert_eq!(m.model.n_layers, 4);
+    assert_eq!((m.model.height, m.model.width, m.model.in_channels), (32, 32, 3));
+    for name in ["init_params", "train_step", "client_update",
+                 "client_update_quantized", "eval_step", "qsgd_quantize"] {
+        assert!(m.artifacts.contains_key(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn init_params_deterministic_and_seed_sensitive() {
+    let Some(engine) = engine() else { return };
+    let a = engine.init_params(1).unwrap();
+    let b = engine.init_params(1).unwrap();
+    let c = engine.init_params(2).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    let norm = vecf::norm2(&a);
+    assert!(norm > 1.0 && norm < 1000.0, "init norm {norm}");
+}
+
+#[test]
+fn client_update_descends_and_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    let (p, b) = (m.local_steps, m.batch);
+    let img = engine.img_elems();
+    let params = engine.init_params(0).unwrap();
+    let ds = Dataset::new(&DataConfig::default());
+    let mut rng = Prng::new(3);
+    let mut xs = vec![0.0f32; p * b * img];
+    let mut ys = vec![0i32; p * b];
+    let mut mask = vec![0.0f32; p * b];
+    ds.fill_round(1, &mut rng, p, b, &mut xs, &mut ys, &mut mask);
+
+    let r1 = engine.client_update(&params, &xs, &ys, &mask, 1e-2, 7).unwrap();
+    let r2 = engine.client_update(&params, &xs, &ys, &mask, 1e-2, 7).unwrap();
+    assert_eq!(r1.delta, r2.delta, "PJRT call must be deterministic");
+    assert!(r1.loss.is_finite() && vecf::norm2(&r1.delta) > 0.0);
+
+    // two chained updates reduce the loss on the same batch
+    let mut pp = params.clone();
+    vecf::add_assign(&mut pp, &r1.delta);
+    let r3 = engine.client_update(&pp, &xs, &ys, &mask, 1e-2, 7).unwrap();
+    assert!(
+        r3.loss < r1.loss,
+        "loss should decrease on the same batch: {} -> {}",
+        r1.loss,
+        r3.loss
+    );
+}
+
+#[test]
+fn pallas_qsgd_artifact_matches_rust_codec_exactly() {
+    let Some(engine) = engine() else { return };
+    let d = engine.d();
+    let mut rng = Prng::new(11);
+    let x: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let mut u = vec![0.0f32; d];
+    rng.fill_uniform_f32(&mut u);
+
+    for bits in [2u32, 4, 8] {
+        let q = Qsgd::new(bits).unwrap();
+        let s = q.levels() as f32;
+        let g = q.bucket();
+        let (levels, norms) = engine.qsgd_quantize(&x, &u, s).unwrap();
+        assert_eq!(norms.len(), d.div_ceil(g));
+        // replicate the bucketed stochastic rounding with the same uniforms
+        let mut mism = 0usize;
+        for i in 0..d {
+            let lo = (i / g) * g;
+            let hi = (lo + g).min(d);
+            let norm = vecf::norm2(&x[lo..hi]) as f32;
+            let a = x[i].abs() * s / norm;
+            let lv = (a + u[i]).floor() as i32;
+            let expect = if x[i] < 0.0 { -lv } else { lv };
+            if levels[i] != expect {
+                mism += 1;
+            }
+        }
+        // float-order differences may flip a coordinate sitting exactly
+        // on a rounding boundary; allow a vanishing fraction
+        assert!(mism <= 2, "{bits}-bit: {mism} level mismatches");
+        // levels respect the codec's range
+        assert!(levels.iter().all(|l| l.unsigned_abs() <= q.levels()));
+        // wire round-trip of the kernel's own output
+        let msg = q.encode_levels(&levels, &norms);
+        let (n2, lv2) = q.decode_levels(&msg).unwrap();
+        assert_eq!((n2, lv2), (norms.clone(), levels));
+    }
+}
+
+#[test]
+fn client_update_quantized_consistent_with_separate_calls() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    let (p, b) = (m.local_steps, m.batch);
+    let img = engine.img_elems();
+    let d = engine.d();
+    let params = engine.init_params(0).unwrap();
+    let ds = Dataset::new(&DataConfig::default());
+    let mut rng = Prng::new(5);
+    let mut xs = vec![0.0f32; p * b * img];
+    let mut ys = vec![0i32; p * b];
+    let mut mask = vec![0.0f32; p * b];
+    ds.fill_round(2, &mut rng, p, b, &mut xs, &mut ys, &mut mask);
+    let mut u = vec![0.0f32; d];
+    rng.fill_uniform_f32(&mut u);
+
+    let fused = engine
+        .client_update_quantized(&params, &xs, &ys, &mask, 1e-2, 3, &u, 7.0)
+        .unwrap();
+    let plain = engine.client_update(&params, &xs, &ys, &mask, 1e-2, 3).unwrap();
+    let (levels, norms) = engine.qsgd_quantize(&plain.delta, &u, 7.0).unwrap();
+    assert_eq!(fused.levels, levels, "fused Pallas path != separate path");
+    assert_eq!(fused.norms.len(), norms.len());
+    for (a, b) in fused.norms.iter().zip(&norms) {
+        assert!((a - b).abs() <= b.abs() * 1e-5 + 1e-12);
+    }
+    assert!((fused.loss - plain.loss).abs() < 1e-5);
+}
+
+#[test]
+fn eval_step_counts_and_bounds() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    let eb = m.eval_batch;
+    let img = engine.img_elems();
+    let params = engine.init_params(0).unwrap();
+    let ds = Dataset::new(&DataConfig::default());
+    let mut x = vec![0.0f32; eb * img];
+    let mut y = vec![0i32; eb];
+    let mut mask = vec![0.0f32; eb];
+    for slot in 0..eb / 2 {
+        y[slot] = ds.sample_into(slot % ds.num_users(), 0,
+                                 &mut x[slot * img..(slot + 1) * img]) as i32;
+        mask[slot] = 1.0;
+    }
+    let (loss_sum, correct, count) = engine.eval_step(&params, &x, &y, &mask).unwrap();
+    assert_eq!(count as usize, eb / 2);
+    assert!(correct >= 0.0 && correct <= count);
+    assert!(loss_sum > 0.0);
+}
+
+#[test]
+fn short_end_to_end_training_run_improves_accuracy() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = Config::default();
+    cfg.fl.client_lr = 1e-2;
+    cfg.fl.server_lr = 1.0;
+    cfg.sim.eval_every = 5;
+    cfg.data.eval_samples = 512;
+    cfg.stop.max_uploads = 400;
+    cfg.stop.target_accuracy = 0.85;
+    let backend = PjrtBackend::new(engine, &cfg.data, 1).unwrap();
+    let r = SimEngine::new(&cfg, &backend, 1).run().unwrap();
+    let first = r.curve.first().unwrap().val_accuracy;
+    assert!(
+        r.final_accuracy > first + 0.15 || r.reached.is_some(),
+        "no learning: {first:.3} -> {:.3}",
+        r.final_accuracy
+    );
+}
