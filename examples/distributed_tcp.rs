@@ -43,12 +43,14 @@ fn main() -> anyhow::Result<()> {
     let leader_x0 = x0.clone();
     let leader = std::thread::spawn(move || Leader::new(leader_cfg, leader_x0, 1).run_on(listener, n_workers));
 
+    let worker_shards = cfg.fl.shards;
     let mut handles = Vec::new();
     for i in 0..n_workers {
         let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
             let mut w = Worker::new(QuadraticBackend::new(128, 64, 1.0, 0.3, 0.2, 0.02, 1, 7));
             w.round_delay = std::time::Duration::from_millis(2);
+            w.shards = worker_shards;
             let r = w.run(&addr).expect("worker failed");
             println!("[worker {i}] {} uploads, replica caught up to t={}", r.uploads, r.replica_t);
         }));

@@ -12,7 +12,45 @@ use qafel::runtime::{artifacts_available, Engine};
 use qafel::util::prng::Prng;
 use std::hint::black_box;
 
+/// Host-side (L3) runtime step at scale: the per-step server work the
+/// sharded pipeline parallelizes, swept over shard counts and model
+/// dimensions. Runs with no artifacts — this is the pure-rust path.
+fn sharded_runtime_step_sweep() {
+    use qafel::config::{Algorithm, Config};
+    use qafel::coordinator::Server;
+
+    let dims: &[usize] = if common::fast_mode() { &[29_474] } else { &[29_474, 1 << 20] };
+    println!("== L3 runtime step vs shards (qsgd:4 both ways, K = 10) ==");
+    for &d in dims {
+        let codec = qafel::quant::parse_spec("qsgd:4").unwrap();
+        let mut qrng = Prng::new(2);
+        let delta: Vec<f32> = {
+            let mut r = Prng::new(5);
+            (0..d).map(|_| (r.f32() - 0.5) * 1e-3).collect()
+        };
+        let msg = codec.quantize(&delta, &mut qrng);
+        for shards in [1usize, 2, 4, 8] {
+            let mut cfg = Config::default();
+            cfg.fl.algorithm = Algorithm::Qafel;
+            cfg.quant.client = "qsgd:4".into();
+            cfg.quant.server = "qsgd:4".into();
+            cfg.fl.buffer_size = 10;
+            cfg.fl.shards = shards;
+            let mut server = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+            let iters = (common::scaled(8_000_000) / d.max(1)).clamp(3, 500);
+            bench(&format!("server step d={d} S={shards}"), iters, || {
+                for i in 0..10 {
+                    let _ = black_box(server.ingest(black_box(&msg), i % 4).unwrap());
+                }
+            });
+        }
+    }
+    println!();
+}
+
 fn main() {
+    sharded_runtime_step_sweep();
+
     let dir = std::env::var("QAFEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if !artifacts_available(&dir) {
         println!("runtime_step: artifacts not found in '{dir}' — run `make artifacts`; skipping");

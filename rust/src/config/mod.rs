@@ -66,6 +66,12 @@ pub struct FlConfig {
     /// (FLSim, the paper's implementation base, clips client updates);
     /// 0 disables clipping.
     pub clip_norm: f32,
+    /// Server aggregation shards S: the server step (accumulate,
+    /// momentum + eta_g apply, hidden-state diff, Q_s encode/apply) runs
+    /// in parallel over S contiguous, bucket-aligned ranges of the model
+    /// vector (DESIGN_SHARDING.md). 1 = sequential. Broadcast payloads
+    /// are bit-identical for every S.
+    pub shards: usize,
 }
 
 impl Default for FlConfig {
@@ -82,6 +88,7 @@ impl Default for FlConfig {
             staleness_scaling: false,
             local_steps: 1,
             clip_norm: 1.0,
+            shards: 1,
         }
     }
 }
@@ -280,6 +287,7 @@ impl Config {
         get_bool!(doc, &["fl", "staleness_scaling"], self.fl.staleness_scaling);
         get_num!(doc, &["fl", "local_steps"], self.fl.local_steps, usize);
         get_num!(doc, &["fl", "clip_norm"], self.fl.clip_norm, f32);
+        get_num!(doc, &["fl", "shards"], self.fl.shards, usize);
 
         get_str!(doc, &["quant", "client"], self.quant.client);
         get_str!(doc, &["quant", "server"], self.quant.server);
@@ -331,6 +339,12 @@ impl Config {
         }
         if self.fl.local_steps == 0 {
             bail!("fl.local_steps (P) must be >= 1");
+        }
+        if self.fl.shards == 0 {
+            bail!("fl.shards (S) must be >= 1");
+        }
+        if self.fl.shards > 256 {
+            bail!("fl.shards (S) must be <= 256 (one thread per shard)");
         }
         if self.seeds.is_empty() {
             bail!("need at least one seed");
@@ -400,6 +414,23 @@ mod tests {
         assert_eq!(c.quant.client, "qsgd:2");
         assert!(c.fl.staleness_scaling);
         assert!(c.set("nonsense").is_err());
+    }
+
+    #[test]
+    fn shards_knob_round_trips() {
+        let c = Config::default();
+        assert_eq!(c.fl.shards, 1);
+        let doc = toml::parse("[fl]\nshards = 4\n").unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.fl.shards, 4);
+        let mut c = Config::default();
+        c.set("fl.shards=8").unwrap();
+        assert_eq!(c.fl.shards, 8);
+        c.fl.shards = 0;
+        assert!(c.validate().is_err());
+        c.fl.shards = 10_000;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use crate::config::{Algorithm, Config};
 use crate::coordinator::server::Broadcast;
-use crate::quant::{parse_spec, QuantizedMsg, Quantizer};
+use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
 use crate::runtime::Backend;
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
@@ -96,6 +96,10 @@ pub struct HiddenReplica {
     /// Server step the replica has caught up to.
     pub t: u64,
     quant_s: Box<dyn Quantizer>,
+    /// Decode shards (mirrors `cfg.fl.shards`): applying a broadcast is
+    /// the same per-coordinate work as the server's x̂ advance, so big
+    /// replicas use the same shard-parallel decode path.
+    shards: usize,
 }
 
 impl HiddenReplica {
@@ -105,7 +109,12 @@ impl HiddenReplica {
             Algorithm::Qafel | Algorithm::DirectQuant => cfg.quant.server.clone(),
             Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
         };
-        Ok(HiddenReplica { x_hat: x0, t: 0, quant_s: parse_spec(&spec)? })
+        Ok(HiddenReplica {
+            x_hat: x0,
+            t: 0,
+            quant_s: parse_spec(&spec)?,
+            shards: cfg.fl.shards.max(1),
+        })
     }
 
     /// Apply one broadcast (Algorithm 3 line 4). Broadcasts must be
@@ -116,9 +125,9 @@ impl HiddenReplica {
         }
         if b.absolute {
             // DirectQuant mode: message carries the whole quantized model
-            self.quant_s.dequantize_into(&b.msg, &mut self.x_hat)?;
+            sharded::dequantize_into(self.quant_s.as_ref(), &b.msg, &mut self.x_hat, self.shards)?;
         } else {
-            self.quant_s.accumulate(&b.msg, 1.0, &mut self.x_hat)?;
+            sharded::accumulate(self.quant_s.as_ref(), &b.msg, 1.0, &mut self.x_hat, self.shards)?;
         }
         self.t = b.t;
         Ok(())

@@ -10,6 +10,7 @@
 //! than or equal to that of FedBuff" (B.1).
 
 use crate::coordinator::server::Broadcast;
+use crate::quant::{sharded, Quantizer};
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
 
@@ -79,6 +80,32 @@ impl UpdateLog {
             bail!("update log: non-contiguous step {} (at {})", b.t, self.t);
         }
         apply(&mut self.x_hat);
+        self.t = b.t;
+        if self.log.len() == self.c_max {
+            self.log.pop_front();
+        }
+        self.log.push_back(b);
+        Ok(())
+    }
+
+    /// Like [`UpdateLog::push`] for quantized increments: decodes `b`
+    /// with the server codec and advances the reference hidden state
+    /// through the shard-parallel decode path (same math as the
+    /// broadcasting server's x̂ advance, bit-identical for any `shards`).
+    pub fn push_quantized(
+        &mut self,
+        b: Broadcast,
+        quant_s: &dyn Quantizer,
+        shards: usize,
+    ) -> Result<()> {
+        if b.t != self.t + 1 {
+            bail!("update log: non-contiguous step {} (at {})", b.t, self.t);
+        }
+        if b.absolute {
+            sharded::dequantize_into(quant_s, &b.msg, &mut self.x_hat, shards)?;
+        } else {
+            sharded::accumulate(quant_s, &b.msg, 1.0, &mut self.x_hat, shards)?;
+        }
         self.t = b.t;
         if self.log.len() == self.c_max {
             self.log.pop_front();
@@ -187,6 +214,30 @@ mod tests {
         let log = log_with(30, 50, 100);
         assert_eq!(log.log.len(), 8);
         assert_eq!(log.log.front().unwrap().t, 23);
+    }
+
+    #[test]
+    fn push_quantized_tracks_broadcasting_server() {
+        use crate::quant::parse_spec;
+        use crate::util::prng::Prng;
+        let qs = parse_spec("qsgd:4").unwrap();
+        let d = 300;
+        let mut rng = Prng::new(3);
+        let mut x_hat = vec![0.0f32; d];
+        let mut log = UpdateLog::new(vec![0.0f32; d], qs.expected_bytes(d));
+        for t in 1..=5u64 {
+            let diff: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1 + t as f32).sin()).collect();
+            let msg = qs.quantize(&diff, &mut rng);
+            qs.accumulate(&msg, 1.0, &mut x_hat).unwrap();
+            let b = Broadcast { t, bytes: msg.wire_bytes(), msg, absolute: false };
+            log.push_quantized(b, qs.as_ref(), 2).unwrap();
+            assert_eq!(log.state(), &x_hat[..], "t={t}");
+            assert_eq!(log.t(), t);
+        }
+        // gaps still rejected
+        let msg = qs.quantize(&vec![0.0f32; d], &mut rng);
+        let bad = Broadcast { t: 99, bytes: msg.wire_bytes(), msg, absolute: false };
+        assert!(log.push_quantized(bad, qs.as_ref(), 2).is_err());
     }
 
     #[test]

@@ -19,13 +19,27 @@
 //! `hidden_state = false` the server instead broadcasts `Q_s(x^{t+1})`
 //! directly (the DirectQuant baseline), which propagates quantization
 //! error proportional to ‖x‖ rather than ‖x^{t+1} − x̂^t‖.
+//!
+//! **Sharded aggregation pipeline** (`cfg.fl.shards = S`, see
+//! DESIGN_SHARDING.md): every per-coordinate stage of the step —
+//! client-update accumulate, the momentum + η_g apply, the hidden-state
+//! diff, the `Q_s` encode and the x̂ advance — runs in parallel over S
+//! contiguous ranges of the model vector on a scoped worker pool
+//! (`std::thread::scope`). Ranges are aligned to the codec's bucket
+//! structure so per-bucket QSGD norms stay shard-local and the packed
+//! body is byte-aligned at every seam; quantizer noise is drawn once,
+//! sequentially, so the broadcast bytes are **bit-identical for every
+//! S** (S = 1 runs fully inline with zero threading overhead). Codecs
+//! without a range view (top_k, rand_k) fall back to the sequential
+//! path for the codec stages while still sharding the dense algebra.
 
 use crate::config::{Algorithm, Config};
 use crate::metrics::CommMetrics;
-use crate::quant::{parse_spec, QuantizedMsg, Quantizer};
+use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
 use crate::util::prng::Prng;
+use crate::util::shard::span_for;
 use crate::util::vecf;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// A server->clients broadcast message.
@@ -60,9 +74,12 @@ pub struct Server {
     beta: f32,
     staleness_scaling: bool,
     hidden_state_mode: bool,
+    /// Aggregation shards S (1 = sequential).
+    shards: usize,
     quant_s: Box<dyn Quantizer>,
-    /// Codec for *decoding* client uploads (must match the spec clients
-    /// encode with; attach via [`Server::with_client_codec`]).
+    /// Codec for *decoding* client uploads. Built from
+    /// `cfg.quant.client` (resolved per algorithm) at construction; a
+    /// mismatched upload fails loudly in [`Server::ingest`].
     quant_c: Box<dyn Quantizer>,
     // --- state ---------------------------------------------------------------
     d: usize,
@@ -90,6 +107,11 @@ pub struct Server {
 
 impl Server {
     /// Build from the experiment config and the initial model x^0.
+    ///
+    /// Both codecs are constructed here: `Q_s` from the algorithm preset
+    /// and `Q_c` from `cfg.quant.client` (identity for the
+    /// full-precision baselines) — a server is never left with a
+    /// default codec that silently mis-decodes uploads.
     pub fn new(cfg: &Config, x0: Vec<f32>, seed: u64) -> Result<Server> {
         let d = x0.len();
         // Algorithm presets (DESIGN.md S3-S5)
@@ -116,7 +138,7 @@ impl Server {
                 ),
             };
         let quant_s = parse_spec(&quant_s_spec)?;
-        let quant_c = parse_spec("none")?;
+        let quant_c = parse_spec(&client_codec_spec(&cfg.quant.client, cfg.fl.algorithm))?;
         Ok(Server {
             quant_c,
             k_buffer,
@@ -124,6 +146,7 @@ impl Server {
             beta: cfg.fl.server_momentum,
             staleness_scaling,
             hidden_state_mode,
+            shards: cfg.fl.shards.max(1),
             quant_s,
             d,
             x_hat: Arc::new(x0.clone()),
@@ -154,6 +177,11 @@ impl Server {
         self.k_buffer
     }
 
+    /// Aggregation shards S.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
     /// The state a newly sampled client copies (Algorithm 2 line 1):
     /// the shared hidden state in QAFeL/FedBuff mode, or the latest
     /// direct-quantized model in DirectQuant mode. Cheap Arc clone.
@@ -181,6 +209,28 @@ impl Server {
     /// `staleness` is the number of server steps taken since the client
     /// copied its snapshot (τ_n(t) in the paper).
     pub fn ingest(&mut self, update: &QuantizedMsg, staleness: u64) -> Result<ServerStep> {
+        // Fail loudly on codec mismatch before touching the buffer: a
+        // wrong-sized payload means the client encoded with a different
+        // quantizer than the server decodes with.
+        if update.d != self.d {
+            bail!(
+                "server: upload dimension {} != model dimension {}",
+                update.d,
+                self.d
+            );
+        }
+        let expect = self.quant_c.expected_bytes(self.d);
+        if update.wire_bytes() != expect {
+            bail!(
+                "server: upload payload is {} bytes but client codec '{}' \
+                 expects {} at d={} — client and server quantizer specs \
+                 disagree",
+                update.wire_bytes(),
+                self.quant_c.name(),
+                expect,
+                self.d
+            );
+        }
         self.comm.record_upload(update.wire_bytes());
         self.staleness_sum += staleness;
         self.staleness_max = self.staleness_max.max(staleness);
@@ -191,45 +241,86 @@ impl Server {
         } else {
             1.0
         };
-        // Dequantize straight into the aggregation buffer (no temp alloc),
-        // using the client codec attached via `with_client_codec`.
-        self.quant_c.accumulate(update, w, &mut self.buffer)?;
+        // Dequantize straight into the aggregation buffer (no temp
+        // alloc), shard-parallel when S > 1 and the codec is range-capable.
+        sharded::accumulate(self.quant_c.as_ref(), update, w, &mut self.buffer, self.shards)?;
         self.k_filled += 1;
 
         if self.k_filled < self.k_buffer {
             return Ok(ServerStep::Buffered);
         }
+        self.step().map(ServerStep::Stepped)
+    }
 
-        // ---- server step (buffer full) -------------------------------------
+    /// The server step proper (Algorithm 1 lines 9–16), executed when
+    /// the buffer fills. Stages run shard-parallel; see the module docs
+    /// for the determinism contract.
+    fn step(&mut self) -> Result<Broadcast> {
         let inv_k = 1.0 / self.k_buffer as f32;
-        // v <- beta * v + delta_bar ; x <- x + eta_g * v
-        for i in 0..self.d {
-            self.momentum[i] = self.beta * self.momentum[i] + self.buffer[i] * inv_k;
-            self.x[i] += self.eta_g * self.momentum[i];
+        let (beta, eta_g) = (self.beta, self.eta_g);
+        let span = span_for(self.d, self.shards, 1);
+
+        // v <- beta * v + delta_bar ; x <- x + eta_g * v ; delta_bar <- 0
+        // (purely elementwise: identical floats for any shard split)
+        if self.shards > 1 && span < self.d {
+            std::thread::scope(|s| {
+                for ((m, b), x) in self
+                    .momentum
+                    .chunks_mut(span)
+                    .zip(self.buffer.chunks_mut(span))
+                    .zip(self.x.chunks_mut(span))
+                {
+                    s.spawn(move || {
+                        for i in 0..m.len() {
+                            m[i] = beta * m[i] + b[i] * inv_k;
+                            x[i] += eta_g * m[i];
+                            b[i] = 0.0;
+                        }
+                    });
+                }
+            });
+        } else {
+            for i in 0..self.d {
+                self.momentum[i] = self.beta * self.momentum[i] + self.buffer[i] * inv_k;
+                self.x[i] += self.eta_g * self.momentum[i];
+            }
+            vecf::zero(&mut self.buffer);
         }
-        vecf::zero(&mut self.buffer);
         self.k_filled = 0;
         self.t += 1;
 
         let broadcast = if self.hidden_state_mode {
             // q^t = Q_s(x^{t+1} - x_hat^t); x_hat^{t+1} = x_hat^t + q^t
-            vecf::sub(&mut self.diff, &self.x, &self.x_hat);
-            let msg = self.quant_s.quantize(&self.diff, &mut self.rng);
+            if self.shards > 1 && span < self.d {
+                std::thread::scope(|s| {
+                    for ((out, a), b) in self
+                        .diff
+                        .chunks_mut(span)
+                        .zip(self.x.chunks(span))
+                        .zip(self.x_hat.chunks(span))
+                    {
+                        s.spawn(move || vecf::sub(out, a, b));
+                    }
+                });
+            } else {
+                vecf::sub(&mut self.diff, &self.x, &self.x_hat);
+            }
+            let msg = sharded::quantize(self.quant_s.as_ref(), &self.diff, &mut self.rng, self.shards);
             let bytes = msg.wire_bytes();
             self.comm.record_broadcast(bytes);
             let x_hat = Arc::make_mut(&mut self.x_hat);
-            self.quant_s.accumulate(&msg, 1.0, x_hat)?;
+            sharded::accumulate(self.quant_s.as_ref(), &msg, 1.0, x_hat, self.shards)?;
             Broadcast { t: self.t, bytes, msg, absolute: false }
         } else {
             // DirectQuant baseline: broadcast Q_s(x^{t+1}) itself
-            let msg = self.quant_s.quantize(&self.x, &mut self.rng);
+            let msg = sharded::quantize(self.quant_s.as_ref(), &self.x, &mut self.rng, self.shards);
             let bytes = msg.wire_bytes();
             self.comm.record_broadcast(bytes);
             let x_hat = Arc::make_mut(&mut self.x_hat);
-            self.quant_s.dequantize_into(&msg, x_hat)?;
+            sharded::dequantize_into(self.quant_s.as_ref(), &msg, x_hat, self.shards)?;
             Broadcast { t: self.t, bytes, msg, absolute: true }
         };
-        Ok(ServerStep::Stepped(broadcast))
+        Ok(broadcast)
     }
 
     /// Distance between the server model and the shared hidden state —
@@ -239,23 +330,28 @@ impl Server {
     }
 }
 
-// The client codec handle lives on the server for decoding; injected at
-// construction time (kept out of `new` above for readability).
+/// The client-codec spec a server must decode with, per algorithm
+/// (full-precision baselines always upload identity-coded deltas).
+fn client_codec_spec(client_spec: &str, algorithm: Algorithm) -> String {
+    match algorithm {
+        Algorithm::Qafel | Algorithm::DirectQuant => client_spec.to_string(),
+        Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
+    }
+}
+
 impl Server {
-    /// Attach the client-side quantizer spec used for *decoding* uploads.
-    /// Called by the builder; `Server::build` does this automatically.
+    /// Override the client-upload codec (kept for callers that decode
+    /// uploads produced under a different spec than `cfg.quant.client`;
+    /// `Server::new` already attaches the config's codec).
     pub fn with_client_codec(mut self, spec: &str, algorithm: Algorithm) -> Result<Server> {
-        let spec = match algorithm {
-            Algorithm::Qafel | Algorithm::DirectQuant => spec.to_string(),
-            Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
-        };
-        self.quant_c = parse_spec(&spec)?;
+        self.quant_c = parse_spec(&client_codec_spec(spec, algorithm))?;
         Ok(self)
     }
 
-    /// One-call constructor used everywhere: server + matching codecs.
+    /// One-call constructor, equivalent to [`Server::new`] (kept for API
+    /// compatibility from when `new` did not attach the client codec).
     pub fn build(cfg: &Config, x0: Vec<f32>, seed: u64) -> Result<Server> {
-        Server::new(cfg, x0, seed)?.with_client_codec(&cfg.quant.client, cfg.fl.algorithm)
+        Server::new(cfg, x0, seed)
     }
 }
 
@@ -380,5 +476,149 @@ mod tests {
         // snapshot is the *quantized* model, not the exact one
         let snap = s.client_snapshot();
         assert_ne!(snap.as_slice(), s.model());
+    }
+
+    #[test]
+    fn new_attaches_client_codec_from_config() {
+        // regression: Server::new used to hard-code quant_c = "none", so
+        // forgetting with_client_codec silently decoded qsgd uploads as
+        // raw f32 (or failed downstream with an unhelpful size error).
+        let mut cfg = cfg_with("qafel", 1);
+        cfg.quant.client = "qsgd:4".into();
+        cfg.quant.server = "qsgd:4".into();
+        let d = 256;
+        let mut s = Server::new(&cfg, vec![0.0; d], 1).unwrap();
+        let qc = parse_spec("qsgd:4").unwrap();
+        let mut rng = Prng::new(4);
+        let delta = vec![0.25f32; d];
+        let msg = qc.quantize(&delta, &mut rng);
+        assert!(matches!(s.ingest(&msg, 0).unwrap(), ServerStep::Stepped(_)));
+        // the decoded mean lands near the true delta, proving the qsgd
+        // codec (not identity) decoded the payload
+        let mean = s.model().iter().sum::<f32>() / d as f32;
+        assert!((mean - 0.25).abs() < 0.05, "decoded mean {mean}");
+    }
+
+    #[test]
+    fn mismatched_upload_fails_loudly() {
+        let mut cfg = cfg_with("qafel", 1);
+        cfg.quant.client = "qsgd:4".into();
+        let d = 256;
+        let mut s = Server::new(&cfg, vec![0.0; d], 1).unwrap();
+        // client "accidentally" sends full precision
+        let full = parse_spec("none").unwrap();
+        let mut rng = Prng::new(5);
+        let msg = full.quantize(&vec![1.0f32; d], &mut rng);
+        let err = s.ingest(&msg, 0).unwrap_err().to_string();
+        assert!(err.contains("qsgd:4"), "unhelpful error: {err}");
+        // truncated payload of the right codec also fails loudly
+        let qc = parse_spec("qsgd:4").unwrap();
+        let mut msg = qc.quantize(&vec![1.0f32; d], &mut rng);
+        msg.payload.pop();
+        assert!(s.ingest(&msg, 0).is_err());
+        // wrong dimension is rejected before decode
+        let msg = qc.quantize(&vec![1.0f32; d / 2], &mut rng);
+        assert!(s.ingest(&msg, 0).is_err());
+        // nothing was recorded for the rejected uploads
+        assert_eq!(s.comm.uploads, 0);
+    }
+
+    #[test]
+    fn sharded_steps_bit_identical_across_shard_counts() {
+        // The determinism contract of the sharded pipeline: model,
+        // hidden state and broadcast bytes are identical for every S.
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "qsgd:4".into();
+        cfg.quant.server = "qsgd:4".into();
+        cfg.fl.server_momentum = 0.3;
+        let d = 3 * 128 + 57; // ragged tail
+        let mk = |shards: usize| {
+            let mut c = cfg.clone();
+            c.fl.shards = shards;
+            Server::build(&c, vec![0.0; d], 7).unwrap()
+        };
+        for shards in [2usize, 3, 8] {
+            let mut reference = mk(1);
+            let mut s = mk(shards);
+            assert_eq!(s.shards(), shards);
+            let qc = parse_spec("qsgd:4").unwrap();
+            let mut rng_a = Prng::new(11);
+            let mut rng_b = Prng::new(11);
+            for round in 0..12u64 {
+                let delta: Vec<f32> = (0..d).map(|i| ((i as f32) + round as f32).sin()).collect();
+                let msg_a = qc.quantize(&delta, &mut rng_a);
+                let msg_b = qc.quantize(&delta, &mut rng_b);
+                let a = reference.ingest(&msg_a, round % 4).unwrap();
+                let b = s.ingest(&msg_b, round % 4).unwrap();
+                match (a, b) {
+                    (ServerStep::Stepped(ba), ServerStep::Stepped(bb)) => {
+                        assert_eq!(ba.msg.payload, bb.msg.payload, "S={shards} broadcast");
+                    }
+                    (ServerStep::Buffered, ServerStep::Buffered) => {}
+                    _ => panic!("S={shards}: step/buffer divergence"),
+                }
+            }
+            assert_eq!(reference.model(), s.model(), "S={shards} model");
+            assert_eq!(
+                reference.client_snapshot().as_slice(),
+                s.client_snapshot().as_slice(),
+                "S={shards} hidden state"
+            );
+        }
+    }
+
+    #[test]
+    fn golden_broadcast_matches_prerefactor_reference() {
+        // Replays the pre-refactor Algorithm 1 step with plain trait
+        // calls (sequential accumulate, momentum loop, trait-level
+        // quantize on the server rng stream) and asserts the sharded
+        // server emits byte-identical broadcasts from the same inputs.
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:4".into();
+        cfg.fl.server_momentum = 0.3;
+        cfg.fl.shards = 4;
+        let d = 2 * 128 + 33;
+        let seed = 42u64;
+        let mut server = Server::build(&cfg, vec![0.0; d], seed).unwrap();
+
+        // reference state, exactly as the pre-refactor server kept it
+        let qc = parse_spec("qsgd:8").unwrap();
+        let qs = parse_spec("qsgd:4").unwrap();
+        let mut ref_rng = Prng::new(seed).stream("server-quant");
+        let mut ref_x = vec![0.0f32; d];
+        let mut ref_xh = vec![0.0f32; d];
+        let mut ref_v = vec![0.0f32; d];
+        let mut ref_buf = vec![0.0f32; d];
+
+        let mut up_rng = Prng::new(9);
+        for round in 0..10u64 {
+            let delta: Vec<f32> = (0..d).map(|i| (i as f32 * 0.01 + round as f32).cos()).collect();
+            let msg = qc.quantize(&delta, &mut up_rng);
+            qc.accumulate(&msg, 1.0, &mut ref_buf).unwrap();
+            let stepped = server.ingest(&msg, 0).unwrap();
+            if (round + 1) % 2 != 0 {
+                assert!(matches!(stepped, ServerStep::Buffered));
+                continue;
+            }
+            // pre-refactor step
+            for i in 0..d {
+                ref_v[i] = 0.3 * ref_v[i] + ref_buf[i] * 0.5;
+                ref_x[i] += ref_v[i];
+            }
+            crate::util::vecf::zero(&mut ref_buf);
+            let mut diff = vec![0.0f32; d];
+            crate::util::vecf::sub(&mut diff, &ref_x, &ref_xh);
+            let ref_msg = qs.quantize(&diff, &mut ref_rng);
+            qs.accumulate(&ref_msg, 1.0, &mut ref_xh).unwrap();
+            match stepped {
+                ServerStep::Stepped(b) => {
+                    assert_eq!(b.msg.payload, ref_msg.payload, "round {round}");
+                }
+                ServerStep::Buffered => panic!("expected step at round {round}"),
+            }
+            assert_eq!(server.model(), &ref_x[..], "round {round} model");
+            assert_eq!(server.client_snapshot().as_slice(), &ref_xh[..], "round {round} x_hat");
+        }
     }
 }

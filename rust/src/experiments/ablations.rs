@@ -125,7 +125,9 @@ pub fn non_broadcast_cost(
             msg: QuantizedMsg { payload: vec![0; inc_bytes], d },
             absolute: false,
         };
-        log.push(b, |_| {})?;
+        // advance the reference hidden state through the real (sharded)
+        // decode path — a zero payload decodes to a zero increment
+        log.push_quantized(b, qs.as_ref(), base.fl.shards)?;
     }
     let mean_catch_up = log.bytes_sent as f64 / downloads.max(1) as f64;
     Ok((mean_catch_up, full_bytes))

@@ -10,6 +10,10 @@
 //!   state ([`coordinator`]), plus the event-driven simulator ([`sim`]),
 //!   a real threaded/TCP runtime ([`net`]), quantizers with exact wire
 //!   codecs ([`quant`]), and the experiment harness ([`experiments`]).
+//!   The server step runs as a **sharded aggregation pipeline**
+//!   (`cfg.fl.shards`, DESIGN_SHARDING.md): accumulate / momentum /
+//!   diff / `Q_s` encode execute shard-parallel over bucket-aligned
+//!   ranges with bit-identical broadcasts for every shard count.
 //! * **L2** — the LEAF-CelebA CNN fwd/bwd in JAX (`python/compile/model.py`),
 //!   AOT-lowered once to HLO text and executed from Rust via PJRT
 //!   ([`runtime`]). Python never runs on the request path.

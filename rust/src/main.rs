@@ -276,6 +276,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         cfg.seeds[0],
     ));
     w.round_delay = std::time::Duration::from_millis(delay_ms);
+    w.shards = cfg.fl.shards;
     let report = w.run(&addr)?;
     println!("[worker {}] {} uploads, replica t={}", report.worker_id, report.uploads,
              report.replica_t);

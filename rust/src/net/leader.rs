@@ -45,8 +45,14 @@ impl Leader {
     /// Like [`Leader::run`] with a pre-bound listener (lets tests use an
     /// ephemeral port).
     pub fn run_on(&self, listener: TcpListener, n_workers: usize) -> Result<LeaderReport> {
+        // cfg.fl.shards > 1 turns on the shard-parallel aggregation
+        // pipeline inside the server; the wire protocol is unchanged
+        // (broadcast bytes are bit-identical for every shard count).
         let mut server = Server::build(&self.cfg, self.x0.clone(), self.seed)?;
         let d = server.d();
+        if server.shards() > 1 {
+            tracing_log(&format!("leader: sharded aggregation, S={}", server.shards()));
+        }
 
         // accept all workers, send Join, spawn reader threads
         let (tx, rx) = mpsc::channel::<(u32, Option<Message>)>();

@@ -23,11 +23,14 @@ pub struct Worker<B: Backend> {
     backend: B,
     /// Sleep this long between rounds to emulate slow clients (tests 0).
     pub round_delay: std::time::Duration,
+    /// Shard-parallel broadcast decode (mirrors the server's
+    /// `cfg.fl.shards`; worth > 1 only for multi-MB models).
+    pub shards: usize,
 }
 
 impl<B: Backend> Worker<B> {
     pub fn new(backend: B) -> Worker<B> {
-        Worker { backend, round_delay: std::time::Duration::ZERO }
+        Worker { backend, round_delay: std::time::Duration::ZERO, shards: 1 }
     }
 
     /// Connect to the leader at `addr` and train until Shutdown.
@@ -77,9 +80,13 @@ impl<B: Backend> Worker<B> {
                             bail!("worker {worker_id}: broadcast gap {replica_t} -> {t}");
                         }
                         if absolute {
-                            quant_s.dequantize_into(&qmsg, &mut x_hat)?;
+                            crate::quant::sharded::dequantize_into(
+                                quant_s.as_ref(), &qmsg, &mut x_hat, self.shards,
+                            )?;
                         } else {
-                            quant_s.accumulate(&qmsg, 1.0, &mut x_hat)?;
+                            crate::quant::sharded::accumulate(
+                                quant_s.as_ref(), &qmsg, 1.0, &mut x_hat, self.shards,
+                            )?;
                         }
                         replica_t = t;
                     }

@@ -4,7 +4,7 @@
 //! this is the 117.128 kB/update FedBuff row in Tables 1–2 (ours:
 //! 4 * 29,474 = 117.896 kB).
 
-use super::{QuantizedMsg, Quantizer};
+use super::{QuantizedMsg, Quantizer, RangeCodec};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
 
@@ -60,6 +60,62 @@ impl Quantizer for Identity {
 
     fn delta(&self, _d: usize) -> f64 {
         1.0 // exact: E||Q(x)-x||^2 = 0
+    }
+
+    fn range_codec(&self) -> Option<&dyn RangeCodec> {
+        Some(self)
+    }
+}
+
+impl RangeCodec for Identity {
+    fn alignment(&self) -> usize {
+        1 // 4 whole bytes per coordinate: every seam is byte-aligned
+    }
+
+    fn noise_len(&self, _d: usize) -> usize {
+        0 // deterministic codec
+    }
+
+    fn encode_range(&self, x: &[f32], offset: usize, d: usize, _noise: &[f32]) -> (Vec<u8>, Vec<u8>) {
+        assert!(offset + x.len() <= d, "identity range out of bounds");
+        let mut body = Vec::with_capacity(x.len() * 4);
+        for v in x {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        (Vec::new(), body)
+    }
+
+    fn accumulate_range(
+        &self,
+        msg: &QuantizedMsg,
+        weight: f32,
+        acc: &mut [f32],
+        offset: usize,
+    ) -> Result<()> {
+        if offset + acc.len() > msg.d || msg.payload.len() != msg.d * 4 {
+            bail!(
+                "identity: bad range {offset}..{} for d={} ({} payload bytes)",
+                offset + acc.len(),
+                msg.d,
+                msg.payload.len()
+            );
+        }
+        let raw = &msg.payload[offset * 4..(offset + acc.len()) * 4];
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            acc[i] += weight * f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+
+    fn dequantize_range(&self, msg: &QuantizedMsg, out: &mut [f32], offset: usize) -> Result<()> {
+        if offset + out.len() > msg.d || msg.payload.len() != msg.d * 4 {
+            bail!("identity: bad range {offset}..{} for d={}", offset + out.len(), msg.d);
+        }
+        let raw = &msg.payload[offset * 4..(offset + out.len()) * 4];
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
     }
 }
 

@@ -79,6 +79,187 @@ pub trait Quantizer: Send + Sync {
     /// `d` (may be <= 0 for coarse qsgd, where the bound constant
     /// exceeds 1; see Lemma 3.1 of Alistarh et al. 2017).
     fn delta(&self, d: usize) -> f64;
+
+    /// Range-oriented view of this codec, if it supports one (see
+    /// [`RangeCodec`]). Coordinate-local codecs (qsgd, identity) return
+    /// `Some`; codecs with global structure (top_k's selection, rand_k's
+    /// shared index seed) return `None` and take the sequential path in
+    /// the sharded server.
+    fn range_codec(&self) -> Option<&dyn RangeCodec> {
+        None
+    }
+}
+
+/// Contiguous-range encode/decode for shard-parallel aggregation
+/// (DESIGN_SHARDING.md).
+///
+/// A range codec splits the wire format of a `d`-dimensional message
+/// into a per-range `(header, body)` pair such that
+///
+/// ```text
+/// payload(x[0..d]) == concat(headers in range order)
+///                  ++ concat(bodies  in range order)
+/// ```
+///
+/// **byte-for-byte**, provided every range starts at a multiple of
+/// [`RangeCodec::alignment`] (the last range may end ragged at `d`).
+/// For qsgd this is the bucket structure: the header holds the
+/// per-bucket f32 norms and the body the bit-packed levels, so
+/// bucket-aligned ranges make per-bucket norms shard-local and keep the
+/// packed body byte-aligned at every shard seam.
+///
+/// Randomness is externalized: [`RangeCodec::noise_len`] says how many
+/// uniform f32 draws the full-vector [`Quantizer::quantize`] consumes,
+/// and the caller passes the *same* draws (in coordinate order) to
+/// every `encode_range` call — this is what makes the sharded encoding
+/// bit-identical to the sequential one for every shard count.
+pub trait RangeCodec: Send + Sync {
+    /// Shard boundaries must be multiples of this many coordinates.
+    fn alignment(&self) -> usize;
+
+    /// Number of uniform f32 draws `quantize` consumes for dimension
+    /// `d`, in coordinate order (0 for deterministic codecs).
+    fn noise_len(&self, d: usize) -> usize;
+
+    /// Encode coordinates `[offset, offset + x.len())` of a `d`-dim
+    /// vector into `(header, body)`. `noise` is the full `noise_len(d)`
+    /// draw vector; implementations index it at absolute coordinates.
+    fn encode_range(&self, x: &[f32], offset: usize, d: usize, noise: &[f32]) -> (Vec<u8>, Vec<u8>);
+
+    /// Decode coordinates `[offset, offset + acc.len())` of `msg` and
+    /// accumulate `weight * Q(x)[i]` into `acc`.
+    fn accumulate_range(
+        &self,
+        msg: &QuantizedMsg,
+        weight: f32,
+        acc: &mut [f32],
+        offset: usize,
+    ) -> Result<()>;
+
+    /// Decode coordinates `[offset, offset + out.len())` of `msg` into
+    /// `out` (overwrite).
+    fn dequantize_range(&self, msg: &QuantizedMsg, out: &mut [f32], offset: usize) -> Result<()>;
+}
+
+/// Shard-parallel executions of the codec hot paths, used by the
+/// coordinator's sharded aggregation pipeline. Every function is
+/// bit-identical to its sequential counterpart for **every** shard
+/// count (including the PRNG stream consumed), and falls back to the
+/// sequential trait call when the codec has no range view or the work
+/// doesn't split.
+pub mod sharded {
+    use super::{QuantizedMsg, Quantizer, RangeCodec};
+    use crate::util::prng::Prng;
+    use crate::util::shard::span_for;
+    use anyhow::Result;
+
+    /// Quantize `x`, splitting encode work across up to `shards`
+    /// threads. Consumes exactly the same `rng` draws as
+    /// `q.quantize(x, rng)` and produces the same bytes.
+    pub fn quantize(q: &dyn Quantizer, x: &[f32], rng: &mut Prng, shards: usize) -> QuantizedMsg {
+        let d = x.len();
+        let rc = match q.range_codec() {
+            Some(rc) if shards > 1 && d > 0 => rc,
+            _ => return q.quantize(x, rng),
+        };
+        let span = span_for(d, shards, rc.alignment());
+        if span >= d {
+            return q.quantize(x, rng);
+        }
+        // Replicate quantize's sequential draw order exactly, then hand
+        // each shard a read-only view of the draws.
+        let mut noise = vec![0.0f32; rc.noise_len(d)];
+        for v in &mut noise {
+            *v = rng.f32();
+        }
+        let noise_ref: &[f32] = &noise;
+        let parts: Vec<(Vec<u8>, Vec<u8>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = x
+                .chunks(span)
+                .enumerate()
+                .map(|(i, chunk)| s.spawn(move || rc.encode_range(chunk, i * span, d, noise_ref)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+        });
+        let mut payload = Vec::with_capacity(q.expected_bytes(d));
+        for (header, _) in &parts {
+            payload.extend_from_slice(header);
+        }
+        for (_, body) in &parts {
+            payload.extend_from_slice(body);
+        }
+        QuantizedMsg { payload, d }
+    }
+
+    /// Decode `msg` and accumulate `weight * Q(x)` into `acc` across up
+    /// to `shards` threads.
+    pub fn accumulate(
+        q: &dyn Quantizer,
+        msg: &QuantizedMsg,
+        weight: f32,
+        acc: &mut [f32],
+        shards: usize,
+    ) -> Result<()> {
+        let d = acc.len();
+        if msg.d != d {
+            // per-shard range checks only see prefixes; enforce the whole-
+            // vector contract here, like the sequential decoders do
+            anyhow::bail!("sharded: dimension mismatch (msg {}, acc {d})", msg.d);
+        }
+        let rc = match q.range_codec() {
+            Some(rc) if shards > 1 && d > 0 => rc,
+            _ => return q.accumulate(msg, weight, acc),
+        };
+        let span = span_for(d, shards, rc.alignment());
+        if span >= d {
+            return q.accumulate(msg, weight, acc);
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = acc
+                .chunks_mut(span)
+                .enumerate()
+                .map(|(i, chunk)| s.spawn(move || rc.accumulate_range(msg, weight, chunk, i * span)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    /// Decode `msg` into `out` (overwrite) across up to `shards` threads.
+    pub fn dequantize_into(
+        q: &dyn Quantizer,
+        msg: &QuantizedMsg,
+        out: &mut [f32],
+        shards: usize,
+    ) -> Result<()> {
+        let d = out.len();
+        if msg.d != d {
+            anyhow::bail!("sharded: dimension mismatch (msg {}, out {d})", msg.d);
+        }
+        let rc = match q.range_codec() {
+            Some(rc) if shards > 1 && d > 0 => rc,
+            _ => return q.dequantize_into(msg, out),
+        };
+        let span = span_for(d, shards, rc.alignment());
+        if span >= d {
+            return q.dequantize_into(msg, out);
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = out
+                .chunks_mut(span)
+                .enumerate()
+                .map(|(i, chunk)| s.spawn(move || rc.dequantize_range(msg, chunk, i * span)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
 }
 
 /// Parse a quantizer spec string:

@@ -25,8 +25,17 @@
 //! same math as the L1 Pallas kernel (`python/compile/kernels/qsgd.py`);
 //! `encode_levels` lets the PJRT path feed kernel-produced levels into
 //! this codec.
+//!
+//! **Sharding:** the bucket structure makes this codec a [`RangeCodec`]:
+//! any bucket-aligned contiguous range of coordinates can be encoded or
+//! decoded independently (per-bucket norms are range-local, and the
+//! bit-packed body is byte-aligned at every bucket-aligned seam whose
+//! `offset * bits` is a whole number of bytes — see
+//! [`RangeCodec::alignment`]). The full-vector [`Quantizer`] entry
+//! points are thin wrappers over the range primitives, so the sharded
+//! and sequential paths share one implementation and are bit-identical.
 
-use super::{QuantizedMsg, Quantizer};
+use super::{QuantizedMsg, Quantizer, RangeCodec};
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
@@ -117,6 +126,188 @@ impl Qsgd {
         }
         Ok((norms, levels))
     }
+
+    /// Validate a payload/range pair for the range decode paths.
+    fn check_range(&self, msg: &QuantizedMsg, len: usize, offset: usize) -> Result<()> {
+        if offset % self.bucket != 0 || (offset * self.bits as usize) % 8 != 0 {
+            bail!(
+                "qsgd: shard offset {offset} not aligned (bucket {}, {} bits)",
+                self.bucket,
+                self.bits
+            );
+        }
+        if offset + len > msg.d {
+            bail!("qsgd: range {offset}..{} exceeds d={}", offset + len, msg.d);
+        }
+        if msg.payload.len() != self.expected_bytes(msg.d) {
+            bail!(
+                "qsgd: payload size mismatch (got {} bytes, want {} for d={})",
+                msg.payload.len(),
+                self.expected_bytes(msg.d),
+                msg.d
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-bucket `scale * norm` factors for the local buckets of a
+    /// range (`offset` bucket-aligned, `len` coordinates).
+    fn range_units(&self, msg: &QuantizedMsg, scale: f32, len: usize, offset: usize) -> Vec<f32> {
+        let first_bucket = offset / self.bucket;
+        let local_nb = len.div_ceil(self.bucket);
+        let mut units = Vec::with_capacity(local_nb);
+        for b in 0..local_nb {
+            let off = 4 * (first_bucket + b);
+            let norm = f32::from_le_bytes(msg.payload[off..off + 4].try_into().unwrap());
+            units.push(scale * norm / self.s as f32);
+        }
+        units
+    }
+
+    /// Shared decode-and-apply over a range. `APPLY_ADD` selects
+    /// accumulate (`acc += unit * level`) vs overwrite (`out = ...`).
+    ///
+    /// §Perf: byte-aligned fast paths — the generic BitReader loop
+    /// costs ~350 us at d = 29,474; these run in ~30 us (see
+    /// EXPERIMENTS.md §Perf L3 iteration log).
+    fn apply_range<const APPLY_ADD: bool>(
+        &self,
+        msg: &QuantizedMsg,
+        scale: f32,
+        dst: &mut [f32],
+        offset: usize,
+    ) -> Result<()> {
+        self.check_range(msg, dst.len(), offset)?;
+        let units = self.range_units(msg, scale, dst.len(), offset);
+        let nb = self.n_buckets(msg.d);
+        let body = &msg.payload[4 * nb..];
+        let g = self.bucket;
+        macro_rules! emit {
+            ($a:expr, $signed:expr, $unit:expr) => {
+                if APPLY_ADD {
+                    *$a += $unit * $signed;
+                } else {
+                    *$a = $unit * $signed;
+                }
+            };
+        }
+        match self.bits {
+            8 => {
+                // chunk by bucket: hoists the unit lookup out of the
+                // inner loop and keeps it branch-free
+                for (b, chunk) in dst.chunks_mut(g).enumerate() {
+                    let unit = units[b];
+                    let base = offset + b * g;
+                    for (j, a) in chunk.iter_mut().enumerate() {
+                        let raw = body[base + j];
+                        let mag = (raw >> 1) as f32;
+                        let signed = if raw & 1 == 1 { -mag } else { mag };
+                        emit!(a, signed, unit);
+                    }
+                }
+            }
+            4 => {
+                for (b, chunk) in dst.chunks_mut(g).enumerate() {
+                    let unit = units[b];
+                    let base = offset + b * g;
+                    for (j, a) in chunk.iter_mut().enumerate() {
+                        let i = base + j;
+                        let byte = body[i >> 1];
+                        let raw = (byte >> ((i & 1) * 4)) & 0xF;
+                        let mag = (raw >> 1) as f32;
+                        let signed = if raw & 1 == 1 { -mag } else { mag };
+                        emit!(a, signed, unit);
+                    }
+                }
+            }
+            2 => {
+                for (b, chunk) in dst.chunks_mut(g).enumerate() {
+                    let unit = units[b];
+                    let base = offset + b * g;
+                    for (j, a) in chunk.iter_mut().enumerate() {
+                        let i = base + j;
+                        let byte = body[i >> 2];
+                        let raw = (byte >> ((i & 3) * 2)) & 0b11;
+                        let mag = (raw >> 1) as f32;
+                        let signed = if raw & 1 == 1 { -mag } else { mag };
+                        emit!(a, signed, unit);
+                    }
+                }
+            }
+            _ => {
+                let mut r = BitReader::new(&body[offset * self.bits as usize / 8..]);
+                for (j, a) in dst.iter_mut().enumerate() {
+                    let raw = match r.read(self.bits) {
+                        Some(v) => v,
+                        None => bail!("qsgd: truncated payload at coord {}", offset + j),
+                    };
+                    let mag = (raw >> 1) as f32;
+                    let signed = if raw & 1 == 1 { -mag } else { mag };
+                    let unit = units[j / g];
+                    emit!(a, signed, unit);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl RangeCodec for Qsgd {
+    fn alignment(&self) -> usize {
+        // Smallest multiple of the bucket whose bit-packed body is a
+        // whole number of bytes (k <= 8 always terminates).
+        let mut k = 1usize;
+        while (k * self.bucket * self.bits as usize) % 8 != 0 {
+            k += 1;
+        }
+        k * self.bucket
+    }
+
+    fn noise_len(&self, d: usize) -> usize {
+        d
+    }
+
+    fn encode_range(&self, x: &[f32], offset: usize, d: usize, noise: &[f32]) -> (Vec<u8>, Vec<u8>) {
+        let g = self.bucket;
+        assert_eq!(offset % g, 0, "qsgd shard must start on a bucket boundary");
+        assert_eq!((offset * self.bits as usize) % 8, 0, "qsgd shard body must be byte-aligned");
+        assert!(offset + x.len() <= d && noise.len() == d, "qsgd range out of bounds");
+        let nb = x.len().div_ceil(g);
+        // per-bucket norms (header) — identical math to the sequential
+        // encoder: norm in f64, scale = s / norm computed once per bucket
+        let mut header = Vec::with_capacity(nb * 4);
+        let mut scales = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let lo = b * g;
+            let hi = (lo + g).min(x.len());
+            let norm = crate::util::vecf::norm2(&x[lo..hi]) as f32;
+            header.extend_from_slice(&norm.to_le_bytes());
+            scales.push(if norm > 0.0 { self.s as f32 / norm } else { 0.0 });
+        }
+        let mut w = BitWriter::with_capacity(x.len() * self.bits as usize);
+        for (j, &v) in x.iter().enumerate() {
+            let a = v.abs() * scales[j / g];
+            // floor(a + u): ceil with prob frac(a), floor otherwise
+            let level = ((a + noise[offset + j]).floor() as u64).min(self.s as u64);
+            let sign = (v < 0.0) as u64;
+            w.write(sign | (level << 1), self.bits);
+        }
+        (header, w.into_bytes())
+    }
+
+    fn accumulate_range(
+        &self,
+        msg: &QuantizedMsg,
+        weight: f32,
+        acc: &mut [f32],
+        offset: usize,
+    ) -> Result<()> {
+        self.apply_range::<true>(msg, weight, acc, offset)
+    }
+
+    fn dequantize_range(&self, msg: &QuantizedMsg, out: &mut [f32], offset: usize) -> Result<()> {
+        self.apply_range::<false>(msg, 1.0, out, offset)
+    }
 }
 
 impl Quantizer for Qsgd {
@@ -129,10 +320,15 @@ impl Quantizer for Qsgd {
     }
 
     fn quantize(&self, x: &[f32], rng: &mut Prng) -> QuantizedMsg {
+        // Sequential encoder: draws one uniform per coordinate inline, in
+        // coordinate order — no noise-vector allocation on the client /
+        // S=1 hot path. The draw order and arithmetic are the wire
+        // contract shared with `encode_range` (which takes the same
+        // draws pre-materialized); the range-stitch property tests pin
+        // the two paths to byte equality.
         let d = x.len();
         let nb = self.n_buckets(d);
         let mut w = BitWriter::with_capacity(nb * 32 + d * self.bits as usize);
-        // per-bucket norms first (header), then all levels
         let mut scales = Vec::with_capacity(nb);
         for b in 0..nb {
             let lo = b * self.bucket;
@@ -155,96 +351,14 @@ impl Quantizer for Qsgd {
         if msg.d != out.len() {
             bail!("qsgd: dimension mismatch (msg {}, out {})", msg.d, out.len());
         }
-        if msg.payload.len() != self.expected_bytes(msg.d) {
-            bail!("qsgd: payload size mismatch");
-        }
-        let nb = self.n_buckets(msg.d);
-        let mut r = BitReader::new(&msg.payload);
-        let mut units = Vec::with_capacity(nb);
-        for _ in 0..nb {
-            units.push(r.read_f32().unwrap() / self.s as f32);
-        }
-        for (i, o) in out.iter_mut().enumerate() {
-            let raw = r.read(self.bits).unwrap();
-            let mag = (raw >> 1) as f32;
-            let signed = if raw & 1 == 1 { -mag } else { mag };
-            *o = units[i / self.bucket] * signed;
-        }
-        Ok(())
+        self.dequantize_range(msg, out, 0)
     }
 
     fn accumulate(&self, msg: &QuantizedMsg, weight: f32, acc: &mut [f32]) -> Result<()> {
         if msg.d != acc.len() {
             bail!("qsgd: dimension mismatch");
         }
-        if msg.payload.len() != self.expected_bytes(msg.d) {
-            bail!("qsgd: payload size mismatch");
-        }
-        let nb = self.n_buckets(msg.d);
-        let mut units = Vec::with_capacity(nb);
-        for b in 0..nb {
-            let off = 4 * b;
-            let norm = f32::from_le_bytes(msg.payload[off..off + 4].try_into().unwrap());
-            units.push(weight * norm / self.s as f32);
-        }
-        let body = &msg.payload[4 * nb..];
-        // §Perf: byte-aligned fast paths — the generic BitReader loop
-        // costs ~350 us at d = 29,474; these run in ~30 us (see
-        // EXPERIMENTS.md §Perf L3 iteration log).
-        match self.bits {
-            8 => {
-                // chunk by bucket: hoists the unit lookup out of the
-                // inner loop and keeps it branch-free
-                for (b, chunk) in acc.chunks_mut(self.bucket).enumerate() {
-                    let unit = units[b];
-                    let base = b * self.bucket;
-                    for (j, a) in chunk.iter_mut().enumerate() {
-                        let raw = body[base + j];
-                        let mag = (raw >> 1) as f32;
-                        let signed = if raw & 1 == 1 { -mag } else { mag };
-                        *a += unit * signed;
-                    }
-                }
-            }
-            4 => {
-                for (b, chunk) in acc.chunks_mut(self.bucket).enumerate() {
-                    let unit = units[b];
-                    let base = b * self.bucket;
-                    for (j, a) in chunk.iter_mut().enumerate() {
-                        let i = base + j;
-                        let byte = body[i >> 1];
-                        let raw = (byte >> ((i & 1) * 4)) & 0xF;
-                        let mag = (raw >> 1) as f32;
-                        let signed = if raw & 1 == 1 { -mag } else { mag };
-                        *a += unit * signed;
-                    }
-                }
-            }
-            2 => {
-                for (b, chunk) in acc.chunks_mut(self.bucket).enumerate() {
-                    let unit = units[b];
-                    let base = b * self.bucket;
-                    for (j, a) in chunk.iter_mut().enumerate() {
-                        let i = base + j;
-                        let byte = body[i >> 2];
-                        let raw = (byte >> ((i & 3) * 2)) & 0b11;
-                        let mag = (raw >> 1) as f32;
-                        let signed = if raw & 1 == 1 { -mag } else { mag };
-                        *a += unit * signed;
-                    }
-                }
-            }
-            _ => {
-                let mut r = BitReader::new(body);
-                for (i, a) in acc.iter_mut().enumerate() {
-                    let raw = r.read(self.bits).unwrap();
-                    let mag = (raw >> 1) as f32;
-                    let signed = if raw & 1 == 1 { -mag } else { mag };
-                    *a += units[i / self.bucket] * signed;
-                }
-            }
-        }
-        Ok(())
+        self.accumulate_range(msg, weight, acc, 0)
     }
 
     fn is_unbiased(&self) -> bool {
@@ -261,6 +375,10 @@ impl Quantizer for Qsgd {
         let s = self.s as f64;
         let g = self.bucket.min(d) as f64;
         1.0 - (2.0 * g / (s * s)).min((2.0 * g).sqrt() / s)
+    }
+
+    fn range_codec(&self) -> Option<&dyn RangeCodec> {
+        Some(self)
     }
 }
 
@@ -404,8 +522,7 @@ mod tests {
         let msg = q.quantize(&x, &mut rng_a);
         let (norms, levels) = q.decode_levels(&msg).unwrap();
         assert_eq!(norms.len(), 1);
-        let mut rng_b = Prng::new(99);
-        let _ = rng_b; // norms are written before levels; same draw order
+        // norms are written before levels; same draw order
         let mut rng_b = Prng::new(99);
         let s = q.levels() as f32;
         for (i, &v) in x.iter().enumerate() {
@@ -422,5 +539,100 @@ mod tests {
         assert!(Qsgd::new(17).is_err());
         assert!(Qsgd::with_bucket(4, 0).is_err());
         assert!(Qsgd::new(2).is_ok());
+    }
+
+    #[test]
+    fn sixteen_bit_symbols_roundtrip() {
+        // 16-bit qsgd: s = 32767 levels, symbols span exactly 2 bytes —
+        // exercises the generic BitReader/Writer path at its widest
+        // symbol and the range decode at a byte-aligned offset.
+        let mut rng = Prng::new(21);
+        let q = Qsgd::new(16).unwrap();
+        assert_eq!(q.levels(), 32_767);
+        let d = 300;
+        let x: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let msg = q.quantize(&x, &mut rng);
+        assert_eq!(msg.wire_bytes(), q.expected_bytes(d));
+        let deq = q.dequantize(&msg).unwrap();
+        // 16-bit is near-lossless on unit-scale data
+        let rel = vecf::dist2_sq(&deq, &x) / vecf::norm2(&x).powi(2);
+        assert!(rel < 1e-6, "relative err {rel}");
+        let (_, levels) = q.decode_levels(&msg).unwrap();
+        assert!(levels.iter().all(|l| l.unsigned_abs() <= q.levels()));
+        // ranged decode agrees with the full decode
+        let mut tail = vec![0.0f32; d - 128];
+        q.dequantize_range(&msg, &mut tail, 128).unwrap();
+        assert_eq!(&deq[128..], &tail[..]);
+    }
+
+    #[test]
+    fn truncated_payloads_error_loudly() {
+        let mut rng = Prng::new(22);
+        for bits in [2u32, 4, 8, 13, 16] {
+            let q = Qsgd::new(bits).unwrap();
+            let x: Vec<f32> = (0..200).map(|_| rng.f32() - 0.5).collect();
+            let mut msg = q.quantize(&x, &mut rng);
+            msg.payload.truncate(msg.payload.len() - 1);
+            let mut out = vec![0.0f32; 200];
+            assert!(q.dequantize_into(&msg, &mut out).is_err(), "{bits}-bit dequantize");
+            assert!(q.accumulate(&msg, 1.0, &mut out).is_err(), "{bits}-bit accumulate");
+            assert!(q.decode_levels(&msg).is_err(), "{bits}-bit decode_levels");
+            // oversized payloads are rejected too
+            msg.payload.extend_from_slice(&[0, 0]);
+            assert!(q.dequantize_into(&msg, &mut out).is_err(), "{bits}-bit oversized");
+        }
+    }
+
+    #[test]
+    fn range_encode_stitches_to_full_payload() {
+        // concat(headers) ++ concat(bodies) over aligned ranges must be
+        // byte-identical to the sequential quantize for every bits
+        // setting, including ragged tails.
+        let mut rng = Prng::new(23);
+        for bits in [2u32, 3, 4, 8, 12, 16] {
+            let q = Qsgd::new(bits).unwrap();
+            let d = 5 * 128 + 77; // ragged tail
+            let x: Vec<f32> = (0..d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let mut noise_rng = Prng::new(1000 + bits as u64);
+            let full = {
+                let mut r = noise_rng.clone();
+                q.quantize(&x, &mut r)
+            };
+            let mut noise = vec![0.0f32; d];
+            for v in &mut noise {
+                *v = noise_rng.f32();
+            }
+            let align = q.alignment();
+            assert_eq!(align % q.bucket(), 0);
+            let span = 2 * align; // 2 ranges of 2 buckets + tail
+            let mut headers = Vec::new();
+            let mut bodies = Vec::new();
+            for (i, chunk) in x.chunks(span).enumerate() {
+                let (h, b) = q.encode_range(chunk, i * span, d, &noise);
+                headers.extend_from_slice(&h);
+                bodies.extend_from_slice(&b);
+            }
+            headers.extend_from_slice(&bodies);
+            assert_eq!(headers, full.payload, "{bits}-bit stitch mismatch");
+        }
+    }
+
+    #[test]
+    fn range_accumulate_matches_full_accumulate() {
+        let mut rng = Prng::new(24);
+        for bits in [2u32, 4, 8, 11] {
+            let q = Qsgd::new(bits).unwrap();
+            let d = 4 * 128 + 19;
+            let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+            let msg = q.quantize(&x, &mut rng);
+            let mut full = vec![0.5f32; d];
+            q.accumulate(&msg, 0.25, &mut full).unwrap();
+            let mut ranged = vec![0.5f32; d];
+            let span = q.alignment();
+            for (i, chunk) in ranged.chunks_mut(span).enumerate() {
+                q.accumulate_range(&msg, 0.25, chunk, i * span).unwrap();
+            }
+            assert_eq!(full, ranged, "{bits}-bit ranged accumulate");
+        }
     }
 }

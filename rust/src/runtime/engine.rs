@@ -10,14 +10,28 @@
 //! on one thread. XLA's CPU backend parallelizes *inside* an execution
 //! with its own intra-op thread pool, so a single engine thread saturates
 //! the machine for our batch sizes.
+//!
+//! **Feature gating:** the `xla` crate (and its xla_extension shared
+//! library) is unavailable in the offline build image, so the real engine
+//! is compiled only under `--features pjrt`; the default build ships a
+//! stub whose `load` fails with a clear message. Everything that can run
+//! without PJRT (the coordinator, simulator, quantizer codecs, TCP
+//! runtime, quadratic-backend experiments) is unaffected.
 
-use super::manifest::{DType, Manifest};
-use anyhow::{anyhow, bail, Result};
+use super::manifest::Manifest;
+use anyhow::Result;
+
+#[cfg(feature = "pjrt")]
+use super::manifest::DType;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, bail};
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 
 /// A loaded, compiled artifact set.
 pub struct Engine {
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
@@ -54,6 +68,7 @@ impl Engine {
 
     /// Load only `names` (empty = all). Compiling fewer artifacts speeds
     /// up tools that need just one entry point.
+    #[cfg(feature = "pjrt")]
     pub fn load_subset(dir: &str, names: &[&str]) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
@@ -74,6 +89,18 @@ impl Engine {
         Ok(Engine { manifest, exes })
     }
 
+    /// Stub (built without `--features pjrt`): always errors.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load_subset(dir: &str, names: &[&str]) -> Result<Engine> {
+        let _ = names;
+        anyhow::bail!(
+            "qafel was built without the `pjrt` feature (the xla crate is \
+             unavailable offline), so artifacts in '{dir}' cannot be \
+             executed. Use `--backend quadratic`, or add a local `xla` \
+             dependency and rebuild with `--features pjrt`."
+        )
+    }
+
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -88,7 +115,14 @@ impl Engine {
         let m = &self.manifest.model;
         m.height * m.width * m.in_channels
     }
+}
 
+// ---------------------------------------------------------------------------
+// Real PJRT execution (only with --features pjrt)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+impl Engine {
     // ---- generic execute ---------------------------------------------------
 
     /// Execute artifact `name` with validated inputs; returns the output
@@ -296,6 +330,83 @@ impl Engine {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Stub entry points (default offline build) — same signatures, always Err.
+// An Engine cannot actually be constructed in this mode (load_subset
+// errors), so these are unreachable at runtime; they exist so callers
+// type-check identically with and without the feature.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    fn unavailable<T>(&self, what: &str) -> Result<T> {
+        anyhow::bail!("PJRT engine unavailable (built without `pjrt` feature): {what}")
+    }
+
+    pub fn init_params(&self, _seed: i32) -> Result<Vec<f32>> {
+        self.unavailable("init_params")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_update(
+        &self,
+        _params: &[f32],
+        _xs: &[f32],
+        _ys: &[i32],
+        _mask: &[f32],
+        _lr: f32,
+        _seed: i32,
+    ) -> Result<RoundOutput> {
+        self.unavailable("client_update")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_update_quantized(
+        &self,
+        _params: &[f32],
+        _xs: &[f32],
+        _ys: &[i32],
+        _mask: &[f32],
+        _lr: f32,
+        _seed: i32,
+        _u: &[f32],
+        _s_levels: f32,
+    ) -> Result<QuantizedRoundOutput> {
+        self.unavailable("client_update_quantized")
+    }
+
+    pub fn train_step(
+        &self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _mask: &[f32],
+        _lr: f32,
+        _seed: i32,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        self.unavailable("train_step")
+    }
+
+    pub fn eval_step(
+        &self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _mask: &[f32],
+    ) -> Result<(f32, f32, f32)> {
+        self.unavailable("eval_step")
+    }
+
+    pub fn qsgd_quantize(
+        &self,
+        _x: &[f32],
+        _u: &[f32],
+        _s_levels: f32,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        self.unavailable("qsgd_quantize")
+    }
+}
+
 /// Resolve the artifacts directory: explicit arg, `QAFEL_ARTIFACTS` env
 /// var, or `artifacts` relative to the working directory.
 pub fn artifacts_dir(explicit: &str) -> String {
@@ -306,9 +417,11 @@ pub fn artifacts_dir(explicit: &str) -> String {
 }
 
 /// Quick availability check used by tests to skip when `make artifacts`
-/// hasn't been run.
+/// hasn't been run — always false in a build without the `pjrt` feature,
+/// so PJRT-dependent tests and tools skip gracefully even when the
+/// artifact files are present.
 pub fn artifacts_available(dir: &str) -> bool {
-    std::path::Path::new(dir).join("manifest.json").exists()
+    cfg!(feature = "pjrt") && std::path::Path::new(dir).join("manifest.json").exists()
 }
 
 #[cfg(test)]
@@ -328,5 +441,12 @@ mod tests {
     #[test]
     fn availability_check() {
         assert!(!artifacts_available("/nonexistent/path"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_fails_with_clear_message() {
+        let err = Engine::load("artifacts").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

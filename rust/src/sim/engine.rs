@@ -37,7 +37,7 @@ struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Event {}
@@ -48,11 +48,14 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap via reversed comparison on (time, seq)
+        // min-heap via reversed comparison on (time, seq). `total_cmp`
+        // (IEEE totalOrder) keeps this a strict weak ordering even for
+        // NaN/-0.0 times — `partial_cmp(..).unwrap_or(Equal)` would
+        // report NaN as "equal" to everything, which is intransitive and
+        // silently corrupts BinaryHeap order (and with it determinism).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -286,6 +289,37 @@ mod tests {
 
     fn backend() -> QuadraticBackend {
         QuadraticBackend::new(24, 10, 1.0, 0.3, 0.3, 0.02, 2, 11)
+    }
+
+    #[test]
+    fn event_heap_pops_in_deterministic_time_seq_order() {
+        // regression: Event::cmp used partial_cmp(..).unwrap_or(Equal),
+        // which makes NaN "equal" to every time — an intransitive
+        // comparison that silently corrupts BinaryHeap order. total_cmp
+        // gives a true total order (NaN sorts last) with the seq
+        // tie-breaker keeping equal times deterministic.
+        let mk = |time: f64, seq: u64| Event { time, seq, kind: EventKind::Arrival };
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let times = [3.0, 1.0, f64::NAN, 2.0, 1.0, -0.0, 0.0, 2.0, f64::NAN];
+        for (i, &t) in times.iter().enumerate() {
+            heap.push(mk(t, i as u64));
+        }
+        let mut popped: Vec<(f64, u64)> = Vec::new();
+        while let Some(e) = heap.pop() {
+            popped.push((e.time, e.seq));
+        }
+        assert_eq!(popped.len(), times.len());
+        // min-heap key (time under totalOrder, then seq) is sorted
+        for w in popped.windows(2) {
+            let ord = w[0].0.total_cmp(&w[1].0).then(w[0].1.cmp(&w[1].1));
+            assert_ne!(ord, Ordering::Greater, "heap order violated: {popped:?}");
+        }
+        // equal times pop in insertion (seq) order
+        let ones: Vec<u64> =
+            popped.iter().filter(|(t, _)| *t == 1.0).map(|(_, s)| *s).collect();
+        assert_eq!(ones, vec![1, 4]);
+        // NaN times sort after every finite time instead of interleaving
+        assert!(popped.iter().rev().take(2).all(|(t, _)| t.is_nan()));
     }
 
     #[test]

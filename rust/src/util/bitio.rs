@@ -202,6 +202,68 @@ mod tests {
     }
 
     #[test]
+    fn sixteen_bit_symbols_cross_byte_boundaries() {
+        // 16-bit symbols (the widest qsgd level width) written at every
+        // possible bit phase: pre-pad with 0..8 bits so symbols straddle
+        // byte boundaries in all alignments, and verify exact roundtrip.
+        for phase in 0u32..8 {
+            let mut w = BitWriter::new();
+            if phase > 0 {
+                w.write(0b1010_1010 & ((1 << phase) - 1), phase);
+            }
+            let vals: Vec<u64> = (0..100u64).map(|i| (i * 0x9E37) & 0xFFFF).collect();
+            for &v in &vals {
+                w.write(v, 16);
+            }
+            assert_eq!(w.bit_len(), phase as usize + 16 * vals.len());
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            if phase > 0 {
+                r.read(phase).unwrap();
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(r.read(16), Some(v), "phase {phase}, symbol {i}");
+            }
+        }
+        // extreme values survive
+        let mut w = BitWriter::new();
+        w.write(0xFFFF, 16);
+        w.write(0, 16);
+        w.write(0x8001, 16);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(16), Some(0xFFFF));
+        assert_eq!(r.read(16), Some(0));
+        assert_eq!(r.read(16), Some(0x8001));
+    }
+
+    #[test]
+    fn truncated_buffer_reads_return_none_not_garbage() {
+        let mut w = BitWriter::new();
+        for i in 0..10u64 {
+            w.write(i, 16);
+        }
+        let bytes = w.into_bytes();
+        // drop the final byte: the 10th symbol is half gone
+        let cut = &bytes[..bytes.len() - 1];
+        let mut r = BitReader::new(cut);
+        for i in 0..9u64 {
+            assert_eq!(r.read(16), Some(i));
+        }
+        assert_eq!(r.remaining_bits(), 8);
+        assert_eq!(r.read(16), None, "partial symbol must not decode");
+        // the cursor does not advance on a failed read
+        assert_eq!(r.remaining_bits(), 8);
+        assert_eq!(r.read(8), Some(9)); // low byte of the 10th symbol
+        assert_eq!(r.read(1), None);
+        // empty buffer
+        let mut empty = BitReader::new(&[]);
+        assert_eq!(empty.read(1), None);
+        assert_eq!(empty.read_f32(), None);
+        assert_eq!(empty.remaining_bits(), 0);
+    }
+
+    #[test]
     fn bit_len_tracks_exactly() {
         let mut w = BitWriter::new();
         assert_eq!(w.bit_len(), 0);

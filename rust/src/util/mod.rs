@@ -7,6 +7,7 @@ pub mod bitio;
 pub mod dist;
 pub mod json;
 pub mod prng;
+pub mod shard;
 pub mod stats;
 pub mod vecf;
 

@@ -1,0 +1,64 @@
+//! Shard-range arithmetic for the parallel aggregation pipeline.
+//!
+//! A `d`-dimensional vector is split into up to `S` contiguous shards of
+//! equal span, where the span is rounded **up** to a codec alignment (for
+//! qsgd: the bucket size, so per-bucket norms stay shard-local and the
+//! bit-packed body stays byte-aligned at shard seams). The last shard
+//! absorbs the ragged tail. `slice::chunks(span)` / `chunks_mut(span)`
+//! then produce exactly these shards.
+
+/// Shard span for dimension `d`, at most `shards` shards, aligned up to
+/// `align` coordinates. Always >= 1; `span >= d` means "don't shard".
+pub fn span_for(d: usize, shards: usize, align: usize) -> usize {
+    let shards = shards.max(1);
+    let align = align.max(1);
+    let raw = d.div_ceil(shards).max(1);
+    raw.div_ceil(align) * align
+}
+
+/// The shard ranges `chunks(span)` will produce (for tests/diagnostics).
+pub fn ranges(d: usize, shards: usize, align: usize) -> Vec<std::ops::Range<usize>> {
+    let span = span_for(d, shards, align);
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < d {
+        let hi = (lo + span).min(d);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_cover_exactly_and_align() {
+        for d in [1usize, 7, 128, 129, 1000, 29_474, 1 << 20] {
+            for shards in [1usize, 2, 3, 4, 8, 16] {
+                for align in [1usize, 8, 128] {
+                    let span = span_for(d, shards, align);
+                    assert!(span >= 1);
+                    assert_eq!(span % align, 0, "span {span} not {align}-aligned");
+                    let rs = ranges(d, shards, align);
+                    assert!(rs.len() <= shards.max(1), "{d}/{shards}/{align}: {} ranges", rs.len());
+                    assert_eq!(rs.first().map(|r| r.start), Some(0));
+                    assert_eq!(rs.last().map(|r| r.end), Some(d));
+                    for w in rs.windows(2) {
+                        assert_eq!(w[0].end, w[1].start);
+                        assert_eq!(w[0].start % align, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(span_for(0, 4, 128), 128); // span >= 1, no ranges
+        assert!(ranges(0, 4, 128).is_empty());
+        assert_eq!(span_for(10, 1, 1), 10);
+        assert_eq!(ranges(10, 1, 1), vec![0..10]);
+    }
+}

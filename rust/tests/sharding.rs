@@ -1,0 +1,185 @@
+//! Property tests for the sharded aggregation pipeline: for every shard
+//! count, every supported codec and adversarial vectors, the sharded
+//! codec paths and the whole sharded server step must be **bit-identical**
+//! to the sequential implementation (broadcast payloads, model, hidden
+//! state, and PRNG stream consumption).
+
+use qafel::config::{Algorithm, Config};
+use qafel::coordinator::{Server, ServerStep};
+use qafel::quant::{parse_spec, sharded};
+use qafel::testing::prop::{forall_cfg, gens, PropConfig};
+use qafel::util::prng::Prng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+/// Codecs with a range view (bit-exact shard parallel paths).
+fn range_specs() -> Vec<&'static str> {
+    vec!["none", "qsgd:2", "qsgd:4", "qsgd:8", "qsgd:16", "qsgd:4:32"]
+}
+
+/// Codecs without one (sequential fallback must still be bit-exact).
+fn fallback_specs() -> Vec<&'static str> {
+    vec!["top:0.1", "rand_scaled:0.25"]
+}
+
+#[test]
+fn sharded_codec_paths_match_sequential_bitwise() {
+    for spec in range_specs().into_iter().chain(fallback_specs()) {
+        let q = parse_spec(spec).unwrap();
+        forall_cfg(
+            &format!("sharded == sequential for {spec}"),
+            PropConfig { cases: 25, ..Default::default() },
+            gens::vec_f32_gnarly(1, 2000),
+            |xs| {
+                for shards in SHARD_COUNTS {
+                    // quantize: same bytes AND same rng consumption
+                    let mut rng_seq = Prng::new(7);
+                    let mut rng_shard = Prng::new(7);
+                    let a = q.quantize(xs, &mut rng_seq);
+                    let b = sharded::quantize(q.as_ref(), xs, &mut rng_shard, shards);
+                    if a.payload != b.payload {
+                        return Err(format!("{spec} S={shards}: payload mismatch"));
+                    }
+                    if rng_seq.next_u64() != rng_shard.next_u64() {
+                        return Err(format!("{spec} S={shards}: rng stream diverged"));
+                    }
+                    // accumulate
+                    let mut acc_a = vec![0.25f32; xs.len()];
+                    let mut acc_b = vec![0.25f32; xs.len()];
+                    q.accumulate(&a, 0.5, &mut acc_a).map_err(|e| e.to_string())?;
+                    sharded::accumulate(q.as_ref(), &a, 0.5, &mut acc_b, shards)
+                        .map_err(|e| e.to_string())?;
+                    if acc_a != acc_b {
+                        return Err(format!("{spec} S={shards}: accumulate mismatch"));
+                    }
+                    // dequantize
+                    let mut out_a = vec![0.0f32; xs.len()];
+                    let mut out_b = vec![0.0f32; xs.len()];
+                    q.dequantize_into(&a, &mut out_a).map_err(|e| e.to_string())?;
+                    sharded::dequantize_into(q.as_ref(), &a, &mut out_b, shards)
+                        .map_err(|e| e.to_string())?;
+                    if out_a != out_b {
+                        return Err(format!("{spec} S={shards}: dequantize mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+fn qafel_cfg(client: &str, server: &str, shards: usize) -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = client.into();
+    c.quant.server = server.into();
+    c.fl.buffer_size = 3;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.3;
+    c.fl.shards = shards;
+    c
+}
+
+/// Drive two servers with identical upload streams and assert bit-equal
+/// evolution (broadcast bytes, model, hidden state).
+fn assert_servers_identical(client: &str, server: &str, d: usize, seed: u64, shards: usize) {
+    let mut s1 = Server::build(&qafel_cfg(client, server, 1), vec![0.0; d], seed).unwrap();
+    let mut s2 = Server::build(&qafel_cfg(client, server, shards), vec![0.0; d], seed).unwrap();
+    let qc = parse_spec(client).unwrap();
+    let mut rng1 = Prng::new(seed ^ 0xFEED);
+    let mut rng2 = Prng::new(seed ^ 0xFEED);
+    for round in 0..9u64 {
+        let delta: Vec<f32> =
+            (0..d).map(|i| ((i as f64 * 0.37 + round as f64).sin() * 0.1) as f32).collect();
+        let m1 = qc.quantize(&delta, &mut rng1);
+        let m2 = qc.quantize(&delta, &mut rng2);
+        let r1 = s1.ingest(&m1, round % 5).unwrap();
+        let r2 = s2.ingest(&m2, round % 5).unwrap();
+        match (r1, r2) {
+            (ServerStep::Stepped(b1), ServerStep::Stepped(b2)) => {
+                assert_eq!(
+                    b1.msg.payload, b2.msg.payload,
+                    "{client}/{server} d={d} S={shards}: broadcast bytes"
+                );
+                assert_eq!(b1.t, b2.t);
+            }
+            (ServerStep::Buffered, ServerStep::Buffered) => {}
+            _ => panic!("{client}/{server} d={d} S={shards}: step/buffer divergence"),
+        }
+    }
+    assert_eq!(s1.model(), s2.model(), "{client}/{server} d={d} S={shards}: model");
+    assert_eq!(
+        s1.client_snapshot().as_slice(),
+        s2.client_snapshot().as_slice(),
+        "{client}/{server} d={d} S={shards}: hidden state"
+    );
+}
+
+#[test]
+fn sharded_server_bit_identical_across_seeds_and_quantizers() {
+    // dims straddle bucket boundaries: below one bucket, exact multiples,
+    // ragged tails, and a dimension smaller than the shard count
+    for &d in &[5usize, 128, 384, 500, 1000] {
+        for seed in [1u64, 2, 3] {
+            for (qc, qs) in [
+                ("qsgd:4", "qsgd:4"),
+                ("qsgd:8", "qsgd:2"),
+                ("qsgd:16", "qsgd:16"),
+                ("none", "none"),
+                ("none", "qsgd:4"),
+                // server codec without a range view: sequential fallback
+                ("qsgd:4", "top:0.1"),
+            ] {
+                for shards in [2usize, 4, 8] {
+                    assert_servers_identical(qc, qs, d, seed, shards);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_paths_reject_dimension_mismatch() {
+    // the per-shard range checks only see prefixes; the sharded entry
+    // points must enforce the whole-vector dimension contract just like
+    // the sequential decoders
+    let q = parse_spec("qsgd:4").unwrap();
+    let mut rng = Prng::new(1);
+    let big: Vec<f32> = (0..512).map(|i| i as f32 * 0.01).collect();
+    let msg = q.quantize(&big, &mut rng);
+    for shards in [1usize, 4] {
+        let mut small = vec![0.0f32; 256];
+        assert!(sharded::accumulate(q.as_ref(), &msg, 1.0, &mut small, shards).is_err());
+        assert!(sharded::dequantize_into(q.as_ref(), &msg, &mut small, shards).is_err());
+    }
+}
+
+#[test]
+fn directquant_sharded_matches_sequential() {
+    let mut base = Config::default();
+    base.fl.algorithm = Algorithm::DirectQuant;
+    base.quant.client = "none".into();
+    base.quant.server = "qsgd:4".into();
+    base.fl.buffer_size = 2;
+    let d = 2 * 128 + 9;
+    let mut c1 = base.clone();
+    c1.fl.shards = 1;
+    let mut c4 = base.clone();
+    c4.fl.shards = 4;
+    let mut s1 = Server::build(&c1, vec![0.1; d], 5).unwrap();
+    let mut s4 = Server::build(&c4, vec![0.1; d], 5).unwrap();
+    let qc = parse_spec("none").unwrap();
+    let mut rng = Prng::new(8);
+    for round in 0..6u64 {
+        let delta: Vec<f32> = (0..d).map(|i| (i as f32 * 0.01) - round as f32 * 0.001).collect();
+        let msg = qc.quantize(&delta, &mut rng);
+        let r1 = s1.ingest(&msg, 0).unwrap();
+        let r4 = s4.ingest(&msg, 0).unwrap();
+        if let (ServerStep::Stepped(b1), ServerStep::Stepped(b4)) = (r1, r4) {
+            assert!(b1.absolute && b4.absolute);
+            assert_eq!(b1.msg.payload, b4.msg.payload, "round {round}");
+        }
+    }
+    assert_eq!(s1.model(), s4.model());
+    assert_eq!(s1.client_snapshot().as_slice(), s4.client_snapshot().as_slice());
+}

@@ -1,0 +1,281 @@
+//! Vendored, offline subset of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so this workspace member
+//! provides the exact surface the `qafel` crate uses under the same crate
+//! name: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Semantics mirror upstream `anyhow` where it matters here:
+//! * `Error` is a cheap, heap-boxed, `Send + Sync + 'static` wrapper that
+//!   can be built from any `std::error::Error` (enabling `?` conversions)
+//!   or from a formatted message;
+//! * `{}` displays the outermost message, `{:#}` appends the cause chain
+//!   (`outer: cause1: cause2`), `{:?}` shows the message plus an indented
+//!   `Caused by:` list;
+//! * `.context(..)` / `.with_context(..)` wrap an existing error as the
+//!   cause of a new message.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed, context-carrying error (subset of `anyhow::Error`).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` alias, as in upstream anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a displayable message with no underlying cause.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Build from any standard error (becomes both message and cause).
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error as the cause of a new contextual message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(ChainedError(self))) }
+    }
+
+    /// The cause chain, outermost first (excluding this message).
+    pub fn chain(&self) -> Chain<'_> {
+        let next = self.source.as_deref().map(|e| {
+            // coercion dropping the Send + Sync auto bounds
+            let e: &(dyn StdError + 'static) = e;
+            e
+        });
+        Chain { next }
+    }
+
+    /// The innermost error in the chain (self's message if no cause).
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut root: Option<&(dyn StdError + 'static)> = None;
+        for e in self.chain() {
+            root = Some(e);
+        }
+        root.unwrap_or(&NoCause)
+    }
+}
+
+/// Iterator over an error's cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next.take()?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+#[derive(Debug)]
+struct NoCause;
+impl fmt::Display for NoCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("(no cause)")
+    }
+}
+impl StdError for NoCause {}
+
+/// Adapter so an [`Error`] can serve as the `source()` of another
+/// [`Error`] (upstream anyhow does this internally; `Error` itself must
+/// not implement `std::error::Error` or the blanket `From` below would
+/// conflict).
+struct ChainedError(Error);
+
+impl fmt::Debug for ChainedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+impl fmt::Display for ChainedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0.msg)
+    }
+}
+impl StdError for ChainedError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.source.as_deref().map(|e| {
+            let e: &(dyn StdError + 'static) = e;
+            e
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let causes: Vec<String> = self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for (i, c) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option` (subset of `anyhow::Context`).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (subset of
+/// `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`] (subset of `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("file missing"));
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("opening config: "), "{alt}");
+        assert!(alt.contains("file missing"), "{alt}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(0).unwrap_err().to_string().contains("zero"));
+        assert!(f(20).unwrap_err().to_string().contains("too big: 20"));
+        let e = anyhow!("plain {} message", 1);
+        assert_eq!(e.to_string(), "plain 1 message");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::new(io_err()).context("layer 1").context("layer 2");
+        // chain: the "layer 1" wrapper, the message-level view of the
+        // original Error, then the io error it was built from
+        let msgs: Vec<String> = e.chain().map(|c| c.to_string()).collect();
+        assert_eq!(msgs, vec!["layer 1", "file missing", "file missing"]);
+        assert_eq!(e.root_cause().to_string(), "file missing");
+    }
+}
