@@ -4,6 +4,10 @@
 //! prints mean / p50 / p95 per-iteration times plus derived throughput.
 //! Set `QAFEL_BENCH_FAST=1` to cut iteration counts (used by CI smoke).
 
+// Each bench target compiles its own copy of this module and uses a
+// different subset of the helpers.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub struct BenchResult {

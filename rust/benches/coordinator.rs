@@ -14,9 +14,11 @@
 mod common;
 
 use common::{bench, scaled};
-use qafel::config::{Algorithm, Config};
+use qafel::config::{Algorithm, Config, TierConfig};
 use qafel::coordinator::{Server, ServerStep};
 use qafel::quant::parse_spec;
+use qafel::runtime::QuadraticBackend;
+use qafel::sim::SimEngine;
 use qafel::util::json::Json;
 use qafel::util::prng::Prng;
 use std::hint::black_box;
@@ -98,6 +100,7 @@ fn main() {
     }
 
     shard_sweep();
+    scenario_stream();
 }
 
 /// Sharded-pipeline sweep: wall time of one full server step (K = 10
@@ -178,5 +181,97 @@ fn shard_sweep() {
     match std::fs::write(&out, doc.pretty()) {
         Ok(()) => println!("\nshard sweep recorded in {out}"),
         Err(e) => println!("\ncould not write {out}: {e}"),
+    }
+}
+
+/// Scenario-engine throughput: a ~1M-virtual-client arrival stream from
+/// a heterogeneous 2-tier population (bandwidth delays, dropouts) pushed
+/// through the event loop + versioned snapshot store. The model is tiny
+/// (d = 64) so the measurement isolates the event machinery rather than
+/// the gradient compute. Writes BENCH_scenario_step.json
+/// (QAFEL_BENCH_SCENARIO_OUT overrides the path).
+fn scenario_stream() {
+    let fast_mode = common::fast_mode();
+    let concurrency = if fast_mode { 25_000 } else { 250_000 };
+    let max_uploads: u64 = if fast_mode { 75_000 } else { 750_000 };
+
+    let mut cfg = Config::default();
+    cfg.fl.algorithm = Algorithm::Qafel;
+    cfg.quant.client = "qsgd:4".into();
+    cfg.quant.server = "qsgd:4".into();
+    cfg.fl.buffer_size = 50;
+    cfg.fl.client_lr = 0.05;
+    cfg.fl.clip_norm = 0.0;
+    cfg.sim.concurrency = concurrency;
+    cfg.sim.eval_every = 1_000_000_000; // eval only at t = 0
+    cfg.stop.target_accuracy = 2.0;
+    cfg.stop.max_uploads = max_uploads;
+    cfg.stop.max_server_steps = u64::MAX;
+    let mut fast_tier = TierConfig::named("fast");
+    fast_tier.weight = 0.3;
+    fast_tier.duration_sigma = 0.4;
+    fast_tier.upload_mbps = 20.0;
+    fast_tier.download_mbps = 80.0;
+    let mut slow_tier = TierConfig::named("slow");
+    slow_tier.weight = 0.7;
+    slow_tier.duration = "lognormal".into();
+    slow_tier.duration_sigma = 1.0;
+    slow_tier.upload_mbps = 1.5;
+    slow_tier.download_mbps = 6.0;
+    slow_tier.dropout = 0.05;
+    cfg.scenario.tiers = vec![fast_tier, slow_tier];
+    cfg.validate().unwrap();
+
+    let backend = QuadraticBackend::new(64, 1000, 1.0, 0.3, 0.2, 0.02, 1, 1);
+    let t0 = Instant::now();
+    let result = SimEngine::new(&cfg, &backend, 1).run().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let sc = &result.scenario;
+    let arrivals: u64 = sc.tiers.iter().map(|t| t.arrivals + t.unavailable).sum();
+    let dropouts: u64 = sc.tiers.iter().map(|t| t.dropouts).sum();
+    // every arrival is one event; every started client finishes once
+    let events = arrivals + result.comm.uploads + dropouts;
+    println!("\n== scenario engine: heterogeneous arrival stream ==");
+    println!(
+        "virtual clients     : {arrivals} arrivals ({} uploads, {dropouts} dropouts)",
+        result.comm.uploads
+    );
+    println!("server steps        : {}", result.server_steps);
+    println!(
+        "wall                : {wall:.2}s  ({:.0} events/s, {:.0} uploads/s)",
+        events as f64 / wall,
+        result.comm.uploads as f64 / wall
+    );
+    println!(
+        "concurrency         : target {concurrency}, measured mean {:.0}, peak in-flight {}",
+        sc.mean_concurrency, sc.max_in_flight
+    );
+    println!(
+        "snapshot store      : peak {} live model versions (vs {} in-flight clients)",
+        sc.max_live_snapshots, sc.max_in_flight
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("scenario_step")),
+        ("tiers", Json::num(sc.tiers.len() as f64)),
+        ("target_concurrency", Json::num(concurrency as f64)),
+        ("arrivals", Json::num(arrivals as f64)),
+        ("uploads", Json::num(result.comm.uploads as f64)),
+        ("dropouts", Json::num(dropouts as f64)),
+        ("server_steps", Json::num(result.server_steps as f64)),
+        ("wall_seconds", Json::num(wall)),
+        ("events_per_sec", Json::num(events as f64 / wall)),
+        ("uploads_per_sec", Json::num(result.comm.uploads as f64 / wall)),
+        ("mean_concurrency", Json::num(sc.mean_concurrency)),
+        ("max_in_flight", Json::num(sc.max_in_flight as f64)),
+        ("max_live_snapshots", Json::num(sc.max_live_snapshots as f64)),
+        ("fast_mode", Json::Bool(fast_mode)),
+    ]);
+    let out = std::env::var("QAFEL_BENCH_SCENARIO_OUT")
+        .unwrap_or_else(|_| "BENCH_scenario_step.json".to_string());
+    match std::fs::write(&out, doc.pretty()) {
+        Ok(()) => println!("scenario stream recorded in {out}"),
+        Err(e) => println!("could not write {out}: {e}"),
     }
 }

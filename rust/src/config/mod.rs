@@ -135,6 +135,83 @@ impl Default for SimConfig {
     }
 }
 
+/// One device tier of a heterogeneous client population
+/// (`[scenario.tiers.<name>]`, DESIGN_SCENARIOS.md).
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// Tier name (the TOML sub-table key).
+    pub name: String,
+    /// Relative share of arrivals routed to this tier (> 0).
+    pub weight: f64,
+    /// Duration distribution: "halfnormal" | "lognormal" | "fixed".
+    pub duration: String,
+    pub duration_sigma: f64,
+    /// Uplink bandwidth in Mbit/s; 0 = unlimited (no transfer delay).
+    pub upload_mbps: f64,
+    /// Downlink bandwidth in Mbit/s; 0 = unlimited.
+    pub download_mbps: f64,
+    /// Probability a client trains but drops before uploading, in [0, 1).
+    pub dropout: f64,
+    /// Diurnal cycle length in virtual time; 0 = always available.
+    pub day_period: f64,
+    /// Fraction of each cycle the tier is available, in (0, 1].
+    pub on_fraction: f64,
+    /// Offset into the cycle (shifts tiers against each other).
+    pub phase: f64,
+}
+
+impl TierConfig {
+    /// A tier with the given name and neutral defaults: weight 1,
+    /// half-normal(1) durations, unlimited bandwidth, no dropout,
+    /// always available — i.e. exactly the paper's client model.
+    pub fn named(name: &str) -> TierConfig {
+        TierConfig {
+            name: name.to_string(),
+            weight: 1.0,
+            duration: "halfnormal".into(),
+            duration_sigma: 1.0,
+            upload_mbps: 0.0,
+            download_mbps: 0.0,
+            dropout: 0.0,
+            day_period: 0.0,
+            on_fraction: 1.0,
+            phase: 0.0,
+        }
+    }
+}
+
+/// The `[scenario]` table: client-population model for the simulator
+/// (DESIGN_SCENARIOS.md). When `tiers` is empty the `sim.arrival` /
+/// `sim.duration*` knobs desugar to a single-tier scenario, keeping old
+/// configs bit-identical.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// Arrival process override: "constant" | "poisson" | "bursty".
+    /// `None` inherits `sim.arrival`.
+    pub arrival: Option<String>,
+    /// Bursty (MMPP) arrivals: rate multiplier while a burst is on.
+    pub burst_factor: f64,
+    /// Mean burst duration (virtual time).
+    pub burst_on: f64,
+    /// Mean quiet-period duration (virtual time).
+    pub burst_off: f64,
+    /// Device tiers, keyed by name in TOML; sorted by name here (the
+    /// TOML table is alphabetical), which fixes the sampling order.
+    pub tiers: Vec<TierConfig>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            arrival: None,
+            burst_factor: 4.0,
+            burst_on: 1.0,
+            burst_off: 4.0,
+            tiers: Vec::new(),
+        }
+    }
+}
+
 /// Synthetic CelebA-LEAF dataset configuration (DESIGN.md §4).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
@@ -202,6 +279,7 @@ pub struct Config {
     pub fl: FlConfig,
     pub quant: QuantConfig,
     pub sim: SimConfig,
+    pub scenario: ScenarioConfig,
     pub data: DataConfig,
     pub stop: StopConfig,
 }
@@ -216,6 +294,7 @@ impl Default for Config {
             fl: FlConfig::default(),
             quant: QuantConfig::default(),
             sim: SimConfig::default(),
+            scenario: ScenarioConfig::default(),
             data: DataConfig::default(),
             stop: StopConfig::default(),
         }
@@ -298,6 +377,10 @@ impl Config {
         get_str!(doc, &["sim", "arrival"], self.sim.arrival);
         get_num!(doc, &["sim", "eval_every"], self.sim.eval_every, usize);
 
+        if let Some(sc) = doc.get("scenario") {
+            self.apply_scenario(sc)?;
+        }
+
         get_num!(doc, &["data", "num_users"], self.data.num_users, usize);
         get_num!(doc, &["data", "seed"], self.data.seed, u64);
         get_num!(doc, &["data", "min_samples"], self.data.min_samples, usize);
@@ -332,6 +415,104 @@ impl Config {
         self.apply(&doc)
     }
 
+    /// Overlay the `[scenario]` table. Unknown keys are rejected loudly
+    /// (tier sub-tables are user-named, so a typo'd knob would otherwise
+    /// vanish silently).
+    fn apply_scenario(&mut self, doc: &Json) -> Result<()> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow!("[scenario] must be a table"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "arrival" => {
+                    self.scenario.arrival = Some(
+                        val.as_str()
+                            .ok_or_else(|| anyhow!("scenario.arrival must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "burst_factor" => self.scenario.burst_factor = scalar(val, "scenario.burst_factor")?,
+                "burst_on" => self.scenario.burst_on = scalar(val, "scenario.burst_on")?,
+                "burst_off" => self.scenario.burst_off = scalar(val, "scenario.burst_off")?,
+                "tiers" => {
+                    let tiers = val.as_obj().ok_or_else(|| {
+                        anyhow!("scenario.tiers must be a table of [scenario.tiers.<name>] tables")
+                    })?;
+                    for (name, tval) in tiers {
+                        self.apply_tier(name, tval)?;
+                    }
+                }
+                other => bail!(
+                    "unknown [scenario] key '{other}' \
+                     (known: arrival, burst_factor, burst_on, burst_off, tiers)"
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Overlay one `[scenario.tiers.<name>]` sub-table, merging into an
+    /// existing tier of the same name (so `--set scenario.tiers.x.k=v`
+    /// updates rather than resets).
+    fn apply_tier(&mut self, name: &str, doc: &Json) -> Result<()> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow!("scenario.tiers.{name} must be a table"))?;
+        let idx = self.scenario.tiers.iter().position(|t| t.name == name);
+        let mut tier = match idx {
+            Some(i) => self.scenario.tiers[i].clone(),
+            None => TierConfig::named(name),
+        };
+        for (key, val) in obj {
+            let what = format!("scenario.tiers.{name}.{key}");
+            match key.as_str() {
+                "weight" => tier.weight = scalar(val, &what)?,
+                "duration" => {
+                    tier.duration = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("config {what} must be a string"))?
+                        .to_string();
+                }
+                "duration_sigma" => tier.duration_sigma = scalar(val, &what)?,
+                "upload_mbps" => tier.upload_mbps = scalar(val, &what)?,
+                "download_mbps" => tier.download_mbps = scalar(val, &what)?,
+                "dropout" => tier.dropout = scalar(val, &what)?,
+                "day_period" => tier.day_period = scalar(val, &what)?,
+                "on_fraction" => tier.on_fraction = scalar(val, &what)?,
+                "phase" => tier.phase = scalar(val, &what)?,
+                other => bail!(
+                    "unknown tier key 'scenario.tiers.{name}.{other}' (known: weight, \
+                     duration, duration_sigma, upload_mbps, download_mbps, dropout, \
+                     day_period, on_fraction, phase)"
+                ),
+            }
+        }
+        match idx {
+            Some(i) => self.scenario.tiers[i] = tier,
+            None => self.scenario.tiers.push(tier),
+        }
+        Ok(())
+    }
+
+    /// The effective tier list: explicit `[scenario.tiers.*]` tables, or
+    /// the `sim.duration*` knobs desugared to a single always-available
+    /// unlimited-bandwidth tier (the pre-scenario client model).
+    pub fn resolved_tiers(&self) -> Vec<TierConfig> {
+        if !self.scenario.tiers.is_empty() {
+            return self.scenario.tiers.clone();
+        }
+        let mut t = TierConfig::named("default");
+        t.duration = self.sim.duration.clone();
+        t.duration_sigma = self.sim.duration_sigma;
+        vec![t]
+    }
+
+    /// The effective arrival process: `scenario.arrival` when set,
+    /// otherwise the `sim.arrival` back-compat alias.
+    pub fn resolved_arrival(&self) -> &str {
+        self.scenario.arrival.as_deref().unwrap_or(&self.sim.arrival)
+    }
+
     /// Consistency checks (fail fast, before any compute).
     pub fn validate(&self) -> Result<()> {
         if self.fl.buffer_size == 0 {
@@ -363,11 +544,75 @@ impl Config {
             other => bail!("unknown sim.duration '{other}'"),
         }
         match self.sim.arrival.as_str() {
-            "constant" | "poisson" => {}
+            "constant" | "poisson" | "bursty" => {}
             other => bail!("unknown sim.arrival '{other}'"),
+        }
+        self.validate_scenario()
+    }
+
+    fn validate_scenario(&self) -> Result<()> {
+        match self.resolved_arrival() {
+            "constant" | "poisson" | "bursty" => {}
+            other => bail!("unknown scenario.arrival '{other}'"),
+        }
+        for (name, v) in [
+            ("burst_factor", self.scenario.burst_factor),
+            ("burst_on", self.scenario.burst_on),
+            ("burst_off", self.scenario.burst_off),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("scenario.{name} must be > 0, got {v}");
+            }
+        }
+        let tiers = self.resolved_tiers();
+        let mut total_weight = 0.0;
+        for t in &tiers {
+            let name = &t.name;
+            if !(t.weight.is_finite() && t.weight > 0.0) {
+                bail!("scenario tier '{name}': weight must be positive, got {}", t.weight);
+            }
+            total_weight += t.weight;
+            match t.duration.as_str() {
+                "halfnormal" | "lognormal" | "fixed" => {}
+                other => bail!("scenario tier '{name}': unknown duration dist '{other}'"),
+            }
+            if !(t.duration_sigma.is_finite() && t.duration_sigma > 0.0) {
+                bail!(
+                    "scenario tier '{name}': duration_sigma must be > 0, got {}",
+                    t.duration_sigma
+                );
+            }
+            for (knob, v) in [("upload_mbps", t.upload_mbps), ("download_mbps", t.download_mbps)] {
+                if !(v.is_finite() && v >= 0.0) {
+                    bail!("scenario tier '{name}': {knob} must be > 0 (or 0 = unlimited), got {v}");
+                }
+            }
+            if !(0.0..1.0).contains(&t.dropout) {
+                bail!("scenario tier '{name}': dropout must be in [0, 1), got {}", t.dropout);
+            }
+            if !(t.day_period.is_finite() && t.day_period >= 0.0) {
+                bail!("scenario tier '{name}': day_period must be >= 0, got {}", t.day_period);
+            }
+            if t.day_period > 0.0 && !(t.on_fraction > 0.0 && t.on_fraction <= 1.0) {
+                bail!(
+                    "scenario tier '{name}': on_fraction must be in (0, 1], got {}",
+                    t.on_fraction
+                );
+            }
+            if !(t.phase.is_finite() && t.phase >= 0.0) {
+                bail!("scenario tier '{name}': phase must be >= 0, got {}", t.phase);
+            }
+        }
+        if !(total_weight.is_finite() && total_weight > 0.0) {
+            bail!("scenario tier weights must sum to a positive finite value");
         }
         Ok(())
     }
+}
+
+/// Numeric config cell with a path-qualified error.
+fn scalar(v: &Json, what: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("config {what} must be a number"))
 }
 
 #[cfg(test)]
@@ -443,6 +688,116 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = Config::default();
         c.stop.target_accuracy = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_toml_two_tiers() {
+        let doc = toml::parse(
+            "[scenario]\narrival = \"bursty\"\nburst_factor = 3.0\n\
+             [scenario.tiers.fast]\nweight = 0.25\nduration_sigma = 0.5\nupload_mbps = 40.0\n\
+             [scenario.tiers.slow]\nweight = 0.75\nduration = \"lognormal\"\ndropout = 0.2\n\
+             day_period = 24.0\non_fraction = 0.5\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.resolved_arrival(), "bursty");
+        assert_eq!(c.scenario.burst_factor, 3.0);
+        // TOML tables are alphabetical: fast before slow
+        assert_eq!(c.scenario.tiers.len(), 2);
+        let fast = &c.scenario.tiers[0];
+        assert_eq!(fast.name, "fast");
+        assert_eq!(fast.weight, 0.25);
+        assert_eq!(fast.duration_sigma, 0.5);
+        assert_eq!(fast.upload_mbps, 40.0);
+        assert_eq!(fast.dropout, 0.0); // default
+        let slow = &c.scenario.tiers[1];
+        assert_eq!(slow.duration, "lognormal");
+        assert_eq!(slow.dropout, 0.2);
+        assert_eq!(slow.day_period, 24.0);
+        assert_eq!(slow.on_fraction, 0.5);
+        // explicit tiers win over the sim.* aliases
+        assert_eq!(c.resolved_tiers().len(), 2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn scenario_unknown_keys_rejected_loudly() {
+        let mut c = Config::default();
+        let doc = toml::parse("[scenario.tiers.slow]\nbandwidth = 3.0\n").unwrap();
+        let err = c.apply(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown tier key") && err.contains("bandwidth"), "{err}");
+        let doc = toml::parse("[scenario]\narrivals = \"poisson\"\n").unwrap();
+        let err = c.apply(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown [scenario] key"), "{err}");
+    }
+
+    #[test]
+    fn scenario_cli_set_overrides_merge() {
+        let mut c = Config::default();
+        c.set("scenario.tiers.slow.weight=2").unwrap();
+        c.set("scenario.tiers.slow.dropout=0.1").unwrap();
+        c.set("scenario.arrival=\"poisson\"").unwrap();
+        assert_eq!(c.scenario.tiers.len(), 1);
+        let slow = &c.scenario.tiers[0];
+        assert_eq!(slow.name, "slow");
+        assert_eq!(slow.weight, 2.0);
+        assert_eq!(slow.dropout, 0.1, "second --set must merge, not reset");
+        assert_eq!(c.resolved_arrival(), "poisson");
+    }
+
+    #[test]
+    fn sim_knobs_desugar_to_single_default_tier() {
+        let mut c = Config::default();
+        c.sim.duration = "lognormal".into();
+        c.sim.duration_sigma = 0.7;
+        c.sim.arrival = "poisson".into();
+        let tiers = c.resolved_tiers();
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].name, "default");
+        assert_eq!(tiers[0].duration, "lognormal");
+        assert_eq!(tiers[0].duration_sigma, 0.7);
+        assert_eq!(tiers[0].upload_mbps, 0.0);
+        assert_eq!(tiers[0].dropout, 0.0);
+        assert_eq!(c.resolved_arrival(), "poisson");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn scenario_validation_catches_bad_tiers() {
+        let bad = |f: &dyn Fn(&mut TierConfig)| {
+            let mut c = Config::default();
+            let mut t = TierConfig::named("x");
+            f(&mut t);
+            c.scenario.tiers = vec![t];
+            c.validate()
+        };
+        assert!(bad(&|_| {}).is_ok());
+        assert!(bad(&|t| t.weight = -1.0).is_err());
+        assert!(bad(&|t| t.weight = 0.0).is_err());
+        assert!(bad(&|t| t.weight = f64::NAN).is_err());
+        assert!(bad(&|t| t.dropout = 1.0).is_err());
+        assert!(bad(&|t| t.dropout = -0.1).is_err());
+        assert!(bad(&|t| t.duration_sigma = 0.0).is_err());
+        assert!(bad(&|t| t.duration = "uniform".into()).is_err());
+        assert!(bad(&|t| t.upload_mbps = -2.0).is_err());
+        assert!(bad(&|t| {
+            t.day_period = 10.0;
+            t.on_fraction = 0.0;
+        })
+        .is_err());
+        assert!(bad(&|t| t.phase = -1.0).is_err());
+
+        let mut c = Config::default();
+        c.scenario.arrival = Some("flashmob".into());
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.scenario.burst_on = 0.0;
+        assert!(c.validate().is_err());
+        // sim.duration_sigma flows into the desugared tier's validation
+        let mut c = Config::default();
+        c.sim.duration_sigma = 0.0;
         assert!(c.validate().is_err());
     }
 

@@ -1,0 +1,180 @@
+//! E8 — heterogeneity ablation: QAFeL vs FedBuff vs DirectQuant under a
+//! **slow-tier-dominated population** (scenario engine,
+//! DESIGN_SCENARIOS.md).
+//!
+//! FedBuff (Nguyen et al. 2021) and QuAFL-style analyses agree that
+//! async-FL algorithms differentiate under client heterogeneity —
+//! slow/fast device tiers, dropouts, constrained links — rather than
+//! under the uniform population of the headline figures. This experiment
+//! runs the three algorithms over a population where 80% of clients are
+//! slow devices with heavy-tailed (log-normal) durations, 2/8 Mbps
+//! links and a 10% dropout rate, and reports both the paper-style
+//! aggregate table (`heterogeneity.csv/.md`) and the per-tier scenario
+//! metrics (`heterogeneity_tiers.csv`: staleness histograms, dropouts,
+//! bytes by tier).
+
+use super::runner::{aggregate, report, run_seeds, BackendFactory, Row};
+use crate::config::{Algorithm, Config, TierConfig};
+use crate::metrics::csv::CsvWriter;
+use crate::scenario::ScenarioMetrics;
+use crate::sim::SimOptions;
+use anyhow::Result;
+
+/// The hostile population: 20% fast devices (tight half-normal
+/// durations, fat links), 80% slow devices (log-normal durations, thin
+/// links, 10% dropout). Staleness and dropped work dominate — exactly
+/// the regime where buffered aggregation + bidirectional quantization
+/// must not fall over.
+pub fn slow_dominated(base: &Config) -> Config {
+    let mut cfg = base.clone();
+    let mut fast = TierConfig::named("fast");
+    fast.weight = 0.2;
+    fast.duration_sigma = 0.4;
+    fast.upload_mbps = 50.0;
+    fast.download_mbps = 200.0;
+    let mut slow = TierConfig::named("slow");
+    slow.weight = 0.8;
+    slow.duration = "lognormal".into();
+    slow.duration_sigma = 1.0;
+    slow.upload_mbps = 2.0;
+    slow.download_mbps = 8.0;
+    slow.dropout = 0.10;
+    cfg.scenario.tiers = vec![fast, slow];
+    cfg
+}
+
+/// Run the ablation. Returns the aggregate rows (qafel, fedbuff,
+/// directquant) and writes `heterogeneity.{csv,md}` plus
+/// `heterogeneity_tiers.csv` under `out_dir`.
+pub fn run(
+    base: &Config,
+    make_backend: &BackendFactory,
+    out_dir: &str,
+    opts: &SimOptions,
+) -> Result<Vec<Row>> {
+    let cfg0 = slow_dominated(base);
+    let mut rows = Vec::new();
+    let mut tiers_csv = CsvWriter::new(&[
+        "algorithm",
+        "seed",
+        "tier",
+        "arrivals",
+        "unavailable",
+        "dropouts",
+        "uploads",
+        "upload_mb",
+        "download_mb",
+        "staleness_mean",
+        "staleness_max",
+        "staleness_hist",
+        "mean_concurrency",
+        "max_live_snapshots",
+    ]);
+    for (label, algo) in [
+        ("qafel", Algorithm::Qafel),
+        ("fedbuff", Algorithm::FedBuff),
+        ("directquant", Algorithm::DirectQuant),
+    ] {
+        let mut cfg = cfg0.clone();
+        cfg.fl.algorithm = algo;
+        let set = run_seeds(&cfg, make_backend, opts, label)?;
+        for (result, &seed) in set.results.iter().zip(&cfg.seeds) {
+            tier_rows(&mut tiers_csv, label, seed, &result.scenario);
+        }
+        rows.push(aggregate(&set));
+    }
+    let md = report("heterogeneity", out_dir, &rows)?;
+    println!("{md}");
+    tiers_csv.save(format!("{out_dir}/heterogeneity_tiers.csv"))?;
+    Ok(rows)
+}
+
+/// Flatten one run's per-tier metrics into CSV rows.
+fn tier_rows(csv: &mut CsvWriter, label: &str, seed: u64, m: &ScenarioMetrics) {
+    for t in &m.tiers {
+        csv.row(&[
+            label.to_string(),
+            seed.to_string(),
+            t.name.clone(),
+            t.arrivals.to_string(),
+            t.unavailable.to_string(),
+            t.dropouts.to_string(),
+            t.uploads.to_string(),
+            format!("{:.4}", t.upload_bytes as f64 / 1e6),
+            format!("{:.4}", t.download_bytes as f64 / 1e6),
+            format!("{:.3}", t.staleness.mean()),
+            t.staleness.max.to_string(),
+            t.staleness.spec_string(),
+            format!("{:.2}", m.mean_concurrency),
+            m.max_live_snapshots.to_string(),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::QuadraticBackend;
+
+    fn base() -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::Qafel;
+        c.quant.client = "qsgd:4".into();
+        c.quant.server = "qsgd:4".into();
+        c.fl.buffer_size = 4;
+        c.fl.client_lr = 0.15;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c.fl.clip_norm = 0.0;
+        c.sim.concurrency = 10;
+        c.sim.eval_every = 10;
+        c.seeds = vec![1];
+        c.stop.target_accuracy = 2.0; // fixed horizon
+        c.stop.max_uploads = 3000;
+        c.stop.max_server_steps = 150;
+        c
+    }
+
+    fn factory(seed: u64) -> Result<Box<dyn crate::runtime::Backend>> {
+        Ok(Box::new(QuadraticBackend::new(64, 10, 1.0, 0.3, 0.2, 0.02, 2, seed)))
+    }
+
+    #[test]
+    fn heterogeneity_runs_and_writes_tier_metrics() {
+        let dir = std::env::temp_dir().join(format!("qafel-het-{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let cfg = base();
+        cfg.validate().unwrap();
+        let rows = run(&cfg, &factory, &dir_s, &Default::default()).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.uploads_k_mean > 0.0, "{} ran no uploads", r.label);
+        }
+        // quantized uploads are smaller than fedbuff's full precision
+        let (qafel, fedbuff) = (&rows[0], &rows[1]);
+        assert!(
+            qafel.kb_per_upload < fedbuff.kb_per_upload / 4.0,
+            "qafel {} vs fedbuff {}",
+            qafel.kb_per_upload,
+            fedbuff.kb_per_upload
+        );
+        // per-tier csv: header + 3 algorithms x 1 seed x 2 tiers
+        let text =
+            std::fs::read_to_string(dir.join("heterogeneity_tiers.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + 3 * 2, "{text}");
+        assert!(lines[0].starts_with("algorithm,seed,tier"));
+        assert!(text.contains("fast") && text.contains("slow"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slow_dominated_population_is_valid_and_slower() {
+        let cfg = slow_dominated(&base());
+        cfg.validate().unwrap();
+        assert_eq!(cfg.scenario.tiers.len(), 2);
+        assert!(cfg.scenario.tiers[1].dropout > 0.0);
+        // the mix must be slow-dominated by weight
+        assert!(cfg.scenario.tiers[1].weight > 2.0 * cfg.scenario.tiers[0].weight);
+    }
+}

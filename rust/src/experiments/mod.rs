@@ -8,6 +8,7 @@
 //! | E3 | Table 2 (biased top_k server)           | [`table2`] |
 //! | E4 | Prop. 3.5 order validation              | [`convergence`] |
 //! | E5–E7 | hidden-state / K / staleness ablations | [`ablations`] |
+//! | E8 | heterogeneous-population ablation       | [`heterogeneity`] |
 //!
 //! Each experiment writes `reports/<name>.csv` (raw rows) and
 //! `reports/<name>.md` (a paper-style table) and prints the table.
@@ -15,6 +16,7 @@
 pub mod ablations;
 pub mod convergence;
 pub mod fig3;
+pub mod heterogeneity;
 pub mod runner;
 pub mod table1;
 pub mod table2;

@@ -9,7 +9,10 @@
 //!   (FedBuff), bidirectional quantized communication and a shared hidden
 //!   state ([`coordinator`]), plus the event-driven simulator ([`sim`]),
 //!   a real threaded/TCP runtime ([`net`]), quantizers with exact wire
-//!   codecs ([`quant`]), and the experiment harness ([`experiments`]).
+//!   codecs ([`quant`]), the heterogeneous-population scenario engine
+//!   ([`scenario`], DESIGN_SCENARIOS.md: device tiers, pluggable arrival
+//!   processes, versioned snapshot store for million-client streams),
+//!   and the experiment harness ([`experiments`]).
 //!   The server step runs as a **sharded aggregation pipeline**
 //!   (`cfg.fl.shards`, DESIGN_SHARDING.md): accumulate / momentum /
 //!   diff / `Q_s` encode execute shard-parallel over bucket-aligned
@@ -32,6 +35,7 @@ pub mod metrics;
 pub mod net;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testing;
 pub mod util;

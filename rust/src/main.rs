@@ -1,8 +1,9 @@
 //! `qafel` — command-line entry point.
 //!
 //! Subcommands:
-//! * `exp fig3|table1|table2|convergence|ablate` — regenerate the paper's
-//!   figures/tables (DESIGN.md §6) into `reports/`.
+//! * `exp fig3|table1|table2|convergence|ablate|heterogeneity` —
+//!   regenerate the paper's figures/tables (DESIGN.md §6) and the
+//!   scenario-engine ablation into `reports/`.
 //! * `run` — one simulated training run, printing the curve.
 //! * `leader` / `worker` — the real TCP distributed runtime.
 //! * `info` — inspect an artifact manifest.
@@ -27,7 +28,8 @@ const USAGE: &str = "\
 qafel <command> [options]
 
 commands:
-  exp <fig3|table1|table2|convergence|ablate>   regenerate paper results
+  exp <fig3|table1|table2|convergence|ablate|heterogeneity>
+                                                regenerate paper results
   run                                           single simulated run
   leader --addr HOST:PORT --workers N           TCP leader
   worker --addr HOST:PORT                       TCP worker (quadratic backend)
@@ -42,7 +44,16 @@ options:
   --out DIR          report output directory (default: reports)
   --horizons LIST    convergence: comma-separated T values
   --which LIST       ablate: hidden-state,k-sweep,staleness,non-broadcast
+  --fast             heterogeneity: tiny population smoke (CI)
   --verbose          progress logging
+
+scenario overrides (heterogeneous populations, DESIGN_SCENARIOS.md):
+  --set 'scenario.arrival=\"bursty\"'          constant | poisson | bursty
+  --set scenario.tiers.slow.weight=0.8       per-tier knobs: weight, duration,
+  --set scenario.tiers.slow.dropout=0.1      duration_sigma, upload_mbps,
+  --set scenario.tiers.slow.day_period=24    download_mbps, dropout, day_period,
+                                             on_fraction, phase
+  (string values keep their TOML quotes: quote the whole --set for the shell)
 ";
 
 fn load_config(args: &Args) -> Result<Config> {
@@ -129,7 +140,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("exp needs a target: fig3|table1|table2|convergence|ablate"))?
+        .ok_or_else(|| {
+            anyhow!("exp needs a target: fig3|table1|table2|convergence|ablate|heterogeneity")
+        })?
         .clone();
     let mut cfg = load_config(args)?;
     let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
@@ -142,6 +155,13 @@ fn cmd_exp(args: &Args) -> Result<()> {
     }
     let out = args.opt("out").unwrap_or("reports").to_string();
     let opts = SimOptions { verbose: args.flag("verbose"), ..Default::default() };
+    if which == "heterogeneity" && args.flag("fast") {
+        // CI smoke: tiny population, 2 tiers, single seed
+        cfg.seeds.truncate(1);
+        cfg.sim.concurrency = cfg.sim.concurrency.min(20);
+        cfg.stop.max_server_steps = cfg.stop.max_server_steps.min(120);
+        cfg.stop.max_uploads = cfg.stop.max_uploads.min(3000);
+    }
     let factory = make_factory(&kind, &cfg);
     let factory: &BackendFactory = factory.as_ref();
 
@@ -169,6 +189,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
                 .map(|s| s.trim().parse().map_err(|e| anyhow!("bad horizon: {e}")))
                 .collect::<Result<_>>()?;
             experiments::convergence::run(&cfg, factory, &out, &horizons)?;
+        }
+        "heterogeneity" => {
+            experiments::heterogeneity::run(&cfg, factory, &out, &opts)?;
         }
         "ablate" => {
             let which = args.opt("which").unwrap_or("hidden-state,k-sweep,staleness,non-broadcast");
@@ -236,6 +259,21 @@ fn cmd_run(args: &Args) -> Result<()> {
             p.time
         ),
         None => println!("  target not reached"),
+    }
+    let sc = &result.scenario;
+    // print for any explicit scenario (even one-tier populations carry
+    // dropout/window/bandwidth behavior worth seeing); skip only the
+    // desugared default
+    if !cfg.scenario.tiers.is_empty() {
+        println!(
+            "\nscenario ({} tiers, mean concurrency {:.1}, peak in-flight {}, \
+             peak live snapshots {}):",
+            sc.tiers.len(),
+            sc.mean_concurrency,
+            sc.max_in_flight,
+            sc.max_live_snapshots
+        );
+        print!("{}", sc.table());
     }
     Ok(())
 }

@@ -10,6 +10,8 @@
 
 pub mod csv;
 
+use crate::scenario::ScenarioMetrics;
+
 /// Running communication totals for one run.
 #[derive(Clone, Debug, Default)]
 pub struct CommMetrics {
@@ -91,6 +93,10 @@ pub struct RunResult {
     pub server_steps: u64,
     /// Wall-clock seconds the run took to execute (not virtual time).
     pub wall_seconds: f64,
+    /// Per-tier population metrics (staleness histograms, dropouts,
+    /// bytes by tier, concurrency/snapshot tracking). A single "default"
+    /// tier for runs without a `[scenario]` table.
+    pub scenario: ScenarioMetrics,
 }
 
 impl RunResult {
@@ -145,6 +151,7 @@ mod tests {
             final_accuracy: 0.95,
             server_steps: 10,
             wall_seconds: 0.0,
+            scenario: Default::default(),
         };
         assert_eq!(r.at_target().uploads, 50);
         let r2 = RunResult { reached: None, ..r };

@@ -1,0 +1,220 @@
+//! Pluggable client arrival processes.
+//!
+//! The paper models arrivals at a constant rate (Appendix D); Poisson
+//! arrivals are the classical ablation; the bursty process is a 2-state
+//! Markov-modulated Poisson process (MMPP) standing in for flash crowds
+//! and regional wake-ups. All three are normalized to the same
+//! **long-run** arrival rate, which [`super::population::Scenario`]
+//! calibrates as `concurrency / (availability-weighted E[duration])` —
+//! the target concurrency is sustained on average regardless of the
+//! process chosen.
+//!
+//! Determinism contract: `next_gap` draws only from the `Prng` it is
+//! handed (the simulator's "arrivals" stream), and the constant process
+//! draws nothing — exactly the draw pattern of the pre-scenario engine,
+//! which keeps the desugared default bit-identical.
+
+use crate::util::dist::Exponential;
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+
+/// A point process generating client arrivals in virtual time.
+pub trait ArrivalProcess {
+    fn name(&self) -> &'static str;
+
+    /// Virtual-time gap from the arrival just emitted to the next one.
+    fn next_gap(&mut self, rng: &mut Prng) -> f64;
+}
+
+/// Evenly spaced arrivals (the paper's model). Draws no randomness.
+pub struct ConstantArrival {
+    gap: f64,
+}
+
+impl ArrivalProcess for ConstantArrival {
+    fn name(&self) -> &'static str {
+        "constant"
+    }
+
+    fn next_gap(&mut self, _rng: &mut Prng) -> f64 {
+        self.gap
+    }
+}
+
+/// Poisson arrivals: iid exponential gaps (one draw per arrival).
+pub struct PoissonArrival {
+    exp: Exponential,
+}
+
+impl ArrivalProcess for PoissonArrival {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn next_gap(&mut self, rng: &mut Prng) -> f64 {
+        self.exp.sample(rng)
+    }
+}
+
+/// 2-state MMPP: a background ("off") Poisson regime interrupted by
+/// bursts ("on") running at `burst_factor` times the off rate. Regime
+/// sojourns are exponential with means `mean_on` / `mean_off`, so the
+/// long-run rate is `rate` by construction:
+///
+/// ```text
+/// p_on    = mean_on / (mean_on + mean_off)
+/// rate_off = rate / (1 - p_on + factor * p_on),   rate_on = factor * rate_off
+/// ```
+///
+/// Because the exponential is memoryless, drawing a fresh gap after each
+/// regime switch reproduces the MMPP exactly (no thinning needed).
+pub struct BurstyArrival {
+    rate_on: f64,
+    rate_off: f64,
+    mean_on: f64,
+    mean_off: f64,
+    on: bool,
+    /// Virtual time left in the current regime; lazily initialized on
+    /// the first draw so construction consumes no randomness.
+    remaining: f64,
+    started: bool,
+}
+
+impl ArrivalProcess for BurstyArrival {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn next_gap(&mut self, rng: &mut Prng) -> f64 {
+        if !self.started {
+            self.remaining = Exponential::new(1.0 / self.mean_off).sample(rng);
+            self.started = true;
+        }
+        let mut gap = 0.0;
+        loop {
+            let rate = if self.on { self.rate_on } else { self.rate_off };
+            let draw = Exponential::new(rate).sample(rng);
+            if draw < self.remaining {
+                self.remaining -= draw;
+                return gap + draw;
+            }
+            gap += self.remaining;
+            self.on = !self.on;
+            let mean = if self.on { self.mean_on } else { self.mean_off };
+            self.remaining = Exponential::new(1.0 / mean).sample(rng);
+        }
+    }
+}
+
+/// Build an arrival process by name. `rate` is the long-run arrivals per
+/// unit virtual time; the bursty parameters come from the `[scenario]`
+/// table.
+pub fn build_arrival(
+    kind: &str,
+    rate: f64,
+    burst_factor: f64,
+    burst_on: f64,
+    burst_off: f64,
+) -> Result<Box<dyn ArrivalProcess>> {
+    if !(rate.is_finite() && rate > 0.0) {
+        bail!("arrival rate must be positive and finite, got {rate}");
+    }
+    Ok(match kind {
+        "constant" => Box::new(ConstantArrival { gap: 1.0 / rate }),
+        "poisson" => Box::new(PoissonArrival { exp: Exponential::new(rate) }),
+        "bursty" => {
+            if !(burst_factor.is_finite() && burst_factor > 0.0) {
+                bail!("scenario.burst_factor must be > 0, got {burst_factor}");
+            }
+            if !(burst_on > 0.0 && burst_off > 0.0) {
+                bail!("scenario.burst_on/burst_off must be > 0");
+            }
+            let p_on = burst_on / (burst_on + burst_off);
+            let rate_off = rate / ((1.0 - p_on) + burst_factor * p_on);
+            Box::new(BurstyArrival {
+                rate_on: burst_factor * rate_off,
+                rate_off,
+                mean_on: burst_on,
+                mean_off: burst_off,
+                on: false,
+                remaining: 0.0,
+                started: false,
+            })
+        }
+        other => bail!("unknown arrival process '{other}' (constant | poisson | bursty)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_rate(p: &mut dyn ArrivalProcess, n: usize, seed: u64) -> f64 {
+        let mut rng = Prng::new(seed);
+        let mut total = 0.0;
+        for _ in 0..n {
+            total += p.next_gap(&mut rng);
+        }
+        n as f64 / total
+    }
+
+    #[test]
+    fn constant_is_exact_and_draws_nothing() {
+        let mut p = build_arrival("constant", 8.0, 4.0, 1.0, 4.0).unwrap();
+        let mut rng = Prng::new(1);
+        let before = rng.clone().next_u64();
+        for _ in 0..10 {
+            assert_eq!(p.next_gap(&mut rng), 0.125);
+        }
+        assert_eq!(rng.next_u64(), before, "constant arrivals must not draw randomness");
+    }
+
+    #[test]
+    fn poisson_long_run_rate_matches() {
+        let mut p = build_arrival("poisson", 5.0, 4.0, 1.0, 4.0).unwrap();
+        let r = mean_rate(p.as_mut(), 200_000, 2);
+        assert!((r - 5.0).abs() / 5.0 < 0.02, "poisson rate {r}");
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches_but_is_overdispersed() {
+        let mut p = build_arrival("bursty", 5.0, 6.0, 1.0, 4.0).unwrap();
+        let r = mean_rate(p.as_mut(), 400_000, 3);
+        assert!((r - 5.0).abs() / 5.0 < 0.05, "bursty long-run rate {r}");
+
+        // count arrivals per unit-time window: MMPP variance-to-mean
+        // ratio exceeds the Poisson value of 1
+        let dispersion = |p: &mut dyn ArrivalProcess, seed: u64| {
+            let mut rng = Prng::new(seed);
+            let (mut t, mut window, mut count) = (0.0f64, 0usize, 0u64);
+            let mut counts = vec![0u64; 2000];
+            while window < counts.len() {
+                t += p.next_gap(&mut rng);
+                while window < counts.len() && t > (window + 1) as f64 {
+                    counts[window] = count;
+                    count = 0;
+                    window += 1;
+                }
+                count += 1;
+            }
+            let n = counts.len() as f64;
+            let mean = counts.iter().sum::<u64>() as f64 / n;
+            let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / n;
+            var / mean
+        };
+        let mut bursty = build_arrival("bursty", 5.0, 6.0, 1.0, 4.0).unwrap();
+        let mut poisson = build_arrival("poisson", 5.0, 4.0, 1.0, 4.0).unwrap();
+        let db = dispersion(bursty.as_mut(), 7);
+        let dp = dispersion(poisson.as_mut(), 7);
+        assert!(db > 1.5 * dp, "bursty dispersion {db} vs poisson {dp}");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(build_arrival("weibull", 1.0, 4.0, 1.0, 4.0).is_err());
+        assert!(build_arrival("constant", 0.0, 4.0, 1.0, 4.0).is_err());
+        assert!(build_arrival("constant", f64::NAN, 4.0, 1.0, 4.0).is_err());
+        assert!(build_arrival("bursty", 1.0, 0.0, 1.0, 4.0).is_err());
+        assert!(build_arrival("bursty", 1.0, 4.0, 0.0, 4.0).is_err());
+    }
+}

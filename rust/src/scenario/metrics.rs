@@ -1,0 +1,244 @@
+//! Per-tier and per-run scenario metrics (staleness histograms, dropout
+//! counts, byte accounting by device tier, concurrency tracking).
+//!
+//! Everything here is plain counting — no randomness is drawn — so
+//! recording metrics can never perturb a run's trajectory. The counters
+//! are threaded into [`crate::metrics::RunResult`] by the simulator and
+//! flattened to CSV by the heterogeneity experiment.
+
+/// Power-of-two bucketed histogram of observed staleness values
+/// (`tau_n(t)` in the paper). Bucket 0 holds exact zeros; bucket `i >= 1`
+/// holds `[2^(i-1), 2^i)`, so the whole `u64` range fits in 65 buckets
+/// while the small staleness values the theory cares about stay
+/// individually resolved.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StalenessHist {
+    /// Bucket counts, grown on demand (index = [`StalenessHist::bucket`]).
+    pub counts: Vec<u64>,
+    /// Sum of all recorded values (for the exact mean).
+    pub sum: u64,
+    /// Largest recorded value.
+    pub max: u64,
+    /// Number of recorded values.
+    pub n: u64,
+}
+
+impl StalenessHist {
+    /// Bucket index for a staleness value.
+    pub fn bucket(s: u64) -> usize {
+        if s == 0 {
+            0
+        } else {
+            64 - s.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive value range `(lo, hi)` covered by bucket `i`.
+    pub fn bucket_range(i: usize) -> (u64, u64) {
+        if i == 0 {
+            (0, 0)
+        } else if i >= 64 {
+            // top bucket saturates (1 << 64 would overflow the shift)
+            (1u64 << 63, u64::MAX)
+        } else {
+            (1u64 << (i - 1), (1u64 << i) - 1)
+        }
+    }
+
+    pub fn record(&mut self, s: u64) {
+        let b = Self::bucket(s);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.sum += s;
+        self.max = self.max.max(s);
+        self.n += 1;
+    }
+
+    /// Exact mean of the recorded values.
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Compact text form for CSV cells: `"0:12|1:30|2-3:7"` (empty
+    /// buckets omitted).
+    pub fn spec_string(&self) -> String {
+        let mut parts = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let (lo, hi) = Self::bucket_range(i);
+            if lo == hi {
+                parts.push(format!("{lo}:{c}"));
+            } else {
+                parts.push(format!("{lo}-{hi}:{c}"));
+            }
+        }
+        parts.join("|")
+    }
+}
+
+/// Counters for one device tier.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TierMetrics {
+    pub name: String,
+    /// Clients of this tier that arrived while the tier was available.
+    pub arrivals: u64,
+    /// Arrivals skipped because the tier was in its off window.
+    pub unavailable: u64,
+    /// Clients that trained but dropped before uploading.
+    pub dropouts: u64,
+    /// Updates this tier delivered to the server.
+    pub uploads: u64,
+    /// Wire bytes uploaded by this tier.
+    pub upload_bytes: u64,
+    /// Wire bytes downloaded by this tier (one hidden-state increment
+    /// per trip in broadcast mode).
+    pub download_bytes: u64,
+    pub staleness: StalenessHist,
+}
+
+/// All scenario-level metrics for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioMetrics {
+    /// One entry per tier, in the scenario's tier order.
+    pub tiers: Vec<TierMetrics>,
+    /// Staleness over every upload regardless of tier.
+    pub staleness: StalenessHist,
+    /// Time-averaged number of in-flight clients (Little's-law check
+    /// against `sim.concurrency`).
+    pub mean_concurrency: f64,
+    /// Peak number of simultaneously in-flight clients.
+    pub max_in_flight: usize,
+    /// Peak number of live model versions in the snapshot store — the
+    /// memory story: O(distinct versions), not O(in-flight clients).
+    pub max_live_snapshots: usize,
+}
+
+impl ScenarioMetrics {
+    pub fn with_tiers<I: IntoIterator<Item = String>>(names: I) -> ScenarioMetrics {
+        ScenarioMetrics {
+            tiers: names
+                .into_iter()
+                .map(|name| TierMetrics { name, ..Default::default() })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_arrival(&mut self, tier: usize) {
+        self.tiers[tier].arrivals += 1;
+    }
+
+    pub fn record_unavailable(&mut self, tier: usize) {
+        self.tiers[tier].unavailable += 1;
+    }
+
+    pub fn record_dropout(&mut self, tier: usize, download_bytes: usize) {
+        let t = &mut self.tiers[tier];
+        t.dropouts += 1;
+        t.download_bytes += download_bytes as u64;
+    }
+
+    pub fn record_upload(
+        &mut self,
+        tier: usize,
+        staleness: u64,
+        upload_bytes: usize,
+        download_bytes: usize,
+    ) {
+        let t = &mut self.tiers[tier];
+        t.uploads += 1;
+        t.upload_bytes += upload_bytes as u64;
+        t.download_bytes += download_bytes as u64;
+        t.staleness.record(staleness);
+        self.staleness.record(staleness);
+    }
+
+    /// Human-readable per-tier table (printed by `qafel run` for
+    /// multi-tier scenarios).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "  tier         arrivals  unavail  dropped  uploads      MB-up    MB-down  stale-mean  stale-max\n",
+        );
+        for t in &self.tiers {
+            out.push_str(&format!(
+                "  {:<12} {:>8} {:>8} {:>8} {:>8} {:>10.3} {:>10.3} {:>11.2} {:>10}\n",
+                t.name,
+                t.arrivals,
+                t.unavailable,
+                t.dropouts,
+                t.uploads,
+                t.upload_bytes as f64 / 1e6,
+                t.download_bytes as f64 / 1e6,
+                t.staleness.mean(),
+                t.staleness.max,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_powers_of_two() {
+        assert_eq!(StalenessHist::bucket(0), 0);
+        assert_eq!(StalenessHist::bucket(1), 1);
+        assert_eq!(StalenessHist::bucket(2), 2);
+        assert_eq!(StalenessHist::bucket(3), 2);
+        assert_eq!(StalenessHist::bucket(4), 3);
+        assert_eq!(StalenessHist::bucket(7), 3);
+        assert_eq!(StalenessHist::bucket(8), 4);
+        assert_eq!(StalenessHist::bucket(u64::MAX), 64);
+        assert_eq!(StalenessHist::bucket_range(0), (0, 0));
+        assert_eq!(StalenessHist::bucket_range(1), (1, 1));
+        assert_eq!(StalenessHist::bucket_range(3), (4, 7));
+        assert_eq!(StalenessHist::bucket_range(64), (1u64 << 63, u64::MAX));
+    }
+
+    #[test]
+    fn histogram_records_and_summarizes() {
+        let mut h = StalenessHist::default();
+        for s in [0u64, 0, 1, 2, 3, 6, 6] {
+            h.record(s);
+        }
+        assert_eq!(h.n, 7);
+        assert_eq!(h.max, 6);
+        assert!((h.mean() - 18.0 / 7.0).abs() < 1e-12);
+        assert_eq!(h.counts, vec![2, 1, 2, 2]);
+        assert_eq!(h.spec_string(), "0:2|1:1|2-3:2|4-7:2");
+    }
+
+    #[test]
+    fn tier_recording_accumulates() {
+        let mut m =
+            ScenarioMetrics::with_tiers(["fast".to_string(), "slow".to_string()]);
+        m.record_arrival(0);
+        m.record_arrival(1);
+        m.record_arrival(1);
+        m.record_unavailable(1);
+        m.record_upload(0, 2, 100, 50);
+        m.record_upload(1, 5, 200, 50);
+        m.record_dropout(1, 50);
+        assert_eq!(m.tiers[0].uploads, 1);
+        assert_eq!(m.tiers[1].dropouts, 1);
+        assert_eq!(m.tiers[1].arrivals, 2);
+        assert_eq!(m.tiers[1].unavailable, 1);
+        assert_eq!(m.tiers[0].upload_bytes, 100);
+        assert_eq!(m.tiers[1].download_bytes, 100);
+        assert_eq!(m.staleness.n, 2);
+        assert_eq!(m.staleness.max, 5);
+        let table = m.table();
+        assert!(table.contains("fast") && table.contains("slow"));
+    }
+}

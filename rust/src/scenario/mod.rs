@@ -1,0 +1,39 @@
+//! Scenario engine: heterogeneous client populations at million-client
+//! scale (DESIGN_SCENARIOS.md).
+//!
+//! The simulator used to model clients with two global knobs
+//! (`sim.arrival`, `sim.duration`) and one shared delay distribution.
+//! This subsystem owns the population model instead:
+//!
+//! * [`population::Scenario`] — a weighted mix of **device tiers**
+//!   ([`crate::config::TierConfig`]), each with its own duration
+//!   distribution, upload/download bandwidth (fed into per-trip transfer
+//!   delays and byte accounting), dropout probability, and diurnal
+//!   availability window;
+//! * [`arrival`] — pluggable **arrival processes** behind a trait:
+//!   constant (paper), Poisson, and a bursty 2-state MMPP, all
+//!   calibrated to the same long-run rate `concurrency / E[duration]`;
+//! * [`snapshots::SnapshotStore`] — **versioned hidden-state snapshots**
+//!   keyed by server step `t`: every client arriving between two server
+//!   steps shares one `Arc`, so memory is O(distinct model versions),
+//!   not O(in-flight clients) — the property that makes `concurrency`
+//!   in the 10⁵–10⁶ range feasible;
+//! * [`metrics::ScenarioMetrics`] — per-tier staleness histograms,
+//!   dropout counts and byte totals, threaded into
+//!   [`crate::metrics::RunResult`].
+//!
+//! **Back-compat contract**: a config without a `[scenario]` table
+//! desugars to a single always-available tier built from the `sim.*`
+//! knobs, and the engine's randomness streams are arranged so that this
+//! default reproduces the pre-scenario simulator **bit-identically**
+//! (golden-tested in `tests/scenario.rs`).
+
+pub mod arrival;
+pub mod metrics;
+pub mod population;
+pub mod snapshots;
+
+pub use arrival::{build_arrival, ArrivalProcess};
+pub use metrics::{ScenarioMetrics, StalenessHist, TierMetrics};
+pub use population::{duration_dist, Scenario, Tier};
+pub use snapshots::SnapshotStore;

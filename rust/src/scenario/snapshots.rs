@@ -1,0 +1,178 @@
+//! Versioned hidden-state snapshot store keyed by server step `t`.
+//!
+//! The paper's client (Algorithm 2 line 1) copies the hidden state at the
+//! *start* of local training. In the virtual-time simulator every client
+//! arriving between two server steps sees the **same** hidden state, so
+//! there is no reason for each in-flight client to carry its own handle:
+//! the store keeps exactly one `Arc<Vec<f32>>` per *distinct* published
+//! model version that still has a reader, and in-flight clients carry
+//! only the `u64` version key.
+//!
+//! Memory math: with `C` in-flight clients whose staleness spans `V`
+//! server steps, the store holds `V + 1 <= staleness_max + 2` vectors of
+//! `d` floats — O(V·d), not O(C·d). `V` is bounded by the staleness the
+//! algorithm itself tolerates (a handful of steps at the paper's
+//! operating points), so concurrency in the 10⁵–10⁶ range costs 10⁵–10⁶
+//! *event records* (a few dozen bytes each) plus a handful of model
+//! vectors — which is what makes million-client arrival streams feasible.
+//!
+//! Versions are reference-counted explicitly (not via `Arc` strong
+//! counts) so eviction is deterministic and observable: a version is
+//! dropped the moment its last reader releases it, unless it is still
+//! the current version (the next arrival may acquire it).
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+struct Entry {
+    snap: Arc<Vec<f32>>,
+    refs: usize,
+}
+
+/// The store. One per simulation run.
+pub struct SnapshotStore {
+    versions: BTreeMap<u64, Entry>,
+    current: u64,
+    max_live: usize,
+}
+
+impl SnapshotStore {
+    /// Start the store at version `t0` (server step 0) with the initial
+    /// hidden state.
+    pub fn new(t0: u64, snap: Arc<Vec<f32>>) -> SnapshotStore {
+        let mut versions = BTreeMap::new();
+        versions.insert(t0, Entry { snap, refs: 0 });
+        SnapshotStore { versions, current: t0, max_live: 1 }
+    }
+
+    /// Publish the hidden state after a server step. The previous
+    /// current version is evicted immediately if no in-flight client
+    /// holds it.
+    pub fn publish(&mut self, t: u64, snap: Arc<Vec<f32>>) {
+        debug_assert!(t > self.current, "snapshot versions must advance");
+        if let Some(prev) = self.versions.get(&self.current) {
+            if prev.refs == 0 {
+                self.versions.remove(&self.current);
+            }
+        }
+        self.current = t;
+        self.versions.insert(t, Entry { snap, refs: 0 });
+        self.max_live = self.max_live.max(self.versions.len());
+    }
+
+    /// A client starts training now: record a reference to the current
+    /// version and return its key (the client's `t_start`).
+    pub fn acquire(&mut self) -> u64 {
+        let e = self
+            .versions
+            .get_mut(&self.current)
+            .expect("current snapshot version is always live");
+        e.refs += 1;
+        self.current
+    }
+
+    /// The model vector for a version previously acquired.
+    pub fn get(&self, t: u64) -> Result<&Arc<Vec<f32>>> {
+        self.versions
+            .get(&t)
+            .map(|e| &e.snap)
+            .ok_or_else(|| anyhow!("snapshot store: version {t} is not live"))
+    }
+
+    /// A client finished (or dropped): release its version, evicting it
+    /// if it was the last reader of a superseded version.
+    pub fn release(&mut self, t: u64) {
+        let evict = match self.versions.get_mut(&t) {
+            Some(e) => {
+                debug_assert!(e.refs > 0, "release without acquire for version {t}");
+                e.refs = e.refs.saturating_sub(1);
+                e.refs == 0 && t != self.current
+            }
+            None => {
+                debug_assert!(false, "release of unknown version {t}");
+                false
+            }
+        };
+        if evict {
+            self.versions.remove(&t);
+        }
+    }
+
+    /// Number of model versions currently held.
+    pub fn live_versions(&self) -> usize {
+        self.versions.len()
+    }
+
+    /// Peak number of simultaneously live versions over the store's
+    /// lifetime.
+    pub fn max_live(&self) -> usize {
+        self.max_live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(v: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![v; 4])
+    }
+
+    #[test]
+    fn acquire_get_release_roundtrip() {
+        let mut s = SnapshotStore::new(0, snap(0.0));
+        let t = s.acquire();
+        assert_eq!(t, 0);
+        assert_eq!(s.get(t).unwrap()[0], 0.0);
+        s.release(t);
+        // current version is never evicted, even at zero refs
+        assert_eq!(s.live_versions(), 1);
+        assert!(s.get(0).is_ok());
+    }
+
+    #[test]
+    fn superseded_version_evicted_on_last_release() {
+        let mut s = SnapshotStore::new(0, snap(0.0));
+        let a = s.acquire();
+        let b = s.acquire();
+        s.publish(1, snap(1.0));
+        assert_eq!(s.live_versions(), 2);
+        s.release(a);
+        assert_eq!(s.live_versions(), 2, "still one reader on v0");
+        s.release(b);
+        assert_eq!(s.live_versions(), 1, "v0 evicted with its last reader");
+        assert!(s.get(0).is_err());
+        assert_eq!(s.get(1).unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn unread_versions_evicted_at_publish() {
+        let mut s = SnapshotStore::new(0, snap(0.0));
+        for t in 1..=100u64 {
+            s.publish(t, snap(t as f32));
+            assert_eq!(s.live_versions(), 1, "no readers => one live version");
+        }
+        assert_eq!(s.max_live(), 1);
+    }
+
+    #[test]
+    fn live_versions_track_reader_span_not_reader_count() {
+        // 10_000 "clients" acquire across 3 versions: memory is 3
+        // versions, not 10_000 snapshots.
+        let mut s = SnapshotStore::new(0, snap(0.0));
+        let mut held = Vec::new();
+        for step in 0..3u64 {
+            for _ in 0..10_000 {
+                held.push(s.acquire());
+            }
+            s.publish(step + 1, snap(step as f32 + 1.0));
+        }
+        assert_eq!(s.live_versions(), 4);
+        assert_eq!(s.max_live(), 4);
+        for t in held {
+            s.release(t);
+        }
+        assert_eq!(s.live_versions(), 1);
+    }
+}

@@ -1,30 +1,38 @@
 //! The virtual-time engine driving [`Server`] + [`ClientLogic`] over a
-//! [`Backend`].
+//! [`Backend`], with the client population owned by the scenario engine
+//! ([`crate::scenario`], DESIGN_SCENARIOS.md).
 
-use crate::config::Config;
+use crate::config::{Algorithm, Config};
 use crate::coordinator::{ClientLogic, Server, ServerStep};
 use crate::metrics::{CurvePoint, RunResult};
+use crate::quant::parse_spec;
 use crate::runtime::Backend;
-use crate::util::dist::{DurationDist, Exponential, HalfNormal, LogNormal};
+use crate::scenario::{Scenario, SnapshotStore};
 use crate::util::prng::Prng;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-use std::sync::Arc;
 
 /// A scheduled simulator event.
 enum EventKind {
     /// A new client becomes available and starts training.
     Arrival,
-    /// A client finishes local training and uploads.
+    /// A client finishes (training + transfers) and uploads — or drops.
     Finish {
         user: usize,
-        /// Hidden-state snapshot taken at start time (Algorithm 2 line 1).
-        snapshot: Arc<Vec<f32>>,
-        /// Server step count at start time (for staleness).
+        /// Index into the scenario's tier list.
+        tier: usize,
+        /// Server step at start time: the key of the hidden-state
+        /// snapshot in the [`SnapshotStore`] (Algorithm 2 line 1) and
+        /// the baseline for staleness. In-flight clients carry this u64
+        /// instead of an `Arc` snapshot each — memory stays O(distinct
+        /// model versions) no matter the concurrency.
         t_start: u64,
         /// Unique per-trip id (drives batch sampling + quantizer noise).
         trip: u64,
+        /// Client drops before uploading (decided at arrival from the
+        /// tier's dropout probability; the lazy compute is skipped).
+        dropped: bool,
     },
 }
 
@@ -84,15 +92,6 @@ impl<'a> SimEngine<'a> {
         SimEngine { cfg, backend, seed }
     }
 
-    fn duration_dist(&self) -> Result<DurationDist> {
-        Ok(match self.cfg.sim.duration.as_str() {
-            "halfnormal" => DurationDist::HalfNormal(HalfNormal::new(self.cfg.sim.duration_sigma)),
-            "lognormal" => DurationDist::LogNormal(LogNormal::new(0.0, self.cfg.sim.duration_sigma)),
-            "fixed" => DurationDist::Fixed(self.cfg.sim.duration_sigma),
-            other => bail!("unknown duration dist '{other}'"),
-        })
-    }
-
     /// Run one simulation; deterministic in (cfg, backend, seed).
     pub fn run(&self) -> Result<RunResult> {
         self.run_with(&SimOptions::default())
@@ -110,20 +109,40 @@ impl<'a> SimEngine<'a> {
         let mut arrival_rng = root.stream("arrivals");
         let mut duration_rng = root.stream("durations");
         let mut sampling_rng = root.stream("client-sampling");
-        let mut duration_dist = self.duration_dist()?;
+        // Scenario-only randomness lives on its own named streams (and
+        // single-tier / zero-dropout populations draw nothing from them),
+        // so the desugared default consumes exactly the same randomness
+        // as the pre-scenario engine — bit-identical trajectories.
+        let mut tier_rng = root.stream("scenario-tier");
+        let mut dropout_rng = root.stream("scenario-dropout");
 
-        // arrival process: constant rate (paper) or Poisson
-        let rate = HalfNormal::new(self.cfg.sim.duration_sigma)
-            .rate_for_concurrency(self.cfg.sim.concurrency as f64)
-            .max(duration_dist_rate_floor(&duration_dist, self.cfg.sim.concurrency));
-        let constant_gap = 1.0 / rate;
-        let poisson = Exponential::new(rate);
-        let use_poisson = self.cfg.sim.arrival == "poisson";
+        let mut scenario = Scenario::build(self.cfg)?;
 
         // initial model: shared x^0 (Algorithm 1 line 1 / Algorithm 3)
         let x0 = self.backend.init_params(self.seed as i32 & 0x7FFF_FFFF)?;
         let mut server = Server::build(self.cfg, x0, root.stream("server").next_u64_here())?;
         let logic = ClientLogic::new(self.cfg, root.stream("client").next_u64_here())?;
+        let d = server.d();
+
+        // Per-trip wire sizes for tier bandwidth delays + byte metrics.
+        // Both codecs emit fixed-size payloads, so these are exact; the
+        // download is one hidden-state increment (broadcast mode). The
+        // arrival rate is recalibrated with them so bandwidth-limited
+        // tiers don't overshoot the target concurrency (algorithms with
+        // bigger payloads would otherwise run at different effective
+        // concurrency from the same config).
+        let upload_bytes = logic.upload_bytes(d);
+        let download_spec = match self.cfg.fl.algorithm {
+            Algorithm::Qafel | Algorithm::DirectQuant => self.cfg.quant.server.as_str(),
+            Algorithm::FedBuff | Algorithm::FedAsync => "none",
+        };
+        let download_bytes = parse_spec(download_spec)?.expected_bytes(d);
+        scenario.recalibrate(upload_bytes, download_bytes);
+        let mut arrival = scenario.arrival_process()?;
+
+        // Versioned snapshot store: all clients arriving between two
+        // server steps share one Arc (O(versions) memory, not O(clients)).
+        let mut store = SnapshotStore::new(server.t(), server.client_snapshot());
 
         let mut events: BinaryHeap<Event> = BinaryHeap::new();
         let mut seq = 0u64;
@@ -141,6 +160,12 @@ impl<'a> SimEngine<'a> {
         let mut last_eval_t = 0u64;
         let n_users = self.backend.num_train_users();
 
+        // concurrency tracking (Little's-law calibration check):
+        // time-integral of the in-flight count
+        let mut in_flight = 0usize;
+        let mut max_in_flight = 0usize;
+        let mut in_flight_area = 0.0f64;
+
         // evaluate x^0 so curves start at t=0
         let ev0 = self.backend.evaluate(server.model())?;
         curve.push(CurvePoint {
@@ -156,35 +181,69 @@ impl<'a> SimEngine<'a> {
 
         let mut clock = 0.0f64;
         while let Some(ev) = events.pop() {
+            in_flight_area += in_flight as f64 * (ev.time - clock);
             clock = ev.time;
             match ev.kind {
                 EventKind::Arrival => {
-                    // this client starts training now
-                    let user = sampling_rng.range(0, n_users);
-                    let dur = duration_dist.sample(&mut duration_rng).max(1e-9);
-                    let trip = trips;
-                    trips += 1;
-                    push(
-                        &mut events,
-                        clock + dur,
-                        EventKind::Finish {
-                            user,
-                            snapshot: server.client_snapshot(),
-                            t_start: server.t(),
-                            trip,
-                        },
-                    );
+                    let tier = scenario.sample_tier(&mut tier_rng);
+                    if scenario.available(tier, clock) {
+                        // this client starts training now
+                        scenario.metrics.record_arrival(tier);
+                        let user = sampling_rng.range(0, n_users);
+                        let dur = scenario.sample_duration(tier, &mut duration_rng).max(1e-9);
+                        let dropped = scenario.sample_dropout(tier, &mut dropout_rng);
+                        let t_start = store.acquire();
+                        let trip = trips;
+                        trips += 1;
+                        in_flight += 1;
+                        max_in_flight = max_in_flight.max(in_flight);
+                        // residency = download + training (+ upload,
+                        // unless the client drops before uploading)
+                        let mut delay = scenario.download_delay(tier, download_bytes);
+                        if !dropped {
+                            delay += scenario.upload_delay(tier, upload_bytes);
+                        }
+                        push(
+                            &mut events,
+                            clock + dur + delay,
+                            EventKind::Finish { user, tier, t_start, trip, dropped },
+                        );
+                    } else {
+                        scenario.metrics.record_unavailable(tier);
+                    }
                     // schedule the next arrival
-                    let gap = if use_poisson { poisson.sample(&mut arrival_rng) } else { constant_gap };
+                    let gap = arrival.next_gap(&mut arrival_rng);
                     push(&mut events, clock + gap, EventKind::Arrival);
                 }
-                EventKind::Finish { user, snapshot, t_start, trip } => {
+                EventKind::Finish { user, tier, t_start, trip, dropped } => {
+                    in_flight -= 1;
+                    if dropped {
+                        // trained, downloaded, never uploaded — skip the
+                        // lazy compute entirely and release the version
+                        store.release(t_start);
+                        scenario.metrics.record_dropout(tier, download_bytes);
+                        continue;
+                    }
                     // lazy compute against the start-time snapshot
+                    let snapshot = store
+                        .get(t_start)
+                        .map_err(|e| anyhow!("{e} (trip {trip})"))?
+                        .clone();
                     let upload = logic.run_round(self.backend, &snapshot, user, trip)?;
                     drop(snapshot);
+                    store.release(t_start);
                     let staleness = server.t() - t_start;
+                    scenario.metrics.record_upload(
+                        tier,
+                        staleness,
+                        upload.msg.wire_bytes(),
+                        download_bytes,
+                    );
                     let stepped =
                         matches!(server.ingest(&upload.msg, staleness)?, ServerStep::Stepped(_));
+                    if stepped {
+                        store.publish(server.t(), server.client_snapshot());
+                    }
 
                     if stepped && server.t() - last_eval_t >= self.cfg.sim.eval_every as u64 {
                         last_eval_t = server.t();
@@ -232,6 +291,11 @@ impl<'a> SimEngine<'a> {
         }
 
         let final_accuracy = curve.last().map(|p| p.val_accuracy).unwrap_or(0.0);
+        let mut scenario_metrics = scenario.metrics;
+        scenario_metrics.mean_concurrency =
+            if clock > 0.0 { in_flight_area / clock } else { 0.0 };
+        scenario_metrics.max_in_flight = max_in_flight;
+        scenario_metrics.max_live_snapshots = store.max_live();
         Ok((
             RunResult {
                 curve,
@@ -240,16 +304,11 @@ impl<'a> SimEngine<'a> {
                 final_accuracy,
                 server_steps: server.t(),
                 wall_seconds: wall_start.elapsed().as_secs_f64(),
+                scenario: scenario_metrics,
             },
             hidden_trace,
         ))
     }
-}
-
-/// Arrival rate must be positive even for degenerate duration dists.
-fn duration_dist_rate_floor(d: &DurationDist, concurrency: usize) -> f64 {
-    let mean = d.mean().max(1e-9);
-    concurrency as f64 / mean * 1e-6
 }
 
 /// Helper so a derived stream can yield one u64 inline.
@@ -266,7 +325,7 @@ impl NextHere for Prng {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Algorithm, Config};
+    use crate::config::{Algorithm, Config, TierConfig};
     use crate::runtime::QuadraticBackend;
 
     fn quad_cfg(algorithm: Algorithm) -> Config {
@@ -364,18 +423,14 @@ mod tests {
         hi.sim.concurrency = 200;
         let e_lo = SimEngine::new(&lo, &b, 3);
         let e_hi = SimEngine::new(&hi, &b, 3);
-        // reach into the server by re-running and checking mean staleness
-        // via RunResult comm totals is not exposed; use uploads/steps:
-        // with K=4 fixed, higher concurrency => more in-flight work =>
-        // strictly more uploads issued for the same number of steps is
-        // not guaranteed, but staleness must rise. We approximate via
-        // the upload overshoot past the final step.
         let r_lo = e_lo.run().unwrap();
         let r_hi = e_hi.run().unwrap();
         assert_eq!(r_lo.server_steps, 200);
         assert_eq!(r_hi.server_steps, 200);
         // sanity: both made progress and hi processed >= lo uploads
         assert!(r_hi.comm.uploads >= r_lo.comm.uploads);
+        // the scenario staleness histogram sees the same effect
+        assert!(r_hi.scenario.staleness.mean() > r_lo.scenario.staleness.mean());
     }
 
     #[test]
@@ -441,5 +496,94 @@ mod tests {
         let max0 = trace.iter().take(3).cloned().fold(0.0, f64::max);
         let max1 = trace.iter().rev().take(3).cloned().fold(0.0, f64::max);
         assert!(max1 <= (max0 + 1.0) * 50.0, "hidden error exploding: {max0} -> {max1}");
+    }
+
+    #[test]
+    fn default_scenario_reports_single_tier_metrics() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 80;
+        c.stop.target_accuracy = 2.0;
+        let r = SimEngine::new(&c, &b, 9).run().unwrap();
+        let sc = &r.scenario;
+        assert_eq!(sc.tiers.len(), 1);
+        assert_eq!(sc.tiers[0].name, "default");
+        assert_eq!(sc.tiers[0].uploads, r.comm.uploads);
+        assert_eq!(sc.tiers[0].upload_bytes, r.comm.upload_bytes);
+        assert_eq!(sc.tiers[0].dropouts, 0);
+        assert_eq!(sc.tiers[0].unavailable, 0);
+        assert_eq!(sc.staleness.n, r.comm.uploads);
+        assert!(sc.mean_concurrency > 0.0);
+        assert!(sc.max_in_flight > 0);
+        assert!(sc.max_live_snapshots >= 1);
+    }
+
+    #[test]
+    fn heterogeneous_population_records_tier_metrics() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.target_accuracy = 2.0; // fixed horizon
+        let mut fast = TierConfig::named("fast");
+        fast.weight = 0.4;
+        fast.duration_sigma = 0.5;
+        fast.upload_mbps = 10.0;
+        fast.download_mbps = 40.0;
+        let mut slow = TierConfig::named("slow");
+        slow.weight = 0.6;
+        slow.duration = "lognormal".into();
+        slow.dropout = 0.3;
+        slow.day_period = 5.0;
+        slow.on_fraction = 0.5;
+        c.scenario.tiers = vec![fast, slow];
+        c.validate().unwrap();
+        let r = SimEngine::new(&c, &b, 12).run().unwrap();
+        let sc = &r.scenario;
+        assert_eq!(sc.tiers.len(), 2);
+        // tier metrics are consistent with the server's accounting
+        let uploads: u64 = sc.tiers.iter().map(|t| t.uploads).sum();
+        let upload_bytes: u64 = sc.tiers.iter().map(|t| t.upload_bytes).sum();
+        assert_eq!(uploads, r.comm.uploads);
+        assert_eq!(upload_bytes, r.comm.upload_bytes);
+        assert_eq!(sc.staleness.n, r.comm.uploads);
+        // the hostile tier actually dropped work and went dark at night
+        let slow_m = &sc.tiers[1];
+        assert_eq!(slow_m.name, "slow");
+        assert!(slow_m.dropouts > 0, "expected slow-tier dropouts");
+        assert!(slow_m.unavailable > 0, "expected off-window arrivals");
+        assert!(sc.tiers[0].dropouts == 0 && sc.tiers[0].unavailable == 0);
+        // arrivals = uploads + dropouts + still-in-flight at the break
+        let slow_accounted = slow_m.uploads + slow_m.dropouts;
+        assert!(slow_m.arrivals >= slow_accounted);
+        // both tiers carried traffic and recorded transfer bytes
+        assert!(sc.tiers[0].uploads > 0 && slow_m.uploads > 0);
+        assert!(sc.tiers[0].download_bytes > 0);
+    }
+
+    #[test]
+    fn snapshot_memory_is_versions_not_concurrency() {
+        // acceptance: <= 1 live snapshot Arc per server step regardless
+        // of concurrency — 2000 in-flight clients share a handful of
+        // model versions.
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.sim.concurrency = 2000;
+        c.stop.target_accuracy = 2.0;
+        c.stop.max_server_steps = 25;
+        c.stop.max_uploads = 1_000_000;
+        let r = SimEngine::new(&c, &b, 13).run().unwrap();
+        assert_eq!(r.server_steps, 25);
+        let sc = &r.scenario;
+        assert!(
+            sc.max_live_snapshots <= 26,
+            "live versions {} > server steps + 1",
+            sc.max_live_snapshots
+        );
+        assert!(sc.max_in_flight > 100, "in-flight {}", sc.max_in_flight);
+        assert!(
+            sc.max_live_snapshots * 4 < sc.max_in_flight,
+            "snapshots {} vs in-flight {}",
+            sc.max_live_snapshots,
+            sc.max_in_flight
+        );
     }
 }

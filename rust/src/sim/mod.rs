@@ -1,21 +1,32 @@
 //! Event-driven virtual-time simulator of the asynchronous FL system
 //! (paper §4 / Appendix D timing model).
 //!
-//! * clients **arrive at a constant rate** (or Poisson, for ablations);
-//!   the rate is derived from the target concurrency via
-//!   `rate = concurrency / E[duration]`, reproducing the paper's
-//!   125 / 627 / 1253 clients-per-unit-time for 100 / 500 / 1000;
-//! * each client trains for a **half-normal** duration |N(0, sigma^2)|
-//!   (Meta production model) — log-normal and fixed for ablations;
-//! * a client's model snapshot is the hidden state at its **start** time
-//!   (a cheap `Arc` clone); its update is ingested at its **finish**
-//!   time. Staleness = server steps between the two, exactly the paper's
-//!   `tau_n(t)`. The gradient computation itself happens lazily at the
-//!   finish event, against the start-time snapshot — virtual time is
+//! The client population is owned by the scenario engine
+//! ([`crate::scenario`], DESIGN_SCENARIOS.md):
+//!
+//! * clients **arrive** via a pluggable process — constant rate (paper),
+//!   Poisson, or bursty MMPP — calibrated to
+//!   `rate = concurrency / E[duration]` under the configured tier mix
+//!   (reproducing the paper's 125 / 627 / 1253 clients-per-unit-time for
+//!   100 / 500 / 1000 at the default half-normal);
+//! * each arrival is assigned a **device tier**: its own duration
+//!   distribution (half-normal default — the Meta production model —
+//!   log-normal and fixed for ablations), upload/download bandwidth
+//!   (adding per-trip transfer delays and byte accounting), dropout
+//!   probability, and diurnal availability window;
+//! * a client's model snapshot is the hidden state at its **start** time,
+//!   held as a `u64` version key into a shared
+//!   [`crate::scenario::SnapshotStore`] — all clients arriving between
+//!   two server steps share one `Arc`, so memory is O(distinct model
+//!   versions), not O(in-flight clients). Its update is ingested at its
+//!   **finish** time. Staleness = server steps between the two, exactly
+//!   the paper's `tau_n(t)`. The gradient computation happens lazily at
+//!   the finish event, against the start-time snapshot — virtual time is
 //!   completely decoupled from compute time.
 //!
-//! Concurrency 1000 therefore needs no threads: the engine is a binary
-//! heap of (time, event) pairs processed in deterministic order.
+//! Concurrency 10⁶ therefore needs no threads: the engine is a binary
+//! heap of (time, event) pairs processed in deterministic order, and an
+//! in-flight client costs a few dozen bytes of event record.
 
 pub mod engine;
 

@@ -186,6 +186,24 @@ mod tests {
     }
 
     #[test]
+    fn duration_dist_means_are_exact_per_distribution() {
+        // The scenario engine calibrates rate = concurrency / E[D] from
+        // these means. E[lognormal(0,1)] = e^0.5 ~ 1.65 vs
+        // E[|N(0,1)|] ~ 0.80: reusing the half-normal mean for lognormal
+        // durations (the pre-scenario engine's bug) overshoots achieved
+        // concurrency by ~2x.
+        let hn = DurationDist::HalfNormal(HalfNormal::new(1.0));
+        let ln = DurationDist::LogNormal(LogNormal::new(0.0, 1.0));
+        let fx = DurationDist::Fixed(2.0);
+        assert!((hn.mean() - (2.0 / std::f64::consts::PI).sqrt()).abs() < 1e-15);
+        assert!((ln.mean() - 0.5f64.exp()).abs() < 1e-12);
+        assert_eq!(fx.mean(), 2.0);
+        assert_eq!((100.0 / hn.mean()).round() as i64, 125); // paper rate
+        let ratio = ln.mean() / hn.mean();
+        assert!(ratio > 2.0, "miscalibration factor {ratio}");
+    }
+
+    #[test]
     fn exponential_mean() {
         let mut rng = Prng::new(3);
         let e = Exponential::new(4.0);
