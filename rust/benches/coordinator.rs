@@ -104,72 +104,84 @@ fn main() {
 }
 
 /// Sharded-pipeline sweep: wall time of one full server step (K = 10
-/// ingests + momentum/diff/Q_s/broadcast) vs shard count and model
-/// dimension. Writes BENCH_sharded_step.json next to the working dir.
+/// ingests + momentum/diff/Q_s/broadcast) on the persistent shard pool,
+/// vs shard count, model dimension and codec. `qsgd:4` sweeps the full
+/// dimension range; the biased codecs (`top:0.1`'s candidate merge,
+/// `rand:0.1`'s per-bucket index streams) ride the smaller dims so the
+/// smoke stays fast. Writes BENCH_sharded_step.json.
 fn shard_sweep() {
     const K: usize = 10;
-    let dims: &[usize] = if common::fast_mode() {
+    let full_dims: &[usize] = if common::fast_mode() {
         &[29_474, 1 << 20]
     } else {
         &[29_474, 1 << 20, 1 << 23] // paper scale .. ~8.4M coordinates
     };
+    let biased_dims: &[usize] = &[29_474, 1 << 20];
     let shard_counts = [1usize, 2, 4, 8];
-    println!("\n== sharded server step (qafel qsgd:4/qsgd:4, K = {K}) ==");
-    println!("{:>10} {:>4} {:>14} {:>12} {:>9}", "d", "S", "ns/step", "steps/s", "speedup");
+    println!("\n== sharded server step on the persistent pool (K = {K}) ==");
+    println!(
+        "{:>10} {:>10} {:>4} {:>14} {:>12} {:>9}",
+        "codec", "d", "S", "ns/step", "steps/s", "speedup"
+    );
 
     let mut results: Vec<Json> = Vec::new();
-    for &dim in dims {
-        let codec = parse_spec("qsgd:4").unwrap();
-        let mut qrng = Prng::new(3);
-        let delta: Vec<f32> = {
-            let mut r = Prng::new(4);
-            (0..dim).map(|_| (r.f32() - 0.5) * 1e-3).collect()
-        };
-        let msg = codec.quantize(&delta, &mut qrng);
-        // enough steps for a stable mean, scaled down as d grows
-        let steps = (scaled(40_000_000) / dim.max(1)).clamp(3, 2_000);
-        let mut baseline_ns = 0.0f64;
-        for &shards in &shard_counts {
-            let mut c = cfg(Algorithm::Qafel, "qsgd:4", "qsgd:4", K);
-            c.fl.shards = shards;
-            let mut server = Server::build(&c, vec![0.0; dim], 1).unwrap();
-            // warmup one full step
-            for i in 0..K {
-                let _ = black_box(server.ingest(&msg, (i % 3) as u64).unwrap());
-            }
-            let t0 = Instant::now();
-            for step in 0..steps {
+    for spec in ["qsgd:4", "top:0.1", "rand:0.1"] {
+        let dims = if spec == "qsgd:4" { full_dims } else { biased_dims };
+        for &dim in dims {
+            let codec = parse_spec(spec).unwrap();
+            let mut qrng = Prng::new(3);
+            let delta: Vec<f32> = {
+                let mut r = Prng::new(4);
+                (0..dim).map(|_| (r.f32() - 0.5) * 1e-3).collect()
+            };
+            let msg = codec.quantize(&delta, &mut qrng);
+            // enough steps for a stable mean, scaled down as d grows
+            let steps = (scaled(40_000_000) / dim.max(1)).clamp(3, 2_000);
+            let mut baseline_ns = 0.0f64;
+            for &shards in &shard_counts {
+                let mut c = cfg(Algorithm::Qafel, spec, spec, K);
+                c.fl.shards = shards;
+                let mut server = Server::build(&c, vec![0.0; dim], 1).unwrap();
+                // warmup one full step
                 for i in 0..K {
-                    let _ = black_box(server.ingest(&msg, ((step + i) % 5) as u64).unwrap());
+                    let _ = black_box(server.ingest(&msg, (i % 3) as u64).unwrap());
                 }
+                let t0 = Instant::now();
+                for step in 0..steps {
+                    for i in 0..K {
+                        let _ = black_box(server.ingest(&msg, ((step + i) % 5) as u64).unwrap());
+                    }
+                }
+                let ns_per_step = t0.elapsed().as_nanos() as f64 / steps as f64;
+                if shards == 1 {
+                    baseline_ns = ns_per_step;
+                }
+                let speedup = baseline_ns / ns_per_step;
+                println!(
+                    "{:>10} {:>10} {:>4} {:>14.0} {:>12.1} {:>8.2}x",
+                    spec,
+                    dim,
+                    shards,
+                    ns_per_step,
+                    1e9 / ns_per_step,
+                    speedup
+                );
+                results.push(Json::obj(vec![
+                    ("codec", Json::str(spec)),
+                    ("d", Json::num(dim as f64)),
+                    ("shards", Json::num(shards as f64)),
+                    ("k_buffer", Json::num(K as f64)),
+                    ("steps_timed", Json::num(steps as f64)),
+                    ("ns_per_step", Json::num(ns_per_step)),
+                    ("steps_per_sec", Json::num(1e9 / ns_per_step)),
+                    ("speedup_vs_s1", Json::num(speedup)),
+                ]));
             }
-            let ns_per_step = t0.elapsed().as_nanos() as f64 / steps as f64;
-            if shards == 1 {
-                baseline_ns = ns_per_step;
-            }
-            let speedup = baseline_ns / ns_per_step;
-            println!(
-                "{:>10} {:>4} {:>14.0} {:>12.1} {:>8.2}x",
-                dim,
-                shards,
-                ns_per_step,
-                1e9 / ns_per_step,
-                speedup
-            );
-            results.push(Json::obj(vec![
-                ("d", Json::num(dim as f64)),
-                ("shards", Json::num(shards as f64)),
-                ("k_buffer", Json::num(K as f64)),
-                ("steps_timed", Json::num(steps as f64)),
-                ("ns_per_step", Json::num(ns_per_step)),
-                ("steps_per_sec", Json::num(1e9 / ns_per_step)),
-                ("speedup_vs_s1", Json::num(speedup)),
-            ]));
         }
     }
     let doc = Json::obj(vec![
         ("bench", Json::str("sharded_step")),
-        ("quantizers", Json::str("client qsgd:4, server qsgd:4")),
+        ("quantizers", Json::str("client == server codec per row")),
         ("threads_available", Json::num(
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64,
         )),

@@ -69,9 +69,33 @@ pub struct FlConfig {
     /// Server aggregation shards S: the server step (accumulate,
     /// momentum + eta_g apply, hidden-state diff, Q_s encode/apply) runs
     /// in parallel over S contiguous, bucket-aligned ranges of the model
-    /// vector (DESIGN_SHARDING.md). 1 = sequential. Broadcast payloads
-    /// are bit-identical for every S.
+    /// vector on a persistent worker pool (DESIGN_SHARDING.md). 1 =
+    /// sequential (no-thread pool). Broadcast payloads are bit-identical
+    /// for every S.
     pub shards: usize,
+    /// Pool size for the simulator's eval path (validation reductions on
+    /// the shard pool). 0 = inherit `shards` and reuse the server's
+    /// pool; any other value sizes a dedicated eval pool. Eval results
+    /// are bit-identical for every value (fixed-block reductions).
+    pub eval_shards: usize,
+}
+
+/// The `QAFEL_TEST_SHARDS` override (CI's shard matrix), if set and
+/// valid (1..=256). Public so the shard-matrix tests read the exact
+/// value `Config::default()` will use instead of re-parsing the env.
+pub fn env_shards_override() -> Option<usize> {
+    std::env::var("QAFEL_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|s| (1..=256).contains(s))
+}
+
+/// Default for `fl.shards`. `QAFEL_TEST_SHARDS` overrides it so the
+/// whole test suite runs under S > 1 without touching every config
+/// literal — safe because the sharded pipeline's contract is
+/// bit-identical output for every S.
+fn default_shards() -> usize {
+    env_shards_override().unwrap_or(1)
 }
 
 impl Default for FlConfig {
@@ -88,7 +112,8 @@ impl Default for FlConfig {
             staleness_scaling: false,
             local_steps: 1,
             clip_norm: 1.0,
-            shards: 1,
+            shards: default_shards(),
+            eval_shards: 0,
         }
     }
 }
@@ -367,6 +392,7 @@ impl Config {
         get_num!(doc, &["fl", "local_steps"], self.fl.local_steps, usize);
         get_num!(doc, &["fl", "clip_norm"], self.fl.clip_norm, f32);
         get_num!(doc, &["fl", "shards"], self.fl.shards, usize);
+        get_num!(doc, &["fl", "eval_shards"], self.fl.eval_shards, usize);
 
         get_str!(doc, &["quant", "client"], self.quant.client);
         get_str!(doc, &["quant", "server"], self.quant.server);
@@ -527,6 +553,9 @@ impl Config {
         if self.fl.shards > 256 {
             bail!("fl.shards (S) must be <= 256 (one thread per shard)");
         }
+        if self.fl.eval_shards > 256 {
+            bail!("fl.eval_shards must be <= 256 (0 = inherit fl.shards)");
+        }
         if self.seeds.is_empty() {
             bail!("need at least one seed");
         }
@@ -664,17 +693,25 @@ mod tests {
     #[test]
     fn shards_knob_round_trips() {
         let c = Config::default();
-        assert_eq!(c.fl.shards, 1);
-        let doc = toml::parse("[fl]\nshards = 4\n").unwrap();
+        // the default is 1 unless the CI shard matrix overrides it
+        assert_eq!(c.fl.shards, env_shards_override().unwrap_or(1));
+        assert_eq!(c.fl.eval_shards, 0);
+        let doc = toml::parse("[fl]\nshards = 4\neval_shards = 2\n").unwrap();
         let mut c = Config::default();
         c.apply(&doc).unwrap();
         assert_eq!(c.fl.shards, 4);
+        assert_eq!(c.fl.eval_shards, 2);
         let mut c = Config::default();
         c.set("fl.shards=8").unwrap();
+        c.set("fl.eval_shards=4").unwrap();
         assert_eq!(c.fl.shards, 8);
+        assert_eq!(c.fl.eval_shards, 4);
         c.fl.shards = 0;
         assert!(c.validate().is_err());
         c.fl.shards = 10_000;
+        assert!(c.validate().is_err());
+        c.fl.shards = 1;
+        c.fl.eval_shards = 10_000;
         assert!(c.validate().is_err());
     }
 

@@ -18,8 +18,10 @@ use crate::config::{Algorithm, Config};
 use crate::coordinator::server::Broadcast;
 use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
 use crate::runtime::Backend;
+use crate::util::pool::ShardPool;
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Client-side policy: local training + upload quantization.
 pub struct ClientLogic {
@@ -96,25 +98,29 @@ pub struct HiddenReplica {
     /// Server step the replica has caught up to.
     pub t: u64,
     quant_s: Box<dyn Quantizer>,
-    /// Decode shards (mirrors `cfg.fl.shards`): applying a broadcast is
-    /// the same per-coordinate work as the server's x̂ advance, so big
-    /// replicas use the same shard-parallel decode path.
-    shards: usize,
+    /// Persistent decode pool (mirrors `cfg.fl.shards`): applying a
+    /// broadcast is the same per-coordinate work as the server's x̂
+    /// advance, so big replicas use the same shard-parallel decode path
+    /// — on long-lived workers, not per-broadcast spawns.
+    pool: Arc<ShardPool>,
 }
 
 impl HiddenReplica {
-    /// Initialize from the pre-agreed x^0 (Algorithm 3 line 1).
+    /// Initialize from the pre-agreed x^0 (Algorithm 3 line 1), with a
+    /// decode pool sized by `cfg.fl.shards`.
     pub fn new(cfg: &Config, x0: Vec<f32>) -> Result<HiddenReplica> {
+        let pool = ShardPool::new(cfg.fl.shards.max(1));
+        Self::with_pool(cfg, x0, pool)
+    }
+
+    /// Like [`HiddenReplica::new`] but sharing an existing pool (e.g.
+    /// the owning server's) instead of spawning new workers.
+    pub fn with_pool(cfg: &Config, x0: Vec<f32>, pool: Arc<ShardPool>) -> Result<HiddenReplica> {
         let spec = match cfg.fl.algorithm {
             Algorithm::Qafel | Algorithm::DirectQuant => cfg.quant.server.clone(),
             Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
         };
-        Ok(HiddenReplica {
-            x_hat: x0,
-            t: 0,
-            quant_s: parse_spec(&spec)?,
-            shards: cfg.fl.shards.max(1),
-        })
+        Ok(HiddenReplica { x_hat: x0, t: 0, quant_s: parse_spec(&spec)?, pool })
     }
 
     /// Apply one broadcast (Algorithm 3 line 4). Broadcasts must be
@@ -125,9 +131,9 @@ impl HiddenReplica {
         }
         if b.absolute {
             // DirectQuant mode: message carries the whole quantized model
-            sharded::dequantize_into(self.quant_s.as_ref(), &b.msg, &mut self.x_hat, self.shards)?;
+            sharded::dequantize_into(self.quant_s.as_ref(), &b.msg, &mut self.x_hat, &self.pool)?;
         } else {
-            sharded::accumulate(self.quant_s.as_ref(), &b.msg, 1.0, &mut self.x_hat, self.shards)?;
+            sharded::accumulate(self.quant_s.as_ref(), &b.msg, 1.0, &mut self.x_hat, &self.pool)?;
         }
         self.t = b.t;
         Ok(())

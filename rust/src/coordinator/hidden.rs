@@ -11,6 +11,7 @@
 
 use crate::coordinator::server::Broadcast;
 use crate::quant::{sharded, Quantizer};
+use crate::util::pool::ShardPool;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
 
@@ -90,21 +91,22 @@ impl UpdateLog {
 
     /// Like [`UpdateLog::push`] for quantized increments: decodes `b`
     /// with the server codec and advances the reference hidden state
-    /// through the shard-parallel decode path (same math as the
-    /// broadcasting server's x̂ advance, bit-identical for any `shards`).
+    /// through the shard-parallel decode path on `pool` (same math as
+    /// the broadcasting server's x̂ advance, bit-identical for any pool
+    /// size — pass the owning server's pool to reuse its workers).
     pub fn push_quantized(
         &mut self,
         b: Broadcast,
         quant_s: &dyn Quantizer,
-        shards: usize,
+        pool: &ShardPool,
     ) -> Result<()> {
         if b.t != self.t + 1 {
             bail!("update log: non-contiguous step {} (at {})", b.t, self.t);
         }
         if b.absolute {
-            sharded::dequantize_into(quant_s, &b.msg, &mut self.x_hat, shards)?;
+            sharded::dequantize_into(quant_s, &b.msg, &mut self.x_hat, pool)?;
         } else {
-            sharded::accumulate(quant_s, &b.msg, 1.0, &mut self.x_hat, shards)?;
+            sharded::accumulate(quant_s, &b.msg, 1.0, &mut self.x_hat, pool)?;
         }
         self.t = b.t;
         if self.log.len() == self.c_max {
@@ -221,6 +223,7 @@ mod tests {
         use crate::quant::parse_spec;
         use crate::util::prng::Prng;
         let qs = parse_spec("qsgd:4").unwrap();
+        let pool = ShardPool::new(2);
         let d = 300;
         let mut rng = Prng::new(3);
         let mut x_hat = vec![0.0f32; d];
@@ -230,14 +233,14 @@ mod tests {
             let msg = qs.quantize(&diff, &mut rng);
             qs.accumulate(&msg, 1.0, &mut x_hat).unwrap();
             let b = Broadcast { t, bytes: msg.wire_bytes(), msg, absolute: false };
-            log.push_quantized(b, qs.as_ref(), 2).unwrap();
+            log.push_quantized(b, qs.as_ref(), &pool).unwrap();
             assert_eq!(log.state(), &x_hat[..], "t={t}");
             assert_eq!(log.t(), t);
         }
         // gaps still rejected
         let msg = qs.quantize(&vec![0.0f32; d], &mut rng);
         let bad = Broadcast { t: 99, bytes: msg.wire_bytes(), msg, absolute: false };
-        assert!(log.push_quantized(bad, qs.as_ref(), 2).is_err());
+        assert!(log.push_quantized(bad, qs.as_ref(), &pool).is_err());
     }
 
     #[test]

@@ -24,18 +24,21 @@
 //! DESIGN_SHARDING.md): every per-coordinate stage of the step —
 //! client-update accumulate, the momentum + η_g apply, the hidden-state
 //! diff, the `Q_s` encode and the x̂ advance — runs in parallel over S
-//! contiguous ranges of the model vector on a scoped worker pool
-//! (`std::thread::scope`). Ranges are aligned to the codec's bucket
-//! structure so per-bucket QSGD norms stay shard-local and the packed
-//! body is byte-aligned at every seam; quantizer noise is drawn once,
-//! sequentially, so the broadcast bytes are **bit-identical for every
-//! S** (S = 1 runs fully inline with zero threading overhead). Codecs
-//! without a range view (top_k, rand_k) fall back to the sequential
-//! path for the codec stages while still sharding the dense algebra.
+//! contiguous ranges of the model vector on a **persistent
+//! [`ShardPool`]** owned by the server (S − 1 long-lived workers + the
+//! calling thread; zero thread spawns per step in steady state). Ranges
+//! are aligned to the codec's bucket structure so per-bucket QSGD norms
+//! stay shard-local and the packed body is byte-aligned at every seam;
+//! quantizer noise is drawn once, sequentially, so the broadcast bytes
+//! are **bit-identical for every S** (S = 1 runs fully inline with zero
+//! threading overhead). Every built-in codec shards — qsgd/identity by
+//! stitching per-range parts, top_k by a cross-shard candidate merge,
+//! rand_k through per-bucket index streams.
 
 use crate::config::{Algorithm, Config};
 use crate::metrics::CommMetrics;
 use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
+use crate::util::pool::{ShardPool, Task};
 use crate::util::prng::Prng;
 use crate::util::shard::span_for;
 use crate::util::vecf;
@@ -74,8 +77,10 @@ pub struct Server {
     beta: f32,
     staleness_scaling: bool,
     hidden_state_mode: bool,
-    /// Aggregation shards S (1 = sequential).
-    shards: usize,
+    /// Persistent worker pool for the S aggregation shards (S = 1 is a
+    /// no-thread pool; every stage runs inline). Shared with the sim's
+    /// eval path via [`Server::pool`].
+    pool: Arc<ShardPool>,
     quant_s: Box<dyn Quantizer>,
     /// Codec for *decoding* client uploads. Built from
     /// `cfg.quant.client` (resolved per algorithm) at construction; a
@@ -146,7 +151,7 @@ impl Server {
             beta: cfg.fl.server_momentum,
             staleness_scaling,
             hidden_state_mode,
-            shards: cfg.fl.shards.max(1),
+            pool: ShardPool::new(cfg.fl.shards.max(1)),
             quant_s,
             d,
             x_hat: Arc::new(x0.clone()),
@@ -179,7 +184,13 @@ impl Server {
 
     /// Aggregation shards S.
     pub fn shards(&self) -> usize {
-        self.shards
+        self.pool.shards()
+    }
+
+    /// The server's persistent shard worker pool — reused by the sim's
+    /// eval path and anything else that decodes at model scale.
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
     }
 
     /// The state a newly sampled client copies (Algorithm 2 line 1):
@@ -242,8 +253,8 @@ impl Server {
             1.0
         };
         // Dequantize straight into the aggregation buffer (no temp
-        // alloc), shard-parallel when S > 1 and the codec is range-capable.
-        sharded::accumulate(self.quant_c.as_ref(), update, w, &mut self.buffer, self.shards)?;
+        // alloc), shard-parallel on the persistent pool when S > 1.
+        sharded::accumulate(self.quant_c.as_ref(), update, w, &mut self.buffer, &self.pool)?;
         self.k_filled += 1;
 
         if self.k_filled < self.k_buffer {
@@ -258,27 +269,28 @@ impl Server {
     fn step(&mut self) -> Result<Broadcast> {
         let inv_k = 1.0 / self.k_buffer as f32;
         let (beta, eta_g) = (self.beta, self.eta_g);
-        let span = span_for(self.d, self.shards, 1);
+        let shards = self.pool.shards();
+        let span = span_for(self.d, shards, 1);
 
         // v <- beta * v + delta_bar ; x <- x + eta_g * v ; delta_bar <- 0
         // (purely elementwise: identical floats for any shard split)
-        if self.shards > 1 && span < self.d {
-            std::thread::scope(|s| {
-                for ((m, b), x) in self
-                    .momentum
-                    .chunks_mut(span)
-                    .zip(self.buffer.chunks_mut(span))
-                    .zip(self.x.chunks_mut(span))
-                {
-                    s.spawn(move || {
+        if shards > 1 && span < self.d {
+            let tasks: Vec<Task<'_>> = self
+                .momentum
+                .chunks_mut(span)
+                .zip(self.buffer.chunks_mut(span))
+                .zip(self.x.chunks_mut(span))
+                .map(|((m, b), x)| {
+                    Box::new(move || {
                         for i in 0..m.len() {
                             m[i] = beta * m[i] + b[i] * inv_k;
                             x[i] += eta_g * m[i];
                             b[i] = 0.0;
                         }
-                    });
-                }
-            });
+                    }) as Task<'_>
+                })
+                .collect();
+            self.pool.run(tasks);
         } else {
             for i in 0..self.d {
                 self.momentum[i] = self.beta * self.momentum[i] + self.buffer[i] * inv_k;
@@ -291,33 +303,31 @@ impl Server {
 
         let broadcast = if self.hidden_state_mode {
             // q^t = Q_s(x^{t+1} - x_hat^t); x_hat^{t+1} = x_hat^t + q^t
-            if self.shards > 1 && span < self.d {
-                std::thread::scope(|s| {
-                    for ((out, a), b) in self
-                        .diff
-                        .chunks_mut(span)
-                        .zip(self.x.chunks(span))
-                        .zip(self.x_hat.chunks(span))
-                    {
-                        s.spawn(move || vecf::sub(out, a, b));
-                    }
-                });
+            if shards > 1 && span < self.d {
+                let tasks: Vec<Task<'_>> = self
+                    .diff
+                    .chunks_mut(span)
+                    .zip(self.x.chunks(span))
+                    .zip(self.x_hat.chunks(span))
+                    .map(|((out, a), b)| Box::new(move || vecf::sub(out, a, b)) as Task<'_>)
+                    .collect();
+                self.pool.run(tasks);
             } else {
                 vecf::sub(&mut self.diff, &self.x, &self.x_hat);
             }
-            let msg = sharded::quantize(self.quant_s.as_ref(), &self.diff, &mut self.rng, self.shards);
+            let msg = sharded::quantize(self.quant_s.as_ref(), &self.diff, &mut self.rng, &self.pool);
             let bytes = msg.wire_bytes();
             self.comm.record_broadcast(bytes);
             let x_hat = Arc::make_mut(&mut self.x_hat);
-            sharded::accumulate(self.quant_s.as_ref(), &msg, 1.0, x_hat, self.shards)?;
+            sharded::accumulate(self.quant_s.as_ref(), &msg, 1.0, x_hat, &self.pool)?;
             Broadcast { t: self.t, bytes, msg, absolute: false }
         } else {
             // DirectQuant baseline: broadcast Q_s(x^{t+1}) itself
-            let msg = sharded::quantize(self.quant_s.as_ref(), &self.x, &mut self.rng, self.shards);
+            let msg = sharded::quantize(self.quant_s.as_ref(), &self.x, &mut self.rng, &self.pool);
             let bytes = msg.wire_bytes();
             self.comm.record_broadcast(bytes);
             let x_hat = Arc::make_mut(&mut self.x_hat);
-            sharded::dequantize_into(self.quant_s.as_ref(), &msg, x_hat, self.shards)?;
+            sharded::dequantize_into(self.quant_s.as_ref(), &msg, x_hat, &self.pool)?;
             Broadcast { t: self.t, bytes, msg, absolute: true }
         };
         Ok(broadcast)

@@ -99,6 +99,7 @@ pub fn non_broadcast_cost(
     let backend = make_backend(base.seeds[0])?;
     let d = backend.d();
     let qs = parse_spec(&base.quant.server)?;
+    let pool = crate::util::pool::ShardPool::new(base.fl.shards.max(1));
     let inc_bytes = qs.expected_bytes(d);
     let full_bytes = 4.0 * d as f64;
 
@@ -127,7 +128,7 @@ pub fn non_broadcast_cost(
         };
         // advance the reference hidden state through the real (sharded)
         // decode path — a zero payload decodes to a zero increment
-        log.push_quantized(b, qs.as_ref(), base.fl.shards)?;
+        log.push_quantized(b, qs.as_ref(), &pool)?;
     }
     let mean_catch_up = log.bytes_sent as f64 / downloads.max(1) as f64;
     Ok((mean_catch_up, full_bytes))

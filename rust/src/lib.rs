@@ -16,7 +16,10 @@
 //!   The server step runs as a **sharded aggregation pipeline**
 //!   (`cfg.fl.shards`, DESIGN_SHARDING.md): accumulate / momentum /
 //!   diff / `Q_s` encode execute shard-parallel over bucket-aligned
-//!   ranges with bit-identical broadcasts for every shard count.
+//!   ranges on a persistent worker pool ([`util::pool::ShardPool`] —
+//!   zero thread spawns per step) with bit-identical broadcasts for
+//!   every shard count, for every codec (qsgd/identity stitch, top_k
+//!   candidate-merge, rand_k per-bucket index streams).
 //! * **L2** — the LEAF-CelebA CNN fwd/bwd in JAX (`python/compile/model.py`),
 //!   AOT-lowered once to HLO text and executed from Rust via PJRT
 //!   ([`runtime`]). Python never runs on the request path.

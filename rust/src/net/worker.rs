@@ -50,6 +50,8 @@ impl<B: Backend> Worker<B> {
         let quant_c = parse_spec(&client_quant)?;
         let quant_s: Box<dyn Quantizer> = parse_spec(&server_quant)?;
         let mut rng = Prng::new(0xC11E27 ^ worker_id as u64).stream("worker-quant");
+        // persistent decode pool, reused for every broadcast this run
+        let pool = crate::util::pool::ShardPool::new(self.shards.max(1));
 
         // --- Algorithm 3: background replica thread -------------------------
         // The reader thread receives broadcasts and forwards them; the
@@ -81,11 +83,11 @@ impl<B: Backend> Worker<B> {
                         }
                         if absolute {
                             crate::quant::sharded::dequantize_into(
-                                quant_s.as_ref(), &qmsg, &mut x_hat, self.shards,
+                                quant_s.as_ref(), &qmsg, &mut x_hat, &pool,
                             )?;
                         } else {
                             crate::quant::sharded::accumulate(
-                                quant_s.as_ref(), &qmsg, 1.0, &mut x_hat, self.shards,
+                                quant_s.as_ref(), &qmsg, 1.0, &mut x_hat, &pool,
                             )?;
                         }
                         replica_t = t;

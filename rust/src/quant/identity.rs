@@ -4,7 +4,7 @@
 //! this is the 117.128 kB/update FedBuff row in Tables 1–2 (ours:
 //! 4 * 29,474 = 117.896 kB).
 
-use super::{QuantizedMsg, Quantizer, RangeCodec};
+use super::{EncodeNoise, QuantizedMsg, Quantizer, RangeCodec};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
 
@@ -72,11 +72,17 @@ impl RangeCodec for Identity {
         1 // 4 whole bytes per coordinate: every seam is byte-aligned
     }
 
-    fn noise_len(&self, _d: usize) -> usize {
-        0 // deterministic codec
+    fn noise_dims(&self, _d: usize) -> (usize, usize) {
+        (0, 0) // deterministic codec
     }
 
-    fn encode_range(&self, x: &[f32], offset: usize, d: usize, _noise: &[f32]) -> (Vec<u8>, Vec<u8>) {
+    fn encode_range(
+        &self,
+        x: &[f32],
+        offset: usize,
+        d: usize,
+        _noise: &EncodeNoise,
+    ) -> (Vec<u8>, Vec<u8>) {
         assert!(offset + x.len() <= d, "identity range out of bounds");
         let mut body = Vec::with_capacity(x.len() * 4);
         for v in x {

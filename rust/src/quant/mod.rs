@@ -13,9 +13,16 @@
 //! * [`identity::Identity`] — full precision (FedBuff baseline), 4d bytes.
 //! * [`qsgd::Qsgd`] — n-bit qsgd (Alistarh et al. 2017): 1 sign bit +
 //!   (n-1) magnitude bits per coordinate + one f32 norm. Unbiased.
-//! * [`topk::TopK`] — largest-k coordinates (biased), delta = k/d.
-//! * [`randk::RandK`] — random-k coordinates; unscaled (biased, delta =
-//!   k/d) or scaled by d/k (unbiased).
+//! * [`topk::TopK`] — largest-k coordinates (biased), delta = k/d, with
+//!   a deterministic total selection order (ties to the higher index).
+//! * [`randk::RandK`] — random-k coordinates via stratified per-bucket
+//!   index streams; unscaled (biased, delta = k/d) or scaled by the
+//!   inverse inclusion probability (unbiased).
+//!
+//! Every codec exposes a [`RangeCodec`] view, so all of them run on the
+//! sharded aggregation pipeline (`sharded`, DESIGN_SHARDING.md) with
+//! payloads bit-identical to the sequential encoders at every shard
+//! count.
 
 pub mod identity;
 pub mod qsgd;
@@ -81,13 +88,57 @@ pub trait Quantizer: Send + Sync {
     fn delta(&self, d: usize) -> f64;
 
     /// Range-oriented view of this codec, if it supports one (see
-    /// [`RangeCodec`]). Coordinate-local codecs (qsgd, identity) return
-    /// `Some`; codecs with global structure (top_k's selection, rand_k's
-    /// shared index seed) return `None` and take the sequential path in
-    /// the sharded server.
+    /// [`RangeCodec`]). Every built-in codec has one: coordinate-local
+    /// codecs (qsgd, identity) stitch per-range parts directly, rand_k
+    /// derives per-bucket index streams from one shared seed draw, and
+    /// top_k merges per-shard candidate lists into the global selection
+    /// ([`Assembly::Merge`]). `None` means the sharded paths fall back
+    /// to the sequential trait calls.
     fn range_codec(&self) -> Option<&dyn RangeCodec> {
         None
     }
+}
+
+/// Externalized randomness for a sharded encode: everything the
+/// full-vector [`Quantizer::quantize`] would draw from its `Prng`, drawn
+/// once and sequentially by the caller so the PRNG stream (and therefore
+/// every later message) is identical for every shard count.
+#[derive(Clone, Debug, Default)]
+pub struct EncodeNoise {
+    /// Raw `u64` draws consumed before any uniforms (rand_k's index
+    /// seed).
+    pub seeds: Vec<u64>,
+    /// Uniform f32 draws in coordinate order (qsgd's stochastic
+    /// rounding); indexed at absolute coordinates by `encode_range`.
+    pub uniforms: Vec<f32>,
+}
+
+impl EncodeNoise {
+    /// Draw exactly the randomness `rc`'s quantize consumes for
+    /// dimension `d`, in the same order.
+    pub fn draw(rc: &dyn RangeCodec, d: usize, rng: &mut Prng) -> EncodeNoise {
+        let (n_seeds, n_uniforms) = rc.noise_dims(d);
+        let seeds = (0..n_seeds).map(|_| rng.next_u64()).collect();
+        let mut uniforms = vec![0.0f32; n_uniforms];
+        for v in &mut uniforms {
+            *v = rng.f32();
+        }
+        EncodeNoise { seeds, uniforms }
+    }
+}
+
+/// How `sharded::quantize` assembles per-range `(header, body)` parts
+/// into the final payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assembly {
+    /// `concat(headers) ++ concat(bodies)` in range order (qsgd,
+    /// identity, rand_k) — byte-identical to the sequential payload by
+    /// construction.
+    Stitch,
+    /// Headers are opaque per-range summaries (top_k's local candidate
+    /// lists); [`RangeCodec::merge_parts`] combines them into the
+    /// payload in one sequential pass.
+    Merge,
 }
 
 /// Contiguous-range encode/decode for shard-parallel aggregation
@@ -101,30 +152,48 @@ pub trait Quantizer: Send + Sync {
 ///                  ++ concat(bodies  in range order)
 /// ```
 ///
-/// **byte-for-byte**, provided every range starts at a multiple of
-/// [`RangeCodec::alignment`] (the last range may end ragged at `d`).
-/// For qsgd this is the bucket structure: the header holds the
-/// per-bucket f32 norms and the body the bit-packed levels, so
-/// bucket-aligned ranges make per-bucket norms shard-local and keep the
-/// packed body byte-aligned at every shard seam.
+/// **byte-for-byte** for [`Assembly::Stitch`] codecs, provided every
+/// range starts at a multiple of [`RangeCodec::alignment`] (the last
+/// range may end ragged at `d`). For qsgd this is the bucket structure:
+/// the header holds the per-bucket f32 norms and the body the
+/// bit-packed levels, so bucket-aligned ranges make per-bucket norms
+/// shard-local and keep the packed body byte-aligned at every shard
+/// seam. For rand_k the header is the 8-byte index seed (range 0 only)
+/// and the body the per-bucket sampled values. Codecs with global
+/// structure (top_k's selection) instead return per-range candidate
+/// summaries and assemble via [`RangeCodec::merge_parts`]
+/// ([`Assembly::Merge`]).
 ///
-/// Randomness is externalized: [`RangeCodec::noise_len`] says how many
-/// uniform f32 draws the full-vector [`Quantizer::quantize`] consumes,
-/// and the caller passes the *same* draws (in coordinate order) to
-/// every `encode_range` call — this is what makes the sharded encoding
-/// bit-identical to the sequential one for every shard count.
+/// Randomness is externalized: [`RangeCodec::noise_dims`] says what the
+/// full-vector [`Quantizer::quantize`] draws, and the caller passes the
+/// *same* draws ([`EncodeNoise`]) to every `encode_range` call — this
+/// is what makes the sharded encoding bit-identical to the sequential
+/// one for every shard count, including the PRNG state afterwards.
 pub trait RangeCodec: Send + Sync {
     /// Shard boundaries must be multiples of this many coordinates.
     fn alignment(&self) -> usize;
 
-    /// Number of uniform f32 draws `quantize` consumes for dimension
-    /// `d`, in coordinate order (0 for deterministic codecs).
-    fn noise_len(&self, d: usize) -> usize;
+    /// Randomness `quantize` consumes for dimension `d`, as
+    /// `(u64 seed draws, per-coordinate uniform f32 draws)` — drawn in
+    /// that order. `(0, 0)` for deterministic codecs.
+    fn noise_dims(&self, d: usize) -> (usize, usize);
+
+    /// How `sharded::quantize` assembles per-range parts.
+    fn assembly(&self) -> Assembly {
+        Assembly::Stitch
+    }
+
+    /// Combine per-range `(header, body)` parts (in range order) into
+    /// the final payload. Only called for [`Assembly::Merge`] codecs.
+    fn merge_parts(&self, _parts: Vec<(Vec<u8>, Vec<u8>)>, _d: usize) -> Vec<u8> {
+        unreachable!("merge_parts called on an Assembly::Stitch codec")
+    }
 
     /// Encode coordinates `[offset, offset + x.len())` of a `d`-dim
-    /// vector into `(header, body)`. `noise` is the full `noise_len(d)`
-    /// draw vector; implementations index it at absolute coordinates.
-    fn encode_range(&self, x: &[f32], offset: usize, d: usize, noise: &[f32]) -> (Vec<u8>, Vec<u8>);
+    /// vector into `(header, body)`. `noise` is the full draw set;
+    /// implementations index uniforms at absolute coordinates.
+    fn encode_range(&self, x: &[f32], offset: usize, d: usize, noise: &EncodeNoise)
+        -> (Vec<u8>, Vec<u8>);
 
     /// Decode coordinates `[offset, offset + acc.len())` of `msg` and
     /// accumulate `weight * Q(x)[i]` into `acc`.
@@ -142,22 +211,25 @@ pub trait RangeCodec: Send + Sync {
 }
 
 /// Shard-parallel executions of the codec hot paths, used by the
-/// coordinator's sharded aggregation pipeline. Every function is
-/// bit-identical to its sequential counterpart for **every** shard
-/// count (including the PRNG stream consumed), and falls back to the
+/// coordinator's sharded aggregation pipeline. Work runs on a
+/// persistent [`ShardPool`] (no per-call thread spawns). Every function
+/// is bit-identical to its sequential counterpart for **every** pool
+/// size (including the PRNG stream consumed), and falls back to the
 /// sequential trait call when the codec has no range view or the work
 /// doesn't split.
 pub mod sharded {
-    use super::{QuantizedMsg, Quantizer, RangeCodec};
+    use super::{Assembly, EncodeNoise, QuantizedMsg, Quantizer};
+    use crate::util::pool::{ShardPool, Task};
     use crate::util::prng::Prng;
     use crate::util::shard::span_for;
     use anyhow::Result;
 
-    /// Quantize `x`, splitting encode work across up to `shards`
-    /// threads. Consumes exactly the same `rng` draws as
-    /// `q.quantize(x, rng)` and produces the same bytes.
-    pub fn quantize(q: &dyn Quantizer, x: &[f32], rng: &mut Prng, shards: usize) -> QuantizedMsg {
+    /// Quantize `x`, splitting encode work across the pool's lanes.
+    /// Consumes exactly the same `rng` draws as `q.quantize(x, rng)` and
+    /// produces the same bytes.
+    pub fn quantize(q: &dyn Quantizer, x: &[f32], rng: &mut Prng, pool: &ShardPool) -> QuantizedMsg {
         let d = x.len();
+        let shards = pool.shards();
         let rc = match q.range_codec() {
             Some(rc) if shards > 1 && d > 0 => rc,
             _ => return q.quantize(x, rng),
@@ -168,37 +240,43 @@ pub mod sharded {
         }
         // Replicate quantize's sequential draw order exactly, then hand
         // each shard a read-only view of the draws.
-        let mut noise = vec![0.0f32; rc.noise_len(d)];
-        for v in &mut noise {
-            *v = rng.f32();
-        }
-        let noise_ref: &[f32] = &noise;
-        let parts: Vec<(Vec<u8>, Vec<u8>)> = std::thread::scope(|s| {
-            let handles: Vec<_> = x
-                .chunks(span)
-                .enumerate()
-                .map(|(i, chunk)| s.spawn(move || rc.encode_range(chunk, i * span, d, noise_ref)))
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
-        });
-        let mut payload = Vec::with_capacity(q.expected_bytes(d));
-        for (header, _) in &parts {
-            payload.extend_from_slice(header);
-        }
-        for (_, body) in &parts {
-            payload.extend_from_slice(body);
-        }
+        let noise = EncodeNoise::draw(rc, d, rng);
+        let noise_ref = &noise;
+        let mut parts: Vec<(Vec<u8>, Vec<u8>)> = vec![(Vec::new(), Vec::new()); d.div_ceil(span)];
+        let tasks: Vec<Task<'_>> = parts
+            .iter_mut()
+            .zip(x.chunks(span))
+            .enumerate()
+            .map(|(i, (slot, chunk))| {
+                Box::new(move || *slot = rc.encode_range(chunk, i * span, d, noise_ref))
+                    as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        let payload = match rc.assembly() {
+            Assembly::Stitch => {
+                let mut payload = Vec::with_capacity(q.expected_bytes(d));
+                for (header, _) in &parts {
+                    payload.extend_from_slice(header);
+                }
+                for (_, body) in &parts {
+                    payload.extend_from_slice(body);
+                }
+                payload
+            }
+            Assembly::Merge => rc.merge_parts(parts, d),
+        };
         QuantizedMsg { payload, d }
     }
 
-    /// Decode `msg` and accumulate `weight * Q(x)` into `acc` across up
-    /// to `shards` threads.
+    /// Decode `msg` and accumulate `weight * Q(x)` into `acc` across the
+    /// pool's lanes.
     pub fn accumulate(
         q: &dyn Quantizer,
         msg: &QuantizedMsg,
         weight: f32,
         acc: &mut [f32],
-        shards: usize,
+        pool: &ShardPool,
     ) -> Result<()> {
         let d = acc.len();
         if msg.d != d {
@@ -206,6 +284,7 @@ pub mod sharded {
             // vector contract here, like the sequential decoders do
             anyhow::bail!("sharded: dimension mismatch (msg {}, acc {d})", msg.d);
         }
+        let shards = pool.shards();
         let rc = match q.range_codec() {
             Some(rc) if shards > 1 && d > 0 => rc,
             _ => return q.accumulate(msg, weight, acc),
@@ -214,31 +293,35 @@ pub mod sharded {
         if span >= d {
             return q.accumulate(msg, weight, acc);
         }
-        let results: Vec<Result<()>> = std::thread::scope(|s| {
-            let handles: Vec<_> = acc
-                .chunks_mut(span)
-                .enumerate()
-                .map(|(i, chunk)| s.spawn(move || rc.accumulate_range(msg, weight, chunk, i * span)))
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
-        });
+        let mut results: Vec<Result<()>> = (0..d.div_ceil(span)).map(|_| Ok(())).collect();
+        let tasks: Vec<Task<'_>> = results
+            .iter_mut()
+            .zip(acc.chunks_mut(span))
+            .enumerate()
+            .map(|(i, (slot, chunk))| {
+                Box::new(move || *slot = rc.accumulate_range(msg, weight, chunk, i * span))
+                    as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
         for r in results {
             r?;
         }
         Ok(())
     }
 
-    /// Decode `msg` into `out` (overwrite) across up to `shards` threads.
+    /// Decode `msg` into `out` (overwrite) across the pool's lanes.
     pub fn dequantize_into(
         q: &dyn Quantizer,
         msg: &QuantizedMsg,
         out: &mut [f32],
-        shards: usize,
+        pool: &ShardPool,
     ) -> Result<()> {
         let d = out.len();
         if msg.d != d {
             anyhow::bail!("sharded: dimension mismatch (msg {}, out {d})", msg.d);
         }
+        let shards = pool.shards();
         let rc = match q.range_codec() {
             Some(rc) if shards > 1 && d > 0 => rc,
             _ => return q.dequantize_into(msg, out),
@@ -247,14 +330,16 @@ pub mod sharded {
         if span >= d {
             return q.dequantize_into(msg, out);
         }
-        let results: Vec<Result<()>> = std::thread::scope(|s| {
-            let handles: Vec<_> = out
-                .chunks_mut(span)
-                .enumerate()
-                .map(|(i, chunk)| s.spawn(move || rc.dequantize_range(msg, chunk, i * span)))
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
-        });
+        let mut results: Vec<Result<()>> = (0..d.div_ceil(span)).map(|_| Ok(())).collect();
+        let tasks: Vec<Task<'_>> = results
+            .iter_mut()
+            .zip(out.chunks_mut(span))
+            .enumerate()
+            .map(|(i, (slot, chunk))| {
+                Box::new(move || *slot = rc.dequantize_range(msg, chunk, i * span)) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
         for r in results {
             r?;
         }

@@ -35,7 +35,7 @@
 //! points are thin wrappers over the range primitives, so the sharded
 //! and sequential paths share one implementation and are bit-identical.
 
-use super::{QuantizedMsg, Quantizer, RangeCodec};
+use super::{EncodeNoise, QuantizedMsg, Quantizer, RangeCodec};
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
@@ -263,11 +263,18 @@ impl RangeCodec for Qsgd {
         k * self.bucket
     }
 
-    fn noise_len(&self, d: usize) -> usize {
-        d
+    fn noise_dims(&self, d: usize) -> (usize, usize) {
+        (0, d)
     }
 
-    fn encode_range(&self, x: &[f32], offset: usize, d: usize, noise: &[f32]) -> (Vec<u8>, Vec<u8>) {
+    fn encode_range(
+        &self,
+        x: &[f32],
+        offset: usize,
+        d: usize,
+        noise: &EncodeNoise,
+    ) -> (Vec<u8>, Vec<u8>) {
+        let noise = &noise.uniforms[..];
         let g = self.bucket;
         assert_eq!(offset % g, 0, "qsgd shard must start on a bucket boundary");
         assert_eq!((offset * self.bits as usize) % 8, 0, "qsgd shard body must be byte-aligned");
@@ -598,8 +605,8 @@ mod tests {
                 let mut r = noise_rng.clone();
                 q.quantize(&x, &mut r)
             };
-            let mut noise = vec![0.0f32; d];
-            for v in &mut noise {
+            let mut noise = EncodeNoise { seeds: Vec::new(), uniforms: vec![0.0f32; d] };
+            for v in &mut noise.uniforms {
                 *v = noise_rng.f32();
             }
             let align = q.alignment();

@@ -1,20 +1,41 @@
-//! rand_k quantizer (Example B.1): transmit k coordinates chosen
-//! uniformly at random.
+//! rand_k quantizer (Example B.1): transmit k coordinates chosen at
+//! random.
 //!
 //! Two variants:
 //! * **unscaled** (the paper's Example B.1): `Q(x)_i = x_i` on the sampled
 //!   set, 0 elsewhere. Biased contraction with delta = k/d (Lemma A.1 of
 //!   Stich et al. 2018).
-//! * **scaled**: multiplies kept coordinates by d/k, making E[Q(x)] = x
-//!   (unbiased), at the price of variance (d/k - 1)||x||^2.
+//! * **scaled**: multiplies each kept coordinate by the inverse of its
+//!   inclusion probability, making `E[Q(x)] = x` exactly on every bucket
+//!   that receives samples, at the price of variance
+//!   ~`(d/k - 1)||x||^2`.
 //!
-//! The chosen index set is derived from an 8-byte seed included in the
-//! message — the receiver regenerates the same k indices, so indices are
-//! never transmitted. Wire: `[ seed : u64 ][ k values : f32 ]`.
+//! **Stratified per-bucket index streams.** The index set is derived
+//! from an 8-byte seed included in the message — indices are never
+//! transmitted. Coordinates are partitioned into fixed buckets of
+//! [`BUCKET`] and the message budget k is split across buckets with a
+//! Bresenham prefix rule (`k_pre(c) = floor(k·c/d)` at every bucket
+//! boundary `c`), so bucket `b` samples exactly
+//! `k_pre(end) - k_pre(start)` of its coordinates from its own
+//! decorrelated sub-stream `Prng::new(seed).stream_u64(b)`. Values ride
+//! the wire in (bucket, ascending index) order = global ascending index
+//! order. Wire: `[ seed : u64 ][ k values : f32 ]`.
+//!
+//! This is what makes rand_k a [`RangeCodec`]: any bucket-aligned range
+//! regenerates its own indices and locates its values at
+//! `8 + 4·k_pre(range start)` without touching the rest of the message
+//! — encode, accumulate and dequantize all shard, and the full-message
+//! [`Quantizer::accumulate`] is a direct sparse scatter (O(k), no O(d)
+//! temporary). Within a bucket, inclusion probability is exactly
+//! `k_b / g_b` per coordinate (uniform sampling without replacement),
+//! which the Bresenham split keeps within 1/g_b of k/d globally.
 
-use super::{QuantizedMsg, Quantizer};
+use super::{EncodeNoise, QuantizedMsg, Quantizer, RangeCodec};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
+
+/// Fixed stratification bucket (coordinates per index sub-stream).
+pub const BUCKET: usize = 128;
 
 /// Keep a random `frac` fraction of coordinates.
 #[derive(Clone, Copy, Debug)]
@@ -35,11 +56,146 @@ impl RandK {
         ((self.frac * d as f64).ceil() as usize).clamp(1, d)
     }
 
-    fn indices(seed: u64, d: usize, k: usize) -> Vec<usize> {
-        let mut rng = Prng::new(seed);
-        let mut idx = rng.sample_indices(d, k);
-        idx.sort_unstable();
-        idx
+    /// Bresenham prefix: how many of the k samples land strictly before
+    /// global coordinate `c` (exact at bucket boundaries; monotone, ends
+    /// at k for c = d).
+    fn k_prefix(k: usize, d: usize, c: usize) -> usize {
+        ((k as u128 * c as u128) / d as u128) as usize
+    }
+
+    /// Sorted in-bucket indices for bucket `b` of size `g_b` holding
+    /// `k_b` samples (sub-stream of the message seed): partial
+    /// Fisher–Yates over a caller-provided stack buffer — the decode hot
+    /// path runs one bucket per 128 coordinates, so this must not heap
+    /// allocate. Returns the sorted prefix `&scratch[..k_b]`.
+    fn bucket_indices<'a>(
+        seed: u64,
+        b: usize,
+        g_b: usize,
+        k_b: usize,
+        scratch: &'a mut [u32; BUCKET],
+    ) -> &'a [u32] {
+        debug_assert!(k_b <= g_b && g_b <= BUCKET);
+        for (i, v) in scratch[..g_b].iter_mut().enumerate() {
+            *v = i as u32;
+        }
+        let mut rng = Prng::new(seed).stream_u64(b as u64);
+        for i in 0..k_b {
+            let j = i + rng.below((g_b - i) as u64) as usize;
+            scratch.swap(i, j);
+        }
+        scratch[..k_b].sort_unstable();
+        &scratch[..k_b]
+    }
+
+    /// Visit the sampled coordinates of `[offset, offset + len)` as
+    /// `(local index, payload value offset in bytes, gain)`. `offset`
+    /// must be bucket-aligned; the range may end ragged.
+    fn for_range_samples(
+        &self,
+        seed: u64,
+        d: usize,
+        offset: usize,
+        len: usize,
+        mut visit: impl FnMut(usize, usize, f32),
+    ) {
+        let k = self.k_for(d);
+        debug_assert_eq!(offset % BUCKET, 0);
+        let mut scratch = [0u32; BUCKET];
+        let mut lo = 0usize;
+        while lo < len {
+            let c = offset + lo; // global bucket start (multiple of BUCKET)
+            let g_b = BUCKET.min(d - c);
+            let k_pre = Self::k_prefix(k, d, c);
+            let k_b = Self::k_prefix(k, d, c + g_b) - k_pre;
+            if k_b > 0 {
+                let gain = if self.scaled { g_b as f32 / k_b as f32 } else { 1.0 };
+                for (j, &i) in
+                    Self::bucket_indices(seed, c / BUCKET, g_b, k_b, &mut scratch)
+                        .iter()
+                        .enumerate()
+                {
+                    let i = i as usize;
+                    if lo + i >= len {
+                        break; // ragged range end mid-bucket (indices sorted)
+                    }
+                    visit(lo + i, 8 + 4 * (k_pre + j), gain);
+                }
+            }
+            lo += g_b;
+        }
+    }
+
+    /// Shared validation for the decode paths.
+    fn check(&self, msg: &QuantizedMsg, offset: usize, len: usize) -> Result<u64> {
+        if msg.payload.len() != self.expected_bytes(msg.d) {
+            bail!(
+                "rand_k: payload size mismatch (got {} bytes, want {} for d={})",
+                msg.payload.len(),
+                self.expected_bytes(msg.d),
+                msg.d
+            );
+        }
+        if offset % BUCKET != 0 {
+            bail!("rand_k: shard offset {offset} not aligned (bucket {BUCKET})");
+        }
+        if offset + len > msg.d {
+            bail!("rand_k: range {offset}..{} exceeds d={}", offset + len, msg.d);
+        }
+        Ok(u64::from_le_bytes(msg.payload[..8].try_into().unwrap()))
+    }
+}
+
+impl RangeCodec for RandK {
+    fn alignment(&self) -> usize {
+        BUCKET // shard seams on bucket boundaries; values are whole bytes
+    }
+
+    fn noise_dims(&self, _d: usize) -> (usize, usize) {
+        (1, 0) // one u64: the index seed
+    }
+
+    fn encode_range(
+        &self,
+        x: &[f32],
+        offset: usize,
+        d: usize,
+        noise: &EncodeNoise,
+    ) -> (Vec<u8>, Vec<u8>) {
+        assert_eq!(offset % BUCKET, 0, "rand_k shard must start on a bucket boundary");
+        assert!(offset + x.len() <= d, "rand_k range out of bounds");
+        let seed = noise.seeds[0];
+        // the 8-byte seed header belongs to the first range only
+        let header = if offset == 0 { seed.to_le_bytes().to_vec() } else { Vec::new() };
+        let mut body = Vec::new();
+        self.for_range_samples(seed, d, offset, x.len(), |i, _, gain| {
+            body.extend_from_slice(&(x[i] * gain).to_le_bytes());
+        });
+        (header, body)
+    }
+
+    fn accumulate_range(
+        &self,
+        msg: &QuantizedMsg,
+        weight: f32,
+        acc: &mut [f32],
+        offset: usize,
+    ) -> Result<()> {
+        let seed = self.check(msg, offset, acc.len())?;
+        self.for_range_samples(seed, msg.d, offset, acc.len(), |i, off, _| {
+            let v = f32::from_le_bytes(msg.payload[off..off + 4].try_into().unwrap());
+            acc[i] += weight * v;
+        });
+        Ok(())
+    }
+
+    fn dequantize_range(&self, msg: &QuantizedMsg, out: &mut [f32], offset: usize) -> Result<()> {
+        let seed = self.check(msg, offset, out.len())?;
+        out.fill(0.0);
+        self.for_range_samples(seed, msg.d, offset, out.len(), |i, off, _| {
+            out[i] = f32::from_le_bytes(msg.payload[off..off + 4].try_into().unwrap());
+        });
+        Ok(())
     }
 }
 
@@ -49,16 +205,12 @@ impl Quantizer for RandK {
     }
 
     fn quantize(&self, x: &[f32], rng: &mut Prng) -> QuantizedMsg {
+        // one code path with the sharded encoder: the whole vector is a
+        // single range; the seed is the only randomness consumed
         let d = x.len();
-        let k = self.k_for(d);
-        let seed = rng.next_u64();
-        let idx = Self::indices(seed, d, k);
-        let mut payload = Vec::with_capacity(8 + 4 * k);
-        payload.extend_from_slice(&seed.to_le_bytes());
-        let gain = if self.scaled { d as f32 / k as f32 } else { 1.0 };
-        for &i in &idx {
-            payload.extend_from_slice(&(x[i] * gain).to_le_bytes());
-        }
+        let noise = EncodeNoise { seeds: vec![rng.next_u64()], uniforms: Vec::new() };
+        let (mut payload, body) = self.encode_range(x, 0, d, &noise);
+        payload.extend_from_slice(&body);
         QuantizedMsg { payload, d }
     }
 
@@ -66,18 +218,16 @@ impl Quantizer for RandK {
         if msg.d != out.len() {
             bail!("rand_k: dimension mismatch (msg {}, out {})", msg.d, out.len());
         }
-        let k = self.k_for(msg.d);
-        if msg.payload.len() != 8 + 4 * k {
-            bail!("rand_k: payload size mismatch");
+        self.dequantize_range(msg, out, 0)
+    }
+
+    /// Direct sparse accumulate: regenerates the k indices and scatters,
+    /// instead of dequantizing into an O(d) temporary.
+    fn accumulate(&self, msg: &QuantizedMsg, weight: f32, acc: &mut [f32]) -> Result<()> {
+        if msg.d != acc.len() {
+            bail!("rand_k: dimension mismatch (msg {}, acc {})", msg.d, acc.len());
         }
-        out.fill(0.0);
-        let seed = u64::from_le_bytes(msg.payload[..8].try_into().unwrap());
-        let idx = Self::indices(seed, msg.d, k);
-        for (j, &i) in idx.iter().enumerate() {
-            let off = 8 + 4 * j;
-            out[i] = f32::from_le_bytes(msg.payload[off..off + 4].try_into().unwrap());
-        }
-        Ok(())
+        self.accumulate_range(msg, weight, acc, 0)
     }
 
     fn is_unbiased(&self) -> bool {
@@ -89,8 +239,9 @@ impl Quantizer for RandK {
     }
 
     /// Unscaled: delta = k/d (contraction). Scaled: unbiased with
-    /// E||Q(x)-x||^2 = (d/k - 1)||x||^2, i.e. delta = 1 - (d/k - 1)
-    /// (can be <= 0 when k < d/2 — Definition 2.1's constant exceeds 1).
+    /// E||Q(x)-x||^2 ~= (d/k - 1)||x||^2, i.e. delta = 1 - (d/k - 1)
+    /// (can be <= 0 when k < d/2 — Definition 2.1's constant exceeds 1;
+    /// stratification only tightens the per-bucket constants).
     fn delta(&self, d: usize) -> f64 {
         let k = self.k_for(d) as f64;
         let d = d as f64;
@@ -99,6 +250,10 @@ impl Quantizer for RandK {
         } else {
             k / d
         }
+    }
+
+    fn range_codec(&self) -> Option<&dyn RangeCodec> {
+        Some(self)
     }
 }
 
@@ -118,6 +273,24 @@ mod tests {
         assert!(kept.len() <= 100 && kept.len() >= 99);
         for &i in &kept {
             assert_eq!(y[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn budget_split_is_exact_and_within_bucket_capacity() {
+        let q = RandK::new(0.37, false).unwrap();
+        for d in [1usize, 5, 127, 128, 129, 500, 1000, 29_474, (1 << 20) + 77] {
+            let k = q.k_for(d);
+            let mut total = 0usize;
+            let mut c = 0usize;
+            while c < d {
+                let g_b = BUCKET.min(d - c);
+                let k_b = RandK::k_prefix(k, d, c + g_b) - RandK::k_prefix(k, d, c);
+                assert!(k_b <= g_b, "d={d}: bucket at {c} got {k_b} > {g_b}");
+                total += k_b;
+                c += g_b;
+            }
+            assert_eq!(total, k, "d={d}: split does not sum to k");
         }
     }
 
@@ -160,8 +333,76 @@ mod tests {
             err += crate::util::vecf::dist2_sq(&y, &x);
         }
         let mean = err / reps as f64;
-        // E err = (1 - k/d)|x|^2 = 0.5 |x|^2
+        // E err = (1 - k/d)|x|^2 = 0.5 |x|^2 (inclusion is exactly 1/2
+        // in every bucket here: k_b = g_b / 2 for g_b in {128, 16})
         assert!((mean - 0.5 * xn2).abs() / xn2 < 0.05, "mean {mean} xn2 {xn2}");
+    }
+
+    #[test]
+    fn sparse_accumulate_matches_dense_dequantize_axpy() {
+        let mut rng = Prng::new(4);
+        for (frac, scaled) in [(0.1, false), (0.33, true), (1.0, false)] {
+            let d = 3 * BUCKET + 57;
+            let x: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let q = RandK::new(frac, scaled).unwrap();
+            let msg = q.quantize(&x, &mut rng);
+            for w in [1.0f32, -0.5, 0.125] {
+                let mut a = vec![0.75f32; d];
+                let mut b = vec![0.75f32; d];
+                q.accumulate(&msg, w, &mut a).unwrap();
+                let xq = q.dequantize(&msg).unwrap();
+                crate::util::vecf::axpy(&mut b, w, &xq);
+                assert_eq!(a, b, "frac={frac} scaled={scaled} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_decode_matches_full_decode_on_bucket_aligned_spans() {
+        let mut rng = Prng::new(5);
+        let d = 5 * BUCKET + 33; // ragged tail
+        let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        for scaled in [false, true] {
+            let q = RandK::new(0.2, scaled).unwrap();
+            let msg = q.quantize(&x, &mut rng);
+            let full = q.dequantize(&msg).unwrap();
+            for span in [BUCKET, 2 * BUCKET, 4 * BUCKET] {
+                let mut out = vec![7.0f32; d];
+                let mut acc = vec![0.5f32; d];
+                for (i, chunk) in out.chunks_mut(span).enumerate() {
+                    q.dequantize_range(&msg, chunk, i * span).unwrap();
+                }
+                for (i, chunk) in acc.chunks_mut(span).enumerate() {
+                    q.accumulate_range(&msg, 3.0, chunk, i * span).unwrap();
+                }
+                assert_eq!(out, full, "scaled={scaled} span={span}");
+                let mut want = vec![0.5f32; d];
+                crate::util::vecf::axpy(&mut want, 3.0, &full);
+                assert_eq!(acc, want, "scaled={scaled} span={span} accumulate");
+            }
+            // misaligned offsets are rejected loudly
+            let mut chunk = vec![0.0f32; 64];
+            assert!(q.dequantize_range(&msg, &mut chunk, 64).is_err());
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_error_loudly() {
+        let mut rng = Prng::new(6);
+        let d = 300;
+        let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let q = RandK::new(0.1, false).unwrap();
+        let good = q.quantize(&x, &mut rng);
+        let mut out = vec![0.0f32; d];
+        let mut msg = good.clone();
+        msg.payload.pop();
+        assert!(q.dequantize_into(&msg, &mut out).is_err());
+        assert!(q.accumulate(&msg, 1.0, &mut out).is_err());
+        let mut msg = good.clone();
+        msg.payload.push(0);
+        assert!(q.dequantize_into(&msg, &mut out).is_err());
+        let mut small = vec![0.0f32; d / 2];
+        assert!(q.dequantize_into(&good, &mut small).is_err());
     }
 
     #[test]

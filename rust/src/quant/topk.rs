@@ -3,12 +3,32 @@
 //! 2018). The paper's Table 2 uses top 10% at the *server* side.
 //!
 //! Wire format: `[ k : u32 ]` then k entries of
-//! `[ index : ceil(log2 d) bits ][ value : f32 ]`, densely bit-packed.
+//! `[ index : ceil(log2 d) bits ][ value : f32 ]`, densely bit-packed,
+//! in ascending index order.
+//!
+//! **Selection order.** "The k largest" is made a *wire contract* by a
+//! strict total order: coordinates compare by `|x_i|` under IEEE
+//! `total_cmp` (so NaN/-0.0 behave deterministically), with ties broken
+//! by the higher index. With no ties the selected set is uniquely
+//! determined, which is what lets the sharded encoder reproduce the
+//! sequential payload bit-for-bit.
+//!
+//! **Sharding** ([`RangeCodec`], [`Assembly::Merge`]): the O(d) scan is
+//! the expensive part, so each shard selects its *local* top-k as a
+//! candidate list (the header; every global winner inside a shard is by
+//! definition inside that shard's local top-k), and a cheap sequential
+//! merge (≤ S·k candidates) picks the global selection under the same
+//! total order and bit-packs the canonical payload. Decode is random
+//! access: entries are fixed-width, so a range decoder binary-searches
+//! the first in-range index and scans from there — which also gives the
+//! server a direct *sparse* accumulate (O(k) instead of an O(d)
+//! dequantize into a temp).
 
-use super::{QuantizedMsg, Quantizer};
+use super::{Assembly, EncodeNoise, QuantizedMsg, Quantizer, RangeCodec};
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
+use std::cmp::Ordering;
 
 /// Keep the top `frac` fraction of coordinates (at least 1).
 #[derive(Clone, Copy, Debug)]
@@ -31,6 +51,182 @@ impl TopK {
     fn index_bits(d: usize) -> u32 {
         usize::BITS - (d.max(2) - 1).leading_zeros()
     }
+
+    /// The selection total order on `(global index, value)` candidates,
+    /// descending: larger `|value|` first, ties to the higher index.
+    fn sel_desc(a: &(u32, f32), b: &(u32, f32)) -> Ordering {
+        b.1.abs().total_cmp(&a.1.abs()).then_with(|| b.0.cmp(&a.0))
+    }
+
+    /// Local top-min(k, len) candidates of a chunk starting at global
+    /// coordinate `offset`, returned in ascending index order.
+    fn local_top(&self, x: &[f32], offset: usize, k: usize) -> Vec<(u32, f32)> {
+        let m = k.min(x.len());
+        let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+        let nth = x.len() - m;
+        // ascending comparator consistent with `sel_desc` (local index
+        // order equals global index order within a chunk)
+        idx.select_nth_unstable_by(nth, |&a, &b| {
+            x[a as usize]
+                .abs()
+                .total_cmp(&x[b as usize].abs())
+                .then_with(|| a.cmp(&b))
+        });
+        let mut top: Vec<(u32, f32)> =
+            idx[nth..].iter().map(|&i| (offset as u32 + i, x[i as usize])).collect();
+        top.sort_unstable_by_key(|e| e.0);
+        top
+    }
+
+    /// Global selection + canonical bit-packing from a candidate
+    /// superset (must contain the true top-k; indices distinct).
+    fn pack(&self, mut cands: Vec<(u32, f32)>, d: usize) -> Vec<u8> {
+        let k = self.k_for(d);
+        cands.sort_unstable_by(Self::sel_desc);
+        cands.truncate(k);
+        cands.sort_unstable_by_key(|e| e.0);
+        let ib = Self::index_bits(d);
+        let mut w = BitWriter::with_capacity(32 + k * (ib as usize + 32));
+        w.write_u32(k as u32);
+        for &(i, v) in &cands {
+            w.write(i as u64, ib);
+            w.write_f32(v);
+        }
+        w.into_bytes()
+    }
+
+    /// Validate the payload and visit every entry whose index falls in
+    /// `[offset, offset + len)`, as `(local index, value)`. Entries are
+    /// fixed-width records, so the first in-range entry is found by
+    /// binary search over the index field.
+    fn for_range_entries(
+        &self,
+        msg: &QuantizedMsg,
+        offset: usize,
+        len: usize,
+        mut visit: impl FnMut(usize, f32),
+    ) -> Result<()> {
+        let d = msg.d;
+        if offset + len > d {
+            bail!("top_k: range {offset}..{} exceeds d={d}", offset + len);
+        }
+        let ib = Self::index_bits(d);
+        let ew = ib as usize + 32;
+        let mut r = BitReader::new(&msg.payload);
+        let k = match r.read_u32() {
+            Some(k) => k as usize,
+            None => bail!("top_k: truncated payload"),
+        };
+        if k > d {
+            bail!("top_k: k {k} > d {d}");
+        }
+        if msg.payload.len() != 4 + (k * ew).div_ceil(8) {
+            bail!(
+                "top_k: payload size mismatch (got {} bytes, want {} for k={k}, d={d})",
+                msg.payload.len(),
+                4 + (k * ew).div_ceil(8)
+            );
+        }
+        // first entry with index >= offset (entries are index-ascending)
+        let (mut lo, mut hi) = (0usize, k);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            r.seek(32 + mid * ew);
+            let i = match r.read(ib) {
+                Some(i) => i as usize,
+                None => bail!("top_k: truncated payload"),
+            };
+            if i < offset {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        r.seek(32 + lo * ew);
+        let mut prev: Option<usize> = None;
+        for _ in lo..k {
+            let (i, v) = match (r.read(ib), r.read_f32()) {
+                (Some(i), Some(v)) => (i as usize, v),
+                _ => bail!("top_k: truncated payload"),
+            };
+            if i >= d {
+                bail!("top_k: index {i} out of range");
+            }
+            if prev.is_some_and(|p| i <= p) {
+                bail!("top_k: unsorted index stream");
+            }
+            prev = Some(i);
+            if i >= offset + len {
+                break;
+            }
+            visit(i - offset, v);
+        }
+        Ok(())
+    }
+}
+
+impl RangeCodec for TopK {
+    fn alignment(&self) -> usize {
+        1 // selection splits at any seam; assembly is a merge, not a stitch
+    }
+
+    fn noise_dims(&self, _d: usize) -> (usize, usize) {
+        (0, 0) // deterministic codec
+    }
+
+    fn assembly(&self) -> Assembly {
+        Assembly::Merge
+    }
+
+    fn encode_range(
+        &self,
+        x: &[f32],
+        offset: usize,
+        d: usize,
+        _noise: &EncodeNoise,
+    ) -> (Vec<u8>, Vec<u8>) {
+        assert!(offset + x.len() <= d, "top_k range out of bounds");
+        // header: the local candidate list `[n : u32][(idx : u32, value
+        // bits : u32)...]` — merged by `merge_parts`, never on the wire
+        let cands = self.local_top(x, offset, self.k_for(d));
+        let mut header = Vec::with_capacity(4 + cands.len() * 8);
+        header.extend_from_slice(&(cands.len() as u32).to_le_bytes());
+        for &(i, v) in &cands {
+            header.extend_from_slice(&i.to_le_bytes());
+            header.extend_from_slice(&v.to_le_bytes());
+        }
+        (header, Vec::new())
+    }
+
+    fn merge_parts(&self, parts: Vec<(Vec<u8>, Vec<u8>)>, d: usize) -> Vec<u8> {
+        let mut cands: Vec<(u32, f32)> = Vec::new();
+        for (header, _) in &parts {
+            let n = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+            cands.reserve(n);
+            for j in 0..n {
+                let off = 4 + j * 8;
+                let i = u32::from_le_bytes(header[off..off + 4].try_into().unwrap());
+                let v = f32::from_le_bytes(header[off + 4..off + 8].try_into().unwrap());
+                cands.push((i, v));
+            }
+        }
+        self.pack(cands, d)
+    }
+
+    fn accumulate_range(
+        &self,
+        msg: &QuantizedMsg,
+        weight: f32,
+        acc: &mut [f32],
+        offset: usize,
+    ) -> Result<()> {
+        self.for_range_entries(msg, offset, acc.len(), |i, v| acc[i] += weight * v)
+    }
+
+    fn dequantize_range(&self, msg: &QuantizedMsg, out: &mut [f32], offset: usize) -> Result<()> {
+        out.fill(0.0);
+        self.for_range_entries(msg, offset, out.len(), |i, v| out[i] = v)
+    }
 }
 
 impl Quantizer for TopK {
@@ -39,56 +235,27 @@ impl Quantizer for TopK {
     }
 
     fn quantize(&self, x: &[f32], _rng: &mut Prng) -> QuantizedMsg {
+        // one code path with the sharded encoder: the whole vector is a
+        // single candidate range, packed by the same selection/merge
         let d = x.len();
-        let k = self.k_for(d);
-        // indices of the k largest |x_i| via partial selection
-        let mut idx: Vec<u32> = (0..d as u32).collect();
-        let nth = d - k;
-        idx.select_nth_unstable_by(nth, |&a, &b| {
-            x[a as usize]
-                .abs()
-                .partial_cmp(&x[b as usize].abs())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let mut top: Vec<u32> = idx[nth..].to_vec();
-        // canonical order on the wire: ascending index
-        top.sort_unstable();
-
-        let ib = Self::index_bits(d);
-        let mut w = BitWriter::with_capacity(32 + k * (ib as usize + 32));
-        w.write_u32(k as u32);
-        for &i in &top {
-            w.write(i as u64, ib);
-            w.write_f32(x[i as usize]);
-        }
-        QuantizedMsg { payload: w.into_bytes(), d }
+        let cands = self.local_top(x, 0, self.k_for(d));
+        QuantizedMsg { payload: self.pack(cands, d), d }
     }
 
     fn dequantize_into(&self, msg: &QuantizedMsg, out: &mut [f32]) -> Result<()> {
         if msg.d != out.len() {
             bail!("top_k: dimension mismatch (msg {}, out {})", msg.d, out.len());
         }
-        out.fill(0.0);
-        let ib = Self::index_bits(msg.d);
-        let mut r = BitReader::new(&msg.payload);
-        let k = match r.read_u32() {
-            Some(k) => k as usize,
-            None => bail!("top_k: truncated payload"),
-        };
-        if k > msg.d {
-            bail!("top_k: k {k} > d {}", msg.d);
+        self.dequantize_range(msg, out, 0)
+    }
+
+    /// Direct sparse accumulate: scatters the k kept entries instead of
+    /// dequantizing into an O(d) temporary.
+    fn accumulate(&self, msg: &QuantizedMsg, weight: f32, acc: &mut [f32]) -> Result<()> {
+        if msg.d != acc.len() {
+            bail!("top_k: dimension mismatch (msg {}, acc {})", msg.d, acc.len());
         }
-        for _ in 0..k {
-            let (i, v) = match (r.read(ib), r.read_f32()) {
-                (Some(i), Some(v)) => (i as usize, v),
-                _ => bail!("top_k: truncated payload"),
-            };
-            if i >= msg.d {
-                bail!("top_k: index {i} out of range");
-            }
-            out[i] = v;
-        }
-        Ok(())
+        self.accumulate_range(msg, weight, acc, 0)
     }
 
     fn is_unbiased(&self) -> bool {
@@ -104,6 +271,10 @@ impl Quantizer for TopK {
     /// Lemma A.1 of Stich et al. 2018: delta = k/d.
     fn delta(&self, d: usize) -> f64 {
         self.k_for(d) as f64 / d as f64
+    }
+
+    fn range_codec(&self) -> Option<&dyn RangeCodec> {
+        Some(self)
     }
 }
 
@@ -148,6 +319,17 @@ mod tests {
     }
 
     #[test]
+    fn ties_break_deterministically_to_the_higher_index() {
+        // equal magnitudes are a wire contract now, not select_nth
+        // internals: the higher index wins
+        let mut rng = Prng::new(9);
+        let x = vec![1.0f32, -1.0, 1.0, -1.0, 1.0, 0.5];
+        let q = TopK::new(0.5).unwrap(); // k = 3 of 6
+        let y = q.dequantize(&q.quantize(&x, &mut rng)).unwrap();
+        assert_eq!(y, vec![0.0, 0.0, 1.0, -1.0, 1.0, 0.0]);
+    }
+
+    #[test]
     fn k_at_least_one_and_full_fraction_is_lossless() {
         let mut rng = Prng::new(4);
         let q = TopK::new(1e-9).unwrap();
@@ -166,6 +348,76 @@ mod tests {
         assert_eq!(b, 4 + (2948usize * (15 + 32)).div_ceil(8));
         // paper reports 15.404 kB/download; ours is within ~13%
         assert!((b as f64 - 15_404.0).abs() / 15_404.0 < 0.15, "{b}");
+    }
+
+    #[test]
+    fn sparse_accumulate_matches_dense_dequantize_axpy() {
+        let mut rng = Prng::new(5);
+        for d in [9usize, 100, 1000, 4097] {
+            let x: Vec<f32> = (0..d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let q = TopK::new(0.17).unwrap();
+            let msg = q.quantize(&x, &mut rng);
+            for w in [1.0f32, 0.25, -0.75] {
+                let mut a = vec![0.5f32; d];
+                let mut b = vec![0.5f32; d];
+                q.accumulate(&msg, w, &mut a).unwrap();
+                let xq = q.dequantize(&msg).unwrap();
+                crate::util::vecf::axpy(&mut b, w, &xq);
+                assert_eq!(a, b, "d={d} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_decode_matches_full_decode_at_every_offset() {
+        let mut rng = Prng::new(6);
+        let d = 777;
+        let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let q = TopK::new(0.1).unwrap();
+        let msg = q.quantize(&x, &mut rng);
+        let full = q.dequantize(&msg).unwrap();
+        for span in [1usize, 7, 128, 500, 777] {
+            let mut out = vec![9.0f32; d];
+            let mut acc = vec![0.25f32; d];
+            for (i, chunk) in out.chunks_mut(span).enumerate() {
+                q.dequantize_range(&msg, chunk, i * span).unwrap();
+            }
+            for (i, chunk) in acc.chunks_mut(span).enumerate() {
+                q.accumulate_range(&msg, 2.0, chunk, i * span).unwrap();
+            }
+            assert_eq!(out, full, "span {span}");
+            let mut want = vec![0.25f32; d];
+            crate::util::vecf::axpy(&mut want, 2.0, &full);
+            assert_eq!(acc, want, "span {span} accumulate");
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_error_loudly() {
+        let mut rng = Prng::new(7);
+        let d = 200;
+        let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let q = TopK::new(0.1).unwrap();
+        let good = q.quantize(&x, &mut rng);
+        let mut out = vec![0.0f32; d];
+        // truncated
+        let mut msg = good.clone();
+        msg.payload.pop();
+        assert!(q.dequantize_into(&msg, &mut out).is_err());
+        assert!(q.accumulate(&msg, 1.0, &mut out).is_err());
+        // oversized
+        let mut msg = good.clone();
+        msg.payload.push(0);
+        assert!(q.dequantize_into(&msg, &mut out).is_err());
+        // k > d
+        let mut w = BitWriter::new();
+        w.write_u32(d as u32 + 1);
+        let msg = QuantizedMsg { payload: w.into_bytes(), d };
+        assert!(q.dequantize_into(&msg, &mut out).is_err());
+        // wrong dimension rejected before decode
+        let mut small = vec![0.0f32; d / 2];
+        assert!(q.dequantize_into(&good, &mut small).is_err());
+        assert!(q.accumulate(&good, 1.0, &mut small).is_err());
     }
 
     #[test]

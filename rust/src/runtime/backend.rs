@@ -16,6 +16,7 @@ use super::engine::{Engine, RoundOutput};
 use crate::config::DataConfig;
 use crate::data::{Dataset, Partition, IMG_ELEMS};
 use crate::util::dist::Normal;
+use crate::util::pool::{ShardPool, Task};
 use crate::util::prng::Prng;
 use crate::util::vecf;
 use anyhow::Result;
@@ -53,6 +54,15 @@ pub trait Backend {
 
     /// Evaluate on the validation split.
     fn evaluate(&self, params: &[f32]) -> Result<EvalOutput>;
+
+    /// Evaluate with the reduction sharded on a worker pool (the sim
+    /// passes the server's persistent [`ShardPool`], ROADMAP's
+    /// heavy-traffic eval path). Implementations must be **bit-identical**
+    /// to [`Backend::evaluate`] for every pool size; the default simply
+    /// delegates.
+    fn evaluate_pooled(&self, params: &[f32], _pool: &ShardPool) -> Result<EvalOutput> {
+        self.evaluate(params)
+    }
 
     /// Number of train-split users the server may sample.
     fn num_train_users(&self) -> usize;
@@ -229,6 +239,13 @@ pub struct QuadraticBackend {
     seed: u64,
 }
 
+/// Fixed reduction block for the quadratic eval: partial sums are
+/// accumulated per block and reduced in block order, so the pooled and
+/// sequential evals are bit-identical for every pool size (f64 addition
+/// is not associative; a pool-size-dependent split would break the
+/// "same curve for every `fl.shards`" contract).
+const EVAL_BLOCK: usize = 4096;
+
 impl QuadraticBackend {
     pub fn new(
         d: usize,
@@ -256,26 +273,45 @@ impl QuadraticBackend {
         QuadraticBackend { d, n_clients, a, centers, center_mean, sigma_l, local_steps, seed }
     }
 
+    /// One eval block: `(||A (x - c̄)||^2, f(x) - f*)` partials over
+    /// `[lo, hi)`.
+    fn eval_block(&self, x: &[f32], lo: usize, hi: usize) -> (f64, f64) {
+        let (mut g2, mut sub) = (0.0f64, 0.0f64);
+        for i in lo..hi {
+            let dx = (x[i] - self.center_mean[i]) as f64;
+            let g = self.a[i] as f64 * dx;
+            g2 += g * g;
+            sub += 0.5 * self.a[i] as f64 * dx * dx;
+        }
+        (g2, sub)
+    }
+
+    /// Sequential blocked reduction (the bit-identity reference for the
+    /// pooled eval).
+    fn eval_reduce(&self, x: &[f32]) -> (f64, f64) {
+        let (mut g2, mut sub) = (0.0f64, 0.0f64);
+        let mut lo = 0usize;
+        while lo < self.d {
+            let hi = (lo + EVAL_BLOCK).min(self.d);
+            let (g, s) = self.eval_block(x, lo, hi);
+            g2 += g;
+            sub += s;
+            lo = hi;
+        }
+        (g2, sub)
+    }
+
     /// Exact ||grad f(x)||^2 = || A (x - c̄) ||^2.
     pub fn grad_norm_sq(&self, x: &[f32]) -> f64 {
-        let mut acc = 0.0f64;
-        for i in 0..self.d {
-            let g = self.a[i] as f64 * (x[i] - self.center_mean[i]) as f64;
-            acc += g * g;
-        }
-        acc
+        self.eval_reduce(x).0
     }
 
     /// f(x) - f* (suboptimality).
+    ///
+    /// f(x) = mean_n 0.5 (x-c_n)'A(x-c_n); f* at x* = c̄ leaves the
+    /// variance term, which cancels in f(x) - f(x*).
     pub fn suboptimality(&self, x: &[f32]) -> f64 {
-        // f(x) = mean_n 0.5 (x-c_n)'A(x-c_n); f* at x* = c̄ leaves the
-        // variance term, which cancels in f(x) - f(x*).
-        let mut acc = 0.0f64;
-        for i in 0..self.d {
-            let dx = (x[i] - self.center_mean[i]) as f64;
-            acc += 0.5 * self.a[i] as f64 * dx * dx;
-        }
-        acc
+        self.eval_reduce(x).1
     }
 }
 
@@ -326,13 +362,44 @@ impl Backend for QuadraticBackend {
     }
 
     fn evaluate(&self, params: &[f32]) -> Result<EvalOutput> {
-        let g2 = self.grad_norm_sq(params);
+        let (g2, loss) = self.eval_reduce(params);
         Ok(EvalOutput {
-            loss: self.suboptimality(params),
+            loss,
             // monotone proxy so accuracy-based stop rules remain usable
             accuracy: 1.0 / (1.0 + g2),
             grad_norm_sq: Some(g2),
         })
+    }
+
+    fn evaluate_pooled(&self, params: &[f32], pool: &ShardPool) -> Result<EvalOutput> {
+        let n_blocks = self.d.div_ceil(EVAL_BLOCK);
+        if pool.shards() <= 1 || n_blocks < 2 {
+            return self.evaluate(params);
+        }
+        // per-block partials computed in parallel, reduced in block
+        // order — bitwise equal to the sequential `eval_reduce`
+        let per_task = n_blocks.div_ceil(pool.shards());
+        let mut partials = vec![(0.0f64, 0.0f64); n_blocks];
+        let tasks: Vec<Task<'_>> = partials
+            .chunks_mut(per_task)
+            .enumerate()
+            .map(|(t, chunk)| {
+                Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        let lo = (t * per_task + j) * EVAL_BLOCK;
+                        let hi = (lo + EVAL_BLOCK).min(self.d);
+                        *slot = self.eval_block(params, lo, hi);
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        let (mut g2, mut loss) = (0.0f64, 0.0f64);
+        for &(g, s) in &partials {
+            g2 += g;
+            loss += s;
+        }
+        Ok(EvalOutput { loss, accuracy: 1.0 / (1.0 + g2), grad_norm_sq: Some(g2) })
     }
 
     fn num_train_users(&self) -> usize {
@@ -384,6 +451,33 @@ mod tests {
         let e = b.evaluate(&x).unwrap();
         assert!((e.grad_norm_sq.unwrap() - b.grad_norm_sq(&x)).abs() < 1e-12);
         assert!(e.loss >= 0.0);
+    }
+
+    #[test]
+    fn pooled_eval_is_bit_identical_to_sequential_for_every_pool_size() {
+        // d spans several EVAL_BLOCKs with a ragged tail; f64 sums are
+        // order-sensitive, so this pins the fixed-block reduction
+        let b = QuadraticBackend::new(3 * EVAL_BLOCK + 1234, 6, 1.0, 0.2, 0.4, 0.01, 1, 5);
+        let x = b.init_params(2).unwrap();
+        let seq = b.evaluate(&x).unwrap();
+        for shards in [1usize, 2, 3, 8] {
+            let pool = ShardPool::new(shards);
+            let pooled = b.evaluate_pooled(&x, &pool).unwrap();
+            assert_eq!(seq.loss.to_bits(), pooled.loss.to_bits(), "S={shards} loss");
+            assert_eq!(
+                seq.accuracy.to_bits(),
+                pooled.accuracy.to_bits(),
+                "S={shards} accuracy"
+            );
+            assert_eq!(
+                seq.grad_norm_sq.unwrap().to_bits(),
+                pooled.grad_norm_sq.unwrap().to_bits(),
+                "S={shards} grad"
+            );
+        }
+        // the public reducers share the same blocked reduction
+        assert_eq!(seq.grad_norm_sq.unwrap().to_bits(), b.grad_norm_sq(&x).to_bits());
+        assert_eq!(seq.loss.to_bits(), b.suboptimality(&x).to_bits());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::metrics::{CurvePoint, RunResult};
 use crate::quant::parse_spec;
 use crate::runtime::Backend;
 use crate::scenario::{Scenario, SnapshotStore};
+use crate::util::pool::ShardPool;
 use crate::util::prng::Prng;
 use anyhow::{anyhow, Result};
 use std::cmp::Ordering;
@@ -140,6 +141,15 @@ impl<'a> SimEngine<'a> {
         scenario.recalibrate(upload_bytes, download_bytes);
         let mut arrival = scenario.arrival_process()?;
 
+        // Eval reductions run on the server's persistent shard pool
+        // (fl.eval_shards sizes a dedicated pool instead when set);
+        // results are bit-identical for every pool size.
+        let eval_pool = match self.cfg.fl.eval_shards {
+            0 => server.pool().clone(),
+            s if s == server.pool().shards() => server.pool().clone(),
+            s => ShardPool::new(s),
+        };
+
         // Versioned snapshot store: all clients arriving between two
         // server steps share one Arc (O(versions) memory, not O(clients)).
         let mut store = SnapshotStore::new(server.t(), server.client_snapshot());
@@ -167,7 +177,7 @@ impl<'a> SimEngine<'a> {
         let mut in_flight_area = 0.0f64;
 
         // evaluate x^0 so curves start at t=0
-        let ev0 = self.backend.evaluate(server.model())?;
+        let ev0 = self.backend.evaluate_pooled(server.model(), &eval_pool)?;
         curve.push(CurvePoint {
             time: 0.0,
             server_steps: 0,
@@ -247,7 +257,7 @@ impl<'a> SimEngine<'a> {
 
                     if stepped && server.t() - last_eval_t >= self.cfg.sim.eval_every as u64 {
                         last_eval_t = server.t();
-                        let ev = self.backend.evaluate(server.model())?;
+                        let ev = self.backend.evaluate_pooled(server.model(), &eval_pool)?;
                         let point = CurvePoint {
                             time: clock,
                             server_steps: server.t(),

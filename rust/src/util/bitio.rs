@@ -130,6 +130,14 @@ impl<'a> BitReader<'a> {
         self.read(1).map(|b| b != 0)
     }
 
+    /// Position the cursor at an absolute bit offset (reads past the end
+    /// simply return `None`). Fixed-width record codecs (top_k's
+    /// `index:value` entries) use this for random access / binary search.
+    #[inline]
+    pub fn seek(&mut self, bit: usize) {
+        self.pos = bit;
+    }
+
     #[inline]
     pub fn read_f32(&mut self) -> Option<f32> {
         self.read(32).map(|b| f32::from_bits(b as u32))
@@ -141,7 +149,7 @@ impl<'a> BitReader<'a> {
     }
 
     pub fn remaining_bits(&self) -> usize {
-        self.buf.len() * 8 - self.pos
+        (self.buf.len() * 8).saturating_sub(self.pos)
     }
 }
 
@@ -261,6 +269,29 @@ mod tests {
         assert_eq!(empty.read(1), None);
         assert_eq!(empty.read_f32(), None);
         assert_eq!(empty.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn seek_random_access_matches_sequential_reads() {
+        // fixed-width records (the top_k entry layout): seeking to entry
+        // j reads the same bits a sequential scan would
+        let mut w = BitWriter::new();
+        w.write_u32(10);
+        for j in 0..10u64 {
+            w.write(j * 3 + 1, 15);
+            w.write_f32(j as f32 * 0.5);
+        }
+        let bytes = w.into_bytes();
+        for j in (0..10usize).rev() {
+            let mut r = BitReader::new(&bytes);
+            r.seek(32 + j * 47);
+            assert_eq!(r.read(15), Some(j as u64 * 3 + 1), "entry {j}");
+            assert_eq!(r.read_f32(), Some(j as f32 * 0.5), "entry {j}");
+        }
+        // seeking past the end yields None, not garbage
+        let mut r = BitReader::new(&bytes);
+        r.seek(bytes.len() * 8 - 3);
+        assert_eq!(r.read(15), None);
     }
 
     #[test]

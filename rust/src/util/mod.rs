@@ -6,6 +6,7 @@
 pub mod bitio;
 pub mod dist;
 pub mod json;
+pub mod pool;
 pub mod prng;
 pub mod shard;
 pub mod stats;

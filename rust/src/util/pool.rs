@@ -1,0 +1,349 @@
+//! Persistent shard worker pool for the sharded aggregation pipeline.
+//!
+//! The first sharded server (DESIGN_SHARDING.md) ran every parallel
+//! stage on `std::thread::scope`, paying a thread spawn + join per stage
+//! (~10–50 µs) — several times per server step, which dominates the
+//! d < 1M regime. [`ShardPool`] amortizes that: `S - 1` long-lived
+//! workers are spawned once (the caller is the S-th lane), each step
+//! hands tasks over a shared queue, and the pool joins its workers on
+//! drop.
+//!
+//! Safety model: [`ShardPool::run`] accepts non-`'static` closures (the
+//! per-shard tasks borrow disjoint `&mut` sub-slices of the caller's
+//! buffers, exactly like scoped threads). The lifetime is erased with a
+//! `transmute`, which is sound because `run` never returns — not even on
+//! the panic path — before every submitted task has completed, so the
+//! borrows outlive the tasks.
+//!
+//! Panic policy: a panicking task never takes a worker down or wedges
+//! the queue. Workers catch the payload, the remaining tasks of the
+//! batch still run, and `run` re-raises the first payload on the caller
+//! once the batch has drained — a panic propagates instead of hanging,
+//! and the pool stays usable afterwards.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Worker threads ever spawned by any pool in this process. Steady-state
+/// regression guard: server steps must not move this counter
+/// (`rust/tests/pool_lifecycle.rs`).
+static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+/// Worker threads currently alive (spawned minus exited-and-joined).
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pool worker threads ever spawned in this process.
+pub fn threads_spawned_total() -> usize {
+    THREADS_SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Pool worker threads currently alive in this process.
+pub fn live_workers_total() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+/// A borrowed task, valid for `'a` (the duration of the `run` call).
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+type StaticTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion state of one `run` batch.
+struct RunState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl RunState {
+    fn new(n: usize) -> RunState {
+        RunState { remaining: Mutex::new(n), done: Condvar::new(), panic: Mutex::new(None) }
+    }
+
+    /// Record one finished task (with its panic payload, if any).
+    fn complete(&self, payload: Option<Box<dyn std::any::Any + Send>>) {
+        if let Some(p) = payload {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.done.wait(rem).unwrap();
+        }
+    }
+}
+
+struct Inbox {
+    tasks: VecDeque<(StaticTask, Arc<RunState>)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Inbox>,
+    available: Condvar,
+}
+
+fn exec(task: StaticTask, state: &RunState) {
+    let result = catch_unwind(AssertUnwindSafe(move || task()));
+    state.complete(result.err());
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.tasks.pop_front() {
+                    break Some(j);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some((task, state)) => exec(task, &state),
+            None => break,
+        }
+    }
+    LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// A persistent pool of `shards - 1` worker threads plus the calling
+/// thread, executing per-shard task batches with scoped-borrow
+/// semantics. `shards = 1` is a true no-op pool: zero threads, zero
+/// queue traffic, every `run` executes inline.
+pub struct ShardPool {
+    shards: usize,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Build a pool for `shards` parallel lanes (clamped to >= 1).
+    /// Spawns `shards - 1` workers — the `run` caller is the last lane.
+    pub fn new(shards: usize) -> Arc<ShardPool> {
+        let shards = shards.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Inbox { tasks: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(shards - 1);
+        for i in 0..shards - 1 {
+            let sh = shared.clone();
+            THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+            LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("qafel-shard-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawning shard worker"),
+            );
+        }
+        Arc::new(ShardPool { shards, shared, workers })
+    }
+
+    /// A single-lane pool (no threads; `run` executes inline).
+    pub fn sequential() -> Arc<ShardPool> {
+        ShardPool::new(1)
+    }
+
+    /// Parallel lanes S (worker threads + the caller).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Worker threads owned by this pool (`shards - 1`).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute every task, blocking until all have completed. Tasks may
+    /// borrow from the caller's stack (disjoint `&mut` sub-slices); the
+    /// caller thread executes tasks alongside the workers. If any task
+    /// panicked, the first payload is re-raised here — after the whole
+    /// batch has drained, so no borrow outlives the call and the pool
+    /// remains usable.
+    // the transmute below erases only the task lifetime; clippy compares
+    // region-erased types and would call it a self-transmute
+    #[allow(clippy::useless_transmute)]
+    pub fn run<'a>(&self, tasks: Vec<Task<'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let state = Arc::new(RunState::new(n));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: `run` blocks on `state.wait()` below until every
+                // task has completed (panic path included), so the 'a
+                // borrows captured by the task are live for its whole
+                // execution. The transmute only erases that lifetime.
+                let t: StaticTask = unsafe { std::mem::transmute::<Task<'a>, StaticTask>(t) };
+                q.tasks.push_back((t, state.clone()));
+            }
+        }
+        self.shared.available.notify_all();
+        // The caller is a full lane: drain tasks alongside the workers.
+        loop {
+            let job = self.shared.queue.lock().unwrap().tasks.pop_front();
+            match job {
+                Some((task, st)) => exec(task, &st),
+                None => break,
+            }
+        }
+        state.wait();
+        let payload = state.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_tasks_on_disjoint_borrows() {
+        let pool = ShardPool::new(4);
+        let mut data = vec![0u64; 1000];
+        let span = 256;
+        let tasks: Vec<Task<'_>> = data
+            .chunks_mut(span)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * span + j) as u64;
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn single_lane_pool_spawns_nothing_and_runs_inline() {
+        let spawned = threads_spawned_total();
+        let pool = ShardPool::sequential();
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.shards(), 1);
+        let mut hit = false;
+        pool.run(vec![Box::new(|| hit = true) as Task<'_>]);
+        assert!(hit);
+        // other tests may spawn pools concurrently, so only assert this
+        // pool contributed nothing (no workers => inline execution)
+        let _ = spawned;
+    }
+
+    #[test]
+    fn reuse_across_many_batches_is_correct() {
+        let pool = ShardPool::new(3);
+        let mut acc = vec![0u64; 300];
+        for round in 0..200u64 {
+            let tasks: Vec<Task<'_>> = acc
+                .chunks_mut(100)
+                .map(|chunk| {
+                    Box::new(move || {
+                        for v in chunk.iter_mut() {
+                            *v += round;
+                        }
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        let want: u64 = (0..200).sum();
+        assert!(acc.iter().all(|&v| v == want));
+    }
+
+    #[test]
+    fn panic_propagates_batch_completes_pool_survives() {
+        let pool = ShardPool::new(4);
+        let flags: Vec<std::sync::atomic::AtomicBool> =
+            (0..4).map(|_| std::sync::atomic::AtomicBool::new(false)).collect();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Task<'_>> = flags
+                .iter()
+                .enumerate()
+                .map(|(i, f)| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("shard boom");
+                        }
+                        f.store(true, Ordering::SeqCst);
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        let msg = match result {
+            Err(p) => *p.downcast::<&'static str>().unwrap(),
+            Ok(()) => panic!("expected the shard panic to propagate"),
+        };
+        assert_eq!(msg, "shard boom");
+        // non-panicking tasks of the same batch all ran
+        for (i, f) in flags.iter().enumerate() {
+            assert_eq!(f.load(Ordering::SeqCst), i != 2, "task {i}");
+        }
+        // the pool still works after a panic
+        let mut v = vec![0u32; 4];
+        let tasks: Vec<Task<'_>> = v
+            .chunks_mut(1)
+            .map(|c| Box::new(move || c[0] = 7) as Task<'_>)
+            .collect();
+        pool.run(tasks);
+        assert_eq!(v, vec![7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn drop_joins_and_releases_workers() {
+        let pool = ShardPool::new(5);
+        assert_eq!(pool.workers(), 4);
+        let weak = Arc::downgrade(&pool.shared);
+        drop(pool);
+        // drop joined every worker, so no thread still holds the queue
+        assert!(weak.upgrade().is_none(), "a worker outlived the pool");
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = ShardPool::new(2);
+        pool.run(Vec::new());
+    }
+}

@@ -1,0 +1,148 @@
+//! Lifecycle tests for the persistent shard worker pool ([`ShardPool`])
+//! as the server uses it: determinism across pool reuse over many
+//! steps, panic propagation (an error, not a hang), drop/shutdown
+//! joining every worker, and the steady-state regression guard — **zero
+//! thread spawns per server step**.
+//!
+//! The spawn/live counters are process-global, so every test that reads
+//! them serializes on a file-local mutex (test binaries run one at a
+//! time, tests within this binary in parallel).
+
+use qafel::config::{Algorithm, Config};
+use qafel::coordinator::{Server, ServerStep};
+use qafel::quant::{parse_spec, Quantizer};
+use qafel::util::pool::{self, ShardPool, Task};
+use qafel::util::prng::Prng;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Mutex, MutexGuard};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    // a poisoned lock only means another test failed; the counters are
+    // still coherent
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn server_cfg(qc: &str, qs: &str, shards: usize) -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = qc.into();
+    c.quant.server = qs.into();
+    c.fl.buffer_size = 3;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.3;
+    c.fl.shards = shards;
+    c
+}
+
+/// Drive `server` for `rounds` uploads, returning every broadcast
+/// payload (deterministic upload stream from `seed`).
+fn drive(server: &mut Server, qc: &str, seed: u64, rounds: u64) -> Vec<Vec<u8>> {
+    let codec = parse_spec(qc).unwrap();
+    let mut rng = Prng::new(seed);
+    let d = server.d();
+    let mut broadcasts = Vec::new();
+    for round in 0..rounds {
+        let delta: Vec<f32> =
+            (0..d).map(|i| ((i as f64 * 0.13 + round as f64).cos() * 0.2) as f32).collect();
+        let msg = codec.quantize(&delta, &mut rng);
+        if let ServerStep::Stepped(b) = server.ingest(&msg, round % 4).unwrap() {
+            broadcasts.push(b.msg.payload);
+        }
+    }
+    broadcasts
+}
+
+#[test]
+fn pool_reuse_is_deterministic_over_many_steps() {
+    let _g = serial();
+    // one pool instance reused across 60 steps must equal a fresh
+    // same-seed server (and the sequential reference) bit-for-bit
+    let d = 3 * 128 + 45;
+    for (qc, qs) in [("qsgd:4", "qsgd:4"), ("qsgd:8", "top:0.1"), ("none", "rand:0.25")] {
+        let mut a = Server::build(&server_cfg(qc, qs, 4), vec![0.0; d], 9).unwrap();
+        let mut b = Server::build(&server_cfg(qc, qs, 4), vec![0.0; d], 9).unwrap();
+        let mut seq = Server::build(&server_cfg(qc, qs, 1), vec![0.0; d], 9).unwrap();
+        let ba = drive(&mut a, qc, 77, 180);
+        let bb = drive(&mut b, qc, 77, 180);
+        let bs = drive(&mut seq, qc, 77, 180);
+        assert_eq!(ba.len(), 60, "{qc}/{qs}: expected 60 steps");
+        assert_eq!(ba, bb, "{qc}/{qs}: pool reuse diverged across servers");
+        assert_eq!(ba, bs, "{qc}/{qs}: pooled vs sequential diverged");
+        assert_eq!(a.model(), seq.model(), "{qc}/{qs}: model");
+    }
+}
+
+#[test]
+fn worker_panic_propagates_as_unwind_not_hang() {
+    let _g = serial();
+    let pool = ShardPool::new(4);
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let tasks: Vec<Task<'_>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 1 {
+                        panic!("worker task failed");
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+    }));
+    let payload = result.expect_err("panic must propagate to the caller");
+    let msg = payload.downcast_ref::<&'static str>().copied().unwrap_or("");
+    assert_eq!(msg, "worker task failed");
+    // no worker died: the pool still has its full complement and works
+    assert_eq!(pool.workers(), 3);
+    let mut out = vec![0u32; 8];
+    let tasks: Vec<Task<'_>> =
+        out.chunks_mut(2).map(|c| Box::new(move || c.fill(3)) as Task<'_>).collect();
+    pool.run(tasks);
+    assert!(out.iter().all(|&v| v == 3));
+}
+
+#[test]
+fn drop_and_server_drop_join_all_workers() {
+    let _g = serial();
+    let live0 = pool::live_workers_total();
+    {
+        let pool = ShardPool::new(6);
+        assert_eq!(pool.workers(), 5);
+        assert_eq!(pool::live_workers_total(), live0 + 5);
+    }
+    assert_eq!(pool::live_workers_total(), live0, "pool drop leaked workers");
+    // a server owns its pool: dropping the server joins the workers too
+    {
+        let mut s = Server::build(&server_cfg("qsgd:4", "qsgd:4", 4), vec![0.0; 512], 1).unwrap();
+        assert_eq!(pool::live_workers_total(), live0 + 3);
+        let _ = drive(&mut s, "qsgd:4", 5, 9);
+    }
+    assert_eq!(pool::live_workers_total(), live0, "server drop leaked workers");
+}
+
+#[test]
+fn zero_steady_state_thread_spawns_per_server_step() {
+    let _g = serial();
+    let d = 4 * 128 + 19;
+    // codecs covering all three sharded encode shapes: stitch (qsgd),
+    // merge (top_k), per-bucket streams (rand_k)
+    for (qc, qs) in [("qsgd:4", "qsgd:4"), ("qsgd:4", "top:0.1"), ("rand:0.25", "rand:0.25")] {
+        let mut server = Server::build(&server_cfg(qc, qs, 4), vec![0.0; d], 3).unwrap();
+        // warm up one full step, then pin the spawn counters
+        let warm = drive(&mut server, qc, 1, 3);
+        assert_eq!(warm.len(), 1, "{qc}/{qs}: warmup did not step");
+        let spawned = pool::threads_spawned_total();
+        let live = pool::live_workers_total();
+        let t0 = server.t();
+        let broadcasts = drive(&mut server, qc, 2, 150);
+        assert_eq!(server.t() - t0, 50, "{qc}/{qs}: expected 50 steady-state steps");
+        assert_eq!(broadcasts.len(), 50);
+        assert_eq!(
+            pool::threads_spawned_total(),
+            spawned,
+            "{qc}/{qs}: server steps spawned threads in steady state"
+        );
+        assert_eq!(pool::live_workers_total(), live, "{qc}/{qs}: live workers changed");
+    }
+}

@@ -3,68 +3,171 @@
 //! codec paths and the whole sharded server step must be **bit-identical**
 //! to the sequential implementation (broadcast payloads, model, hidden
 //! state, and PRNG stream consumption).
+//!
+//! Since the biased-codec range formats landed, *every* built-in codec
+//! has a range view — top_k (per-shard candidate merge) and rand_k
+//! (per-bucket index streams) are property-tested here across
+//! dimensions (sub-bucket, bucket-ragged, 2^20), k/d ratios, seeds,
+//! accumulate weights and shard counts, including scaled vs unscaled
+//! rand_k.
+//!
+//! `QAFEL_TEST_SHARDS=<n>` (the CI shard matrix) additionally runs the
+//! whole suite with that default `fl.shards`, and is appended to the
+//! shard sweep below.
 
 use qafel::config::{Algorithm, Config};
 use qafel::coordinator::{Server, ServerStep};
-use qafel::quant::{parse_spec, sharded};
+use qafel::quant::{parse_spec, sharded, Quantizer};
 use qafel::testing::prop::{forall_cfg, gens, PropConfig};
+use qafel::util::pool::ShardPool;
 use qafel::util::prng::Prng;
+use std::sync::Arc;
 
-const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
-
-/// Codecs with a range view (bit-exact shard parallel paths).
-fn range_specs() -> Vec<&'static str> {
-    vec!["none", "qsgd:2", "qsgd:4", "qsgd:8", "qsgd:16", "qsgd:4:32"]
+/// Shard counts to sweep: a default spread plus the CI matrix value
+/// (the same override `Config::default()` resolves).
+fn shard_counts() -> Vec<usize> {
+    let mut counts = vec![1usize, 2, 3, 8];
+    if let Some(s) = qafel::config::env_shards_override() {
+        if !counts.contains(&s) {
+            counts.push(s);
+        }
+    }
+    counts
 }
 
-/// Codecs without one (sequential fallback must still be bit-exact).
-fn fallback_specs() -> Vec<&'static str> {
-    vec!["top:0.1", "rand_scaled:0.25"]
+fn pools() -> Vec<Arc<ShardPool>> {
+    shard_counts().into_iter().map(ShardPool::new).collect()
+}
+
+/// Every codec with a range view — all of them, since the biased-codec
+/// range formats landed.
+fn range_specs() -> Vec<&'static str> {
+    vec![
+        "none",
+        "qsgd:2",
+        "qsgd:4",
+        "qsgd:8",
+        "qsgd:16",
+        "qsgd:4:32",
+        "top:0.1",
+        "top:0.5",
+        "rand:0.1",
+        "rand:0.5",
+        "rand_scaled:0.25",
+    ]
+}
+
+/// Assert the three sharded codec paths match the sequential trait
+/// calls bitwise (payload, accumulate floats, dequantize floats, and
+/// the PRNG stream consumed).
+fn assert_codec_paths_match(
+    q: &dyn Quantizer,
+    xs: &[f32],
+    pool: &ShardPool,
+    weight: f32,
+) -> Result<(), String> {
+    let shards = pool.shards();
+    // quantize: same bytes AND same rng consumption
+    let mut rng_seq = Prng::new(7);
+    let mut rng_shard = Prng::new(7);
+    let a = q.quantize(xs, &mut rng_seq);
+    let b = sharded::quantize(q, xs, &mut rng_shard, pool);
+    if a.payload != b.payload {
+        return Err(format!("S={shards}: payload mismatch"));
+    }
+    if rng_seq.next_u64() != rng_shard.next_u64() {
+        return Err(format!("S={shards}: rng stream diverged"));
+    }
+    // accumulate
+    let mut acc_a = vec![0.25f32; xs.len()];
+    let mut acc_b = vec![0.25f32; xs.len()];
+    q.accumulate(&a, weight, &mut acc_a).map_err(|e| e.to_string())?;
+    sharded::accumulate(q, &a, weight, &mut acc_b, pool).map_err(|e| e.to_string())?;
+    if acc_a != acc_b {
+        return Err(format!("S={shards}: accumulate mismatch"));
+    }
+    // dequantize
+    let mut out_a = vec![0.0f32; xs.len()];
+    let mut out_b = vec![0.0f32; xs.len()];
+    q.dequantize_into(&a, &mut out_a).map_err(|e| e.to_string())?;
+    sharded::dequantize_into(q, &a, &mut out_b, pool).map_err(|e| e.to_string())?;
+    if out_a != out_b {
+        return Err(format!("S={shards}: dequantize mismatch"));
+    }
+    Ok(())
 }
 
 #[test]
 fn sharded_codec_paths_match_sequential_bitwise() {
-    for spec in range_specs().into_iter().chain(fallback_specs()) {
+    let pools = pools();
+    for spec in range_specs() {
         let q = parse_spec(spec).unwrap();
         forall_cfg(
             &format!("sharded == sequential for {spec}"),
-            PropConfig { cases: 25, ..Default::default() },
+            PropConfig { cases: 20, ..Default::default() },
             gens::vec_f32_gnarly(1, 2000),
             |xs| {
-                for shards in SHARD_COUNTS {
-                    // quantize: same bytes AND same rng consumption
-                    let mut rng_seq = Prng::new(7);
-                    let mut rng_shard = Prng::new(7);
-                    let a = q.quantize(xs, &mut rng_seq);
-                    let b = sharded::quantize(q.as_ref(), xs, &mut rng_shard, shards);
-                    if a.payload != b.payload {
-                        return Err(format!("{spec} S={shards}: payload mismatch"));
-                    }
-                    if rng_seq.next_u64() != rng_shard.next_u64() {
-                        return Err(format!("{spec} S={shards}: rng stream diverged"));
-                    }
-                    // accumulate
-                    let mut acc_a = vec![0.25f32; xs.len()];
-                    let mut acc_b = vec![0.25f32; xs.len()];
-                    q.accumulate(&a, 0.5, &mut acc_a).map_err(|e| e.to_string())?;
-                    sharded::accumulate(q.as_ref(), &a, 0.5, &mut acc_b, shards)
-                        .map_err(|e| e.to_string())?;
-                    if acc_a != acc_b {
-                        return Err(format!("{spec} S={shards}: accumulate mismatch"));
-                    }
-                    // dequantize
-                    let mut out_a = vec![0.0f32; xs.len()];
-                    let mut out_b = vec![0.0f32; xs.len()];
-                    q.dequantize_into(&a, &mut out_a).map_err(|e| e.to_string())?;
-                    sharded::dequantize_into(q.as_ref(), &a, &mut out_b, shards)
-                        .map_err(|e| e.to_string())?;
-                    if out_a != out_b {
-                        return Err(format!("{spec} S={shards}: dequantize mismatch"));
-                    }
+                for pool in &pools {
+                    assert_codec_paths_match(q.as_ref(), xs, pool, 0.5)
+                        .map_err(|e| format!("{spec} {e}"))?;
                 }
                 Ok(())
             },
         );
+    }
+}
+
+#[test]
+fn biased_codecs_bit_identical_across_dims_ratios_seeds_weights() {
+    // satellite property suite for the biased sparsifiers: small dims,
+    // bucket-ragged dims, k/d ratios from 1 coordinate to lossless,
+    // several seeds and accumulate weights, scaled vs unscaled rand_k
+    let pools = pools();
+    let specs = [
+        "top:0.01",
+        "top:0.1",
+        "top:0.5",
+        "top:1.0",
+        "rand:0.01",
+        "rand:0.1",
+        "rand:0.5",
+        "rand:1.0",
+        "rand_scaled:0.1",
+        "rand_scaled:0.5",
+    ];
+    let dims = [1usize, 7, 127, 128, 129, 384, 3 * 128 + 57, 1000];
+    for spec in specs {
+        let q = parse_spec(spec).unwrap();
+        for &d in &dims {
+            for seed in [1u64, 2, 3] {
+                let mut rng = Prng::new(seed * 1000 + d as u64);
+                let x: Vec<f32> =
+                    (0..d).map(|_| (rng.f32() - 0.5) * if d % 2 == 0 { 2e3 } else { 0.1 }).collect();
+                for (pool, &w) in pools.iter().zip([1.0f32, -0.5, 0.125].iter().cycle()) {
+                    if let Err(e) = assert_codec_paths_match(q.as_ref(), &x, pool, w) {
+                        panic!("{spec} d={d} seed={seed}: {e}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn biased_codecs_bit_identical_at_2_20() {
+    // the million-coordinate regime the pool exists for — one seed per
+    // spec keeps the test fast while covering the big-d code paths
+    let d = 1 << 20;
+    let mut rng = Prng::new(42);
+    let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+    let pools: Vec<Arc<ShardPool>> = [1usize, 4, 8].into_iter().map(ShardPool::new).collect();
+    for spec in ["top:0.1", "rand:0.1", "rand_scaled:0.01"] {
+        let q = parse_spec(spec).unwrap();
+        for pool in &pools {
+            if let Err(e) = assert_codec_paths_match(q.as_ref(), &x, pool, 0.25) {
+                panic!("{spec} d=2^20: {e}");
+            }
+        }
     }
 }
 
@@ -127,8 +230,10 @@ fn sharded_server_bit_identical_across_seeds_and_quantizers() {
                 ("qsgd:16", "qsgd:16"),
                 ("none", "none"),
                 ("none", "qsgd:4"),
-                // server codec without a range view: sequential fallback
+                // biased server codecs: merge (top_k) and per-bucket
+                // index streams (rand_k) through the whole server step
                 ("qsgd:4", "top:0.1"),
+                ("qsgd:4", "rand:0.25"),
             ] {
                 for shards in [2usize, 4, 8] {
                     assert_servers_identical(qc, qs, d, seed, shards);
@@ -139,18 +244,43 @@ fn sharded_server_bit_identical_across_seeds_and_quantizers() {
 }
 
 #[test]
+fn sharded_server_bit_identical_with_biased_client_codecs() {
+    // biased codecs on the *upload* path exercise the sparse sharded
+    // accumulate inside Server::ingest
+    for (qc, qs) in [
+        ("top:0.2", "qsgd:4"),
+        ("rand:0.2", "qsgd:4"),
+        ("rand_scaled:0.5", "top:0.5"),
+        ("top:1.0", "rand_scaled:0.25"),
+    ] {
+        for &d in &[37usize, 500, 777] {
+            assert_servers_identical(qc, qs, d, 11, 4);
+        }
+    }
+}
+
+#[test]
 fn sharded_paths_reject_dimension_mismatch() {
     // the per-shard range checks only see prefixes; the sharded entry
     // points must enforce the whole-vector dimension contract just like
     // the sequential decoders
-    let q = parse_spec("qsgd:4").unwrap();
-    let mut rng = Prng::new(1);
-    let big: Vec<f32> = (0..512).map(|i| i as f32 * 0.01).collect();
-    let msg = q.quantize(&big, &mut rng);
-    for shards in [1usize, 4] {
-        let mut small = vec![0.0f32; 256];
-        assert!(sharded::accumulate(q.as_ref(), &msg, 1.0, &mut small, shards).is_err());
-        assert!(sharded::dequantize_into(q.as_ref(), &msg, &mut small, shards).is_err());
+    for spec in ["qsgd:4", "top:0.1", "rand:0.1"] {
+        let q = parse_spec(spec).unwrap();
+        let mut rng = Prng::new(1);
+        let big: Vec<f32> = (0..512).map(|i| i as f32 * 0.01).collect();
+        let msg = q.quantize(&big, &mut rng);
+        for shards in [1usize, 4] {
+            let pool = ShardPool::new(shards);
+            let mut small = vec![0.0f32; 256];
+            assert!(
+                sharded::accumulate(q.as_ref(), &msg, 1.0, &mut small, &pool).is_err(),
+                "{spec} S={shards}"
+            );
+            assert!(
+                sharded::dequantize_into(q.as_ref(), &msg, &mut small, &pool).is_err(),
+                "{spec} S={shards}"
+            );
+        }
     }
 }
 
