@@ -1,22 +1,42 @@
-//! Scenario sweep: one QAFeL configuration under four client
+//! Scenario sweep: one QAFeL configuration under five client
 //! populations — uniform (the paper's model), slow-dominated, diurnal,
-//! and bursty — showing how staleness, dropped work, and achieved
-//! concurrency move with the population while memory stays bounded by
-//! the number of live model versions (scenario engine,
+//! bursty, and tiered-codec (scenario engine v2: the slow tier uploads
+//! on its own `top:0.05` codec and salvages half its dropouts as
+//! partial-work submissions) — showing how staleness, dropped work, and
+//! achieved concurrency move with the population while memory stays
+//! bounded by the number of live model versions (scenario engine,
 //! DESIGN_SCENARIOS.md).
 //!
 //! ```sh
 //! cargo run --release --example scenario_sweep
 //! ```
+//!
+//! Output columns, one row per population:
+//!
+//! | column | meaning |
+//! |---|---|
+//! | `uploads` | client updates the server ingested (full + partial) |
+//! | `steps` | server steps taken (uploads / K, minus the last partial buffer) |
+//! | `tiers` | device tiers in the population |
+//! | `stale-mean` / `stale-max` | staleness `tau` of ingested updates, mean and max |
+//! | `dropped` | clients that trained but contributed nothing (full dropouts) |
+//! | `partial` | dropped clients that still submitted their completed `m/P` prefix |
+//! | `kB/up` | mean wire bytes per upload — mixes codecs under per-tier presets |
+//! | `conc(avg)` | time-averaged in-flight clients (tracks `sim.concurrency`) |
+//! | `snapshots` | peak live model versions in the snapshot store |
+//! | `reached` | whether the run hit `stop.target_accuracy` |
 
 use qafel::config::{Config, TierConfig};
-use qafel::experiments::heterogeneity::slow_dominated;
+use qafel::experiments::heterogeneity::{slow_dominated, slow_dominated_presets};
 use qafel::runtime::QuadraticBackend;
 use qafel::sim::SimEngine;
 
 fn base() -> Config {
     let mut cfg = Config::default();
     cfg.fl.buffer_size = 8;
+    // P >= 2 so the tiered-codec scenario's partial-work dropouts have
+    // a mid-round prefix to submit; the backend below runs the same P
+    cfg.fl.local_steps = 2;
     cfg.fl.client_lr = 0.12;
     cfg.fl.server_lr = 1.0;
     cfg.fl.server_momentum = 0.0;
@@ -61,7 +81,7 @@ fn bursty(base: &Config) -> Config {
 fn main() -> anyhow::Result<()> {
     let base = base();
     println!(
-        "{:<16} {:>8} {:>6} {:>7} {:>11} {:>10} {:>8} {:>10} {:>10} {:>8}",
+        "{:<16} {:>8} {:>6} {:>7} {:>11} {:>10} {:>8} {:>8} {:>8} {:>10} {:>10} {:>8}",
         "scenario",
         "uploads",
         "steps",
@@ -69,6 +89,8 @@ fn main() -> anyhow::Result<()> {
         "stale-mean",
         "stale-max",
         "dropped",
+        "partial",
+        "kB/up",
         "conc(avg)",
         "snapshots",
         "reached"
@@ -78,20 +100,25 @@ fn main() -> anyhow::Result<()> {
         ("slow-dominated", slow_dominated(&base)),
         ("diurnal", diurnal(&base)),
         ("bursty", bursty(&base)),
+        ("tiered-codec", slow_dominated_presets(&base)),
     ] {
         cfg.validate()?;
-        let backend = QuadraticBackend::new(128, 64, 1.0, 0.3, 0.2, 0.02, 1, 1);
+        let backend =
+            QuadraticBackend::new(128, 64, 1.0, 0.3, 0.2, 0.02, cfg.fl.local_steps, 1);
         let r = SimEngine::new(&cfg, &backend, 1).run()?;
         let sc = &r.scenario;
         let dropped: u64 = sc.tiers.iter().map(|t| t.dropouts).sum();
+        let partial: u64 = sc.tiers.iter().map(|t| t.partial_uploads).sum();
         println!(
-            "{name:<16} {:>8} {:>6} {:>7} {:>11.2} {:>10} {:>8} {:>10.1} {:>10} {:>8}",
+            "{name:<16} {:>8} {:>6} {:>7} {:>11.2} {:>10} {:>8} {:>8} {:>8.3} {:>10.1} {:>10} {:>8}",
             r.comm.uploads,
             r.server_steps,
             sc.tiers.len(),
             sc.staleness.mean(),
             sc.staleness.max,
             dropped,
+            partial,
+            r.comm.kb_per_upload(),
             sc.mean_concurrency,
             sc.max_live_snapshots,
             if r.reached.is_some() { "yes" } else { "no" },

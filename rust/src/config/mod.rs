@@ -137,7 +137,7 @@ impl Default for QuantConfig {
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     /// Target expected number of clients training in parallel; determines
-    /// the constant arrival rate via rate = concurrency / E[duration].
+    /// the constant arrival rate via `rate = concurrency / E[duration]`.
     pub concurrency: usize,
     /// Duration distribution: "halfnormal" | "lognormal" | "fixed".
     pub duration: String,
@@ -183,6 +183,17 @@ pub struct TierConfig {
     pub on_fraction: f64,
     /// Offset into the cycle (shifts tiers against each other).
     pub phase: f64,
+    /// Per-tier client quantizer preset (`quant::parse_spec` grammar,
+    /// e.g. `"top:0.05"`). `None` inherits `quant.client`. Full-precision
+    /// baselines (FedBuff/FedAsync) ignore presets, exactly as they
+    /// ignore `quant.client`.
+    pub quant_client: Option<String>,
+    /// Probability that a *dropped* client submits the partial update
+    /// from the local steps it did complete (scaled by m/P, FedBuff
+    /// semantics) instead of discarding its work, in [0, 1]. Needs
+    /// `fl.local_steps >= 2` to take effect (a 1-step round has no
+    /// mid-round state to submit).
+    pub partial_work: f64,
 }
 
 impl TierConfig {
@@ -201,6 +212,8 @@ impl TierConfig {
             day_period: 0.0,
             on_fraction: 1.0,
             phase: 0.0,
+            quant_client: None,
+            partial_work: 0.0,
         }
     }
 }
@@ -214,6 +227,15 @@ pub struct ScenarioConfig {
     /// Arrival process override: "constant" | "poisson" | "bursty".
     /// `None` inherits `sim.arrival`.
     pub arrival: Option<String>,
+    /// Tier-sampling policy for arriving clients:
+    /// * `"weighted"` (default) — tiers are drawn by weight alone and an
+    ///   arrival landing in a tier's off window is discarded (the
+    ///   pre-v2 behavior, kept bit-identical);
+    /// * `"availability"` — tiers are drawn proportional to
+    ///   `weight x 1[tier is on at the current clock]`, so diurnal
+    ///   windows shape *who* arrives instead of discarding arrivals
+    ///   (an arrival is lost only when every tier is off).
+    pub sampling: String,
     /// Bursty (MMPP) arrivals: rate multiplier while a burst is on.
     pub burst_factor: f64,
     /// Mean burst duration (virtual time).
@@ -229,6 +251,7 @@ impl Default for ScenarioConfig {
     fn default() -> Self {
         ScenarioConfig {
             arrival: None,
+            sampling: "weighted".into(),
             burst_factor: 4.0,
             burst_on: 1.0,
             burst_off: 4.0,
@@ -457,6 +480,12 @@ impl Config {
                             .to_string(),
                     );
                 }
+                "sampling" => {
+                    self.scenario.sampling = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("scenario.sampling must be a string"))?
+                        .to_string();
+                }
                 "burst_factor" => self.scenario.burst_factor = scalar(val, "scenario.burst_factor")?,
                 "burst_on" => self.scenario.burst_on = scalar(val, "scenario.burst_on")?,
                 "burst_off" => self.scenario.burst_off = scalar(val, "scenario.burst_off")?,
@@ -470,7 +499,7 @@ impl Config {
                 }
                 other => bail!(
                     "unknown [scenario] key '{other}' \
-                     (known: arrival, burst_factor, burst_on, burst_off, tiers)"
+                     (known: arrival, sampling, burst_factor, burst_on, burst_off, tiers)"
                 ),
             }
         }
@@ -506,10 +535,18 @@ impl Config {
                 "day_period" => tier.day_period = scalar(val, &what)?,
                 "on_fraction" => tier.on_fraction = scalar(val, &what)?,
                 "phase" => tier.phase = scalar(val, &what)?,
+                "quant_client" => {
+                    tier.quant_client = Some(
+                        val.as_str()
+                            .ok_or_else(|| anyhow!("config {what} must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "partial_work" => tier.partial_work = scalar(val, &what)?,
                 other => bail!(
                     "unknown tier key 'scenario.tiers.{name}.{other}' (known: weight, \
                      duration, duration_sigma, upload_mbps, download_mbps, dropout, \
-                     day_period, on_fraction, phase)"
+                     day_period, on_fraction, phase, quant_client, partial_work)"
                 ),
             }
         }
@@ -584,6 +621,9 @@ impl Config {
             "constant" | "poisson" | "bursty" => {}
             other => bail!("unknown scenario.arrival '{other}'"),
         }
+        // one source of truth for the mode names: the scenario engine's
+        // own parser (config and engine can never drift apart)
+        crate::scenario::Sampling::parse(&self.scenario.sampling)?;
         for (name, v) in [
             ("burst_factor", self.scenario.burst_factor),
             ("burst_on", self.scenario.burst_on),
@@ -630,6 +670,17 @@ impl Config {
             }
             if !(t.phase.is_finite() && t.phase >= 0.0) {
                 bail!("scenario tier '{name}': phase must be >= 0, got {}", t.phase);
+            }
+            if !(0.0..=1.0).contains(&t.partial_work) {
+                bail!(
+                    "scenario tier '{name}': partial_work must be in [0, 1], got {}",
+                    t.partial_work
+                );
+            }
+            if let Some(spec) = &t.quant_client {
+                crate::quant::parse_spec(spec).map_err(|e| {
+                    anyhow!("scenario tier '{name}': bad quant_client preset '{spec}': {e}")
+                })?;
             }
         }
         if !(total_weight.is_finite() && total_weight > 0.0) {
@@ -836,6 +887,61 @@ mod tests {
         let mut c = Config::default();
         c.sim.duration_sigma = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tier_codec_presets_and_partial_work_round_trip() {
+        let doc = toml::parse(
+            "[scenario]\nsampling = \"availability\"\n\
+             [scenario.tiers.slow]\nquant_client = \"top:0.05\"\npartial_work = 0.4\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.scenario.sampling, "availability");
+        let slow = &c.scenario.tiers[0];
+        assert_eq!(slow.quant_client.as_deref(), Some("top:0.05"));
+        assert_eq!(slow.partial_work, 0.4);
+        c.validate().unwrap();
+        // CLI --set reaches the same knobs and merges into the tier
+        let mut c = Config::default();
+        c.set("scenario.tiers.slow.quant_client=\"qsgd:2\"").unwrap();
+        c.set("scenario.tiers.slow.partial_work=0.25").unwrap();
+        c.set("scenario.sampling=\"availability\"").unwrap();
+        assert_eq!(c.scenario.tiers.len(), 1);
+        assert_eq!(c.scenario.tiers[0].quant_client.as_deref(), Some("qsgd:2"));
+        assert_eq!(c.scenario.tiers[0].partial_work, 0.25);
+        // no preset: the default stays None (inherit quant.client)
+        assert_eq!(TierConfig::named("x").quant_client, None);
+        assert_eq!(TierConfig::named("x").partial_work, 0.0);
+    }
+
+    #[test]
+    fn tier_codec_presets_and_partial_work_validated() {
+        let bad = |f: &dyn Fn(&mut TierConfig)| {
+            let mut c = Config::default();
+            let mut t = TierConfig::named("x");
+            f(&mut t);
+            c.scenario.tiers = vec![t];
+            c.validate()
+        };
+        // bad preset strings fail loudly, naming the tier and the spec
+        let err = bad(&|t| t.quant_client = Some("huff:3".into())).unwrap_err().to_string();
+        assert!(err.contains("quant_client") && err.contains("huff:3"), "{err}");
+        assert!(bad(&|t| t.quant_client = Some("qsgd:x".into())).is_err());
+        assert!(bad(&|t| t.quant_client = Some("top:0.1".into())).is_ok());
+        assert!(bad(&|t| t.quant_client = Some("none".into())).is_ok());
+        // partial_work range
+        assert!(bad(&|t| t.partial_work = -0.1).is_err());
+        assert!(bad(&|t| t.partial_work = 1.5).is_err());
+        assert!(bad(&|t| t.partial_work = f64::NAN).is_err());
+        assert!(bad(&|t| t.partial_work = 1.0).is_ok());
+        // sampling policy names
+        let mut c = Config::default();
+        c.scenario.sampling = "roundrobin".into();
+        assert!(c.validate().is_err());
+        c.scenario.sampling = "availability".into();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -24,8 +24,16 @@ use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Client-side policy: local training + upload quantization.
+///
+/// Holds a small registry of client codecs: id 0 is the config default
+/// (`quant.client`, resolved per algorithm) and further ids are
+/// registered by [`ClientLogic::register_codec`] for per-tier quantizer
+/// presets (`scenario.tiers.<name>.quant_client`, DESIGN_SCENARIOS.md).
+/// All codecs share one quantizer-noise stream, so a single-codec run
+/// draws exactly what it always did.
 pub struct ClientLogic {
-    quant_c: Box<dyn Quantizer>,
+    codecs: Vec<Box<dyn Quantizer>>,
+    algorithm: Algorithm,
     client_lr: f32,
     /// l2 clip applied to the delta before quantization (0 = off).
     clip_norm: f32,
@@ -47,11 +55,30 @@ impl ClientLogic {
             Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
         };
         Ok(ClientLogic {
-            quant_c: parse_spec(&spec)?,
+            codecs: vec![parse_spec(&spec)?],
+            algorithm: cfg.fl.algorithm,
             client_lr: cfg.fl.client_lr,
             clip_norm: cfg.fl.clip_norm,
             rng: std::cell::RefCell::new(Prng::new(seed).stream("client-quant")),
         })
+    }
+
+    /// Register an extra upload codec (a per-tier preset) and return its
+    /// id for [`ClientLogic::run_round_with`]. The spec is resolved per
+    /// algorithm exactly like `quant.client` (full-precision baselines
+    /// ignore presets), and identical resolved codecs are deduplicated —
+    /// registering the default spec returns 0.
+    pub fn register_codec(&mut self, spec: &str) -> Result<usize> {
+        let resolved = match self.algorithm {
+            Algorithm::Qafel | Algorithm::DirectQuant => spec.to_string(),
+            Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
+        };
+        let codec = parse_spec(&resolved)?;
+        if let Some(i) = self.codecs.iter().position(|c| c.name() == codec.name()) {
+            return Ok(i);
+        }
+        self.codecs.push(codec);
+        Ok(self.codecs.len() - 1)
     }
 
     /// Algorithm 2 for one client trip: P local steps from `snapshot`,
@@ -63,7 +90,33 @@ impl ClientLogic {
         user: usize,
         round_seed: u64,
     ) -> Result<Upload> {
+        self.run_round_with(backend, snapshot, user, round_seed, 0, 1.0)
+    }
+
+    /// [`ClientLogic::run_round`] with an explicit upload codec and a
+    /// partial-work scale: a client that dropped after `m` of its `P`
+    /// local steps submits `(m/P) * delta` (the linearized prefix of its
+    /// local trajectory, FedBuff-style partial work), clipped and
+    /// quantized like any other update. `scale = 1.0` is a full round
+    /// and multiplies nothing — codec 0 at scale 1 is bit-identical to
+    /// [`ClientLogic::run_round`].
+    pub fn run_round_with(
+        &self,
+        backend: &dyn Backend,
+        snapshot: &[f32],
+        user: usize,
+        round_seed: u64,
+        codec: usize,
+        scale: f32,
+    ) -> Result<Upload> {
+        let quant_c = self
+            .codecs
+            .get(codec)
+            .ok_or_else(|| anyhow::anyhow!("client: unknown codec id {codec}"))?;
         let mut out = backend.client_round(snapshot, user, round_seed, self.client_lr)?;
+        if scale != 1.0 {
+            crate::util::vecf::scale(&mut out.delta, scale);
+        }
         // FLSim-style update clipping: keeps a single diverging client (or
         // a staleness-amplified momentum loop) from poisoning the buffer.
         if self.clip_norm > 0.0 {
@@ -72,22 +125,37 @@ impl ClientLogic {
                 crate::util::vecf::scale(&mut out.delta, self.clip_norm / norm);
             }
         }
-        let msg = self.quant_c.quantize(&out.delta, &mut self.rng.borrow_mut());
+        let msg = quant_c.quantize(&out.delta, &mut self.rng.borrow_mut());
         Ok(Upload { msg, train_loss: out.loss, train_acc: out.acc })
     }
 
     /// Expected upload size for dimension d (for capacity planning).
     pub fn upload_bytes(&self, d: usize) -> usize {
-        self.quant_c.expected_bytes(d)
+        self.codecs[0].expected_bytes(d)
+    }
+
+    /// Expected upload size for a registered codec id.
+    pub fn upload_bytes_for(&self, codec: usize, d: usize) -> usize {
+        self.codecs[codec].expected_bytes(d)
     }
 
     pub fn quantizer_name(&self) -> String {
-        self.quant_c.name()
+        self.codecs[0].name()
+    }
+
+    /// Spec name of a registered codec id.
+    pub fn codec_name(&self, codec: usize) -> String {
+        self.codecs[codec].name()
+    }
+
+    /// Number of registered upload codecs (>= 1; id 0 is the default).
+    pub fn num_codecs(&self) -> usize {
+        self.codecs.len()
     }
 
     /// Test helper: quantize an explicit delta (bypasses the backend).
     pub fn quantize_delta_for_test(&self, delta: &[f32]) -> QuantizedMsg {
-        self.quant_c.quantize(delta, &mut self.rng.borrow_mut())
+        self.codecs[0].quantize(delta, &mut self.rng.borrow_mut())
     }
 }
 
@@ -219,6 +287,55 @@ mod tests {
         // 128-coordinate bucket
         let d = 29_474usize;
         assert_eq!(logic.upload_bytes(d), 4 * d.div_ceil(128) + d);
+    }
+
+    #[test]
+    fn codec_registry_dedups_and_respects_algorithm() {
+        let cfg = qafel_cfg(); // quant.client = qsgd:8
+        let mut logic = ClientLogic::new(&cfg, 1).unwrap();
+        assert_eq!(logic.num_codecs(), 1);
+        // registering the default spec dedups to id 0
+        assert_eq!(logic.register_codec("qsgd:8").unwrap(), 0);
+        let top = logic.register_codec("top:0.25").unwrap();
+        assert_eq!(top, 1);
+        assert_eq!(logic.codec_name(top), "top:0.25");
+        // re-registering the same preset returns the same id
+        assert_eq!(logic.register_codec("top:0.25").unwrap(), top);
+        assert!(logic.upload_bytes_for(top, 1024) < logic.upload_bytes(1024));
+        // full-precision baselines resolve every preset to identity
+        let mut fb = qafel_cfg();
+        fb.fl.algorithm = Algorithm::FedBuff;
+        let mut logic = ClientLogic::new(&fb, 1).unwrap();
+        assert_eq!(logic.register_codec("top:0.25").unwrap(), 0);
+        assert_eq!(logic.num_codecs(), 1);
+        // bad specs fail loudly
+        assert!(ClientLogic::new(&qafel_cfg(), 1).unwrap().register_codec("huff:3").is_err());
+    }
+
+    #[test]
+    fn partial_scale_shrinks_the_uploaded_delta() {
+        let mut cfg = qafel_cfg();
+        cfg.quant.client = "none".into(); // exact wire format: easy to decode
+        let d = 32;
+        let backend = QuadraticBackend::new(d, 4, 1.0, 0.1, 0.3, 0.05, 2, 5);
+        let x0 = backend.init_params(0).unwrap();
+        let logic = ClientLogic::new(&cfg, 2).unwrap();
+        let full = logic.run_round_with(&backend, &x0, 0, 7, 0, 1.0).unwrap();
+        let half = logic.run_round_with(&backend, &x0, 0, 7, 0, 0.5).unwrap();
+        let qc = crate::quant::parse_spec("none").unwrap();
+        let df = qc.dequantize(&full.msg).unwrap();
+        let dh = qc.dequantize(&half.msg).unwrap();
+        for i in 0..d {
+            assert!((dh[i] - 0.5 * df[i]).abs() < 1e-6, "coord {i}: {} vs {}", dh[i], df[i]);
+        }
+        // scale 1.0 through run_round_with == run_round (same draws)
+        let a = ClientLogic::new(&cfg, 9).unwrap();
+        let b = ClientLogic::new(&cfg, 9).unwrap();
+        let ra = a.run_round(&backend, &x0, 1, 3).unwrap();
+        let rb = b.run_round_with(&backend, &x0, 1, 3, 0, 1.0).unwrap();
+        assert_eq!(ra.msg.payload, rb.msg.payload);
+        // unknown codec id is rejected
+        assert!(a.run_round_with(&backend, &x0, 1, 3, 5, 1.0).is_err());
     }
 
     #[test]

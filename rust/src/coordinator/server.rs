@@ -82,10 +82,13 @@ pub struct Server {
     /// eval path via [`Server::pool`].
     pool: Arc<ShardPool>,
     quant_s: Box<dyn Quantizer>,
-    /// Codec for *decoding* client uploads. Built from
-    /// `cfg.quant.client` (resolved per algorithm) at construction; a
-    /// mismatched upload fails loudly in [`Server::ingest`].
-    quant_c: Box<dyn Quantizer>,
+    /// Codecs for *decoding* client uploads. Id 0 is built from
+    /// `cfg.quant.client` (resolved per algorithm) at construction;
+    /// further ids are per-tier presets added by
+    /// [`Server::register_client_codec`]. A mismatched upload fails
+    /// loudly in [`Server::ingest_from`].
+    client_codecs: Vec<Box<dyn Quantizer>>,
+    algorithm: Algorithm,
     // --- state ---------------------------------------------------------------
     d: usize,
     /// Server model x^t.
@@ -145,7 +148,8 @@ impl Server {
         let quant_s = parse_spec(&quant_s_spec)?;
         let quant_c = parse_spec(&client_codec_spec(&cfg.quant.client, cfg.fl.algorithm))?;
         Ok(Server {
-            quant_c,
+            client_codecs: vec![quant_c],
+            algorithm: cfg.fl.algorithm,
             k_buffer,
             eta_g: cfg.fl.server_lr,
             beta: cfg.fl.server_momentum,
@@ -215,11 +219,88 @@ impl Server {
         }
     }
 
-    /// Ingest one quantized client update (Algorithm 1 lines 5–16).
+    /// Register an extra client-upload codec (a per-tier quantizer
+    /// preset) and return its id for [`Server::ingest_from`]. The spec
+    /// is resolved per algorithm like `cfg.quant.client` (full-precision
+    /// baselines decode identity regardless of preset) and identical
+    /// resolved codecs are deduplicated — registering the default spec
+    /// returns 0. Registration order is the wire contract: clients and
+    /// server must register presets in the same order to agree on ids.
+    pub fn register_client_codec(&mut self, spec: &str) -> Result<usize> {
+        let resolved = client_codec_spec(spec, self.algorithm);
+        let codec = parse_spec(&resolved)?;
+        if let Some(i) = self.client_codecs.iter().position(|c| c.name() == codec.name()) {
+            return Ok(i);
+        }
+        self.client_codecs.push(codec);
+        Ok(self.client_codecs.len() - 1)
+    }
+
+    /// Number of registered client codecs (>= 1; id 0 is the default).
+    pub fn num_client_codecs(&self) -> usize {
+        self.client_codecs.len()
+    }
+
+    /// Spec name of a registered client codec.
+    pub fn client_codec_name(&self, codec: usize) -> String {
+        self.client_codecs[codec].name()
+    }
+
+    /// Route an upload to a registered codec by its exact payload size —
+    /// for ingest paths that receive raw wire messages without a codec
+    /// tag (e.g. a transport that negotiates codecs by size). Fails when
+    /// no registered codec matches or when two registered codecs share
+    /// the same wire size at this model dimension (ambiguous: the caller
+    /// must tag messages with codec ids instead).
+    pub fn codec_for_bytes(&self, wire_bytes: usize) -> Result<usize> {
+        let mut found: Option<usize> = None;
+        for (i, c) in self.client_codecs.iter().enumerate() {
+            if c.expected_bytes(self.d) == wire_bytes {
+                if let Some(prev) = found {
+                    bail!(
+                        "server: upload size {wire_bytes}B is ambiguous between client \
+                         codecs '{}' (#{prev}) and '{}' (#{i}) at d={} — tag uploads \
+                         with a codec id",
+                        self.client_codecs[prev].name(),
+                        c.name(),
+                        self.d
+                    );
+                }
+                found = Some(i);
+            }
+        }
+        found.ok_or_else(|| {
+            anyhow::anyhow!(
+                "server: no registered client codec produces {wire_bytes}B at d={}",
+                self.d
+            )
+        })
+    }
+
+    /// Ingest one quantized client update (Algorithm 1 lines 5–16),
+    /// decoded with the default client codec (id 0).
     ///
     /// `staleness` is the number of server steps taken since the client
     /// copied its snapshot (τ_n(t) in the paper).
     pub fn ingest(&mut self, update: &QuantizedMsg, staleness: u64) -> Result<ServerStep> {
+        self.ingest_from(update, staleness, 0)
+    }
+
+    /// Ingest one client update encoded with the registered codec
+    /// `codec` — the heterogeneous-ingest path for per-tier quantizer
+    /// presets. Payloads of different tiers may carry different wire
+    /// formats in the same buffer; each is decoded (and size-checked)
+    /// with its own codec on the shared [`ShardPool`].
+    pub fn ingest_from(
+        &mut self,
+        update: &QuantizedMsg,
+        staleness: u64,
+        codec: usize,
+    ) -> Result<ServerStep> {
+        let quant_c = self
+            .client_codecs
+            .get(codec)
+            .ok_or_else(|| anyhow::anyhow!("server: unknown client codec id {codec}"))?;
         // Fail loudly on codec mismatch before touching the buffer: a
         // wrong-sized payload means the client encoded with a different
         // quantizer than the server decodes with.
@@ -230,14 +311,14 @@ impl Server {
                 self.d
             );
         }
-        let expect = self.quant_c.expected_bytes(self.d);
+        let expect = quant_c.expected_bytes(self.d);
         if update.wire_bytes() != expect {
             bail!(
                 "server: upload payload is {} bytes but client codec '{}' \
                  expects {} at d={} — client and server quantizer specs \
                  disagree",
                 update.wire_bytes(),
-                self.quant_c.name(),
+                quant_c.name(),
                 expect,
                 self.d
             );
@@ -254,7 +335,8 @@ impl Server {
         };
         // Dequantize straight into the aggregation buffer (no temp
         // alloc), shard-parallel on the persistent pool when S > 1.
-        sharded::accumulate(self.quant_c.as_ref(), update, w, &mut self.buffer, &self.pool)?;
+        let quant_c = self.client_codecs[codec].as_ref();
+        sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
         self.k_filled += 1;
 
         if self.k_filled < self.k_buffer {
@@ -350,11 +432,12 @@ fn client_codec_spec(client_spec: &str, algorithm: Algorithm) -> String {
 }
 
 impl Server {
-    /// Override the client-upload codec (kept for callers that decode
-    /// uploads produced under a different spec than `cfg.quant.client`;
-    /// `Server::new` already attaches the config's codec).
+    /// Override the default client-upload codec (kept for callers that
+    /// decode uploads produced under a different spec than
+    /// `cfg.quant.client`; `Server::new` already attaches the config's
+    /// codec).
     pub fn with_client_codec(mut self, spec: &str, algorithm: Algorithm) -> Result<Server> {
-        self.quant_c = parse_spec(&client_codec_spec(spec, algorithm))?;
+        self.client_codecs[0] = parse_spec(&client_codec_spec(spec, algorithm))?;
         Ok(self)
     }
 
@@ -531,6 +614,74 @@ mod tests {
         assert!(s.ingest(&msg, 0).is_err());
         // nothing was recorded for the rejected uploads
         assert_eq!(s.comm.uploads, 0);
+    }
+
+    #[test]
+    fn heterogeneous_uploads_decode_with_their_own_codec() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into(); // codec 0: exact wire format
+        cfg.quant.server = "none".into();
+        let d = 256;
+        let mut s = Server::new(&cfg, vec![0.0; d], 1).unwrap();
+        let top = s.register_client_codec("top:0.25").unwrap();
+        assert_eq!(top, 1);
+        // dedup: the default spec and repeats map to existing ids
+        assert_eq!(s.register_client_codec("none").unwrap(), 0);
+        assert_eq!(s.register_client_codec("top:0.25").unwrap(), top);
+        assert_eq!(s.num_client_codecs(), 2);
+        assert_eq!(s.client_codec_name(top), "top:0.25");
+
+        let q0 = parse_spec("none").unwrap();
+        let q1 = parse_spec("top:0.25").unwrap();
+        let mut rng = Prng::new(3);
+        let delta: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1).sin()).collect();
+        let m0 = q0.quantize(&delta, &mut rng);
+        let m1 = q1.quantize(&delta, &mut rng);
+        assert_ne!(m0.wire_bytes(), m1.wire_bytes());
+        // wrong codec id fails loudly before touching the buffer
+        assert!(s.ingest_from(&m1, 0, 0).is_err());
+        assert!(s.ingest_from(&m0, 0, 99).is_err());
+        assert_eq!(s.comm.uploads, 0);
+        // one full-precision and one top-k upload share the buffer
+        assert!(matches!(s.ingest_from(&m0, 0, 0).unwrap(), ServerStep::Buffered));
+        match s.ingest_from(&m1, 0, top).unwrap() {
+            ServerStep::Stepped(_) => {}
+            other => panic!("expected step, got {other:?}"),
+        }
+        // model == mean of the two decoded updates (momentum 0, eta 1),
+        // computed with the same op order as the server step
+        let mut buf = vec![0f32; d];
+        q0.accumulate(&m0, 1.0, &mut buf).unwrap();
+        q1.accumulate(&m1, 1.0, &mut buf).unwrap();
+        let expect: Vec<f32> = buf.iter().map(|&b| b * 0.5).collect();
+        assert_eq!(s.model(), &expect[..]);
+        // per-message byte accounting used the real payload sizes
+        assert_eq!(
+            s.comm.upload_bytes,
+            (m0.wire_bytes() + m1.wire_bytes()) as u64
+        );
+    }
+
+    #[test]
+    fn expected_bytes_routing_finds_unique_codec_and_rejects_ambiguity() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into();
+        let d = 256;
+        let mut s = Server::new(&cfg, vec![0.0; d], 1).unwrap();
+        let top = s.register_client_codec("top:0.25").unwrap();
+        let q1 = parse_spec("top:0.25").unwrap();
+        assert_eq!(s.codec_for_bytes(q1.expected_bytes(d)).unwrap(), top);
+        assert_eq!(s.codec_for_bytes(4 * d).unwrap(), 0);
+        assert!(s.codec_for_bytes(1).is_err(), "no codec emits 1-byte payloads");
+        // qsgd:8 and rand:0.25 both emit 264B at d=256: routing by size
+        // must refuse to guess between them
+        let a = s.register_client_codec("qsgd:8").unwrap();
+        let b = s.register_client_codec("rand:0.25").unwrap();
+        let bytes = parse_spec("qsgd:8").unwrap().expected_bytes(d);
+        assert_eq!(bytes, parse_spec("rand:0.25").unwrap().expected_bytes(d));
+        assert_ne!(a, b);
+        let err = s.codec_for_bytes(bytes).unwrap_err().to_string();
+        assert!(err.contains("ambiguous"), "{err}");
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //! aggregate table (`heterogeneity.csv/.md`) and the per-tier scenario
 //! metrics (`heterogeneity_tiers.csv`: staleness histograms, dropouts,
 //! bytes by tier).
+//!
+//! A fourth **per-tier-codec arm** (scenario engine v2) reruns QAFeL
+//! over the same population with the slow tier compressing 10x harder
+//! (`quant_client = "top:0.05"`) and salvaging half its dropped work as
+//! partial updates (`partial_work = 0.5`); its per-tier rows — codec,
+//! partial-upload counts, wasted downlink bytes — land in
+//! `heterogeneity_presets.csv`.
 
 use super::runner::{aggregate, report, run_seeds, BackendFactory, Row};
 use crate::config::{Algorithm, Config, TierConfig};
@@ -43,9 +50,55 @@ pub fn slow_dominated(base: &Config) -> Config {
     cfg
 }
 
+/// The per-tier-codec variant of [`slow_dominated`]: the slow tier
+/// uploads `top:0.05` (10x smaller than the fast tier's `quant.client`)
+/// and submits partial work for half of its dropouts.
+///
+/// Partial prefixes only exist when `base.fl.local_steps >= 2`, and the
+/// backends the caller built must run that same round length —
+/// `local_steps` is deliberately **not** bumped here, because the
+/// backend factory was already constructed from `base` (a config-only
+/// bump would make the scenario engine sample `m/P` fractions of rounds
+/// the backend never runs). The quadratic `exp heterogeneity` path
+/// raises `local_steps` to 2 *before* building its backends.
+pub fn slow_dominated_presets(base: &Config) -> Config {
+    let mut cfg = slow_dominated(base);
+    let slow = cfg
+        .scenario
+        .tiers
+        .iter_mut()
+        .find(|t| t.name == "slow")
+        .expect("slow_dominated defines a slow tier");
+    slow.quant_client = Some("top:0.05".into());
+    slow.partial_work = 0.5;
+    cfg
+}
+
+const TIER_COLUMNS: [&str; 18] = [
+    "algorithm",
+    "seed",
+    "tier",
+    "codec",
+    "arrivals",
+    "unavailable",
+    "dropouts",
+    "uploads",
+    "partial_uploads",
+    "upload_mb",
+    "download_mb",
+    "wasted_download_mb",
+    "staleness_mean",
+    "staleness_max",
+    "staleness_hist",
+    "mean_concurrency",
+    "max_live_snapshots",
+    "arrivals_all_off",
+];
+
 /// Run the ablation. Returns the aggregate rows (qafel, fedbuff,
-/// directquant) and writes `heterogeneity.{csv,md}` plus
-/// `heterogeneity_tiers.csv` under `out_dir`.
+/// directquant, qafel+presets) and writes `heterogeneity.{csv,md}` plus
+/// the per-tier `heterogeneity_tiers.csv` and — for the per-tier-codec
+/// arm — `heterogeneity_presets.csv` under `out_dir`.
 pub fn run(
     base: &Config,
     make_backend: &BackendFactory,
@@ -54,22 +107,7 @@ pub fn run(
 ) -> Result<Vec<Row>> {
     let cfg0 = slow_dominated(base);
     let mut rows = Vec::new();
-    let mut tiers_csv = CsvWriter::new(&[
-        "algorithm",
-        "seed",
-        "tier",
-        "arrivals",
-        "unavailable",
-        "dropouts",
-        "uploads",
-        "upload_mb",
-        "download_mb",
-        "staleness_mean",
-        "staleness_max",
-        "staleness_hist",
-        "mean_concurrency",
-        "max_live_snapshots",
-    ]);
+    let mut tiers_csv = CsvWriter::new(&TIER_COLUMNS);
     for (label, algo) in [
         ("qafel", Algorithm::Qafel),
         ("fedbuff", Algorithm::FedBuff),
@@ -83,9 +121,24 @@ pub fn run(
         }
         rows.push(aggregate(&set));
     }
+
+    // per-tier-codec arm: same population, slow tier on its own codec
+    // with partial-work salvage. Pin the algorithm like the arms above:
+    // the label says qafel, so the run must be qafel no matter what the
+    // base config carries (presets resolve to identity under fedbuff).
+    let mut cfg_presets = slow_dominated_presets(base);
+    cfg_presets.fl.algorithm = Algorithm::Qafel;
+    let mut presets_csv = CsvWriter::new(&TIER_COLUMNS);
+    let set = run_seeds(&cfg_presets, make_backend, opts, "qafel+presets")?;
+    for (result, &seed) in set.results.iter().zip(&cfg_presets.seeds) {
+        tier_rows(&mut presets_csv, "qafel+presets", seed, &result.scenario);
+    }
+    rows.push(aggregate(&set));
+
     let md = report("heterogeneity", out_dir, &rows)?;
     println!("{md}");
     tiers_csv.save(format!("{out_dir}/heterogeneity_tiers.csv"))?;
+    presets_csv.save(format!("{out_dir}/heterogeneity_presets.csv"))?;
     Ok(rows)
 }
 
@@ -96,17 +149,21 @@ fn tier_rows(csv: &mut CsvWriter, label: &str, seed: u64, m: &ScenarioMetrics) {
             label.to_string(),
             seed.to_string(),
             t.name.clone(),
+            t.codec.clone(),
             t.arrivals.to_string(),
             t.unavailable.to_string(),
             t.dropouts.to_string(),
             t.uploads.to_string(),
+            t.partial_uploads.to_string(),
             format!("{:.4}", t.upload_bytes as f64 / 1e6),
             format!("{:.4}", t.download_bytes as f64 / 1e6),
+            format!("{:.4}", t.wasted_download_bytes as f64 / 1e6),
             format!("{:.3}", t.staleness.mean()),
             t.staleness.max.to_string(),
             t.staleness.spec_string(),
             format!("{:.2}", m.mean_concurrency),
             m.max_live_snapshots.to_string(),
+            m.arrivals_all_off.to_string(),
         ]);
     }
 }
@@ -126,6 +183,9 @@ mod tests {
         c.fl.server_lr = 1.0;
         c.fl.server_momentum = 0.0;
         c.fl.clip_norm = 0.0;
+        // matches the factory's QuadraticBackend round length — the
+        // presets arm samples m-of-P partial prefixes against it
+        c.fl.local_steps = 2;
         c.sim.concurrency = 10;
         c.sim.eval_every = 10;
         c.seeds = vec![1];
@@ -146,7 +206,7 @@ mod tests {
         let cfg = base();
         cfg.validate().unwrap();
         let rows = run(&cfg, &factory, &dir_s, &Default::default()).unwrap();
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         for r in &rows {
             assert!(r.uploads_k_mean > 0.0, "{} ran no uploads", r.label);
         }
@@ -158,13 +218,34 @@ mod tests {
             qafel.kb_per_upload,
             fedbuff.kb_per_upload
         );
+        // the per-tier-codec arm compresses the (dominant) slow tier a
+        // further 10x, so its mean upload shrinks again
+        let presets = &rows[3];
+        assert_eq!(presets.label, "qafel+presets");
+        assert!(
+            presets.kb_per_upload < qafel.kb_per_upload,
+            "presets {} vs uniform {}",
+            presets.kb_per_upload,
+            qafel.kb_per_upload
+        );
         // per-tier csv: header + 3 algorithms x 1 seed x 2 tiers
         let text =
             std::fs::read_to_string(dir.join("heterogeneity_tiers.csv")).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 1 + 3 * 2, "{text}");
-        assert!(lines[0].starts_with("algorithm,seed,tier"));
+        assert!(lines[0].starts_with("algorithm,seed,tier,codec"));
         assert!(text.contains("fast") && text.contains("slow"));
+        // presets csv: header + 1 arm x 1 seed x 2 tiers, tiers tagged
+        // with their own codecs and the slow tier salvaging partials
+        let text =
+            std::fs::read_to_string(dir.join("heterogeneity_presets.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + 2, "{text}");
+        assert!(text.contains("top:0.05") && text.contains("qsgd:4"), "{text}");
+        let slow_line = lines.iter().find(|l| l.contains(",slow,")).unwrap();
+        let fields: Vec<&str> = slow_line.split(',').collect();
+        let partials: u64 = fields[8].parse().unwrap();
+        assert!(partials > 0, "no partial uploads recorded: {slow_line}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -176,5 +257,17 @@ mod tests {
         assert!(cfg.scenario.tiers[1].dropout > 0.0);
         // the mix must be slow-dominated by weight
         assert!(cfg.scenario.tiers[1].weight > 2.0 * cfg.scenario.tiers[0].weight);
+    }
+
+    #[test]
+    fn presets_population_is_valid_and_heterogeneous() {
+        let cfg = slow_dominated_presets(&base());
+        cfg.validate().unwrap();
+        assert!(cfg.fl.local_steps >= 2, "partial work needs P >= 2");
+        let slow = cfg.scenario.tiers.iter().find(|t| t.name == "slow").unwrap();
+        assert_eq!(slow.quant_client.as_deref(), Some("top:0.05"));
+        assert_eq!(slow.partial_work, 0.5);
+        let fast = cfg.scenario.tiers.iter().find(|t| t.name == "fast").unwrap();
+        assert_eq!(fast.quant_client, None, "fast tier inherits quant.client");
     }
 }

@@ -10,9 +10,13 @@
 //!   state ([`coordinator`]), plus the event-driven simulator ([`sim`]),
 //!   a real threaded/TCP runtime ([`net`]), quantizers with exact wire
 //!   codecs ([`quant`]), the heterogeneous-population scenario engine
-//!   ([`scenario`], DESIGN_SCENARIOS.md: device tiers, pluggable arrival
-//!   processes, versioned snapshot store for million-client streams),
+//!   ([`scenario`], DESIGN_SCENARIOS.md: device tiers with per-tier
+//!   quantizer presets and partial-work dropout, pluggable arrival
+//!   processes with availability-weighted tier sampling, trace-driven
+//!   calibration, versioned snapshot store for million-client streams),
 //!   and the experiment harness ([`experiments`]).
+//!   ARCHITECTURE.md maps the paper's Algorithms 1–3 to these modules
+//!   line by line; CONFIG.md is the complete configuration reference.
 //!   The server step runs as a **sharded aggregation pipeline**
 //!   (`cfg.fl.shards`, DESIGN_SHARDING.md): accumulate / momentum /
 //!   diff / `Q_s` encode execute shard-parallel over bucket-aligned

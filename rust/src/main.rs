@@ -31,6 +31,8 @@ commands:
   exp <fig3|table1|table2|convergence|ablate|heterogeneity>
                                                 regenerate paper results
   run                                           single simulated run
+  scenario calibrate TRACE.csv [--out FILE]     fit tier weights/durations
+                                                from a client trace
   leader --addr HOST:PORT --workers N           TCP leader
   worker --addr HOST:PORT                       TCP worker (quadratic backend)
   info                                          show artifact manifest
@@ -49,10 +51,12 @@ options:
 
 scenario overrides (heterogeneous populations, DESIGN_SCENARIOS.md):
   --set 'scenario.arrival=\"bursty\"'          constant | poisson | bursty
+  --set 'scenario.sampling=\"availability\"'   weighted | availability
   --set scenario.tiers.slow.weight=0.8       per-tier knobs: weight, duration,
   --set scenario.tiers.slow.dropout=0.1      duration_sigma, upload_mbps,
   --set scenario.tiers.slow.day_period=24    download_mbps, dropout, day_period,
-                                             on_fraction, phase
+  --set 'scenario.tiers.slow.quant_client=\"top:0.05\"'   on_fraction, phase,
+  --set scenario.tiers.slow.partial_work=0.5 quant_client, partial_work
   (string values keep their TOML quotes: quote the whole --set for the shell)
 ";
 
@@ -161,6 +165,14 @@ fn cmd_exp(args: &Args) -> Result<()> {
         cfg.sim.concurrency = cfg.sim.concurrency.min(20);
         cfg.stop.max_server_steps = cfg.stop.max_server_steps.min(120);
         cfg.stop.max_uploads = cfg.stop.max_uploads.min(3000);
+    }
+    if which == "heterogeneity" && matches!(kind, BackendKind::Quadratic) {
+        // the qafel+presets arm samples m-of-P partial prefixes, which
+        // need P >= 2; raise it BEFORE building the backends below so
+        // the quadratic rounds actually run the length the scenario
+        // engine calibrates against (PJRT local_steps is pinned by the
+        // artifact and left alone)
+        cfg.fl.local_steps = cfg.fl.local_steps.max(2);
     }
     let factory = make_factory(&kind, &cfg);
     let factory: &BackendFactory = factory.as_ref();
@@ -274,6 +286,46 @@ fn cmd_run(args: &Args) -> Result<()> {
             sc.max_live_snapshots
         );
         print!("{}", sc.table());
+    }
+    Ok(())
+}
+
+/// `qafel scenario calibrate <trace.csv> [--out file.toml]` — fit a
+/// `[scenario]` tier table (weights + duration distributions) from an
+/// observed client-trace CSV (`tier,duration` rows; see
+/// `scenario::calibrate`).
+fn cmd_scenario(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("calibrate") => {}
+        other => bail!(
+            "scenario needs the 'calibrate' subcommand (got {:?}); \
+             usage: qafel scenario calibrate <trace.csv> [--out file.toml]",
+            other
+        ),
+    }
+    let path = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow!("scenario calibrate needs a trace CSV path"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading trace {path}: {e}"))?;
+    let fitted = qafel::scenario::calibrate::fit_trace(&text)?;
+    let total: usize = fitted.iter().map(|t| t.n).sum();
+    eprintln!("[calibrate] {} sessions across {} tiers:", total, fitted.len());
+    for t in &fitted {
+        eprintln!(
+            "[calibrate]   {:<16} n={:<7} weight={:.4} mean={:.4} cv={:.3} -> {}({:.4})",
+            t.name, t.n, t.weight, t.mean, t.cv, t.duration, t.duration_sigma
+        );
+    }
+    let snippet = qafel::scenario::calibrate::to_toml(&fitted);
+    match args.opt("out") {
+        Some(out) => {
+            std::fs::write(out, &snippet)
+                .map_err(|e| anyhow!("writing {out}: {e}"))?;
+            eprintln!("[calibrate] wrote {out}");
+        }
+        None => print!("{snippet}"),
     }
     Ok(())
 }
@@ -412,6 +464,7 @@ fn main() {
     let result = match args.subcommand() {
         Some("exp") => cmd_exp(&args),
         Some("run") => cmd_run(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("leader") => cmd_leader(&args),
         Some("worker") => cmd_worker(&args),
         Some("info") => cmd_info(&args),

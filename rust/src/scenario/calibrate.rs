@@ -1,0 +1,267 @@
+//! Trace-driven tier calibration (`qafel scenario calibrate`).
+//!
+//! Fits a `[scenario]` tier table from a client-trace CSV of observed
+//! sessions — the FedScale-style workflow: export `(tier label, session
+//! duration)` rows from production logs, fit weights and duration
+//! distributions here, and drop the emitted TOML into an experiment
+//! config.
+//!
+//! ## Trace format
+//!
+//! A CSV with a header row naming at least `tier` and `duration`
+//! (any column order; extra columns are ignored):
+//!
+//! ```csv
+//! tier,duration
+//! phone,2.31
+//! phone,1.07
+//! tablet,0.52
+//! ```
+//!
+//! One row per observed client session; `duration` is the session's
+//! training time in the trace's (consistent) time unit and must be a
+//! positive finite number.
+//!
+//! ## Fitting
+//!
+//! * **weight** — the tier's share of sessions, `n_i / n` (relative
+//!   weights are all the scenario engine uses).
+//! * **duration / duration_sigma** — method of moments within each of
+//!   the engine's one-parameter families, then the family whose implied
+//!   coefficient of variation (std/mean) is closest to the empirical
+//!   one:
+//!   * `fixed`: `sigma = mean`, CV 0;
+//!   * `halfnormal`: `E = sigma * sqrt(2/pi)` so `sigma = mean *
+//!     sqrt(pi/2)`, CV `sqrt(pi/2 - 1)` (~0.756);
+//!   * `lognormal(0, s)`: `E = exp(s^2/2)` so `s = sqrt(2 ln mean)`
+//!     (only admissible when `mean > 1`), CV `sqrt(mean^2 - 1)`.
+//!
+//! The output is a ready-to-paste TOML snippet (validated to
+//! round-trip through [`crate::config::Config`] in this module's
+//! tests); bandwidths, dropout and diurnal windows are not observable
+//! from a duration trace and keep their defaults.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One fitted tier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FittedTier {
+    pub name: String,
+    /// Share of trace sessions, in (0, 1].
+    pub weight: f64,
+    /// Chosen duration family: "fixed" | "halfnormal" | "lognormal".
+    pub duration: String,
+    /// The family's sigma parameter, fitted to the tier's mean.
+    pub duration_sigma: f64,
+    /// Empirical session-duration mean.
+    pub mean: f64,
+    /// Empirical coefficient of variation (std/mean).
+    pub cv: f64,
+    /// Number of trace sessions.
+    pub n: usize,
+}
+
+/// Parse a trace CSV and fit one tier per distinct label, sorted by
+/// name (the scenario engine's tier order is alphabetical, matching the
+/// TOML table order).
+pub fn fit_trace(text: &str) -> Result<Vec<FittedTier>> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, header) = lines.next().context("trace is empty (need a header row)")?;
+    let cols: Vec<&str> = header.split(',').map(|c| c.trim()).collect();
+    let tier_col = cols
+        .iter()
+        .position(|c| *c == "tier")
+        .context("trace header has no 'tier' column")?;
+    let dur_col = cols
+        .iter()
+        .position(|c| *c == "duration")
+        .context("trace header has no 'duration' column")?;
+
+    let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for (lineno, line) in lines {
+        let fields: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+        if fields.len() != cols.len() {
+            bail!(
+                "trace line {}: {} fields, header has {}",
+                lineno + 1,
+                fields.len(),
+                cols.len()
+            );
+        }
+        let tier = fields[tier_col];
+        if tier.is_empty() {
+            bail!("trace line {}: empty tier label", lineno + 1);
+        }
+        if !tier.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+            bail!(
+                "trace line {}: tier label '{tier}' is not a TOML bare key \
+                 (use [A-Za-z0-9_-])",
+                lineno + 1
+            );
+        }
+        let dur: f64 = fields[dur_col].parse().with_context(|| {
+            format!("trace line {}: bad duration '{}'", lineno + 1, fields[dur_col])
+        })?;
+        if !(dur.is_finite() && dur > 0.0) {
+            bail!("trace line {}: duration must be positive and finite, got {dur}", lineno + 1);
+        }
+        groups.entry(tier.to_string()).or_default().push(dur);
+    }
+    if groups.is_empty() {
+        bail!("trace has a header but no data rows");
+    }
+
+    let total: usize = groups.values().map(|v| v.len()).sum();
+    let mut out = Vec::with_capacity(groups.len());
+    for (name, durs) in groups {
+        out.push(fit_tier(name, &durs, total));
+    }
+    Ok(out)
+}
+
+/// Fit one tier from its observed durations.
+fn fit_tier(name: String, durs: &[f64], total: usize) -> FittedTier {
+    let n = durs.len();
+    let mean = durs.iter().sum::<f64>() / n as f64;
+    let var = durs.iter().map(|&d| (d - mean) * (d - mean)).sum::<f64>() / n as f64;
+    let cv = var.sqrt() / mean;
+
+    // candidates: (family, sigma, implied CV)
+    let mut candidates = vec![
+        ("fixed", mean, 0.0),
+        (
+            "halfnormal",
+            mean * (std::f64::consts::PI / 2.0).sqrt(),
+            (std::f64::consts::PI / 2.0 - 1.0).sqrt(),
+        ),
+    ];
+    if mean > 1.0 {
+        // lognormal(0, s): E = exp(s^2/2) => s = sqrt(2 ln mean)
+        let s = (2.0 * mean.ln()).sqrt();
+        let implied_cv = (mean * mean - 1.0).sqrt();
+        candidates.push(("lognormal", s, implied_cv));
+    }
+    let (family, sigma, _) = candidates
+        .into_iter()
+        .min_by(|a, b| (a.2 - cv).abs().total_cmp(&(b.2 - cv).abs()))
+        .expect("candidate list is never empty");
+
+    FittedTier {
+        name,
+        weight: n as f64 / total as f64,
+        duration: family.to_string(),
+        duration_sigma: sigma,
+        mean,
+        cv,
+        n,
+    }
+}
+
+/// Render fitted tiers as a `[scenario]` TOML snippet, with the
+/// empirical statistics as comments.
+pub fn to_toml(tiers: &[FittedTier]) -> String {
+    let mut out = String::new();
+    out.push_str("# fitted by `qafel scenario calibrate` from an observed client trace\n");
+    for t in tiers {
+        out.push_str(&format!(
+            "\n[scenario.tiers.{}]\n# {} sessions, mean duration {:.4}, cv {:.3}\nweight = {:.6}\nduration = \"{}\"\nduration_sigma = {:.6}\n",
+            t.name, t.n, t.mean, t.cv, t.weight, t.duration, t.duration_sigma
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::config::toml;
+    use crate::util::dist::{DurationDist, HalfNormal, LogNormal};
+    use crate::util::prng::Prng;
+
+    fn trace_from(dists: &[(&str, DurationDist, usize)], seed: u64) -> String {
+        let mut rng = Prng::new(seed);
+        let mut out = String::from("tier,duration\n");
+        for (name, dist, n) in dists {
+            let mut d = dist.clone();
+            for _ in 0..*n {
+                out.push_str(&format!("{name},{}\n", d.sample(&mut rng).max(1e-6)));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_weights_and_families_from_synthetic_traces() {
+        let text = trace_from(
+            &[
+                ("phone", DurationDist::LogNormal(LogNormal::new(0.0, 1.0)), 7500),
+                ("tablet", DurationDist::HalfNormal(HalfNormal::new(2.0)), 2000),
+                ("kiosk", DurationDist::Fixed(3.0), 500),
+            ],
+            1,
+        );
+        let fitted = fit_trace(&text).unwrap();
+        assert_eq!(fitted.len(), 3);
+        // BTreeMap order: alphabetical
+        let kiosk = &fitted[0];
+        assert_eq!(kiosk.name, "kiosk");
+        assert_eq!(kiosk.duration, "fixed");
+        assert!((kiosk.duration_sigma - 3.0).abs() < 1e-9, "{kiosk:?}");
+        assert!((kiosk.weight - 0.05).abs() < 1e-9);
+        let phone = &fitted[1];
+        assert_eq!(phone.name, "phone");
+        assert_eq!(phone.duration, "lognormal", "{phone:?}");
+        // E[lognormal(0,1)] = e^0.5 ~ 1.6487 => s ~ 1
+        assert!((phone.duration_sigma - 1.0).abs() < 0.1, "{phone:?}");
+        assert!((phone.weight - 0.75).abs() < 1e-9);
+        let tablet = &fitted[2];
+        assert_eq!(tablet.duration, "halfnormal", "{tablet:?}");
+        // E[halfnormal(2)] = 2*sqrt(2/pi) ~ 1.596 => sigma ~ 2
+        assert!((tablet.duration_sigma - 2.0).abs() < 0.15, "{tablet:?}");
+    }
+
+    #[test]
+    fn emitted_toml_round_trips_through_config() {
+        let text = trace_from(
+            &[
+                ("fast", DurationDist::Fixed(0.5), 100),
+                ("slow", DurationDist::HalfNormal(HalfNormal::new(2.0)), 300),
+            ],
+            2,
+        );
+        let fitted = fit_trace(&text).unwrap();
+        let snippet = to_toml(&fitted);
+        let doc = toml::parse(&snippet).unwrap();
+        let mut cfg = Config::default();
+        cfg.apply(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.scenario.tiers.len(), 2);
+        assert_eq!(cfg.scenario.tiers[0].name, "fast");
+        assert!((cfg.scenario.tiers[0].weight - 0.25).abs() < 1e-6);
+        assert!((cfg.scenario.tiers[1].weight - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extra_columns_and_orders_are_tolerated() {
+        let text = "client_id,duration,tier\n1,2.0,a\n2,3.0,b\n3,4.0,a\n";
+        let fitted = fit_trace(text).unwrap();
+        assert_eq!(fitted.len(), 2);
+        assert_eq!(fitted[0].name, "a");
+        assert_eq!(fitted[0].n, 2);
+        assert!((fitted[0].mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_traces_fail_loudly() {
+        assert!(fit_trace("").is_err());
+        assert!(fit_trace("tier,duration\n").is_err(), "no data rows");
+        assert!(fit_trace("duration\n1.0\n").is_err(), "no tier column");
+        assert!(fit_trace("tier\nphone\n").is_err(), "no duration column");
+        assert!(fit_trace("tier,duration\nphone\n").is_err(), "ragged row");
+        assert!(fit_trace("tier,duration\nphone,zero\n").is_err(), "non-numeric");
+        assert!(fit_trace("tier,duration\nphone,-1.0\n").is_err(), "negative");
+        assert!(fit_trace("tier,duration\n,1.0\n").is_err(), "empty label");
+    }
+}

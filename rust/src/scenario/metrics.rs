@@ -88,19 +88,30 @@ impl StalenessHist {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TierMetrics {
     pub name: String,
+    /// Client-upload codec this tier encodes with (`quant.client` or
+    /// the tier's `quant_client` preset, resolved per algorithm). Set by
+    /// the engine once codecs are registered.
+    pub codec: String,
     /// Clients of this tier that arrived while the tier was available.
     pub arrivals: u64,
     /// Arrivals skipped because the tier was in its off window.
     pub unavailable: u64,
-    /// Clients that trained but dropped before uploading.
+    /// Clients that trained but dropped before uploading anything.
     pub dropouts: u64,
-    /// Updates this tier delivered to the server.
+    /// Updates this tier delivered to the server (full + partial).
     pub uploads: u64,
+    /// Uploads that carried mid-round partial work (a dropped client
+    /// submitting the `m/P` prefix it completed) — a subset of
+    /// `uploads`.
+    pub partial_uploads: u64,
     /// Wire bytes uploaded by this tier.
     pub upload_bytes: u64,
     /// Wire bytes downloaded by this tier (one hidden-state increment
     /// per trip in broadcast mode).
     pub download_bytes: u64,
+    /// Downlink bytes spent on clients that contributed nothing (full
+    /// dropouts): the communication the population wasted.
+    pub wasted_download_bytes: u64,
     pub staleness: StalenessHist,
 }
 
@@ -111,6 +122,10 @@ pub struct ScenarioMetrics {
     pub tiers: Vec<TierMetrics>,
     /// Staleness over every upload regardless of tier.
     pub staleness: StalenessHist,
+    /// Arrivals lost because *every* tier was in its off window
+    /// (availability-weighted sampling only; weighted sampling attributes
+    /// off-window skips to the drawn tier's `unavailable` instead).
+    pub arrivals_all_off: u64,
     /// Time-averaged number of in-flight clients (Little's-law check
     /// against `sim.concurrency`).
     pub mean_concurrency: f64,
@@ -140,10 +155,18 @@ impl ScenarioMetrics {
         self.tiers[tier].unavailable += 1;
     }
 
+    /// An arrival under availability-weighted sampling that found every
+    /// tier in its off window.
+    pub fn record_all_off(&mut self) {
+        self.arrivals_all_off += 1;
+    }
+
     pub fn record_dropout(&mut self, tier: usize, download_bytes: usize) {
         let t = &mut self.tiers[tier];
         t.dropouts += 1;
         t.download_bytes += download_bytes as u64;
+        // a full dropout contributes nothing: its downlink was wasted
+        t.wasted_download_bytes += download_bytes as u64;
     }
 
     pub fn record_upload(
@@ -161,23 +184,39 @@ impl ScenarioMetrics {
         self.staleness.record(staleness);
     }
 
+    /// Like [`ScenarioMetrics::record_upload`] for a mid-round partial
+    /// submission (a dropped client salvaging the prefix it completed).
+    pub fn record_partial_upload(
+        &mut self,
+        tier: usize,
+        staleness: u64,
+        upload_bytes: usize,
+        download_bytes: usize,
+    ) {
+        self.record_upload(tier, staleness, upload_bytes, download_bytes);
+        self.tiers[tier].partial_uploads += 1;
+    }
+
     /// Human-readable per-tier table (printed by `qafel run` for
     /// multi-tier scenarios).
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(
-            "  tier         arrivals  unavail  dropped  uploads      MB-up    MB-down  stale-mean  stale-max\n",
+            "  tier         codec        arrivals  unavail  dropped  uploads  partial      MB-up    MB-down  MB-wasted  stale-mean  stale-max\n",
         );
         for t in &self.tiers {
             out.push_str(&format!(
-                "  {:<12} {:>8} {:>8} {:>8} {:>8} {:>10.3} {:>10.3} {:>11.2} {:>10}\n",
+                "  {:<12} {:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>11.2} {:>10}\n",
                 t.name,
+                t.codec,
                 t.arrivals,
                 t.unavailable,
                 t.dropouts,
                 t.uploads,
+                t.partial_uploads,
                 t.upload_bytes as f64 / 1e6,
                 t.download_bytes as f64 / 1e6,
+                t.wasted_download_bytes as f64 / 1e6,
                 t.staleness.mean(),
                 t.staleness.max,
             ));
@@ -230,13 +269,23 @@ mod tests {
         m.record_upload(0, 2, 100, 50);
         m.record_upload(1, 5, 200, 50);
         m.record_dropout(1, 50);
+        m.record_partial_upload(1, 1, 200, 50);
+        m.record_all_off();
         assert_eq!(m.tiers[0].uploads, 1);
         assert_eq!(m.tiers[1].dropouts, 1);
         assert_eq!(m.tiers[1].arrivals, 2);
         assert_eq!(m.tiers[1].unavailable, 1);
         assert_eq!(m.tiers[0].upload_bytes, 100);
-        assert_eq!(m.tiers[1].download_bytes, 100);
-        assert_eq!(m.staleness.n, 2);
+        assert_eq!(m.tiers[1].download_bytes, 150);
+        // partial uploads count as uploads AND as partials
+        assert_eq!(m.tiers[1].uploads, 2);
+        assert_eq!(m.tiers[1].partial_uploads, 1);
+        assert_eq!(m.tiers[0].partial_uploads, 0);
+        // only the full dropout wasted its downlink
+        assert_eq!(m.tiers[1].wasted_download_bytes, 50);
+        assert_eq!(m.tiers[0].wasted_download_bytes, 0);
+        assert_eq!(m.arrivals_all_off, 1);
+        assert_eq!(m.staleness.n, 3);
         assert_eq!(m.staleness.max, 5);
         let table = m.table();
         assert!(table.contains("fast") && table.contains("slow"));

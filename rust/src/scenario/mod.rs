@@ -22,18 +22,38 @@
 //!   dropout counts and byte totals, threaded into
 //!   [`crate::metrics::RunResult`].
 //!
+//! Since v2 the population model also covers (DESIGN_SCENARIOS.md):
+//!
+//! * **per-tier quantizer presets** — `scenario.tiers.<name>.quant_client`
+//!   gives a tier its own upload codec (slow tiers compress harder);
+//!   the server ingests the resulting heterogeneous wire formats per
+//!   message ([`crate::coordinator::Server::ingest_from`]);
+//! * **mid-round partial-work dropout** — `partial_work` lets a dropped
+//!   client submit the `m/P`-step prefix it completed (FedBuff partial
+//!   work) instead of discarding it;
+//! * **availability-weighted sampling** — `scenario.sampling =
+//!   "availability"` draws arriving tiers proportional to
+//!   `weight x 1[on]`, so diurnal windows shape *who* arrives;
+//! * **trace-driven calibration** — [`calibrate`] fits tier weights and
+//!   duration distributions from an observed client-trace CSV
+//!   (`qafel scenario calibrate <trace.csv>`).
+//!
 //! **Back-compat contract**: a config without a `[scenario]` table
 //! desugars to a single always-available tier built from the `sim.*`
 //! knobs, and the engine's randomness streams are arranged so that this
 //! default reproduces the pre-scenario simulator **bit-identically**
-//! (golden-tested in `tests/scenario.rs`).
+//! (golden-tested in `tests/scenario.rs`). The same contract extends to
+//! v2: tiers without presets (and `partial_work = 0`, `sampling =
+//! "weighted"`) replay the v1 engine bit-for-bit.
 
 pub mod arrival;
+pub mod calibrate;
 pub mod metrics;
 pub mod population;
 pub mod snapshots;
 
 pub use arrival::{build_arrival, ArrivalProcess};
+pub use calibrate::{fit_trace, FittedTier};
 pub use metrics::{ScenarioMetrics, StalenessHist, TierMetrics};
-pub use population::{duration_dist, Scenario, Tier};
+pub use population::{duration_dist, Sampling, Scenario, Tier};
 pub use snapshots::SnapshotStore;

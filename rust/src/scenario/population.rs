@@ -30,6 +30,28 @@ pub struct Tier {
     dist: DurationDist,
 }
 
+/// How arriving clients are matched to tiers (`scenario.sampling`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    /// Draw by weight alone; an arrival landing in a tier's off window
+    /// is discarded. The pre-v2 behavior — bit-identical default.
+    Weighted,
+    /// Draw proportional to `weight x 1[tier available at the clock]`:
+    /// diurnal windows shape *who* arrives. An arrival is lost only
+    /// when every tier is off.
+    Availability,
+}
+
+impl Sampling {
+    pub fn parse(s: &str) -> Result<Sampling> {
+        Ok(match s {
+            "weighted" => Sampling::Weighted,
+            "availability" => Sampling::Availability,
+            other => bail!("unknown scenario.sampling '{other}' (weighted | availability)"),
+        })
+    }
+}
+
 /// The resolved scenario: tier mix, calibrated arrival rate, and the
 /// run's scenario metrics.
 pub struct Scenario {
@@ -49,6 +71,11 @@ pub struct Scenario {
     rate: f64,
     arrival_kind: String,
     burst: (f64, f64, f64),
+    sampling: Sampling,
+    /// `fl.local_steps` (P): the granularity of partial-work fractions.
+    /// Partial submissions need P >= 2 — a 1-step round has no mid-round
+    /// prefix to submit.
+    local_steps: usize,
     pub metrics: ScenarioMetrics,
 }
 
@@ -94,6 +121,8 @@ impl Scenario {
                 cfg.scenario.burst_on,
                 cfg.scenario.burst_off,
             ),
+            sampling: Sampling::parse(&cfg.scenario.sampling)?,
+            local_steps: cfg.fl.local_steps,
             metrics,
             tiers,
         };
@@ -111,36 +140,118 @@ impl Scenario {
         Ok(scenario)
     }
 
+    /// (Re)calibrate the arrival rate from Little's law with one upload
+    /// wire size shared by every tier (no per-tier codec presets):
+    /// shorthand for [`Scenario::recalibrate_per_tier`] with a uniform
+    /// byte vector.
+    pub fn recalibrate(&mut self, upload_bytes: usize, download_bytes: usize) {
+        let bytes = vec![upload_bytes; self.tiers.len()];
+        self.recalibrate_per_tier(&bytes, download_bytes);
+    }
+
     /// (Re)calibrate the arrival rate from Little's law:
     ///
     /// ```text
     /// concurrency = rate * sum_i (w_i/W) * a_i * R_i
-    /// R_i = E[D_i] + download_delay_i + (1 - dropout_i) * upload_delay_i
+    /// R_i = E[D_i]*df_i + download_delay_i + uf_i * upload_delay_i
+    /// df_i = 1 - dropout_i * q_i / 2          (partial droppers stop early)
+    /// uf_i = 1 - dropout_i * (1 - q_i)        (partial droppers still upload)
     /// ```
     ///
     /// where `a_i` is tier i's long-run availability (arrivals land
-    /// uniformly over the diurnal cycle, so `a_i = on_fraction`) and
-    /// `R_i` is the expected in-flight **residency** of a started
-    /// client: training plus its deterministic transfer time (dropped
-    /// clients download but never upload). Without this weighting, a
-    /// sleeping tier would undershoot the target concurrency by its off
-    /// fraction and a bandwidth-limited tier would overshoot it by its
-    /// transfer time — by different factors per algorithm (payload
-    /// sizes differ), confounding cross-algorithm comparisons.
-    pub fn recalibrate(&mut self, upload_bytes: usize, download_bytes: usize) {
-        let weighted: f64 = self
+    /// uniformly over the diurnal cycle, so `a_i = on_fraction`), `R_i`
+    /// is the expected in-flight **residency** of a started client —
+    /// training plus its deterministic transfer time on that tier's own
+    /// upload codec (`upload_bytes[i]`) — and `q_i` is the tier's
+    /// effective `partial_work`: a mid-round dropper trains a uniform
+    /// `m/P` prefix (mean exactly 1/2) and pays the upload delay, while
+    /// a full dropper trains the whole round and never uploads. Without
+    /// this weighting, a sleeping tier would undershoot the target
+    /// concurrency by its off fraction and a bandwidth-limited tier
+    /// would overshoot it by its transfer time — by different factors
+    /// per algorithm (payload sizes differ), confounding
+    /// cross-algorithm comparisons.
+    ///
+    /// Under [`Sampling::Availability`] the per-arrival tier shares are
+    /// clock-dependent (`w_i x 1[on]` renormalized), so the expected
+    /// residency per arrival is averaged numerically over the diurnal
+    /// cycle instead of closed-form.
+    pub fn recalibrate_per_tier(&mut self, upload_bytes: &[usize], download_bytes: usize) {
+        assert_eq!(upload_bytes.len(), self.tiers.len(), "one upload size per tier");
+        let residency: Vec<f64> = self
             .tiers
             .iter()
-            .map(|t| {
+            .zip(upload_bytes)
+            .map(|(t, &up)| {
                 let c = &t.cfg;
-                let avail = if c.day_period > 0.0 { c.on_fraction } else { 1.0 };
-                let residency = t.dist.mean()
+                let q = if self.local_steps >= 2 { c.partial_work } else { 0.0 };
+                let df = 1.0 - c.dropout * q * 0.5;
+                let uf = 1.0 - c.dropout * (1.0 - q);
+                t.dist.mean() * df
                     + bytes_delay(download_bytes, c.download_mbps)
-                    + (1.0 - c.dropout) * bytes_delay(upload_bytes, c.upload_mbps);
-                c.weight * avail * residency
+                    + uf * bytes_delay(up, c.upload_mbps)
             })
-            .sum();
-        self.rate = self.concurrency as f64 / (weighted / self.total_weight);
+            .collect();
+        let mean_residency = match self.sampling {
+            Sampling::Weighted => {
+                let weighted: f64 = self
+                    .tiers
+                    .iter()
+                    .zip(&residency)
+                    .map(|(t, &r)| {
+                        let c = &t.cfg;
+                        let avail = if c.day_period > 0.0 { c.on_fraction } else { 1.0 };
+                        c.weight * avail * r
+                    })
+                    .sum();
+                weighted / self.total_weight
+            }
+            Sampling::Availability => self.availability_mean_residency(&residency),
+        };
+        self.rate = self.concurrency as f64 / mean_residency;
+    }
+
+    /// Expected residency added per arrival *event* under
+    /// availability-weighted sampling, time-averaged over the diurnal
+    /// cycle: at clock τ the arriving client lands on tier i with
+    /// probability `w_i·1[on_i(τ)] / Σ_j w_j·1[on_j(τ)]` (and the
+    /// arrival is lost when every tier is off). Evaluated on a uniform
+    /// grid over the longest configured period — exact for populations
+    /// sharing one period (the common case), a close approximation for
+    /// incommensurate ones.
+    fn availability_mean_residency(&self, residency: &[f64]) -> f64 {
+        let p_max = self
+            .tiers
+            .iter()
+            .map(|t| t.cfg.day_period)
+            .fold(0.0f64, f64::max);
+        if p_max <= 0.0 {
+            // no windows: every tier always on, plain weighted mixture
+            let weighted: f64 = self
+                .tiers
+                .iter()
+                .zip(residency)
+                .map(|(t, &r)| t.cfg.weight * r)
+                .sum();
+            return weighted / self.total_weight;
+        }
+        const GRID: usize = 2048;
+        let mut sum = 0.0f64;
+        for j in 0..GRID {
+            let clock = (j as f64 + 0.5) / GRID as f64 * p_max;
+            let mut mass = 0.0f64;
+            let mut mass_r = 0.0f64;
+            for (i, t) in self.tiers.iter().enumerate() {
+                if self.available(i, clock) {
+                    mass += t.cfg.weight;
+                    mass_r += t.cfg.weight * residency[i];
+                }
+            }
+            if mass > 0.0 {
+                sum += mass_r / mass;
+            }
+        }
+        sum / GRID as f64
     }
 
     /// Calibrated long-run arrival rate.
@@ -183,6 +294,67 @@ impl Scenario {
     pub fn sample_dropout(&self, tier: usize, rng: &mut Prng) -> bool {
         let p = self.tiers[tier].cfg.dropout;
         p > 0.0 && rng.bool(p)
+    }
+
+    /// The configured tier-sampling policy.
+    pub fn sampling(&self) -> Sampling {
+        self.sampling
+    }
+
+    /// The tier's client-codec preset spec, if it has one.
+    pub fn tier_quant_client(&self, tier: usize) -> Option<&str> {
+        self.tiers[tier].cfg.quant_client.as_deref()
+    }
+
+    /// For a client that just *dropped*: does it submit the partial
+    /// update from the `m` local steps it completed instead of
+    /// discarding its work (FedBuff partial-work semantics)? Returns the
+    /// completed fraction `m/P` with `m` uniform on `{1, .., P-1}`, or
+    /// `None` for a full dropout. Tiers with `partial_work = 0` (and
+    /// runs with `P < 2`, where no mid-round prefix exists) draw
+    /// nothing — the stream stays untouched and pre-v2 runs replay
+    /// bit-identically.
+    pub fn sample_partial(&self, tier: usize, rng: &mut Prng) -> Option<f32> {
+        let q = self.tiers[tier].cfg.partial_work;
+        let p = self.local_steps;
+        if q <= 0.0 || p < 2 {
+            return None;
+        }
+        if !rng.bool(q) {
+            return None;
+        }
+        let m = 1 + rng.below(p as u64 - 1);
+        Some(m as f32 / p as f32)
+    }
+
+    /// Availability-weighted tier draw ([`Sampling::Availability`]): the
+    /// arriving client lands on a tier with probability proportional to
+    /// `weight x 1[tier on at clock]`. Returns `None` (drawing nothing)
+    /// when every tier is off — the only case this mode loses an
+    /// arrival.
+    pub fn sample_available_tier(&self, clock: f64, rng: &mut Prng) -> Option<usize> {
+        let mut mass = 0.0f64;
+        let mut last = None;
+        for (i, t) in self.tiers.iter().enumerate() {
+            if self.available(i, clock) {
+                mass += t.cfg.weight;
+                last = Some(i);
+            }
+        }
+        if mass <= 0.0 {
+            return None;
+        }
+        let x = rng.f64() * mass;
+        let mut acc = 0.0f64;
+        for (i, t) in self.tiers.iter().enumerate() {
+            if self.available(i, clock) {
+                acc += t.cfg.weight;
+                if x < acc {
+                    return Some(i);
+                }
+            }
+        }
+        last // x landed on the top edge from rounding; take the last on-tier
     }
 
     /// Diurnal availability: a tier with `day_period > 0` is on for the
@@ -346,5 +518,149 @@ mod tests {
         let mut c = two_tier_cfg();
         c.scenario.tiers[0].weight = 0.0;
         assert!(Scenario::build(&c).is_err());
+    }
+
+    #[test]
+    fn partial_work_draws_nothing_unless_enabled() {
+        // partial_work = 0 (and P < 2): the stream is untouched
+        let c = two_tier_cfg();
+        let s = Scenario::build(&c).unwrap();
+        let mut rng = Prng::new(4);
+        let before = rng.clone().next_u64();
+        assert_eq!(s.sample_partial(1, &mut rng), None);
+        assert_eq!(rng.next_u64(), before);
+        // partial_work set but P = 1: still no mid-round prefix
+        let mut c1 = two_tier_cfg();
+        c1.scenario.tiers[1].partial_work = 0.8;
+        c1.fl.local_steps = 1;
+        let s1 = Scenario::build(&c1).unwrap();
+        let mut rng = Prng::new(4);
+        let before = rng.clone().next_u64();
+        assert_eq!(s1.sample_partial(1, &mut rng), None);
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn partial_fractions_are_step_aligned_with_mean_half() {
+        let mut c = two_tier_cfg();
+        c.scenario.tiers[1].partial_work = 0.5;
+        c.fl.local_steps = 4;
+        let s = Scenario::build(&c).unwrap();
+        let mut rng = Prng::new(7);
+        let (mut some, mut sum) = (0usize, 0.0f64);
+        let n = 40_000;
+        for _ in 0..n {
+            if let Some(f) = s.sample_partial(1, &mut rng) {
+                // fractions are m/P for m in {1, 2, 3}
+                assert!(
+                    [0.25f32, 0.5, 0.75].contains(&f),
+                    "unexpected fraction {f}"
+                );
+                some += 1;
+                sum += f as f64;
+            }
+        }
+        let frac = some as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "partial probability {frac}");
+        let mean = sum / some as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean completed fraction {mean}");
+    }
+
+    #[test]
+    fn per_tier_upload_bytes_shift_the_rate() {
+        // slow tier (1 Mbps up) compresses 10x harder than fast: its
+        // upload delay shrinks accordingly, and recalibrate_per_tier
+        // with a uniform vector matches plain recalibrate bit-for-bit.
+        let c = two_tier_cfg();
+        let mut uniform = Scenario::build(&c).unwrap();
+        let mut per_tier = Scenario::build(&c).unwrap();
+        uniform.recalibrate(1_000_000, 0);
+        per_tier.recalibrate_per_tier(&[1_000_000, 1_000_000], 0);
+        assert_eq!(uniform.rate(), per_tier.rate());
+        // shrinking only the slow tier's payload raises the rate
+        per_tier.recalibrate_per_tier(&[1_000_000, 100_000], 0);
+        assert!(per_tier.rate() > uniform.rate());
+        // R_slow = 3 + 0.5 * 0.8 = 3.4, R_fast = 1 (unlimited links);
+        // weighted: (1*1*1 + 3*0.5*3.4)/4 = 1.525
+        let expect = c.sim.concurrency as f64 / 1.525;
+        assert!((per_tier.rate() - expect).abs() < 1e-9, "{} vs {expect}", per_tier.rate());
+    }
+
+    #[test]
+    fn partial_work_enters_the_residency_math() {
+        // slow tier: dropout 0.5, partial_work 1.0, P >= 2 => every
+        // dropper submits partial work: trains E[f] = 1/2 of its round
+        // and always pays the upload delay.
+        let mut c = two_tier_cfg();
+        c.scenario.tiers[1].partial_work = 1.0;
+        c.fl.local_steps = 2;
+        let mut s = Scenario::build(&c).unwrap();
+        s.recalibrate_per_tier(&[1_000_000, 1_000_000], 0);
+        // df = 1 - 0.5*1*0.5 = 0.75 => training residency 3*0.75 = 2.25;
+        // uf = 1 - 0.5*(1-1) = 1 => upload delay 8.0 always paid.
+        // weighted: (1*1*1 + 3*0.5*(2.25 + 8.0))/4 = 4.09375
+        let expect = c.sim.concurrency as f64 / 4.09375;
+        assert!((s.rate() - expect).abs() < 1e-9, "{} vs {expect}", s.rate());
+    }
+
+    #[test]
+    fn availability_sampling_draws_only_on_tiers() {
+        let mut c = two_tier_cfg();
+        c.scenario.sampling = "availability".into();
+        let s = Scenario::build(&c).unwrap();
+        assert_eq!(s.sampling(), Sampling::Availability);
+        let mut rng = Prng::new(8);
+        // slow tier (weight 3) is off in the second half of its period:
+        // there, every arrival lands on fast
+        for _ in 0..200 {
+            assert_eq!(s.sample_available_tier(7.0, &mut rng), Some(0));
+        }
+        // first half: both on, slow drawn ~3/4 of the time
+        let n = 40_000;
+        let slow = (0..n)
+            .filter(|_| s.sample_available_tier(2.0, &mut rng) == Some(1))
+            .count();
+        let frac = slow as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "slow fraction {frac}");
+        // a tier mix that is entirely off loses the arrival (and draws
+        // nothing)
+        let mut c2 = two_tier_cfg();
+        c2.scenario.sampling = "availability".into();
+        for t in &mut c2.scenario.tiers {
+            t.day_period = 10.0;
+            t.on_fraction = 0.5;
+            t.phase = 0.0;
+        }
+        let s2 = Scenario::build(&c2).unwrap();
+        let mut rng = Prng::new(9);
+        let before = rng.clone().next_u64();
+        assert_eq!(s2.sample_available_tier(7.0, &mut rng), None);
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn availability_sampling_recalibrates_over_the_cycle() {
+        // Both tiers fixed-duration; slow (weight 3, E[D]=3) is on only
+        // half its period. While slow is on the expected residency per
+        // arrival is (1*1 + 3*3)/4 = 2.5; while it is off every arrival
+        // is fast with residency 1. Time average: (2.5 + 1)/2 = 1.75.
+        let mut c = two_tier_cfg();
+        c.scenario.sampling = "availability".into();
+        c.scenario.tiers[1].dropout = 0.0;
+        let s = Scenario::build(&c).unwrap();
+        let expect = c.sim.concurrency as f64 / 1.75;
+        assert!(
+            (s.rate() - expect).abs() / expect < 1e-3,
+            "{} vs {expect}",
+            s.rate()
+        );
+        // without any windows the mode degenerates to the plain mixture
+        let mut c2 = two_tier_cfg();
+        c2.scenario.sampling = "availability".into();
+        c2.scenario.tiers[1].day_period = 0.0;
+        c2.scenario.tiers[1].dropout = 0.0;
+        let s2 = Scenario::build(&c2).unwrap();
+        let expect2 = c2.sim.concurrency as f64 / 2.5;
+        assert!((s2.rate() - expect2).abs() < 1e-12, "{} vs {expect2}", s2.rate());
     }
 }

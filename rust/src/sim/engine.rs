@@ -7,10 +7,10 @@ use crate::coordinator::{ClientLogic, Server, ServerStep};
 use crate::metrics::{CurvePoint, RunResult};
 use crate::quant::parse_spec;
 use crate::runtime::Backend;
-use crate::scenario::{Scenario, SnapshotStore};
+use crate::scenario::{Sampling, Scenario, SnapshotStore};
 use crate::util::pool::ShardPool;
 use crate::util::prng::Prng;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -34,6 +34,11 @@ enum EventKind {
         /// Client drops before uploading (decided at arrival from the
         /// tier's dropout probability; the lazy compute is skipped).
         dropped: bool,
+        /// A dropped client salvaging partial work: the completed
+        /// fraction `m/P` of its local steps. The client stops training
+        /// at `fraction * duration`, scales its delta by the fraction
+        /// (FedBuff partial-work semantics) and still uploads.
+        partial: Option<f32>,
     },
 }
 
@@ -111,34 +116,62 @@ impl<'a> SimEngine<'a> {
         let mut duration_rng = root.stream("durations");
         let mut sampling_rng = root.stream("client-sampling");
         // Scenario-only randomness lives on its own named streams (and
-        // single-tier / zero-dropout populations draw nothing from them),
-        // so the desugared default consumes exactly the same randomness
-        // as the pre-scenario engine — bit-identical trajectories.
+        // single-tier / zero-dropout / zero-partial-work populations
+        // draw nothing from them), so the desugared default consumes
+        // exactly the same randomness as the pre-scenario engine —
+        // bit-identical trajectories.
         let mut tier_rng = root.stream("scenario-tier");
         let mut dropout_rng = root.stream("scenario-dropout");
+        let mut partial_rng = root.stream("scenario-partial");
 
         let mut scenario = Scenario::build(self.cfg)?;
 
         // initial model: shared x^0 (Algorithm 1 line 1 / Algorithm 3)
         let x0 = self.backend.init_params(self.seed as i32 & 0x7FFF_FFFF)?;
         let mut server = Server::build(self.cfg, x0, root.stream("server").next_u64_here())?;
-        let logic = ClientLogic::new(self.cfg, root.stream("client").next_u64_here())?;
+        let mut logic = ClientLogic::new(self.cfg, root.stream("client").next_u64_here())?;
         let d = server.d();
 
+        // Per-tier quantizer presets: register each tier's upload codec
+        // on both ends (same order => same ids; identical resolved
+        // codecs dedup, so a no-preset run keeps exactly one codec and
+        // the single-codec ingest path).
+        let mut tier_codec = vec![0usize; scenario.num_tiers()];
+        for tier in 0..scenario.num_tiers() {
+            if let Some(spec) = scenario.tier_quant_client(tier) {
+                let sid = server.register_client_codec(spec)?;
+                let cid = logic.register_codec(spec)?;
+                if sid != cid {
+                    bail!(
+                        "internal: codec id mismatch for tier {tier} preset '{spec}' \
+                         (server {sid}, client {cid})"
+                    );
+                }
+                tier_codec[tier] = sid;
+            }
+        }
+        for tier in 0..scenario.num_tiers() {
+            scenario.metrics.tiers[tier].codec = logic.codec_name(tier_codec[tier]);
+        }
+
         // Per-trip wire sizes for tier bandwidth delays + byte metrics.
-        // Both codecs emit fixed-size payloads, so these are exact; the
+        // Every codec emits fixed-size payloads, so these are exact; the
         // download is one hidden-state increment (broadcast mode). The
         // arrival rate is recalibrated with them so bandwidth-limited
         // tiers don't overshoot the target concurrency (algorithms with
         // bigger payloads would otherwise run at different effective
-        // concurrency from the same config).
-        let upload_bytes = logic.upload_bytes(d);
+        // concurrency from the same config) — per tier, since preset
+        // codecs change a tier's upload size.
+        let tier_upload_bytes: Vec<usize> = tier_codec
+            .iter()
+            .map(|&codec| logic.upload_bytes_for(codec, d))
+            .collect();
         let download_spec = match self.cfg.fl.algorithm {
             Algorithm::Qafel | Algorithm::DirectQuant => self.cfg.quant.server.as_str(),
             Algorithm::FedBuff | Algorithm::FedAsync => "none",
         };
         let download_bytes = parse_spec(download_spec)?.expected_bytes(d);
-        scenario.recalibrate(upload_bytes, download_bytes);
+        scenario.recalibrate_per_tier(&tier_upload_bytes, download_bytes);
         let mut arrival = scenario.arrival_process()?;
 
         // Eval reductions run on the server's persistent shard pool
@@ -195,62 +228,108 @@ impl<'a> SimEngine<'a> {
             clock = ev.time;
             match ev.kind {
                 EventKind::Arrival => {
-                    let tier = scenario.sample_tier(&mut tier_rng);
-                    if scenario.available(tier, clock) {
+                    // Weighted sampling draws by weight alone and
+                    // discards off-window arrivals (the pre-v2 path,
+                    // bit-identical); availability sampling draws among
+                    // the tiers that are on right now.
+                    let tier = match scenario.sampling() {
+                        Sampling::Weighted => {
+                            let tier = scenario.sample_tier(&mut tier_rng);
+                            if scenario.available(tier, clock) {
+                                Some(tier)
+                            } else {
+                                scenario.metrics.record_unavailable(tier);
+                                None
+                            }
+                        }
+                        Sampling::Availability => {
+                            let picked = scenario.sample_available_tier(clock, &mut tier_rng);
+                            if picked.is_none() {
+                                scenario.metrics.record_all_off();
+                            }
+                            picked
+                        }
+                    };
+                    if let Some(tier) = tier {
                         // this client starts training now
                         scenario.metrics.record_arrival(tier);
                         let user = sampling_rng.range(0, n_users);
                         let dur = scenario.sample_duration(tier, &mut duration_rng).max(1e-9);
                         let dropped = scenario.sample_dropout(tier, &mut dropout_rng);
+                        // a dropped client may salvage partial work:
+                        // train an m/P prefix, then upload it anyway
+                        let partial = if dropped {
+                            scenario.sample_partial(tier, &mut partial_rng)
+                        } else {
+                            None
+                        };
                         let t_start = store.acquire();
                         let trip = trips;
                         trips += 1;
                         in_flight += 1;
                         max_in_flight = max_in_flight.max(in_flight);
                         // residency = download + training (+ upload,
-                        // unless the client drops before uploading)
+                        // unless the client drops without submitting)
+                        let trained = match partial {
+                            Some(f) => dur * f as f64,
+                            None => dur,
+                        };
                         let mut delay = scenario.download_delay(tier, download_bytes);
-                        if !dropped {
-                            delay += scenario.upload_delay(tier, upload_bytes);
+                        if !dropped || partial.is_some() {
+                            delay += scenario.upload_delay(tier, tier_upload_bytes[tier]);
                         }
                         push(
                             &mut events,
-                            clock + dur + delay,
-                            EventKind::Finish { user, tier, t_start, trip, dropped },
+                            clock + trained + delay,
+                            EventKind::Finish { user, tier, t_start, trip, dropped, partial },
                         );
-                    } else {
-                        scenario.metrics.record_unavailable(tier);
                     }
                     // schedule the next arrival
                     let gap = arrival.next_gap(&mut arrival_rng);
                     push(&mut events, clock + gap, EventKind::Arrival);
                 }
-                EventKind::Finish { user, tier, t_start, trip, dropped } => {
+                EventKind::Finish { user, tier, t_start, trip, dropped, partial } => {
                     in_flight -= 1;
-                    if dropped {
+                    if dropped && partial.is_none() {
                         // trained, downloaded, never uploaded — skip the
                         // lazy compute entirely and release the version
                         store.release(t_start);
                         scenario.metrics.record_dropout(tier, download_bytes);
                         continue;
                     }
-                    // lazy compute against the start-time snapshot
+                    // lazy compute against the start-time snapshot; a
+                    // partial dropper submits scale * delta on the
+                    // tier's own upload codec
                     let snapshot = store
                         .get(t_start)
                         .map_err(|e| anyhow!("{e} (trip {trip})"))?
                         .clone();
-                    let upload = logic.run_round(self.backend, &snapshot, user, trip)?;
+                    let codec = tier_codec[tier];
+                    let scale = partial.unwrap_or(1.0);
+                    let upload =
+                        logic.run_round_with(self.backend, &snapshot, user, trip, codec, scale)?;
                     drop(snapshot);
                     store.release(t_start);
                     let staleness = server.t() - t_start;
-                    scenario.metrics.record_upload(
-                        tier,
-                        staleness,
-                        upload.msg.wire_bytes(),
-                        download_bytes,
+                    if partial.is_some() {
+                        scenario.metrics.record_partial_upload(
+                            tier,
+                            staleness,
+                            upload.msg.wire_bytes(),
+                            download_bytes,
+                        );
+                    } else {
+                        scenario.metrics.record_upload(
+                            tier,
+                            staleness,
+                            upload.msg.wire_bytes(),
+                            download_bytes,
+                        );
+                    }
+                    let stepped = matches!(
+                        server.ingest_from(&upload.msg, staleness, codec)?,
+                        ServerStep::Stepped(_)
                     );
-                    let stepped =
-                        matches!(server.ingest(&upload.msg, staleness)?, ServerStep::Stepped(_));
                     if stepped {
                         store.publish(server.t(), server.client_snapshot());
                     }

@@ -69,7 +69,7 @@ impl HalfNormal {
     }
 
     /// The constant client arrival rate that sustains a target expected
-    /// concurrency: rate = concurrency / E[duration]. With sigma = 1 this
+    /// concurrency: `rate = concurrency / E[duration]`. With sigma = 1 this
     /// reproduces the paper's 125 / 627 / 1253 clients-per-unit-time for
     /// concurrencies 100 / 500 / 1000.
     pub fn rate_for_concurrency(&self, concurrency: f64) -> f64 {

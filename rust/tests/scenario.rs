@@ -17,7 +17,9 @@
 use qafel::config::{Algorithm, Config, TierConfig};
 use qafel::coordinator::{ClientLogic, Server, ServerStep};
 use qafel::metrics::{CommMetrics, CurvePoint};
+use qafel::quant::parse_spec;
 use qafel::runtime::{Backend, QuadraticBackend};
+use qafel::scenario::build_arrival;
 use qafel::sim::SimEngine;
 use qafel::util::dist::{DurationDist, Exponential, HalfNormal, LogNormal};
 use qafel::util::prng::Prng;
@@ -391,6 +393,280 @@ fn diurnal_windows_keep_calibrated_concurrency() {
     );
     // both tiers saw gated arrivals
     assert!(r.scenario.tiers.iter().all(|t| t.unavailable > 0));
+}
+
+// ---------------------------------------------------------------------------
+// Reference: the PR 3 (pre-v2) heterogeneous engine, replayed verbatim
+// ---------------------------------------------------------------------------
+
+/// The scenario-v1 `SimEngine::run_traced` for tiered populations,
+/// replayed line by line with the tier model reimplemented locally
+/// (weighted tier draw, persistent per-tier duration samplers,
+/// deterministic diurnal windows, exact-wire-size transfer delays,
+/// availability-weighted Little's-law calibration, single client codec,
+/// all-or-nothing dropout). Pins the v2 engine's no-preset path:
+/// without `quant_client` / `partial_work` / `sampling=availability`
+/// the refactor must be byte-identical.
+fn pr3_hetero_run(
+    cfg: &Config,
+    backend: &dyn Backend,
+    seed: u64,
+) -> (Vec<CurvePoint>, CommMetrics, u64) {
+    struct RefTier {
+        cfg: TierConfig,
+        dist: DurationDist,
+    }
+    let bytes_delay = |bytes: usize, mbps: f64| -> f64 {
+        if mbps > 0.0 {
+            bytes as f64 * 8.0 / (mbps * 1e6)
+        } else {
+            0.0
+        }
+    };
+
+    let root = Prng::new(seed);
+    let mut arrival_rng = root.stream("arrivals");
+    let mut duration_rng = root.stream("durations");
+    let mut sampling_rng = root.stream("client-sampling");
+    let mut tier_rng = root.stream("scenario-tier");
+    let mut dropout_rng = root.stream("scenario-dropout");
+
+    let mut tiers: Vec<RefTier> = cfg
+        .resolved_tiers()
+        .into_iter()
+        .map(|tc| {
+            let dist = match tc.duration.as_str() {
+                "halfnormal" => DurationDist::HalfNormal(HalfNormal::new(tc.duration_sigma)),
+                "lognormal" => DurationDist::LogNormal(LogNormal::new(0.0, tc.duration_sigma)),
+                "fixed" => DurationDist::Fixed(tc.duration_sigma),
+                other => panic!("unknown duration dist '{other}'"),
+            };
+            RefTier { cfg: tc, dist }
+        })
+        .collect();
+    let mut cum = Vec::new();
+    let mut total_weight = 0.0;
+    for t in &tiers {
+        total_weight += t.cfg.weight;
+        cum.push(total_weight);
+    }
+
+    let x0 = backend.init_params(seed as i32 & 0x7FFF_FFFF).unwrap();
+    let mut server = {
+        let mut s = root.stream("server");
+        Server::build(cfg, x0, s.next_u64()).unwrap()
+    };
+    let logic = {
+        let mut s = root.stream("client");
+        ClientLogic::new(cfg, s.next_u64()).unwrap()
+    };
+    let d = server.d();
+    let eval_pool = server.pool().clone();
+
+    let upload_bytes = logic.upload_bytes(d);
+    let download_spec = match cfg.fl.algorithm {
+        Algorithm::Qafel | Algorithm::DirectQuant => cfg.quant.server.as_str(),
+        Algorithm::FedBuff | Algorithm::FedAsync => "none",
+    };
+    let download_bytes = parse_spec(download_spec).unwrap().expected_bytes(d);
+
+    // PR 3 rate calibration: availability-weighted expected residency
+    let weighted: f64 = tiers
+        .iter()
+        .map(|t| {
+            let c = &t.cfg;
+            let avail = if c.day_period > 0.0 { c.on_fraction } else { 1.0 };
+            let residency = t.dist.mean()
+                + bytes_delay(download_bytes, c.download_mbps)
+                + (1.0 - c.dropout) * bytes_delay(upload_bytes, c.upload_mbps);
+            c.weight * avail * residency
+        })
+        .sum();
+    let rate = cfg.sim.concurrency as f64 / (weighted / total_weight);
+    let mut arrival = build_arrival(
+        cfg.resolved_arrival(),
+        rate,
+        cfg.scenario.burst_factor,
+        cfg.scenario.burst_on,
+        cfg.scenario.burst_off,
+    )
+    .unwrap();
+
+    let available = |t: &TierConfig, clock: f64| -> bool {
+        if t.day_period <= 0.0 {
+            return true;
+        }
+        ((clock + t.phase) % t.day_period) / t.day_period < t.on_fraction
+    };
+
+    enum K {
+        Arrival,
+        Finish {
+            user: usize,
+            tier: usize,
+            snapshot: Arc<Vec<f32>>,
+            t_start: u64,
+            trip: u64,
+            dropped: bool,
+        },
+    }
+    struct Ev {
+        time: f64,
+        seq: u64,
+        kind: K,
+    }
+    impl PartialEq for Ev {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl Eq for Ev {}
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ev {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    let mut events: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut push = |events: &mut BinaryHeap<Ev>, time: f64, kind: K| {
+        let s = seq;
+        seq += 1;
+        events.push(Ev { time, seq: s, kind });
+    };
+    push(&mut events, 0.0, K::Arrival);
+
+    let mut trips = 0u64;
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    let mut last_eval_t = 0u64;
+    let n_users = backend.num_train_users();
+
+    let ev0 = backend.evaluate_pooled(server.model(), &eval_pool).unwrap();
+    curve.push(CurvePoint {
+        time: 0.0,
+        server_steps: 0,
+        uploads: 0,
+        upload_mb: 0.0,
+        broadcast_mb: 0.0,
+        val_loss: ev0.loss,
+        val_accuracy: ev0.accuracy,
+        grad_norm_sq: ev0.grad_norm_sq,
+    });
+
+    let mut clock = 0.0f64;
+    while let Some(ev) = events.pop() {
+        clock = ev.time;
+        match ev.kind {
+            K::Arrival => {
+                let tier = if tiers.len() == 1 {
+                    0
+                } else {
+                    let x = tier_rng.f64() * total_weight;
+                    cum.iter().position(|&c| x < c).unwrap_or(tiers.len() - 1)
+                };
+                if available(&tiers[tier].cfg, clock) {
+                    let user = sampling_rng.range(0, n_users);
+                    let dur = tiers[tier].dist.sample(&mut duration_rng).max(1e-9);
+                    let p = tiers[tier].cfg.dropout;
+                    let dropped = p > 0.0 && dropout_rng.bool(p);
+                    let trip = trips;
+                    trips += 1;
+                    let c = &tiers[tier].cfg;
+                    let mut delay = bytes_delay(download_bytes, c.download_mbps);
+                    if !dropped {
+                        delay += bytes_delay(upload_bytes, c.upload_mbps);
+                    }
+                    push(
+                        &mut events,
+                        clock + dur + delay,
+                        K::Finish {
+                            user,
+                            tier,
+                            snapshot: server.client_snapshot(),
+                            t_start: server.t(),
+                            trip,
+                            dropped,
+                        },
+                    );
+                }
+                let gap = arrival.next_gap(&mut arrival_rng);
+                push(&mut events, clock + gap, K::Arrival);
+            }
+            K::Finish { user, tier: _, snapshot, t_start, trip, dropped } => {
+                if dropped {
+                    continue;
+                }
+                let upload = logic.run_round(backend, &snapshot, user, trip).unwrap();
+                drop(snapshot);
+                let staleness = server.t() - t_start;
+                let stepped = matches!(
+                    server.ingest(&upload.msg, staleness).unwrap(),
+                    ServerStep::Stepped(_)
+                );
+                if stepped && server.t() - last_eval_t >= cfg.sim.eval_every as u64 {
+                    last_eval_t = server.t();
+                    let e = backend.evaluate_pooled(server.model(), &eval_pool).unwrap();
+                    let point = CurvePoint {
+                        time: clock,
+                        server_steps: server.t(),
+                        uploads: server.comm.uploads,
+                        upload_mb: server.comm.upload_mb(),
+                        broadcast_mb: server.comm.broadcast_mb(),
+                        val_loss: e.loss,
+                        val_accuracy: e.accuracy,
+                        grad_norm_sq: e.grad_norm_sq,
+                    };
+                    curve.push(point);
+                    if point.val_accuracy >= cfg.stop.target_accuracy {
+                        break;
+                    }
+                }
+                if server.comm.uploads >= cfg.stop.max_uploads
+                    || server.t() >= cfg.stop.max_server_steps
+                {
+                    break;
+                }
+            }
+        }
+    }
+    (curve, server.comm.clone(), server.t())
+}
+
+#[test]
+fn golden_nopreset_tiers_bit_identical_to_pr3_engine() {
+    // The v2 acceptance bar: with no per-tier presets configured
+    // (no quant_client, partial_work = 0, sampling = weighted) the
+    // refactored engine's curves and comm bytes are byte-identical to
+    // the PR 3 engine — for a genuinely heterogeneous population
+    // (bandwidth limits, dropout, a diurnal window, bursty arrivals).
+    let cfg = hetero_cfg();
+    cfg.validate().unwrap();
+    assert!(cfg.scenario.tiers.iter().all(|t| t.quant_client.is_none()));
+    assert!(cfg.scenario.tiers.iter().all(|t| t.partial_work == 0.0));
+    for seed in [21u64, 4] {
+        let b = backend(17);
+        let (ref_curve, ref_comm, ref_steps) = pr3_hetero_run(&cfg, &b, seed);
+        let new = SimEngine::new(&cfg, &b, seed).run().unwrap();
+        assert_eq!(ref_curve.len(), new.curve.len(), "seed {seed}: curve length");
+        assert_eq!(
+            curve_bytes(&ref_curve),
+            curve_bytes(&new.curve),
+            "seed {seed}: curve bytes diverged from the PR 3 engine"
+        );
+        assert_comm_eq(&ref_comm, &new.comm, &format!("seed {seed}"));
+        assert_eq!(ref_steps, new.server_steps, "seed {seed}: server steps");
+        assert!(ref_curve.len() > 2, "seed {seed}: trivial run proves nothing");
+        // the population actually exercised the heterogeneous paths
+        let sc = &new.scenario;
+        assert!(sc.tiers[1].dropouts > 0, "no dropouts — weak golden");
+        assert!(sc.tiers[1].unavailable > 0, "no off-window arrivals — weak golden");
+        assert!(sc.tiers.iter().all(|t| t.partial_uploads == 0));
+    }
 }
 
 #[test]

@@ -1,0 +1,254 @@
+//! Scenario engine v2 integration tests (DESIGN_SCENARIOS.md):
+//!
+//! * **per-tier quantizer presets** — a 2-tier run with distinct client
+//!   codecs completes, per-tier byte accounting matches each tier's own
+//!   codec exactly, and the heterogeneous path keeps the sharded
+//!   pipeline's bit-identical-across-shards contract;
+//! * **mid-round partial-work dropout** — dropped clients salvage their
+//!   `m/P` prefix, counted separately from full dropouts, with wasted
+//!   downlink bytes attributed only to the latter;
+//! * **availability-weighted sampling** — diurnal windows shape who
+//!   arrives: counter-phased populations lose no arrivals and still
+//!   track the target concurrency.
+
+use qafel::config::{Algorithm, Config, TierConfig};
+use qafel::quant::parse_spec;
+use qafel::runtime::QuadraticBackend;
+use qafel::sim::SimEngine;
+
+fn quad_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.fl.buffer_size = 4;
+    c.fl.client_lr = 0.15;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.quant.client = "qsgd:8".into();
+    c.quant.server = "qsgd:8".into();
+    c.sim.concurrency = 20;
+    c.sim.eval_every = 10;
+    c.stop.target_accuracy = 2.0; // fixed horizon
+    c.stop.max_uploads = 6000;
+    c.stop.max_server_steps = 150;
+    c
+}
+
+fn backend(seed: u64) -> QuadraticBackend {
+    QuadraticBackend::new(24, 10, 1.0, 0.3, 0.3, 0.02, 2, seed)
+}
+
+fn two_codec_cfg() -> Config {
+    let mut c = quad_cfg();
+    let mut fast = TierConfig::named("fast");
+    fast.weight = 0.5;
+    fast.duration_sigma = 0.5;
+    let mut slow = TierConfig::named("slow");
+    slow.weight = 0.5;
+    slow.quant_client = Some("top:0.25".into());
+    c.scenario.tiers = vec![fast, slow];
+    c
+}
+
+#[test]
+fn two_tier_run_with_distinct_codecs_accounts_bytes_per_tier() {
+    let cfg = two_codec_cfg();
+    cfg.validate().unwrap();
+    let b = backend(11);
+    let r = SimEngine::new(&cfg, &b, 7).run().unwrap();
+    assert_eq!(r.server_steps, 150, "run did not complete its horizon");
+    let sc = &r.scenario;
+    assert_eq!(sc.tiers.len(), 2);
+    // each tier is tagged with the codec it actually uploaded on
+    assert_eq!(sc.tiers[0].codec, "qsgd:8");
+    assert_eq!(sc.tiers[1].codec, "top:0.25");
+    // per-tier byte accounting is exact: uploads x that codec's wire size
+    let d = 24;
+    let qsgd_bytes = parse_spec("qsgd:8").unwrap().expected_bytes(d) as u64;
+    let top_bytes = parse_spec("top:0.25").unwrap().expected_bytes(d) as u64;
+    assert_ne!(qsgd_bytes, top_bytes, "codecs must differ on the wire");
+    assert!(sc.tiers[0].uploads > 0 && sc.tiers[1].uploads > 0);
+    assert_eq!(sc.tiers[0].upload_bytes, sc.tiers[0].uploads * qsgd_bytes);
+    assert_eq!(sc.tiers[1].upload_bytes, sc.tiers[1].uploads * top_bytes);
+    // and sums to the server's global accounting
+    let uploads: u64 = sc.tiers.iter().map(|t| t.uploads).sum();
+    let bytes: u64 = sc.tiers.iter().map(|t| t.upload_bytes).sum();
+    assert_eq!(uploads, r.comm.uploads);
+    assert_eq!(bytes, r.comm.upload_bytes);
+}
+
+#[test]
+fn heterogeneous_codecs_keep_the_shard_bit_identity_contract() {
+    // the per-tier-codec ingest path runs on the same sharded decode
+    // pipeline: S=1 and S=4 must produce byte-identical trajectories
+    let cfg0 = two_codec_cfg();
+    let b = backend(11);
+    let mut curves: Vec<Vec<u64>> = Vec::new();
+    for shards in [1usize, 4] {
+        let mut cfg = cfg0.clone();
+        cfg.fl.shards = shards;
+        let r = SimEngine::new(&cfg, &b, 9).run().unwrap();
+        assert!(r.comm.uploads > 0);
+        curves.push(
+            r.curve
+                .iter()
+                .flat_map(|p| {
+                    [
+                        p.time.to_bits(),
+                        p.server_steps,
+                        p.uploads,
+                        p.upload_mb.to_bits(),
+                        p.val_loss.to_bits(),
+                        p.val_accuracy.to_bits(),
+                    ]
+                })
+                .collect(),
+        );
+    }
+    assert_eq!(curves[0], curves[1], "S=1 vs S=4 diverged under per-tier codecs");
+}
+
+#[test]
+fn preset_equal_to_default_codec_dedups_to_the_single_codec_path() {
+    // a preset naming the default spec must change nothing: the codec
+    // registry dedups it to id 0, so the trajectory is byte-identical
+    // to the same population without the preset
+    let mut a = TierConfig::named("a");
+    a.weight = 0.3;
+    let mut bt = TierConfig::named("b");
+    bt.weight = 0.7;
+    let mut bt_preset = bt.clone();
+    bt_preset.quant_client = Some("qsgd:8".into()); // == quant.client
+    let mut with = quad_cfg();
+    with.scenario.tiers = vec![a.clone(), bt_preset];
+    let mut without = quad_cfg();
+    without.scenario.tiers = vec![a, bt];
+    let b = backend(3);
+    let r1 = SimEngine::new(&with, &b, 5).run().unwrap();
+    let r2 = SimEngine::new(&without, &b, 5).run().unwrap();
+    assert_eq!(r1.comm.uploads, r2.comm.uploads);
+    assert_eq!(r1.comm.upload_bytes, r2.comm.upload_bytes);
+    assert_eq!(r1.server_steps, r2.server_steps);
+    let bits = |r: &qafel::metrics::RunResult| -> Vec<u64> {
+        r.curve.iter().map(|p| p.val_loss.to_bits()).collect()
+    };
+    assert_eq!(bits(&r1), bits(&r2), "deduped preset changed the trajectory");
+}
+
+#[test]
+fn partial_work_salvages_dropped_rounds() {
+    let mut cfg = quad_cfg();
+    cfg.fl.local_steps = 2; // partial prefixes exist
+    let mut fast = TierConfig::named("fast");
+    fast.weight = 0.5;
+    let mut slow = TierConfig::named("slow");
+    slow.weight = 0.5;
+    slow.dropout = 0.4;
+    slow.partial_work = 0.5;
+    slow.download_mbps = 8.0;
+    cfg.scenario.tiers = vec![fast, slow];
+    cfg.validate().unwrap();
+    let b = backend(13);
+    let r = SimEngine::new(&cfg, &b, 3).run().unwrap();
+    let sc = &r.scenario;
+    let slow_m = &sc.tiers[1];
+    assert_eq!(slow_m.name, "slow");
+    // both outcomes occurred: full drops and partial salvages
+    assert!(slow_m.dropouts > 0, "expected full dropouts");
+    assert!(slow_m.partial_uploads > 0, "expected partial submissions");
+    // partial uploads are counted inside uploads, and the global
+    // accounting still balances
+    assert!(slow_m.partial_uploads <= slow_m.uploads);
+    let uploads: u64 = sc.tiers.iter().map(|t| t.uploads).sum();
+    assert_eq!(uploads, r.comm.uploads);
+    assert_eq!(sc.staleness.n, r.comm.uploads);
+    // wasted downlink = full dropouts only (partials contributed)
+    let down_per_trip = parse_spec("qsgd:8").unwrap().expected_bytes(24) as u64;
+    assert_eq!(slow_m.wasted_download_bytes, slow_m.dropouts * down_per_trip);
+    assert_eq!(sc.tiers[0].wasted_download_bytes, 0);
+    assert_eq!(sc.tiers[0].partial_uploads, 0);
+    // arrivals ~= uploads + dropouts + still-in-flight
+    assert!(slow_m.arrivals >= slow_m.uploads + slow_m.dropouts);
+    // determinism across repeat runs
+    let r2 = SimEngine::new(&cfg, &b, 3).run().unwrap();
+    assert_eq!(r.scenario, r2.scenario);
+}
+
+#[test]
+fn partial_work_needs_two_local_steps() {
+    // with P = 1 there is no mid-round prefix: partial_work is inert
+    // and every dropout stays a full dropout
+    let mut cfg = quad_cfg();
+    cfg.fl.local_steps = 1;
+    let mut only = TierConfig::named("only");
+    only.dropout = 0.4;
+    only.partial_work = 1.0;
+    cfg.scenario.tiers = vec![only];
+    cfg.validate().unwrap();
+    let b = backend(13);
+    let r = SimEngine::new(&cfg, &b, 3).run().unwrap();
+    let t = &r.scenario.tiers[0];
+    assert!(t.dropouts > 0);
+    assert_eq!(t.partial_uploads, 0);
+}
+
+#[test]
+fn availability_sampling_loses_no_arrivals_in_counter_phase() {
+    let mut cfg = quad_cfg();
+    cfg.fl.algorithm = Algorithm::FedBuff;
+    cfg.fl.client_lr = 0.05;
+    cfg.sim.concurrency = 40;
+    cfg.sim.eval_every = 500;
+    cfg.stop.max_uploads = 12_000;
+    cfg.stop.max_server_steps = 1_000_000;
+    cfg.scenario.sampling = "availability".into();
+    let mut day = TierConfig::named("day");
+    day.weight = 0.5;
+    day.day_period = 8.0;
+    day.on_fraction = 0.5;
+    let mut night = TierConfig::named("night");
+    night.weight = 0.5;
+    night.day_period = 8.0;
+    night.on_fraction = 0.5;
+    night.phase = 4.0;
+    cfg.scenario.tiers = vec![day, night];
+    cfg.validate().unwrap();
+    let b = QuadraticBackend::new(16, 8, 1.0, 0.3, 0.2, 0.02, 1, 3);
+    let r = SimEngine::new(&cfg, &b, 5).run().unwrap();
+    let sc = &r.scenario;
+    // someone is always on: no arrival is ever lost, and no per-tier
+    // off-window skip is recorded (the drawn tier is on by construction)
+    assert_eq!(sc.arrivals_all_off, 0);
+    assert!(sc.tiers.iter().all(|t| t.unavailable == 0));
+    assert!(sc.tiers.iter().all(|t| t.arrivals > 0));
+    // and the calibration still tracks the target concurrency
+    let measured = sc.mean_concurrency;
+    assert!(
+        (measured - 40.0).abs() / 40.0 < 0.15,
+        "availability sampling: measured mean concurrency {measured}, target 40"
+    );
+}
+
+#[test]
+fn availability_sampling_counts_all_off_gaps() {
+    // both tiers share the same off window: arrivals landing there are
+    // lost and counted on the run-level all-off counter
+    let mut cfg = quad_cfg();
+    cfg.fl.algorithm = Algorithm::FedBuff;
+    cfg.fl.client_lr = 0.05;
+    cfg.stop.max_server_steps = 300;
+    cfg.scenario.sampling = "availability".into();
+    let mut a = TierConfig::named("a");
+    a.day_period = 8.0;
+    a.on_fraction = 0.5;
+    let mut bt = TierConfig::named("b");
+    bt.day_period = 8.0;
+    bt.on_fraction = 0.5;
+    cfg.scenario.tiers = vec![a, bt];
+    cfg.validate().unwrap();
+    let b = QuadraticBackend::new(16, 8, 1.0, 0.3, 0.2, 0.02, 1, 3);
+    let r = SimEngine::new(&cfg, &b, 5).run().unwrap();
+    let sc = &r.scenario;
+    assert!(sc.arrivals_all_off > 0, "expected all-off arrival gaps");
+    assert!(sc.tiers.iter().all(|t| t.unavailable == 0));
+}

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the repo's doc surface (CI).
+
+Checks every inline markdown link `[text](target)` in the given files:
+
+* relative file targets must exist (checked relative to the linking
+  file's directory; a `#fragment` suffix is stripped first);
+* `#fragment`-only targets must match a heading in the same file
+  (GitHub anchor slugging: lowercase, punctuation stripped, spaces to
+  dashes);
+* absolute `http(s)://` / `mailto:` targets are skipped — CI runs
+  offline, and external rot is not this check's job.
+
+Exit code 0 when every link resolves, 1 otherwise (each failure is
+printed as `file: broken link 'target'`).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style links are not used in this repo.
+# [text](target) with no nesting; ignore images' leading '!' (same rule).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    heading = heading.strip().lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def check_file(path: Path) -> list[str]:
+    # drop fenced code blocks first: link-looking text inside them is
+    # code, and '#'-prefixed shell/TOML comments are not headings
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    anchors = {github_slug(h) for h in HEADING_RE.findall(text)}
+    failures = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if github_slug(target[1:]) not in anchors:
+                failures.append(f"{path}: broken anchor '{target}'")
+            continue
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).exists():
+            failures.append(f"{path}: broken link '{target}'")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    failures = []
+    for name in argv[1:]:
+        path = Path(name)
+        if not path.exists():
+            failures.append(f"{path}: file does not exist")
+            continue
+        failures.extend(check_file(path))
+    for f in failures:
+        print(f, file=sys.stderr)
+    if not failures:
+        print(f"check_links: {len(argv) - 1} files OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
