@@ -66,6 +66,16 @@ fn main() -> anyhow::Result<()> {
     println!("[leader] kB/upload = {:.3}, kB/broadcast = {:.3}",
              report.comm.kb_per_upload(), report.comm.kb_per_download());
     println!("[leader] staleness: mean {:.2}, max {}", report.staleness_mean, report.staleness_max);
+    // wire-protocol v2 per-worker accounting (negotiated codec, exact bytes)
+    for ws in &report.worker_stats {
+        println!(
+            "[leader] worker {}: v{} codec {} — {} uploads / {:.1} kB up, \
+             {} broadcast frames / {:.1} kB down, staleness mean {:.2}",
+            ws.worker_id, ws.protocol, ws.codec, ws.uploads,
+            ws.upload_bytes as f64 / 1000.0, ws.broadcast_frames,
+            ws.broadcast_bytes as f64 / 1000.0, ws.staleness.mean(),
+        );
+    }
     println!("[leader] |grad f|^2: {g0:.3} -> {g1:.3}");
     Ok(())
 }

@@ -260,6 +260,47 @@ impl Default for ScenarioConfig {
     }
 }
 
+/// The `[net]` table: knobs for the real TCP runtime (`net/`,
+/// ARCHITECTURE.md §Wire protocol). Shared by `qafel leader` and
+/// `qafel worker`; the tier/codec keys only matter on the worker side
+/// (they are sent in the v2 `Hello` handshake).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Leader listen address / worker connect address
+    /// (`host:port`; the `--addr` CLI flag overrides it).
+    pub addr: String,
+    /// Number of workers the leader waits for before starting
+    /// (`--workers` overrides it).
+    pub workers: usize,
+    /// How long the leader waits for a v2 `Hello` after accepting a
+    /// connection before classifying the peer as a silent v1 worker and
+    /// serving it the legacy protocol, in milliseconds. v2 workers send
+    /// `Hello` immediately on connect, so only genuine v1 workers ever
+    /// pay this wait.
+    pub v1_grace_ms: u64,
+    /// Worker-side: device-tier name announced in `Hello`; the leader
+    /// resolves it against its `scenario.tiers.<name>.quant_client`
+    /// preset to pick this worker's upload codec (`--tier` overrides).
+    pub tier: Option<String>,
+    /// Worker-side: explicit upload-codec spec announced in `Hello`
+    /// (`quant::parse_spec` grammar); wins over `net.tier`
+    /// (`--quant-client` overrides). `None` inherits the leader's
+    /// `quant.client` default.
+    pub quant_client: Option<String>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:7710".into(),
+            workers: 4,
+            v1_grace_ms: 500,
+            tier: None,
+            quant_client: None,
+        }
+    }
+}
+
 /// Synthetic CelebA-LEAF dataset configuration (DESIGN.md §4).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
@@ -328,6 +369,7 @@ pub struct Config {
     pub quant: QuantConfig,
     pub sim: SimConfig,
     pub scenario: ScenarioConfig,
+    pub net: NetConfig,
     pub data: DataConfig,
     pub stop: StopConfig,
 }
@@ -343,6 +385,7 @@ impl Default for Config {
             quant: QuantConfig::default(),
             sim: SimConfig::default(),
             scenario: ScenarioConfig::default(),
+            net: NetConfig::default(),
             data: DataConfig::default(),
             stop: StopConfig::default(),
         }
@@ -428,6 +471,22 @@ impl Config {
 
         if let Some(sc) = doc.get("scenario") {
             self.apply_scenario(sc)?;
+        }
+
+        get_str!(doc, &["net", "addr"], self.net.addr);
+        get_num!(doc, &["net", "workers"], self.net.workers, usize);
+        get_num!(doc, &["net", "v1_grace_ms"], self.net.v1_grace_ms, u64);
+        if let Some(v) = doc.at(&["net", "tier"]) {
+            self.net.tier = Some(
+                v.as_str().ok_or_else(|| anyhow!("config net.tier must be a string"))?.to_string(),
+            );
+        }
+        if let Some(v) = doc.at(&["net", "quant_client"]) {
+            self.net.quant_client = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("config net.quant_client must be a string"))?
+                    .to_string(),
+            );
         }
 
         get_num!(doc, &["data", "num_users"], self.data.num_users, usize);
@@ -612,6 +671,22 @@ impl Config {
         match self.sim.arrival.as_str() {
             "constant" | "poisson" | "bursty" => {}
             other => bail!("unknown sim.arrival '{other}'"),
+        }
+        if self.net.addr.is_empty() {
+            bail!("net.addr must not be empty");
+        }
+        if self.net.workers == 0 {
+            bail!("net.workers must be >= 1");
+        }
+        if !(1..=600_000).contains(&self.net.v1_grace_ms) {
+            bail!(
+                "net.v1_grace_ms must be in [1, 600000], got {}",
+                self.net.v1_grace_ms
+            );
+        }
+        if let Some(spec) = &self.net.quant_client {
+            crate::quant::parse_spec(spec)
+                .map_err(|e| anyhow!("bad net.quant_client spec '{spec}': {e}"))?;
         }
         self.validate_scenario()
     }
@@ -942,6 +1017,52 @@ mod tests {
         assert!(c.validate().is_err());
         c.scenario.sampling = "availability".into();
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn net_knobs_round_trip_and_validate() {
+        let c = Config::default();
+        assert_eq!(c.net.addr, "127.0.0.1:7710");
+        assert_eq!(c.net.workers, 4);
+        assert_eq!(c.net.v1_grace_ms, 500);
+        assert_eq!(c.net.tier, None);
+        assert_eq!(c.net.quant_client, None);
+        c.validate().unwrap();
+
+        let doc = toml::parse(
+            "[net]\naddr = \"0.0.0.0:9000\"\nworkers = 8\nv1_grace_ms = 250\n\
+             tier = \"phone\"\nquant_client = \"top:0.1\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.net.addr, "0.0.0.0:9000");
+        assert_eq!(c.net.workers, 8);
+        assert_eq!(c.net.v1_grace_ms, 250);
+        assert_eq!(c.net.tier.as_deref(), Some("phone"));
+        assert_eq!(c.net.quant_client.as_deref(), Some("top:0.1"));
+
+        // CLI --set reaches the same knobs
+        let mut c = Config::default();
+        c.set("net.workers=3").unwrap();
+        c.set("net.quant_client=\"qsgd:2\"").unwrap();
+        assert_eq!(c.net.workers, 3);
+        assert_eq!(c.net.quant_client.as_deref(), Some("qsgd:2"));
+
+        // validation catches bad values loudly
+        let mut c = Config::default();
+        c.net.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.net.addr = String::new();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.net.v1_grace_ms = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.net.quant_client = Some("huff:3".into());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("net.quant_client") && err.contains("huff:3"), "{err}");
     }
 
     #[test]

@@ -236,6 +236,21 @@ impl Server {
         Ok(self.client_codecs.len() - 1)
     }
 
+    /// Register every tier's `quant_client` preset from the config, in
+    /// tier order — the same order (and therefore the same ids) the
+    /// scenario engine uses, so a TCP leader and the simulator agree on
+    /// the codec registry for the same config. Returns the per-tier
+    /// codec ids (0, the default codec, for tiers without a preset).
+    pub fn register_tier_presets(&mut self, cfg: &Config) -> Result<Vec<usize>> {
+        cfg.resolved_tiers()
+            .iter()
+            .map(|t| match &t.quant_client {
+                Some(spec) => self.register_client_codec(spec),
+                None => Ok(0),
+            })
+            .collect()
+    }
+
     /// Number of registered client codecs (>= 1; id 0 is the default).
     pub fn num_client_codecs(&self) -> usize {
         self.client_codecs.len()

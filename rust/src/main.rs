@@ -49,6 +49,17 @@ options:
   --fast             heterogeneity: tiny population smoke (CI)
   --verbose          progress logging
 
+net options (wire protocol v2, ARCHITECTURE.md; defaults from [net]):
+  --addr HOST:PORT   leader listen / worker connect address
+  --workers N        leader: workers to wait for
+  --report-json FILE leader: write the run report (incl. per-worker
+                     codec/byte/staleness accounting) as JSON
+  --tier NAME        worker: device tier announced in the Hello; leader
+                     resolves scenario.tiers.NAME.quant_client
+  --quant-client SPEC worker: explicit upload codec (wins over --tier)
+  --v1               worker: speak the legacy v1 protocol (no Hello)
+  --round-delay-ms N worker: sleep between rounds (default 5)
+
 scenario overrides (heterogeneous populations, DESIGN_SCENARIOS.md):
   --set 'scenario.arrival=\"bursty\"'          constant | poisson | bursty
   --set 'scenario.sampling=\"availability\"'   weighted | availability
@@ -332,28 +343,90 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 
 fn cmd_leader(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let addr = args.opt("addr").unwrap_or("127.0.0.1:7710").to_string();
-    let workers: usize = args.opt_or("workers", 4)?;
-    // leader evaluates nothing; it needs x0 of the right dimension
+    let addr = args.opt("addr").unwrap_or(cfg.net.addr.as_str()).to_string();
+    let workers: usize = args.opt_parse("workers")?.unwrap_or(cfg.net.workers);
+    let report_json = args.opt("report-json").map(str::to_string);
+    // leader evaluates nothing; it needs x0 of the right dimension (the
+    // quadratic branch keeps its backend to report gradient descent)
     let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
-    let x0 = match pick_backend(args, &adir)? {
-        BackendKind::Pjrt(engine) => engine.init_params(cfg.seeds[0] as i32)?,
+    let (x0, quad) = match pick_backend(args, &adir)? {
+        BackendKind::Pjrt(engine) => (engine.init_params(cfg.seeds[0] as i32)?, None),
         BackendKind::Quadratic => {
-            QuadraticBackend::new(128, 64, 1.0, 0.3, 0.2, 0.02, cfg.fl.local_steps, cfg.seeds[0])
-                .init_params(0)?
+            let b = QuadraticBackend::new(
+                128, 64, 1.0, 0.3, 0.2, 0.02, cfg.fl.local_steps, cfg.seeds[0],
+            );
+            (b.init_params(0)?, Some(b))
         }
     };
+    let d = x0.len();
     println!("[leader] serving on {addr}, waiting for {workers} workers ...");
-    let report = Leader::new(cfg, x0, 1).run(&addr, workers)?;
+    let report = Leader::new(cfg, x0.clone(), 1).run(&addr, workers)?;
     println!("[leader] done: {} steps, {} uploads, kB/up {:.3}, staleness max {} mean {:.2}",
              report.server_steps, report.comm.uploads, report.comm.kb_per_upload(),
              report.staleness_max, report.staleness_mean);
+    let grad_ratio = quad.map(|b| {
+        let g0 = b.grad_norm_sq(&x0);
+        let g1 = b.grad_norm_sq(&report.model);
+        let ratio = if g0 > 0.0 { g1 / g0 } else { 0.0 };
+        println!("[leader] |grad f|^2: {g0:.4} -> {g1:.4} (ratio {ratio:.4})");
+        ratio
+    });
+    println!("[leader] worker    peer                  proto codec         uploads      kB-up  stale-mean  stale-max");
+    for ws in &report.worker_stats {
+        println!(
+            "[leader] {:<9} {:<21} v{:<4} {:<13} {:>7} {:>10.3} {:>11.2} {:>10}",
+            ws.worker_id,
+            ws.peer,
+            ws.protocol,
+            ws.codec,
+            ws.uploads,
+            ws.upload_bytes as f64 / 1000.0,
+            ws.staleness.mean(),
+            ws.staleness.max,
+        );
+    }
+    if let Some(path) = report_json {
+        use qafel::util::json::Json;
+        let mut workers_json = Vec::new();
+        for ws in &report.worker_stats {
+            let expected = qafel::quant::parse_spec(&ws.codec)?.expected_bytes(d);
+            workers_json.push(Json::obj(vec![
+                ("worker_id", Json::num(ws.worker_id as f64)),
+                ("peer", Json::str(ws.peer.clone())),
+                ("protocol", Json::num(ws.protocol as f64)),
+                ("codec_id", Json::num(ws.codec_id as f64)),
+                ("codec", Json::str(ws.codec.clone())),
+                ("uploads", Json::num(ws.uploads as f64)),
+                ("upload_bytes", Json::num(ws.upload_bytes as f64)),
+                ("expected_bytes_per_upload", Json::num(expected as f64)),
+                ("broadcast_frames", Json::num(ws.broadcast_frames as f64)),
+                ("broadcast_bytes", Json::num(ws.broadcast_bytes as f64)),
+                ("staleness_mean", Json::num(ws.staleness.mean())),
+                ("staleness_max", Json::num(ws.staleness.max as f64)),
+            ]));
+        }
+        let doc = Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("server_steps", Json::num(report.server_steps as f64)),
+            ("uploads", Json::num(report.comm.uploads as f64)),
+            ("upload_bytes", Json::num(report.comm.upload_bytes as f64)),
+            ("broadcasts", Json::num(report.comm.broadcasts as f64)),
+            ("broadcast_bytes", Json::num(report.comm.broadcast_bytes as f64)),
+            ("staleness_max", Json::num(report.staleness_max as f64)),
+            ("staleness_mean", Json::num(report.staleness_mean)),
+            ("grad_ratio", grad_ratio.map(Json::num).unwrap_or(Json::Null)),
+            ("workers", Json::arr(workers_json)),
+        ]);
+        std::fs::write(&path, doc.pretty())
+            .map_err(|e| anyhow!("writing report {path}: {e}"))?;
+        println!("[leader] report written to {path}");
+    }
     Ok(())
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let addr = args.opt("addr").unwrap_or("127.0.0.1:7710").to_string();
+    let addr = args.opt("addr").unwrap_or(cfg.net.addr.as_str()).to_string();
     let delay_ms: u64 = args.opt_or("round-delay-ms", 5)?;
     let mut w = Worker::new(QuadraticBackend::new(
         128,
@@ -367,9 +440,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
     ));
     w.round_delay = std::time::Duration::from_millis(delay_ms);
     w.shards = cfg.fl.shards;
+    // per-worker codec negotiation (wire v2): explicit spec > tier name
+    w.tier = args.opt("tier").map(str::to_string).or_else(|| cfg.net.tier.clone());
+    w.quant_client =
+        args.opt("quant-client").map(str::to_string).or_else(|| cfg.net.quant_client.clone());
+    w.force_v1 = args.flag("v1");
     let report = w.run(&addr)?;
-    println!("[worker {}] {} uploads, replica t={}", report.worker_id, report.uploads,
-             report.replica_t);
+    println!(
+        "[worker {}] {} uploads, replica t={}, protocol v{}, codec {}",
+        report.worker_id, report.uploads, report.replica_t, report.protocol, report.codec
+    );
     Ok(())
 }
 

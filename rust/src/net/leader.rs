@@ -1,14 +1,94 @@
 //! The leader process: accepts workers, runs Algorithm 1 over TCP.
+//!
+//! **Protocol negotiation** (wire v2, see `net/message.rs`): v2 workers
+//! speak first with `Hello`; a v1 worker connects silently and waits
+//! for `Join`, so the leader classifies a connection that stays silent
+//! for `net.v1_grace_ms` as v1 and serves it the legacy frames
+//! bit-identically. Each v2 worker's upload codec is resolved from its
+//! `Hello` (explicit `quant_client` override, else its tier's
+//! `scenario.tiers.<name>.quant_client` preset, else the default) and
+//! registered in the server's codec registry; every `UpdateV2` is then
+//! routed by its `codec_id` through [`Server::ingest_from`] — no
+//! payload-size guessing, no ambiguous-size failure mode.
+//!
+//! **Broadcast fan-out**: one persistent writer thread per worker with
+//! its own outbound queue. Each broadcast frame is encoded exactly once
+//! and shared as `Arc<[u8]>`, so a slow or dead worker can never stall
+//! the step loop; writers are joined on shutdown (like `ShardPool`
+//! workers) and report the bytes they actually put on the wire, which
+//! feeds the per-worker accounting in [`LeaderReport`].
 
-use super::message::Message;
-use super::transport::{write_msg, Conn};
+use super::message::{Message, PROTOCOL_VERSION};
+use super::transport::{frame_bytes, read_msg, read_msg_classified, write_msg, ReadOutcome};
 use crate::config::Config;
 use crate::coordinator::{Server, ServerStep};
 use crate::metrics::CommMetrics;
 use crate::quant::QuantizedMsg;
-use anyhow::{anyhow, Context, Result};
+use crate::scenario::StalenessHist;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{ErrorKind, Write};
 use std::net::TcpListener;
 use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-worker accounting, mirroring the simulator's per-tier
+/// [`crate::scenario::TierMetrics`]: what each connection uploaded,
+/// what was actually written to it, and the staleness it produced.
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    pub worker_id: u32,
+    /// Peer address the worker connected from.
+    pub peer: String,
+    /// Negotiated protocol version (1 = legacy silent join, 2 = Hello
+    /// handshake with per-worker codec).
+    pub protocol: u8,
+    /// The worker's upload codec in the server registry (0 = default).
+    pub codec_id: usize,
+    /// Resolved spec name of that codec (e.g. `"top:0.1"`).
+    pub codec: String,
+    /// Ingested uploads from this worker (late post-shutdown uploads are
+    /// dropped and not counted, matching the server's totals).
+    pub uploads: u64,
+    /// Sum of the ingested upload payload bytes, as counted off the
+    /// wire frames (not derived from the codec formula).
+    pub upload_bytes: u64,
+    /// Frames this worker's writer thread actually wrote (broadcasts +
+    /// the shutdown frame; the join frame is written before the writer
+    /// thread starts).
+    pub broadcast_frames: u64,
+    /// Bytes this worker's writer thread actually wrote.
+    pub broadcast_bytes: u64,
+    /// Staleness histogram over this worker's ingested uploads.
+    pub staleness: StalenessHist,
+}
+
+/// One ingested upload in a recorded trace (see [`LeaderTrace`]).
+#[derive(Clone, Debug)]
+pub struct TraceUpdate {
+    pub worker_id: u32,
+    /// Codec registry id the payload was decoded with.
+    pub codec: usize,
+    /// Staleness the leader observed for this upload.
+    pub staleness: u64,
+    /// The exact wire payload.
+    pub payload: Vec<u8>,
+}
+
+/// A full record of the server-relevant event order of a run — enough
+/// to replay the leader's trajectory through the simulator's
+/// [`Server::ingest_from`] path and compare bit-for-bit. Recorded only
+/// when [`Leader::record_trace`] is set (tests); off by default.
+#[derive(Clone, Debug, Default)]
+pub struct LeaderTrace {
+    /// Spec names of the registered client codecs, in registry-id order
+    /// (replays must rebuild the registry in this order).
+    pub codecs: Vec<String>,
+    /// Every ingested upload, in ingest order.
+    pub updates: Vec<TraceUpdate>,
+    /// Every broadcast payload, in step order.
+    pub broadcasts: Vec<Vec<u8>>,
+}
 
 /// Final report of a leader run.
 #[derive(Clone, Debug)]
@@ -20,6 +100,10 @@ pub struct LeaderReport {
     /// Final server model x^T.
     pub model: Vec<f32>,
     pub workers: usize,
+    /// Per-worker byte/staleness accounting, indexed by worker id.
+    pub worker_stats: Vec<WorkerStats>,
+    /// Present when [`Leader::record_trace`] was set.
+    pub trace: Option<LeaderTrace>,
 }
 
 /// Leader configuration + run loop.
@@ -27,11 +111,14 @@ pub struct Leader {
     cfg: Config,
     x0: Vec<f32>,
     seed: u64,
+    /// Record the full update/broadcast trace into the report (tests:
+    /// replay against the simulator's ingest path). Default off.
+    pub record_trace: bool,
 }
 
 impl Leader {
     pub fn new(cfg: Config, x0: Vec<f32>, seed: u64) -> Leader {
-        Leader { cfg, x0, seed }
+        Leader { cfg, x0, seed, record_trace: false }
     }
 
     /// Serve on `addr` (e.g. "127.0.0.1:7710"), wait for exactly
@@ -53,97 +140,318 @@ impl Leader {
         if server.shards() > 1 {
             tracing_log(&format!("leader: sharded aggregation, S={}", server.shards()));
         }
+        // Tier presets are registered up front in tier order, exactly as
+        // the scenario engine does, so codec ids agree with a simulator
+        // run of the same config.
+        let tiers = self.cfg.resolved_tiers();
+        let tier_codecs = server.register_tier_presets(&self.cfg)?;
+        let grace = Duration::from_millis(self.cfg.net.v1_grace_ms.max(1));
 
-        // accept all workers, send Join, spawn reader threads
-        let (tx, rx) = mpsc::channel::<(u32, Option<Message>)>();
-        let mut writers = Vec::new();
+        // accept all workers: negotiate the protocol, send the join
+        // frame, then spawn one reader and one writer thread each
+        let (tx, rx) = mpsc::channel::<(u32, Result<Option<Message>>)>();
+        let mut writers: Vec<mpsc::Sender<Arc<[u8]>>> = Vec::new();
+        let mut writer_handles = Vec::new();
         let mut reader_handles = Vec::new();
+        let mut stats: Vec<WorkerStats> = Vec::new();
         for worker_id in 0..n_workers as u32 {
             let (stream, peer) = listener.accept().context("accepting worker")?;
-            let mut conn = Conn::from_stream(stream)?;
-            conn.send(&Message::Join {
-                worker_id,
-                d: d as u32,
-                x0: self.x0.clone(),
-                client_quant: self.cfg.quant.client.clone(),
-                server_quant: self.cfg.quant.server.clone(),
-                client_lr: self.cfg.fl.client_lr,
-            })?;
-            let tx = tx.clone();
-            let mut reader = conn.reader.try_clone().context("cloning reader")?;
+            stream.set_nodelay(true).ok();
+            let peer = peer.to_string();
+
+            // v2 workers send Hello immediately on connect; a v1 worker
+            // waits silently for Join. Peek (never consume) with a
+            // bounded timeout to classify the peer without corrupting
+            // the stream.
+            stream
+                .set_read_timeout(Some(grace))
+                .with_context(|| format!("worker {worker_id} ({peer}): handshake timeout"))?;
+            let mut probe = [0u8; 1];
+            let spoke = match stream.peek(&mut probe) {
+                Ok(n) => n > 0,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => false,
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("probing worker {worker_id} ({peer})"));
+                }
+            };
+            // the read timeout stays armed through the Hello read: a
+            // peer that sends a partial frame and stalls fails the
+            // handshake loudly instead of wedging the serial accept
+            // loop; it is cleared below before the reader thread (which
+            // must block indefinitely) takes over
+            let mut reader = stream.try_clone().context("cloning tcp stream")?;
+            let mut writer = stream;
+
+            let (protocol, codec_id) = if spoke {
+                let hello = read_msg(&mut reader)
+                    .with_context(|| {
+                        format!(
+                            "reading Hello from worker {worker_id} ({peer}) \
+                             within the {}ms handshake deadline",
+                            grace.as_millis()
+                        )
+                    })?
+                    .ok_or_else(|| {
+                        anyhow!("worker {worker_id} ({peer}) disconnected during handshake")
+                    })?;
+                let (version, tier, quant_client) = match hello {
+                    Message::Hello { version, tier, quant_client } => {
+                        (version, tier, quant_client)
+                    }
+                    other => bail!("worker {worker_id} ({peer}): expected Hello, got {other:?}"),
+                };
+                // both ends run at the minimum version (decode already
+                // guarantees version >= 2)
+                let version = version.min(PROTOCOL_VERSION);
+                // per-worker codec: explicit override > tier preset > default
+                let codec_id = if let Some(spec) = quant_client {
+                    server.register_client_codec(&spec).with_context(|| {
+                        format!("worker {worker_id} ({peer}): bad quant_client '{spec}'")
+                    })?
+                } else if let Some(name) = tier {
+                    match tiers.iter().position(|t| t.name == name) {
+                        Some(i) => tier_codecs[i],
+                        None => bail!(
+                            "worker {worker_id} ({peer}): unknown tier '{name}' (known: {})",
+                            tiers
+                                .iter()
+                                .map(|t| t.name.as_str())
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        ),
+                    }
+                } else {
+                    0
+                };
+                write_msg(
+                    &mut writer,
+                    &Message::JoinV2 {
+                        version,
+                        worker_id,
+                        d: d as u32,
+                        x0: self.x0.clone(),
+                        client_quant: server.client_codec_name(codec_id),
+                        server_quant: self.cfg.quant.server.clone(),
+                        client_lr: self.cfg.fl.client_lr,
+                        codec_id: codec_id as u32,
+                    },
+                )
+                .with_context(|| format!("sending JoinV2 to worker {worker_id} ({peer})"))?;
+                (version, codec_id)
+            } else {
+                // v1 worker: the legacy Join, bit-identical to the
+                // pre-v2 protocol (pinned by a golden test)
+                write_msg(
+                    &mut writer,
+                    &Message::Join {
+                        worker_id,
+                        d: d as u32,
+                        x0: self.x0.clone(),
+                        client_quant: self.cfg.quant.client.clone(),
+                        server_quant: self.cfg.quant.server.clone(),
+                        client_lr: self.cfg.fl.client_lr,
+                    },
+                )
+                .with_context(|| format!("sending Join to worker {worker_id} ({peer})"))?;
+                (1u8, 0usize)
+            };
+            // handshake over: the steady-state reader blocks as long as
+            // it likes (clears the deadline on the shared socket)
+            reader
+                .set_read_timeout(None)
+                .with_context(|| format!("worker {worker_id} ({peer}): clearing deadline"))?;
+
+            // reader thread: a worker dying (EOF, reset) is a tolerable
+            // disconnect, exactly as before v2; only *protocol*
+            // violations — corrupt or oversized frames — are forwarded
+            // as errors and abort the run with this worker's context
+            let txc = tx.clone();
             reader_handles.push(std::thread::spawn(move || {
                 loop {
-                    match super::transport::read_msg(&mut reader) {
-                        Ok(Some(msg)) => {
-                            if tx.send((worker_id, Some(msg))).is_err() {
+                    match read_msg_classified(&mut reader) {
+                        ReadOutcome::Msg(msg) => {
+                            if txc.send((worker_id, Ok(Some(msg)))).is_err() {
                                 break;
                             }
                         }
-                        Ok(None) | Err(_) => {
-                            let _ = tx.send((worker_id, None));
+                        ReadOutcome::Disconnected(_) => {
+                            let _ = txc.send((worker_id, Ok(None)));
+                            break;
+                        }
+                        ReadOutcome::BadFrame(e) => {
+                            let _ = txc.send((worker_id, Err(e)));
                             break;
                         }
                     }
                 }
             }));
-            tracing_log(&format!("leader: worker {worker_id} joined from {peer}"));
-            writers.push(conn.writer);
+
+            // persistent writer thread: its own outbound queue, frames
+            // pre-encoded and shared; returns what it actually wrote
+            let (wtx, wrx) = mpsc::channel::<Arc<[u8]>>();
+            writer_handles.push(std::thread::spawn(move || {
+                let mut frames = 0u64;
+                let mut bytes = 0u64;
+                for frame in wrx {
+                    if writer.write_all(&frame).is_err() {
+                        break; // dead worker: its reader thread reports it
+                    }
+                    frames += 1;
+                    bytes += frame.len() as u64;
+                }
+                (frames, bytes)
+            }));
+            writers.push(wtx);
+
+            tracing_log(&format!(
+                "leader: worker {worker_id} joined from {peer} (protocol v{protocol}, codec '{}')",
+                server.client_codec_name(codec_id)
+            ));
+            stats.push(WorkerStats {
+                worker_id,
+                peer,
+                protocol,
+                codec_id,
+                codec: server.client_codec_name(codec_id),
+                uploads: 0,
+                upload_bytes: 0,
+                broadcast_frames: 0,
+                broadcast_bytes: 0,
+                staleness: StalenessHist::default(),
+            });
         }
         drop(tx);
 
         // main coordination loop
+        let mut trace = self.record_trace.then(LeaderTrace::default);
         let mut live = n_workers;
         let mut byes = 0usize;
         let mut shutdown_sent = false;
         while live > 0 {
-            let (worker_id, msg) = rx.recv().map_err(|_| anyhow!("all workers gone"))?;
-            let msg = match msg {
-                Some(m) => m,
-                None => {
+            let (worker_id, incoming) = rx.recv().map_err(|_| anyhow!("all workers gone"))?;
+            let wid = worker_id as usize;
+            let msg = match incoming {
+                Ok(Some(m)) => m,
+                Ok(None) => {
                     live -= 1;
                     continue;
                 }
-            };
-            match msg {
-                Message::Update { t_start, trip: _, train_loss: _, payload, .. } => {
+                Err(e) => {
+                    // only reachable for protocol violations (corrupt
+                    // frames); transport-level disconnects arrive as
+                    // Ok(None) and are tolerated above
                     if shutdown_sent {
-                        continue; // late update after shutdown: drop
+                        live -= 1;
+                        continue;
                     }
-                    let qmsg = QuantizedMsg { payload, d };
-                    let staleness = server.t().saturating_sub(t_start);
-                    if let ServerStep::Stepped(b) = server.ingest(&qmsg, staleness)? {
-                        let bmsg = Message::Broadcast {
-                            t: b.t,
-                            absolute: b.absolute,
-                            payload: b.msg.payload,
-                        };
-                        for w in &mut writers {
-                            // a dead worker surfaces via its reader thread
-                            let _ = write_msg(w, &bmsg);
-                        }
-                    }
-                    if server.t() >= self.cfg.stop.max_server_steps
-                        || server.comm.uploads >= self.cfg.stop.max_uploads
-                    {
-                        for w in &mut writers {
-                            let _ = write_msg(w, &Message::Shutdown);
-                        }
-                        shutdown_sent = true;
-                    }
+                    return Err(e.context(format!(
+                        "reading from worker {worker_id} ({})",
+                        stats[wid].peer
+                    )));
                 }
-                Message::Bye { worker_id: wid, uploads } => {
+            };
+            // normalize v1/v2 uploads into one registry-routed ingest
+            let (t_start, codec_id, payload) = match msg {
+                Message::Update { t_start, payload, .. } => (t_start, 0usize, payload),
+                Message::UpdateV2 { t_start, codec_id, payload, .. } => {
+                    (t_start, codec_id as usize, payload)
+                }
+                Message::Bye { worker_id: wid2, uploads } => {
                     byes += 1;
-                    tracing_log(&format!("leader: worker {wid} done ({uploads} uploads)"));
+                    tracing_log(&format!("leader: worker {wid2} done ({uploads} uploads)"));
+                    continue;
                 }
                 other => {
-                    tracing_log(&format!("leader: unexpected message from {worker_id}: {other:?}"));
+                    tracing_log(&format!(
+                        "leader: unexpected message from {worker_id}: {other:?}"
+                    ));
+                    continue;
                 }
+            };
+            if shutdown_sent {
+                continue; // late update after shutdown: drop
+            }
+            // the tag must be the codec this connection negotiated at
+            // join: two registered codecs can share a wire size at some
+            // d, so accepting a mismatched (even registered) id could
+            // silently mis-decode into the aggregation buffer — and
+            // per-worker accounting is keyed by the negotiated codec
+            if codec_id != stats[wid].codec_id {
+                bail!(
+                    "worker {worker_id} ({}): upload tagged codec id {codec_id}, but this \
+                     connection negotiated codec id {} ('{}')",
+                    stats[wid].peer,
+                    stats[wid].codec_id,
+                    stats[wid].codec
+                );
+            }
+            let qmsg = QuantizedMsg { payload, d };
+            let wire = qmsg.wire_bytes();
+            let staleness = server.t().saturating_sub(t_start);
+            if let Some(tr) = trace.as_mut() {
+                tr.updates.push(TraceUpdate {
+                    worker_id,
+                    codec: codec_id,
+                    staleness,
+                    payload: qmsg.payload.clone(),
+                });
+            }
+            let step = server.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
+                format!(
+                    "ingesting upload from worker {worker_id} ({}, codec '{}')",
+                    stats[wid].peer,
+                    server.client_codec_name(codec_id)
+                )
+            })?;
+            stats[wid].uploads += 1;
+            stats[wid].upload_bytes += wire as u64;
+            stats[wid].staleness.record(staleness);
+
+            if let ServerStep::Stepped(b) = step {
+                if let Some(tr) = trace.as_mut() {
+                    tr.broadcasts.push(b.msg.payload.clone());
+                }
+                // encode once, share with every writer queue
+                let frame: Arc<[u8]> = frame_bytes(&Message::Broadcast {
+                    t: b.t,
+                    absolute: b.absolute,
+                    payload: b.msg.payload,
+                })?
+                .into();
+                for w in &writers {
+                    let _ = w.send(frame.clone());
+                }
+            }
+            if server.t() >= self.cfg.stop.max_server_steps
+                || server.comm.uploads >= self.cfg.stop.max_uploads
+            {
+                let frame: Arc<[u8]> = frame_bytes(&Message::Shutdown)?.into();
+                for w in &writers {
+                    let _ = w.send(frame.clone());
+                }
+                shutdown_sent = true;
+            }
+        }
+        // shutdown: close the outbound queues, join the writer threads
+        // (collecting what each actually wrote), then the readers
+        drop(writers);
+        for (i, h) in writer_handles.into_iter().enumerate() {
+            if let Ok((frames, bytes)) = h.join() {
+                stats[i].broadcast_frames = frames;
+                stats[i].broadcast_bytes = bytes;
             }
         }
         for h in reader_handles {
             let _ = h.join();
         }
         let _ = byes;
+
+        if let Some(tr) = trace.as_mut() {
+            tr.codecs = (0..server.num_client_codecs())
+                .map(|i| server.client_codec_name(i))
+                .collect();
+        }
 
         Ok(LeaderReport {
             comm: server.comm.clone(),
@@ -152,6 +460,8 @@ impl Leader {
             staleness_mean: server.staleness_mean(),
             model: server.model().to_vec(),
             workers: n_workers,
+            worker_stats: stats,
+            trace,
         })
     }
 }

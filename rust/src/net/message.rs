@@ -1,8 +1,35 @@
 //! Wire protocol: length-prefixed binary frames, hand-rolled codec (no
 //! serde offline). All multi-byte integers are little-endian.
+//!
+//! # Protocol versions
+//!
+//! **v1** (the original protocol) is leader-speaks-first: the worker
+//! connects silently, the leader sends [`Message::Join`], and every
+//! upload is an untagged [`Message::Update`] decoded with the single
+//! connection-wide client codec.
+//!
+//! **v2** adds per-worker codec negotiation: the worker speaks first
+//! with [`Message::Hello`] (its protocol version plus an optional
+//! device-tier name and/or an explicit `quant_client` spec), the leader
+//! answers with [`Message::JoinV2`] carrying the resolved per-worker
+//! codec spec *and* its registry id, and every upload is a
+//! [`Message::UpdateV2`] tagged with that `codec_id` so the leader
+//! routes it through the server's codec registry
+//! ([`crate::coordinator::Server::ingest_from`]) instead of guessing a
+//! wire format from the payload size.
+//!
+//! A v1 worker never sends `Hello` (the tag does not exist in v1), so
+//! the leader detects v1 peers by their initial silence and serves them
+//! the v1 frames bit-identically. Conversely a `Hello` or `JoinV2`
+//! frame claiming a version below 2 is malformed by construction and is
+//! rejected at decode time.
 
 use crate::quant::QuantizedMsg;
 use anyhow::{anyhow, bail, Result};
+
+/// The highest protocol version this build speaks. Both ends advertise
+/// their version and the connection runs at the minimum of the two.
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,6 +61,38 @@ pub enum Message {
     Shutdown,
     /// worker -> leader: goodbye (uploads/bytes accounting echo).
     Bye { worker_id: u32, uploads: u64 },
+    /// worker -> leader, first frame on a v2 connection: protocol
+    /// version and the worker's requested upload codec — either a
+    /// device-tier name the leader resolves against
+    /// `scenario.tiers.<name>.quant_client`, or an explicit spec
+    /// (`--quant-client`, which wins over the tier). Both `None` means
+    /// the default `quant.client` codec.
+    Hello { version: u8, tier: Option<String>, quant_client: Option<String> },
+    /// leader -> worker, v2 reply to `Hello`: everything [`Message::Join`]
+    /// carries, plus the negotiated protocol version and the id of the
+    /// worker's upload codec in the leader's registry. `client_quant` is
+    /// the *resolved* per-worker spec (tier preset or override, already
+    /// normalized per algorithm), not the global default.
+    JoinV2 {
+        version: u8,
+        worker_id: u32,
+        d: u32,
+        x0: Vec<f32>,
+        client_quant: String,
+        server_quant: String,
+        client_lr: f32,
+        codec_id: u32,
+    },
+    /// worker -> leader, v2 upload: [`Message::Update`] plus the codec
+    /// registry id the payload was encoded with.
+    UpdateV2 {
+        worker_id: u32,
+        t_start: u64,
+        trip: u64,
+        train_loss: f32,
+        codec_id: u32,
+        payload: Vec<u8>,
+    },
 }
 
 const TAG_JOIN: u8 = 1;
@@ -41,6 +100,9 @@ const TAG_UPDATE: u8 = 2;
 const TAG_BROADCAST: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
 const TAG_BYE: u8 = 5;
+const TAG_HELLO: u8 = 6;
+const TAG_JOIN2: u8 = 7;
+const TAG_UPDATE2: u8 = 8;
 
 struct Writer {
     buf: Vec<u8>,
@@ -49,6 +111,9 @@ struct Writer {
 impl Writer {
     fn new(tag: u8) -> Writer {
         Writer { buf: vec![tag] }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
     }
     fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
@@ -65,6 +130,15 @@ impl Writer {
     }
     fn str(&mut self, v: &str) {
         self.bytes(v.as_bytes());
+    }
+    fn opt_str(&mut self, v: &Option<String>) {
+        match v {
+            Some(s) => {
+                self.u8(1);
+                self.str(s);
+            }
+            None => self.u8(0),
+        }
     }
     fn f32s(&mut self, v: &[f32]) {
         self.u32(v.len() as u32);
@@ -110,6 +184,13 @@ impl<'a> Reader<'a> {
     fn str(&mut self) -> Result<String> {
         String::from_utf8(self.bytes()?).map_err(|e| anyhow!("bad utf8: {e}"))
     }
+    fn opt_str(&mut self) -> Result<Option<String>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            b => bail!("bad option tag {b} (want 0 or 1)"),
+        }
+    }
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
@@ -121,6 +202,17 @@ impl<'a> Reader<'a> {
         }
         Ok(())
     }
+}
+
+/// A `Hello`/`JoinV2` version field below 2 is malformed: v1 peers do
+/// not have those frames at all, so a versioned frame claiming v1 can
+/// only come from a corrupt or confused peer.
+fn check_version(v: u8, frame: &str) -> Result<u8> {
+    if v < 2 {
+        bail!("{frame} frame claims protocol version {v}, but versioned frames start at v2 \
+               (a v1 peer never sends {frame})");
+    }
+    Ok(v)
 }
 
 impl Message {
@@ -160,6 +252,44 @@ impl Message {
                 w.u64(*uploads);
                 w.buf
             }
+            Message::Hello { version, tier, quant_client } => {
+                let mut w = Writer::new(TAG_HELLO);
+                w.u8(*version);
+                w.opt_str(tier);
+                w.opt_str(quant_client);
+                w.buf
+            }
+            Message::JoinV2 {
+                version,
+                worker_id,
+                d,
+                x0,
+                client_quant,
+                server_quant,
+                client_lr,
+                codec_id,
+            } => {
+                let mut w = Writer::new(TAG_JOIN2);
+                w.u8(*version);
+                w.u32(*worker_id);
+                w.u32(*d);
+                w.f32s(x0);
+                w.str(client_quant);
+                w.str(server_quant);
+                w.f32(*client_lr);
+                w.u32(*codec_id);
+                w.buf
+            }
+            Message::UpdateV2 { worker_id, t_start, trip, train_loss, codec_id, payload } => {
+                let mut w = Writer::new(TAG_UPDATE2);
+                w.u32(*worker_id);
+                w.u64(*t_start);
+                w.u64(*trip);
+                w.f32(*train_loss);
+                w.u32(*codec_id);
+                w.bytes(payload);
+                w.buf
+            }
         }
     }
 
@@ -188,13 +318,36 @@ impl Message {
             },
             TAG_SHUTDOWN => Message::Shutdown,
             TAG_BYE => Message::Bye { worker_id: r.u32()?, uploads: r.u64()? },
+            TAG_HELLO => Message::Hello {
+                version: check_version(r.u8()?, "Hello")?,
+                tier: r.opt_str()?,
+                quant_client: r.opt_str()?,
+            },
+            TAG_JOIN2 => Message::JoinV2 {
+                version: check_version(r.u8()?, "JoinV2")?,
+                worker_id: r.u32()?,
+                d: r.u32()?,
+                x0: r.f32s()?,
+                client_quant: r.str()?,
+                server_quant: r.str()?,
+                client_lr: r.f32()?,
+                codec_id: r.u32()?,
+            },
+            TAG_UPDATE2 => Message::UpdateV2 {
+                worker_id: r.u32()?,
+                t_start: r.u64()?,
+                trip: r.u64()?,
+                train_loss: r.f32()?,
+                codec_id: r.u32()?,
+                payload: r.bytes()?,
+            },
             tag => bail!("unknown message tag {tag}"),
         };
         r.done()?;
         Ok(msg)
     }
 
-    /// Wrap a quantized payload for upload.
+    /// Wrap a quantized payload for a v1 upload.
     pub fn update_from(
         worker_id: u32,
         t_start: u64,
@@ -204,15 +357,35 @@ impl Message {
     ) -> Message {
         Message::Update { worker_id, t_start, trip, train_loss, payload: msg.payload.clone() }
     }
+
+    /// Wrap a quantized payload for a v2 upload tagged with its codec id.
+    pub fn update_v2_from(
+        worker_id: u32,
+        t_start: u64,
+        trip: u64,
+        train_loss: f32,
+        codec_id: u32,
+        msg: &QuantizedMsg,
+    ) -> Message {
+        Message::UpdateV2 {
+            worker_id,
+            t_start,
+            trip,
+            train_loss,
+            codec_id,
+            payload: msg.payload.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip_all_variants() {
-        let msgs = vec![
+    /// One instance of every variant, exercising both `None` and `Some`
+    /// option fields, empty and non-empty payloads, and non-ascii text.
+    fn all_variants() -> Vec<Message> {
+        vec![
             Message::Join {
                 worker_id: 3,
                 d: 4,
@@ -228,11 +401,50 @@ mod tests {
                 train_loss: 0.25,
                 payload: vec![1, 2, 3, 255],
             },
+            Message::Update { worker_id: 0, t_start: 0, trip: 0, train_loss: 0.0, payload: vec![] },
             Message::Broadcast { t: 5, absolute: true, payload: vec![9; 100] },
+            Message::Broadcast { t: u64::MAX, absolute: false, payload: vec![] },
             Message::Shutdown,
             Message::Bye { worker_id: 2, uploads: 41 },
-        ];
-        for m in msgs {
+            Message::Hello { version: 2, tier: None, quant_client: None },
+            Message::Hello { version: 2, tier: Some("phone".into()), quant_client: None },
+            Message::Hello {
+                version: 7,
+                tier: Some("tier-β".into()),
+                quant_client: Some("top:0.1".into()),
+            },
+            Message::JoinV2 {
+                version: 2,
+                worker_id: 9,
+                d: 2,
+                x0: vec![0.5, -0.5],
+                client_quant: "qsgd:8".into(),
+                server_quant: "qsgd:4".into(),
+                client_lr: 0.05,
+                codec_id: 3,
+            },
+            Message::UpdateV2 {
+                worker_id: 4,
+                t_start: 8,
+                trip: 12,
+                train_loss: 1.5,
+                codec_id: 2,
+                payload: vec![0, 128, 255],
+            },
+            Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 0,
+                trip: 0,
+                train_loss: 0.0,
+                codec_id: 0,
+                payload: vec![],
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        for m in all_variants() {
             let enc = m.encode();
             let dec = Message::decode(&enc).unwrap();
             assert_eq!(m, dec);
@@ -240,11 +452,43 @@ mod tests {
     }
 
     #[test]
+    fn every_strict_prefix_fails_to_decode() {
+        // Each field is either fixed-width or length-prefixed and decode
+        // demands exact consumption, so no strict prefix of a valid
+        // frame may itself decode (a truncated frame can never be
+        // silently mistaken for a shorter valid message).
+        for m in all_variants() {
+            let enc = m.encode();
+            for cut in 0..enc.len() {
+                assert!(
+                    Message::decode(&enc[..cut]).is_err(),
+                    "{m:?}: prefix of {cut}/{} bytes decoded",
+                    enc.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected_for_all_variants() {
+        for m in all_variants() {
+            let mut enc = m.encode();
+            enc.push(0);
+            assert!(Message::decode(&enc).is_err(), "{m:?}: trailing byte accepted");
+        }
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Message::decode(&[]).is_err());
-        assert!(Message::decode(&[42]).is_err());
-        // truncated Join
-        let good = Message::Join {
+        assert!(Message::decode(&[42]).is_err()); // unknown tag
+        assert!(Message::decode(&[0]).is_err()); // tag 0 is reserved
+        // bad option-presence byte in Hello (must be 0 or 1)
+        let mut hello = Message::Hello { version: 2, tier: None, quant_client: None }.encode();
+        hello[2] = 9;
+        assert!(Message::decode(&hello).is_err());
+        // bad utf8 inside a Join string
+        let mut join = Message::Join {
             worker_id: 0,
             d: 1,
             x0: vec![0.0],
@@ -253,10 +497,114 @@ mod tests {
             client_lr: 0.1,
         }
         .encode();
-        assert!(Message::decode(&good[..good.len() - 2]).is_err());
-        // trailing bytes
-        let mut padded = good;
-        padded.push(0);
-        assert!(Message::decode(&padded).is_err());
+        let s = join.len() - 4 - 4; // start of "none" (server_quant)
+        join[s] = 0xFF;
+        assert!(Message::decode(&join).is_err());
+    }
+
+    #[test]
+    fn version_below_2_rejected_in_versioned_frames() {
+        // A v1 peer never emits Hello/JoinV2, so a version field of 0 or
+        // 1 is a protocol confusion and must fail at decode time.
+        for v in [0u8, 1] {
+            let mut hello = Message::Hello { version: 2, tier: None, quant_client: None }.encode();
+            hello[1] = v;
+            let err = Message::decode(&hello).unwrap_err().to_string();
+            assert!(err.contains("version"), "{err}");
+            let mut join = Message::JoinV2 {
+                version: 2,
+                worker_id: 0,
+                d: 1,
+                x0: vec![0.0],
+                client_quant: "none".into(),
+                server_quant: "none".into(),
+                client_lr: 0.1,
+                codec_id: 0,
+            }
+            .encode();
+            join[1] = v;
+            assert!(Message::decode(&join).is_err());
+        }
+        // future versions decode fine (the connection then runs at the
+        // minimum of the two ends' versions)
+        let hello = Message::Hello { version: 9, tier: None, quant_client: None };
+        assert_eq!(Message::decode(&hello.encode()).unwrap(), hello);
+    }
+
+    #[test]
+    fn v1_frame_layout_pinned_byte_for_byte() {
+        // The v1 wire layout is a compatibility contract: these bytes
+        // must never change. Built by hand, field by field.
+        let join = Message::Join {
+            worker_id: 7,
+            d: 2,
+            x0: vec![1.5, -0.25],
+            client_quant: "qsgd:4".into(),
+            server_quant: "none".into(),
+            client_lr: 0.5,
+        };
+        let mut expect = vec![1u8]; // TAG_JOIN
+        expect.extend_from_slice(&7u32.to_le_bytes());
+        expect.extend_from_slice(&2u32.to_le_bytes());
+        expect.extend_from_slice(&2u32.to_le_bytes()); // x0 length
+        expect.extend_from_slice(&1.5f32.to_le_bytes());
+        expect.extend_from_slice(&(-0.25f32).to_le_bytes());
+        expect.extend_from_slice(&6u32.to_le_bytes());
+        expect.extend_from_slice(b"qsgd:4");
+        expect.extend_from_slice(&4u32.to_le_bytes());
+        expect.extend_from_slice(b"none");
+        expect.extend_from_slice(&0.5f32.to_le_bytes());
+        assert_eq!(join.encode(), expect);
+
+        let update = Message::Update {
+            worker_id: 3,
+            t_start: 10,
+            trip: 4,
+            train_loss: 0.75,
+            payload: vec![0xAB, 0xCD],
+        };
+        let mut expect = vec![2u8]; // TAG_UPDATE
+        expect.extend_from_slice(&3u32.to_le_bytes());
+        expect.extend_from_slice(&10u64.to_le_bytes());
+        expect.extend_from_slice(&4u64.to_le_bytes());
+        expect.extend_from_slice(&0.75f32.to_le_bytes());
+        expect.extend_from_slice(&2u32.to_le_bytes());
+        expect.extend_from_slice(&[0xAB, 0xCD]);
+        assert_eq!(update.encode(), expect);
+
+        let bcast = Message::Broadcast { t: 6, absolute: true, payload: vec![0x11] };
+        let mut expect = vec![3u8]; // TAG_BROADCAST
+        expect.extend_from_slice(&6u64.to_le_bytes());
+        expect.push(1);
+        expect.extend_from_slice(&1u32.to_le_bytes());
+        expect.push(0x11);
+        assert_eq!(bcast.encode(), expect);
+
+        assert_eq!(Message::Shutdown.encode(), vec![4u8]);
+
+        let bye = Message::Bye { worker_id: 1, uploads: 9 };
+        let mut expect = vec![5u8]; // TAG_BYE
+        expect.extend_from_slice(&1u32.to_le_bytes());
+        expect.extend_from_slice(&9u64.to_le_bytes());
+        assert_eq!(bye.encode(), expect);
+    }
+
+    #[test]
+    fn update_wrappers_carry_the_payload() {
+        let qmsg = QuantizedMsg { payload: vec![1, 2, 3], d: 3 };
+        match Message::update_from(5, 1, 2, 0.5, &qmsg) {
+            Message::Update { worker_id, payload, .. } => {
+                assert_eq!(worker_id, 5);
+                assert_eq!(payload, vec![1, 2, 3]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match Message::update_v2_from(5, 1, 2, 0.5, 7, &qmsg) {
+            Message::UpdateV2 { codec_id, payload, .. } => {
+                assert_eq!(codec_id, 7);
+                assert_eq!(payload, vec![1, 2, 3]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

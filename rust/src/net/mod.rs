@@ -9,16 +9,27 @@
 //! 3 as a real background thread) and a compute backend, and every
 //! payload on the wire is the same packed bytes the codecs produce.
 //!
-//! No `tokio` offline: blocking I/O with one reader thread per
-//! connection + an mpsc fan-in to the leader loop — the standard
-//! thread-per-connection design, adequate for the tens of workers a
-//! single-host deployment runs.
+//! Wire protocol **v2** (ARCHITECTURE.md §Wire protocol) negotiates a
+//! per-worker upload codec at join time — the same heterogeneous-codec
+//! model the scenario engine simulates with per-tier presets — and
+//! tags every upload with its codec registry id, so the leader decodes
+//! mixed wire formats through [`crate::coordinator::Server::ingest_from`]
+//! exactly like the simulator. v1 workers (silent join, untagged
+//! uploads) are detected by their initial silence and served the legacy
+//! frames bit-identically.
+//!
+//! No `tokio` offline: blocking I/O with one reader thread and one
+//! writer thread per connection + an mpsc fan-in to the leader loop —
+//! the standard thread-per-connection design, adequate for the tens of
+//! workers a single-host deployment runs. Broadcasts are encoded once
+//! and fanned out through the per-worker writer queues, so one slow
+//! worker cannot stall the step loop.
 
 pub mod leader;
 pub mod message;
 pub mod transport;
 pub mod worker;
 
-pub use leader::{Leader, LeaderReport};
-pub use message::Message;
-pub use worker::Worker;
+pub use leader::{Leader, LeaderReport, LeaderTrace, TraceUpdate, WorkerStats};
+pub use message::{Message, PROTOCOL_VERSION};
+pub use worker::{Worker, WorkerReport};

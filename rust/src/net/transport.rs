@@ -12,33 +12,79 @@ use std::net::TcpStream;
 /// 64 MiB: generously above the largest possible model broadcast.
 pub const MAX_FRAME: usize = 64 << 20;
 
-/// Write one message as a frame.
-pub fn write_msg<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+/// Encode one message as a complete frame (length prefix + body) ready
+/// for `write_all`. The leader's broadcast fan-out encodes each frame
+/// exactly once with this and shares the bytes across all per-worker
+/// writer threads via `Arc<[u8]>`.
+pub fn frame_bytes(msg: &Message) -> Result<Vec<u8>> {
     let body = msg.encode();
     if body.len() > MAX_FRAME {
         bail!("frame too large: {} bytes", body.len());
     }
-    w.write_all(&(body.len() as u32).to_le_bytes()).context("writing frame length")?;
-    w.write_all(&body).context("writing frame body")?;
+    let mut frame = Vec::with_capacity(4 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    Ok(frame)
+}
+
+/// Write one message as a frame.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    let frame = frame_bytes(msg)?;
+    w.write_all(&frame).context("writing frame")?;
     w.flush().context("flushing frame")?;
     Ok(())
 }
 
-/// Read one message; `Ok(None)` on clean EOF at a frame boundary.
-pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Message>> {
+/// Outcome of [`read_msg_classified`]: separates peer death (the
+/// connection is simply gone — tolerable) from protocol violations
+/// (the peer is alive but sent garbage — worth failing loudly on).
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// One well-formed message.
+    Msg(Message),
+    /// Clean EOF at a frame boundary (`None`), or a transport-level
+    /// I/O failure — reset, abort, EOF mid-frame (`Some(e)`).
+    Disconnected(Option<std::io::Error>),
+    /// The peer sent an oversized length prefix or a frame body that
+    /// fails to decode.
+    BadFrame(anyhow::Error),
+}
+
+/// Read one message, classifying failures. The leader's per-worker
+/// reader threads use this to keep the old tolerance for workers that
+/// die mid-run (a disconnect, as before) while surfacing corrupt
+/// frames as hard errors with connection context.
+pub fn read_msg_classified<R: Read>(r: &mut R) -> ReadOutcome {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e).context("reading frame length"),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return ReadOutcome::Disconnected(None);
+        }
+        Err(e) => return ReadOutcome::Disconnected(Some(e)),
     }
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
-        bail!("peer sent oversized frame ({len} bytes)");
+        return ReadOutcome::BadFrame(anyhow::anyhow!("peer sent oversized frame ({len} bytes)"));
     }
     let mut body = vec![0u8; len];
-    r.read_exact(&mut body).context("reading frame body")?;
-    Ok(Some(Message::decode(&body)?))
+    if let Err(e) = r.read_exact(&mut body) {
+        return ReadOutcome::Disconnected(Some(e));
+    }
+    match Message::decode(&body) {
+        Ok(msg) => ReadOutcome::Msg(msg),
+        Err(e) => ReadOutcome::BadFrame(e),
+    }
+}
+
+/// Read one message; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Message>> {
+    match read_msg_classified(r) {
+        ReadOutcome::Msg(msg) => Ok(Some(msg)),
+        ReadOutcome::Disconnected(None) => Ok(None),
+        ReadOutcome::Disconnected(Some(e)) => Err(e).context("reading frame"),
+        ReadOutcome::BadFrame(e) => Err(e),
+    }
 }
 
 /// A connected duplex channel (cloned handles for reader/writer threads).
@@ -92,11 +138,62 @@ mod tests {
     }
 
     #[test]
+    fn frame_bytes_matches_write_msg() {
+        let msgs = vec![
+            Message::Shutdown,
+            Message::Hello { version: 2, tier: Some("slow".into()), quant_client: None },
+            Message::Broadcast { t: 3, absolute: false, payload: vec![1, 2, 3] },
+        ];
+        for m in &msgs {
+            let frame = frame_bytes(m).unwrap();
+            let mut streamed = Vec::new();
+            write_msg(&mut streamed, m).unwrap();
+            assert_eq!(frame, streamed);
+            // and it reads back as one message
+            let mut cur = Cursor::new(frame);
+            assert_eq!(read_msg(&mut cur).unwrap().unwrap(), *m);
+        }
+    }
+
+    #[test]
     fn oversized_frame_rejected() {
         let mut buf = Vec::new();
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut cur = Cursor::new(buf);
         assert!(read_msg(&mut cur).is_err());
+    }
+
+    #[test]
+    fn read_classification_separates_death_from_garbage() {
+        // clean EOF at a frame boundary: disconnected, no error
+        let mut cur = Cursor::new(Vec::<u8>::new());
+        assert!(matches!(
+            read_msg_classified(&mut cur),
+            ReadOutcome::Disconnected(None)
+        ));
+        // EOF mid-frame (peer died while sending): transport-level
+        let mut partial = Vec::new();
+        write_msg(&mut partial, &Message::Shutdown).unwrap();
+        partial.pop();
+        let mut cur = Cursor::new(partial);
+        assert!(matches!(
+            read_msg_classified(&mut cur),
+            ReadOutcome::Disconnected(Some(_))
+        ));
+        // oversized length prefix: protocol violation
+        let mut cur = Cursor::new((u32::MAX).to_le_bytes().to_vec());
+        assert!(matches!(read_msg_classified(&mut cur), ReadOutcome::BadFrame(_)));
+        // well-framed garbage body (unknown tag): protocol violation
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(99);
+        let mut cur = Cursor::new(buf);
+        match read_msg_classified(&mut cur) {
+            ReadOutcome::BadFrame(e) => {
+                assert!(e.to_string().contains("unknown message tag"), "{e}");
+            }
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,12 +1,26 @@
 //! A worker process: Algorithm 2 (train + quantized upload) with
 //! Algorithm 3 (hidden-state replica) as a real background reader thread.
+//!
+//! Speaks wire protocol v2 by default: it opens with a `Hello` carrying
+//! its protocol version and requested upload codec (an explicit
+//! `quant_client` spec or a device-tier name), and expects a `JoinV2`
+//! assigning the resolved codec and its registry id; every upload is
+//! then an `UpdateV2` tagged with that id. If the leader answers with a
+//! legacy `Join` instead, the worker falls back to v1 — default codec,
+//! untagged `Update` frames. Note the fallback covers leaders that
+//! *deliberately* speak v1 after a Hello (minimal implementations,
+//! test stubs); a genuine pre-v2 leader cannot decode the Hello frame
+//! at all and drops the connection, so mixed-version deployments must
+//! upgrade the leader first (the supported direction is new leader +
+//! old workers, via [`Worker::force_v1`]-style silent v1 joins, which
+//! the leader serves bit-identically).
 
-use super::message::Message;
+use super::message::{Message, PROTOCOL_VERSION};
 use super::transport::Conn;
 use crate::quant::{parse_spec, Quantizer};
 use crate::runtime::Backend;
 use crate::util::prng::Prng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::sync::mpsc;
 
 /// Worker run summary.
@@ -16,6 +30,12 @@ pub struct WorkerReport {
     pub uploads: u64,
     /// Final replica step (how far the hidden state advanced).
     pub replica_t: u64,
+    /// Protocol version the connection actually ran at (1 or 2).
+    pub protocol: u8,
+    /// Resolved upload-codec spec the leader assigned.
+    pub codec: String,
+    /// Registry id of that codec on the leader (0 = default).
+    pub codec_id: u32,
 }
 
 /// A worker: owns a compute backend and a hidden-state replica.
@@ -26,23 +46,74 @@ pub struct Worker<B: Backend> {
     /// Shard-parallel broadcast decode (mirrors the server's
     /// `cfg.fl.shards`; worth > 1 only for multi-MB models).
     pub shards: usize,
+    /// Device-tier name sent in the v2 Hello; the leader resolves it to
+    /// `scenario.tiers.<name>.quant_client` (`net.tier` / `--tier`).
+    pub tier: Option<String>,
+    /// Explicit upload-codec spec sent in the v2 Hello; wins over
+    /// `tier` on the leader (`net.quant_client` / `--quant-client`).
+    pub quant_client: Option<String>,
+    /// Speak the legacy v1 protocol (no Hello, untagged uploads).
+    pub force_v1: bool,
 }
 
 impl<B: Backend> Worker<B> {
     pub fn new(backend: B) -> Worker<B> {
-        Worker { backend, round_delay: std::time::Duration::ZERO, shards: 1 }
+        Worker {
+            backend,
+            round_delay: std::time::Duration::ZERO,
+            shards: 1,
+            tier: None,
+            quant_client: None,
+            force_v1: false,
+        }
     }
 
     /// Connect to the leader at `addr` and train until Shutdown.
     pub fn run(&self, addr: &str) -> Result<WorkerReport> {
         let mut conn = Conn::connect(addr)?;
         // --- join -----------------------------------------------------------
-        let (worker_id, d, mut x_hat, client_quant, server_quant, client_lr) =
+        // v2 opens with Hello; the legacy flow waits silently for Join.
+        if !self.force_v1 {
+            conn.send(&Message::Hello {
+                version: PROTOCOL_VERSION,
+                tier: self.tier.clone(),
+                quant_client: self.quant_client.clone(),
+            })?;
+        }
+        let (protocol, worker_id, d, mut x_hat, client_quant, server_quant, client_lr, codec_id) =
             match conn.recv()? {
-                Some(Message::Join { worker_id, d, x0, client_quant, server_quant, client_lr }) => {
-                    (worker_id, d as usize, x0, client_quant, server_quant, client_lr)
+                Some(Message::JoinV2 {
+                    version,
+                    worker_id,
+                    d,
+                    x0,
+                    client_quant,
+                    server_quant,
+                    client_lr,
+                    codec_id,
+                }) => {
+                    if self.force_v1 {
+                        bail!("worker: leader sent JoinV2 to a v1 worker");
+                    }
+                    (
+                        version.min(PROTOCOL_VERSION),
+                        worker_id,
+                        d as usize,
+                        x0,
+                        client_quant,
+                        server_quant,
+                        client_lr,
+                        codec_id,
+                    )
                 }
-                other => bail!("expected Join, got {other:?}"),
+                // a leader that answers a Hello with the legacy Join is
+                // deliberately speaking v1: fall back (default codec,
+                // id 0). A genuine pre-v2 leader never gets here — it
+                // fails to decode the Hello tag and drops us instead.
+                Some(Message::Join { worker_id, d, x0, client_quant, server_quant, client_lr }) => {
+                    (1u8, worker_id, d as usize, x0, client_quant, server_quant, client_lr, 0u32)
+                }
+                other => bail!("expected Join/JoinV2, got {other:?}"),
             };
         if d != self.backend.d() {
             bail!("model dim mismatch: leader d={d}, backend d={}", self.backend.d());
@@ -104,7 +175,12 @@ impl<B: Backend> Worker<B> {
             let user = worker_id as usize;
             let out = self.backend.client_round(&x_hat, user, trip, client_lr)?;
             let qmsg = quant_c.quantize(&out.delta, &mut rng);
-            conn.send(&Message::update_from(worker_id, t_start, trip, out.loss, &qmsg))?;
+            let upload = if protocol >= 2 {
+                Message::update_v2_from(worker_id, t_start, trip, out.loss, codec_id, &qmsg)
+            } else {
+                Message::update_from(worker_id, t_start, trip, out.loss, &qmsg)
+            };
+            conn.send(&upload)?;
             uploads += 1;
             trip += 1;
             if !self.round_delay.is_zero() {
@@ -115,7 +191,14 @@ impl<B: Backend> Worker<B> {
         // goodbye (best effort; leader may already be closing)
         let _ = conn.send(&Message::Bye { worker_id, uploads });
         let _ = bg.join();
-        Ok(WorkerReport { worker_id, uploads, replica_t })
+        Ok(WorkerReport {
+            worker_id,
+            uploads,
+            replica_t,
+            protocol,
+            codec: quant_c.name(),
+            codec_id,
+        })
     }
 }
 
@@ -181,6 +264,10 @@ mod tests {
             let r = w.join().unwrap();
             total_uploads += r.uploads;
             max_replica_t = max_replica_t.max(r.replica_t);
+            // plain workers negotiate v2 and land on the default codec
+            assert_eq!(r.protocol, 2);
+            assert_eq!(r.codec_id, 0);
+            assert_eq!(r.codec, "qsgd:8");
         }
 
         assert_eq!(report.server_steps, 40);
@@ -190,6 +277,19 @@ mod tests {
         assert!(report.comm.uploads >= 120, "uploads {}", report.comm.uploads);
         assert!(total_uploads >= report.comm.uploads);
         assert!(max_replica_t > 30, "replicas stalled at {max_replica_t}");
+        // per-worker accounting sums to the server totals
+        assert_eq!(report.worker_stats.len(), 4);
+        let per_worker_uploads: u64 = report.worker_stats.iter().map(|w| w.uploads).sum();
+        let per_worker_bytes: u64 = report.worker_stats.iter().map(|w| w.upload_bytes).sum();
+        assert_eq!(per_worker_uploads, report.comm.uploads);
+        assert_eq!(per_worker_bytes, report.comm.upload_bytes);
+        for ws in &report.worker_stats {
+            assert_eq!(ws.protocol, 2);
+            assert_eq!(ws.codec_id, 0);
+            assert!(ws.uploads > 0, "worker {} never uploaded", ws.worker_id);
+            // writer threads delivered every broadcast + the shutdown frame
+            assert_eq!(ws.broadcast_frames, 41, "worker {}", ws.worker_id);
+        }
         // training over TCP actually descends
         let g1 = mk_backend().grad_norm_sq(&report.model);
         assert!(g1 < g0 * 0.8, "{g0} -> {g1}");

@@ -1,0 +1,512 @@
+//! Wire-protocol v2 integration tests (ISSUE 5 acceptance criteria):
+//!
+//! * a loopback run with three workers on three *different* client
+//!   codecs completes, with per-worker byte accounting matching each
+//!   codec's wire size exactly, and the leader's server trajectory is
+//!   **bit-identical** to replaying the same update order through the
+//!   simulator's [`Server::ingest_from`] path;
+//! * a v1 worker (no version field, silent join) is still served
+//!   byte-identically to the legacy protocol — the Join/Broadcast/
+//!   Shutdown frames it sees are pinned against a hand-built golden;
+//! * v1 and v2 workers coexist on one leader;
+//! * decode/codec errors surface which worker they came from
+//!   (worker id + peer address in the error context).
+//!
+//! Everything runs under the `QAFEL_TEST_SHARDS` matrix: broadcast
+//! payloads are bit-identical for every shard count, so the goldens and
+//! replays hold at S=1 and S=4 alike.
+
+use qafel::config::{Algorithm, Config, TierConfig};
+use qafel::coordinator::{Server, ServerStep};
+use qafel::net::{Leader, Message, Worker, PROTOCOL_VERSION};
+use qafel::quant::{parse_spec, QuantizedMsg};
+use qafel::runtime::{Backend as _, QuadraticBackend};
+use qafel::util::prng::Prng;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Read one raw frame (length prefix + body), returning the body bytes.
+fn read_frame(s: &mut TcpStream) -> Vec<u8> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).unwrap();
+    let n = u32::from_le_bytes(len) as usize;
+    let mut body = vec![0u8; n];
+    s.read_exact(&mut body).unwrap();
+    body
+}
+
+/// Write one raw frame around the given body bytes.
+fn write_frame(s: &mut TcpStream, body: &[u8]) {
+    s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+}
+
+/// A config for fast deterministic loopback runs: mixed codecs via one
+/// tier preset, a short v1 grace so back-compat tests stay quick.
+fn mixed_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = "qsgd:8".into();
+    c.quant.server = "qsgd:4".into();
+    c.fl.buffer_size = 3;
+    c.fl.client_lr = 0.05;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.staleness_scaling = true;
+    c.fl.clip_norm = 0.0;
+    c.stop.max_server_steps = 30;
+    c.stop.max_uploads = 100_000;
+    c.net.v1_grace_ms = 200;
+    let mut phone = TierConfig::named("phone");
+    phone.quant_client = Some("top:0.1".into());
+    c.scenario.tiers = vec![phone];
+    c
+}
+
+const D: usize = 64;
+
+fn backend(seed: u64) -> QuadraticBackend {
+    QuadraticBackend::new(D, 8, 1.0, 0.3, 0.2, 0.02, 1, seed)
+}
+
+#[test]
+fn mixed_codec_loopback_replays_bit_identical_to_ingest_from() {
+    let cfg = mixed_cfg();
+    let x0 = backend(21).init_params(0).unwrap();
+    let g0 = backend(21).grad_norm_sq(&x0);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || {
+        let mut l = Leader::new(leader_cfg, leader_x0, 7);
+        l.record_trace = true;
+        l.run_on(listener, 3).unwrap()
+    });
+
+    // three workers, three different upload codecs: an explicit
+    // override, a tier preset, and the config default
+    let mut workers = Vec::new();
+    for req in [Some(("quant", "qsgd:4")), Some(("tier", "phone")), None] {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut w = Worker::new(backend(21));
+            w.round_delay = std::time::Duration::from_millis(1);
+            match req {
+                Some(("quant", spec)) => w.quant_client = Some(spec.into()),
+                Some(("tier", name)) => w.tier = Some(name.into()),
+                _ => {}
+            }
+            w.run(&addr).unwrap()
+        }));
+    }
+    let report = leader.join().unwrap();
+    let worker_reports: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    // the run completed and actually descended
+    assert_eq!(report.server_steps, 30);
+    assert_eq!(report.comm.broadcasts, 30);
+    let g1 = backend(21).grad_norm_sq(&report.model);
+    assert!(g1 < g0 * 0.9, "{g0} -> {g1}");
+
+    // every worker negotiated v2 and got its requested codec
+    let mut worker_codecs: Vec<String> =
+        worker_reports.iter().map(|r| r.codec.clone()).collect();
+    worker_codecs.sort();
+    assert_eq!(worker_codecs, vec!["qsgd:4", "qsgd:8", "top:0.1"]);
+    for r in &worker_reports {
+        assert_eq!(r.protocol, 2);
+    }
+
+    // per-worker byte accounting matches each codec's wire size exactly
+    assert_eq!(report.worker_stats.len(), 3);
+    let mut stats_codecs: Vec<String> =
+        report.worker_stats.iter().map(|w| w.codec.clone()).collect();
+    stats_codecs.sort();
+    assert_eq!(stats_codecs, vec!["qsgd:4", "qsgd:8", "top:0.1"]);
+    for ws in &report.worker_stats {
+        assert!(ws.uploads > 0, "worker {} never uploaded", ws.worker_id);
+        let per_upload = parse_spec(&ws.codec).unwrap().expected_bytes(D) as u64;
+        assert_eq!(
+            ws.upload_bytes,
+            ws.uploads * per_upload,
+            "worker {} ({}) byte accounting",
+            ws.worker_id,
+            ws.codec
+        );
+        assert_eq!(ws.staleness.n, ws.uploads);
+    }
+    let total_uploads: u64 = report.worker_stats.iter().map(|w| w.uploads).sum();
+    let total_bytes: u64 = report.worker_stats.iter().map(|w| w.upload_bytes).sum();
+    assert_eq!(total_uploads, report.comm.uploads);
+    assert_eq!(total_bytes, report.comm.upload_bytes);
+
+    // === the acceptance criterion: replay the recorded event order
+    // through the simulator's ingest_from path and demand bit-identity
+    let trace = report.trace.expect("record_trace was set");
+    assert_eq!(trace.updates.len() as u64, report.comm.uploads);
+    // registry: id 0 is the default, the rest replayed in recorded order
+    assert_eq!(trace.codecs[0], "qsgd:8");
+    let mut replay = Server::build(&cfg, x0.clone(), 7).unwrap();
+    for (i, spec) in trace.codecs.iter().enumerate().skip(1) {
+        assert_eq!(replay.register_client_codec(spec).unwrap(), i);
+    }
+    let mut broadcasts = Vec::new();
+    for u in &trace.updates {
+        let qmsg = QuantizedMsg { payload: u.payload.clone(), d: D };
+        if let ServerStep::Stepped(b) = replay.ingest_from(&qmsg, u.staleness, u.codec).unwrap() {
+            broadcasts.push(b.msg.payload);
+        }
+    }
+    assert_eq!(broadcasts.len(), 30);
+    assert_eq!(broadcasts, trace.broadcasts, "broadcast payloads diverged");
+    assert_eq!(replay.model(), &report.model[..], "final model diverged");
+    assert_eq!(replay.t(), report.server_steps);
+    assert_eq!(replay.comm.uploads, report.comm.uploads);
+    assert_eq!(replay.comm.upload_bytes, report.comm.upload_bytes);
+    assert_eq!(replay.staleness_max, report.staleness_max);
+}
+
+#[test]
+fn v1_worker_served_bit_identically_golden() {
+    // A silent (v1) client must receive, byte for byte, the frames the
+    // legacy protocol defined: the Join built from the raw config
+    // specs, one Broadcast per server step, then Shutdown.
+    let mut cfg = Config::default();
+    cfg.fl.algorithm = Algorithm::Qafel;
+    cfg.quant.client = "qsgd:8".into();
+    cfg.quant.server = "qsgd:8".into();
+    cfg.fl.buffer_size = 1;
+    cfg.fl.server_lr = 1.0;
+    cfg.fl.server_momentum = 0.0;
+    cfg.fl.clip_norm = 0.0;
+    cfg.stop.max_server_steps = 2;
+    cfg.net.v1_grace_ms = 150;
+    let d = 256usize;
+    let x0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.01).sin()).collect();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || {
+        Leader::new(leader_cfg, leader_x0, 5).run_on(listener, 1).unwrap()
+    });
+
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    // say nothing: the leader must classify us as v1 by our silence
+
+    // --- golden Join frame, built by hand from the v1 wire layout ----
+    let join = read_frame(&mut sock);
+    let mut expect = vec![1u8]; // TAG_JOIN
+    expect.extend_from_slice(&0u32.to_le_bytes()); // worker_id
+    expect.extend_from_slice(&(d as u32).to_le_bytes()); // d
+    expect.extend_from_slice(&(d as u32).to_le_bytes()); // x0 length
+    for v in &x0 {
+        expect.extend_from_slice(&v.to_le_bytes());
+    }
+    expect.extend_from_slice(&6u32.to_le_bytes());
+    expect.extend_from_slice(b"qsgd:8"); // client_quant: the raw config spec
+    expect.extend_from_slice(&6u32.to_le_bytes());
+    expect.extend_from_slice(b"qsgd:8"); // server_quant
+    expect.extend_from_slice(&cfg.fl.client_lr.to_le_bytes());
+    assert_eq!(join, expect, "v1 Join frame changed");
+
+    // --- the run itself: reference server == what the leader must do -
+    let qc = parse_spec("qsgd:8").unwrap();
+    let mut rng = Prng::new(77);
+    let mut reference = Server::build(&cfg, x0.clone(), 5).unwrap();
+    for round in 0..2u64 {
+        let delta: Vec<f32> =
+            (0..d).map(|i| ((i as f32) * 0.02 + round as f32).cos() * 0.1).collect();
+        let msg = qc.quantize(&delta, &mut rng);
+        write_frame(
+            &mut sock,
+            &Message::Update {
+                worker_id: 0,
+                t_start: round,
+                trip: round,
+                train_loss: 0.0,
+                payload: msg.payload.clone(),
+            }
+            .encode(),
+        );
+        let staleness = reference.t().saturating_sub(round);
+        let b = match reference.ingest(&msg, staleness).unwrap() {
+            ServerStep::Stepped(b) => b,
+            other => panic!("K=1 must step, got {other:?}"),
+        };
+        let bcast = read_frame(&mut sock);
+        let expect =
+            Message::Broadcast { t: b.t, absolute: b.absolute, payload: b.msg.payload }.encode();
+        assert_eq!(bcast, expect, "round {round}: v1 Broadcast frame diverged");
+    }
+    // step cap reached: the v1 worker gets a bare Shutdown frame
+    assert_eq!(read_frame(&mut sock), vec![4u8], "v1 Shutdown frame changed");
+    write_frame(&mut sock, &Message::Bye { worker_id: 0, uploads: 2 }.encode());
+    drop(sock);
+
+    let report = leader.join().unwrap();
+    assert_eq!(report.server_steps, 2);
+    assert_eq!(&report.model[..], reference.model(), "leader model != reference");
+    let ws = &report.worker_stats[0];
+    assert_eq!(ws.protocol, 1, "silent worker must be served as v1");
+    assert_eq!(ws.codec_id, 0);
+    assert_eq!(ws.codec, "qsgd:8");
+    assert_eq!(ws.uploads, 2);
+    assert_eq!(ws.upload_bytes, 2 * qc.expected_bytes(d) as u64);
+}
+
+#[test]
+fn v1_and_v2_workers_coexist_on_one_leader() {
+    let mut cfg = mixed_cfg();
+    cfg.stop.max_server_steps = 20;
+    cfg.net.v1_grace_ms = 150;
+    let x0 = backend(9).init_params(0).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || {
+        Leader::new(leader_cfg, leader_x0, 3).run_on(listener, 3).unwrap()
+    });
+
+    let mut workers = Vec::new();
+    for kind in ["v1", "preset", "default"] {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut w = Worker::new(backend(9));
+            w.round_delay = std::time::Duration::from_millis(1);
+            match kind {
+                "v1" => w.force_v1 = true,
+                "preset" => w.quant_client = Some("qsgd:4".into()),
+                _ => {}
+            }
+            (kind, w.run(&addr).unwrap())
+        }));
+    }
+    let report = leader.join().unwrap();
+    let worker_reports: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    assert_eq!(report.server_steps, 20);
+    for (kind, r) in &worker_reports {
+        match *kind {
+            "v1" => {
+                assert_eq!(r.protocol, 1);
+                assert_eq!(r.codec_id, 0);
+                assert_eq!(r.codec, "qsgd:8");
+            }
+            "preset" => {
+                assert_eq!(r.protocol, 2);
+                assert_eq!(r.codec, "qsgd:4");
+            }
+            _ => {
+                assert_eq!(r.protocol, 2);
+                assert_eq!(r.codec, "qsgd:8");
+                assert_eq!(r.codec_id, 0);
+            }
+        }
+    }
+    // leader-side stats agree with what each worker negotiated, and the
+    // byte accounting is exact for every protocol generation
+    let mut protocols: Vec<u8> = report.worker_stats.iter().map(|w| w.protocol).collect();
+    protocols.sort();
+    assert_eq!(protocols, vec![1, 2, 2]);
+    for ws in &report.worker_stats {
+        assert!(ws.uploads > 0);
+        let per_upload = parse_spec(&ws.codec).unwrap().expected_bytes(D) as u64;
+        assert_eq!(ws.upload_bytes, ws.uploads * per_upload);
+        // every live worker's writer delivered all broadcasts + Shutdown
+        assert_eq!(ws.broadcast_frames, 21, "worker {}", ws.worker_id);
+    }
+}
+
+#[test]
+fn future_version_hello_negotiates_down_to_v2() {
+    let mut cfg = mixed_cfg();
+    cfg.net.v1_grace_ms = 500;
+    let x0 = vec![0.0f32; 8];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || {
+        Leader::new(cfg, leader_x0, 1).run_on(listener, 1).unwrap()
+    });
+
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    write_frame(
+        &mut sock,
+        &Message::Hello { version: 9, tier: None, quant_client: None }.encode(),
+    );
+    let join = Message::decode(&read_frame(&mut sock)).unwrap();
+    match join {
+        Message::JoinV2 { version, codec_id, d, .. } => {
+            assert_eq!(version, PROTOCOL_VERSION, "leader must cap at its own version");
+            assert_eq!(codec_id, 0);
+            assert_eq!(d, 8);
+        }
+        other => panic!("expected JoinV2, got {other:?}"),
+    }
+    drop(sock); // clean disconnect: the leader reports an idle run
+    let report = leader.join().unwrap();
+    assert_eq!(report.server_steps, 0);
+    assert_eq!(report.worker_stats[0].protocol, 2);
+}
+
+#[test]
+fn mismatched_codec_id_error_names_worker_and_peer() {
+    // An upload must be tagged with the codec its connection negotiated
+    // (two registered codecs can share a wire size, so a wrong-but-
+    // registered id could silently mis-decode; an unregistered id is
+    // the same violation). The error names the worker, peer and ids.
+    let mut cfg = mixed_cfg();
+    cfg.scenario.tiers.clear(); // only the default codec is registered
+    let x0 = vec![0.0f32; 8];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || Leader::new(cfg, x0, 1).run_on(listener, 1));
+
+    let client = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        write_frame(
+            &mut sock,
+            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+        );
+        let _join = read_frame(&mut sock);
+        write_frame(
+            &mut sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 0,
+                trip: 0,
+                train_loss: 0.0,
+                codec_id: 9,
+                payload: vec![0; 16],
+            }
+            .encode(),
+        );
+        // the leader aborts; drain until EOF so the write cannot race it
+        let mut rest = Vec::new();
+        let _ = sock.read_to_end(&mut rest);
+    });
+
+    let err = leader.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("worker 0"), "missing worker id: {err}");
+    assert!(err.contains("127.0.0.1"), "missing peer addr: {err}");
+    assert!(err.contains("codec id 9"), "missing tagged codec id: {err}");
+    assert!(err.contains("negotiated codec id 0"), "missing negotiated id: {err}");
+    client.join().unwrap();
+}
+
+#[test]
+fn wrong_sized_upload_error_names_worker_and_codec() {
+    let mut cfg = mixed_cfg();
+    cfg.scenario.tiers.clear();
+    let x0 = vec![0.0f32; 8];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || Leader::new(cfg, x0, 1).run_on(listener, 1));
+
+    let client = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        write_frame(
+            &mut sock,
+            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+        );
+        let _join = read_frame(&mut sock);
+        // a 3-byte payload is no valid qsgd:8 encoding at d=8
+        write_frame(
+            &mut sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 0,
+                trip: 0,
+                train_loss: 0.0,
+                codec_id: 0,
+                payload: vec![1, 2, 3],
+            }
+            .encode(),
+        );
+        let mut rest = Vec::new();
+        let _ = sock.read_to_end(&mut rest);
+    });
+
+    let err = format!("{:#}", leader.join().unwrap().unwrap_err());
+    assert!(err.contains("worker 0"), "missing worker id: {err}");
+    assert!(err.contains("127.0.0.1"), "missing peer addr: {err}");
+    assert!(err.contains("qsgd:8"), "missing codec name: {err}");
+    client.join().unwrap();
+}
+
+#[test]
+fn garbage_frame_is_fatal_with_worker_context_but_disconnect_is_not() {
+    // A worker dying mid-run (abrupt close) is tolerated exactly as in
+    // v1; a worker sending a corrupt frame aborts the run naming the
+    // worker. Two workers: one disconnects, one sends garbage.
+    let mut cfg = mixed_cfg();
+    cfg.scenario.tiers.clear();
+    let x0 = vec![0.0f32; 8];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || Leader::new(cfg, x0, 1).run_on(listener, 2));
+
+    // worker 0: joins, then vanishes — must NOT fail the run
+    let addr0 = addr.clone();
+    let quitter = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr0).unwrap();
+        write_frame(
+            &mut sock,
+            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+        );
+        let _join = read_frame(&mut sock);
+        drop(sock);
+    });
+    quitter.join().unwrap();
+
+    // worker 1: joins, then sends a well-framed body with an unknown tag
+    let client = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        write_frame(
+            &mut sock,
+            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+        );
+        let _join = read_frame(&mut sock);
+        write_frame(&mut sock, &[99u8]); // unknown message tag
+        let mut rest = Vec::new();
+        let _ = sock.read_to_end(&mut rest);
+    });
+
+    let err = leader.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("worker 1"), "wrong or missing worker id: {err}");
+    assert!(err.contains("127.0.0.1"), "missing peer addr: {err}");
+    client.join().unwrap();
+}
+
+#[test]
+fn unknown_tier_is_rejected_loudly() {
+    let cfg = mixed_cfg(); // knows only tier "phone"
+    let x0 = vec![0.0f32; 8];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || Leader::new(cfg, x0, 1).run_on(listener, 1));
+
+    let client = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        write_frame(
+            &mut sock,
+            &Message::Hello { version: 2, tier: Some("nosuch".into()), quant_client: None }
+                .encode(),
+        );
+        let mut rest = Vec::new();
+        let _ = sock.read_to_end(&mut rest);
+    });
+
+    let err = leader.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("unknown tier 'nosuch'"), "{err}");
+    assert!(err.contains("phone"), "should list known tiers: {err}");
+    client.join().unwrap();
+}

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Schema check for the BENCH_*.json perf logs (CI).
+
+The bench smoke writes `BENCH_sharded_step.json` and
+`BENCH_scenario_step.json`; CI uploads them as workflow artifacts so
+measured numbers can be checked in from a real machine (ROADMAP item).
+This validator pins the format those check-ins must satisfy: required
+keys present, numeric fields finite, counters/timings positive where
+zero would mean the bench did not actually run.
+
+Usage: check_bench.py BENCH_a.json [BENCH_b.json ...]
+
+Exit code 0 when every file validates, 1 otherwise (each failure is
+printed as `file: problem`).
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+# field -> must be strictly positive (False allows zero, e.g. dropouts)
+SHARDED_ROW_FIELDS = {
+    "d": True,
+    "shards": True,
+    "k_buffer": True,
+    "steps_timed": True,
+    "ns_per_step": True,
+    "steps_per_sec": True,
+    "speedup_vs_s1": True,
+}
+
+SCENARIO_FIELDS = {
+    "tiers": True,
+    "target_concurrency": True,
+    "arrivals": True,
+    "uploads": True,
+    "dropouts": False,
+    "server_steps": True,
+    "wall_seconds": True,
+    "events_per_sec": True,
+    "uploads_per_sec": True,
+    "mean_concurrency": True,
+    "max_in_flight": True,
+    "max_live_snapshots": True,
+}
+
+
+def numeric(doc: dict, field: str, positive: bool) -> list[str]:
+    if field not in doc:
+        return [f"missing key '{field}'"]
+    v = doc[field]
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return [f"'{field}' must be a number, got {v!r}"]
+    if not math.isfinite(v):
+        return [f"'{field}' must be finite, got {v!r}"]
+    if positive and v <= 0:
+        return [f"'{field}' must be > 0, got {v!r}"]
+    if not positive and v < 0:
+        return [f"'{field}' must be >= 0, got {v!r}"]
+    return []
+
+
+def check_sharded(doc: dict) -> list[str]:
+    problems = []
+    if not isinstance(doc.get("fast_mode"), bool):
+        problems.append("'fast_mode' must be a bool")
+    problems += numeric(doc, "threads_available", positive=True)
+    rows = doc.get("results")
+    if not isinstance(rows, list) or not rows:
+        return problems + ["'results' must be a non-empty array"]
+    codecs = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            problems.append(f"results[{i}] must be an object")
+            continue
+        if not isinstance(row.get("codec"), str) or not row["codec"]:
+            problems.append(f"results[{i}]: 'codec' must be a non-empty string")
+        else:
+            codecs.add(row["codec"])
+        for field, positive in SHARDED_ROW_FIELDS.items():
+            problems += [f"results[{i}]: {p}" for p in numeric(row, field, positive)]
+    # the sweep must cover the biased codecs too (ROADMAP: tune the S>1
+    # threshold incl. the top:0.1 / rand:0.1 rows)
+    for want in ("qsgd:4", "top:0.1", "rand:0.1"):
+        if want not in codecs:
+            problems.append(f"results missing codec '{want}' rows")
+    return problems
+
+
+def check_scenario(doc: dict) -> list[str]:
+    problems = []
+    if not isinstance(doc.get("fast_mode"), bool):
+        problems.append("'fast_mode' must be a bool")
+    for field, positive in SCENARIO_FIELDS.items():
+        problems += numeric(doc, field, positive)
+    return problems
+
+
+def check_file(path: Path) -> list[str]:
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    if not isinstance(doc, dict):
+        return ["top level must be an object"]
+    bench = doc.get("bench")
+    if bench == "sharded_step":
+        return check_sharded(doc)
+    if bench == "scenario_step":
+        return check_scenario(doc)
+    return [f"unknown 'bench' kind {bench!r} (want sharded_step | scenario_step)"]
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__, file=sys.stderr)
+        return 2
+    failures = 0
+    for name in argv:
+        problems = check_file(Path(name))
+        for p in problems:
+            print(f"{name}: {p}", file=sys.stderr)
+        failures += len(problems)
+        if not problems:
+            print(f"{name}: ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

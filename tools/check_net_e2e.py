@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Validate a `qafel leader --report-json` file from the CI loopback E2E.
+
+The net-e2e job runs a real leader process plus N worker processes on
+loopback with heterogeneous per-worker codecs (wire protocol v2). This
+check asserts, from the leader's JSON report:
+
+* the run completed the configured number of server steps and the
+  quadratic objective descended (`grad_ratio` < the bound);
+* every worker joined on protocol v2, uploaded at least once, and its
+  byte accounting is **exact**: `upload_bytes == uploads *
+  expected_bytes_per_upload`, where upload_bytes is counted off the
+  wire frames and expected_bytes_per_upload comes from the codec
+  formula — two independent measurements;
+* the set of negotiated per-worker codecs is exactly the requested one;
+* per-worker totals sum to the server's totals.
+
+Usage:
+  check_net_e2e.py report.json --steps N --workers N --codecs a,b,c
+                   [--max-grad-ratio 0.9]
+"""
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report")
+    ap.add_argument("--steps", type=int, required=True)
+    ap.add_argument("--workers", type=int, required=True)
+    ap.add_argument("--codecs", required=True, help="comma-separated expected codec multiset")
+    ap.add_argument("--max-grad-ratio", type=float, default=0.9)
+    args = ap.parse_args()
+
+    doc = json.loads(Path(args.report).read_text(encoding="utf-8"))
+    problems: list[str] = []
+
+    def check(cond: bool, msg: str) -> None:
+        if not cond:
+            problems.append(msg)
+
+    check(doc.get("server_steps") == args.steps,
+          f"server_steps {doc.get('server_steps')} != {args.steps}")
+    check(doc.get("broadcasts") == args.steps,
+          f"broadcasts {doc.get('broadcasts')} != {args.steps}")
+    ratio = doc.get("grad_ratio")
+    check(isinstance(ratio, (int, float)) and math.isfinite(ratio),
+          f"grad_ratio missing or non-finite: {ratio!r}")
+    if isinstance(ratio, (int, float)) and math.isfinite(ratio):
+        check(ratio < args.max_grad_ratio,
+              f"run did not converge: grad_ratio {ratio} >= {args.max_grad_ratio}")
+
+    workers = doc.get("workers")
+    check(isinstance(workers, list) and len(workers) == args.workers,
+          f"expected {args.workers} worker entries, got "
+          f"{len(workers) if isinstance(workers, list) else workers!r}")
+    workers = workers if isinstance(workers, list) else []
+
+    got_codecs = sorted(w.get("codec", "?") for w in workers)
+    want_codecs = sorted(args.codecs.split(","))
+    check(got_codecs == want_codecs,
+          f"negotiated codecs {got_codecs} != requested {want_codecs}")
+
+    total_uploads = 0
+    total_bytes = 0
+    for w in workers:
+        wid = w.get("worker_id")
+        check(w.get("protocol") == 2, f"worker {wid}: protocol {w.get('protocol')} != 2")
+        uploads = w.get("uploads", 0)
+        check(uploads > 0, f"worker {wid}: never uploaded")
+        expected = w.get("expected_bytes_per_upload", 0)
+        check(expected > 0, f"worker {wid}: bad expected_bytes_per_upload {expected!r}")
+        check(w.get("upload_bytes") == uploads * expected,
+              f"worker {wid} ({w.get('codec')}): upload_bytes {w.get('upload_bytes')} != "
+              f"{uploads} uploads x {expected} B")
+        # every live worker's writer delivered all broadcasts + Shutdown
+        check(w.get("broadcast_frames") == args.steps + 1,
+              f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} != {args.steps + 1}")
+        total_uploads += uploads
+        total_bytes += w.get("upload_bytes", 0)
+    check(total_uploads == doc.get("uploads"),
+          f"per-worker uploads {total_uploads} != server total {doc.get('uploads')}")
+    check(total_bytes == doc.get("upload_bytes"),
+          f"per-worker bytes {total_bytes} != server total {doc.get('upload_bytes')}")
+
+    for p in problems:
+        print(f"{args.report}: {p}", file=sys.stderr)
+    if not problems:
+        print(f"{args.report}: ok ({args.workers} workers, {args.steps} steps, "
+              f"codecs {', '.join(want_codecs)}, grad_ratio {ratio:.4f})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
