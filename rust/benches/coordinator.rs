@@ -10,16 +10,23 @@
 //! momentum/quantize/broadcast step) at S in {1, 2, 4, 8} from the
 //! paper's d = 29,474 up to ~8M coordinates, and records the results in
 //! `BENCH_sharded_step.json` for the perf log.
+//!
+//! The **tree sweep** section measures hierarchical aggregation (ISSUE
+//! 6): the same update stream pushed through K edge aggregators running
+//! on their own threads (modelling the distributed tree's critical
+//! path) vs the flat server ingesting every client upload itself.
+//! Records `BENCH_tree_step.json`.
 
 mod common;
 
 use common::{bench, scaled};
 use qafel::config::{Algorithm, Config, TierConfig};
-use qafel::coordinator::{Server, ServerStep};
+use qafel::coordinator::{AggOutcome, EdgeAggregator, Server, ServerStep};
 use qafel::quant::parse_spec;
 use qafel::runtime::QuadraticBackend;
 use qafel::sim::SimEngine;
 use qafel::util::json::Json;
+use qafel::util::pool::ShardPool;
 use qafel::util::prng::Prng;
 use std::hint::black_box;
 use std::time::Instant;
@@ -100,6 +107,7 @@ fn main() {
     }
 
     shard_sweep();
+    tree_sweep();
     scenario_stream();
 }
 
@@ -193,6 +201,139 @@ fn shard_sweep() {
     match std::fs::write(&out, doc.pretty()) {
         Ok(()) => println!("\nshard sweep recorded in {out}"),
         Err(e) => println!("\ncould not write {out}: {e}"),
+    }
+}
+
+/// Aggregation-tree sweep: wall time to absorb one fixed stream of
+/// client updates, flat (the root decodes every upload itself) vs
+/// through E in {1, 8, 32} edge aggregators, each on its own thread
+/// with its buffer and partial codec — the distributed tree's critical
+/// path with the network stubbed out (partials travel over an in-proc
+/// channel). The per-update O(d) decode + staleness weighting moves to
+/// the edges, so the root only folds count-weighted partials: at large
+/// d the 32-edge row should meet or beat the flat row (the fast-mode
+/// smoke runs a small d where thread overhead can dominate — the JSON
+/// records `fast_mode` so the checker only enforces the comparison on
+/// full runs). Writes BENCH_tree_step.json (QAFEL_BENCH_TREE_OUT
+/// overrides the path).
+fn tree_sweep() {
+    const K_ROOT: usize = 32; // root buffer: steps once per 32 updates
+    const B_EDGE: usize = 8; // edge buffer: one partial per 8 updates
+    let d: usize = if common::fast_mode() { 29_474 } else { 1 << 20 };
+    let spec = "qsgd:4";
+    let codec = parse_spec(spec).unwrap();
+    let delta: Vec<f32> = {
+        let mut r = Prng::new(4);
+        (0..d).map(|_| (r.f32() - 0.5) * 1e-3).collect()
+    };
+    let msg = codec.quantize(&delta, &mut Prng::new(3));
+    // one stream for every row, sized in multiples of 256 = lcm of
+    // K_ROOT and every E * B_EDGE, so each edge drains exactly and
+    // every row performs the same whole number of root steps
+    let updates = (scaled(4_000_000) / d).clamp(1, 500) * 256;
+
+    println!("\n== aggregation tree: flat root vs E edge threads (d = {d}, K = {K_ROOT}, B = {B_EDGE}) ==");
+    println!("{:>6} {:>10} {:>14} {:>12} {:>9}", "edges", "updates", "ns/update", "updates/s", "speedup");
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut flat_ns = 0.0f64;
+    for edges in [0usize, 1, 8, 32] {
+        let mut c = cfg(Algorithm::Qafel, spec, spec, K_ROOT);
+        c.fl.shards = 1; // isolate the tree effect from shard parallelism
+        let mut server = Server::build(&c, vec![0.0; d], 1).unwrap();
+        let steps_expected = (updates / K_ROOT) as u64;
+
+        let wall = if edges == 0 {
+            // flat baseline: the root ingests every client upload
+            let t0 = Instant::now();
+            for i in 0..updates {
+                let _ = black_box(server.ingest_from(black_box(&msg), (i % 5) as u64, 0).unwrap());
+            }
+            t0.elapsed()
+        } else {
+            assert!(server.register_partial_codec(spec).unwrap() == 0);
+            let per_edge = updates / edges;
+            let (ptx, prx) = std::sync::mpsc::channel();
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for e in 0..edges {
+                    let ptx = ptx.clone();
+                    let msg = &msg;
+                    s.spawn(move || {
+                        let mut edge = EdgeAggregator::new(
+                            d,
+                            B_EDGE,
+                            spec,
+                            spec,
+                            Algorithm::Qafel,
+                            true,
+                            ShardPool::new(1),
+                            100 + e as u64,
+                        )
+                        .unwrap();
+                        for i in 0..per_edge {
+                            match edge.ingest_from(msg, (i % 5) as u64, 0).unwrap() {
+                                AggOutcome::Forward(p) => {
+                                    let _ = ptx.send(p);
+                                }
+                                AggOutcome::Buffered => {}
+                                AggOutcome::Stepped(_) => unreachable!("edges never step"),
+                            }
+                        }
+                    });
+                }
+                drop(ptx);
+                // the root thread folds partials as they arrive
+                for p in prx {
+                    let _ = black_box(
+                        server.ingest_partial(&p.msg, p.count, &p.staleness, 0).unwrap(),
+                    );
+                }
+            });
+            t0.elapsed()
+        };
+        assert_eq!(server.t(), steps_expected, "E={edges}: wrong step count");
+
+        let ns_per_update = wall.as_nanos() as f64 / updates as f64;
+        if edges == 0 {
+            flat_ns = ns_per_update;
+        }
+        let speedup = flat_ns / ns_per_update;
+        println!(
+            "{:>6} {:>10} {:>14.0} {:>12.1} {:>8.2}x",
+            if edges == 0 { "flat".to_string() } else { edges.to_string() },
+            updates,
+            ns_per_update,
+            1e9 / ns_per_update,
+            speedup
+        );
+        results.push(Json::obj(vec![
+            ("edges", Json::num(edges as f64)),
+            ("d", Json::num(d as f64)),
+            ("k_buffer", Json::num(K_ROOT as f64)),
+            ("edge_buffer", Json::num(if edges == 0 { 0.0 } else { B_EDGE as f64 })),
+            ("updates", Json::num(updates as f64)),
+            ("server_steps", Json::num(steps_expected as f64)),
+            ("ns_per_update", Json::num(ns_per_update)),
+            ("updates_per_sec", Json::num(1e9 / ns_per_update)),
+            ("speedup_vs_flat", Json::num(speedup)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("tree_step")),
+        ("codec", Json::str(spec)),
+        ("partial_codec", Json::str(spec)),
+        ("threads_available", Json::num(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64,
+        )),
+        ("fast_mode", Json::Bool(common::fast_mode())),
+        ("results", Json::arr(results)),
+    ]);
+    let out = std::env::var("QAFEL_BENCH_TREE_OUT")
+        .unwrap_or_else(|_| "BENCH_tree_step.json".to_string());
+    match std::fs::write(&out, doc.pretty()) {
+        Ok(()) => println!("tree sweep recorded in {out}"),
+        Err(e) => println!("could not write {out}: {e}"),
     }
 }
 

@@ -218,6 +218,34 @@ impl TierConfig {
     }
 }
 
+/// The `[scenario.aggregators]` table: a tree-of-leaders layer between
+/// the client population and the root server
+/// (`crate::coordinator::aggregator`, ARCHITECTURE.md §Aggregator
+/// tree). `edges = 0` (the default) is the flat single-server topology,
+/// bit-identical to every pre-tree config.
+#[derive(Clone, Debug)]
+pub struct AggregatorsConfig {
+    /// Number of edge aggregators K_e. Each edge owns a contiguous
+    /// slice of the user population (`user * edges / num_users`) and
+    /// forwards partial aggregates upstream on buffer-full. 0 = flat.
+    pub edges: usize,
+    /// Edge buffer size B: client updates folded per forwarded partial.
+    /// 1 forwards every update immediately (with `partial_codec =
+    /// "none"` this replays bit-identical to the flat server). For
+    /// exact flat equivalence `fl.buffer_size` should be a multiple of
+    /// B.
+    pub buffer_size: usize,
+    /// Partial-aggregate codec `Q_p` (`quant::parse_spec` grammar).
+    /// `"none"` forwards the edge buffer at full precision.
+    pub partial_codec: String,
+}
+
+impl Default for AggregatorsConfig {
+    fn default() -> Self {
+        AggregatorsConfig { edges: 0, buffer_size: 1, partial_codec: "none".into() }
+    }
+}
+
 /// The `[scenario]` table: client-population model for the simulator
 /// (DESIGN_SCENARIOS.md). When `tiers` is empty the `sim.arrival` /
 /// `sim.duration*` knobs desugar to a single-tier scenario, keeping old
@@ -245,6 +273,14 @@ pub struct ScenarioConfig {
     /// Device tiers, keyed by name in TOML; sorted by name here (the
     /// TOML table is alphabetical), which fixes the sampling order.
     pub tiers: Vec<TierConfig>,
+    /// Correlate tier membership with data distribution: partition the
+    /// user population into contiguous per-tier pools (by tier weight,
+    /// in tier order) and draw an arriving client from its tier's pool
+    /// instead of the whole population. Off by default — the shared
+    /// draw keeps pre-existing scenarios bit-identical.
+    pub tier_user_pools: bool,
+    /// Optional tree-of-leaders layer (`[scenario.aggregators]`).
+    pub aggregators: AggregatorsConfig,
 }
 
 impl Default for ScenarioConfig {
@@ -256,6 +292,8 @@ impl Default for ScenarioConfig {
             burst_on: 1.0,
             burst_off: 4.0,
             tiers: Vec::new(),
+            tier_user_pools: false,
+            aggregators: AggregatorsConfig::default(),
         }
     }
 }
@@ -287,6 +325,19 @@ pub struct NetConfig {
     /// (`--quant-client` overrides). `None` inherits the leader's
     /// `quant.client` default.
     pub quant_client: Option<String>,
+    /// Edge-leader mode: address of the upstream (root or higher-level)
+    /// leader to forward partial aggregates to. `Some` turns `qafel
+    /// leader` into an edge leader — a v2 worker upstream, a leader
+    /// downstream (`--upstream` overrides). `None` = root leader.
+    pub upstream: Option<String>,
+    /// Edge-leader buffer size B: client updates folded per forwarded
+    /// partial (1 = forward every update).
+    pub edge_buffer: usize,
+    /// Partial-aggregate codec `Q_p` used between an edge leader and
+    /// its upstream. Must match on both ends of the link — it is the
+    /// first (and only) spec both register, so registry id 0 is the
+    /// wire contract.
+    pub partial_codec: String,
 }
 
 impl Default for NetConfig {
@@ -297,6 +348,9 @@ impl Default for NetConfig {
             v1_grace_ms: 500,
             tier: None,
             quant_client: None,
+            upstream: None,
+            edge_buffer: 1,
+            partial_codec: "none".into(),
         }
     }
 }
@@ -488,6 +542,15 @@ impl Config {
                     .to_string(),
             );
         }
+        if let Some(v) = doc.at(&["net", "upstream"]) {
+            self.net.upstream = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("config net.upstream must be a string"))?
+                    .to_string(),
+            );
+        }
+        get_num!(doc, &["net", "edge_buffer"], self.net.edge_buffer, usize);
+        get_str!(doc, &["net", "partial_codec"], self.net.partial_codec);
 
         get_num!(doc, &["data", "num_users"], self.data.num_users, usize);
         get_num!(doc, &["data", "seed"], self.data.seed, u64);
@@ -556,9 +619,44 @@ impl Config {
                         self.apply_tier(name, tval)?;
                     }
                 }
+                "tier_user_pools" => {
+                    self.scenario.tier_user_pools = val
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("scenario.tier_user_pools must be a bool"))?;
+                }
+                "aggregators" => self.apply_aggregators(val)?,
                 other => bail!(
                     "unknown [scenario] key '{other}' \
-                     (known: arrival, sampling, burst_factor, burst_on, burst_off, tiers)"
+                     (known: arrival, sampling, burst_factor, burst_on, burst_off, tiers, \
+                      tier_user_pools, aggregators)"
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Overlay the `[scenario.aggregators]` sub-table. Unknown keys are
+    /// rejected loudly, like the parent table.
+    fn apply_aggregators(&mut self, doc: &Json) -> Result<()> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow!("[scenario.aggregators] must be a table"))?;
+        for (key, val) in obj {
+            let what = format!("scenario.aggregators.{key}");
+            match key.as_str() {
+                "edges" => self.scenario.aggregators.edges = scalar(val, &what)? as usize,
+                "buffer_size" => {
+                    self.scenario.aggregators.buffer_size = scalar(val, &what)? as usize;
+                }
+                "partial_codec" => {
+                    self.scenario.aggregators.partial_codec = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("config {what} must be a string"))?
+                        .to_string();
+                }
+                other => bail!(
+                    "unknown [scenario.aggregators] key '{other}' \
+                     (known: edges, buffer_size, partial_codec)"
                 ),
             }
         }
@@ -688,6 +786,16 @@ impl Config {
             crate::quant::parse_spec(spec)
                 .map_err(|e| anyhow!("bad net.quant_client spec '{spec}': {e}"))?;
         }
+        if let Some(up) = &self.net.upstream {
+            if up.is_empty() {
+                bail!("net.upstream must not be empty (omit it for a root leader)");
+            }
+        }
+        if self.net.edge_buffer == 0 {
+            bail!("net.edge_buffer (B) must be >= 1");
+        }
+        crate::quant::parse_spec(&self.net.partial_codec)
+            .map_err(|e| anyhow!("bad net.partial_codec spec '{}': {e}", self.net.partial_codec))?;
         self.validate_scenario()
     }
 
@@ -761,6 +869,18 @@ impl Config {
         if !(total_weight.is_finite() && total_weight > 0.0) {
             bail!("scenario tier weights must sum to a positive finite value");
         }
+        let agg = &self.scenario.aggregators;
+        if agg.edges > 0 {
+            if agg.buffer_size == 0 {
+                bail!("scenario.aggregators.buffer_size (B) must be >= 1");
+            }
+            if agg.edges > 4096 {
+                bail!("scenario.aggregators.edges must be <= 4096, got {}", agg.edges);
+            }
+        }
+        crate::quant::parse_spec(&agg.partial_codec).map_err(|e| {
+            anyhow!("bad scenario.aggregators.partial_codec spec '{}': {e}", agg.partial_codec)
+        })?;
         Ok(())
     }
 }
@@ -1063,6 +1183,74 @@ mod tests {
         c.net.quant_client = Some("huff:3".into());
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("net.quant_client") && err.contains("huff:3"), "{err}");
+    }
+
+    #[test]
+    fn aggregator_tree_knobs_round_trip_and_validate() {
+        // defaults: no tree, shared user draw, identity partial codec
+        let c = Config::default();
+        assert_eq!(c.scenario.aggregators.edges, 0);
+        assert_eq!(c.scenario.aggregators.buffer_size, 1);
+        assert_eq!(c.scenario.aggregators.partial_codec, "none");
+        assert!(!c.scenario.tier_user_pools);
+        assert_eq!(c.net.upstream, None);
+        assert_eq!(c.net.edge_buffer, 1);
+        assert_eq!(c.net.partial_codec, "none");
+        c.validate().unwrap();
+
+        let doc = toml::parse(
+            "[scenario]\ntier_user_pools = true\n\
+             [scenario.aggregators]\nedges = 8\nbuffer_size = 4\npartial_codec = \"qsgd:8\"\n\
+             [net]\nupstream = \"127.0.0.1:7710\"\nedge_buffer = 2\npartial_codec = \"top:0.1\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert!(c.scenario.tier_user_pools);
+        assert_eq!(c.scenario.aggregators.edges, 8);
+        assert_eq!(c.scenario.aggregators.buffer_size, 4);
+        assert_eq!(c.scenario.aggregators.partial_codec, "qsgd:8");
+        assert_eq!(c.net.upstream.as_deref(), Some("127.0.0.1:7710"));
+        assert_eq!(c.net.edge_buffer, 2);
+        assert_eq!(c.net.partial_codec, "top:0.1");
+        c.validate().unwrap();
+
+        // CLI --set reaches the same knobs
+        let mut c = Config::default();
+        c.set("scenario.aggregators.edges=4").unwrap();
+        c.set("scenario.aggregators.buffer_size=2").unwrap();
+        c.set("net.edge_buffer=3").unwrap();
+        assert_eq!(c.scenario.aggregators.edges, 4);
+        assert_eq!(c.scenario.aggregators.buffer_size, 2);
+        assert_eq!(c.net.edge_buffer, 3);
+
+        // unknown [scenario.aggregators] keys are rejected loudly
+        let mut c = Config::default();
+        let doc = toml::parse("[scenario.aggregators]\nfanout = 3\n").unwrap();
+        let err = c.apply(&doc).unwrap_err().to_string();
+        assert!(err.contains("aggregators") && err.contains("fanout"), "{err}");
+
+        // validation catches bad values loudly
+        let mut c = Config::default();
+        c.scenario.aggregators.edges = 2;
+        c.scenario.aggregators.buffer_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.scenario.aggregators.edges = 5000;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.scenario.aggregators.partial_codec = "huff:3".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("partial_codec") && err.contains("huff:3"), "{err}");
+        let mut c = Config::default();
+        c.net.upstream = Some(String::new());
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.net.edge_buffer = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.net.partial_codec = "qsgd:x".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,716 @@
+//! Composable buffered aggregation — the tree-of-leaders seam.
+//!
+//! QAFeL inherits FedBuff's single-server buffered aggregation, so one
+//! node ingesting every upload is the scalability wall. But buffered
+//! aggregation *composes*: the count-weighted buffer an aggregator
+//! accumulates is mathematically just another client update, so an
+//! **edge aggregator** can ingest a slice of the population, quantize
+//! its partial buffer with a partial codec `Q_p`, and forward it
+//! upstream exactly like an upload. The [`Aggregator`] trait captures
+//! the seam:
+//!
+//! ```text
+//!            clients ──Q_c──▶ EdgeAggregator ──Q_p──▶ ┐
+//!            clients ──Q_c──▶ EdgeAggregator ──Q_p──▶ ├─▶ Server (root)
+//!            clients ──Q_c──▶ EdgeAggregator ──Q_p──▶ ┘      │
+//!                                                        Q_s broadcast
+//! ```
+//!
+//! * An **edge** ([`EdgeAggregator`]) ingests updates through the same
+//!   codec-registry path as the server ([`Server::ingest_from`]'s loud
+//!   size/dimension validation), applies the staleness weight `w(τ)`
+//!   locally, and on buffer-full emits a [`PartialAggregate`]:
+//!   `Q_p(Δ̄_edge)` + the update count + the staleness histogram.
+//! * The **root** ([`Server`]) ingests partials with
+//!   [`Server::ingest_partial`]: decode with the registered partial
+//!   codec, accumulate with weight 1 (staleness weights were applied at
+//!   the edge), advance the buffer fill by `count`, and step as usual
+//!   (momentum, η_g, `Q_s` encode, x̂ advance) when `K` fills.
+//! * Edges also accept partials from deeper edges
+//!   ([`Aggregator::ingest_partial_aggregate`]), so trees of any depth
+//!   compose from the same two node types.
+//!
+//! **Bit-identity contract** (the repo's signature invariant): a
+//! trivial tree — one edge, `buffer_size = 1` (forward every update),
+//! identity partial codec — replays **bit-identical** to the flat
+//! server. This holds because (a) the identity codec is an exact f32
+//! passthrough that draws no quantizer randomness, so the edge's PRNG
+//! stream never perturbs anything; (b) the edge buffer starts at +0.0
+//! and IEEE-754 round-to-nearest guarantees `0.0 + w·v` has the same
+//! bits as `w·v` except `-0.0 ↦ +0.0`, and adding `+0.0` vs `-0.0` to
+//! a buffer that can itself never hold `-0.0` is bitwise identical;
+//! (c) the root accumulates partials with weight exactly 1.0
+//! (`fl(1.0 · v) = v`). The golden tests in this module and
+//! `rust/tests/aggregator_tree.rs` pin the contract.
+
+use crate::config::{Algorithm, Config};
+use crate::coordinator::server::{client_codec_spec, Broadcast, Server, ServerStep};
+use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
+use crate::scenario::metrics::StalenessHist;
+use crate::util::pool::ShardPool;
+use crate::util::prng::Prng;
+use crate::util::vecf;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A quantized partial aggregate, forwarded upstream like an upload.
+#[derive(Clone, Debug)]
+pub struct PartialAggregate {
+    /// `Q_p(Δ̄_edge)` — the edge's count-weighted buffer, encoded with
+    /// the partial codec.
+    pub msg: QuantizedMsg,
+    /// Client updates folded into `msg`; the upstream aggregator
+    /// advances its buffer fill by this many slots.
+    pub count: u32,
+    /// Staleness of the folded updates. Weights `w(τ)` were already
+    /// applied downstream — the histogram travels for accounting only
+    /// and is merged up the tree.
+    pub staleness: StalenessHist,
+}
+
+impl PartialAggregate {
+    pub fn wire_bytes(&self) -> usize {
+        self.msg.wire_bytes()
+    }
+}
+
+/// Outcome of one ingest at any tree node.
+#[derive(Clone, Debug)]
+pub enum AggOutcome {
+    /// Buffered; this node's buffer is not yet full.
+    Buffered,
+    /// Root only: buffer filled, server step taken, broadcast emitted.
+    Stepped(Broadcast),
+    /// Edge only: buffer filled, partial aggregate ready to forward.
+    Forward(PartialAggregate),
+}
+
+/// A node in the aggregation tree: ingests client updates (and partial
+/// aggregates from deeper nodes) and either applies the buffer (root)
+/// or forwards it upstream (edge).
+pub trait Aggregator {
+    /// Model dimension d.
+    fn d(&self) -> usize;
+
+    /// Ingest one quantized client update, decoded with the registered
+    /// codec `codec` (same registry semantics as
+    /// [`Server::ingest_from`]: registration order is the wire
+    /// contract, mismatches fail loudly).
+    fn ingest_update(
+        &mut self,
+        update: &QuantizedMsg,
+        staleness: u64,
+        codec: usize,
+    ) -> Result<AggOutcome>;
+
+    /// Ingest a partial aggregate forwarded by a downstream aggregator,
+    /// decoded with the registered partial codec `codec`.
+    fn ingest_partial_aggregate(
+        &mut self,
+        partial: &PartialAggregate,
+        codec: usize,
+    ) -> Result<AggOutcome>;
+}
+
+impl Aggregator for Server {
+    fn d(&self) -> usize {
+        Server::d(self)
+    }
+
+    fn ingest_update(
+        &mut self,
+        update: &QuantizedMsg,
+        staleness: u64,
+        codec: usize,
+    ) -> Result<AggOutcome> {
+        Ok(match self.ingest_from(update, staleness, codec)? {
+            ServerStep::Buffered => AggOutcome::Buffered,
+            ServerStep::Stepped(b) => AggOutcome::Stepped(b),
+        })
+    }
+
+    fn ingest_partial_aggregate(
+        &mut self,
+        partial: &PartialAggregate,
+        codec: usize,
+    ) -> Result<AggOutcome> {
+        Ok(
+            match self.ingest_partial(&partial.msg, partial.count, &partial.staleness, codec)? {
+                ServerStep::Buffered => AggOutcome::Buffered,
+                ServerStep::Stepped(b) => AggOutcome::Stepped(b),
+            },
+        )
+    }
+}
+
+/// An edge aggregator: the server's ingest half (codec registry, loud
+/// validation, staleness weighting, shard-parallel accumulate) without
+/// the model half (no x, no momentum, no broadcast). On buffer-full it
+/// encodes the buffer with the partial codec and hands the caller a
+/// [`PartialAggregate`] to forward upstream.
+pub struct EdgeAggregator {
+    d: usize,
+    /// Edge buffer size B (1 = forward every update immediately).
+    buffer_size: usize,
+    algorithm: Algorithm,
+    staleness_scaling: bool,
+    /// Codecs for decoding client uploads; same registry semantics as
+    /// [`Server::register_client_codec`].
+    client_codecs: Vec<Box<dyn Quantizer>>,
+    /// `Q_p`: encodes the forwarded partial buffer.
+    partial_codec: Box<dyn Quantizer>,
+    pool: Arc<ShardPool>,
+    /// Randomness for `Q_p` (drawn only by stochastic partial codecs;
+    /// the identity codec consumes nothing — load-bearing for the
+    /// trivial-tree bit-identity contract).
+    rng: Prng,
+    // --- state -------------------------------------------------------------
+    /// Count-weighted partial buffer Δ̄_edge.
+    buffer: Vec<f32>,
+    k_filled: usize,
+    /// Staleness of the updates in the *current* buffer (shipped with
+    /// the next partial).
+    hist: StalenessHist,
+    // --- accounting --------------------------------------------------------
+    /// Client updates ingested (direct + folded via child partials).
+    pub updates: u64,
+    /// Wire bytes of ingested uploads/partials.
+    pub update_bytes: u64,
+    /// Partial aggregates emitted upstream.
+    pub forwarded: u64,
+    /// Wire bytes of emitted partials.
+    pub forwarded_bytes: u64,
+    /// Lifetime staleness histogram over everything ingested here.
+    pub staleness: StalenessHist,
+}
+
+impl EdgeAggregator {
+    /// Build an edge for model dimension `d`. `client_spec` becomes
+    /// codec id 0 (resolved per algorithm exactly like the server's
+    /// default); `partial_spec` is parsed raw — partials carry
+    /// already-decoded buffer values, not client deltas.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        d: usize,
+        buffer_size: usize,
+        partial_spec: &str,
+        client_spec: &str,
+        algorithm: Algorithm,
+        staleness_scaling: bool,
+        pool: Arc<ShardPool>,
+        seed: u64,
+    ) -> Result<EdgeAggregator> {
+        if buffer_size == 0 {
+            bail!("edge aggregator: buffer_size must be >= 1");
+        }
+        let quant_c = parse_spec(&client_codec_spec(client_spec, algorithm))?;
+        let partial_codec = parse_spec(partial_spec)?;
+        Ok(EdgeAggregator {
+            d,
+            buffer_size,
+            algorithm,
+            staleness_scaling,
+            client_codecs: vec![quant_c],
+            partial_codec,
+            pool,
+            rng: Prng::new(seed).stream("edge-quant"),
+            buffer: vec![0.0; d],
+            k_filled: 0,
+            hist: StalenessHist::default(),
+            updates: 0,
+            update_bytes: 0,
+            forwarded: 0,
+            forwarded_bytes: 0,
+            staleness: StalenessHist::default(),
+        })
+    }
+
+    pub fn buffer_size(&self) -> usize {
+        self.buffer_size
+    }
+
+    /// Updates currently sitting in the (not yet forwarded) buffer.
+    pub fn pending(&self) -> usize {
+        self.k_filled
+    }
+
+    /// Spec name of the partial codec `Q_p`.
+    pub fn partial_codec_name(&self) -> String {
+        self.partial_codec.name()
+    }
+
+    /// Wire bytes of one emitted partial at this edge's dimension.
+    pub fn partial_bytes(&self) -> usize {
+        self.partial_codec.expected_bytes(self.d)
+    }
+
+    /// Register an extra client-upload codec; identical registry
+    /// semantics to [`Server::register_client_codec`] (per-algorithm
+    /// resolution, dedup by resolved name, order = wire contract).
+    pub fn register_client_codec(&mut self, spec: &str) -> Result<usize> {
+        let resolved = client_codec_spec(spec, self.algorithm);
+        let codec = parse_spec(&resolved)?;
+        if let Some(i) = self.client_codecs.iter().position(|c| c.name() == codec.name()) {
+            return Ok(i);
+        }
+        self.client_codecs.push(codec);
+        Ok(self.client_codecs.len() - 1)
+    }
+
+    /// Register every tier's `quant_client` preset in tier order — the
+    /// same ids [`Server::register_tier_presets`] assigns, so every
+    /// node of the tree agrees on the codec registry for one config.
+    pub fn register_tier_presets(&mut self, cfg: &Config) -> Result<Vec<usize>> {
+        cfg.resolved_tiers()
+            .iter()
+            .map(|t| match &t.quant_client {
+                Some(spec) => self.register_client_codec(spec),
+                None => Ok(0),
+            })
+            .collect()
+    }
+
+    pub fn num_client_codecs(&self) -> usize {
+        self.client_codecs.len()
+    }
+
+    pub fn client_codec_name(&self, codec: usize) -> String {
+        self.client_codecs[codec].name()
+    }
+
+    /// Ingest one client update with the default codec (id 0).
+    pub fn ingest(&mut self, update: &QuantizedMsg, staleness: u64) -> Result<AggOutcome> {
+        self.ingest_from(update, staleness, 0)
+    }
+
+    /// Ingest one client update encoded with registered codec `codec` —
+    /// the same heterogeneous path as [`Server::ingest_from`], with the
+    /// same loud validation order (nothing is recorded for a rejected
+    /// upload).
+    pub fn ingest_from(
+        &mut self,
+        update: &QuantizedMsg,
+        staleness: u64,
+        codec: usize,
+    ) -> Result<AggOutcome> {
+        let quant_c = self
+            .client_codecs
+            .get(codec)
+            .ok_or_else(|| anyhow::anyhow!("edge: unknown client codec id {codec}"))?;
+        if update.d != self.d {
+            bail!("edge: upload dimension {} != model dimension {}", update.d, self.d);
+        }
+        let expect = quant_c.expected_bytes(self.d);
+        if update.wire_bytes() != expect {
+            bail!(
+                "edge: upload payload is {} bytes but client codec '{}' expects {} \
+                 at d={} — client and edge quantizer specs disagree",
+                update.wire_bytes(),
+                quant_c.name(),
+                expect,
+                self.d
+            );
+        }
+        self.updates += 1;
+        self.update_bytes += update.wire_bytes() as u64;
+        self.hist.record(staleness);
+        self.staleness.record(staleness);
+
+        // w(τ) is applied here, at the ingest point — partials travel
+        // upstream pre-weighted, exactly as the flat server would have
+        // weighted each update.
+        let w = if self.staleness_scaling {
+            1.0 / ((1.0 + staleness as f64).sqrt() as f32)
+        } else {
+            1.0
+        };
+        let quant_c = self.client_codecs[codec].as_ref();
+        sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
+        self.k_filled += 1;
+
+        if self.k_filled < self.buffer_size {
+            return Ok(AggOutcome::Buffered);
+        }
+        self.flush().map(AggOutcome::Forward)
+    }
+
+    /// Encode and emit the current buffer as a partial aggregate,
+    /// resetting the buffer. Called automatically on buffer-full; also
+    /// callable directly to drain a partially filled buffer (e.g. at
+    /// shutdown). Fails on an empty buffer.
+    pub fn flush(&mut self) -> Result<PartialAggregate> {
+        if self.k_filled == 0 {
+            bail!("edge: flush of an empty buffer");
+        }
+        let msg =
+            sharded::quantize(self.partial_codec.as_ref(), &self.buffer, &mut self.rng, &self.pool);
+        vecf::zero(&mut self.buffer);
+        let count = self.k_filled as u32;
+        self.k_filled = 0;
+        let staleness = std::mem::take(&mut self.hist);
+        self.forwarded += 1;
+        self.forwarded_bytes += msg.wire_bytes() as u64;
+        Ok(PartialAggregate { msg, count, staleness })
+    }
+}
+
+impl Aggregator for EdgeAggregator {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn ingest_update(
+        &mut self,
+        update: &QuantizedMsg,
+        staleness: u64,
+        codec: usize,
+    ) -> Result<AggOutcome> {
+        self.ingest_from(update, staleness, codec)
+    }
+
+    /// Fold a child edge's partial into this edge's buffer (deeper
+    /// trees). Edges keep a single partial codec used for both decode
+    /// (from children) and encode (upstream), so `codec` must be 0 —
+    /// a uniform-`Q_p` tree.
+    fn ingest_partial_aggregate(
+        &mut self,
+        partial: &PartialAggregate,
+        codec: usize,
+    ) -> Result<AggOutcome> {
+        if codec != 0 {
+            bail!("edge: unknown partial codec id {codec} (edges hold a single Q_p)");
+        }
+        if partial.msg.d != self.d {
+            bail!(
+                "edge: partial dimension {} != model dimension {}",
+                partial.msg.d,
+                self.d
+            );
+        }
+        let expect = self.partial_codec.expected_bytes(self.d);
+        if partial.msg.wire_bytes() != expect {
+            bail!(
+                "edge: partial payload is {} bytes but partial codec '{}' expects {} \
+                 at d={}",
+                partial.msg.wire_bytes(),
+                self.partial_codec.name(),
+                expect,
+                self.d
+            );
+        }
+        if partial.count == 0 {
+            bail!("edge: partial aggregate with count 0");
+        }
+        self.updates += partial.count as u64;
+        self.update_bytes += partial.msg.wire_bytes() as u64;
+        self.hist.merge(&partial.staleness);
+        self.staleness.merge(&partial.staleness);
+        // weights were applied at the leaf edge: accumulate verbatim
+        sharded::accumulate(
+            self.partial_codec.as_ref(),
+            &partial.msg,
+            1.0,
+            &mut self.buffer,
+            &self.pool,
+        )?;
+        self.k_filled += partial.count as usize;
+        if self.k_filled < self.buffer_size {
+            return Ok(AggOutcome::Buffered);
+        }
+        self.flush().map(AggOutcome::Forward)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(algorithm: &str, k: usize) -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::parse(algorithm).unwrap();
+        c.fl.buffer_size = k;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c
+    }
+
+    fn identity_msg(x: &[f32]) -> QuantizedMsg {
+        let mut rng = Prng::new(0);
+        parse_spec("none").unwrap().quantize(x, &mut rng)
+    }
+
+    #[test]
+    fn edge_buffers_then_forwards_count_weighted_partial() {
+        let pool = ShardPool::sequential();
+        let mut e = EdgeAggregator::new(
+            4, 3, "none", "none", Algorithm::FedBuff, false, pool, 1,
+        )
+        .unwrap();
+        assert!(matches!(e.ingest(&identity_msg(&[3.0, 0.0, 0.0, 0.0]), 0).unwrap(), AggOutcome::Buffered));
+        assert!(matches!(e.ingest(&identity_msg(&[0.0, 3.0, 0.0, 0.0]), 2).unwrap(), AggOutcome::Buffered));
+        assert_eq!(e.pending(), 2);
+        let p = match e.ingest(&identity_msg(&[0.0, 0.0, 3.0, 0.0]), 0).unwrap() {
+            AggOutcome::Forward(p) => p,
+            other => panic!("expected Forward, got {other:?}"),
+        };
+        // the partial is the raw (pre-division) buffer: the sum
+        let decoded = parse_spec("none").unwrap().dequantize(&p.msg).unwrap();
+        assert_eq!(decoded, vec![3.0, 3.0, 3.0, 0.0]);
+        assert_eq!(p.count, 3);
+        assert_eq!(p.staleness.n, 3);
+        assert_eq!(p.staleness.max, 2);
+        assert_eq!(p.staleness.sum, 2);
+        // buffer reset; accounting reflects the emitted partial
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.updates, 3);
+        assert_eq!(e.forwarded, 1);
+        assert_eq!(e.forwarded_bytes, p.wire_bytes() as u64);
+        assert_eq!(e.staleness.n, 3, "lifetime hist survives the flush");
+    }
+
+    #[test]
+    fn edge_applies_staleness_weight_locally() {
+        let pool = ShardPool::sequential();
+        let mut e = EdgeAggregator::new(
+            1, 1, "none", "none", Algorithm::FedBuff, true, pool, 1,
+        )
+        .unwrap();
+        let p = match e.ingest(&identity_msg(&[1.0]), 3).unwrap() {
+            AggOutcome::Forward(p) => p,
+            other => panic!("expected Forward, got {other:?}"),
+        };
+        // w = 1/sqrt(1+3) = 0.5, applied at the edge, not upstream
+        let decoded = parse_spec("none").unwrap().dequantize(&p.msg).unwrap();
+        assert_eq!(decoded, vec![0.5]);
+    }
+
+    #[test]
+    fn root_ingests_partial_and_steps() {
+        let cfg = cfg("fedbuff", 3);
+        let mut root = Server::build(&cfg, vec![0.0; 4], 1).unwrap();
+        let pc = root.register_partial_codec("none").unwrap();
+        assert_eq!(pc, 0);
+        let pool = ShardPool::sequential();
+        let mut e = EdgeAggregator::new(
+            4, 3, "none", "none", Algorithm::FedBuff, false, pool, 1,
+        )
+        .unwrap();
+        for v in [[3.0, 0.0, 0.0, 0.0], [0.0, 3.0, 0.0, 0.0]] {
+            assert!(matches!(e.ingest(&identity_msg(&v), 0).unwrap(), AggOutcome::Buffered));
+        }
+        let p = match e.ingest(&identity_msg(&[0.0, 0.0, 3.0, 0.0]), 0).unwrap() {
+            AggOutcome::Forward(p) => p,
+            other => panic!("expected Forward, got {other:?}"),
+        };
+        // one partial carries K=3 updates: the root steps immediately
+        match root.ingest_partial(&p.msg, p.count, &p.staleness, pc).unwrap() {
+            ServerStep::Stepped(_) => {}
+            other => panic!("expected step, got {other:?}"),
+        }
+        // x += eta_g * (sum / K) — identical to three flat ingests
+        assert_eq!(root.model(), &[1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(root.t(), 1);
+        // staleness accounting merged from the histogram (3 values, 1 upload)
+        assert_eq!(root.staleness_n, 3);
+        assert_eq!(root.comm.uploads, 1);
+    }
+
+    #[test]
+    fn two_level_edges_compose_count_weighted() {
+        let pool = ShardPool::sequential();
+        let mut leaf = EdgeAggregator::new(
+            2, 2, "none", "none", Algorithm::FedBuff, false, pool.clone(), 1,
+        )
+        .unwrap();
+        let mut mid = EdgeAggregator::new(
+            2, 4, "none", "none", Algorithm::FedBuff, false, pool, 2,
+        )
+        .unwrap();
+        // two leaf partials of 2 updates each fill the mid buffer of 4
+        for round in 0..2 {
+            leaf.ingest(&identity_msg(&[1.0, 0.0]), round).unwrap();
+            let p = match leaf.ingest(&identity_msg(&[0.0, 1.0]), round).unwrap() {
+                AggOutcome::Forward(p) => p,
+                other => panic!("expected Forward, got {other:?}"),
+            };
+            let out = mid.ingest_partial_aggregate(&p, 0).unwrap();
+            if round == 0 {
+                assert!(matches!(out, AggOutcome::Buffered));
+                assert_eq!(mid.pending(), 2);
+            } else {
+                let p2 = match out {
+                    AggOutcome::Forward(p2) => p2,
+                    other => panic!("expected Forward, got {other:?}"),
+                };
+                assert_eq!(p2.count, 4);
+                assert_eq!(p2.staleness.n, 4);
+                let decoded = parse_spec("none").unwrap().dequantize(&p2.msg).unwrap();
+                assert_eq!(decoded, vec![2.0, 2.0]);
+            }
+        }
+        assert_eq!(mid.updates, 4);
+    }
+
+    #[test]
+    fn edge_rejects_mismatches_loudly() {
+        let pool = ShardPool::sequential();
+        let mut e = EdgeAggregator::new(
+            8, 2, "none", "qsgd:4", Algorithm::Qafel, false, pool, 1,
+        )
+        .unwrap();
+        let mut rng = Prng::new(5);
+        // wrong wire size for the negotiated codec
+        let full = parse_spec("none").unwrap().quantize(&vec![1.0; 8], &mut rng);
+        let err = e.ingest(&full, 0).unwrap_err().to_string();
+        assert!(err.contains("qsgd:4"), "unhelpful error: {err}");
+        // wrong dimension
+        let qc = parse_spec("qsgd:4").unwrap();
+        let short = qc.quantize(&vec![1.0; 4], &mut rng);
+        assert!(e.ingest(&short, 0).is_err());
+        // unknown codec id
+        let ok = qc.quantize(&vec![1.0; 8], &mut rng);
+        assert!(e.ingest_from(&ok, 0, 9).is_err());
+        // nothing was recorded for the rejected uploads
+        assert_eq!(e.updates, 0);
+        assert_eq!(e.update_bytes, 0);
+        // empty flush is an error, not a zero-count partial
+        assert!(e.flush().is_err());
+        // wrong-size partial from a child is rejected too
+        let bad = PartialAggregate {
+            msg: qc.quantize(&vec![1.0; 8], &mut rng),
+            count: 1,
+            staleness: StalenessHist::default(),
+        };
+        assert!(e.ingest_partial_aggregate(&bad, 0).is_err());
+    }
+
+    #[test]
+    fn edge_registers_tier_presets_like_the_server() {
+        let mut cfg = cfg("qafel", 2);
+        cfg.quant.client = "none".into();
+        cfg.scenario.tiers = vec![
+            crate::config::TierConfig::named("fast"),
+            {
+                let mut t = crate::config::TierConfig::named("slow");
+                t.quant_client = Some("top:0.25".into());
+                t
+            },
+        ];
+        let mut server = Server::new(&cfg, vec![0.0; 16], 1).unwrap();
+        let pool = ShardPool::sequential();
+        let mut edge = EdgeAggregator::new(
+            16, 1, "none", &cfg.quant.client, cfg.fl.algorithm,
+            cfg.fl.staleness_scaling, pool, 1,
+        )
+        .unwrap();
+        let sids = server.register_tier_presets(&cfg).unwrap();
+        let eids = edge.register_tier_presets(&cfg).unwrap();
+        assert_eq!(sids, eids, "tree nodes must agree on the codec registry");
+        assert_eq!(edge.num_client_codecs(), server.num_client_codecs());
+        for i in 0..edge.num_client_codecs() {
+            assert_eq!(edge.client_codec_name(i), server.client_codec_name(i));
+        }
+    }
+
+    #[test]
+    fn trivial_tree_replays_bit_identical_to_flat_server() {
+        // The signature invariant: 1 edge, forward-every-update,
+        // identity partial codec == today's flat server, bit for bit,
+        // at every shard count.
+        let mut base = cfg("qafel", 2);
+        base.quant.client = "qsgd:8".into();
+        base.quant.server = "qsgd:4".into();
+        base.fl.server_momentum = 0.3;
+        base.fl.staleness_scaling = true;
+        let d = 2 * 128 + 19; // ragged tail
+        for shards in [1usize, 4] {
+            let mut cfg = base.clone();
+            cfg.fl.shards = shards;
+            let mut flat = Server::build(&cfg, vec![0.0; d], 7).unwrap();
+            let mut root = Server::build(&cfg, vec![0.0; d], 7).unwrap();
+            let pc = root.register_partial_codec("none").unwrap();
+            let mut edge = EdgeAggregator::new(
+                d, 1, "none", &cfg.quant.client, cfg.fl.algorithm,
+                cfg.fl.staleness_scaling, ShardPool::new(shards), 99,
+            )
+            .unwrap();
+            let qc = parse_spec("qsgd:8").unwrap();
+            let mut rng_a = Prng::new(11);
+            let mut rng_b = Prng::new(11);
+            for round in 0..12u64 {
+                let delta: Vec<f32> =
+                    (0..d).map(|i| ((i as f32) * 0.05 + round as f32).sin()).collect();
+                let msg_a = qc.quantize(&delta, &mut rng_a);
+                let msg_b = qc.quantize(&delta, &mut rng_b);
+                let a = flat.ingest(&msg_a, round % 4).unwrap();
+                let p = match edge.ingest(&msg_b, round % 4).unwrap() {
+                    AggOutcome::Forward(p) => p,
+                    other => panic!("trivial edge must forward, got {other:?}"),
+                };
+                assert_eq!(p.count, 1);
+                let b = root.ingest_partial(&p.msg, p.count, &p.staleness, pc).unwrap();
+                match (a, b) {
+                    (ServerStep::Stepped(ba), ServerStep::Stepped(bb)) => {
+                        assert_eq!(ba.msg.payload, bb.msg.payload, "S={shards} broadcast");
+                        assert_eq!(ba.bytes, bb.bytes);
+                        assert_eq!(ba.t, bb.t);
+                    }
+                    (ServerStep::Buffered, ServerStep::Buffered) => {}
+                    _ => panic!("S={shards}: step/buffer divergence"),
+                }
+            }
+            assert_eq!(flat.model(), root.model(), "S={shards} model");
+            assert_eq!(
+                flat.client_snapshot().as_slice(),
+                root.client_snapshot().as_slice(),
+                "S={shards} hidden state"
+            );
+            assert_eq!(flat.t(), root.t());
+            // staleness accounting survives the tree (mean over the
+            // merged histograms == mean over the flat uploads)
+            assert_eq!(flat.staleness_mean(), root.staleness_mean(), "S={shards}");
+            assert_eq!(flat.staleness_max, root.staleness_max);
+        }
+    }
+
+    #[test]
+    fn root_rejects_bad_partials_loudly() {
+        let cfg = cfg("fedbuff", 2);
+        let mut root = Server::build(&cfg, vec![0.0; 8], 1).unwrap();
+        // no partial codec registered yet
+        let p = identity_msg(&[1.0; 8]);
+        let h = StalenessHist::default();
+        assert!(root.ingest_partial(&p, 1, &h, 0).is_err());
+        let pc = root.register_partial_codec("none").unwrap();
+        // dedup like client codecs
+        assert_eq!(root.register_partial_codec("identity").unwrap(), pc);
+        assert_eq!(root.num_partial_codecs(), 1);
+        assert_eq!(root.partial_codec_name(pc), "none");
+        // zero-count partial is rejected
+        assert!(root.ingest_partial(&p, 0, &h, pc).is_err());
+        // wrong dimension / wrong size fail before touching the buffer
+        let short = identity_msg(&[1.0; 4]);
+        assert!(root.ingest_partial(&short, 1, &h, pc).is_err());
+        let mut trunc = identity_msg(&[1.0; 8]);
+        trunc.payload.pop();
+        assert!(root.ingest_partial(&trunc, 1, &h, pc).is_err());
+        assert_eq!(root.comm.uploads, 0);
+    }
+
+    #[test]
+    fn aggregator_trait_is_object_safe_across_node_types() {
+        let cfg = cfg("fedbuff", 2);
+        let root = Server::build(&cfg, vec![0.0; 4], 1).unwrap();
+        let edge = EdgeAggregator::new(
+            4, 2, "none", "none", Algorithm::FedBuff, false,
+            ShardPool::sequential(), 1,
+        )
+        .unwrap();
+        let mut nodes: Vec<Box<dyn Aggregator>> = vec![Box::new(root), Box::new(edge)];
+        for node in &mut nodes {
+            assert_eq!(node.d(), 4);
+            let out = node.ingest_update(&identity_msg(&[1.0; 4]), 0, 0).unwrap();
+            assert!(matches!(out, AggOutcome::Buffered));
+        }
+    }
+}

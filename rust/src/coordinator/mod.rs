@@ -13,11 +13,18 @@
 //!   **FedBuff** = identity quantizers; **FedAsync** = K = 1;
 //!   **DirectQuant** = broadcast `Q_s(x^{t+1})` with *no* hidden state —
 //!   the error-propagating scheme the hidden state exists to avoid.
+//! * [`aggregator`] — the composable [`aggregator::Aggregator`] seam:
+//!   [`aggregator::EdgeAggregator`] nodes buffer a population slice and
+//!   forward count-weighted quantized partials upstream; the root
+//!   [`server::Server`] ingests them via `ingest_partial`. A trivial
+//!   tree replays bit-identical to the flat server.
 
+pub mod aggregator;
 pub mod client;
 pub mod hidden;
 pub mod server;
 
+pub use aggregator::{AggOutcome, Aggregator, EdgeAggregator, PartialAggregate};
 pub use client::ClientLogic;
 pub use hidden::{CatchUp, UpdateLog};
 pub use server::{Broadcast, Server, ServerStep};

@@ -88,6 +88,13 @@ pub struct Server {
     /// [`Server::register_client_codec`]. A mismatched upload fails
     /// loudly in [`Server::ingest_from`].
     client_codecs: Vec<Box<dyn Quantizer>>,
+    /// Codecs for decoding *partial aggregates* forwarded by edge
+    /// aggregators (the tree-of-leaders path,
+    /// `crate::coordinator::aggregator`). Registered explicitly by
+    /// [`Server::register_partial_codec`]; starts empty — a flat server
+    /// never decodes partials. Specs are parsed raw (no per-algorithm
+    /// resolution): a partial carries already-decoded buffer values.
+    partial_codecs: Vec<Box<dyn Quantizer>>,
     algorithm: Algorithm,
     // --- state ---------------------------------------------------------------
     d: usize,
@@ -111,6 +118,11 @@ pub struct Server {
     /// Staleness histogram data (max observed, sum for mean).
     pub staleness_max: u64,
     pub staleness_sum: u64,
+    /// Number of staleness values behind `staleness_sum`. Equals
+    /// `comm.uploads` on the flat path; a partial aggregate is *one*
+    /// wire upload carrying *count* staleness values, so the mean needs
+    /// its own denominator.
+    pub staleness_n: u64,
 }
 
 impl Server {
@@ -149,6 +161,7 @@ impl Server {
         let quant_c = parse_spec(&client_codec_spec(&cfg.quant.client, cfg.fl.algorithm))?;
         Ok(Server {
             client_codecs: vec![quant_c],
+            partial_codecs: Vec::new(),
             algorithm: cfg.fl.algorithm,
             k_buffer,
             eta_g: cfg.fl.server_lr,
@@ -169,6 +182,7 @@ impl Server {
             comm: CommMetrics::default(),
             staleness_max: 0,
             staleness_sum: 0,
+            staleness_n: 0,
         })
     }
 
@@ -210,12 +224,14 @@ impl Server {
         &self.x
     }
 
-    /// Mean observed staleness so far.
+    /// Mean observed staleness so far — over every client update the
+    /// tree saw (a partial aggregate contributes its whole histogram,
+    /// not one value).
     pub fn staleness_mean(&self) -> f64 {
-        if self.comm.uploads == 0 {
+        if self.staleness_n == 0 {
             0.0
         } else {
-            self.staleness_sum as f64 / self.comm.uploads as f64
+            self.staleness_sum as f64 / self.staleness_n as f64
         }
     }
 
@@ -341,6 +357,7 @@ impl Server {
         self.comm.record_upload(update.wire_bytes());
         self.staleness_sum += staleness;
         self.staleness_max = self.staleness_max.max(staleness);
+        self.staleness_n += 1;
 
         // scale down stale updates by 1/sqrt(1+τ) (Appendix D / Xie et al.)
         let w = if self.staleness_scaling {
@@ -353,6 +370,93 @@ impl Server {
         let quant_c = self.client_codecs[codec].as_ref();
         sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
         self.k_filled += 1;
+
+        if self.k_filled < self.k_buffer {
+            return Ok(ServerStep::Buffered);
+        }
+        self.step().map(ServerStep::Stepped)
+    }
+
+    /// Register a codec for decoding partial aggregates forwarded by
+    /// edge aggregators, returning its id for
+    /// [`Server::ingest_partial`]. The spec is parsed raw (partials
+    /// carry already-decoded buffer values, so per-algorithm client
+    /// resolution does not apply) and deduplicated by name —
+    /// registration order is the wire contract, like client codecs.
+    pub fn register_partial_codec(&mut self, spec: &str) -> Result<usize> {
+        let codec = parse_spec(spec)?;
+        if let Some(i) = self.partial_codecs.iter().position(|c| c.name() == codec.name()) {
+            return Ok(i);
+        }
+        self.partial_codecs.push(codec);
+        Ok(self.partial_codecs.len() - 1)
+    }
+
+    /// Number of registered partial codecs (0 on a flat server).
+    pub fn num_partial_codecs(&self) -> usize {
+        self.partial_codecs.len()
+    }
+
+    /// Spec name of a registered partial codec.
+    pub fn partial_codec_name(&self, codec: usize) -> String {
+        self.partial_codecs[codec].name()
+    }
+
+    /// Ingest a partial aggregate forwarded by an edge aggregator — the
+    /// tree-of-leaders ingest path. `update` is the edge's
+    /// count-weighted buffer encoded with registered partial codec
+    /// `codec`; `count` is how many client updates it folds (the buffer
+    /// fill advances by `count` slots); `staleness` is the edge's
+    /// histogram over those updates, merged into the server's
+    /// accounting. Staleness weights `w(τ)` were already applied at the
+    /// edge, so the partial accumulates with weight exactly 1.0 — this
+    /// is what makes a trivial tree bit-identical to the flat server.
+    ///
+    /// For exact flat equivalence, K should be a multiple of the edge
+    /// buffer size B; an overshooting partial (`k_filled > K`) still
+    /// triggers exactly one step with the configured `1/K` scaling and
+    /// the overshoot is absorbed into that step's buffer.
+    pub fn ingest_partial(
+        &mut self,
+        update: &QuantizedMsg,
+        count: u32,
+        staleness: &crate::scenario::metrics::StalenessHist,
+        codec: usize,
+    ) -> Result<ServerStep> {
+        let quant_p = self
+            .partial_codecs
+            .get(codec)
+            .ok_or_else(|| anyhow::anyhow!("server: unknown partial codec id {codec}"))?;
+        if update.d != self.d {
+            bail!(
+                "server: partial dimension {} != model dimension {}",
+                update.d,
+                self.d
+            );
+        }
+        let expect = quant_p.expected_bytes(self.d);
+        if update.wire_bytes() != expect {
+            bail!(
+                "server: partial payload is {} bytes but partial codec '{}' \
+                 expects {} at d={} — edge and server partial-codec specs \
+                 disagree",
+                update.wire_bytes(),
+                quant_p.name(),
+                expect,
+                self.d
+            );
+        }
+        if count == 0 {
+            bail!("server: partial aggregate with count 0");
+        }
+        self.comm.record_upload(update.wire_bytes());
+        self.staleness_sum += staleness.sum;
+        self.staleness_max = self.staleness_max.max(staleness.max);
+        self.staleness_n += staleness.n;
+
+        let quant_p = self.partial_codecs[codec].as_ref();
+        sharded::accumulate(quant_p, update, 1.0, &mut self.buffer, &self.pool)?;
+        self.k_filled += count as usize;
 
         if self.k_filled < self.k_buffer {
             return Ok(ServerStep::Buffered);
@@ -439,7 +543,9 @@ impl Server {
 
 /// The client-codec spec a server must decode with, per algorithm
 /// (full-precision baselines always upload identity-coded deltas).
-fn client_codec_spec(client_spec: &str, algorithm: Algorithm) -> String {
+/// Shared with [`crate::coordinator::aggregator::EdgeAggregator`] so
+/// every node of an aggregation tree resolves specs identically.
+pub(crate) fn client_codec_spec(client_spec: &str, algorithm: Algorithm) -> String {
     match algorithm {
         Algorithm::Qafel | Algorithm::DirectQuant => client_spec.to_string(),
         Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),

@@ -33,7 +33,10 @@ commands:
   run                                           single simulated run
   scenario calibrate TRACE.csv [--out FILE]     fit tier weights/durations
                                                 from a client trace
-  leader --addr HOST:PORT --workers N           TCP leader
+  leader --addr HOST:PORT --workers N           TCP leader (tree root)
+  leader --upstream HOST:PORT --addr HOST:PORT --workers N
+                                                TCP edge leader (tree node:
+                                                worker upstream, leader down)
   worker --addr HOST:PORT                       TCP worker (quadratic backend)
   info                                          show artifact manifest
   selfcheck                                     PJRT + Pallas cross-checks
@@ -52,6 +55,9 @@ options:
 net options (wire protocol v2, ARCHITECTURE.md; defaults from [net]):
   --addr HOST:PORT   leader listen / worker connect address
   --workers N        leader: workers to wait for
+  --upstream H:PORT  run as an edge leader forwarding partial aggregates
+                     to the root at H:PORT (net.edge_buffer sizes the edge
+                     buffer, net.partial_codec picks Q_p)
   --report-json FILE leader: write the run report (incl. per-worker
                      codec/byte/staleness accounting) as JSON
   --tier NAME        worker: device tier announced in the Hello; leader
@@ -346,6 +352,13 @@ fn cmd_leader(args: &Args) -> Result<()> {
     let addr = args.opt("addr").unwrap_or(cfg.net.addr.as_str()).to_string();
     let workers: usize = args.opt_parse("workers")?.unwrap_or(cfg.net.workers);
     let report_json = args.opt("report-json").map(str::to_string);
+    // --upstream (or net.upstream) turns this process into an edge
+    // leader: a worker of the upstream root, a leader of its own workers
+    let upstream =
+        args.opt("upstream").map(str::to_string).or_else(|| cfg.net.upstream.clone());
+    if let Some(up) = upstream {
+        return cmd_edge_leader(cfg, &up, &addr, workers, report_json);
+    }
     // leader evaluates nothing; it needs x0 of the right dimension (the
     // quadratic branch keeps its backend to report gradient descent)
     let adir = artifacts_dir(args.opt("artifacts").unwrap_or(""));
@@ -398,6 +411,7 @@ fn cmd_leader(args: &Args) -> Result<()> {
                 ("codec", Json::str(ws.codec.clone())),
                 ("uploads", Json::num(ws.uploads as f64)),
                 ("upload_bytes", Json::num(ws.upload_bytes as f64)),
+                ("partials", Json::num(ws.partials as f64)),
                 ("expected_bytes_per_upload", Json::num(expected as f64)),
                 ("broadcast_frames", Json::num(ws.broadcast_frames as f64)),
                 ("broadcast_bytes", Json::num(ws.broadcast_bytes as f64)),
@@ -420,6 +434,77 @@ fn cmd_leader(args: &Args) -> Result<()> {
         std::fs::write(&path, doc.pretty())
             .map_err(|e| anyhow!("writing report {path}: {e}"))?;
         println!("[leader] report written to {path}");
+    }
+    Ok(())
+}
+
+/// Run as an interior tree node: join `upstream` as a v2 worker, serve
+/// `workers` downstream connections on `addr`, forward partial
+/// aggregates (see `net/edge.rs`).
+fn cmd_edge_leader(
+    cfg: Config,
+    upstream: &str,
+    addr: &str,
+    workers: usize,
+    report_json: Option<String>,
+) -> Result<()> {
+    use qafel::net::EdgeLeader;
+    // distinct quantization noise per edge without extra flags: fold the
+    // listen address into the seed (deterministic for a fixed topology)
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let seed = cfg.seeds[0] ^ h;
+    println!("[edge] upstream {upstream}, serving on {addr}, waiting for {workers} workers ...");
+    let report = EdgeLeader::new(cfg, seed).run(upstream, addr, workers)?;
+    println!(
+        "[edge {}] done: {} updates in, {} partials up ({} pending dropped), replica t={}, \
+         codec {}",
+        report.edge_worker_id,
+        report.updates,
+        report.partials,
+        report.pending_at_shutdown,
+        report.replica_t,
+        report.partial_codec
+    );
+    if let Some(path) = report_json {
+        use qafel::util::json::Json;
+        let expected = qafel::quant::parse_spec(&report.partial_codec)?.expected_bytes(report.d);
+        let mut workers_json = Vec::new();
+        for ws in &report.worker_stats {
+            workers_json.push(Json::obj(vec![
+                ("worker_id", Json::num(ws.worker_id as f64)),
+                ("peer", Json::str(ws.peer.clone())),
+                ("protocol", Json::num(ws.protocol as f64)),
+                ("codec_id", Json::num(ws.codec_id as f64)),
+                ("codec", Json::str(ws.codec.clone())),
+                ("uploads", Json::num(ws.uploads as f64)),
+                ("upload_bytes", Json::num(ws.upload_bytes as f64)),
+                ("broadcast_frames", Json::num(ws.broadcast_frames as f64)),
+                ("broadcast_bytes", Json::num(ws.broadcast_bytes as f64)),
+                ("staleness_mean", Json::num(ws.staleness.mean())),
+                ("staleness_max", Json::num(ws.staleness.max as f64)),
+            ]));
+        }
+        let doc = Json::obj(vec![
+            ("edge_worker_id", Json::num(report.edge_worker_id as f64)),
+            ("d", Json::num(report.d as f64)),
+            ("updates", Json::num(report.updates as f64)),
+            ("update_bytes", Json::num(report.update_bytes as f64)),
+            ("partials", Json::num(report.partials as f64)),
+            ("partial_bytes", Json::num(report.partial_bytes as f64)),
+            ("expected_bytes_per_partial", Json::num(expected as f64)),
+            ("pending_at_shutdown", Json::num(report.pending_at_shutdown as f64)),
+            ("replica_t", Json::num(report.replica_t as f64)),
+            ("partial_codec", Json::str(report.partial_codec.clone())),
+            ("staleness_mean", Json::num(report.staleness.mean())),
+            ("staleness_max", Json::num(report.staleness.max as f64)),
+            ("workers", Json::arr(workers_json)),
+        ]);
+        std::fs::write(&path, doc.pretty())
+            .map_err(|e| anyhow!("writing report {path}: {e}"))?;
+        println!("[edge] report written to {path}");
     }
     Ok(())
 }

@@ -1,0 +1,435 @@
+//! The edge-leader process: an interior node of the aggregation tree.
+//!
+//! An edge leader is **simultaneously a v2 worker upstream and a leader
+//! downstream** (ISSUE 6 / ARCHITECTURE.md §Aggregator tree). Upstream
+//! it opens with the same `Hello` any v2 worker sends and receives a
+//! `JoinV2` carrying the model dimension, x^0 and the quantizer specs;
+//! downstream it accepts v2 workers exactly like the root [`super::Leader`]
+//! (per-worker codec negotiation, one reader + one persistent writer
+//! thread per connection, `Arc<[u8]>` broadcast fan-out).
+//!
+//! The node itself is **model-free**: it owns an
+//! [`EdgeAggregator`] — a buffer of size `net.edge_buffer` plus the
+//! `net.partial_codec` `Q_p` — and forwards a count-weighted
+//! [`crate::coordinator::PartialAggregate`] upstream (an `UpdatePartial`
+//! frame, tag 9) every time the buffer fills. Broadcasts are relayed
+//! downstream byte-identically without being decoded; the edge only
+//! tracks the step counter `replica_t` to gap-check the stream and to
+//! timestamp staleness for its own workers' uploads. Staleness is
+//! therefore measured against the edge's replica clock — the same
+//! `t_start`-based convention the flat leader uses, observed one hop
+//! earlier; the histogram travels upstream inside the partial and is
+//! merged into the root's accounting.
+//!
+//! Edge leaders are v2-only downstream: a silent (v1) worker fails the
+//! handshake loudly instead of being served legacy frames.
+
+use super::leader::WorkerStats;
+use super::message::{Message, PROTOCOL_VERSION};
+use super::transport::{frame_bytes, read_msg, read_msg_classified, write_msg, Conn, ReadOutcome};
+use crate::config::Config;
+use crate::coordinator::{AggOutcome, EdgeAggregator};
+use crate::quant::QuantizedMsg;
+use crate::scenario::StalenessHist;
+use crate::util::pool::ShardPool;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Synthetic "worker id" for messages arriving from upstream on the
+/// shared fan-in channel (real downstream ids are 0..n_workers).
+const UPSTREAM: u32 = u32::MAX;
+
+/// Final report of an edge-leader run.
+#[derive(Clone, Debug)]
+pub struct EdgeReport {
+    /// The worker id the upstream leader assigned this edge.
+    pub edge_worker_id: u32,
+    pub d: usize,
+    /// Client updates ingested from downstream workers.
+    pub updates: u64,
+    /// Wire bytes of those updates.
+    pub update_bytes: u64,
+    /// Partial aggregates forwarded upstream.
+    pub partials: u64,
+    /// Wire bytes of those partials (payload, as framed).
+    pub partial_bytes: u64,
+    /// Updates still sitting in the buffer when shutdown arrived; they
+    /// are dropped, exactly like a flat worker's in-flight upload that
+    /// lands after the root's shutdown.
+    pub pending_at_shutdown: usize,
+    /// Final replica step (how far the relayed broadcast stream got).
+    pub replica_t: u64,
+    /// Resolved spec name of `Q_p`.
+    pub partial_codec: String,
+    /// Staleness histogram over every ingested downstream update.
+    pub staleness: StalenessHist,
+    /// Per-downstream-worker accounting (same shape as the root's).
+    pub worker_stats: Vec<WorkerStats>,
+}
+
+/// Edge-leader configuration + run loop.
+pub struct EdgeLeader {
+    cfg: Config,
+    /// Seeds `Q_p`'s quantization noise (`Prng::new(seed)` →
+    /// `"edge-quant"` stream inside [`EdgeAggregator`]).
+    seed: u64,
+}
+
+impl EdgeLeader {
+    pub fn new(cfg: Config, seed: u64) -> EdgeLeader {
+        EdgeLeader { cfg, seed }
+    }
+
+    /// Connect to the upstream leader at `upstream`, serve downstream
+    /// workers on `addr`, and run until the upstream shuts the tree down.
+    pub fn run(&self, upstream: &str, addr: &str, n_workers: usize) -> Result<EdgeReport> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        self.run_on(listener, upstream, n_workers)
+    }
+
+    /// Like [`EdgeLeader::run`] with a pre-bound listener (tests use an
+    /// ephemeral port).
+    pub fn run_on(
+        &self,
+        listener: TcpListener,
+        upstream: &str,
+        n_workers: usize,
+    ) -> Result<EdgeReport> {
+        // --- join upstream as a plain v2 worker -------------------------
+        // The Hello carries no tier/quant_client: the edge never uploads
+        // client-codec frames, only UpdatePartial frames decoded through
+        // the root's partial-codec registry (config-ordered, id 0).
+        let mut up = Conn::connect(upstream)?;
+        up.send(&Message::Hello { version: PROTOCOL_VERSION, tier: None, quant_client: None })
+            .context("sending Hello upstream")?;
+        let (edge_worker_id, d, x0, server_quant, client_lr) = match up
+            .recv()
+            .context("reading join from upstream")?
+        {
+            Some(Message::JoinV2 { worker_id, d, x0, server_quant, client_lr, .. }) => {
+                (worker_id, d as usize, x0, server_quant, client_lr)
+            }
+            Some(Message::Join { .. }) => {
+                bail!("upstream answered with a v1 Join — edge leaders need a v2 root")
+            }
+            other => bail!("expected JoinV2 from upstream, got {other:?}"),
+        };
+
+        // --- the aggregation node --------------------------------------
+        let mut edge = EdgeAggregator::new(
+            d,
+            self.cfg.net.edge_buffer,
+            &self.cfg.net.partial_codec,
+            &self.cfg.quant.client,
+            self.cfg.fl.algorithm,
+            self.cfg.fl.staleness_scaling,
+            ShardPool::new(self.cfg.fl.shards.max(1)),
+            self.seed,
+        )?;
+        // same tier-order registration as the root => same codec ids on
+        // every node of the tree
+        let tiers = self.cfg.resolved_tiers();
+        let tier_codecs = edge.register_tier_presets(&self.cfg)?;
+        let grace = Duration::from_millis(self.cfg.net.v1_grace_ms.max(1));
+
+        // --- accept downstream workers (v2-only) -----------------------
+        let (tx, rx) = mpsc::channel::<(u32, Result<Option<Message>>)>();
+        let mut writers: Vec<mpsc::Sender<Arc<[u8]>>> = Vec::new();
+        let mut writer_handles = Vec::new();
+        let mut reader_handles = Vec::new();
+        let mut stats: Vec<WorkerStats> = Vec::new();
+        for worker_id in 0..n_workers as u32 {
+            let (stream, peer) = listener.accept().context("accepting worker")?;
+            stream.set_nodelay(true).ok();
+            let peer = peer.to_string();
+            stream
+                .set_read_timeout(Some(grace))
+                .with_context(|| format!("worker {worker_id} ({peer}): handshake timeout"))?;
+            let mut reader = stream.try_clone().context("cloning tcp stream")?;
+            let mut writer = stream;
+            let hello = read_msg(&mut reader)
+                .with_context(|| {
+                    format!(
+                        "reading Hello from worker {worker_id} ({peer}) within {}ms — \
+                         edge leaders are v2-only (no silent v1 joins)",
+                        grace.as_millis()
+                    )
+                })?
+                .ok_or_else(|| {
+                    anyhow!("worker {worker_id} ({peer}) disconnected during handshake")
+                })?;
+            let (version, tier, quant_client) = match hello {
+                Message::Hello { version, tier, quant_client } => (version, tier, quant_client),
+                other => bail!("worker {worker_id} ({peer}): expected Hello, got {other:?}"),
+            };
+            let version = version.min(PROTOCOL_VERSION);
+            // per-worker codec: explicit override > tier preset > default
+            let codec_id = if let Some(spec) = quant_client {
+                edge.register_client_codec(&spec).with_context(|| {
+                    format!("worker {worker_id} ({peer}): bad quant_client '{spec}'")
+                })?
+            } else if let Some(name) = tier {
+                match tiers.iter().position(|t| t.name == name) {
+                    Some(i) => tier_codecs[i],
+                    None => bail!(
+                        "worker {worker_id} ({peer}): unknown tier '{name}' (known: {})",
+                        tiers.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(", ")
+                    ),
+                }
+            } else {
+                0
+            };
+            // relay the upstream join material: same x^0, same server
+            // codec, same client lr everywhere in the tree
+            write_msg(
+                &mut writer,
+                &Message::JoinV2 {
+                    version,
+                    worker_id,
+                    d: d as u32,
+                    x0: x0.clone(),
+                    client_quant: edge.client_codec_name(codec_id),
+                    server_quant: server_quant.clone(),
+                    client_lr,
+                    codec_id: codec_id as u32,
+                },
+            )
+            .with_context(|| format!("sending JoinV2 to worker {worker_id} ({peer})"))?;
+            reader
+                .set_read_timeout(None)
+                .with_context(|| format!("worker {worker_id} ({peer}): clearing deadline"))?;
+
+            let txc = tx.clone();
+            reader_handles.push(std::thread::spawn(move || {
+                loop {
+                    match read_msg_classified(&mut reader) {
+                        ReadOutcome::Msg(msg) => {
+                            if txc.send((worker_id, Ok(Some(msg)))).is_err() {
+                                break;
+                            }
+                        }
+                        ReadOutcome::Disconnected(_) => {
+                            let _ = txc.send((worker_id, Ok(None)));
+                            break;
+                        }
+                        ReadOutcome::BadFrame(e) => {
+                            let _ = txc.send((worker_id, Err(e)));
+                            break;
+                        }
+                    }
+                }
+            }));
+            let (wtx, wrx) = mpsc::channel::<Arc<[u8]>>();
+            writer_handles.push(std::thread::spawn(move || {
+                let mut frames = 0u64;
+                let mut bytes = 0u64;
+                for frame in wrx {
+                    if writer.write_all(&frame).is_err() {
+                        break;
+                    }
+                    frames += 1;
+                    bytes += frame.len() as u64;
+                }
+                (frames, bytes)
+            }));
+            writers.push(wtx);
+            stats.push(WorkerStats {
+                worker_id,
+                peer,
+                protocol: version,
+                codec_id,
+                codec: edge.client_codec_name(codec_id),
+                uploads: 0,
+                upload_bytes: 0,
+                partials: 0,
+                broadcast_frames: 0,
+                broadcast_bytes: 0,
+                staleness: StalenessHist::default(),
+            });
+        }
+
+        // upstream reader: broadcasts/shutdown arrive on the same fan-in
+        // channel under the sentinel id
+        let mut up_reader = up.reader.try_clone().context("cloning upstream stream")?;
+        let up_tx = tx.clone();
+        let up_handle = std::thread::spawn(move || {
+            loop {
+                match read_msg_classified(&mut up_reader) {
+                    ReadOutcome::Msg(msg) => {
+                        // exit on Shutdown (as the flat worker's replica
+                        // thread does) so this clone of the upstream
+                        // socket closes and the root sees our EOF after
+                        // the Bye — otherwise neither side ever closes
+                        let stop = matches!(msg, Message::Shutdown);
+                        if up_tx.send((UPSTREAM, Ok(Some(msg)))).is_err() || stop {
+                            break;
+                        }
+                    }
+                    ReadOutcome::Disconnected(_) => {
+                        let _ = up_tx.send((UPSTREAM, Ok(None)));
+                        break;
+                    }
+                    ReadOutcome::BadFrame(e) => {
+                        let _ = up_tx.send((UPSTREAM, Err(e)));
+                        break;
+                    }
+                }
+            }
+        });
+        drop(tx);
+
+        // --- main loop -------------------------------------------------
+        let mut replica_t = 0u64;
+        let mut live = n_workers;
+        let mut shutdown_relayed = false;
+        while live > 0 {
+            let (from, incoming) = rx.recv().map_err(|_| anyhow!("all peers gone"))?;
+            let msg = match incoming {
+                Ok(Some(m)) => m,
+                Ok(None) => {
+                    if from == UPSTREAM {
+                        if shutdown_relayed {
+                            continue; // root closed after shutdown: normal
+                        }
+                        bail!("upstream leader disconnected mid-run");
+                    }
+                    live -= 1;
+                    continue;
+                }
+                Err(e) => {
+                    if from == UPSTREAM {
+                        return Err(e.context("reading from upstream leader"));
+                    }
+                    if shutdown_relayed {
+                        live -= 1;
+                        continue;
+                    }
+                    return Err(e.context(format!(
+                        "reading from worker {from} ({})",
+                        stats[from as usize].peer
+                    )));
+                }
+            };
+            if from == UPSTREAM {
+                match msg {
+                    Message::Broadcast { t, absolute, payload } => {
+                        if t != replica_t + 1 {
+                            bail!("edge {edge_worker_id}: broadcast gap {replica_t} -> {t}");
+                        }
+                        replica_t = t;
+                        // relay byte-identically (same deterministic
+                        // encoding the root framed), shared across all
+                        // downstream writer queues
+                        let frame: Arc<[u8]> =
+                            frame_bytes(&Message::Broadcast { t, absolute, payload })?.into();
+                        for w in &writers {
+                            let _ = w.send(frame.clone());
+                        }
+                    }
+                    Message::Shutdown => {
+                        let frame: Arc<[u8]> = frame_bytes(&Message::Shutdown)?.into();
+                        for w in &writers {
+                            let _ = w.send(frame.clone());
+                        }
+                        shutdown_relayed = true;
+                    }
+                    other => bail!("edge {edge_worker_id}: unexpected upstream {other:?}"),
+                }
+                continue;
+            }
+            // downstream traffic
+            let wid = from as usize;
+            let (t_start, codec_id, payload) = match msg {
+                Message::UpdateV2 { t_start, codec_id, payload, .. } => {
+                    (t_start, codec_id as usize, payload)
+                }
+                Message::Bye { worker_id: wid2, uploads } => {
+                    tracing_log(&format!("edge: worker {wid2} done ({uploads} uploads)"));
+                    continue;
+                }
+                Message::Update { .. } => {
+                    bail!("worker {from}: v1 Update frame — edge leaders are v2-only")
+                }
+                other => {
+                    tracing_log(&format!("edge: unexpected message from {from}: {other:?}"));
+                    continue;
+                }
+            };
+            if shutdown_relayed {
+                continue; // late update after shutdown: drop
+            }
+            if codec_id != stats[wid].codec_id {
+                bail!(
+                    "worker {from} ({}): upload tagged codec id {codec_id}, but this \
+                     connection negotiated codec id {} ('{}')",
+                    stats[wid].peer,
+                    stats[wid].codec_id,
+                    stats[wid].codec
+                );
+            }
+            let qmsg = QuantizedMsg { payload, d };
+            let wire = qmsg.wire_bytes();
+            let staleness = replica_t.saturating_sub(t_start);
+            let outcome = edge.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
+                format!(
+                    "ingesting upload from worker {from} ({}, codec '{}')",
+                    stats[wid].peer,
+                    edge.client_codec_name(codec_id)
+                )
+            })?;
+            stats[wid].uploads += 1;
+            stats[wid].upload_bytes += wire as u64;
+            stats[wid].staleness.record(staleness);
+            match outcome {
+                AggOutcome::Buffered => {}
+                AggOutcome::Forward(p) => {
+                    up.send(&Message::update_partial_from(edge_worker_id, 0, &p))
+                        .context("forwarding partial aggregate upstream")?;
+                }
+                AggOutcome::Stepped(_) => {
+                    bail!("internal: edge {edge_worker_id} stepped (edges never step)")
+                }
+            }
+        }
+
+        // goodbye upstream (best effort; root may already be closing),
+        // then drain: close the outbound queues, join writers + readers
+        let _ = up.send(&Message::Bye { worker_id: edge_worker_id, uploads: edge.forwarded });
+        drop(up);
+        drop(writers);
+        for (i, h) in writer_handles.into_iter().enumerate() {
+            if let Ok((frames, bytes)) = h.join() {
+                stats[i].broadcast_frames = frames;
+                stats[i].broadcast_bytes = bytes;
+            }
+        }
+        for h in reader_handles {
+            let _ = h.join();
+        }
+        let _ = up_handle.join();
+
+        Ok(EdgeReport {
+            edge_worker_id,
+            d,
+            updates: edge.updates,
+            update_bytes: edge.update_bytes,
+            partials: edge.forwarded,
+            partial_bytes: edge.forwarded_bytes,
+            pending_at_shutdown: edge.pending(),
+            replica_t,
+            partial_codec: edge.partial_codec_name(),
+            staleness: edge.staleness.clone(),
+            worker_stats: stats,
+        })
+    }
+}
+
+fn tracing_log(msg: &str) {
+    if std::env::var("QAFEL_NET_LOG").is_ok() {
+        eprintln!("{msg}");
+    }
+}

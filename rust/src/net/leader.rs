@@ -53,6 +53,10 @@ pub struct WorkerStats {
     /// Sum of the ingested upload payload bytes, as counted off the
     /// wire frames (not derived from the codec formula).
     pub upload_bytes: u64,
+    /// Of `uploads`, how many were `UpdatePartial` frames from a
+    /// downstream edge leader (0 for plain workers). When non-zero,
+    /// `codec` is the partial codec `Q_p` the frames were decoded with.
+    pub partials: u64,
     /// Frames this worker's writer thread actually wrote (broadcasts +
     /// the shutdown frame; the join frame is written before the writer
     /// thread starts).
@@ -145,6 +149,10 @@ impl Leader {
         // run of the same config.
         let tiers = self.cfg.resolved_tiers();
         let tier_codecs = server.register_tier_presets(&self.cfg)?;
+        // Partial-aggregate codec (leader-to-leader v2 frames): registered
+        // up front from config so edges and root agree on registry id 0 —
+        // registration order is the wire contract, as for client codecs.
+        server.register_partial_codec(&self.cfg.net.partial_codec)?;
         let grace = Duration::from_millis(self.cfg.net.v1_grace_ms.max(1));
 
         // accept all workers: negotiate the protocol, send the join
@@ -316,6 +324,7 @@ impl Leader {
                 codec: server.client_codec_name(codec_id),
                 uploads: 0,
                 upload_bytes: 0,
+                partials: 0,
                 broadcast_frames: 0,
                 broadcast_bytes: 0,
                 staleness: StalenessHist::default(),
@@ -351,12 +360,34 @@ impl Leader {
                     )));
                 }
             };
-            // normalize v1/v2 uploads into one registry-routed ingest
-            let (t_start, codec_id, payload) = match msg {
-                Message::Update { t_start, payload, .. } => (t_start, 0usize, payload),
-                Message::UpdateV2 { t_start, codec_id, payload, .. } => {
-                    (t_start, codec_id as usize, payload)
+            // normalize v1/v2 uploads and edge partials into one
+            // registry-routed ingest
+            enum Inbound {
+                Update { t_start: u64, codec_id: usize, payload: Vec<u8> },
+                Partial { codec_id: usize, count: u32, hist: StalenessHist, payload: Vec<u8> },
+            }
+            let inbound = match msg {
+                Message::Update { t_start, payload, .. } => {
+                    Inbound::Update { t_start, codec_id: 0, payload }
                 }
+                Message::UpdateV2 { t_start, codec_id, payload, .. } => {
+                    Inbound::Update { t_start, codec_id: codec_id as usize, payload }
+                }
+                Message::UpdatePartial {
+                    codec_id,
+                    count,
+                    stale_counts,
+                    stale_sum,
+                    stale_max,
+                    stale_n,
+                    payload,
+                    ..
+                } => Inbound::Partial {
+                    codec_id: codec_id as usize,
+                    count,
+                    hist: StalenessHist::from_parts(stale_counts, stale_sum, stale_max, stale_n),
+                    payload,
+                },
                 Message::Bye { worker_id: wid2, uploads } => {
                     byes += 1;
                     tracing_log(&format!("leader: worker {wid2} done ({uploads} uploads)"));
@@ -372,41 +403,71 @@ impl Leader {
             if shutdown_sent {
                 continue; // late update after shutdown: drop
             }
-            // the tag must be the codec this connection negotiated at
-            // join: two registered codecs can share a wire size at some
-            // d, so accepting a mismatched (even registered) id could
-            // silently mis-decode into the aggregation buffer — and
-            // per-worker accounting is keyed by the negotiated codec
-            if codec_id != stats[wid].codec_id {
-                bail!(
-                    "worker {worker_id} ({}): upload tagged codec id {codec_id}, but this \
-                     connection negotiated codec id {} ('{}')",
-                    stats[wid].peer,
-                    stats[wid].codec_id,
-                    stats[wid].codec
-                );
-            }
-            let qmsg = QuantizedMsg { payload, d };
-            let wire = qmsg.wire_bytes();
-            let staleness = server.t().saturating_sub(t_start);
-            if let Some(tr) = trace.as_mut() {
-                tr.updates.push(TraceUpdate {
-                    worker_id,
-                    codec: codec_id,
-                    staleness,
-                    payload: qmsg.payload.clone(),
-                });
-            }
-            let step = server.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
-                format!(
-                    "ingesting upload from worker {worker_id} ({}, codec '{}')",
-                    stats[wid].peer,
-                    server.client_codec_name(codec_id)
-                )
-            })?;
-            stats[wid].uploads += 1;
-            stats[wid].upload_bytes += wire as u64;
-            stats[wid].staleness.record(staleness);
+            let step = match inbound {
+                Inbound::Update { t_start, codec_id, payload } => {
+                    // the tag must be the codec this connection negotiated
+                    // at join: two registered codecs can share a wire size
+                    // at some d, so accepting a mismatched (even
+                    // registered) id could silently mis-decode into the
+                    // aggregation buffer — and per-worker accounting is
+                    // keyed by the negotiated codec
+                    if codec_id != stats[wid].codec_id {
+                        bail!(
+                            "worker {worker_id} ({}): upload tagged codec id {codec_id}, but \
+                             this connection negotiated codec id {} ('{}')",
+                            stats[wid].peer,
+                            stats[wid].codec_id,
+                            stats[wid].codec
+                        );
+                    }
+                    let qmsg = QuantizedMsg { payload, d };
+                    let wire = qmsg.wire_bytes();
+                    let staleness = server.t().saturating_sub(t_start);
+                    if let Some(tr) = trace.as_mut() {
+                        tr.updates.push(TraceUpdate {
+                            worker_id,
+                            codec: codec_id,
+                            staleness,
+                            payload: qmsg.payload.clone(),
+                        });
+                    }
+                    let step =
+                        server.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
+                            format!(
+                                "ingesting upload from worker {worker_id} ({}, codec '{}')",
+                                stats[wid].peer,
+                                server.client_codec_name(codec_id)
+                            )
+                        })?;
+                    stats[wid].uploads += 1;
+                    stats[wid].upload_bytes += wire as u64;
+                    stats[wid].staleness.record(staleness);
+                    step
+                }
+                Inbound::Partial { codec_id, count, hist, payload } => {
+                    // an edge leader forwarding its buffer: staleness was
+                    // weighted downstream, the histogram travels for
+                    // accounting and is merged here (not recorded in the
+                    // per-update trace — partials replay through
+                    // `ingest_partial`, not `ingest_from`)
+                    let qmsg = QuantizedMsg { payload, d };
+                    let wire = qmsg.wire_bytes();
+                    let step = server
+                        .ingest_partial(&qmsg, count, &hist, codec_id)
+                        .with_context(|| {
+                            format!(
+                                "ingesting partial aggregate from edge {worker_id} ({})",
+                                stats[wid].peer
+                            )
+                        })?;
+                    stats[wid].uploads += 1;
+                    stats[wid].upload_bytes += wire as u64;
+                    stats[wid].partials += 1;
+                    stats[wid].codec = server.partial_codec_name(codec_id);
+                    stats[wid].staleness.merge(&hist);
+                    step
+                }
+            };
 
             if let ServerStep::Stepped(b) = step {
                 if let Some(tr) = trace.as_mut() {

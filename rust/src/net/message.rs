@@ -93,6 +93,24 @@ pub enum Message {
         codec_id: u32,
         payload: Vec<u8>,
     },
+    /// edge leader -> upstream leader, v2: a count-weighted partial
+    /// aggregate (the tree-of-leaders upload,
+    /// [`crate::coordinator::PartialAggregate`] on the wire). The
+    /// payload is the edge's buffer encoded with the partial codec at
+    /// registry id `codec_id` on the receiver; `count` is how many
+    /// client updates it folds; the `stale_*` fields are the serialized
+    /// staleness histogram over those updates (weights were already
+    /// applied at the edge).
+    UpdatePartial {
+        worker_id: u32,
+        codec_id: u32,
+        count: u32,
+        stale_counts: Vec<u64>,
+        stale_sum: u64,
+        stale_max: u64,
+        stale_n: u64,
+        payload: Vec<u8>,
+    },
 }
 
 const TAG_JOIN: u8 = 1;
@@ -103,6 +121,7 @@ const TAG_BYE: u8 = 5;
 const TAG_HELLO: u8 = 6;
 const TAG_JOIN2: u8 = 7;
 const TAG_UPDATE2: u8 = 8;
+const TAG_UPDATE_PARTIAL: u8 = 9;
 
 struct Writer {
     buf: Vec<u8>,
@@ -141,6 +160,12 @@ impl Writer {
         }
     }
     fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn u64s(&mut self, v: &[u64]) {
         self.u32(v.len() as u32);
         for x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
@@ -195,6 +220,11 @@ impl<'a> Reader<'a> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
     }
     fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
@@ -290,6 +320,27 @@ impl Message {
                 w.bytes(payload);
                 w.buf
             }
+            Message::UpdatePartial {
+                worker_id,
+                codec_id,
+                count,
+                stale_counts,
+                stale_sum,
+                stale_max,
+                stale_n,
+                payload,
+            } => {
+                let mut w = Writer::new(TAG_UPDATE_PARTIAL);
+                w.u32(*worker_id);
+                w.u32(*codec_id);
+                w.u32(*count);
+                w.u64s(stale_counts);
+                w.u64(*stale_sum);
+                w.u64(*stale_max);
+                w.u64(*stale_n);
+                w.bytes(payload);
+                w.buf
+            }
         }
     }
 
@@ -341,6 +392,16 @@ impl Message {
                 codec_id: r.u32()?,
                 payload: r.bytes()?,
             },
+            TAG_UPDATE_PARTIAL => Message::UpdatePartial {
+                worker_id: r.u32()?,
+                codec_id: r.u32()?,
+                count: r.u32()?,
+                stale_counts: r.u64s()?,
+                stale_sum: r.u64()?,
+                stale_max: r.u64()?,
+                stale_n: r.u64()?,
+                payload: r.bytes()?,
+            },
             tag => bail!("unknown message tag {tag}"),
         };
         r.done()?;
@@ -374,6 +435,25 @@ impl Message {
             train_loss,
             codec_id,
             payload: msg.payload.clone(),
+        }
+    }
+
+    /// Wrap a partial aggregate for an edge-leader upload, serializing
+    /// its staleness histogram field by field.
+    pub fn update_partial_from(
+        worker_id: u32,
+        codec_id: u32,
+        partial: &crate::coordinator::PartialAggregate,
+    ) -> Message {
+        Message::UpdatePartial {
+            worker_id,
+            codec_id,
+            count: partial.count,
+            stale_counts: partial.staleness.counts.clone(),
+            stale_sum: partial.staleness.sum,
+            stale_max: partial.staleness.max,
+            stale_n: partial.staleness.n,
+            payload: partial.msg.payload.clone(),
         }
     }
 }
@@ -437,6 +517,26 @@ mod tests {
                 trip: 0,
                 train_loss: 0.0,
                 codec_id: 0,
+                payload: vec![],
+            },
+            Message::UpdatePartial {
+                worker_id: 6,
+                codec_id: 1,
+                count: 4,
+                stale_counts: vec![2, 1, 1],
+                stale_sum: 5,
+                stale_max: 3,
+                stale_n: 4,
+                payload: vec![7, 0, 255, 1],
+            },
+            Message::UpdatePartial {
+                worker_id: 0,
+                codec_id: 0,
+                count: 0,
+                stale_counts: vec![],
+                stale_sum: 0,
+                stale_max: 0,
+                stale_n: 0,
                 payload: vec![],
             },
         ]
@@ -603,6 +703,43 @@ mod tests {
             Message::UpdateV2 { codec_id, payload, .. } => {
                 assert_eq!(codec_id, 7);
                 assert_eq!(payload, vec![1, 2, 3]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_aggregate_survives_the_wire() {
+        use crate::coordinator::PartialAggregate;
+        use crate::scenario::metrics::StalenessHist;
+        let mut hist = StalenessHist::default();
+        for s in [0u64, 2, 2, 7] {
+            hist.record(s);
+        }
+        let partial = PartialAggregate {
+            msg: QuantizedMsg { payload: vec![9, 8, 7, 6], d: 1 },
+            count: 4,
+            staleness: hist.clone(),
+        };
+        let frame = Message::update_partial_from(11, 1, &partial);
+        let decoded = Message::decode(&frame.encode()).unwrap();
+        match decoded {
+            Message::UpdatePartial {
+                worker_id,
+                codec_id,
+                count,
+                stale_counts,
+                stale_sum,
+                stale_max,
+                stale_n,
+                payload,
+            } => {
+                assert_eq!((worker_id, codec_id, count), (11, 1, 4));
+                assert_eq!(payload, vec![9, 8, 7, 6]);
+                // the histogram reassembles exactly on the far side
+                let rebuilt =
+                    StalenessHist::from_parts(stale_counts, stale_sum, stale_max, stale_n);
+                assert_eq!(rebuilt, hist);
             }
             other => panic!("unexpected {other:?}"),
         }

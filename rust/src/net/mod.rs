@@ -18,6 +18,16 @@
 //! uploads) are detected by their initial silence and served the legacy
 //! frames bit-identically.
 //!
+//! **Aggregation trees** (ISSUE 6): an [`edge::EdgeLeader`] is a v2
+//! worker upstream and a leader downstream — it buffers its workers'
+//! uploads in an [`crate::coordinator::EdgeAggregator`] and forwards
+//! count-weighted quantized partials as `UpdatePartial` frames (tag 9),
+//! which the root decodes through its partial-codec registry and folds
+//! in via [`crate::coordinator::Server::ingest_partial`]. Broadcasts
+//! are relayed down the tree byte-identically; a trivial tree (one
+//! edge, `net.edge_buffer = 1`, identity `net.partial_codec`) replays
+//! bit-identical to the flat topology.
+//!
 //! No `tokio` offline: blocking I/O with one reader thread and one
 //! writer thread per connection + an mpsc fan-in to the leader loop —
 //! the standard thread-per-connection design, adequate for the tens of
@@ -25,11 +35,13 @@
 //! and fanned out through the per-worker writer queues, so one slow
 //! worker cannot stall the step loop.
 
+pub mod edge;
 pub mod leader;
 pub mod message;
 pub mod transport;
 pub mod worker;
 
+pub use edge::{EdgeLeader, EdgeReport};
 pub use leader::{Leader, LeaderReport, LeaderTrace, TraceUpdate, WorkerStats};
 pub use message::{Message, PROTOCOL_VERSION};
 pub use worker::{Worker, WorkerReport};

@@ -99,6 +99,13 @@ pub struct PjrtBackend {
     scratch: RefCell<Scratch>,
 }
 
+/// Fixed reduction block (in eval batches) shared by the PJRT
+/// `evaluate` and `evaluate_pooled`: per-batch partials are summed per
+/// block and the block sums are reduced in block order, so the pooled
+/// and sequential evals are bit-identical for every pool size (same
+/// contract as [`EVAL_BLOCK`] for the quadratic backend).
+const EVAL_BATCH_BLOCK: usize = 8;
+
 impl PjrtBackend {
     /// Build from a loaded engine + data config. `master_seed` drives all
     /// batch sampling (use the experiment seed).
@@ -160,6 +167,50 @@ impl PjrtBackend {
     pub fn partition(&self) -> &Partition {
         &self.partition
     }
+
+    /// One `(loss, correct, count)` partial per eval batch. The PJRT
+    /// executions stay on the caller's thread: the engine lives behind
+    /// an `Rc` (its execution context is not `Send`), and each
+    /// executable already saturates cores internally.
+    fn eval_partials(&self, params: &[f32]) -> Result<Vec<(f64, f64, f64)>> {
+        let mut partials = Vec::with_capacity(self.eval_batches.len());
+        for b in &self.eval_batches {
+            let (l, c, n) = self.engine.eval_step(params, &b.x, &b.y, &b.mask)?;
+            partials.push((l as f64, c as f64, n as f64));
+        }
+        Ok(partials)
+    }
+
+    /// Sum one block of per-batch partials sequentially.
+    fn eval_batch_block(partials: &[(f64, f64, f64)]) -> (f64, f64, f64) {
+        let (mut l, mut c, mut n) = (0.0f64, 0.0f64, 0.0f64);
+        for &(pl, pc, pn) in partials {
+            l += pl;
+            c += pc;
+            n += pn;
+        }
+        (l, c, n)
+    }
+
+    /// The bit-identity reference reduction: block sums in block order.
+    fn eval_blocked_reduce(partials: &[(f64, f64, f64)]) -> (f64, f64, f64) {
+        let (mut l, mut c, mut n) = (0.0f64, 0.0f64, 0.0f64);
+        for block in partials.chunks(EVAL_BATCH_BLOCK) {
+            let (bl, bc, bn) = Self::eval_batch_block(block);
+            l += bl;
+            c += bc;
+            n += bn;
+        }
+        (l, c, n)
+    }
+
+    fn finalize_eval(loss_sum: f64, correct: f64, count: f64) -> EvalOutput {
+        EvalOutput {
+            loss: loss_sum / count.max(1.0),
+            accuracy: correct / count.max(1.0),
+            grad_norm_sq: None,
+        }
+    }
 }
 
 impl Backend for PjrtBackend {
@@ -194,23 +245,56 @@ impl Backend for PjrtBackend {
     }
 
     fn evaluate(&self, params: &[f32]) -> Result<EvalOutput> {
-        let (mut loss_sum, mut correct, mut count) = (0.0f64, 0.0f64, 0.0f64);
-        for b in &self.eval_batches {
-            let (l, c, n) = self.engine.eval_step(params, &b.x, &b.y, &b.mask)?;
-            loss_sum += l as f64;
-            correct += c as f64;
-            count += n as f64;
-        }
-        Ok(EvalOutput {
-            loss: loss_sum / count.max(1.0),
-            accuracy: correct / count.max(1.0),
-            grad_norm_sq: None,
-        })
+        let partials = self.eval_partials(params)?;
+        let (l, c, n) = Self::eval_blocked_reduce(&partials);
+        Ok(Self::finalize_eval(l, c, n))
+    }
+
+    fn evaluate_pooled(&self, params: &[f32], pool: &ShardPool) -> Result<EvalOutput> {
+        // the per-batch partials cannot move off-thread (see
+        // `eval_partials`); the pool takes the blocked f64 reduction,
+        // reduced in block order — bitwise equal to `evaluate`
+        let partials = self.eval_partials(params)?;
+        let (l, c, n) = pooled_batch_reduce(&partials, pool);
+        Ok(Self::finalize_eval(l, c, n))
     }
 
     fn num_train_users(&self) -> usize {
         self.partition.train.len()
     }
+}
+
+/// Pool-sharded version of [`PjrtBackend::eval_blocked_reduce`]: block
+/// sums computed in parallel, reduced in block order — bitwise equal to
+/// the sequential reference for every pool size.
+fn pooled_batch_reduce(partials: &[(f64, f64, f64)], pool: &ShardPool) -> (f64, f64, f64) {
+    let n_blocks = partials.len().div_ceil(EVAL_BATCH_BLOCK);
+    if pool.shards() <= 1 || n_blocks < 2 {
+        return PjrtBackend::eval_blocked_reduce(partials);
+    }
+    let per_task = n_blocks.div_ceil(pool.shards());
+    let mut sums = vec![(0.0f64, 0.0f64, 0.0f64); n_blocks];
+    let tasks: Vec<Task<'_>> = sums
+        .chunks_mut(per_task)
+        .enumerate()
+        .map(|(t, chunk)| {
+            Box::new(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    let lo = (t * per_task + j) * EVAL_BATCH_BLOCK;
+                    let hi = (lo + EVAL_BATCH_BLOCK).min(partials.len());
+                    *slot = PjrtBackend::eval_batch_block(&partials[lo..hi]);
+                }
+            }) as Task<'_>
+        })
+        .collect();
+    pool.run(tasks);
+    let (mut l, mut c, mut n) = (0.0f64, 0.0f64, 0.0f64);
+    for &(bl, bc, bn) in &sums {
+        l += bl;
+        c += bc;
+        n += bn;
+    }
+    (l, c, n)
 }
 
 // ---------------------------------------------------------------------------
@@ -478,6 +562,27 @@ mod tests {
         // the public reducers share the same blocked reduction
         assert_eq!(seq.grad_norm_sq.unwrap().to_bits(), b.grad_norm_sq(&x).to_bits());
         assert_eq!(seq.loss.to_bits(), b.suboptimality(&x).to_bits());
+    }
+
+    #[test]
+    fn pjrt_batch_reduce_is_bit_identical_for_every_pool_size() {
+        // the PJRT eval's reduction (no engine needed: it operates on
+        // plain per-batch partials) must match the sequential blocked
+        // reference bitwise, including ragged tails and per_task splits
+        let mut rng = Prng::new(9).stream("reduce-test");
+        for len in [1usize, 7, 8, 9, 37, 3 * EVAL_BATCH_BLOCK] {
+            let partials: Vec<(f64, f64, f64)> = (0..len)
+                .map(|_| (rng.f32() as f64, rng.f32() as f64, (rng.f32() * 64.0 + 1.0) as f64))
+                .collect();
+            let seq = PjrtBackend::eval_blocked_reduce(&partials);
+            for shards in [1usize, 2, 3, 8] {
+                let pool = ShardPool::new(shards);
+                let pooled = pooled_batch_reduce(&partials, &pool);
+                assert_eq!(seq.0.to_bits(), pooled.0.to_bits(), "len={len} S={shards} loss");
+                assert_eq!(seq.1.to_bits(), pooled.1.to_bits(), "len={len} S={shards} correct");
+                assert_eq!(seq.2.to_bits(), pooled.2.to_bits(), "len={len} S={shards} count");
+            }
+        }
     }
 
     #[test]

@@ -56,6 +56,28 @@ impl StalenessHist {
         self.n += 1;
     }
 
+    /// Rebuild a histogram from its serialized parts (the wire form of
+    /// a partial-aggregate frame carries exactly these four fields).
+    pub fn from_parts(counts: Vec<u64>, sum: u64, max: u64, n: u64) -> StalenessHist {
+        StalenessHist { counts, sum, max, n }
+    }
+
+    /// Fold another histogram into this one — how per-edge staleness
+    /// summaries merge up an aggregation tree. Exact: bucket counts,
+    /// sum, max and n all add, so the merged mean equals the mean over
+    /// the union of the recorded values.
+    pub fn merge(&mut self, other: &StalenessHist) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.n += other.n;
+    }
+
     /// Exact mean of the recorded values.
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
@@ -115,11 +137,30 @@ pub struct TierMetrics {
     pub staleness: StalenessHist,
 }
 
+/// Counters for one edge aggregator of the tree (empty on flat runs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EdgeMetrics {
+    pub edge_id: usize,
+    /// Client updates this edge ingested.
+    pub updates: u64,
+    /// Wire bytes of those uploads as received at the edge.
+    pub update_bytes: u64,
+    /// Partial aggregates this edge forwarded upstream.
+    pub partials: u64,
+    /// Wire bytes of the forwarded partials.
+    pub partial_bytes: u64,
+    /// Staleness over every update ingested at this edge.
+    pub staleness: StalenessHist,
+}
+
 /// All scenario-level metrics for one run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ScenarioMetrics {
     /// One entry per tier, in the scenario's tier order.
     pub tiers: Vec<TierMetrics>,
+    /// One entry per edge aggregator, in edge order — empty unless the
+    /// run used a `[scenario.aggregators]` tree.
+    pub edges: Vec<EdgeMetrics>,
     /// Staleness over every upload regardless of tier.
     pub staleness: StalenessHist,
     /// Arrivals lost because *every* tier was in its off window
@@ -256,6 +297,30 @@ mod tests {
         assert!((h.mean() - 18.0 / 7.0).abs() < 1e-12);
         assert_eq!(h.counts, vec![2, 1, 2, 2]);
         assert_eq!(h.spec_string(), "0:2|1:1|2-3:2|4-7:2");
+    }
+
+    #[test]
+    fn histogram_merge_is_exact_union() {
+        let mut a = StalenessHist::default();
+        let mut b = StalenessHist::default();
+        let mut all = StalenessHist::default();
+        for s in [0u64, 1, 5] {
+            a.record(s);
+            all.record(s);
+        }
+        for s in [2u64, 9, 9, 130] {
+            b.record(s);
+            all.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+        assert_eq!(a.mean(), all.mean());
+        // merging an empty histogram is a no-op
+        a.merge(&StalenessHist::default());
+        assert_eq!(a, all);
+        // round-trips through its serialized parts
+        let rebuilt = StalenessHist::from_parts(all.counts.clone(), all.sum, all.max, all.n);
+        assert_eq!(rebuilt, all);
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! [`Backend`], with the client population owned by the scenario engine
 //! ([`crate::scenario`], DESIGN_SCENARIOS.md).
 
-use crate::config::{Algorithm, Config};
-use crate::coordinator::{ClientLogic, Server, ServerStep};
+use crate::config::{Algorithm, Config, TierConfig};
+use crate::coordinator::{AggOutcome, ClientLogic, EdgeAggregator, Server, ServerStep};
 use crate::metrics::{CurvePoint, RunResult};
+use crate::scenario::metrics::EdgeMetrics;
 use crate::quant::parse_spec;
 use crate::runtime::Backend;
 use crate::scenario::{Sampling, Scenario, SnapshotStore};
@@ -154,6 +155,52 @@ impl<'a> SimEngine<'a> {
             scenario.metrics.tiers[tier].codec = logic.codec_name(tier_codec[tier]);
         }
 
+        // Hierarchical aggregation (tree-of-leaders): K edge aggregators
+        // each own a contiguous slice of the user population; uploads
+        // route through the owning edge, which forwards a count-weighted
+        // quantized partial to the root on buffer-full. edges == 0 keeps
+        // the flat path and draws nothing from the new "edge-agg" stream,
+        // so existing runs replay bit-identical.
+        let agg_cfg = &self.cfg.scenario.aggregators;
+        let mut edges: Vec<EdgeAggregator> = Vec::with_capacity(agg_cfg.edges);
+        if agg_cfg.edges > 0 {
+            let pid = server.register_partial_codec(&agg_cfg.partial_codec)?;
+            if pid != 0 {
+                bail!("internal: partial codec '{}' registered at id {pid}", agg_cfg.partial_codec);
+            }
+            let edge_seeds = root.stream("edge-agg");
+            for e in 0..agg_cfg.edges {
+                let mut edge = EdgeAggregator::new(
+                    d,
+                    agg_cfg.buffer_size,
+                    &agg_cfg.partial_codec,
+                    &self.cfg.quant.client,
+                    self.cfg.fl.algorithm,
+                    self.cfg.fl.staleness_scaling,
+                    server.pool().clone(),
+                    edge_seeds.stream_u64(e as u64).next_u64_here(),
+                )?;
+                // same registration order as the server/client pair above
+                // => same codec ids on every node of the tree
+                let ids = edge.register_tier_presets(self.cfg)?;
+                if ids != tier_codec {
+                    bail!("internal: edge {e} codec ids {ids:?} != server ids {tier_codec:?}");
+                }
+                edges.push(edge);
+            }
+        }
+
+        // Per-tier user pools (opt-in): correlate tier membership with
+        // data distribution by giving each tier a contiguous user slice.
+        // Off (default) keeps the shared full-population draw and is
+        // bit-identical to the pre-pool engine (same single Lemire draw).
+        let n_users = self.backend.num_train_users();
+        let user_pools: Option<Vec<(usize, usize)>> = if self.cfg.scenario.tier_user_pools {
+            Some(tier_user_ranges(&self.cfg.resolved_tiers(), n_users)?)
+        } else {
+            None
+        };
+
         // Per-trip wire sizes for tier bandwidth delays + byte metrics.
         // Every codec emits fixed-size payloads, so these are exact; the
         // download is one hidden-state increment (broadcast mode). The
@@ -201,7 +248,6 @@ impl<'a> SimEngine<'a> {
         let mut reached: Option<CurvePoint> = None;
         let mut hidden_trace: Vec<f64> = Vec::new();
         let mut last_eval_t = 0u64;
-        let n_users = self.backend.num_train_users();
 
         // concurrency tracking (Little's-law calibration check):
         // time-integral of the in-flight count
@@ -253,7 +299,13 @@ impl<'a> SimEngine<'a> {
                     if let Some(tier) = tier {
                         // this client starts training now
                         scenario.metrics.record_arrival(tier);
-                        let user = sampling_rng.range(0, n_users);
+                        let user = match &user_pools {
+                            Some(ranges) => {
+                                let (lo, hi) = ranges[tier];
+                                sampling_rng.range(lo, hi)
+                            }
+                            None => sampling_rng.range(0, n_users),
+                        };
                         let dur = scenario.sample_duration(tier, &mut duration_rng).max(1e-9);
                         let dropped = scenario.sample_dropout(tier, &mut dropout_rng);
                         // a dropped client may salvage partial work:
@@ -326,10 +378,26 @@ impl<'a> SimEngine<'a> {
                             download_bytes,
                         );
                     }
-                    let stepped = matches!(
-                        server.ingest_from(&upload.msg, staleness, codec)?,
-                        ServerStep::Stepped(_)
-                    );
+                    let stepped = if edges.is_empty() {
+                        matches!(
+                            server.ingest_from(&upload.msg, staleness, codec)?,
+                            ServerStep::Stepped(_)
+                        )
+                    } else {
+                        // contiguous ownership: edge e owns users
+                        // [e*n/K, (e+1)*n/K)
+                        let e = user * edges.len() / n_users;
+                        match edges[e].ingest_from(&upload.msg, staleness, codec)? {
+                            AggOutcome::Buffered => false,
+                            AggOutcome::Forward(p) => matches!(
+                                server.ingest_partial(&p.msg, p.count, &p.staleness, 0)?,
+                                ServerStep::Stepped(_)
+                            ),
+                            AggOutcome::Stepped(_) => {
+                                bail!("internal: edge {e} stepped (edges never step)")
+                            }
+                        }
+                    };
                     if stepped {
                         store.publish(server.t(), server.client_snapshot());
                     }
@@ -381,6 +449,21 @@ impl<'a> SimEngine<'a> {
 
         let final_accuracy = curve.last().map(|p| p.val_accuracy).unwrap_or(0.0);
         let mut scenario_metrics = scenario.metrics;
+        // per-edge accounting merged up the tree (empty for flat runs);
+        // updates still sitting in an edge buffer at the break are
+        // counted in `updates` but not in any forwarded partial.
+        scenario_metrics.edges = edges
+            .iter()
+            .enumerate()
+            .map(|(edge_id, e)| EdgeMetrics {
+                edge_id,
+                updates: e.updates,
+                update_bytes: e.update_bytes,
+                partials: e.forwarded,
+                partial_bytes: e.forwarded_bytes,
+                staleness: e.staleness.clone(),
+            })
+            .collect();
         scenario_metrics.mean_concurrency =
             if clock > 0.0 { in_flight_area / clock } else { 0.0 };
         scenario_metrics.max_in_flight = max_in_flight;
@@ -398,6 +481,36 @@ impl<'a> SimEngine<'a> {
             hidden_trace,
         ))
     }
+}
+
+/// Contiguous per-tier user slices proportional to tier weight (the
+/// `scenario.tier_user_pools` opt-in): tier i owns `[lo_i, hi_i)` with
+/// `hi_i - lo_i ≈ weight_i / Σw · n_users`. The last tier absorbs the
+/// rounding remainder; every tier must end up with at least one user.
+fn tier_user_ranges(tiers: &[TierConfig], n_users: usize) -> Result<Vec<(usize, usize)>> {
+    let total: f64 = tiers.iter().map(|t| t.weight).sum();
+    let mut ranges = Vec::with_capacity(tiers.len());
+    let mut cum = 0.0f64;
+    let mut lo = 0usize;
+    for (i, t) in tiers.iter().enumerate() {
+        cum += t.weight;
+        let hi = if i + 1 == tiers.len() {
+            n_users
+        } else {
+            ((cum / total) * n_users as f64).floor() as usize
+        };
+        if hi <= lo {
+            bail!(
+                "scenario.tier_user_pools: tier '{}' gets an empty user slice \
+                 ({n_users} train users across {} tiers)",
+                t.name,
+                tiers.len()
+            );
+        }
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    Ok(ranges)
 }
 
 /// Helper so a derived stream can yield one u64 inline.
@@ -646,6 +759,122 @@ mod tests {
         // both tiers carried traffic and recorded transfer bytes
         assert!(sc.tiers[0].uploads > 0 && slow_m.uploads > 0);
         assert!(sc.tiers[0].download_bytes > 0);
+    }
+
+    #[test]
+    fn tier_user_ranges_partition_the_population() {
+        let mk = |name: &str, w: f64| {
+            let mut t = TierConfig::named(name);
+            t.weight = w;
+            t
+        };
+        let tiers = vec![mk("a", 1.0), mk("b", 3.0)];
+        let r = tier_user_ranges(&tiers, 100).unwrap();
+        assert_eq!(r, vec![(0, 25), (25, 100)]);
+        // rounding remainder goes to the last tier; slices stay disjoint
+        // and exhaustive
+        let tiers = vec![mk("a", 1.0), mk("b", 1.0), mk("c", 1.0)];
+        let r = tier_user_ranges(&tiers, 10).unwrap();
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 10);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+            assert!(w[0].0 < w[0].1);
+        }
+        // too few users for the tier count fails loudly
+        let tiers = vec![mk("a", 1.0), mk("b", 1e-9)];
+        assert!(tier_user_ranges(&tiers, 2).is_err());
+    }
+
+    #[test]
+    fn single_tier_user_pools_replay_bit_identical() {
+        // with one tier the pool slice is the whole population, so the
+        // single Lemire draw is unchanged — the opt-in is free for the
+        // desugared default scenario
+        let b = backend();
+        let mut on = quad_cfg(Algorithm::Qafel);
+        on.stop.max_server_steps = 60;
+        on.stop.target_accuracy = 2.0;
+        let off = on.clone();
+        on.scenario.tier_user_pools = true;
+        let r_on = SimEngine::new(&on, &b, 21).run().unwrap();
+        let r_off = SimEngine::new(&off, &b, 21).run().unwrap();
+        assert_eq!(r_on.comm.uploads, r_off.comm.uploads);
+        assert_eq!(r_on.final_accuracy, r_off.final_accuracy);
+        assert_eq!(r_on.curve.len(), r_off.curve.len());
+    }
+
+    #[test]
+    fn tier_user_pools_shift_the_sampled_population() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 60;
+        c.stop.target_accuracy = 2.0;
+        let mut fast = TierConfig::named("fast");
+        fast.weight = 0.5;
+        let mut slow = TierConfig::named("slow");
+        slow.weight = 0.5;
+        c.scenario.tiers = vec![fast, slow];
+        let r_off = SimEngine::new(&c, &b, 22).run().unwrap();
+        c.scenario.tier_user_pools = true;
+        c.validate().unwrap();
+        let r_on = SimEngine::new(&c, &b, 22).run().unwrap();
+        // correlating membership with data changes which users train,
+        // hence the trajectory (virtually certain on any real backend)
+        assert_eq!(r_on.server_steps, r_off.server_steps);
+        assert!(
+            r_on.final_accuracy != r_off.final_accuracy
+                || r_on.curve.last().unwrap().val_loss != r_off.curve.last().unwrap().val_loss,
+            "pooled draw unexpectedly identical to shared draw"
+        );
+    }
+
+    #[test]
+    fn edge_tree_reports_per_edge_metrics() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 40;
+        c.stop.target_accuracy = 2.0;
+        c.scenario.aggregators.edges = 4;
+        c.scenario.aggregators.buffer_size = 2;
+        c.scenario.aggregators.partial_codec = "qsgd:8".into();
+        c.validate().unwrap();
+        let r = SimEngine::new(&c, &b, 23).run().unwrap();
+        assert_eq!(r.server_steps, 40);
+        let sc = &r.scenario;
+        assert_eq!(sc.edges.len(), 4);
+        let updates: u64 = sc.edges.iter().map(|e| e.updates).sum();
+        let partials: u64 = sc.edges.iter().map(|e| e.partials).sum();
+        // every tier-level upload reached exactly one edge; the root saw
+        // one ingest per forwarded partial
+        let tier_uploads: u64 = sc.tiers.iter().map(|t| t.uploads).sum();
+        assert_eq!(updates, tier_uploads);
+        assert_eq!(partials, r.comm.uploads);
+        assert!(partials > 0 && partials <= updates);
+        // per-edge staleness histograms merge to the tier-level count
+        // minus whatever is still buffered at the break
+        let hist_n: u64 = sc.edges.iter().map(|e| e.staleness.n).sum();
+        assert_eq!(hist_n, updates);
+        for e in &sc.edges {
+            assert!(e.updates > 0, "edge {} starved", e.edge_id);
+            assert_eq!(e.partial_bytes % e.partials.max(1), 0);
+        }
+    }
+
+    #[test]
+    fn edge_tree_is_deterministic_given_seed() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 30;
+        c.stop.target_accuracy = 2.0;
+        c.scenario.aggregators.edges = 3;
+        c.scenario.aggregators.buffer_size = 2;
+        c.scenario.aggregators.partial_codec = "qsgd:4".into();
+        let r1 = SimEngine::new(&c, &b, 24).run().unwrap();
+        let r2 = SimEngine::new(&c, &b, 24).run().unwrap();
+        assert_eq!(r1.final_accuracy, r2.final_accuracy);
+        assert_eq!(r1.comm.uploads, r2.comm.uploads);
+        assert_eq!(r1.scenario.edges, r2.scenario.edges);
     }
 
     #[test]

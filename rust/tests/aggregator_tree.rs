@@ -1,0 +1,404 @@
+//! Aggregation-tree integration tests (ISSUE 6 acceptance criteria):
+//!
+//! * the **trivial tree** — one edge, forward-every-update buffer,
+//!   identity partial codec — replays **bit-identical** to the flat
+//!   server, both in the virtual-time simulator (full training curves
+//!   match field for field) and over real TCP (every broadcast frame a
+//!   hand-driven worker reads through an [`EdgeLeader`] relay is
+//!   byte-identical to a reference [`Server`] fed the same uploads);
+//! * a 2-level simulated tree is deterministic across seeds and
+//!   bit-identical across `fl.shards ∈ {1, 4}` (the repo-wide shard
+//!   invariance extends to the edge layer);
+//! * a real 2-level loopback deployment — root + two edge leaders +
+//!   four workers, seven threads in one process — completes, converges,
+//!   and the per-edge byte accounting is exact at every hop.
+//!
+//! `UpdatePartial` frame round-trip and truncation-rejection property
+//! tests live with the other wire-format tests in `net::message`.
+
+use qafel::config::{Algorithm, Config};
+use qafel::coordinator::{Server, ServerStep};
+use qafel::net::{EdgeLeader, Leader, Message, Worker, PROTOCOL_VERSION};
+use qafel::quant::parse_spec;
+use qafel::runtime::{Backend as _, QuadraticBackend};
+use qafel::sim::SimEngine;
+use qafel::util::prng::Prng;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+// ---------------------------------------------------------------- sim --
+
+/// A fast deterministic simulator config on the analytic quadratic
+/// backend (grad-norm accuracy proxy, fixed horizon).
+fn sim_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.fl.buffer_size = 4;
+    c.fl.client_lr = 0.15;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.quant.client = "qsgd:8".into();
+    c.quant.server = "qsgd:8".into();
+    c.sim.concurrency = 20;
+    c.sim.eval_every = 10;
+    c.stop.target_accuracy = 2.0; // unreachable: run the full horizon
+    c.stop.max_uploads = 100_000;
+    c.stop.max_server_steps = 120;
+    c
+}
+
+fn sim_backend() -> QuadraticBackend {
+    QuadraticBackend::new(24, 10, 1.0, 0.3, 0.3, 0.02, 2, 11)
+}
+
+#[test]
+fn trivial_tree_sim_curve_is_bit_identical_to_flat() {
+    // One edge, buffer size 1 (forward every update), identity partial
+    // codec: the edge applies the same staleness weight the flat server
+    // would and forwards the exact f32 values, so the entire training
+    // curve must match bit for bit. Only upload bytes differ — partials
+    // ride the identity codec, not the client codec.
+    let b = sim_backend();
+    let flat = sim_cfg();
+    let mut tree = flat.clone();
+    tree.scenario.aggregators.edges = 1;
+    tree.scenario.aggregators.buffer_size = 1;
+    tree.scenario.aggregators.partial_codec = "none".into();
+    tree.validate().unwrap();
+
+    let rf = SimEngine::new(&flat, &b, 31).run().unwrap();
+    let rt = SimEngine::new(&tree, &b, 31).run().unwrap();
+
+    assert_eq!(rf.server_steps, rt.server_steps);
+    assert_eq!(rf.final_accuracy.to_bits(), rt.final_accuracy.to_bits());
+    assert_eq!(rf.comm.uploads, rt.comm.uploads, "B=1 partials are 1:1 with uploads");
+    assert_eq!(rf.comm.broadcasts, rt.comm.broadcasts);
+    assert_eq!(rf.comm.broadcast_bytes, rt.comm.broadcast_bytes);
+    // ...but the wire format upstream differs: identity partials are
+    // wider than qsgd:8 client uploads
+    assert!(rt.comm.upload_bytes > rf.comm.upload_bytes);
+
+    assert_eq!(rf.curve.len(), rt.curve.len());
+    for (i, (f, t)) in rf.curve.iter().zip(rt.curve.iter()).enumerate() {
+        assert_eq!(f.time.to_bits(), t.time.to_bits(), "curve[{i}].time");
+        assert_eq!(f.server_steps, t.server_steps, "curve[{i}].server_steps");
+        assert_eq!(f.uploads, t.uploads, "curve[{i}].uploads");
+        assert_eq!(f.broadcast_mb.to_bits(), t.broadcast_mb.to_bits(), "curve[{i}].broadcast_mb");
+        assert_eq!(f.val_loss.to_bits(), t.val_loss.to_bits(), "curve[{i}].val_loss");
+        assert_eq!(f.val_accuracy.to_bits(), t.val_accuracy.to_bits(), "curve[{i}].val_accuracy");
+        assert_eq!(
+            f.grad_norm_sq.map(f64::to_bits),
+            t.grad_norm_sq.map(f64::to_bits),
+            "curve[{i}].grad_norm_sq"
+        );
+    }
+
+    // the tree run reported its single edge, and the edge saw everything
+    assert_eq!(rt.scenario.edges.len(), 1);
+    let e = &rt.scenario.edges[0];
+    assert_eq!(e.updates, rf.comm.uploads);
+    assert_eq!(e.partials, e.updates, "B=1 forwards every update");
+    assert_eq!(e.staleness.n, e.updates);
+}
+
+#[test]
+fn two_level_sim_tree_is_shard_invariant_and_seed_deterministic() {
+    let b = sim_backend();
+    let mut c = sim_cfg();
+    c.stop.max_server_steps = 60;
+    c.scenario.aggregators.edges = 4;
+    c.scenario.aggregators.buffer_size = 2;
+    c.scenario.aggregators.partial_codec = "qsgd:4".into();
+    c.validate().unwrap();
+
+    // shard invariance: S=1 and S=4 produce bit-identical trajectories
+    // (the edge layer uses the same pooled block reductions as the root)
+    let mut s1 = c.clone();
+    s1.fl.shards = 1;
+    let mut s4 = c.clone();
+    s4.fl.shards = 4;
+    let r1 = SimEngine::new(&s1, &b, 41).run().unwrap();
+    let r4 = SimEngine::new(&s4, &b, 41).run().unwrap();
+    assert_eq!(r1.server_steps, r4.server_steps);
+    assert_eq!(r1.comm.uploads, r4.comm.uploads);
+    assert_eq!(r1.final_accuracy.to_bits(), r4.final_accuracy.to_bits());
+    assert_eq!(r1.curve.len(), r4.curve.len());
+    for (p1, p4) in r1.curve.iter().zip(r4.curve.iter()) {
+        assert_eq!(p1.val_loss.to_bits(), p4.val_loss.to_bits());
+    }
+    assert_eq!(r1.scenario.edges, r4.scenario.edges);
+
+    // same seed replays exactly; a different seed moves the trajectory
+    let r1b = SimEngine::new(&s1, &b, 41).run().unwrap();
+    assert_eq!(r1.final_accuracy.to_bits(), r1b.final_accuracy.to_bits());
+    assert_eq!(r1.scenario.edges, r1b.scenario.edges);
+    let r_other = SimEngine::new(&s1, &b, 42).run().unwrap();
+    assert!(
+        r_other.final_accuracy != r1.final_accuracy
+            || r_other.comm.uploads != r1.comm.uploads,
+        "seed change left the tree run unchanged"
+    );
+}
+
+// ---------------------------------------------------------------- tcp --
+
+/// Read one raw frame (length prefix + body), returning the body bytes.
+fn read_frame(s: &mut TcpStream) -> Vec<u8> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).unwrap();
+    let n = u32::from_le_bytes(len) as usize;
+    let mut body = vec![0u8; n];
+    s.read_exact(&mut body).unwrap();
+    body
+}
+
+/// Write one raw frame around the given body bytes.
+fn write_frame(s: &mut TcpStream, body: &[u8]) {
+    s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+}
+
+fn net_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = "qsgd:8".into();
+    c.quant.server = "qsgd:4".into();
+    c.fl.client_lr = 0.05;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.staleness_scaling = true;
+    c.fl.clip_norm = 0.0;
+    c.stop.max_uploads = 100_000;
+    c.net.v1_grace_ms = 300;
+    c
+}
+
+#[test]
+fn tcp_trivial_tree_broadcasts_bit_identical_to_flat_server() {
+    // Root leader + edge leader + one hand-driven worker in lockstep:
+    // every upload travels worker -> edge (UpdateV2) -> root
+    // (UpdatePartial, count 1, identity codec) -> server step, and the
+    // broadcast is relayed back down through the edge. Each frame the
+    // worker reads must be byte-identical to the frame a *flat*
+    // reference Server produces from the same payload at the same
+    // staleness — the TCP half of the trivial-tree acceptance
+    // criterion. Lockstep driving (send, then read the broadcast before
+    // sending again) makes the whole exchange deterministic.
+    let mut cfg = net_cfg();
+    cfg.fl.buffer_size = 1; // K=1: every partial steps the server
+    cfg.stop.max_server_steps = 4;
+    cfg.net.edge_buffer = 1;
+    cfg.net.partial_codec = "none".into();
+    let d = 32usize;
+    let x0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.01).sin()).collect();
+
+    let root_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root_addr = root_listener.local_addr().unwrap().to_string();
+    let edge_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let edge_addr = edge_listener.local_addr().unwrap().to_string();
+
+    let root_cfg = cfg.clone();
+    let root_x0 = x0.clone();
+    let root = std::thread::spawn(move || {
+        Leader::new(root_cfg, root_x0, 7).run_on(root_listener, 1).unwrap()
+    });
+    let edge_cfg = cfg.clone();
+    let edge = std::thread::spawn(move || {
+        EdgeLeader::new(edge_cfg, 99).run_on(edge_listener, &root_addr, 1).unwrap()
+    });
+
+    // --- hand-driven v2 worker against the edge ---------------------
+    let mut sock = TcpStream::connect(&edge_addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    write_frame(
+        &mut sock,
+        &Message::Hello { version: PROTOCOL_VERSION, tier: None, quant_client: None }.encode(),
+    );
+    let (client_quant, join_x0) = match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::JoinV2 { version, codec_id, d: jd, x0, client_quant, .. } => {
+            assert_eq!(version, PROTOCOL_VERSION);
+            assert_eq!(codec_id, 0);
+            assert_eq!(jd as usize, d);
+            (client_quant, x0)
+        }
+        other => panic!("expected JoinV2 via the edge, got {other:?}"),
+    };
+    assert_eq!(join_x0, x0, "edge must relay the root's x^0 untouched");
+
+    // the flat reference: same config, same x^0, same server seed
+    let mut reference = Server::build(&cfg, x0.clone(), 7).unwrap();
+    let qc = parse_spec(&client_quant).unwrap();
+    let mut rng = Prng::new(4242);
+    for round in 0..4u64 {
+        let delta: Vec<f32> =
+            (0..d).map(|i| ((i as f32) * 0.02 + round as f32).cos() * 0.1).collect();
+        let msg = qc.quantize(&delta, &mut rng);
+        // t_start pinned at 0: staleness grows 0,1,2,3 — the w(tau)
+        // weighting path is exercised, not just the trivial w=1 case
+        write_frame(
+            &mut sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 0,
+                trip: round,
+                train_loss: 0.0,
+                codec_id: 0,
+                payload: msg.payload.clone(),
+            }
+            .encode(),
+        );
+        let staleness = reference.t(); // == round; t_start was 0
+        let b = match reference.ingest_from(&msg, staleness, 0).unwrap() {
+            ServerStep::Stepped(b) => b,
+            other => panic!("K=1 must step, got {other:?}"),
+        };
+        let bcast = read_frame(&mut sock);
+        let expect =
+            Message::Broadcast { t: b.t, absolute: b.absolute, payload: b.msg.payload }.encode();
+        assert_eq!(bcast, expect, "round {round}: broadcast through the edge diverged");
+    }
+    // step cap reached: the shutdown is relayed down the tree
+    assert_eq!(read_frame(&mut sock), vec![4u8], "expected relayed Shutdown");
+    write_frame(&mut sock, &Message::Bye { worker_id: 0, uploads: 4 }.encode());
+    drop(sock);
+
+    let edge_report = edge.join().unwrap();
+    let root_report = root.join().unwrap();
+
+    // the root's final model is the flat reference's, bit for bit
+    assert_eq!(root_report.server_steps, 4);
+    assert_eq!(&root_report.model[..], reference.model(), "tree model != flat reference");
+
+    // exact accounting at both hops of the trivial tree
+    assert_eq!(edge_report.updates, 4);
+    assert_eq!(edge_report.partials, 4, "edge buffer 1 forwards every update");
+    assert_eq!(edge_report.pending_at_shutdown, 0);
+    assert_eq!(edge_report.replica_t, 4);
+    assert_eq!(edge_report.partial_codec, "none");
+    assert_eq!(
+        edge_report.update_bytes,
+        4 * qc.expected_bytes(d) as u64,
+        "edge downstream bytes follow the client codec"
+    );
+    assert_eq!(
+        edge_report.partial_bytes,
+        4 * parse_spec("none").unwrap().expected_bytes(d) as u64,
+        "edge upstream bytes follow the partial codec"
+    );
+    let ws = &root_report.worker_stats[0];
+    assert_eq!(ws.uploads, 4);
+    assert_eq!(ws.partials, 4, "every root ingest was an UpdatePartial frame");
+    assert_eq!(ws.codec, "none");
+    assert_eq!(root_report.comm.uploads, 4);
+    assert_eq!(root_report.comm.upload_bytes, edge_report.partial_bytes);
+}
+
+#[test]
+fn two_level_loopback_converges_with_exact_per_edge_accounting() {
+    // The real deployment shape: one root, two edge leaders, four
+    // workers — seven threads, six TCP connections, all in-process.
+    let mut cfg = net_cfg();
+    cfg.fl.buffer_size = 2; // root K
+    cfg.stop.max_server_steps = 20;
+    cfg.net.edge_buffer = 2;
+    cfg.net.partial_codec = "qsgd:8".into();
+    const D: usize = 64;
+    let backend = |seed: u64| QuadraticBackend::new(D, 8, 1.0, 0.3, 0.2, 0.02, 1, seed);
+    let x0 = backend(17).init_params(0).unwrap();
+    let g0 = backend(17).grad_norm_sq(&x0);
+
+    let root_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root_addr = root_listener.local_addr().unwrap().to_string();
+    let root_cfg = cfg.clone();
+    let root_x0 = x0.clone();
+    let root = std::thread::spawn(move || {
+        Leader::new(root_cfg, root_x0, 7).run_on(root_listener, 2).unwrap()
+    });
+
+    let mut edges = Vec::new();
+    let mut workers = Vec::new();
+    for e in 0..2u64 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let edge_addr = listener.local_addr().unwrap().to_string();
+        let edge_cfg = cfg.clone();
+        let up = root_addr.clone();
+        edges.push(std::thread::spawn(move || {
+            EdgeLeader::new(edge_cfg, 0xE0 + e).run_on(listener, &up, 2).unwrap()
+        }));
+        for w in 0..2u64 {
+            let addr = edge_addr.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut worker = Worker::new(backend(17 + 10 * e + w));
+                worker.round_delay = std::time::Duration::from_millis(1);
+                worker.run(&addr).unwrap()
+            }));
+        }
+    }
+    let root_report = root.join().unwrap();
+    let edge_reports: Vec<_> = edges.into_iter().map(|e| e.join().unwrap()).collect();
+    let worker_reports: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    // the run completed and actually descended
+    assert_eq!(root_report.server_steps, 20);
+    assert_eq!(root_report.comm.broadcasts, 20);
+    let g1 = backend(17).grad_norm_sq(&root_report.model);
+    assert!(g1 < g0, "no descent through the tree: {g0} -> {g1}");
+
+    // every worker negotiated v2 through its edge
+    assert_eq!(worker_reports.len(), 4);
+    for r in &worker_reports {
+        assert_eq!(r.protocol, 2);
+        assert_eq!(r.codec, "qsgd:8");
+    }
+
+    // root-side accounting: two "workers", both edges, all uploads
+    // UpdatePartial frames on the partial codec
+    let qp = parse_spec(&cfg.net.partial_codec).unwrap();
+    assert_eq!(root_report.worker_stats.len(), 2);
+    for ws in &root_report.worker_stats {
+        assert!(ws.uploads > 0, "edge {} never forwarded", ws.worker_id);
+        assert_eq!(ws.partials, ws.uploads);
+        assert_eq!(ws.codec, qp.name());
+        assert_eq!(ws.upload_bytes, ws.uploads * qp.expected_bytes(D) as u64);
+        assert_eq!(ws.staleness.n, 2 * ws.uploads, "B=2 partials carry 2 staleness samples");
+        // every live edge's writer delivered all broadcasts + Shutdown
+        assert_eq!(ws.broadcast_frames, 21);
+    }
+    let root_uploads: u64 = root_report.worker_stats.iter().map(|w| w.uploads).sum();
+    assert_eq!(root_uploads, root_report.comm.uploads);
+
+    // per-edge accounting, exact at every hop
+    let qc = parse_spec(&cfg.quant.client).unwrap();
+    assert_eq!(edge_reports.len(), 2);
+    let mut ids: Vec<u32> = edge_reports.iter().map(|e| e.edge_worker_id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![0, 1]);
+    for er in &edge_reports {
+        // a partial forwarded while the root's Shutdown is in flight is
+        // dropped at the root (same as a flat worker's late upload), so
+        // the edge may have forwarded a little more than the root took
+        let ws = &root_report.worker_stats[er.edge_worker_id as usize];
+        assert!(er.partials >= ws.uploads, "edge {} vs root row", er.edge_worker_id);
+        assert_eq!(er.partial_bytes, er.partials * qp.expected_bytes(D) as u64);
+        // downstream: two workers, client-codec bytes, B=2 buffering
+        let down: u64 = er.worker_stats.iter().map(|w| w.uploads).sum();
+        assert_eq!(er.updates, down);
+        assert_eq!(er.update_bytes, er.updates * qc.expected_bytes(D) as u64);
+        assert_eq!(er.updates, 2 * er.partials + er.pending_at_shutdown as u64);
+        assert!(er.pending_at_shutdown < 2, "B=2 never holds 2+ pending");
+        assert_eq!(er.staleness.n, er.updates);
+        assert_eq!(er.replica_t, 20, "edge replica followed every broadcast");
+        for dws in &er.worker_stats {
+            assert!(dws.uploads > 0, "downstream worker {} starved", dws.worker_id);
+            assert_eq!(dws.partials, 0, "leaf workers never send partials");
+            assert_eq!(dws.broadcast_frames, 21);
+        }
+    }
+    // workers count uploads at send time; an upload racing the relayed
+    // Shutdown is dropped by its edge, so sent >= ingested
+    let tree_updates: u64 = edge_reports.iter().map(|e| e.updates).sum();
+    let worker_uploads: u64 = worker_reports.iter().map(|r| r.uploads).sum();
+    assert!(tree_updates <= worker_uploads, "edges ingested more than workers sent");
+}

@@ -1,8 +1,8 @@
 #!/usr/bin/env python3
 """Schema check for the BENCH_*.json perf logs (CI).
 
-The bench smoke writes `BENCH_sharded_step.json` and
-`BENCH_scenario_step.json`; CI uploads them as workflow artifacts so
+The bench smoke writes `BENCH_sharded_step.json`, `BENCH_tree_step.json`
+and `BENCH_scenario_step.json`; CI uploads them as workflow artifacts so
 measured numbers can be checked in from a real machine (ROADMAP item).
 This validator pins the format those check-ins must satisfy: required
 keys present, numeric fields finite, counters/timings positive where
@@ -28,6 +28,18 @@ SHARDED_ROW_FIELDS = {
     "ns_per_step": True,
     "steps_per_sec": True,
     "speedup_vs_s1": True,
+}
+
+TREE_ROW_FIELDS = {
+    "edges": False,  # 0 = the flat baseline row
+    "d": True,
+    "k_buffer": True,
+    "edge_buffer": False,  # 0 on the flat row
+    "updates": True,
+    "server_steps": True,
+    "ns_per_update": True,
+    "updates_per_sec": True,
+    "speedup_vs_flat": True,
 }
 
 SCENARIO_FIELDS = {
@@ -88,6 +100,44 @@ def check_sharded(doc: dict) -> list[str]:
     return problems
 
 
+def check_tree(doc: dict) -> list[str]:
+    problems = []
+    fast = doc.get("fast_mode")
+    if not isinstance(fast, bool):
+        problems.append("'fast_mode' must be a bool")
+    problems += numeric(doc, "threads_available", positive=True)
+    for key in ("codec", "partial_codec"):
+        if not isinstance(doc.get(key), str) or not doc[key]:
+            problems.append(f"'{key}' must be a non-empty string")
+    rows = doc.get("results")
+    if not isinstance(rows, list) or not rows:
+        return problems + ["'results' must be a non-empty array"]
+    edges_seen = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            problems.append(f"results[{i}] must be an object")
+            continue
+        for field, positive in TREE_ROW_FIELDS.items():
+            problems += [f"results[{i}]: {p}" for p in numeric(row, field, positive)]
+        if isinstance(row.get("edges"), (int, float)):
+            edges_seen.add(int(row["edges"]))
+    # flat baseline + the sweep the acceptance criterion names
+    for want in (0, 1, 8, 32):
+        if want not in edges_seen:
+            problems.append(f"results missing edges={want} row (have {sorted(edges_seen)})")
+    # acceptance: the 32-edge tree meets or beats flat-server throughput.
+    # Enforced on full runs only: the fast-mode smoke runs a small d
+    # where thread overhead legitimately dominates (documented proxy).
+    if fast is False:
+        for row in rows:
+            if isinstance(row, dict) and row.get("edges") == 32:
+                s = row.get("speedup_vs_flat")
+                if isinstance(s, (int, float)) and s < 1.0:
+                    problems.append(
+                        f"32-edge tree slower than flat: speedup_vs_flat {s} < 1.0")
+    return problems
+
+
 def check_scenario(doc: dict) -> list[str]:
     problems = []
     if not isinstance(doc.get("fast_mode"), bool):
@@ -107,9 +157,11 @@ def check_file(path: Path) -> list[str]:
     bench = doc.get("bench")
     if bench == "sharded_step":
         return check_sharded(doc)
+    if bench == "tree_step":
+        return check_tree(doc)
     if bench == "scenario_step":
         return check_scenario(doc)
-    return [f"unknown 'bench' kind {bench!r} (want sharded_step | scenario_step)"]
+    return [f"unknown 'bench' kind {bench!r} (want sharded_step | tree_step | scenario_step)"]
 
 
 def main(argv: list[str]) -> int:

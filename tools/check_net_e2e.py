@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate a `qafel leader --report-json` file from the CI loopback E2E.
+"""Validate `qafel leader --report-json` files from the CI loopback E2E.
 
 The net-e2e job runs a real leader process plus N worker processes on
 loopback with heterogeneous per-worker codecs (wire protocol v2). This
@@ -15,9 +15,26 @@ check asserts, from the leader's JSON report:
 * the set of negotiated per-worker codecs is exactly the requested one;
 * per-worker totals sum to the server's totals.
 
+Tree mode (`--edge report.json`, repeatable): the root's "workers" are
+edge leaders forwarding `UpdatePartial` frames. Each `--edge` file is a
+`qafel leader --upstream` report; the check additionally asserts:
+
+* every root ingest was a partial (`partials == uploads` per root row);
+* per-edge byte accounting is exact at both hops: downstream
+  `update_bytes` sums the edge's worker rows, upstream `partial_bytes
+  == partials * expected_bytes_per_partial`;
+* the edge buffer drained correctly: `updates == edge_buffer * partials
+  + pending_at_shutdown`, with fewer than `edge_buffer` pending;
+* the edge's replica followed every broadcast (`replica_t == steps`)
+  and each downstream worker saw all broadcasts + Shutdown;
+* cross-file: the root row for `edge_worker_id` took at most what that
+  edge forwarded (a partial racing the Shutdown is legitimately
+  dropped, never invented).
+
 Usage:
   check_net_e2e.py report.json --steps N --workers N --codecs a,b,c
                    [--max-grad-ratio 0.9]
+                   [--edge edge0.json --edge edge1.json --edge-buffer B]
 """
 
 import argparse
@@ -34,10 +51,15 @@ def main() -> int:
     ap.add_argument("--workers", type=int, required=True)
     ap.add_argument("--codecs", required=True, help="comma-separated expected codec multiset")
     ap.add_argument("--max-grad-ratio", type=float, default=0.9)
+    ap.add_argument("--edge", action="append", default=[],
+                    help="edge-leader report JSON (tree mode; one per root worker)")
+    ap.add_argument("--edge-buffer", type=int, default=1,
+                    help="net.edge_buffer the edges ran with (tree mode)")
     args = ap.parse_args()
 
     doc = json.loads(Path(args.report).read_text(encoding="utf-8"))
     problems: list[str] = []
+    tree_mode = bool(args.edge)
 
     def check(cond: bool, msg: str) -> None:
         if not cond:
@@ -77,6 +99,13 @@ def main() -> int:
         check(w.get("upload_bytes") == uploads * expected,
               f"worker {wid} ({w.get('codec')}): upload_bytes {w.get('upload_bytes')} != "
               f"{uploads} uploads x {expected} B")
+        if tree_mode:
+            check(w.get("partials") == uploads,
+                  f"worker {wid}: {w.get('partials')} partials != {uploads} uploads "
+                  f"(tree roots must only ingest UpdatePartial frames)")
+        else:
+            check(w.get("partials", 0) == 0,
+                  f"worker {wid}: unexpected partials {w.get('partials')} in a flat run")
         # every live worker's writer delivered all broadcasts + Shutdown
         check(w.get("broadcast_frames") == args.steps + 1,
               f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} != {args.steps + 1}")
@@ -87,10 +116,67 @@ def main() -> int:
     check(total_bytes == doc.get("upload_bytes"),
           f"per-worker bytes {total_bytes} != server total {doc.get('upload_bytes')}")
 
+    # --- tree mode: per-edge accounting ------------------------------
+    check(not tree_mode or len(args.edge) == args.workers,
+          f"{len(args.edge)} --edge reports for {args.workers} root workers")
+    root_rows = {w.get("worker_id"): w for w in workers}
+    for path in args.edge:
+        edoc = json.loads(Path(path).read_text(encoding="utf-8"))
+        eid = edoc.get("edge_worker_id")
+        tag = f"edge {eid} ({path})"
+
+        updates = edoc.get("updates", 0)
+        partials = edoc.get("partials", 0)
+        pending = edoc.get("pending_at_shutdown", 0)
+        check(updates > 0, f"{tag}: never ingested a downstream update")
+        check(partials > 0, f"{tag}: never forwarded a partial")
+        check(updates == args.edge_buffer * partials + pending,
+              f"{tag}: {updates} updates != {args.edge_buffer} x {partials} partials "
+              f"+ {pending} pending")
+        check(0 <= pending < args.edge_buffer,
+              f"{tag}: pending_at_shutdown {pending} outside [0, {args.edge_buffer})")
+        expected_p = edoc.get("expected_bytes_per_partial", 0)
+        check(expected_p > 0, f"{tag}: bad expected_bytes_per_partial {expected_p!r}")
+        check(edoc.get("partial_bytes") == partials * expected_p,
+              f"{tag}: partial_bytes {edoc.get('partial_bytes')} != "
+              f"{partials} partials x {expected_p} B")
+        check(edoc.get("replica_t") == args.steps,
+              f"{tag}: replica_t {edoc.get('replica_t')} != {args.steps}")
+
+        eworkers = edoc.get("workers")
+        check(isinstance(eworkers, list) and eworkers, f"{tag}: no downstream worker rows")
+        eworkers = eworkers if isinstance(eworkers, list) else []
+        down_uploads = sum(w.get("uploads", 0) for w in eworkers)
+        down_bytes = sum(w.get("upload_bytes", 0) for w in eworkers)
+        check(down_uploads == updates,
+              f"{tag}: downstream rows sum to {down_uploads} uploads, edge ingested {updates}")
+        check(down_bytes == edoc.get("update_bytes"),
+              f"{tag}: downstream rows sum to {down_bytes} B, edge counted "
+              f"{edoc.get('update_bytes')}")
+        for w in eworkers:
+            wid = f"{tag} worker {w.get('worker_id')}"
+            check(w.get("protocol") == 2, f"{wid}: protocol {w.get('protocol')} != 2")
+            check(w.get("uploads", 0) > 0, f"{wid}: never uploaded")
+            check(w.get("broadcast_frames") == args.steps + 1,
+                  f"{wid}: broadcast_frames {w.get('broadcast_frames')} != {args.steps + 1}")
+
+        row = root_rows.get(eid)
+        check(row is not None, f"{tag}: no root worker row with id {eid}")
+        if row is not None:
+            # a partial forwarded while the Shutdown is in flight is
+            # dropped at the root, so forwarded >= ingested, never <
+            check(partials >= row.get("uploads", 0),
+                  f"{tag}: forwarded {partials} partials but the root ingested "
+                  f"{row.get('uploads')}")
+            check(expected_p == row.get("expected_bytes_per_upload"),
+                  f"{tag}: partial wire size {expected_p} != root's "
+                  f"{row.get('expected_bytes_per_upload')}")
+
     for p in problems:
         print(f"{args.report}: {p}", file=sys.stderr)
     if not problems:
-        print(f"{args.report}: ok ({args.workers} workers, {args.steps} steps, "
+        shape = f"{len(args.edge)}-edge tree" if tree_mode else "flat"
+        print(f"{args.report}: ok ({shape}, {args.workers} workers, {args.steps} steps, "
               f"codecs {', '.join(want_codecs)}, grad_ratio {ratio:.4f})")
     return 1 if problems else 0
 
