@@ -390,6 +390,23 @@ impl Default for DataConfig {
     }
 }
 
+/// The `[telemetry]` table: the flight recorder
+/// (`crate::telemetry`, ARCHITECTURE.md §Telemetry). Observer config —
+/// none of these knobs can change a run's trajectory, so they are
+/// excluded from [`Config::to_json`] and the config fingerprint.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryConfig {
+    /// Journal path: append-only JSONL event stream of the run
+    /// (`--journal` overrides). `None` = no journal.
+    pub journal: Option<String>,
+    /// Write a full-state `Checkpoint` event every N server steps so the
+    /// run can resume after a kill (0 = never). Requires `journal`.
+    pub checkpoint_every: u64,
+    /// Print a live per-step progress line every N server steps
+    /// (0 = off; `--progress` overrides).
+    pub progress: u64,
+}
+
 /// Stopping criteria for a run.
 #[derive(Clone, Debug)]
 pub struct StopConfig {
@@ -426,6 +443,7 @@ pub struct Config {
     pub net: NetConfig,
     pub data: DataConfig,
     pub stop: StopConfig,
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for Config {
@@ -442,6 +460,7 @@ impl Default for Config {
             net: NetConfig::default(),
             data: DataConfig::default(),
             stop: StopConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -564,6 +583,16 @@ impl Config {
         get_num!(doc, &["stop", "target_accuracy"], self.stop.target_accuracy, f64);
         get_num!(doc, &["stop", "max_uploads"], self.stop.max_uploads, u64);
         get_num!(doc, &["stop", "max_server_steps"], self.stop.max_server_steps, u64);
+
+        if let Some(v) = doc.at(&["telemetry", "journal"]) {
+            self.telemetry.journal = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("config telemetry.journal must be a string"))?
+                    .to_string(),
+            );
+        }
+        get_num!(doc, &["telemetry", "checkpoint_every"], self.telemetry.checkpoint_every, u64);
+        get_num!(doc, &["telemetry", "progress"], self.telemetry.progress, u64);
         self.validate()
     }
 
@@ -612,11 +641,38 @@ impl Config {
                 "burst_on" => self.scenario.burst_on = scalar(val, "scenario.burst_on")?,
                 "burst_off" => self.scenario.burst_off = scalar(val, "scenario.burst_off")?,
                 "tiers" => {
-                    let tiers = val.as_obj().ok_or_else(|| {
-                        anyhow!("scenario.tiers must be a table of [scenario.tiers.<name>] tables")
-                    })?;
-                    for (name, tval) in tiers {
-                        self.apply_tier(name, tval)?;
+                    if let Some(list) = val.as_arr() {
+                        // Array form: [{ name = "...", ... }, ...] in
+                        // declaration order. This is what
+                        // `Config::to_json` emits — a TOML table is
+                        // alphabetical, but repeated `--set` overrides
+                        // can build tiers in any order, and tier order
+                        // is the codec-registry wire contract.
+                        for tval in list {
+                            let name = tval
+                                .get("name")
+                                .and_then(|v| v.as_str())
+                                .ok_or_else(|| {
+                                    anyhow!("each scenario.tiers entry needs a string 'name'")
+                                })?
+                                .to_string();
+                            let mut body = tval
+                                .as_obj()
+                                .ok_or_else(|| anyhow!("scenario.tiers entries must be tables"))?
+                                .clone();
+                            body.remove("name");
+                            self.apply_tier(&name, &Json::Obj(body))?;
+                        }
+                    } else {
+                        let tiers = val.as_obj().ok_or_else(|| {
+                            anyhow!(
+                                "scenario.tiers must be a table of [scenario.tiers.<name>] \
+                                 tables or an array of {{ name = ... }} tables"
+                            )
+                        })?;
+                        for (name, tval) in tiers {
+                            self.apply_tier(name, tval)?;
+                        }
                     }
                 }
                 "tier_user_pools" => {
@@ -733,6 +789,133 @@ impl Config {
         self.scenario.arrival.as_deref().unwrap_or(&self.sim.arrival)
     }
 
+    /// The resolved config as a TOML-shaped JSON document — the exact
+    /// form [`Config::apply`] overlays, so
+    /// `Config::default().apply(&cfg.to_json())` reconstructs the
+    /// config field-for-field (tiers keep their declaration order via
+    /// the array form). This is what journals embed in their `Meta`
+    /// event and what [`crate::telemetry::config_fingerprint`] hashes.
+    ///
+    /// `[telemetry]` is deliberately omitted: it is observer config
+    /// (journal path, progress cadence) that cannot change the run's
+    /// trajectory, so recording a run must not change its fingerprint.
+    pub fn to_json(&self) -> Json {
+        let num = Json::num;
+        let fl = Json::obj(vec![
+            ("algorithm", Json::str(self.fl.algorithm.name())),
+            ("buffer_size", num(self.fl.buffer_size as f64)),
+            ("client_lr", num(f64::from(self.fl.client_lr))),
+            ("server_lr", num(f64::from(self.fl.server_lr))),
+            ("server_momentum", num(f64::from(self.fl.server_momentum))),
+            ("staleness_scaling", Json::Bool(self.fl.staleness_scaling)),
+            ("local_steps", num(self.fl.local_steps as f64)),
+            ("clip_norm", num(f64::from(self.fl.clip_norm))),
+            ("shards", num(self.fl.shards as f64)),
+            ("eval_shards", num(self.fl.eval_shards as f64)),
+        ]);
+        let quant = Json::obj(vec![
+            ("client", Json::str(&self.quant.client)),
+            ("server", Json::str(&self.quant.server)),
+        ]);
+        let sim = Json::obj(vec![
+            ("concurrency", num(self.sim.concurrency as f64)),
+            ("duration", Json::str(&self.sim.duration)),
+            ("duration_sigma", num(self.sim.duration_sigma)),
+            ("arrival", Json::str(&self.sim.arrival)),
+            ("eval_every", num(self.sim.eval_every as f64)),
+        ]);
+        let aggregators = Json::obj(vec![
+            ("edges", num(self.scenario.aggregators.edges as f64)),
+            ("buffer_size", num(self.scenario.aggregators.buffer_size as f64)),
+            ("partial_codec", Json::str(&self.scenario.aggregators.partial_codec)),
+        ]);
+        let mut scenario = vec![
+            ("sampling", Json::str(&self.scenario.sampling)),
+            ("burst_factor", num(self.scenario.burst_factor)),
+            ("burst_on", num(self.scenario.burst_on)),
+            ("burst_off", num(self.scenario.burst_off)),
+            ("tier_user_pools", Json::Bool(self.scenario.tier_user_pools)),
+            ("aggregators", aggregators),
+        ];
+        if let Some(a) = &self.scenario.arrival {
+            scenario.push(("arrival", Json::str(a)));
+        }
+        if !self.scenario.tiers.is_empty() {
+            let tiers: Vec<Json> = self
+                .scenario
+                .tiers
+                .iter()
+                .map(|t| {
+                    let mut fields = vec![
+                        ("name", Json::str(&t.name)),
+                        ("weight", num(t.weight)),
+                        ("duration", Json::str(&t.duration)),
+                        ("duration_sigma", num(t.duration_sigma)),
+                        ("upload_mbps", num(t.upload_mbps)),
+                        ("download_mbps", num(t.download_mbps)),
+                        ("dropout", num(t.dropout)),
+                        ("day_period", num(t.day_period)),
+                        ("on_fraction", num(t.on_fraction)),
+                        ("phase", num(t.phase)),
+                        ("partial_work", num(t.partial_work)),
+                    ];
+                    if let Some(q) = &t.quant_client {
+                        fields.push(("quant_client", Json::str(q)));
+                    }
+                    Json::obj(fields)
+                })
+                .collect();
+            scenario.push(("tiers", Json::Arr(tiers)));
+        }
+        let mut net = vec![
+            ("addr", Json::str(&self.net.addr)),
+            ("workers", num(self.net.workers as f64)),
+            ("v1_grace_ms", num(self.net.v1_grace_ms as f64)),
+            ("edge_buffer", num(self.net.edge_buffer as f64)),
+            ("partial_codec", Json::str(&self.net.partial_codec)),
+        ];
+        if let Some(t) = &self.net.tier {
+            net.push(("tier", Json::str(t)));
+        }
+        if let Some(q) = &self.net.quant_client {
+            net.push(("quant_client", Json::str(q)));
+        }
+        if let Some(u) = &self.net.upstream {
+            net.push(("upstream", Json::str(u)));
+        }
+        let data = Json::obj(vec![
+            ("num_users", num(self.data.num_users as f64)),
+            ("seed", num(self.data.seed as f64)),
+            ("min_samples", num(self.data.min_samples as f64)),
+            ("max_samples", num(self.data.max_samples as f64)),
+            ("noise", num(f64::from(self.data.noise))),
+            ("style", num(f64::from(self.data.style))),
+            ("signal", num(f64::from(self.data.signal))),
+            ("eval_samples", num(self.data.eval_samples as f64)),
+        ]);
+        let stop = Json::obj(vec![
+            ("target_accuracy", num(self.stop.target_accuracy)),
+            ("max_uploads", num(self.stop.max_uploads as f64)),
+            ("max_server_steps", num(self.stop.max_server_steps as f64)),
+        ]);
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
+            ("out_dir", Json::str(&self.out_dir)),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| num(s as f64)).collect()),
+            ),
+            ("fl", fl),
+            ("quant", quant),
+            ("sim", sim),
+            ("scenario", Json::obj(scenario)),
+            ("net", Json::obj(net)),
+            ("data", data),
+            ("stop", stop),
+        ])
+    }
+
     /// Consistency checks (fail fast, before any compute).
     pub fn validate(&self) -> Result<()> {
         if self.fl.buffer_size == 0 {
@@ -796,6 +979,9 @@ impl Config {
         }
         crate::quant::parse_spec(&self.net.partial_codec)
             .map_err(|e| anyhow!("bad net.partial_codec spec '{}': {e}", self.net.partial_codec))?;
+        if self.telemetry.checkpoint_every > 0 && self.telemetry.journal.is_none() {
+            bail!("telemetry.checkpoint_every needs telemetry.journal (checkpoints live in it)");
+        }
         self.validate_scenario()
     }
 
@@ -1251,6 +1437,111 @@ mod tests {
         let mut c = Config::default();
         c.net.partial_codec = "qsgd:x".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn telemetry_knobs_round_trip_and_validate() {
+        let c = Config::default();
+        assert_eq!(c.telemetry.journal, None);
+        assert_eq!(c.telemetry.checkpoint_every, 0);
+        assert_eq!(c.telemetry.progress, 0);
+
+        let doc = toml::parse(
+            "[telemetry]\njournal = \"run.jsonl\"\ncheckpoint_every = 100\nprogress = 10\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.telemetry.journal.as_deref(), Some("run.jsonl"));
+        assert_eq!(c.telemetry.checkpoint_every, 100);
+        assert_eq!(c.telemetry.progress, 10);
+
+        // CLI --set reaches the same knobs
+        let mut c = Config::default();
+        c.set("telemetry.journal=\"j.jsonl\"").unwrap();
+        c.set("telemetry.progress=5").unwrap();
+        assert_eq!(c.telemetry.journal.as_deref(), Some("j.jsonl"));
+        assert_eq!(c.telemetry.progress, 5);
+
+        // checkpoints need a journal to live in
+        let mut c = Config::default();
+        c.telemetry.checkpoint_every = 50;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("telemetry.journal"), "{err}");
+        c.telemetry.journal = Some("run.jsonl".into());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn to_json_round_trips_through_apply() {
+        let mut c = Config::default();
+        c.name = "roundtrip".into();
+        c.seeds = vec![7, 9];
+        c.fl.algorithm = Algorithm::FedBuff;
+        c.fl.clip_norm = 0.5;
+        c.quant.server = "qsgd:2".into();
+        c.sim.duration = "lognormal".into();
+        c.scenario.arrival = Some("bursty".into());
+        c.scenario.tier_user_pools = true;
+        c.scenario.aggregators.edges = 2;
+        c.scenario.aggregators.buffer_size = 2;
+        // out-of-alphabetical tier order, as repeated --set can produce
+        c.set("scenario.tiers.phone.quant_client=\"top:0.1\"").unwrap();
+        c.set("scenario.tiers.apad.weight=2").unwrap();
+        c.net.tier = Some("phone".into());
+        c.net.upstream = Some("127.0.0.1:7711".into());
+        c.telemetry.journal = Some("run.jsonl".into());
+        c.telemetry.progress = 5;
+
+        let doc = c.to_json();
+        let mut back = Config::default();
+        back.apply(&doc).unwrap();
+        // field-for-field round trip, including tier declaration order
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+        assert_eq!(back.scenario.tiers.len(), 2);
+        assert_eq!(back.scenario.tiers[0].name, "phone");
+        assert_eq!(back.scenario.tiers[1].name, "apad");
+        assert_eq!(back.scenario.tiers[1].weight, 2.0);
+        assert_eq!(back.fl.algorithm, Algorithm::FedBuff);
+        assert_eq!(back.net.upstream.as_deref(), Some("127.0.0.1:7711"));
+        // telemetry is observer config: absent from the doc, so the
+        // fingerprint of a run does not depend on whether it was recorded
+        assert!(doc.get("telemetry").is_none());
+        assert_eq!(back.telemetry.journal, None);
+
+        // defaults round-trip too
+        let c = Config::default();
+        let mut back = Config::default();
+        back.apply(&c.to_json()).unwrap();
+        assert_eq!(back.to_json().to_string(), c.to_json().to_string());
+    }
+
+    #[test]
+    fn tiers_array_form_keeps_order_and_rejects_anonymous_entries() {
+        // the array form is how to_json() docs express tier order (the
+        // vendored TOML parser has no [[array-of-tables]], so this path
+        // is JSON-doc-only)
+        let tiers = |list: Vec<Json>| {
+            Json::obj(vec![("scenario", Json::obj(vec![("tiers", Json::Arr(list))]))])
+        };
+        let mut c = Config::default();
+        c.apply(&tiers(vec![
+            Json::obj(vec![("name", Json::str("zeta")), ("weight", Json::num(3.0))]),
+            Json::obj(vec![("name", Json::str("alpha")), ("dropout", Json::num(0.1))]),
+        ]))
+        .unwrap();
+        assert_eq!(c.scenario.tiers.len(), 2);
+        assert_eq!(c.scenario.tiers[0].name, "zeta");
+        assert_eq!(c.scenario.tiers[0].weight, 3.0);
+        assert_eq!(c.scenario.tiers[1].name, "alpha");
+        assert_eq!(c.scenario.tiers[1].dropout, 0.1);
+
+        let mut c = Config::default();
+        let err = c
+            .apply(&tiers(vec![Json::obj(vec![("weight", Json::num(1.0))])]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("name"), "{err}");
     }
 
     #[test]

@@ -38,11 +38,14 @@
 use crate::config::{Algorithm, Config};
 use crate::metrics::CommMetrics;
 use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
+use crate::telemetry::event::{hex_f32s, hex_u64, parse_hex_f32s, parse_hex_u64};
+use crate::telemetry::{self, StageTimings};
+use crate::util::json::Json;
 use crate::util::pool::{ShardPool, Task};
 use crate::util::prng::Prng;
 use crate::util::shard::span_for;
 use crate::util::vecf;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
 /// A server->clients broadcast message.
@@ -115,6 +118,9 @@ pub struct Server {
     diff: Vec<f32>,
     // --- accounting --------------------------------------------------------
     pub comm: CommMetrics,
+    /// Per-stage wall time of the aggregation pipeline (`steps` counts
+    /// always; the ns fields accumulate only while `telemetry::enabled`).
+    stages: StageTimings,
     /// Staleness histogram data (max observed, sum for mean).
     pub staleness_max: u64,
     pub staleness_sum: u64,
@@ -180,6 +186,7 @@ impl Server {
             rng: Prng::new(seed).stream("server-quant"),
             diff: vec![0.0; d],
             comm: CommMetrics::default(),
+            stages: StageTimings::default(),
             staleness_max: 0,
             staleness_sum: 0,
             staleness_n: 0,
@@ -368,7 +375,9 @@ impl Server {
         // Dequantize straight into the aggregation buffer (no temp
         // alloc), shard-parallel on the persistent pool when S > 1.
         let quant_c = self.client_codecs[codec].as_ref();
+        let timer = telemetry::span_start();
         sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
+        self.stages.accumulate_ns += telemetry::span_ns(timer);
         self.k_filled += 1;
 
         if self.k_filled < self.k_buffer {
@@ -455,7 +464,9 @@ impl Server {
         self.staleness_n += staleness.n;
 
         let quant_p = self.partial_codecs[codec].as_ref();
+        let timer = telemetry::span_start();
         sharded::accumulate(quant_p, update, 1.0, &mut self.buffer, &self.pool)?;
+        self.stages.accumulate_ns += telemetry::span_ns(timer);
         self.k_filled += count as usize;
 
         if self.k_filled < self.k_buffer {
@@ -475,6 +486,7 @@ impl Server {
 
         // v <- beta * v + delta_bar ; x <- x + eta_g * v ; delta_bar <- 0
         // (purely elementwise: identical floats for any shard split)
+        let timer = telemetry::span_start();
         if shards > 1 && span < self.d {
             let tasks: Vec<Task<'_>> = self
                 .momentum
@@ -499,11 +511,14 @@ impl Server {
             }
             vecf::zero(&mut self.buffer);
         }
+        self.stages.momentum_ns += telemetry::span_ns(timer);
         self.k_filled = 0;
         self.t += 1;
+        self.stages.steps += 1;
 
         let broadcast = if self.hidden_state_mode {
             // q^t = Q_s(x^{t+1} - x_hat^t); x_hat^{t+1} = x_hat^t + q^t
+            let timer = telemetry::span_start();
             if shards > 1 && span < self.d {
                 let tasks: Vec<Task<'_>> = self
                     .diff
@@ -516,19 +531,28 @@ impl Server {
             } else {
                 vecf::sub(&mut self.diff, &self.x, &self.x_hat);
             }
+            self.stages.diff_ns += telemetry::span_ns(timer);
+            let timer = telemetry::span_start();
             let msg = sharded::quantize(self.quant_s.as_ref(), &self.diff, &mut self.rng, &self.pool);
+            self.stages.encode_ns += telemetry::span_ns(timer);
             let bytes = msg.wire_bytes();
             self.comm.record_broadcast(bytes);
+            let timer = telemetry::span_start();
             let x_hat = Arc::make_mut(&mut self.x_hat);
             sharded::accumulate(self.quant_s.as_ref(), &msg, 1.0, x_hat, &self.pool)?;
+            self.stages.advance_ns += telemetry::span_ns(timer);
             Broadcast { t: self.t, bytes, msg, absolute: false }
         } else {
             // DirectQuant baseline: broadcast Q_s(x^{t+1}) itself
+            let timer = telemetry::span_start();
             let msg = sharded::quantize(self.quant_s.as_ref(), &self.x, &mut self.rng, &self.pool);
+            self.stages.encode_ns += telemetry::span_ns(timer);
             let bytes = msg.wire_bytes();
             self.comm.record_broadcast(bytes);
+            let timer = telemetry::span_start();
             let x_hat = Arc::make_mut(&mut self.x_hat);
             sharded::dequantize_into(self.quant_s.as_ref(), &msg, x_hat, &self.pool)?;
+            self.stages.advance_ns += telemetry::span_ns(timer);
             Broadcast { t: self.t, bytes, msg, absolute: true }
         };
         Ok(broadcast)
@@ -538,6 +562,112 @@ impl Server {
     /// the "quantization" error term of Lemma F.9 (‖x^t − x̂^t‖²).
     pub fn hidden_state_error_sq(&self) -> f64 {
         vecf::dist2_sq(&self.x, &self.x_hat)
+    }
+
+    /// Cumulative per-stage wall time of the aggregation pipeline.
+    /// `steps` is always real; the ns fields are all-zero unless
+    /// [`telemetry::set_enabled`] turned span capture on.
+    pub fn stage_timings(&self) -> &StageTimings {
+        &self.stages
+    }
+
+    /// Full server-state snapshot for a `Checkpoint` journal event:
+    /// model, hidden state, momentum, aggregation buffer, counters, the
+    /// quantizer RNG stream and the comm/staleness accounting. Vectors
+    /// are hex-encoded little-endian f32 bytes and RNG words are hex
+    /// strings, so [`Server::restore_state`] is a bit-exact round trip.
+    /// Stage timings are wall-clock observer data and deliberately not
+    /// part of the snapshot.
+    pub fn state_json(&self) -> Json {
+        let rng = self.rng.state();
+        Json::obj(vec![
+            ("d", Json::num(self.d as f64)),
+            ("t", Json::num(self.t as f64)),
+            ("k_filled", Json::num(self.k_filled as f64)),
+            ("x", Json::str(&hex_f32s(&self.x))),
+            ("x_hat", Json::str(&hex_f32s(&self.x_hat))),
+            ("momentum", Json::str(&hex_f32s(&self.momentum))),
+            ("buffer", Json::str(&hex_f32s(&self.buffer))),
+            (
+                "rng",
+                Json::Arr(rng.iter().map(|&w| Json::str(&hex_u64(w))).collect()),
+            ),
+            ("uploads", Json::num(self.comm.uploads as f64)),
+            ("upload_bytes", Json::num(self.comm.upload_bytes as f64)),
+            ("broadcasts", Json::num(self.comm.broadcasts as f64)),
+            ("broadcast_bytes", Json::num(self.comm.broadcast_bytes as f64)),
+            ("staleness_max", Json::num(self.staleness_max as f64)),
+            ("staleness_sum", Json::num(self.staleness_sum as f64)),
+            ("staleness_n", Json::num(self.staleness_n as f64)),
+        ])
+    }
+
+    /// Restore the snapshot taken by [`Server::state_json`] into a
+    /// server built from the *same config* (codecs, K, shards and
+    /// algorithm come from construction; only run state is restored).
+    pub fn restore_state(&mut self, state: &Json) -> Result<()> {
+        let field = |k: &str| {
+            state
+                .get(k)
+                .ok_or_else(|| anyhow!("checkpoint state: missing field '{k}'"))
+        };
+        let uint = |k: &str| -> Result<u64> {
+            field(k)?
+                .as_f64()
+                .map(|f| f as u64)
+                .ok_or_else(|| anyhow!("checkpoint state: field '{k}' must be a number"))
+        };
+        let vector = |k: &str| -> Result<Vec<f32>> {
+            let text = field(k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("checkpoint state: field '{k}' must be a hex string"))?;
+            let v = parse_hex_f32s(text)?;
+            if v.len() != self.d {
+                bail!(
+                    "checkpoint state: '{k}' has dimension {} but the server has d={} — \
+                     the checkpoint was taken under a different config",
+                    v.len(),
+                    self.d
+                );
+            }
+            Ok(v)
+        };
+        let d = uint("d")? as usize;
+        if d != self.d {
+            bail!(
+                "checkpoint state: snapshot dimension {d} != model dimension {} — \
+                 the checkpoint was taken under a different config",
+                self.d
+            );
+        }
+        let rng_words = field("rng")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("checkpoint state: 'rng' must be an array"))?;
+        if rng_words.len() != 4 {
+            bail!("checkpoint state: 'rng' must hold 4 words, got {}", rng_words.len());
+        }
+        let mut words = [0u64; 4];
+        for (i, w) in rng_words.iter().enumerate() {
+            let text = w
+                .as_str()
+                .ok_or_else(|| anyhow!("checkpoint state: rng words must be hex strings"))?;
+            words[i] = parse_hex_u64(text)?;
+        }
+        self.x = vector("x")?;
+        self.x_hat = Arc::new(vector("x_hat")?);
+        self.momentum = vector("momentum")?;
+        self.buffer = vector("buffer")?;
+        self.k_filled = uint("k_filled")? as usize;
+        self.t = uint("t")?;
+        self.rng = Prng::from_state(words);
+        self.comm.uploads = uint("uploads")?;
+        self.comm.upload_bytes = uint("upload_bytes")?;
+        self.comm.broadcasts = uint("broadcasts")?;
+        self.comm.broadcast_bytes = uint("broadcast_bytes")?;
+        self.staleness_max = uint("staleness_max")?;
+        self.staleness_sum = uint("staleness_sum")?;
+        self.staleness_n = uint("staleness_n")?;
+        Ok(())
     }
 }
 
@@ -847,6 +977,80 @@ mod tests {
                 "S={shards} hidden state"
             );
         }
+    }
+
+    #[test]
+    fn stage_timings_count_steps_without_telemetry() {
+        // `steps` counts unconditionally (the ns fields gate on the
+        // global telemetry switch, which other tests may toggle — so
+        // only the counter is asserted here).
+        let cfg = cfg_with("fedbuff", 1);
+        let mut s = Server::build(&cfg, vec![0.0; 4], 1).unwrap();
+        upload(&mut s, &[1.0, 0.0, 0.0, 0.0], 0);
+        upload(&mut s, &[0.0, 1.0, 0.0, 0.0], 0);
+        assert_eq!(s.stage_timings().steps, 2);
+    }
+
+    #[test]
+    fn checkpoint_state_round_trips_bit_exactly() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:4".into();
+        cfg.fl.server_momentum = 0.3;
+        let d = 128 + 17;
+        let mut a = Server::build(&cfg, vec![0.0; d], 5).unwrap();
+        let qc = parse_spec("qsgd:8").unwrap();
+        let mut up = Prng::new(21);
+        // 5 ingests = 2 steps + one buffered upload: the snapshot must
+        // capture a half-filled aggregation buffer too
+        for round in 0..5u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.03 + round as f32).sin()).collect();
+            let msg = qc.quantize(&delta, &mut up);
+            let _ = a.ingest(&msg, round % 3).unwrap();
+        }
+        let snap = a.state_json();
+
+        // restore into a fresh server of the same config; the different
+        // construction seed must not matter (the snapshot carries the
+        // live quantizer RNG state)
+        let mut b = Server::build(&cfg, vec![0.0; d], 999).unwrap();
+        b.restore_state(&snap).unwrap();
+        assert_eq!(b.t(), a.t());
+        assert_eq!(b.model(), a.model());
+        assert_eq!(b.client_snapshot().as_slice(), a.client_snapshot().as_slice());
+        assert_eq!(b.comm.uploads, a.comm.uploads);
+        assert_eq!(b.staleness_mean(), a.staleness_mean());
+
+        // both continue bit-identically, including quantizer noise draws
+        let more: Vec<QuantizedMsg> = (0..6u64)
+            .map(|r| {
+                let delta: Vec<f32> =
+                    (0..d).map(|i| (i as f32 * 0.07 + r as f32).cos()).collect();
+                qc.quantize(&delta, &mut up)
+            })
+            .collect();
+        for (r, msg) in more.iter().enumerate() {
+            let ra = a.ingest(msg, (r % 2) as u64).unwrap();
+            let rb = b.ingest(msg, (r % 2) as u64).unwrap();
+            match (ra, rb) {
+                (ServerStep::Stepped(x), ServerStep::Stepped(y)) => {
+                    assert_eq!(x.t, y.t, "round {r}");
+                    assert_eq!(x.msg.payload, y.msg.payload, "round {r} broadcast");
+                }
+                (ServerStep::Buffered, ServerStep::Buffered) => {}
+                _ => panic!("restored server diverged at round {r}"),
+            }
+        }
+        assert_eq!(a.model(), b.model());
+
+        // a snapshot from a different model dimension fails loudly
+        let mut tiny = Server::build(&cfg, vec![0.0; 8], 1).unwrap();
+        let err = tiny.restore_state(&snap).unwrap_err().to_string();
+        assert!(err.contains("different config"), "{err}");
+        // and a gutted snapshot names the missing field
+        let err = tiny.restore_state(&Json::obj(vec![])).unwrap_err().to_string();
+        assert!(err.contains("missing field"), "{err}");
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub fn hidden_state(
         let set = run_seeds(&cfg, make_backend, opts, label)?;
         rows.push(aggregate(&set));
     }
-    let md = report("ablation_hidden_state", out_dir, &rows)?;
+    let md = report("ablation_hidden_state", out_dir, base, &rows)?;
     println!("{md}");
     Ok(rows)
 }
@@ -54,7 +54,7 @@ pub fn k_sweep(
         let set = run_seeds(&cfg, make_backend, opts, &format!("K={k}"))?;
         rows.push(aggregate(&set));
     }
-    let md = report("ablation_k_sweep", out_dir, &rows)?;
+    let md = report("ablation_k_sweep", out_dir, base, &rows)?;
     println!("{md}");
     Ok(rows)
 }
@@ -74,7 +74,7 @@ pub fn staleness(
         let set = run_seeds(&cfg, make_backend, opts, label)?;
         rows.push(aggregate(&set));
     }
-    let md = report("ablation_staleness", out_dir, &rows)?;
+    let md = report("ablation_staleness", out_dir, base, &rows)?;
     println!("{md}");
     Ok(rows)
 }

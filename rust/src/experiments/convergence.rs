@@ -101,6 +101,7 @@ pub fn run(
 
     // csv
     let mut csv = CsvWriter::new(&["label", "horizon", "rate"]);
+    super::runner::stamp(&mut csv, base);
     for p in &points {
         csv.row(&[p.label.clone(), p.horizon.to_string(), format!("{:.6e}", p.rate)]);
     }

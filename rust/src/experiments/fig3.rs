@@ -40,7 +40,7 @@ pub fn run(
             rows.push(aggregate(&set));
         }
     }
-    let md = report("fig3", out_dir, &rows)?;
+    let md = report("fig3", out_dir, base, &rows)?;
     println!("{md}");
     Ok(rows)
 }

@@ -135,8 +135,10 @@ pub fn run(
     }
     rows.push(aggregate(&set));
 
-    let md = report("heterogeneity", out_dir, &rows)?;
+    let md = report("heterogeneity", out_dir, base, &rows)?;
     println!("{md}");
+    super::runner::stamp(&mut tiers_csv, base);
+    super::runner::stamp(&mut presets_csv, base);
     tiers_csv.save(format!("{out_dir}/heterogeneity_tiers.csv"))?;
     presets_csv.save(format!("{out_dir}/heterogeneity_presets.csv"))?;
     Ok(rows)

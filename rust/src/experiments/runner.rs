@@ -94,8 +94,18 @@ pub fn aggregate(set: &RunSet) -> Row {
     }
 }
 
+/// Stamp provenance comments (`# config <fingerprint>`, `# git <rev>`)
+/// onto an experiment CSV so any result file names the exact resolved
+/// config that produced it (ARCHITECTURE.md §Telemetry).
+pub fn stamp(csv: &mut CsvWriter, base: &Config) {
+    csv.comment(&format!("config {}", crate::telemetry::config_fingerprint(base)));
+    if let Some(git) = crate::telemetry::git_describe() {
+        csv.comment(&format!("git {git}"));
+    }
+}
+
 /// Write rows as csv + a paper-style markdown table; returns the markdown.
-pub fn report(name: &str, out_dir: &str, rows: &[Row]) -> Result<String> {
+pub fn report(name: &str, out_dir: &str, base: &Config, rows: &[Row]) -> Result<String> {
     let mut csv = CsvWriter::new(&[
         "label",
         "uploads_k_mean",
@@ -110,6 +120,7 @@ pub fn report(name: &str, out_dir: &str, rows: &[Row]) -> Result<String> {
         "reached_frac",
         "final_acc_mean",
     ]);
+    stamp(&mut csv, base);
     for r in rows {
         csv.row(&[
             r.label.clone(),
@@ -211,8 +222,10 @@ mod tests {
             reached_frac: 1.0,
             final_acc_mean: 0.92,
         };
-        let md = report("unit", &dir, &[row]).unwrap();
+        let md = report("unit", &dir, &quick_cfg(), &[row]).unwrap();
         assert!(md.contains("| x |"));
+        let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("unit.csv")).unwrap();
+        assert!(csv.starts_with("# config "), "missing provenance header: {csv}");
         assert!(std::path::Path::new(&dir).join("unit.csv").exists());
         assert!(std::path::Path::new(&dir).join("unit.md").exists());
         let _ = std::fs::remove_dir_all(&dir);

@@ -32,7 +32,7 @@ pub fn run(
         let set = run_seeds(&cfg, make_backend, opts, &label)?;
         rows.push(aggregate(&set));
     }
-    let md = report("table2", out_dir, &rows)?;
+    let md = report("table2", out_dir, base, &rows)?;
     println!("{md}");
     Ok(rows)
 }

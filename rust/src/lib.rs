@@ -44,6 +44,7 @@ pub mod quant;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 

@@ -6,6 +6,8 @@
 //!   scenario-engine ablation into `reports/`.
 //! * `run` — one simulated training run, printing the curve.
 //! * `leader` / `worker` — the real TCP distributed runtime.
+//! * `journal tail|replay` — inspect or bit-verify a flight-recorder
+//!   journal (ARCHITECTURE.md §Telemetry).
 //! * `info` — inspect an artifact manifest.
 //! * `selfcheck` — cross-validate the rust qsgd codec against the L1
 //!   Pallas kernel artifact, and the full PJRT round-trip.
@@ -38,6 +40,9 @@ commands:
                                                 TCP edge leader (tree node:
                                                 worker upstream, leader down)
   worker --addr HOST:PORT                       TCP worker (quadratic backend)
+  journal tail FILE.jsonl                       pretty-print a run journal
+  journal replay FILE.jsonl                     re-execute a journal and
+                                                verify every broadcast bit
   info                                          show artifact manifest
   selfcheck                                     PJRT + Pallas cross-checks
 
@@ -51,6 +56,14 @@ options:
   --which LIST       ablate: hidden-state,k-sweep,staleness,non-broadcast
   --fast             heterogeneity: tiny population smoke (CI)
   --verbose          progress logging
+
+flight recorder (run + leader; ARCHITECTURE.md §Telemetry):
+  --journal FILE     write the event-sourced run journal (JSONL)
+  --checkpoint-every N  emit a resume checkpoint every N server steps
+  --resume           continue a killed run from the journal's last
+                     checkpoint (requires --journal; appends to it)
+  --progress N       print a live progress line every N server steps
+  --timings          worker: enable span timers and print a breakdown
 
 net options (wire protocol v2, ARCHITECTURE.md; defaults from [net]):
   --addr HOST:PORT   leader listen / worker connect address
@@ -87,6 +100,42 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply the flight-recorder flags (`--journal`, `--checkpoint-every`,
+/// `--progress`) on top of the loaded config and re-validate. CLI flags
+/// win over `[telemetry]` keys the same way `--addr` wins over
+/// `net.addr`.
+fn apply_telemetry_flags(args: &Args, cfg: &mut Config) -> Result<()> {
+    if let Some(path) = args.opt("journal") {
+        cfg.telemetry.journal = Some(path.to_string());
+    }
+    if let Some(n) = args.opt_parse::<u64>("checkpoint-every")? {
+        cfg.telemetry.checkpoint_every = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("progress")? {
+        cfg.telemetry.progress = n;
+    }
+    cfg.validate()?;
+    Ok(())
+}
+
+/// One-line per-step stage breakdown, or nothing when spans were off.
+fn print_stage_timings(st: &qafel::telemetry::StageTimings) {
+    if st.steps == 0 {
+        return;
+    }
+    let per = |ns: u64| ns as f64 / st.steps as f64 / 1000.0;
+    println!(
+        "  stage us/step  : accumulate {:.1}, momentum {:.1}, diff {:.1}, \
+         encode {:.1}, advance {:.1} (total {:.1})",
+        per(st.accumulate_ns),
+        per(st.momentum_ns),
+        per(st.diff_ns),
+        per(st.encode_ns),
+        per(st.advance_ns),
+        per(st.total_ns()),
+    );
 }
 
 /// Tune the analytic backend's hyperparameters (the paper's CelebA values
@@ -264,12 +313,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.set(assignment)?;
         }
     }
+    apply_telemetry_flags(args, &mut cfg)?;
     let factory = make_factory(&kind, &cfg);
-    let opts = SimOptions { verbose: true, ..Default::default() };
+    let opts = SimOptions { verbose: true, resume: args.flag("resume"), ..Default::default() };
     let seed = cfg.seeds[0];
     let backend = factory(seed)?;
     let result = SimEngine::new(&cfg, backend.as_ref(), seed).run_with(&opts)?;
     println!("\nrun complete ({:.1}s wall):", result.wall_seconds);
+    println!("  fingerprint    : {}", result.fingerprint);
     println!("  algorithm      : {}", cfg.fl.algorithm.name());
     println!("  quantizers     : client {}, server {}", cfg.quant.client, cfg.quant.server);
     println!("  server steps   : {}", result.server_steps);
@@ -279,6 +330,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  MB uploaded    : {:.2}", result.comm.upload_mb());
     println!("  MB broadcast   : {:.2}", result.comm.broadcast_mb());
     println!("  final accuracy : {:.4}", result.final_accuracy);
+    print_stage_timings(&result.stage_timings);
     match result.reached {
         Some(p) => println!(
             "  reached {:.0}% at: {} uploads / {:.1} MB up / t={:.1}",
@@ -348,7 +400,9 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 }
 
 fn cmd_leader(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    apply_telemetry_flags(args, &mut cfg)?;
+    let resume = args.flag("resume");
     let addr = args.opt("addr").unwrap_or(cfg.net.addr.as_str()).to_string();
     let workers: usize = args.opt_parse("workers")?.unwrap_or(cfg.net.workers);
     let report_json = args.opt("report-json").map(str::to_string);
@@ -357,6 +411,12 @@ fn cmd_leader(args: &Args) -> Result<()> {
     let upstream =
         args.opt("upstream").map(str::to_string).or_else(|| cfg.net.upstream.clone());
     if let Some(up) = upstream {
+        if cfg.telemetry.journal.is_some() || resume {
+            bail!(
+                "--journal/--resume apply to the root leader only; edge nodes \
+                 forward partials upstream, the root journals them"
+            );
+        }
         return cmd_edge_leader(cfg, &up, &addr, workers, report_json);
     }
     // leader evaluates nothing; it needs x0 of the right dimension (the
@@ -373,10 +433,14 @@ fn cmd_leader(args: &Args) -> Result<()> {
     };
     let d = x0.len();
     println!("[leader] serving on {addr}, waiting for {workers} workers ...");
-    let report = Leader::new(cfg, x0.clone(), 1).run(&addr, workers)?;
+    let mut leader = Leader::new(cfg, x0.clone(), 1);
+    leader.resume = resume;
+    let report = leader.run(&addr, workers)?;
     println!("[leader] done: {} steps, {} uploads, kB/up {:.3}, staleness max {} mean {:.2}",
              report.server_steps, report.comm.uploads, report.comm.kb_per_upload(),
              report.staleness_max, report.staleness_mean);
+    println!("[leader] fingerprint {}", report.fingerprint);
+    print_stage_timings(&report.stage_timings);
     let grad_ratio = quad.map(|b| {
         let g0 = b.grad_norm_sq(&x0);
         let g1 = b.grad_norm_sq(&report.model);
@@ -417,10 +481,14 @@ fn cmd_leader(args: &Args) -> Result<()> {
                 ("broadcast_bytes", Json::num(ws.broadcast_bytes as f64)),
                 ("staleness_mean", Json::num(ws.staleness.mean())),
                 ("staleness_max", Json::num(ws.staleness.max as f64)),
+                ("ingest_ns", Json::num(ws.ingest_ns as f64)),
+                ("send_ns", Json::num(ws.send_ns as f64)),
             ]));
         }
         let doc = Json::obj(vec![
             ("d", Json::num(d as f64)),
+            ("fingerprint", Json::str(report.fingerprint.clone())),
+            ("stage_timings", report.stage_timings.to_json()),
             ("server_steps", Json::num(report.server_steps as f64)),
             ("uploads", Json::num(report.comm.uploads as f64)),
             ("upload_bytes", Json::num(report.comm.upload_bytes as f64)),
@@ -530,12 +598,170 @@ fn cmd_worker(args: &Args) -> Result<()> {
     w.quant_client =
         args.opt("quant-client").map(str::to_string).or_else(|| cfg.net.quant_client.clone());
     w.force_v1 = args.flag("v1");
+    let timings = args.flag("timings");
+    if timings {
+        qafel::telemetry::set_enabled(true);
+    }
     let report = w.run(&addr)?;
     println!(
         "[worker {}] {} uploads, replica t={}, protocol v{}, codec {}",
         report.worker_id, report.uploads, report.replica_t, report.protocol, report.codec
     );
+    if timings && report.uploads > 0 {
+        let per = |ns: u64| ns as f64 / report.uploads as f64 / 1000.0;
+        println!(
+            "[worker {}] us/round: train {:.1}, encode {:.1}, send {:.1} \
+             (broadcast decode total {:.1} us)",
+            report.worker_id,
+            per(report.train_ns),
+            per(report.encode_ns),
+            per(report.send_ns),
+            report.decode_ns as f64 / 1000.0,
+        );
+    }
     Ok(())
+}
+
+/// `qafel journal tail|replay <file.jsonl>` — inspect or verify a
+/// flight-recorder journal (ARCHITECTURE.md §Telemetry).
+fn cmd_journal(args: &Args) -> Result<()> {
+    use qafel::scenario::StalenessHist;
+    use qafel::telemetry::{progress_line, replay_file, Event, JournalReader};
+    let verb = args.positional.get(1).map(|s| s.as_str());
+    let path = match (verb, args.positional.get(2)) {
+        (Some("tail" | "replay"), None) => {
+            bail!("journal {} needs a journal path", verb.unwrap_or(""))
+        }
+        (_, p) => p.map(|s| s.as_str()).unwrap_or(""),
+    };
+    match verb {
+        Some("tail") => {
+            let events = JournalReader::read(path)?;
+            let mut hist = StalenessHist::default();
+            let mut prev_step: Option<Event> = None;
+            for ev in &events {
+                match ev {
+                    Event::Meta { runtime, algorithm, d, seed, fingerprint, git, .. } => {
+                        println!(
+                            "meta       {runtime}/{algorithm} d={d} seed={seed} \
+                             fingerprint={fingerprint} git={}",
+                            git.as_deref().unwrap_or("-")
+                        );
+                    }
+                    Event::Codec { reg, id, spec } => {
+                        println!("codec      {reg}[{id}] = {spec}");
+                    }
+                    Event::Init { x0, server_seed } => {
+                        println!("init       x0[{}] server_seed={server_seed}", x0.len());
+                    }
+                    Event::Arrival { time, tier, user, trip, t_start, dropped, partial } => {
+                        let fate = match (dropped, partial) {
+                            (true, Some(p)) => format!(" DROPPED(partial {p:.2})"),
+                            (true, None) => " DROPPED".to_string(),
+                            _ => String::new(),
+                        };
+                        println!(
+                            "arrival    t={time:.3} {tier} user={user} trip={trip} \
+                             from-step={t_start}{fate}"
+                        );
+                    }
+                    Event::Ingest { time, step, worker, codec, staleness, payload } => {
+                        println!(
+                            "ingest     t={time:.3} step={step} worker={worker} \
+                             codec={codec} staleness={staleness} {}B",
+                            payload.len()
+                        );
+                        hist.record(*staleness);
+                    }
+                    Event::IngestPartial {
+                        time,
+                        step,
+                        worker,
+                        codec,
+                        count,
+                        stale_counts,
+                        stale_sum,
+                        stale_max,
+                        stale_n,
+                        payload,
+                    } => {
+                        println!(
+                            "partial    t={time:.3} step={step} edge={worker} \
+                             codec={codec} count={count} {}B",
+                            payload.len()
+                        );
+                        hist.merge(&StalenessHist::from_parts(
+                            stale_counts.clone(),
+                            *stale_sum,
+                            *stale_max,
+                            *stale_n,
+                        ));
+                    }
+                    Event::Step { .. } => {
+                        if let Some(line) = progress_line(ev, prev_step.as_ref(), &hist) {
+                            println!("{line}");
+                        }
+                        prev_step = Some(ev.clone());
+                    }
+                    Event::Broadcast { time, step, absolute, payload } => {
+                        println!(
+                            "broadcast  t={time:.3} step={step} {}B{}",
+                            payload.len(),
+                            if *absolute { " (absolute)" } else { "" }
+                        );
+                    }
+                    Event::Eval { time, step, uploads, val_loss, val_accuracy } => {
+                        println!(
+                            "eval       t={time:.3} step={step} uploads={uploads} \
+                             loss={val_loss:.4} acc={val_accuracy:.4}"
+                        );
+                    }
+                    Event::Checkpoint { time, step, .. } => {
+                        println!("checkpoint t={time:.3} step={step}");
+                    }
+                    Event::Final {
+                        step,
+                        uploads,
+                        upload_bytes,
+                        broadcasts,
+                        broadcast_bytes,
+                        model,
+                    } => {
+                        println!(
+                            "final      step={step} uploads={uploads} \
+                             ({upload_bytes}B up) broadcasts={broadcasts} \
+                             ({broadcast_bytes}B down) model[{}]",
+                            model.len()
+                        );
+                    }
+                }
+            }
+            println!("-- {} events", events.len());
+            Ok(())
+        }
+        Some("replay") => {
+            let report = replay_file(path)?;
+            println!(
+                "replay OK: {} steps, {} ingests, {} broadcasts verified \
+                 bit-for-bit, {} checkpoints{}",
+                report.steps,
+                report.uploads,
+                report.broadcasts_checked,
+                report.checkpoints,
+                if report.finalized {
+                    ", final model verified"
+                } else {
+                    " (no Final event — journal from a killed run)"
+                }
+            );
+            Ok(())
+        }
+        other => bail!(
+            "journal needs tail|replay (got {:?}); \
+             usage: qafel journal <tail|replay> <file.jsonl>",
+            other
+        ),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -632,6 +858,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         Some("leader") => cmd_leader(&args),
         Some("worker") => cmd_worker(&args),
+        Some("journal") => cmd_journal(&args),
         Some("info") => cmd_info(&args),
         Some("selfcheck") => cmd_selfcheck(&args),
         Some("version") => {

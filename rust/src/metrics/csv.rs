@@ -7,13 +7,25 @@ use std::path::Path;
 /// Build a CSV document in memory, then persist it.
 #[derive(Clone, Debug, Default)]
 pub struct CsvWriter {
+    comments: Vec<String>,
     header: Vec<String>,
     rows: Vec<Vec<String>>,
 }
 
 impl CsvWriter {
     pub fn new(columns: &[&str]) -> CsvWriter {
-        CsvWriter { header: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+        CsvWriter {
+            comments: Vec::new(),
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add a `# line` comment emitted before the header — provenance
+    /// metadata (config fingerprint, git describe) that spreadsheet
+    /// tools and pandas (`comment='#'`) skip.
+    pub fn comment(&mut self, line: &str) {
+        self.comments.push(line.to_string());
     }
 
     /// Append a row; must match the header width.
@@ -24,6 +36,9 @@ impl CsvWriter {
 
     pub fn to_string(&self) -> String {
         let mut out = String::new();
+        for c in &self.comments {
+            let _ = writeln!(out, "# {c}");
+        }
         let _ = writeln!(out, "{}", self.header.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
         for r in &self.rows {
             let _ = writeln!(out, "{}", r.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
@@ -73,6 +88,14 @@ mod tests {
         let text = w.to_string();
         assert_eq!(text, "a,\"b,c\"\n1,\"x\"\"y\"\n1.23,plain\n");
         assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn comments_precede_header() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.comment("config deadbeef");
+        w.row(&["1".into()]);
+        assert_eq!(w.to_string(), "# config deadbeef\na\n1\n");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 pub mod csv;
 
 use crate::scenario::ScenarioMetrics;
+use crate::telemetry::StageTimings;
 
 /// Running communication totals for one run.
 #[derive(Clone, Debug, Default)]
@@ -97,6 +98,14 @@ pub struct RunResult {
     /// bytes by tier, concurrency/snapshot tracking). A single "default"
     /// tier for runs without a `[scenario]` table.
     pub scenario: ScenarioMetrics,
+    /// Cumulative per-stage server-step timings. `steps` always counts;
+    /// the `_ns` fields are populated only while telemetry spans are on
+    /// ([`crate::telemetry::set_enabled`]) — zero otherwise.
+    pub stage_timings: StageTimings,
+    /// Stable fingerprint of (resolved config, seed) — see
+    /// [`crate::telemetry::run_fingerprint`]. Ties every result row back
+    /// to the exact configuration that produced it.
+    pub fingerprint: String,
 }
 
 impl RunResult {
@@ -152,6 +161,8 @@ mod tests {
             server_steps: 10,
             wall_seconds: 0.0,
             scenario: Default::default(),
+            stage_timings: Default::default(),
+            fingerprint: String::new(),
         };
         assert_eq!(r.at_target().uploads, 50);
         let r2 = RunResult { reached: None, ..r };

@@ -227,14 +227,17 @@ impl EdgeLeader {
             writer_handles.push(std::thread::spawn(move || {
                 let mut frames = 0u64;
                 let mut bytes = 0u64;
+                let mut send_ns = 0u64;
                 for frame in wrx {
+                    let timer = crate::telemetry::span_start();
                     if writer.write_all(&frame).is_err() {
                         break;
                     }
+                    send_ns += crate::telemetry::span_ns(timer);
                     frames += 1;
                     bytes += frame.len() as u64;
                 }
-                (frames, bytes)
+                (frames, bytes, send_ns)
             }));
             writers.push(wtx);
             stats.push(WorkerStats {
@@ -248,6 +251,8 @@ impl EdgeLeader {
                 partials: 0,
                 broadcast_frames: 0,
                 broadcast_bytes: 0,
+                ingest_ns: 0,
+                send_ns: 0,
                 staleness: StalenessHist::default(),
             });
         }
@@ -317,7 +322,10 @@ impl EdgeLeader {
             if from == UPSTREAM {
                 match msg {
                     Message::Broadcast { t, absolute, payload } => {
-                        if t != replica_t + 1 {
+                        // one re-base is admitted, like the flat worker's
+                        // replica: after a root resume the first relayed
+                        // broadcast is the resumed step + 1
+                        if t != replica_t + 1 && !(replica_t == 0 && t > 0) {
                             bail!("edge {edge_worker_id}: broadcast gap {replica_t} -> {t}");
                         }
                         replica_t = t;
@@ -374,6 +382,7 @@ impl EdgeLeader {
             let qmsg = QuantizedMsg { payload, d };
             let wire = qmsg.wire_bytes();
             let staleness = replica_t.saturating_sub(t_start);
+            let timer = crate::telemetry::span_start();
             let outcome = edge.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
                 format!(
                     "ingesting upload from worker {from} ({}, codec '{}')",
@@ -381,6 +390,7 @@ impl EdgeLeader {
                     edge.client_codec_name(codec_id)
                 )
             })?;
+            stats[wid].ingest_ns += crate::telemetry::span_ns(timer);
             stats[wid].uploads += 1;
             stats[wid].upload_bytes += wire as u64;
             stats[wid].staleness.record(staleness);
@@ -402,9 +412,10 @@ impl EdgeLeader {
         drop(up);
         drop(writers);
         for (i, h) in writer_handles.into_iter().enumerate() {
-            if let Ok((frames, bytes)) = h.join() {
+            if let Ok((frames, bytes, send_ns)) = h.join() {
                 stats[i].broadcast_frames = frames;
                 stats[i].broadcast_bytes = bytes;
+                stats[i].send_ns = send_ns;
             }
         }
         for h in reader_handles {

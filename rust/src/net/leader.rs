@@ -17,6 +17,20 @@
 //! the step loop; writers are joined on shutdown (like `ShardPool`
 //! workers) and report the bytes they actually put on the wire, which
 //! feeds the per-worker accounting in [`LeaderReport`].
+//!
+//! **Flight recorder** (ARCHITECTURE.md §Telemetry): with
+//! `telemetry.journal` set the leader streams the same typed
+//! [`Event`] vocabulary the simulator writes — `Meta`/`Init`/`Codec`,
+//! one `Ingest`/`IngestPartial` per upload that reached the server,
+//! `Step` + `Broadcast` per committed step, `Checkpoint` every
+//! `telemetry.checkpoint_every` steps, and a closing `Final`. Because
+//! the journal records what *reached the server* in arrival order,
+//! [`crate::telemetry::replay_events`] reproduces the run's broadcasts
+//! bit-exactly even though TCP delivery itself is nondeterministic.
+//! [`Leader::resume`] restores the server from the journal's last
+//! checkpoint and appends; rejoining workers receive the checkpointed
+//! hidden state as their x^0 and pick up the broadcast stream at the
+//! resumed step (their uploads are staleness-floored at the join step).
 
 use super::message::{Message, PROTOCOL_VERSION};
 use super::transport::{frame_bytes, read_msg, read_msg_classified, write_msg, ReadOutcome};
@@ -25,12 +39,17 @@ use crate::coordinator::{Server, ServerStep};
 use crate::metrics::CommMetrics;
 use crate::quant::QuantizedMsg;
 use crate::scenario::StalenessHist;
+use crate::telemetry::event::{hex_u64, parse_hex_u64};
+use crate::telemetry::{
+    self, progress_line, truncate_after_last_checkpoint, Event, JournalWriter, StageTimings,
+};
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{ErrorKind, Write};
 use std::net::TcpListener;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Per-worker accounting, mirroring the simulator's per-tier
 /// [`crate::scenario::TierMetrics`]: what each connection uploaded,
@@ -63,35 +82,15 @@ pub struct WorkerStats {
     pub broadcast_frames: u64,
     /// Bytes this worker's writer thread actually wrote.
     pub broadcast_bytes: u64,
+    /// Wall time spent decoding + aggregating this worker's uploads
+    /// (the leader-side recv cost). Captured only while telemetry spans
+    /// are on ([`telemetry::set_enabled`]); zero otherwise.
+    pub ingest_ns: u64,
+    /// Wall time this worker's writer thread spent in socket writes
+    /// (the leader-side send cost). Span-gated like `ingest_ns`.
+    pub send_ns: u64,
     /// Staleness histogram over this worker's ingested uploads.
     pub staleness: StalenessHist,
-}
-
-/// One ingested upload in a recorded trace (see [`LeaderTrace`]).
-#[derive(Clone, Debug)]
-pub struct TraceUpdate {
-    pub worker_id: u32,
-    /// Codec registry id the payload was decoded with.
-    pub codec: usize,
-    /// Staleness the leader observed for this upload.
-    pub staleness: u64,
-    /// The exact wire payload.
-    pub payload: Vec<u8>,
-}
-
-/// A full record of the server-relevant event order of a run — enough
-/// to replay the leader's trajectory through the simulator's
-/// [`Server::ingest_from`] path and compare bit-for-bit. Recorded only
-/// when [`Leader::record_trace`] is set (tests); off by default.
-#[derive(Clone, Debug, Default)]
-pub struct LeaderTrace {
-    /// Spec names of the registered client codecs, in registry-id order
-    /// (replays must rebuild the registry in this order).
-    pub codecs: Vec<String>,
-    /// Every ingested upload, in ingest order.
-    pub updates: Vec<TraceUpdate>,
-    /// Every broadcast payload, in step order.
-    pub broadcasts: Vec<Vec<u8>>,
 }
 
 /// Final report of a leader run.
@@ -106,8 +105,16 @@ pub struct LeaderReport {
     pub workers: usize,
     /// Per-worker byte/staleness accounting, indexed by worker id.
     pub worker_stats: Vec<WorkerStats>,
-    /// Present when [`Leader::record_trace`] was set.
-    pub trace: Option<LeaderTrace>,
+    /// Cumulative per-stage server-step timings (span-gated; `steps`
+    /// always counts).
+    pub stage_timings: StageTimings,
+    /// [`telemetry::run_fingerprint`] of (resolved config, seed).
+    pub fingerprint: String,
+    /// The run's full event stream, present when
+    /// [`Leader::record_events`] was set: the same typed events a
+    /// journal file would hold, replayable via
+    /// [`crate::telemetry::replay_events`].
+    pub events: Option<Vec<Event>>,
 }
 
 /// Leader configuration + run loop.
@@ -115,14 +122,43 @@ pub struct Leader {
     cfg: Config,
     x0: Vec<f32>,
     seed: u64,
-    /// Record the full update/broadcast trace into the report (tests:
-    /// replay against the simulator's ingest path). Default off.
-    pub record_trace: bool,
+    /// Collect the run's journal events in memory into
+    /// [`LeaderReport::events`] (tests: replay without a journal file).
+    /// Fresh runs only — a resumed run's prefix lives in the file, so
+    /// the in-memory slice alone would not replay. Default off.
+    pub record_events: bool,
+    /// Resume from `telemetry.journal`: truncate it to its last
+    /// `Checkpoint`, restore the server state saved there, and append.
+    /// Default off.
+    pub resume: bool,
+}
+
+/// Fan-in sink for journal events: a file writer (the `--journal`
+/// path), an in-memory buffer ([`Leader::record_events`]), or both.
+struct Recorder {
+    writer: Option<JournalWriter>,
+    mem: Option<Vec<Event>>,
+}
+
+impl Recorder {
+    fn on(&self) -> bool {
+        self.writer.is_some() || self.mem.is_some()
+    }
+
+    fn emit(&mut self, ev: Event) -> Result<()> {
+        if let Some(w) = self.writer.as_mut() {
+            w.write(&ev)?;
+        }
+        if let Some(v) = self.mem.as_mut() {
+            v.push(ev);
+        }
+        Ok(())
+    }
 }
 
 impl Leader {
     pub fn new(cfg: Config, x0: Vec<f32>, seed: u64) -> Leader {
-        Leader { cfg, x0, seed, record_trace: false }
+        Leader { cfg, x0, seed, record_events: false, resume: false }
     }
 
     /// Serve on `addr` (e.g. "127.0.0.1:7710"), wait for exactly
@@ -136,6 +172,15 @@ impl Leader {
     /// Like [`Leader::run`] with a pre-bound listener (lets tests use an
     /// ephemeral port).
     pub fn run_on(&self, listener: TcpListener, n_workers: usize) -> Result<LeaderReport> {
+        let tel = &self.cfg.telemetry;
+        if self.resume && tel.journal.is_none() {
+            bail!("leader: resume needs telemetry.journal (the journal to resume from)");
+        }
+        // Spans cost one clock read per stage — turn them on whenever
+        // the run is being observed (same policy as the simulator).
+        if tel.journal.is_some() || tel.progress > 0 {
+            telemetry::set_enabled(true);
+        }
         // cfg.fl.shards > 1 turns on the shard-parallel aggregation
         // pipeline inside the server; the wire protocol is unchanged
         // (broadcast bytes are bit-identical for every shard count).
@@ -154,6 +199,82 @@ impl Leader {
         // registration order is the wire contract, as for client codecs.
         server.register_partial_codec(&self.cfg.net.partial_codec)?;
         let grace = Duration::from_millis(self.cfg.net.v1_grace_ms.max(1));
+
+        // --- resume: cut the journal back to its last checkpoint and
+        // restore the server saved there. The journal's surviving prefix
+        // is real history, so the whole file (prefix + what this session
+        // appends) still replays end-to-end through `replay_events`.
+        let mut t_base = 0.0f64;
+        if self.resume {
+            let path = tel.journal.as_deref().unwrap();
+            let prefix = truncate_after_last_checkpoint(path)?;
+            let Some(Event::Meta { runtime, fingerprint, .. }) = prefix.first() else {
+                bail!("journal '{path}' does not start with a meta event");
+            };
+            if runtime != "tcp" {
+                bail!("journal '{path}' was recorded by runtime '{runtime}', not the TCP leader");
+            }
+            let want = telemetry::run_fingerprint(&self.cfg, self.seed);
+            if *fingerprint != want {
+                bail!(
+                    "journal '{path}' was recorded under fingerprint {fingerprint}, but \
+                     this config/seed fingerprints as {want} — resume with the original config"
+                );
+            }
+            // Rebuild the codec registries exactly as replay does: the
+            // config-derived registrations above dedup to their original
+            // ids, dynamically negotiated ones re-register in journal
+            // order.
+            for ev in &prefix {
+                if let Event::Codec { reg, id, spec } = ev {
+                    let got = match reg.as_str() {
+                        "client" => server.register_client_codec(spec)?,
+                        "partial" => server.register_partial_codec(spec)?,
+                        other => bail!("journal '{path}': unknown codec registry '{other}'"),
+                    } as u64;
+                    if got != *id {
+                        bail!(
+                            "journal '{path}': codec '{spec}' registered as id {got}, journal \
+                             says {id} — registration order diverged"
+                        );
+                    }
+                }
+            }
+            let Some(Event::Checkpoint { state, .. }) = prefix.last() else {
+                bail!("journal '{path}' has no checkpoint to resume from");
+            };
+            let server_state = state
+                .get("server")
+                .ok_or_else(|| anyhow!("journal '{path}': checkpoint lacks 'server' state"))?;
+            server.restore_state(server_state)?;
+            let wall = state
+                .get("wall")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("journal '{path}': checkpoint lacks 'wall' time"))?;
+            t_base = f64::from_bits(parse_hex_u64(wall)?);
+            tracing_log(&format!(
+                "leader: resumed from '{path}' at step {} (t={t_base:.3})",
+                server.t()
+            ));
+        }
+        // Client-codec ids at/above this are not yet in the journal (id 0
+        // is the implicit default; a resumed prefix covers its own).
+        let journaled_client = if self.resume { server.num_client_codecs() } else { 1 };
+        let mut recorder = Recorder {
+            writer: match (tel.journal.as_deref(), self.resume) {
+                (Some(path), true) => Some(JournalWriter::append(path)?),
+                (Some(path), false) => Some(JournalWriter::create(path)?),
+                (None, _) => None,
+            },
+            mem: self.record_events.then(Vec::new),
+        };
+        let run_start = Instant::now();
+        // What a joining worker copies as x^0: the shared hidden state —
+        // bit-identical to the run's x^0 on a fresh start (x̂^0 = x^0),
+        // the checkpointed snapshot after a resume, so a rejoining
+        // replica tracks the broadcast stream from the resumed step.
+        let x_join: Vec<f32> = server.client_snapshot().as_ref().clone();
+        let join_step = server.t();
 
         // accept all workers: negotiate the protocol, send the join
         // frame, then spawn one reader and one writer thread each
@@ -238,7 +359,7 @@ impl Leader {
                         version,
                         worker_id,
                         d: d as u32,
-                        x0: self.x0.clone(),
+                        x0: x_join.clone(),
                         client_quant: server.client_codec_name(codec_id),
                         server_quant: self.cfg.quant.server.clone(),
                         client_lr: self.cfg.fl.client_lr,
@@ -255,7 +376,7 @@ impl Leader {
                     &Message::Join {
                         worker_id,
                         d: d as u32,
-                        x0: self.x0.clone(),
+                        x0: x_join.clone(),
                         client_quant: self.cfg.quant.client.clone(),
                         server_quant: self.cfg.quant.server.clone(),
                         client_lr: self.cfg.fl.client_lr,
@@ -297,18 +418,22 @@ impl Leader {
 
             // persistent writer thread: its own outbound queue, frames
             // pre-encoded and shared; returns what it actually wrote
+            // (and the span-gated wall time spent writing it)
             let (wtx, wrx) = mpsc::channel::<Arc<[u8]>>();
             writer_handles.push(std::thread::spawn(move || {
                 let mut frames = 0u64;
                 let mut bytes = 0u64;
+                let mut send_ns = 0u64;
                 for frame in wrx {
+                    let timer = telemetry::span_start();
                     if writer.write_all(&frame).is_err() {
                         break; // dead worker: its reader thread reports it
                     }
+                    send_ns += telemetry::span_ns(timer);
                     frames += 1;
                     bytes += frame.len() as u64;
                 }
-                (frames, bytes)
+                (frames, bytes, send_ns)
             }));
             writers.push(wtx);
 
@@ -327,16 +452,55 @@ impl Leader {
                 partials: 0,
                 broadcast_frames: 0,
                 broadcast_bytes: 0,
+                ingest_ns: 0,
+                send_ns: 0,
                 staleness: StalenessHist::default(),
             });
         }
         drop(tx);
 
+        // every codec is registered once the accept loop is done, so the
+        // journal header (meta, init, codec registry) goes out before
+        // the first ingest — the order replay demands
+        if recorder.on() {
+            if !self.resume {
+                recorder.emit(Event::Meta {
+                    runtime: "tcp".into(),
+                    algorithm: self.cfg.fl.algorithm.name().to_string(),
+                    d: d as u64,
+                    seed: self.seed,
+                    fingerprint: telemetry::run_fingerprint(&self.cfg, self.seed),
+                    git: telemetry::git_describe(),
+                    config: self.cfg.to_json(),
+                })?;
+                recorder.emit(Event::Init { x0: self.x0.clone(), server_seed: self.seed })?;
+            }
+            for id in journaled_client..server.num_client_codecs() {
+                recorder.emit(Event::Codec {
+                    reg: "client".into(),
+                    id: id as u64,
+                    spec: server.client_codec_name(id),
+                })?;
+            }
+            if !self.resume {
+                recorder.emit(Event::Codec {
+                    reg: "partial".into(),
+                    id: 0,
+                    spec: server.partial_codec_name(0),
+                })?;
+            }
+        }
+
         // main coordination loop
-        let mut trace = self.record_trace.then(LeaderTrace::default);
         let mut live = n_workers;
         let mut byes = 0usize;
         let mut shutdown_sent = false;
+        // journal step/progress state: slots since the last step (the
+        // Step event's k), the run-wide staleness histogram quantiles on
+        // the progress line draw from, the previous Step event (deltas)
+        let mut slots_since_step: u64 = 0;
+        let mut hist_all = StalenessHist::default();
+        let mut prev_step_ev: Option<Event> = None;
         while live > 0 {
             let (worker_id, incoming) = rx.recv().map_err(|_| anyhow!("all workers gone"))?;
             let wid = worker_id as usize;
@@ -403,6 +567,7 @@ impl Leader {
             if shutdown_sent {
                 continue; // late update after shutdown: drop
             }
+            let now = t_base + run_start.elapsed().as_secs_f64();
             let step = match inbound {
                 Inbound::Update { t_start, codec_id, payload } => {
                     // the tag must be the codec this connection negotiated
@@ -422,15 +587,22 @@ impl Leader {
                     }
                     let qmsg = QuantizedMsg { payload, d };
                     let wire = qmsg.wire_bytes();
-                    let staleness = server.t().saturating_sub(t_start);
-                    if let Some(tr) = trace.as_mut() {
-                        tr.updates.push(TraceUpdate {
-                            worker_id,
-                            codec: codec_id,
+                    // a worker's snapshot can never predate its join-time
+                    // model (the checkpointed x̂ after a resume), so its
+                    // t_start is floored there — a no-op on fresh runs
+                    // where join_step is 0
+                    let staleness = server.t().saturating_sub(t_start.max(join_step));
+                    if recorder.on() {
+                        recorder.emit(Event::Ingest {
+                            time: now,
+                            step: server.t(),
+                            worker: worker_id as u64,
+                            codec: codec_id as u64,
                             staleness,
                             payload: qmsg.payload.clone(),
-                        });
+                        })?;
                     }
+                    let timer = telemetry::span_start();
                     let step =
                         server.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
                             format!(
@@ -439,19 +611,35 @@ impl Leader {
                                 server.client_codec_name(codec_id)
                             )
                         })?;
+                    stats[wid].ingest_ns += telemetry::span_ns(timer);
                     stats[wid].uploads += 1;
                     stats[wid].upload_bytes += wire as u64;
                     stats[wid].staleness.record(staleness);
+                    hist_all.record(staleness);
+                    slots_since_step += 1;
                     step
                 }
                 Inbound::Partial { codec_id, count, hist, payload } => {
                     // an edge leader forwarding its buffer: staleness was
                     // weighted downstream, the histogram travels for
-                    // accounting and is merged here (not recorded in the
-                    // per-update trace — partials replay through
-                    // `ingest_partial`, not `ingest_from`)
+                    // accounting and is merged here
                     let qmsg = QuantizedMsg { payload, d };
                     let wire = qmsg.wire_bytes();
+                    if recorder.on() {
+                        recorder.emit(Event::IngestPartial {
+                            time: now,
+                            step: server.t(),
+                            worker: worker_id as u64,
+                            codec: codec_id as u64,
+                            count: u64::from(count),
+                            stale_counts: hist.counts.clone(),
+                            stale_sum: hist.sum,
+                            stale_max: hist.max,
+                            stale_n: hist.n,
+                            payload: qmsg.payload.clone(),
+                        })?;
+                    }
+                    let timer = telemetry::span_start();
                     let step = server
                         .ingest_partial(&qmsg, count, &hist, codec_id)
                         .with_context(|| {
@@ -460,18 +648,60 @@ impl Leader {
                                 stats[wid].peer
                             )
                         })?;
+                    stats[wid].ingest_ns += telemetry::span_ns(timer);
                     stats[wid].uploads += 1;
                     stats[wid].upload_bytes += wire as u64;
                     stats[wid].partials += 1;
                     stats[wid].codec = server.partial_codec_name(codec_id);
                     stats[wid].staleness.merge(&hist);
+                    hist_all.merge(&hist);
+                    slots_since_step += u64::from(count);
                     step
                 }
             };
 
             if let ServerStep::Stepped(b) = step {
-                if let Some(tr) = trace.as_mut() {
-                    tr.broadcasts.push(b.msg.payload.clone());
+                if recorder.on() || tel.progress > 0 {
+                    let step_ev = Event::Step {
+                        time: now,
+                        step: server.t(),
+                        k: slots_since_step,
+                        uploads: server.comm.uploads,
+                        upload_bytes: server.comm.upload_bytes,
+                        broadcast_bytes: server.comm.broadcast_bytes,
+                        stale_mean: server.staleness_mean(),
+                        stale_max: server.staleness_max,
+                        stages: telemetry::enabled().then(|| server.stage_timings().clone()),
+                    };
+                    if recorder.on() {
+                        recorder.emit(step_ev.clone())?;
+                        recorder.emit(Event::Broadcast {
+                            time: now,
+                            step: b.t,
+                            absolute: b.absolute,
+                            payload: b.msg.payload.clone(),
+                        })?;
+                    }
+                    if tel.progress > 0 && server.t() % tel.progress == 0 {
+                        if let Some(line) =
+                            progress_line(&step_ev, prev_step_ev.as_ref(), &hist_all)
+                        {
+                            eprintln!("[qafel] {line}");
+                        }
+                    }
+                    prev_step_ev = Some(step_ev);
+                }
+                slots_since_step = 0;
+                if tel.checkpoint_every > 0 && server.t() % tel.checkpoint_every == 0 {
+                    let state = Json::obj(vec![
+                        ("wall", Json::str(hex_u64(now.to_bits()))),
+                        ("server", server.state_json()),
+                    ]);
+                    recorder.emit(Event::Checkpoint {
+                        time: now,
+                        step: server.t(),
+                        state,
+                    })?;
                 }
                 // encode once, share with every writer queue
                 let frame: Arc<[u8]> = frame_bytes(&Message::Broadcast {
@@ -498,9 +728,10 @@ impl Leader {
         // (collecting what each actually wrote), then the readers
         drop(writers);
         for (i, h) in writer_handles.into_iter().enumerate() {
-            if let Ok((frames, bytes)) = h.join() {
+            if let Ok((frames, bytes, send_ns)) = h.join() {
                 stats[i].broadcast_frames = frames;
                 stats[i].broadcast_bytes = bytes;
+                stats[i].send_ns = send_ns;
             }
         }
         for h in reader_handles {
@@ -508,10 +739,15 @@ impl Leader {
         }
         let _ = byes;
 
-        if let Some(tr) = trace.as_mut() {
-            tr.codecs = (0..server.num_client_codecs())
-                .map(|i| server.client_codec_name(i))
-                .collect();
+        if recorder.on() {
+            recorder.emit(Event::Final {
+                step: server.t(),
+                uploads: server.comm.uploads,
+                upload_bytes: server.comm.upload_bytes,
+                broadcasts: server.comm.broadcasts,
+                broadcast_bytes: server.comm.broadcast_bytes,
+                model: server.model().to_vec(),
+            })?;
         }
 
         Ok(LeaderReport {
@@ -522,7 +758,9 @@ impl Leader {
             model: server.model().to_vec(),
             workers: n_workers,
             worker_stats: stats,
-            trace,
+            stage_timings: server.stage_timings().clone(),
+            fingerprint: telemetry::run_fingerprint(&self.cfg, self.seed),
+            events: recorder.mem,
         })
     }
 }

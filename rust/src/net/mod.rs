@@ -42,6 +42,6 @@ pub mod transport;
 pub mod worker;
 
 pub use edge::{EdgeLeader, EdgeReport};
-pub use leader::{Leader, LeaderReport, LeaderTrace, TraceUpdate, WorkerStats};
+pub use leader::{Leader, LeaderReport, WorkerStats};
 pub use message::{Message, PROTOCOL_VERSION};
 pub use worker::{Worker, WorkerReport};

@@ -36,6 +36,17 @@ pub struct WorkerReport {
     pub codec: String,
     /// Registry id of that codec on the leader (0 = default).
     pub codec_id: u32,
+    /// Wall time in local training rounds (`client_round`). All `_ns`
+    /// counters are captured only while telemetry spans are on
+    /// ([`crate::telemetry::set_enabled`]); zero otherwise.
+    pub train_ns: u64,
+    /// Wall time quantizing upload deltas (Q_c encode).
+    pub encode_ns: u64,
+    /// Wall time in socket writes for uploads.
+    pub send_ns: u64,
+    /// Wall time applying received broadcasts to the replica (Q_s
+    /// decode + hidden-state advance, Algorithm 3).
+    pub decode_ns: u64,
 }
 
 /// A worker: owns a compute backend and a hidden-state replica.
@@ -143,15 +154,26 @@ impl<B: Backend> Worker<B> {
         let mut replica_t = 0u64;
         let mut uploads = 0u64;
         let mut trip = 0u64;
+        let mut train_ns = 0u64;
+        let mut encode_ns = 0u64;
+        let mut send_ns = 0u64;
+        let mut decode_ns = 0u64;
         'train: loop {
             // drain all pending broadcasts (Algorithm 3 lines 3-4)
             loop {
                 match rx.try_recv() {
                     Ok(Message::Broadcast { t, absolute, payload }) => {
                         let qmsg = crate::quant::QuantizedMsg { payload, d };
-                        if t != replica_t + 1 {
+                        // the gap check admits one re-base: the leader of
+                        // a resumed run handed us its checkpointed hidden
+                        // state as x^0, and the first broadcast we see is
+                        // the resumed step + 1 (writer queues exist before
+                        // the coordination loop starts, so nothing between
+                        // join and that first frame can be missed)
+                        if t != replica_t + 1 && !(replica_t == 0 && t > 0) {
                             bail!("worker {worker_id}: broadcast gap {replica_t} -> {t}");
                         }
+                        let timer = crate::telemetry::span_start();
                         if absolute {
                             crate::quant::sharded::dequantize_into(
                                 quant_s.as_ref(), &qmsg, &mut x_hat, &pool,
@@ -161,6 +183,7 @@ impl<B: Backend> Worker<B> {
                                 quant_s.as_ref(), &qmsg, 1.0, &mut x_hat, &pool,
                             )?;
                         }
+                        decode_ns += crate::telemetry::span_ns(timer);
                         replica_t = t;
                     }
                     Ok(Message::Shutdown) => break 'train,
@@ -173,14 +196,20 @@ impl<B: Backend> Worker<B> {
             // Algorithm 2: train from the replica snapshot
             let t_start = replica_t;
             let user = worker_id as usize;
+            let timer = crate::telemetry::span_start();
             let out = self.backend.client_round(&x_hat, user, trip, client_lr)?;
+            train_ns += crate::telemetry::span_ns(timer);
+            let timer = crate::telemetry::span_start();
             let qmsg = quant_c.quantize(&out.delta, &mut rng);
+            encode_ns += crate::telemetry::span_ns(timer);
             let upload = if protocol >= 2 {
                 Message::update_v2_from(worker_id, t_start, trip, out.loss, codec_id, &qmsg)
             } else {
                 Message::update_from(worker_id, t_start, trip, out.loss, &qmsg)
             };
+            let timer = crate::telemetry::span_start();
             conn.send(&upload)?;
+            send_ns += crate::telemetry::span_ns(timer);
             uploads += 1;
             trip += 1;
             if !self.round_delay.is_zero() {
@@ -198,6 +227,10 @@ impl<B: Backend> Worker<B> {
             protocol,
             codec: quant_c.name(),
             codec_id,
+            train_ns,
+            encode_ns,
+            send_ns,
+            decode_ns,
         })
     }
 }

@@ -6,6 +6,8 @@
 //! are threaded into [`crate::metrics::RunResult`] by the simulator and
 //! flattened to CSV by the heterogeneity experiment.
 
+use crate::util::json::Json;
+
 /// Power-of-two bucketed histogram of observed staleness values
 /// (`tau_n(t)` in the paper). Bucket 0 holds exact zeros; bucket `i >= 1`
 /// holds `[2^(i-1), 2^i)`, so the whole `u64` range fits in 65 buckets
@@ -85,6 +87,59 @@ impl StalenessHist {
         } else {
             self.sum as f64 / self.n as f64
         }
+    }
+
+    /// Approximate q-quantile (q in [0, 1]): the upper bound of the
+    /// first bucket whose cumulative count reaches `ceil(q * n)`,
+    /// clamped to the exact observed max. Buckets 0 and 1 are exact, so
+    /// small staleness quantiles (the common case) are exact too.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let target = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let (_, hi) = Self::bucket_range(i);
+                return hi.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counts",
+                Json::arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("sum", Json::num(self.sum as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<StalenessHist> {
+        let get = |k: &str| -> anyhow::Result<u64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .map(|f| f as u64)
+                .ok_or_else(|| anyhow::anyhow!("staleness hist: missing numeric field '{k}'"))
+        };
+        let counts = j
+            .get("counts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("staleness hist: missing 'counts' array"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|f| f as u64)
+                    .ok_or_else(|| anyhow::anyhow!("staleness hist: non-numeric count"))
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        Ok(StalenessHist::from_parts(counts, get("sum")?, get("max")?, get("n")?))
     }
 
     /// Compact text form for CSV cells: `"0:12|1:30|2-3:7"` (empty
@@ -238,6 +293,86 @@ impl ScenarioMetrics {
         self.tiers[tier].partial_uploads += 1;
     }
 
+    /// Serialize every counter — the checkpoint form. Exact: counters
+    /// are u64 (< 2^53 in practice) and histograms carry their parts.
+    pub fn to_json(&self) -> Json {
+        let tier = |t: &TierMetrics| {
+            Json::obj(vec![
+                ("name", Json::str(t.name.clone())),
+                ("codec", Json::str(t.codec.clone())),
+                ("arrivals", Json::num(t.arrivals as f64)),
+                ("unavailable", Json::num(t.unavailable as f64)),
+                ("dropouts", Json::num(t.dropouts as f64)),
+                ("uploads", Json::num(t.uploads as f64)),
+                ("partial_uploads", Json::num(t.partial_uploads as f64)),
+                ("upload_bytes", Json::num(t.upload_bytes as f64)),
+                ("download_bytes", Json::num(t.download_bytes as f64)),
+                (
+                    "wasted_download_bytes",
+                    Json::num(t.wasted_download_bytes as f64),
+                ),
+                ("staleness", t.staleness.to_json()),
+            ])
+        };
+        Json::obj(vec![
+            ("tiers", Json::arr(self.tiers.iter().map(tier).collect())),
+            ("staleness", self.staleness.to_json()),
+            ("arrivals_all_off", Json::num(self.arrivals_all_off as f64)),
+        ])
+    }
+
+    /// Rebuild tier counters from [`ScenarioMetrics::to_json`] output.
+    /// Concurrency/snapshot gauges and edge counters are *not* restored
+    /// here — the engine recomputes or restores those itself.
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioMetrics> {
+        use anyhow::anyhow;
+        let num = |o: &Json, k: &str| -> anyhow::Result<u64> {
+            o.get(k)
+                .and_then(|v| v.as_f64())
+                .map(|f| f as u64)
+                .ok_or_else(|| anyhow!("scenario metrics: missing numeric field '{k}'"))
+        };
+        let text = |o: &Json, k: &str| -> anyhow::Result<String> {
+            Ok(o.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("scenario metrics: missing string field '{k}'"))?
+                .to_string())
+        };
+        let tiers = j
+            .get("tiers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("scenario metrics: missing 'tiers' array"))?
+            .iter()
+            .map(|t| {
+                Ok(TierMetrics {
+                    name: text(t, "name")?,
+                    codec: text(t, "codec")?,
+                    arrivals: num(t, "arrivals")?,
+                    unavailable: num(t, "unavailable")?,
+                    dropouts: num(t, "dropouts")?,
+                    uploads: num(t, "uploads")?,
+                    partial_uploads: num(t, "partial_uploads")?,
+                    upload_bytes: num(t, "upload_bytes")?,
+                    download_bytes: num(t, "download_bytes")?,
+                    wasted_download_bytes: num(t, "wasted_download_bytes")?,
+                    staleness: StalenessHist::from_json(
+                        t.get("staleness")
+                            .ok_or_else(|| anyhow!("scenario metrics: tier missing 'staleness'"))?,
+                    )?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<TierMetrics>>>()?;
+        Ok(ScenarioMetrics {
+            tiers,
+            staleness: StalenessHist::from_json(
+                j.get("staleness")
+                    .ok_or_else(|| anyhow!("scenario metrics: missing 'staleness'"))?,
+            )?,
+            arrivals_all_off: num(j, "arrivals_all_off")?,
+            ..Default::default()
+        })
+    }
+
     /// Human-readable per-tier table (printed by `qafel run` for
     /// multi-tier scenarios).
     pub fn table(&self) -> String {
@@ -321,6 +456,42 @@ mod tests {
         // round-trips through its serialized parts
         let rebuilt = StalenessHist::from_parts(all.counts.clone(), all.sum, all.max, all.n);
         assert_eq!(rebuilt, all);
+    }
+
+    #[test]
+    fn quantiles_track_the_distribution() {
+        let mut h = StalenessHist::default();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram");
+        for s in [0u64, 0, 0, 0, 0, 1, 1, 2, 3, 9] {
+            h.record(s);
+        }
+        // buckets 0 and 1 are exact
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(0.7), 1);
+        // p100 clamps to the observed max, not the bucket bound (15)
+        assert_eq!(h.quantile(1.0), 9);
+        assert_eq!(h.quantile(0.0), 0, "q=0 means the first value");
+    }
+
+    #[test]
+    fn histogram_and_metrics_json_roundtrip() {
+        let mut m = ScenarioMetrics::with_tiers(["fast".to_string(), "slow".to_string()]);
+        m.tiers[0].codec = "qsgd:4".into();
+        m.tiers[1].codec = "top:0.1".into();
+        m.record_arrival(0);
+        m.record_upload(0, 2, 100, 50);
+        m.record_dropout(1, 50);
+        m.record_partial_upload(1, 7, 60, 50);
+        m.record_unavailable(1);
+        m.record_all_off();
+        let j = m.to_json();
+        let back = ScenarioMetrics::from_json(&j).unwrap();
+        assert_eq!(back.tiers, m.tiers);
+        assert_eq!(back.staleness, m.staleness);
+        assert_eq!(back.arrivals_all_off, m.arrivals_all_off);
+        // the parse is strict about schema
+        assert!(ScenarioMetrics::from_json(&Json::obj(vec![])).is_err());
+        assert!(StalenessHist::from_json(&Json::obj(vec![])).is_err());
     }
 
     #[test]

@@ -99,6 +99,35 @@ impl SnapshotStore {
         }
     }
 
+    /// Dump the live versions for a checkpoint: `(current, max_live,
+    /// versions)` where each version carries its key, reader count and
+    /// model bits. Exact inverse of [`SnapshotStore::from_parts`].
+    pub fn parts(&self) -> (u64, usize, Vec<(u64, usize, Arc<Vec<f32>>)>) {
+        (
+            self.current,
+            self.max_live,
+            self.versions.iter().map(|(&t, e)| (t, e.refs, e.snap.clone())).collect(),
+        )
+    }
+
+    /// Rebuild a store from a [`SnapshotStore::parts`] dump (the resume
+    /// path). The current version must be among the dumped versions.
+    pub fn from_parts(
+        current: u64,
+        max_live: usize,
+        versions: Vec<(u64, usize, Vec<f32>)>,
+    ) -> Result<SnapshotStore> {
+        let mut map = BTreeMap::new();
+        for (t, refs, snap) in versions {
+            map.insert(t, Entry { snap: Arc::new(snap), refs });
+        }
+        if !map.contains_key(&current) {
+            return Err(anyhow!("snapshot store: current version {current} not in dump"));
+        }
+        let max_live = max_live.max(map.len());
+        Ok(SnapshotStore { versions: map, current, max_live })
+    }
+
     /// Number of model versions currently held.
     pub fn live_versions(&self) -> usize {
         self.versions.len()
@@ -154,6 +183,29 @@ mod tests {
             assert_eq!(s.live_versions(), 1, "no readers => one live version");
         }
         assert_eq!(s.max_live(), 1);
+    }
+
+    #[test]
+    fn parts_roundtrip_preserves_refs_and_current() {
+        let mut s = SnapshotStore::new(0, snap(0.0));
+        let a = s.acquire();
+        s.publish(1, snap(1.0));
+        let b = s.acquire();
+        let (cur, max_live, parts) = s.parts();
+        assert_eq!(cur, 1);
+        let dump: Vec<(u64, usize, Vec<f32>)> =
+            parts.iter().map(|(t, r, v)| (*t, *r, v.as_ref().clone())).collect();
+        let mut back = SnapshotStore::from_parts(cur, max_live, dump).unwrap();
+        assert_eq!(back.live_versions(), 2);
+        assert_eq!(back.max_live(), 2);
+        assert_eq!(back.get(a).unwrap()[0], 0.0);
+        // restored refcounts behave: releasing v0's only reader evicts it
+        back.release(a);
+        assert_eq!(back.live_versions(), 1);
+        back.release(b);
+        assert!(back.get(1).is_ok());
+        // the current version must be in the dump
+        assert!(SnapshotStore::from_parts(5, 1, vec![(0, 0, vec![0.0])]).is_err());
     }
 
     #[test]

@@ -3,12 +3,17 @@
 //! ([`crate::scenario`], DESIGN_SCENARIOS.md).
 
 use crate::config::{Algorithm, Config, TierConfig};
-use crate::coordinator::{AggOutcome, ClientLogic, EdgeAggregator, Server, ServerStep};
+use crate::coordinator::{AggOutcome, Broadcast, ClientLogic, EdgeAggregator, Server, ServerStep};
 use crate::metrics::{CurvePoint, RunResult};
 use crate::scenario::metrics::EdgeMetrics;
 use crate::quant::parse_spec;
 use crate::runtime::Backend;
-use crate::scenario::{Sampling, Scenario, SnapshotStore};
+use crate::scenario::{ArrivalProcess, Sampling, Scenario, ScenarioMetrics, SnapshotStore};
+use crate::telemetry::event::{hex_f32s, hex_u64, parse_hex_f32s, parse_hex_u64};
+use crate::telemetry::{
+    self, progress_line, truncate_after_last_checkpoint, Event as JEvent, JournalWriter,
+};
+use crate::util::json::Json;
 use crate::util::pool::ShardPool;
 use crate::util::prng::Prng;
 use anyhow::{anyhow, bail, Result};
@@ -85,6 +90,36 @@ pub struct SimOptions {
     pub run_past_target: bool,
     /// Record ‖x−x̂‖² at each eval (hidden-state error trace, Lemma F.9).
     pub trace_hidden_error: bool,
+    /// Resume from the journal at `cfg.telemetry.journal`: truncate it
+    /// to its last checkpoint, restore the engine state saved there and
+    /// continue the run, appending to the same journal. The finished
+    /// journal is bit-identical to an uninterrupted run's.
+    pub resume: bool,
+}
+
+/// The pending-event min-heap plus the monotone sequence counter that
+/// makes its order fully deterministic — and checkpointable: a resume
+/// restores both the heap entries (with their original `seq`s) and the
+/// counter, so post-resume pushes continue the same total order.
+struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
 }
 
 /// The simulator.
@@ -112,6 +147,56 @@ impl<'a> SimEngine<'a> {
 
     pub fn run_traced(&self, opts: &SimOptions) -> Result<(RunResult, Vec<f64>)> {
         let wall_start = std::time::Instant::now();
+        let tel = &self.cfg.telemetry;
+        if tel.checkpoint_every > 0 && self.cfg.scenario.aggregators.edges > 0 {
+            bail!(
+                "telemetry.checkpoint_every is not supported with \
+                 scenario.aggregators.edges > 0 (edge buffers are not checkpointed)"
+            );
+        }
+        if opts.resume && tel.journal.is_none() {
+            bail!("resume needs telemetry.journal (the journal to resume from)");
+        }
+        // Spans cost one clock read per stage — turn them on whenever
+        // the run is being observed. Unobserved runs (benches) keep the
+        // disabled fast path.
+        if tel.journal.is_some() || tel.progress > 0 {
+            telemetry::set_enabled(true);
+        }
+
+        // Resume: cut the journal back to its last checkpoint (dropping
+        // whatever the kill tore off) and pick up the state saved there.
+        // The dropped suffix is re-executed bit-identically, because
+        // every mutable piece of the run is restored below.
+        let resume_state: Option<Json> = if opts.resume {
+            let path = tel.journal.as_deref().unwrap();
+            let prefix = truncate_after_last_checkpoint(path)?;
+            let Some(JEvent::Meta { runtime, fingerprint, .. }) = prefix.first() else {
+                bail!("journal '{path}' does not start with a meta event");
+            };
+            if runtime != "sim" {
+                bail!("journal '{path}' was recorded by runtime '{runtime}', not the simulator");
+            }
+            let want = telemetry::run_fingerprint(self.cfg, self.seed);
+            if *fingerprint != want {
+                bail!(
+                    "journal '{path}' was recorded under fingerprint {fingerprint}, but \
+                     this config/seed fingerprints as {want} — resume with the original config"
+                );
+            }
+            let Some(JEvent::Checkpoint { state, .. }) = prefix.last() else {
+                bail!("journal '{path}' has no checkpoint to resume from");
+            };
+            Some(state.clone())
+        } else {
+            None
+        };
+        let mut journal: Option<JournalWriter> = match (tel.journal.as_deref(), opts.resume) {
+            (Some(path), true) => Some(JournalWriter::append(path)?),
+            (Some(path), false) => Some(JournalWriter::create(path)?),
+            (None, _) => None,
+        };
+
         let root = Prng::new(self.seed);
         let mut arrival_rng = root.stream("arrivals");
         let mut duration_rng = root.stream("durations");
@@ -129,14 +214,20 @@ impl<'a> SimEngine<'a> {
 
         // initial model: shared x^0 (Algorithm 1 line 1 / Algorithm 3)
         let x0 = self.backend.init_params(self.seed as i32 & 0x7FFF_FFFF)?;
-        let mut server = Server::build(self.cfg, x0, root.stream("server").next_u64_here())?;
+        let server_seed = root.stream("server").next_u64_here();
+        // the journal's init event needs x^0 after it moves into the server
+        let mut x0_journal =
+            if journal.is_some() && !opts.resume { Some(x0.clone()) } else { None };
+        let mut server = Server::build(self.cfg, x0, server_seed)?;
         let mut logic = ClientLogic::new(self.cfg, root.stream("client").next_u64_here())?;
         let d = server.d();
 
         // Per-tier quantizer presets: register each tier's upload codec
         // on both ends (same order => same ids; identical resolved
         // codecs dedup, so a no-preset run keeps exactly one codec and
-        // the single-codec ingest path).
+        // the single-codec ingest path). Each registration is journaled
+        // in order — replay re-registers and asserts the same ids.
+        let mut codec_events: Vec<JEvent> = Vec::new();
         let mut tier_codec = vec![0usize; scenario.num_tiers()];
         for tier in 0..scenario.num_tiers() {
             if let Some(spec) = scenario.tier_quant_client(tier) {
@@ -149,6 +240,11 @@ impl<'a> SimEngine<'a> {
                     );
                 }
                 tier_codec[tier] = sid;
+                codec_events.push(JEvent::Codec {
+                    reg: "client".into(),
+                    id: sid as u64,
+                    spec: spec.to_string(),
+                });
             }
         }
         for tier in 0..scenario.num_tiers() {
@@ -168,6 +264,11 @@ impl<'a> SimEngine<'a> {
             if pid != 0 {
                 bail!("internal: partial codec '{}' registered at id {pid}", agg_cfg.partial_codec);
             }
+            codec_events.push(JEvent::Codec {
+                reg: "partial".into(),
+                id: 0,
+                spec: agg_cfg.partial_codec.clone(),
+            });
             let edge_seeds = root.stream("edge-agg");
             for e in 0..agg_cfg.edges {
                 let mut edge = EdgeAggregator::new(
@@ -234,15 +335,7 @@ impl<'a> SimEngine<'a> {
         // server steps share one Arc (O(versions) memory, not O(clients)).
         let mut store = SnapshotStore::new(server.t(), server.client_snapshot());
 
-        let mut events: BinaryHeap<Event> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let mut push = |events: &mut BinaryHeap<Event>, time: f64, kind: EventKind| {
-            let s = seq;
-            seq += 1;
-            events.push(Event { time, seq: s, kind });
-        };
-        push(&mut events, 0.0, EventKind::Arrival);
-
+        let mut queue = EventQueue::new();
         let mut trips = 0u64;
         let mut curve: Vec<CurvePoint> = Vec::new();
         let mut reached: Option<CurvePoint> = None;
@@ -254,22 +347,108 @@ impl<'a> SimEngine<'a> {
         let mut in_flight = 0usize;
         let mut max_in_flight = 0usize;
         let mut in_flight_area = 0.0f64;
-
-        // evaluate x^0 so curves start at t=0
-        let ev0 = self.backend.evaluate_pooled(server.model(), &eval_pool)?;
-        curve.push(CurvePoint {
-            time: 0.0,
-            server_steps: 0,
-            uploads: 0,
-            upload_mb: 0.0,
-            broadcast_mb: 0.0,
-            val_loss: ev0.loss,
-            val_accuracy: ev0.accuracy,
-            grad_norm_sq: ev0.grad_norm_sq,
-        });
-
         let mut clock = 0.0f64;
-        while let Some(ev) = events.pop() {
+        // update slots consumed since the last server step — the journal
+        // Step event's k, mirroring replay's accounting. Checkpoints are
+        // written immediately after a step, so this is 0 at every
+        // checkpoint and needs no restoring.
+        let mut slots_since_step = 0u64;
+        // wall seconds the run accumulated before this process (resume)
+        let mut wall_offset = 0.0f64;
+        // the previous progress Step event, for --progress deltas
+        let mut prev_progress: Option<JEvent> = None;
+
+        if let Some(state) = &resume_state {
+            // Restore the killed run, piece by piece. Everything mutable
+            // is covered: server (model, hidden state, buffer, momentum,
+            // quantizer rng, comm/staleness totals), client quantizer
+            // rng, the six scenario streams, arrival-process state, the
+            // pending event heap + seq counter, the snapshot store, tier
+            // metrics, and the curve recorded so far.
+            server.restore_state(field(state, "server")?)?;
+            let r = field(state, "rng")?;
+            logic.restore_rng(rng_from_json(r, "client")?);
+            arrival_rng = Prng::from_state(rng_from_json(r, "arrivals")?);
+            duration_rng = Prng::from_state(rng_from_json(r, "durations")?);
+            sampling_rng = Prng::from_state(rng_from_json(r, "sampling")?);
+            tier_rng = Prng::from_state(rng_from_json(r, "tier")?);
+            dropout_rng = Prng::from_state(rng_from_json(r, "dropout")?);
+            partial_rng = Prng::from_state(rng_from_json(r, "partial")?);
+            arrival.restore(&f64s_from_json(state, "arrival")?)?;
+            clock = jf64(state, "clock")?;
+            trips = ju64(state, "trips")?;
+            in_flight_area = jf64(state, "in_flight_area")?;
+            max_in_flight = ju64(state, "max_in_flight")? as usize;
+            last_eval_t = ju64(state, "last_eval_t")?;
+            wall_offset = jf64(state, "wall")?;
+            queue.seq = ju64(state, "seq")?;
+            heap_from_json(field(state, "heap")?, &mut queue)?;
+            in_flight = queue
+                .heap
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Finish { .. }))
+                .count();
+            store = store_from_json(field(state, "store")?)?;
+            let metrics = ScenarioMetrics::from_json(field(state, "metrics")?)?;
+            if metrics.tiers.len() != scenario.metrics.tiers.len() {
+                bail!(
+                    "checkpoint has {} tiers but the scenario has {}",
+                    metrics.tiers.len(),
+                    scenario.metrics.tiers.len()
+                );
+            }
+            scenario.metrics = metrics;
+            curve = curve_from_json(field(state, "curve")?)?;
+            reached = match field(state, "reached")? {
+                Json::Null => None,
+                p => Some(point_from_json(p)?),
+            };
+            hidden_trace = f64s_from_json(state, "hidden_trace")?;
+        } else {
+            if let Some(j) = journal.as_mut() {
+                j.write(&JEvent::Meta {
+                    runtime: "sim".into(),
+                    algorithm: self.cfg.fl.algorithm.name().into(),
+                    d: d as u64,
+                    seed: self.seed,
+                    fingerprint: telemetry::run_fingerprint(self.cfg, self.seed),
+                    git: telemetry::git_describe(),
+                    config: self.cfg.to_json(),
+                })?;
+                j.write(&JEvent::Init {
+                    x0: x0_journal.take().unwrap_or_default(),
+                    server_seed,
+                })?;
+                for ev in &codec_events {
+                    j.write(ev)?;
+                }
+            }
+            queue.push(0.0, EventKind::Arrival);
+
+            // evaluate x^0 so curves start at t=0
+            let ev0 = self.backend.evaluate_pooled(server.model(), &eval_pool)?;
+            curve.push(CurvePoint {
+                time: 0.0,
+                server_steps: 0,
+                uploads: 0,
+                upload_mb: 0.0,
+                broadcast_mb: 0.0,
+                val_loss: ev0.loss,
+                val_accuracy: ev0.accuracy,
+                grad_norm_sq: ev0.grad_norm_sq,
+            });
+            if let Some(j) = journal.as_mut() {
+                j.write(&JEvent::Eval {
+                    time: 0.0,
+                    step: 0,
+                    uploads: 0,
+                    val_loss: ev0.loss,
+                    val_accuracy: ev0.accuracy,
+                })?;
+            }
+        }
+
+        while let Some(ev) = queue.pop() {
             in_flight_area += in_flight as f64 * (ev.time - clock);
             clock = ev.time;
             match ev.kind {
@@ -330,15 +509,25 @@ impl<'a> SimEngine<'a> {
                         if !dropped || partial.is_some() {
                             delay += scenario.upload_delay(tier, tier_upload_bytes[tier]);
                         }
-                        push(
-                            &mut events,
+                        queue.push(
                             clock + trained + delay,
                             EventKind::Finish { user, tier, t_start, trip, dropped, partial },
                         );
+                        if let Some(j) = journal.as_mut() {
+                            j.write(&JEvent::Arrival {
+                                time: clock,
+                                tier: scenario.metrics.tiers[tier].name.clone(),
+                                user: user as u64,
+                                trip,
+                                t_start,
+                                dropped,
+                                partial: partial.map(f64::from),
+                            })?;
+                        }
                     }
                     // schedule the next arrival
                     let gap = arrival.next_gap(&mut arrival_rng);
-                    push(&mut events, clock + gap, EventKind::Arrival);
+                    queue.push(clock + gap, EventKind::Arrival);
                 }
                 EventKind::Finish { user, tier, t_start, trip, dropped, partial } => {
                     in_flight -= 1;
@@ -378,28 +567,89 @@ impl<'a> SimEngine<'a> {
                             download_bytes,
                         );
                     }
-                    let stepped = if edges.is_empty() {
-                        matches!(
-                            server.ingest_from(&upload.msg, staleness, codec)?,
-                            ServerStep::Stepped(_)
-                        )
+                    let produced: Option<Broadcast> = if edges.is_empty() {
+                        if let Some(j) = journal.as_mut() {
+                            j.write(&JEvent::Ingest {
+                                time: clock,
+                                step: server.t(),
+                                worker: user as u64,
+                                codec: codec as u64,
+                                staleness,
+                                payload: upload.msg.payload.clone(),
+                            })?;
+                        }
+                        slots_since_step += 1;
+                        match server.ingest_from(&upload.msg, staleness, codec)? {
+                            ServerStep::Buffered => None,
+                            ServerStep::Stepped(b) => Some(b),
+                        }
                     } else {
                         // contiguous ownership: edge e owns users
                         // [e*n/K, (e+1)*n/K)
                         let e = user * edges.len() / n_users;
                         match edges[e].ingest_from(&upload.msg, staleness, codec)? {
-                            AggOutcome::Buffered => false,
-                            AggOutcome::Forward(p) => matches!(
-                                server.ingest_partial(&p.msg, p.count, &p.staleness, 0)?,
-                                ServerStep::Stepped(_)
-                            ),
+                            AggOutcome::Buffered => None,
+                            AggOutcome::Forward(p) => {
+                                if let Some(j) = journal.as_mut() {
+                                    j.write(&JEvent::IngestPartial {
+                                        time: clock,
+                                        step: server.t(),
+                                        worker: e as u64,
+                                        codec: 0,
+                                        count: u64::from(p.count),
+                                        stale_counts: p.staleness.counts.clone(),
+                                        stale_sum: p.staleness.sum,
+                                        stale_max: p.staleness.max,
+                                        stale_n: p.staleness.n,
+                                        payload: p.msg.payload.clone(),
+                                    })?;
+                                }
+                                slots_since_step += u64::from(p.count);
+                                match server.ingest_partial(&p.msg, p.count, &p.staleness, 0)? {
+                                    ServerStep::Buffered => None,
+                                    ServerStep::Stepped(b) => Some(b),
+                                }
+                            }
                             AggOutcome::Stepped(_) => {
                                 bail!("internal: edge {e} stepped (edges never step)")
                             }
                         }
                     };
-                    if stepped {
+                    let stepped = produced.is_some();
+                    if let Some(b) = produced {
                         store.publish(server.t(), server.client_snapshot());
+                        let step_ev = JEvent::Step {
+                            time: clock,
+                            step: server.t(),
+                            k: slots_since_step,
+                            uploads: server.comm.uploads,
+                            upload_bytes: server.comm.upload_bytes,
+                            broadcast_bytes: server.comm.broadcast_bytes,
+                            stale_mean: server.staleness_mean(),
+                            stale_max: server.staleness_max,
+                            stages: telemetry::enabled()
+                                .then(|| server.stage_timings().clone()),
+                        };
+                        slots_since_step = 0;
+                        if let Some(j) = journal.as_mut() {
+                            j.write(&step_ev)?;
+                            j.write(&JEvent::Broadcast {
+                                time: clock,
+                                step: b.t,
+                                absolute: b.absolute,
+                                payload: b.msg.payload,
+                            })?;
+                        }
+                        if tel.progress > 0 && server.t() % tel.progress == 0 {
+                            if let Some(line) = progress_line(
+                                &step_ev,
+                                prev_progress.as_ref(),
+                                &scenario.metrics.staleness,
+                            ) {
+                                eprintln!("[qafel] {line}");
+                            }
+                            prev_progress = Some(step_ev);
+                        }
                     }
 
                     if stepped && server.t() - last_eval_t >= self.cfg.sim.eval_every as u64 {
@@ -429,6 +679,15 @@ impl<'a> SimEngine<'a> {
                             );
                         }
                         curve.push(point);
+                        if let Some(j) = journal.as_mut() {
+                            j.write(&JEvent::Eval {
+                                time: clock,
+                                step: server.t(),
+                                uploads: server.comm.uploads,
+                                val_loss: point.val_loss,
+                                val_accuracy: point.val_accuracy,
+                            })?;
+                        }
                         if reached.is_none()
                             && point.val_accuracy >= self.cfg.stop.target_accuracy
                         {
@@ -438,6 +697,48 @@ impl<'a> SimEngine<'a> {
                             }
                         }
                     }
+                    if stepped && tel.checkpoint_every > 0 && server.t() % tel.checkpoint_every == 0
+                    {
+                        if let Some(j) = journal.as_mut() {
+                            let rng = Json::obj(vec![
+                                ("arrivals", rng_json(arrival_rng.state())),
+                                ("durations", rng_json(duration_rng.state())),
+                                ("sampling", rng_json(sampling_rng.state())),
+                                ("tier", rng_json(tier_rng.state())),
+                                ("dropout", rng_json(dropout_rng.state())),
+                                ("partial", rng_json(partial_rng.state())),
+                                ("client", rng_json(logic.rng_state())),
+                            ]);
+                            let state = Json::obj(vec![
+                                ("clock", f64_json(clock)),
+                                ("seq", u64_json(queue.seq)),
+                                ("trips", u64_json(trips)),
+                                ("in_flight_area", f64_json(in_flight_area)),
+                                ("max_in_flight", u64_json(max_in_flight as u64)),
+                                ("last_eval_t", u64_json(last_eval_t)),
+                                (
+                                    "wall",
+                                    f64_json(
+                                        wall_offset + wall_start.elapsed().as_secs_f64(),
+                                    ),
+                                ),
+                                ("server", server.state_json()),
+                                ("rng", rng),
+                                ("arrival", f64s_json(&arrival.state())),
+                                ("heap", heap_json(&queue)),
+                                ("store", store_json(&store)),
+                                ("metrics", scenario.metrics.to_json()),
+                                ("curve", curve_json(&curve)),
+                                ("reached", reached.map_or(Json::Null, |p| point_json(&p))),
+                                ("hidden_trace", f64s_json(&hidden_trace)),
+                            ]);
+                            j.write(&JEvent::Checkpoint {
+                                time: clock,
+                                step: server.t(),
+                                state,
+                            })?;
+                        }
+                    }
                     if server.comm.uploads >= self.cfg.stop.max_uploads
                         || server.t() >= self.cfg.stop.max_server_steps
                     {
@@ -445,6 +746,17 @@ impl<'a> SimEngine<'a> {
                     }
                 }
             }
+        }
+
+        if let Some(j) = journal.as_mut() {
+            j.write(&JEvent::Final {
+                step: server.t(),
+                uploads: server.comm.uploads,
+                upload_bytes: server.comm.upload_bytes,
+                broadcasts: server.comm.broadcasts,
+                broadcast_bytes: server.comm.broadcast_bytes,
+                model: server.model().to_vec(),
+            })?;
         }
 
         let final_accuracy = curve.last().map(|p| p.val_accuracy).unwrap_or(0.0);
@@ -475,8 +787,10 @@ impl<'a> SimEngine<'a> {
                 comm: server.comm.clone(),
                 final_accuracy,
                 server_steps: server.t(),
-                wall_seconds: wall_start.elapsed().as_secs_f64(),
+                wall_seconds: wall_offset + wall_start.elapsed().as_secs_f64(),
                 scenario: scenario_metrics,
+                stage_timings: server.stage_timings().clone(),
+                fingerprint: telemetry::run_fingerprint(self.cfg, self.seed),
             },
             hidden_trace,
         ))
@@ -511,6 +825,224 @@ fn tier_user_ranges(tiers: &[TierConfig], n_users: usize) -> Result<Vec<(usize, 
         lo = hi;
     }
     Ok(ranges)
+}
+
+// ---- checkpoint state (de)serialization ---------------------------------
+//
+// Every f64 in checkpoint state is the hex of its IEEE-754 bits: the
+// Json number printer goes through a decimal round-trip that drops the
+// sign of -0.0 and cannot carry NaN, and a resume must restore the
+// exact bits (the virtual clock feeds `total_cmp` heap ordering).
+// Likewise u64s that may exceed 2^53 (seq, trips, rng words).
+
+fn f64_json(x: f64) -> Json {
+    Json::str(hex_u64(x.to_bits()))
+}
+
+fn u64_json(v: u64) -> Json {
+    Json::str(hex_u64(v))
+}
+
+fn f64s_json(xs: &[f64]) -> Json {
+    Json::arr(xs.iter().map(|&x| f64_json(x)).collect())
+}
+
+fn rng_json(state: [u64; 4]) -> Json {
+    Json::arr(state.iter().map(|&w| u64_json(w)).collect())
+}
+
+fn field<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow!("checkpoint: missing field '{k}'"))
+}
+
+fn hex_val(j: &Json) -> Result<u64> {
+    parse_hex_u64(j.as_str().ok_or_else(|| anyhow!("checkpoint: expected a hex string"))?)
+}
+
+fn ju64(j: &Json, k: &str) -> Result<u64> {
+    hex_val(field(j, k)?)
+}
+
+fn jf64(j: &Json, k: &str) -> Result<f64> {
+    Ok(f64::from_bits(ju64(j, k)?))
+}
+
+fn jusize(j: &Json, k: &str) -> Result<usize> {
+    field(j, k)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("checkpoint: field '{k}' is not an integer"))
+}
+
+fn f64s_from_json(j: &Json, k: &str) -> Result<Vec<f64>> {
+    field(j, k)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("checkpoint: field '{k}' is not an array"))?
+        .iter()
+        .map(|v| Ok(f64::from_bits(hex_val(v)?)))
+        .collect()
+}
+
+fn rng_from_json(j: &Json, k: &str) -> Result<[u64; 4]> {
+    let words = field(j, k)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("checkpoint: rng '{k}' is not an array"))?;
+    if words.len() != 4 {
+        bail!("checkpoint: rng '{k}' has {} words, expected 4", words.len());
+    }
+    let mut out = [0u64; 4];
+    for (o, w) in out.iter_mut().zip(words) {
+        *o = hex_val(w)?;
+    }
+    Ok(out)
+}
+
+/// The pending event heap, sorted by its pop key so checkpoint bytes do
+/// not depend on `BinaryHeap`'s internal layout.
+fn heap_json(queue: &EventQueue) -> Json {
+    let mut entries: Vec<&Event> = queue.heap.iter().collect();
+    entries.sort_by(|a, b| a.time.total_cmp(&b.time).then_with(|| a.seq.cmp(&b.seq)));
+    Json::arr(
+        entries
+            .iter()
+            .map(|e| {
+                let mut pairs =
+                    vec![("time", f64_json(e.time)), ("seq", u64_json(e.seq))];
+                match &e.kind {
+                    EventKind::Arrival => pairs.push(("kind", Json::str("arrival"))),
+                    EventKind::Finish { user, tier, t_start, trip, dropped, partial } => {
+                        pairs.push(("kind", Json::str("finish")));
+                        pairs.push(("user", Json::num(*user as f64)));
+                        pairs.push(("tier", Json::num(*tier as f64)));
+                        pairs.push(("t_start", u64_json(*t_start)));
+                        pairs.push(("trip", u64_json(*trip)));
+                        pairs.push(("dropped", Json::Bool(*dropped)));
+                        if let Some(f) = partial {
+                            pairs.push(("partial", u64_json(u64::from(f.to_bits()))));
+                        }
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect(),
+    )
+}
+
+fn heap_from_json(j: &Json, queue: &mut EventQueue) -> Result<()> {
+    let entries =
+        j.as_arr().ok_or_else(|| anyhow!("checkpoint: heap is not an array"))?;
+    for e in entries {
+        let time = jf64(e, "time")?;
+        let seq = ju64(e, "seq")?;
+        if seq >= queue.seq {
+            bail!("checkpoint: heap entry seq {seq} >= next seq {}", queue.seq);
+        }
+        let kind = match field(e, "kind")?.as_str() {
+            Some("arrival") => EventKind::Arrival,
+            Some("finish") => EventKind::Finish {
+                user: jusize(e, "user")?,
+                tier: jusize(e, "tier")?,
+                t_start: ju64(e, "t_start")?,
+                trip: ju64(e, "trip")?,
+                dropped: field(e, "dropped")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("checkpoint: 'dropped' is not a bool"))?,
+                partial: match e.get("partial") {
+                    Some(v) => Some(f32::from_bits(u32::try_from(hex_val(v)?)?)),
+                    None => None,
+                },
+            },
+            other => bail!("checkpoint: unknown heap event kind {other:?}"),
+        };
+        queue.heap.push(Event { time, seq, kind });
+    }
+    Ok(())
+}
+
+fn store_json(store: &SnapshotStore) -> Json {
+    let (current, max_live, versions) = store.parts();
+    Json::obj(vec![
+        ("current", u64_json(current)),
+        ("max_live", Json::num(max_live as f64)),
+        (
+            "versions",
+            Json::arr(
+                versions
+                    .iter()
+                    .map(|(t, refs, snap)| {
+                        Json::obj(vec![
+                            ("t", u64_json(*t)),
+                            ("refs", Json::num(*refs as f64)),
+                            ("snap", Json::str(hex_f32s(snap))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn store_from_json(j: &Json) -> Result<SnapshotStore> {
+    let versions = field(j, "versions")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("checkpoint: store versions is not an array"))?
+        .iter()
+        .map(|v| {
+            Ok((
+                ju64(v, "t")?,
+                jusize(v, "refs")?,
+                parse_hex_f32s(
+                    field(v, "snap")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("checkpoint: snapshot is not a string"))?,
+                )?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    SnapshotStore::from_parts(ju64(j, "current")?, jusize(j, "max_live")?, versions)
+}
+
+fn point_json(p: &CurvePoint) -> Json {
+    let mut pairs = vec![
+        ("time", f64_json(p.time)),
+        ("server_steps", u64_json(p.server_steps)),
+        ("uploads", u64_json(p.uploads)),
+        ("upload_mb", f64_json(p.upload_mb)),
+        ("broadcast_mb", f64_json(p.broadcast_mb)),
+        ("val_loss", f64_json(p.val_loss)),
+        ("val_accuracy", f64_json(p.val_accuracy)),
+    ];
+    if let Some(g) = p.grad_norm_sq {
+        pairs.push(("grad_norm_sq", f64_json(g)));
+    }
+    Json::obj(pairs)
+}
+
+fn point_from_json(j: &Json) -> Result<CurvePoint> {
+    Ok(CurvePoint {
+        time: jf64(j, "time")?,
+        server_steps: ju64(j, "server_steps")?,
+        uploads: ju64(j, "uploads")?,
+        upload_mb: jf64(j, "upload_mb")?,
+        broadcast_mb: jf64(j, "broadcast_mb")?,
+        val_loss: jf64(j, "val_loss")?,
+        val_accuracy: jf64(j, "val_accuracy")?,
+        grad_norm_sq: match j.get("grad_norm_sq") {
+            Some(v) => Some(f64::from_bits(hex_val(v)?)),
+            None => None,
+        },
+    })
+}
+
+fn curve_json(curve: &[CurvePoint]) -> Json {
+    Json::arr(curve.iter().map(point_json).collect())
+}
+
+fn curve_from_json(j: &Json) -> Result<Vec<CurvePoint>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("checkpoint: curve is not an array"))?
+        .iter()
+        .map(point_from_json)
+        .collect()
 }
 
 /// Helper so a derived stream can yield one u64 inline.
@@ -903,5 +1435,53 @@ mod tests {
             sc.max_live_snapshots,
             sc.max_in_flight
         );
+    }
+
+    fn temp_journal(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("qafel_engine_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn journaled_run_is_a_pure_observer_and_replays() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 60;
+        c.stop.target_accuracy = 2.0;
+        let plain = SimEngine::new(&c, &b, 31).run().unwrap();
+        let path = temp_journal("observer");
+        let mut cj = c.clone();
+        cj.telemetry.journal = Some(path.clone());
+        cj.telemetry.checkpoint_every = 20;
+        let journaled = SimEngine::new(&cj, &b, 31).run().unwrap();
+        // recording must not perturb the trajectory, bit for bit
+        assert_eq!(plain.curve.len(), journaled.curve.len());
+        for (p, q) in plain.curve.iter().zip(&journaled.curve) {
+            assert_eq!(p.time.to_bits(), q.time.to_bits());
+            assert_eq!(p.val_loss.to_bits(), q.val_loss.to_bits());
+            assert_eq!(p.uploads, q.uploads);
+        }
+        // telemetry is observer config: same fingerprint either way
+        assert_eq!(plain.fingerprint, journaled.fingerprint);
+        // the journal replays bit-identically and carries checkpoints
+        let report = crate::telemetry::replay_file(&path).unwrap();
+        assert!(report.finalized);
+        assert_eq!(report.steps, journaled.server_steps);
+        assert_eq!(report.uploads, journaled.comm.uploads);
+        assert!(report.checkpoints >= 2, "checkpoints {}", report.checkpoints);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn checkpointed_edge_tree_is_rejected() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.scenario.aggregators.edges = 2;
+        c.telemetry.journal = Some(temp_journal("edges_reject"));
+        c.telemetry.checkpoint_every = 5;
+        let err = SimEngine::new(&c, &b, 1).run().unwrap_err().to_string();
+        assert!(err.contains("edge buffers are not checkpointed"), "{err}");
     }
 }

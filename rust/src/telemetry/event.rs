@@ -1,0 +1,672 @@
+//! Typed journal events — the vocabulary shared by the simulator and
+//! the TCP runtime (ARCHITECTURE.md §Telemetry has the taxonomy table).
+//!
+//! One event serializes to one compact JSON object (one JSONL line)
+//! with a discriminant field `"ev"`. Binary payloads (quantized wire
+//! messages, model vectors) are lowercase hex of their little-endian
+//! bytes so a journal is exact — replay decodes the same bits the run
+//! produced. 64-bit integers that may exceed 2^53 (seeds, RNG state
+//! words) are hex *strings*; counters that cannot (steps, bytes,
+//! staleness) are plain JSON numbers.
+//!
+//! Because every line is a single top-level object, its last character
+//! is the closing `}` — so every strict prefix of a line is unbalanced
+//! and fails [`Json::parse`]. A torn tail write (kill mid-line) is
+//! therefore always detected, the same guarantee the `net::message`
+//! framing gives a torn TCP frame.
+
+use super::StageTimings;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// One journal event. `time` is seconds since the run started (sim
+/// clock in the simulator, wall clock on the TCP leader); `step` is the
+/// server step count t at the moment the event was recorded.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// First line of every journal: what produced it.
+    Meta {
+        /// `"sim"` or `"tcp"`.
+        runtime: String,
+        algorithm: String,
+        /// Model dimension d.
+        d: u64,
+        /// Master seed of the run.
+        seed: u64,
+        /// [`super::run_fingerprint`] of the resolved config + seed.
+        fingerprint: String,
+        /// `git describe` of the producing tree, when available.
+        git: Option<String>,
+        /// The resolved config ([`crate::config::Config::to_json`]) —
+        /// replay rebuilds the exact run from this, not from CLI flags.
+        config: Json,
+    },
+    /// Codec registry entry, in registration order (the wire contract:
+    /// ids are positional). `reg` is `"client"` or `"partial"`.
+    Codec { reg: String, id: u64, spec: String },
+    /// Initial model x^0 and the server's quantizer seed.
+    Init { x0: Vec<f32>, server_seed: u64 },
+    /// A simulated client was sampled and started training (sim only;
+    /// informational — replay reconstructs the server from ingests).
+    Arrival {
+        time: f64,
+        tier: String,
+        user: u64,
+        trip: u64,
+        /// Server step when the client snapshotted the model.
+        t_start: u64,
+        dropped: bool,
+        /// Fraction of local work completed before a mid-round drop.
+        partial: Option<f64>,
+    },
+    /// One client upload reached the root server
+    /// ([`crate::coordinator::Server::ingest_from`]). `worker` is the
+    /// sim user id or the TCP worker id.
+    Ingest {
+        time: f64,
+        step: u64,
+        worker: u64,
+        codec: u64,
+        staleness: u64,
+        payload: Vec<u8>,
+    },
+    /// An edge aggregator's partial reached the root server
+    /// ([`crate::coordinator::Server::ingest_partial`]). The staleness
+    /// histogram rides along so replay merges the same accounting.
+    IngestPartial {
+        time: f64,
+        step: u64,
+        worker: u64,
+        codec: u64,
+        count: u64,
+        stale_counts: Vec<u64>,
+        stale_sum: u64,
+        stale_max: u64,
+        stale_n: u64,
+        payload: Vec<u8>,
+    },
+    /// A server step committed (buffer filled). Totals are cumulative;
+    /// `k` is the number of update slots that filled this buffer.
+    Step {
+        time: f64,
+        step: u64,
+        k: u64,
+        uploads: u64,
+        upload_bytes: u64,
+        broadcast_bytes: u64,
+        stale_mean: f64,
+        stale_max: u64,
+        /// Cumulative stage timings at this step, when spans are on.
+        stages: Option<StageTimings>,
+    },
+    /// The broadcast emitted by a step. `absolute` marks DirectQuant
+    /// payloads (the model itself, not a hidden-state increment).
+    Broadcast {
+        time: f64,
+        step: u64,
+        absolute: bool,
+        payload: Vec<u8>,
+    },
+    /// An evaluation point (sim only — the curve).
+    Eval {
+        time: f64,
+        step: u64,
+        uploads: u64,
+        val_loss: f64,
+        val_accuracy: f64,
+    },
+    /// Full run state for resume. `state` is runtime-specific (the sim
+    /// engine and TCP leader each write what they need to continue).
+    Checkpoint { time: f64, step: u64, state: Json },
+    /// Last line of a completed run: final totals + model.
+    Final {
+        step: u64,
+        uploads: u64,
+        upload_bytes: u64,
+        broadcasts: u64,
+        broadcast_bytes: u64,
+        model: Vec<f32>,
+    },
+}
+
+impl Event {
+    /// The `"ev"` discriminant this variant serializes under.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Meta { .. } => "meta",
+            Event::Codec { .. } => "codec",
+            Event::Init { .. } => "init",
+            Event::Arrival { .. } => "arrival",
+            Event::Ingest { .. } => "ingest",
+            Event::IngestPartial { .. } => "ingest_partial",
+            Event::Step { .. } => "step",
+            Event::Broadcast { .. } => "broadcast",
+            Event::Eval { .. } => "eval",
+            Event::Checkpoint { .. } => "checkpoint",
+            Event::Final { .. } => "final",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("ev", Json::str(self.kind()))];
+        match self {
+            Event::Meta { runtime, algorithm, d, seed, fingerprint, git, config } => {
+                pairs.push(("runtime", Json::str(runtime.clone())));
+                pairs.push(("algorithm", Json::str(algorithm.clone())));
+                pairs.push(("d", Json::num(*d as f64)));
+                pairs.push(("seed", Json::str(hex_u64(*seed))));
+                pairs.push(("fingerprint", Json::str(fingerprint.clone())));
+                if let Some(g) = git {
+                    pairs.push(("git", Json::str(g.clone())));
+                }
+                pairs.push(("config", config.clone()));
+            }
+            Event::Codec { reg, id, spec } => {
+                pairs.push(("reg", Json::str(reg.clone())));
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("spec", Json::str(spec.clone())));
+            }
+            Event::Init { x0, server_seed } => {
+                pairs.push(("x0", Json::str(hex_f32s(x0))));
+                pairs.push(("server_seed", Json::str(hex_u64(*server_seed))));
+            }
+            Event::Arrival { time, tier, user, trip, t_start, dropped, partial } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("tier", Json::str(tier.clone())));
+                pairs.push(("user", Json::num(*user as f64)));
+                pairs.push(("trip", Json::num(*trip as f64)));
+                pairs.push(("t_start", Json::num(*t_start as f64)));
+                pairs.push(("dropped", Json::Bool(*dropped)));
+                if let Some(p) = partial {
+                    pairs.push(("partial", Json::num(*p)));
+                }
+            }
+            Event::Ingest { time, step, worker, codec, staleness, payload } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("worker", Json::num(*worker as f64)));
+                pairs.push(("codec", Json::num(*codec as f64)));
+                pairs.push(("staleness", Json::num(*staleness as f64)));
+                pairs.push(("payload", Json::str(hex_bytes(payload))));
+            }
+            Event::IngestPartial {
+                time,
+                step,
+                worker,
+                codec,
+                count,
+                stale_counts,
+                stale_sum,
+                stale_max,
+                stale_n,
+                payload,
+            } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("worker", Json::num(*worker as f64)));
+                pairs.push(("codec", Json::num(*codec as f64)));
+                pairs.push(("count", Json::num(*count as f64)));
+                pairs.push((
+                    "stale_counts",
+                    Json::arr(stale_counts.iter().map(|&c| Json::num(c as f64)).collect()),
+                ));
+                pairs.push(("stale_sum", Json::num(*stale_sum as f64)));
+                pairs.push(("stale_max", Json::num(*stale_max as f64)));
+                pairs.push(("stale_n", Json::num(*stale_n as f64)));
+                pairs.push(("payload", Json::str(hex_bytes(payload))));
+            }
+            Event::Step {
+                time,
+                step,
+                k,
+                uploads,
+                upload_bytes,
+                broadcast_bytes,
+                stale_mean,
+                stale_max,
+                stages,
+            } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("k", Json::num(*k as f64)));
+                pairs.push(("uploads", Json::num(*uploads as f64)));
+                pairs.push(("upload_bytes", Json::num(*upload_bytes as f64)));
+                pairs.push(("broadcast_bytes", Json::num(*broadcast_bytes as f64)));
+                pairs.push(("stale_mean", Json::num(*stale_mean)));
+                pairs.push(("stale_max", Json::num(*stale_max as f64)));
+                if let Some(s) = stages {
+                    pairs.push(("stages", s.to_json()));
+                }
+            }
+            Event::Broadcast { time, step, absolute, payload } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("absolute", Json::Bool(*absolute)));
+                pairs.push(("payload", Json::str(hex_bytes(payload))));
+            }
+            Event::Eval { time, step, uploads, val_loss, val_accuracy } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("uploads", Json::num(*uploads as f64)));
+                pairs.push(("val_loss", Json::num(*val_loss)));
+                pairs.push(("val_accuracy", Json::num(*val_accuracy)));
+            }
+            Event::Checkpoint { time, step, state } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("state", state.clone()));
+            }
+            Event::Final { step, uploads, upload_bytes, broadcasts, broadcast_bytes, model } => {
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("uploads", Json::num(*uploads as f64)));
+                pairs.push(("upload_bytes", Json::num(*upload_bytes as f64)));
+                pairs.push(("broadcasts", Json::num(*broadcasts as f64)));
+                pairs.push(("broadcast_bytes", Json::num(*broadcast_bytes as f64)));
+                pairs.push(("model", Json::str(hex_f32s(model))));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Serialize to one JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Event> {
+        let ev = text(j, "ev")?;
+        Ok(match ev.as_str() {
+            "meta" => Event::Meta {
+                runtime: text(j, "runtime")?,
+                algorithm: text(j, "algorithm")?,
+                d: uint(j, "d")?,
+                seed: parse_hex_u64(&text(j, "seed")?)?,
+                fingerprint: text(j, "fingerprint")?,
+                git: opt_text(j, "git")?,
+                config: req(j, "config")?.clone(),
+            },
+            "codec" => Event::Codec {
+                reg: text(j, "reg")?,
+                id: uint(j, "id")?,
+                spec: text(j, "spec")?,
+            },
+            "init" => Event::Init {
+                x0: parse_hex_f32s(&text(j, "x0")?)?,
+                server_seed: parse_hex_u64(&text(j, "server_seed")?)?,
+            },
+            "arrival" => Event::Arrival {
+                time: num(j, "time")?,
+                tier: text(j, "tier")?,
+                user: uint(j, "user")?,
+                trip: uint(j, "trip")?,
+                t_start: uint(j, "t_start")?,
+                dropped: boolean(j, "dropped")?,
+                partial: match j.get("partial") {
+                    Some(v) => Some(
+                        v.as_f64()
+                            .ok_or_else(|| anyhow!("event: 'partial' is not a number"))?,
+                    ),
+                    None => None,
+                },
+            },
+            "ingest" => Event::Ingest {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                worker: uint(j, "worker")?,
+                codec: uint(j, "codec")?,
+                staleness: uint(j, "staleness")?,
+                payload: parse_hex_bytes(&text(j, "payload")?)?,
+            },
+            "ingest_partial" => Event::IngestPartial {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                worker: uint(j, "worker")?,
+                codec: uint(j, "codec")?,
+                count: uint(j, "count")?,
+                stale_counts: req(j, "stale_counts")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("event: 'stale_counts' is not an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .map(|f| f as u64)
+                            .ok_or_else(|| anyhow!("event: non-numeric stale count"))
+                    })
+                    .collect::<Result<Vec<u64>>>()?,
+                stale_sum: uint(j, "stale_sum")?,
+                stale_max: uint(j, "stale_max")?,
+                stale_n: uint(j, "stale_n")?,
+                payload: parse_hex_bytes(&text(j, "payload")?)?,
+            },
+            "step" => Event::Step {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                k: uint(j, "k")?,
+                uploads: uint(j, "uploads")?,
+                upload_bytes: uint(j, "upload_bytes")?,
+                broadcast_bytes: uint(j, "broadcast_bytes")?,
+                stale_mean: num(j, "stale_mean")?,
+                stale_max: uint(j, "stale_max")?,
+                stages: match j.get("stages") {
+                    Some(v) => Some(StageTimings::from_json(v)?),
+                    None => None,
+                },
+            },
+            "broadcast" => Event::Broadcast {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                absolute: boolean(j, "absolute")?,
+                payload: parse_hex_bytes(&text(j, "payload")?)?,
+            },
+            "eval" => Event::Eval {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                uploads: uint(j, "uploads")?,
+                val_loss: num(j, "val_loss")?,
+                val_accuracy: num(j, "val_accuracy")?,
+            },
+            "checkpoint" => Event::Checkpoint {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                state: req(j, "state")?.clone(),
+            },
+            "final" => Event::Final {
+                step: uint(j, "step")?,
+                uploads: uint(j, "uploads")?,
+                upload_bytes: uint(j, "upload_bytes")?,
+                broadcasts: uint(j, "broadcasts")?,
+                broadcast_bytes: uint(j, "broadcast_bytes")?,
+                model: parse_hex_f32s(&text(j, "model")?)?,
+            },
+            other => bail!("journal: unknown event kind '{other}'"),
+        })
+    }
+
+    /// Parse one JSONL line.
+    pub fn from_line(line: &str) -> Result<Event> {
+        let j = Json::parse(line).map_err(|e| anyhow!("journal: bad event line: {e}"))?;
+        Event::from_json(&j)
+    }
+}
+
+// ---- field accessors (loud on schema drift) -----------------------------
+
+fn req<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow!("event: missing field '{k}'"))
+}
+
+fn num(j: &Json, k: &str) -> Result<f64> {
+    req(j, k)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("event: field '{k}' is not a number"))
+}
+
+fn uint(j: &Json, k: &str) -> Result<u64> {
+    Ok(num(j, k)? as u64)
+}
+
+fn text(j: &Json, k: &str) -> Result<String> {
+    Ok(req(j, k)?
+        .as_str()
+        .ok_or_else(|| anyhow!("event: field '{k}' is not a string"))?
+        .to_string())
+}
+
+fn opt_text(j: &Json, k: &str) -> Result<Option<String>> {
+    match j.get(k) {
+        Some(v) => Ok(Some(
+            v.as_str()
+                .ok_or_else(|| anyhow!("event: field '{k}' is not a string"))?
+                .to_string(),
+        )),
+        None => Ok(None),
+    }
+}
+
+fn boolean(j: &Json, k: &str) -> Result<bool> {
+    req(j, k)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("event: field '{k}' is not a bool"))
+}
+
+// ---- hex codecs ----------------------------------------------------------
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+/// Lowercase hex of a byte string.
+pub fn hex_bytes(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 15) as usize] as char);
+    }
+    s
+}
+
+pub fn parse_hex_bytes(s: &str) -> Result<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        bail!("hex string has odd length {}", b.len());
+    }
+    fn nib(c: u8) -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            _ => bail!("invalid hex digit 0x{c:02x}"),
+        }
+    }
+    b.chunks_exact(2)
+        .map(|p| Ok((nib(p[0])? << 4) | nib(p[1])?))
+        .collect()
+}
+
+/// Hex of the little-endian bytes of an f32 vector — exact (no decimal
+/// round-trip), 8 chars per element.
+pub fn hex_f32s(xs: &[f32]) -> String {
+    let mut s = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        for &b in &x.to_le_bytes() {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 15) as usize] as char);
+        }
+    }
+    s
+}
+
+pub fn parse_hex_f32s(s: &str) -> Result<Vec<f32>> {
+    let bytes = parse_hex_bytes(s)?;
+    if bytes.len() % 4 != 0 {
+        bail!("f32 hex string is {} bytes, not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// A u64 as a hex string (exact beyond 2^53, unlike a JSON number).
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:x}")
+}
+
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad u64 hex '{s}': {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<Event> {
+        vec![
+            Event::Meta {
+                runtime: "sim".into(),
+                algorithm: "qafel".into(),
+                d: 128,
+                seed: 0xDEAD_BEEF_CAFE_F00D, // > 2^53: needs the hex path
+                fingerprint: "0123456789abcdef".into(),
+                git: Some("c6cef03-dirty".into()),
+                config: Json::obj(vec![("fl", Json::obj(vec![("shards", Json::num(4.0))]))]),
+            },
+            Event::Meta {
+                runtime: "tcp".into(),
+                algorithm: "fedbuff".into(),
+                d: 64,
+                seed: 7,
+                fingerprint: "ffff0000ffff0000".into(),
+                git: None,
+                config: Json::obj(vec![]),
+            },
+            Event::Codec { reg: "client".into(), id: 1, spec: "top:0.1".into() },
+            Event::Init { x0: vec![0.0, -1.5, f32::MIN_POSITIVE, 3.25e7], server_seed: u64::MAX },
+            Event::Arrival {
+                time: 0.125,
+                tier: "phone".into(),
+                user: 42,
+                trip: 3,
+                t_start: 17,
+                dropped: true,
+                partial: Some(0.4),
+            },
+            Event::Arrival {
+                time: 1.5,
+                tier: "default".into(),
+                user: 0,
+                trip: 0,
+                t_start: 0,
+                dropped: false,
+                partial: None,
+            },
+            Event::Ingest {
+                time: 2.25,
+                step: 5,
+                worker: 9,
+                codec: 2,
+                staleness: 11,
+                payload: vec![0x00, 0xff, 0x7f, 0x80, 0x01],
+            },
+            Event::IngestPartial {
+                time: 3.0,
+                step: 6,
+                worker: 1,
+                codec: 0,
+                count: 2,
+                stale_counts: vec![1, 0, 1],
+                stale_sum: 4,
+                stale_max: 3,
+                stale_n: 2,
+                payload: vec![0xab, 0xcd],
+            },
+            Event::Step {
+                time: 4.5,
+                step: 7,
+                k: 3,
+                uploads: 21,
+                upload_bytes: 5544,
+                broadcast_bytes: 1848,
+                stale_mean: 1.75,
+                stale_max: 11,
+                stages: Some(StageTimings {
+                    steps: 7,
+                    accumulate_ns: 100,
+                    momentum_ns: 200,
+                    diff_ns: 300,
+                    encode_ns: 400,
+                    advance_ns: 500,
+                }),
+            },
+            Event::Step {
+                time: 4.75,
+                step: 8,
+                k: 3,
+                uploads: 24,
+                upload_bytes: 6336,
+                broadcast_bytes: 2112,
+                stale_mean: 1.5,
+                stale_max: 11,
+                stages: None,
+            },
+            Event::Broadcast { time: 4.5, step: 7, absolute: false, payload: vec![1, 2, 3] },
+            Event::Eval { time: 5.0, step: 8, uploads: 24, val_loss: 0.3125, val_accuracy: 0.875 },
+            Event::Checkpoint {
+                time: 6.0,
+                step: 10,
+                state: Json::obj(vec![("rng", Json::arr(vec![Json::str("ff"), Json::str("1")]))]),
+            },
+            Event::Final {
+                step: 30,
+                uploads: 90,
+                upload_bytes: 23760,
+                broadcasts: 30,
+                broadcast_bytes: 7920,
+                model: vec![1.0, -2.5, 0.0],
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_roundtrips_through_its_line() {
+        for ev in all_variants() {
+            let line = ev.to_line();
+            assert!(!line.contains('\n'), "{}: line must be single-line", ev.kind());
+            let back = Event::from_line(&line).unwrap_or_else(|e| {
+                panic!("{}: failed to parse own line {line}: {e}", ev.kind())
+            });
+            assert_eq!(back, ev, "{} roundtrip", ev.kind());
+        }
+    }
+
+    #[test]
+    fn every_strict_prefix_fails_to_parse() {
+        // the torn-tail guarantee: a journal line cut anywhere before its
+        // final byte never parses as a valid event
+        for ev in all_variants() {
+            let line = ev.to_line();
+            for cut in 0..line.len() {
+                let prefix = &line[..cut];
+                assert!(
+                    Event::from_line(prefix).is_err(),
+                    "{}: prefix of {} bytes parsed",
+                    ev.kind(),
+                    cut
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_and_unknown_kinds_are_rejected() {
+        assert!(Event::from_line("").is_err());
+        assert!(Event::from_line("not json").is_err());
+        assert!(Event::from_line("[1,2]").is_err());
+        assert!(Event::from_line("{\"no_ev\":1}").is_err());
+        assert!(Event::from_line("{\"ev\":\"warp\"}").is_err());
+        // right kind, missing field
+        assert!(Event::from_line("{\"ev\":\"codec\",\"reg\":\"client\"}").is_err());
+        // right kind, wrong type
+        assert!(Event::from_line("{\"ev\":\"codec\",\"reg\":7,\"id\":0,\"spec\":\"x\"}").is_err());
+    }
+
+    #[test]
+    fn hex_codecs_roundtrip_and_reject_malformed() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(parse_hex_bytes(&hex_bytes(&bytes)).unwrap(), bytes);
+        assert!(parse_hex_bytes("abc").is_err(), "odd length");
+        assert!(parse_hex_bytes("zz").is_err(), "bad digit");
+        assert!(parse_hex_bytes("AB").is_err(), "uppercase is not canonical");
+
+        let xs = [0.0f32, -0.0, 1.5, f32::MAX, f32::MIN_POSITIVE];
+        let rt = parse_hex_f32s(&hex_f32s(&xs)).unwrap();
+        assert_eq!(rt.len(), xs.len());
+        for (a, b) in xs.iter().zip(&rt) {
+            assert_eq!(a.to_bits(), b.to_bits(), "exact bit roundtrip");
+        }
+        assert!(parse_hex_f32s("aabbcc").is_err(), "not a multiple of 4 bytes");
+
+        for v in [0u64, 1, 0x7fff_ffff, u64::MAX, 1 << 53] {
+            assert_eq!(parse_hex_u64(&hex_u64(v)).unwrap(), v);
+        }
+        assert!(parse_hex_u64("").is_err());
+        assert!(parse_hex_u64("xyz").is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Append-only JSONL journal: one [`Event`] per line.
+//!
+//! The durability contract is the one the event format was designed
+//! for (see [`super::event`]): every line is a single top-level JSON
+//! object written with one `write_all` call, so a kill can only tear
+//! the *final* line, and a torn line never parses. [`JournalReader`]
+//! therefore tolerates exactly one unparsable tail line and fails
+//! loudly on anything malformed before it.
+
+use super::event::Event;
+use crate::scenario::metrics::StalenessHist;
+use crate::telemetry::StageTimings;
+use anyhow::{anyhow, bail, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+
+/// Streams events to a journal file, one line per event, each line a
+/// single unbuffered write (the torn-tail guarantee).
+pub struct JournalWriter {
+    file: File,
+    path: String,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal, truncating any existing file.
+    pub fn create(path: &str) -> Result<JournalWriter> {
+        let file = File::create(path)
+            .map_err(|e| anyhow!("journal: cannot create '{path}': {e}"))?;
+        Ok(JournalWriter { file, path: path.to_string() })
+    }
+
+    /// Continue an existing journal (the resume path — the caller has
+    /// already truncated it to the last checkpoint).
+    pub fn append(path: &str) -> Result<JournalWriter> {
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| anyhow!("journal: cannot append to '{path}': {e}"))?;
+        Ok(JournalWriter { file, path: path.to_string() })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Append one event.
+    pub fn write(&mut self, ev: &Event) -> Result<()> {
+        let mut line = ev.to_line();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .map_err(|e| anyhow!("journal: write to '{}' failed: {e}", self.path))
+    }
+}
+
+/// Reads a journal back into typed events.
+pub struct JournalReader;
+
+impl JournalReader {
+    /// Read every event in `path`. A single unparsable *final* line (a
+    /// kill tore it mid-write) is dropped; an unparsable line anywhere
+    /// else is corruption and errors with its line number.
+    pub fn read(path: &str) -> Result<Vec<Event>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("journal: cannot read '{path}': {e}"))?;
+        let lines: Vec<&str> = text.split('\n').collect();
+        let last_content = lines.iter().rposition(|l| !l.is_empty());
+        let mut events = Vec::new();
+        for (i, line) in lines.iter().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            match Event::from_line(line) {
+                Ok(ev) => events.push(ev),
+                // torn tail: the only line a kill can damage
+                Err(_) if Some(i) == last_content => break,
+                Err(e) => bail!("journal '{path}' line {}: {e}", i + 1),
+            }
+        }
+        if events.is_empty() {
+            bail!("journal '{path}' contains no events");
+        }
+        Ok(events)
+    }
+}
+
+/// Prepare `path` for resume: find its last `Checkpoint` event, cut the
+/// file immediately after that line (dropping post-checkpoint events
+/// and any torn tail, so appended events keep step/time monotonic), and
+/// return the surviving prefix — `Meta` through that `Checkpoint`.
+pub fn truncate_after_last_checkpoint(path: &str) -> Result<Vec<Event>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("journal: cannot read '{path}': {e}"))?;
+    let mut events = Vec::new();
+    let mut kept = 0usize; // events up to + including the last checkpoint
+    let mut cut = 0usize; // byte offset just past that checkpoint's line
+    let mut pos = 0usize;
+    let lines: Vec<&str> = text.split('\n').collect();
+    let last_content = lines.iter().rposition(|l| !l.is_empty());
+    for (i, line) in lines.iter().enumerate() {
+        let line_end = pos + line.len() + 1; // + the '\n' (or EOF)
+        if !line.is_empty() {
+            match Event::from_line(line) {
+                Ok(ev) => {
+                    let is_ckpt = matches!(ev, Event::Checkpoint { .. });
+                    events.push(ev);
+                    if is_ckpt {
+                        kept = events.len();
+                        cut = line_end.min(text.len());
+                    }
+                }
+                // torn tail — the cut drops it anyway
+                Err(_) if Some(i) == last_content => break,
+                Err(e) => bail!("journal '{path}' line {}: {e}", i + 1),
+            }
+        }
+        pos = line_end;
+    }
+    if kept == 0 {
+        bail!(
+            "journal '{path}' has no checkpoint to resume from — \
+             record with telemetry.checkpoint_every > 0"
+        );
+    }
+    events.truncate(kept);
+    let file = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .map_err(|e| anyhow!("journal: cannot open '{path}' for truncation: {e}"))?;
+    file.set_len(cut as u64)
+        .map_err(|e| anyhow!("journal: truncating '{path}' failed: {e}"))?;
+    Ok(events)
+}
+
+/// The per-step one-liner shared by `qafel journal tail` and the live
+/// `--progress` output: step, buffer fill, staleness quantiles, wire
+/// bytes since the previous step, and the stage-time breakdown (when
+/// spans were on). `prev` is the preceding `Step` event; `hist` is the
+/// staleness histogram over every ingest so far. Returns `None` when
+/// `cur` is not a `Step`.
+pub fn progress_line(cur: &Event, prev: Option<&Event>, hist: &StalenessHist) -> Option<String> {
+    let Event::Step { time, step, k, upload_bytes, broadcast_bytes, stages, .. } = cur else {
+        return None;
+    };
+    let (prev_up, prev_down, prev_stages) = match prev {
+        Some(Event::Step {
+            upload_bytes: u,
+            broadcast_bytes: b,
+            stages: s,
+            ..
+        }) => (*u, *b, s.clone()),
+        _ => (0, 0, None),
+    };
+    let up = upload_bytes.saturating_sub(prev_up);
+    let down = broadcast_bytes.saturating_sub(prev_down);
+    let mut line = format!(
+        "step {step:>6} | t={time:<9.3} | k {k} | stale p50 {} p99 {} | up {} | down {}",
+        hist.quantile(0.5),
+        hist.quantile(0.99),
+        human_bytes(up),
+        human_bytes(down),
+    );
+    if let Some(cum) = stages {
+        let base = prev_stages.unwrap_or_default();
+        let d = |a: u64, b: u64| a.saturating_sub(b);
+        let delta = StageTimings {
+            steps: d(cum.steps, base.steps),
+            accumulate_ns: d(cum.accumulate_ns, base.accumulate_ns),
+            momentum_ns: d(cum.momentum_ns, base.momentum_ns),
+            diff_ns: d(cum.diff_ns, base.diff_ns),
+            encode_ns: d(cum.encode_ns, base.encode_ns),
+            advance_ns: d(cum.advance_ns, base.advance_ns),
+        };
+        line.push_str(&format!(
+            " | acc {} mom {} diff {} enc {} adv {}",
+            human_ns(delta.accumulate_ns),
+            human_ns(delta.momentum_ns),
+            human_ns(delta.diff_ns),
+            human_ns(delta.encode_ns),
+            human_ns(delta.advance_ns),
+        ));
+    }
+    Some(line)
+}
+
+/// `1.5KB`-style byte counts for the progress line.
+fn human_bytes(n: u64) -> String {
+    if n < 1024 {
+        format!("{n}B")
+    } else if n < 1024 * 1024 {
+        format!("{:.1}KB", n as f64 / 1024.0)
+    } else {
+        format!("{:.1}MB", n as f64 / (1024.0 * 1024.0))
+    }
+}
+
+/// `12.3µs`-style durations for the stage breakdown.
+fn human_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static TEMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    fn temp_path(tag: &str) -> String {
+        let n = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir()
+            .join(format!("qafel_journal_{tag}_{}_{n}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn step_ev(step: u64, time: f64) -> Event {
+        Event::Step {
+            time,
+            step,
+            k: 3,
+            uploads: step * 3,
+            upload_bytes: step * 300,
+            broadcast_bytes: step * 100,
+            stale_mean: 1.0,
+            stale_max: 4,
+            stages: None,
+        }
+    }
+
+    fn checkpoint_ev(step: u64) -> Event {
+        Event::Checkpoint {
+            time: step as f64,
+            step,
+            state: crate::util::json::Json::obj(vec![]),
+        }
+    }
+
+    #[test]
+    fn write_then_read_roundtrips() {
+        let path = temp_path("rt");
+        let evs = vec![
+            Event::Codec { reg: "client".into(), id: 0, spec: "qsgd:4".into() },
+            step_ev(1, 0.5),
+            checkpoint_ev(1),
+            step_ev(2, 1.0),
+        ];
+        let mut w = JournalWriter::create(&path).unwrap();
+        for ev in &evs {
+            w.write(ev).unwrap();
+        }
+        drop(w);
+        assert_eq!(JournalReader::read(&path).unwrap(), evs);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_but_mid_file_corruption_errors() {
+        let path = temp_path("torn");
+        let mut w = JournalWriter::create(&path).unwrap();
+        w.write(&step_ev(1, 0.5)).unwrap();
+        w.write(&step_ev(2, 1.0)).unwrap();
+        drop(w);
+        // tear the last line the way a kill mid-write would
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 10]).unwrap();
+        let evs = JournalReader::read(&path).unwrap();
+        assert_eq!(evs, vec![step_ev(1, 0.5)]);
+        // corruption *before* the tail is never silently skipped
+        let garbled = text.replacen("\"ev\":\"step\"", "\"ev\":\"serp\"", 1);
+        std::fs::write(&path, garbled).unwrap();
+        let err = JournalReader::read(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncate_cuts_after_last_checkpoint() {
+        let path = temp_path("cut");
+        let mut w = JournalWriter::create(&path).unwrap();
+        w.write(&checkpoint_ev(1)).unwrap();
+        w.write(&step_ev(2, 1.0)).unwrap();
+        w.write(&checkpoint_ev(2)).unwrap();
+        w.write(&step_ev(3, 1.5)).unwrap();
+        w.write(&step_ev(4, 2.0)).unwrap();
+        drop(w);
+        let prefix = truncate_after_last_checkpoint(&path).unwrap();
+        assert_eq!(
+            prefix,
+            vec![checkpoint_ev(1), step_ev(2, 1.0), checkpoint_ev(2)]
+        );
+        // the file itself was cut at the same point — and an appended
+        // event lands right after the checkpoint line
+        let mut w = JournalWriter::append(&path).unwrap();
+        w.write(&step_ev(3, 1.5)).unwrap();
+        drop(w);
+        let evs = JournalReader::read(&path).unwrap();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[3], step_ev(3, 1.5));
+        // a journal with no checkpoint refuses to resume
+        let bare = temp_path("bare");
+        let mut w = JournalWriter::create(&bare).unwrap();
+        w.write(&step_ev(1, 0.5)).unwrap();
+        drop(w);
+        let err = truncate_after_last_checkpoint(&bare).unwrap_err().to_string();
+        assert!(err.contains("no checkpoint"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&bare).unwrap();
+    }
+
+    #[test]
+    fn progress_line_shows_deltas_and_stages() {
+        let mut hist = StalenessHist::default();
+        for s in [0, 0, 1, 2, 8] {
+            hist.record(s);
+        }
+        let mut prev = step_ev(1, 0.5);
+        let mut cur = step_ev(2, 1.0);
+        let line = progress_line(&cur, Some(&prev), &hist).unwrap();
+        assert!(line.starts_with("step ") && line.contains(" 2 |"), "{line}");
+        // deltas, not totals: 600-300=300B up, 200-100=100B down
+        assert!(line.contains("up 300B") && line.contains("down 100B"), "{line}");
+        // [0,0,1,2,8]: median 1, p99 clamped to the observed max 8
+        assert!(line.contains("p50 1") && line.contains("p99 8"), "{line}");
+        assert!(!line.contains("acc"), "no stage block without spans: {line}");
+        // with spans on, the stage breakdown appears as deltas
+        let stamp = |ev: &mut Event, ns: u64| {
+            if let Event::Step { stages, .. } = ev {
+                *stages = Some(StageTimings {
+                    steps: ns / 1000,
+                    accumulate_ns: ns,
+                    momentum_ns: ns,
+                    diff_ns: ns,
+                    encode_ns: ns,
+                    advance_ns: ns,
+                });
+            }
+        };
+        stamp(&mut prev, 1_000);
+        stamp(&mut cur, 3_500);
+        let line = progress_line(&cur, Some(&prev), &hist).unwrap();
+        assert!(line.contains("acc 2.5µs"), "{line}");
+        // non-step events produce no line
+        assert!(progress_line(&checkpoint_ev(1), None, &hist).is_none());
+    }
+}

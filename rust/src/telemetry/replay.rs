@@ -1,0 +1,384 @@
+//! Deterministic journal replay: rebuild the run from its `Meta` event
+//! and drive a fresh [`Server`] with the journal's ingest stream,
+//! asserting every recorded broadcast (and the final model) bit-exactly.
+//!
+//! This is the generalized form of the TCP leader's old ad-hoc
+//! `record_trace`: because the journal captures what reached the server
+//! (not when threads happened to run), replay is deterministic even for
+//! journals recorded by the nondeterministic TCP runtime — it is the
+//! proof that the recorded broadcasts follow from the recorded ingests
+//! under Algorithm 1.
+
+use super::event::Event;
+use super::journal::JournalReader;
+use crate::config::Config;
+use crate::coordinator::{Broadcast, Server, ServerStep};
+use crate::quant::QuantizedMsg;
+use crate::scenario::StalenessHist;
+use anyhow::{anyhow, bail, Result};
+
+/// Summary of a successful replay.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplayReport {
+    /// Server steps reproduced.
+    pub steps: u64,
+    /// Ingest events fed to the server (flat uploads + partials).
+    pub uploads: u64,
+    /// Broadcast payloads verified byte-for-byte.
+    pub broadcasts_checked: u64,
+    /// Checkpoint events encountered (not verified here; resume is).
+    pub checkpoints: u64,
+    /// True when the journal ended in a `Final` event whose totals and
+    /// model were verified. A journal from a killed run has none — the
+    /// prefix still replays, which is what makes resume trustworthy.
+    pub finalized: bool,
+}
+
+/// Replay a journal read from `path`. See [`replay_events`].
+pub fn replay_file(path: &str) -> Result<ReplayReport> {
+    replay_events(&JournalReader::read(path)?)
+}
+
+/// Replay a journal: rebuild the config from `Meta`, the server from
+/// `Init`, re-register codecs from `Codec` events, then feed every
+/// `Ingest`/`IngestPartial` and check each produced broadcast against
+/// the recorded `Broadcast` event (payload, step, absolute flag), each
+/// `Step` event's cumulative totals, and the `Final` model bits.
+pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
+    let mut report = ReplayReport::default();
+    let mut cfg: Option<Config> = None;
+    let mut meta_d = 0usize;
+    let mut server: Option<Server> = None;
+    // a broadcast produced by an ingest, awaiting its journal event
+    let mut produced: Option<Broadcast> = None;
+    // update slots since the last step (checked against Step.k)
+    let mut slots: u64 = 0;
+
+    for (i, ev) in events.iter().enumerate() {
+        let at = |what: &str| anyhow!("journal event {i}: {what}");
+        match ev {
+            Event::Meta { algorithm, d, config, .. } => {
+                if cfg.is_some() {
+                    bail!(at("second meta event"));
+                }
+                let mut c = Config::default();
+                c.apply(config)
+                    .map_err(|e| anyhow!("journal event {i}: bad embedded config: {e}"))?;
+                if c.fl.algorithm.name() != algorithm {
+                    bail!(at(&format!(
+                        "meta algorithm '{algorithm}' disagrees with embedded config '{}'",
+                        c.fl.algorithm.name()
+                    )));
+                }
+                meta_d = *d as usize;
+                cfg = Some(c);
+            }
+            Event::Init { x0, server_seed } => {
+                let c = cfg.as_ref().ok_or_else(|| at("init before meta"))?;
+                if x0.len() != meta_d {
+                    bail!(at(&format!(
+                        "init model has d={} but meta declared d={meta_d}",
+                        x0.len()
+                    )));
+                }
+                if server.is_some() {
+                    bail!(at("second init event"));
+                }
+                server = Some(Server::build(c, x0.clone(), *server_seed)?);
+            }
+            Event::Codec { reg, id, spec } => {
+                let s = server.as_mut().ok_or_else(|| at("codec before init"))?;
+                let got = match reg.as_str() {
+                    "client" => s.register_client_codec(spec)?,
+                    "partial" => s.register_partial_codec(spec)?,
+                    other => bail!(at(&format!("unknown codec registry '{other}'"))),
+                } as u64;
+                if got != *id {
+                    bail!(at(&format!(
+                        "codec '{spec}' registered as id {got}, journal says {id} — \
+                         registration order diverged"
+                    )));
+                }
+            }
+            Event::Ingest { worker, codec, staleness, payload, .. } => {
+                let s = server.as_mut().ok_or_else(|| at("ingest before init"))?;
+                if produced.is_some() {
+                    bail!(at("ingest while a produced broadcast is still unchecked"));
+                }
+                let msg = QuantizedMsg { payload: payload.clone(), d: s.d() };
+                slots += 1;
+                match s.ingest_from(&msg, *staleness, *codec as usize).map_err(|e| {
+                    anyhow!("journal event {i}: ingest from worker {worker} failed: {e}")
+                })? {
+                    ServerStep::Buffered => {}
+                    ServerStep::Stepped(b) => produced = Some(b),
+                }
+                report.uploads += 1;
+            }
+            Event::IngestPartial {
+                worker,
+                codec,
+                count,
+                stale_counts,
+                stale_sum,
+                stale_max,
+                stale_n,
+                payload,
+                ..
+            } => {
+                let s = server.as_mut().ok_or_else(|| at("ingest before init"))?;
+                if produced.is_some() {
+                    bail!(at("ingest while a produced broadcast is still unchecked"));
+                }
+                let msg = QuantizedMsg { payload: payload.clone(), d: s.d() };
+                let hist = StalenessHist::from_parts(
+                    stale_counts.clone(),
+                    *stale_sum,
+                    *stale_max,
+                    *stale_n,
+                );
+                slots += count;
+                match s
+                    .ingest_partial(&msg, *count as u32, &hist, *codec as usize)
+                    .map_err(|e| {
+                        anyhow!("journal event {i}: partial from edge {worker} failed: {e}")
+                    })? {
+                    ServerStep::Buffered => {}
+                    ServerStep::Stepped(b) => produced = Some(b),
+                }
+                report.uploads += 1;
+            }
+            Event::Step { step, k, uploads, upload_bytes, broadcast_bytes, .. } => {
+                let s = server.as_ref().ok_or_else(|| at("step before init"))?;
+                if s.t() != *step {
+                    bail!(at(&format!("server is at t={} but journal says {step}", s.t())));
+                }
+                if slots != *k {
+                    bail!(at(&format!("step consumed {slots} slots, journal says {k}")));
+                }
+                if s.comm.uploads != *uploads
+                    || s.comm.upload_bytes != *upload_bytes
+                    || s.comm.broadcast_bytes != *broadcast_bytes
+                {
+                    bail!(at(&format!(
+                        "comm totals diverged at step {step}: replay \
+                         uploads={}/{}B broadcast={}B, journal \
+                         uploads={uploads}/{upload_bytes}B broadcast={broadcast_bytes}B",
+                        s.comm.uploads, s.comm.upload_bytes, s.comm.broadcast_bytes
+                    )));
+                }
+                slots = 0;
+                report.steps += 1;
+            }
+            Event::Broadcast { step, absolute, payload, .. } => {
+                let b = produced
+                    .take()
+                    .ok_or_else(|| at("broadcast event without a produced broadcast"))?;
+                if b.t != *step {
+                    bail!(at(&format!("broadcast at t={} but journal says {step}", b.t)));
+                }
+                if b.absolute != *absolute {
+                    bail!(at("broadcast absolute flag diverged"));
+                }
+                if &b.msg.payload != payload {
+                    bail!(at(&format!(
+                        "broadcast payload diverged at step {step} — \
+                         replay produced different bits than the recorded run"
+                    )));
+                }
+                report.broadcasts_checked += 1;
+            }
+            // informational for replay: arrivals/evals describe the
+            // population and the curve, not the server's input stream
+            Event::Arrival { .. } | Event::Eval { .. } => {}
+            Event::Checkpoint { .. } => report.checkpoints += 1,
+            Event::Final { step, uploads, upload_bytes, broadcasts, broadcast_bytes, model } => {
+                let s = server.as_ref().ok_or_else(|| at("final before init"))?;
+                if i + 1 != events.len() {
+                    bail!(at("final event is not the last event"));
+                }
+                if s.t() != *step {
+                    bail!(at(&format!("final step {step} but replay reached t={}", s.t())));
+                }
+                if s.comm.uploads != *uploads
+                    || s.comm.upload_bytes != *upload_bytes
+                    || s.comm.broadcasts != *broadcasts
+                    || s.comm.broadcast_bytes != *broadcast_bytes
+                {
+                    bail!(at("final comm totals diverged"));
+                }
+                if s.model().len() != model.len()
+                    || s
+                        .model()
+                        .iter()
+                        .zip(model.iter())
+                        .any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    bail!(at("final model diverged (bitwise)"));
+                }
+                report.finalized = true;
+            }
+        }
+    }
+    if server.is_none() {
+        bail!("journal has no init event — nothing to replay");
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::quant::parse_spec;
+    use crate::util::prng::Prng;
+
+    /// Record a small qafel run (K=2, qsgd both ways) the way a runtime
+    /// would, returning the event stream.
+    fn record_run(tamper: bool) -> Vec<Event> {
+        let mut cfg = Config::default();
+        cfg.fl.buffer_size = 2;
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:4".into();
+        let d = 128 + 9;
+        let seed = 11u64;
+        let mut server = Server::build(&cfg, vec![0.0; d], seed).unwrap();
+
+        let mut events = vec![
+            Event::Meta {
+                runtime: "sim".into(),
+                algorithm: cfg.fl.algorithm.name().into(),
+                d: d as u64,
+                seed,
+                fingerprint: crate::telemetry::run_fingerprint(&cfg, seed),
+                git: None,
+                config: cfg.to_json(),
+            },
+            Event::Init { x0: vec![0.0; d], server_seed: seed },
+        ];
+        let top = server.register_client_codec("top:0.25").unwrap();
+        events.push(Event::Codec { reg: "client".into(), id: top as u64, spec: "top:0.25".into() });
+
+        let qc = parse_spec("qsgd:8").unwrap();
+        let qt = parse_spec("top:0.25").unwrap();
+        let mut rng = Prng::new(3);
+        for round in 0..8u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.05 + round as f32).sin()).collect();
+            let (codec, msg) = if round % 3 == 2 {
+                (top as u64, qt.quantize(&delta, &mut rng))
+            } else {
+                (0u64, qc.quantize(&delta, &mut rng))
+            };
+            events.push(Event::Ingest {
+                time: round as f64,
+                step: server.t(),
+                worker: round,
+                codec,
+                staleness: round % 2,
+                payload: msg.payload.clone(),
+            });
+            if let ServerStep::Stepped(b) =
+                server.ingest_from(&msg, round % 2, codec as usize).unwrap()
+            {
+                events.push(Event::Step {
+                    time: round as f64,
+                    step: server.t(),
+                    k: 2,
+                    uploads: server.comm.uploads,
+                    upload_bytes: server.comm.upload_bytes,
+                    broadcast_bytes: server.comm.broadcast_bytes,
+                    stale_mean: server.staleness_mean(),
+                    stale_max: server.staleness_max,
+                    stages: None,
+                });
+                events.push(Event::Broadcast {
+                    time: round as f64,
+                    step: b.t,
+                    absolute: b.absolute,
+                    payload: b.msg.payload,
+                });
+            }
+        }
+        events.push(Event::Final {
+            step: server.t(),
+            uploads: server.comm.uploads,
+            upload_bytes: server.comm.upload_bytes,
+            broadcasts: server.comm.broadcasts,
+            broadcast_bytes: server.comm.broadcast_bytes,
+            model: server.model().to_vec(),
+        });
+        if tamper {
+            // flip one bit of one broadcast payload
+            for ev in events.iter_mut() {
+                if let Event::Broadcast { payload, .. } = ev {
+                    payload[0] ^= 1;
+                    break;
+                }
+            }
+        }
+        events
+    }
+
+    #[test]
+    fn recorded_run_replays_bit_identically() {
+        let events = record_run(false);
+        let report = replay_events(&events).unwrap();
+        assert_eq!(report.steps, 4);
+        assert_eq!(report.uploads, 8);
+        assert_eq!(report.broadcasts_checked, 4);
+        assert!(report.finalized);
+        // the journal survives a serialization round trip and still
+        // replays (what the JSONL file guarantees end to end)
+        let lines: Vec<String> = events.iter().map(Event::to_line).collect();
+        let back: Vec<Event> =
+            lines.iter().map(|l| Event::from_line(l).unwrap()).collect();
+        assert_eq!(replay_events(&back).unwrap(), report);
+    }
+
+    #[test]
+    fn tampered_broadcast_fails_the_replay() {
+        let events = record_run(true);
+        let err = replay_events(&events).unwrap_err().to_string();
+        assert!(err.contains("diverged"), "{err}");
+    }
+
+    #[test]
+    fn truncated_journal_replays_as_unfinalized_prefix() {
+        let mut events = record_run(false);
+        events.truncate(events.len() - 3); // drop final + last step pair
+        let report = replay_events(&events).unwrap();
+        assert!(!report.finalized);
+        assert!(report.steps < 4);
+    }
+
+    #[test]
+    fn structural_errors_are_loud() {
+        // no meta/init
+        assert!(replay_events(&[]).is_err());
+        let events = record_run(false);
+        // init before meta
+        let mut reordered = events.clone();
+        reordered.swap(0, 1);
+        assert!(replay_events(&reordered).is_err());
+        // codec id mismatch
+        let mut bad = events.clone();
+        for ev in bad.iter_mut() {
+            if let Event::Codec { id, .. } = ev {
+                *id += 7;
+            }
+        }
+        let err = replay_events(&bad).unwrap_err().to_string();
+        assert!(err.contains("registration order"), "{err}");
+        // a journal whose broadcast payload length mismatches the codec
+        // fails inside the server, with the event index attached
+        let mut bad = events;
+        for ev in bad.iter_mut() {
+            if let Event::Ingest { payload, .. } = ev {
+                payload.pop();
+            }
+        }
+        let err = replay_events(&bad).unwrap_err().to_string();
+        assert!(err.contains("journal event"), "{err}");
+    }
+}

@@ -44,6 +44,24 @@ pub fn live_workers_total() -> usize {
     LIVE_WORKERS.load(Ordering::SeqCst)
 }
 
+/// Non-empty task batches executed through [`ShardPool::run`] across
+/// every pool in this process (utilization telemetry: together with
+/// [`tasks_run_total`], `tasks / batches` is the average shard fan-out
+/// actually submitted — vs the configured shard count).
+static BATCHES_RUN: AtomicUsize = AtomicUsize::new(0);
+/// Individual shard tasks executed across every pool in this process.
+static TASKS_RUN: AtomicUsize = AtomicUsize::new(0);
+
+/// Task batches run through any pool in this process.
+pub fn batches_run_total() -> usize {
+    BATCHES_RUN.load(Ordering::SeqCst)
+}
+
+/// Shard tasks run through any pool in this process.
+pub fn tasks_run_total() -> usize {
+    TASKS_RUN.load(Ordering::SeqCst)
+}
+
 /// A borrowed task, valid for `'a` (the duration of the `run` call).
 pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
 type StaticTask = Box<dyn FnOnce() + Send + 'static>;
@@ -183,6 +201,8 @@ impl ShardPool {
         if n == 0 {
             return;
         }
+        BATCHES_RUN.fetch_add(1, Ordering::Relaxed);
+        TASKS_RUN.fetch_add(n, Ordering::Relaxed);
         if self.workers.is_empty() || n == 1 {
             for t in tasks {
                 t();
@@ -345,5 +365,20 @@ mod tests {
     fn empty_batch_is_a_noop() {
         let pool = ShardPool::new(2);
         pool.run(Vec::new());
+    }
+
+    #[test]
+    fn run_counters_track_batches_and_tasks() {
+        let pool = ShardPool::new(2);
+        let b0 = batches_run_total();
+        let t0 = tasks_run_total();
+        let mut v = vec![0u8; 3];
+        let tasks: Vec<Task<'_>> =
+            v.chunks_mut(1).map(|c| Box::new(move || c[0] = 1) as Task<'_>).collect();
+        pool.run(tasks);
+        pool.run(Vec::new()); // empty batches don't count
+        // >= because other tests drive pools concurrently
+        assert!(batches_run_total() >= b0 + 1);
+        assert!(tasks_run_total() >= t0 + 3);
     }
 }

@@ -1,0 +1,255 @@
+//! Flight-recorder acceptance tests (ISSUE 7):
+//!
+//! * journaling is a pure observer — the recorded run's curve is
+//!   bit-identical to an unjournaled run — and the journal replays
+//!   bit-identically through [`qafel::telemetry::replay_file`], for
+//!   qafel *and* fedbuff, at shard counts 1 and 4;
+//! * a sim run killed at step k (journal cut after an interior
+//!   checkpoint, with a torn tail line) resumes to the same curve,
+//!   model bits and event stream as the uninterrupted golden;
+//! * a TCP leader killed the same way resumes with rejoining workers,
+//!   and the stitched journal (true prefix + post-resume history)
+//!   replays end-to-end.
+
+use qafel::config::{Algorithm, Config};
+use qafel::net::{Leader, Worker};
+use qafel::runtime::{Backend as _, QuadraticBackend};
+use qafel::sim::{SimEngine, SimOptions};
+use qafel::telemetry::{replay_file, Event, JournalReader};
+use std::net::TcpListener;
+
+fn temp_journal(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("qafel_it_{tag}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn sim_cfg(algo: Algorithm, shards: usize) -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = algo;
+    let (qc, qs) = match algo {
+        Algorithm::FedBuff => ("none", "none"),
+        _ => ("qsgd:4", "qsgd:4"),
+    };
+    c.quant.client = qc.into();
+    c.quant.server = qs.into();
+    c.fl.buffer_size = 4;
+    c.fl.client_lr = 0.15;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.fl.shards = shards;
+    c.sim.concurrency = 10;
+    c.sim.eval_every = 5;
+    c.seeds = vec![1];
+    c.stop.target_accuracy = 2.0; // fixed horizon
+    c.stop.max_server_steps = 40;
+    c.stop.max_uploads = 100_000;
+    c
+}
+
+fn sim_backend(seed: u64) -> QuadraticBackend {
+    QuadraticBackend::new(64, 16, 1.0, 0.3, 0.2, 0.02, 2, seed)
+}
+
+/// Drop wall-clock noise before comparing event streams: checkpoints
+/// carry nondeterministic state blobs (and the TCP "wall" base), and
+/// `Step.stages` are span timings.
+fn normalized(events: &[Event]) -> Vec<Event> {
+    events
+        .iter()
+        .filter(|e| !matches!(e, Event::Checkpoint { .. }))
+        .cloned()
+        .map(|mut e| {
+            if let Event::Step { stages, .. } = &mut e {
+                *stages = None;
+            }
+            e
+        })
+        .collect()
+}
+
+/// Rewrite `path` to the event prefix `events[..keep]` plus a torn
+/// half-line, simulating a kill mid-write at that point of the run.
+fn kill_journal_at(path: &str, events: &[Event], keep: usize) {
+    let mut text = String::new();
+    for ev in &events[..keep] {
+        text.push_str(&ev.to_line());
+        text.push('\n');
+    }
+    text.push_str("{\"ev\":\"step\",\"time\":12.");
+    std::fs::write(path, text).unwrap();
+}
+
+#[test]
+fn journal_is_a_pure_observer_and_replays_across_algorithms_and_shards() {
+    for algo in [Algorithm::Qafel, Algorithm::FedBuff] {
+        for shards in [1usize, 4] {
+            let c = sim_cfg(algo, shards);
+            let b = sim_backend(5);
+            let plain = SimEngine::new(&c, &b, 5).run().unwrap();
+
+            let path = temp_journal(&format!("replay_{}_{shards}", algo.name()));
+            let mut cj = c.clone();
+            cj.telemetry.journal = Some(path.clone());
+            let journaled = SimEngine::new(&cj, &b, 5).run().unwrap();
+
+            // observer: identical curve bits with and without the recorder
+            assert_eq!(plain.curve.len(), journaled.curve.len());
+            for (p, q) in plain.curve.iter().zip(&journaled.curve) {
+                assert_eq!(p.time.to_bits(), q.time.to_bits());
+                assert_eq!(p.val_loss.to_bits(), q.val_loss.to_bits());
+                assert_eq!(p.val_accuracy.to_bits(), q.val_accuracy.to_bits());
+                assert_eq!(p.uploads, q.uploads);
+            }
+            assert_eq!(plain.fingerprint, journaled.fingerprint);
+
+            // the journal replays bit-identically (every broadcast payload
+            // and the final model are verified inside replay_file)
+            let report = replay_file(&path).unwrap();
+            assert!(report.finalized, "{algo:?} S={shards}");
+            assert_eq!(report.steps, journaled.server_steps);
+            assert_eq!(report.uploads, journaled.comm.uploads);
+            assert_eq!(report.broadcasts_checked, journaled.comm.broadcasts);
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}
+
+#[test]
+fn killed_sim_run_resumes_to_the_uninterrupted_golden() {
+    let mut c = sim_cfg(Algorithm::Qafel, 1);
+    let path = temp_journal("sim_resume");
+    c.telemetry.journal = Some(path.clone());
+    c.telemetry.checkpoint_every = 10;
+    let b = sim_backend(9);
+    let golden = SimEngine::new(&c, &b, 9).run().unwrap();
+    let golden_events = JournalReader::read(&path).unwrap();
+
+    // kill at step ~20: cut after the step-20 checkpoint, keep a couple
+    // of doomed post-checkpoint events and a torn tail
+    let cut = golden_events
+        .iter()
+        .position(|e| matches!(e, Event::Checkpoint { step, .. } if *step == 20))
+        .expect("no checkpoint at step 20");
+    kill_journal_at(&path, &golden_events, (cut + 3).min(golden_events.len()));
+
+    let opts = SimOptions { resume: true, ..Default::default() };
+    let resumed = SimEngine::new(&c, &b, 9).run_with(&opts).unwrap();
+
+    // same curve, bit for bit
+    assert_eq!(golden.curve.len(), resumed.curve.len());
+    for (p, q) in golden.curve.iter().zip(&resumed.curve) {
+        assert_eq!(p.time.to_bits(), q.time.to_bits());
+        assert_eq!(p.val_loss.to_bits(), q.val_loss.to_bits());
+        assert_eq!(p.val_accuracy.to_bits(), q.val_accuracy.to_bits());
+        assert_eq!(p.uploads, q.uploads);
+    }
+    assert_eq!(golden.server_steps, resumed.server_steps);
+    assert_eq!(golden.comm.uploads, resumed.comm.uploads);
+    assert_eq!(golden.comm.upload_bytes, resumed.comm.upload_bytes);
+    assert_eq!(golden.comm.broadcast_bytes, resumed.comm.broadcast_bytes);
+
+    // same journal modulo checkpoints and span timings — including the
+    // Final event, i.e. the resumed model is bit-identical
+    let resumed_events = JournalReader::read(&path).unwrap();
+    assert_eq!(normalized(&golden_events), normalized(&resumed_events));
+
+    // and the stitched journal still replays end to end
+    let report = replay_file(&path).unwrap();
+    assert!(report.finalized);
+    assert_eq!(report.steps, golden.server_steps);
+    std::fs::remove_file(&path).unwrap();
+}
+
+const D: usize = 64;
+
+fn tcp_backend(seed: u64) -> QuadraticBackend {
+    QuadraticBackend::new(D, 8, 1.0, 0.3, 0.2, 0.02, 1, seed)
+}
+
+fn tcp_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = "qsgd:8".into();
+    c.quant.server = "qsgd:4".into();
+    c.fl.buffer_size = 3;
+    c.fl.client_lr = 0.05;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.stop.max_server_steps = 24;
+    c.stop.max_uploads = 100_000;
+    c
+}
+
+/// One leader run over loopback with two workers; returns the report.
+fn tcp_run(cfg: Config, resume: bool) -> qafel::net::LeaderReport {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let x0 = tcp_backend(21).init_params(0).unwrap();
+    let leader = std::thread::spawn(move || {
+        let mut l = Leader::new(cfg, x0, 7);
+        l.resume = resume;
+        l.run_on(listener, 2).unwrap()
+    });
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut w = Worker::new(tcp_backend(21));
+                w.round_delay = std::time::Duration::from_millis(1);
+                w.run(&addr).unwrap()
+            })
+        })
+        .collect();
+    let report = leader.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    report
+}
+
+#[test]
+fn killed_tcp_leader_resumes_and_the_stitched_journal_replays() {
+    let mut cfg = tcp_cfg();
+    let path = temp_journal("tcp_resume");
+    cfg.telemetry.journal = Some(path.clone());
+    cfg.telemetry.checkpoint_every = 6;
+
+    let golden = tcp_run(cfg.clone(), false);
+    assert_eq!(golden.server_steps, 24);
+    let golden_events = JournalReader::read(&path).unwrap();
+
+    // kill after the step-12 checkpoint (plus a torn tail); the second
+    // leader restores t=12 and fresh workers rejoin mid-run
+    let cut = golden_events
+        .iter()
+        .position(|e| matches!(e, Event::Checkpoint { step, .. } if *step == 12))
+        .expect("no checkpoint at step 12");
+    kill_journal_at(&path, &golden_events, (cut + 3).min(golden_events.len()));
+
+    let resumed = tcp_run(cfg.clone(), true);
+    assert_eq!(resumed.server_steps, 24);
+    assert_eq!(resumed.fingerprint, golden.fingerprint);
+
+    // the stitched journal is true history: the 12-step prefix plus the
+    // re-run — every broadcast of both halves verifies bit-for-bit, and
+    // the Final model matches what the resumed leader reports
+    let report = replay_file(&path).unwrap();
+    assert!(report.finalized);
+    assert_eq!(report.steps, 24);
+    assert_eq!(report.broadcasts_checked, 24);
+    let events = JournalReader::read(&path).unwrap();
+    match events.last().unwrap() {
+        Event::Final { model, .. } => {
+            assert_eq!(model.len(), D);
+            for (a, b) in model.iter().zip(&resumed.model) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        other => panic!("journal does not end in Final: {other:?}"),
+    }
+    std::fs::remove_file(&path).unwrap();
+}

@@ -2,9 +2,10 @@
 //!
 //! * a loopback run with three workers on three *different* client
 //!   codecs completes, with per-worker byte accounting matching each
-//!   codec's wire size exactly, and the leader's server trajectory is
-//!   **bit-identical** to replaying the same update order through the
-//!   simulator's [`Server::ingest_from`] path;
+//!   codec's wire size exactly, and the leader's recorded event stream
+//!   is **bit-identical** under [`qafel::telemetry::replay_events`]
+//!   (the journal replayer drives the simulator's
+//!   [`Server::ingest_from`] path);
 //! * a v1 worker (no version field, silent join) is still served
 //!   byte-identically to the legacy protocol — the Join/Broadcast/
 //!   Shutdown frames it sees are pinned against a hand-built golden;
@@ -19,8 +20,9 @@
 use qafel::config::{Algorithm, Config, TierConfig};
 use qafel::coordinator::{Server, ServerStep};
 use qafel::net::{Leader, Message, Worker, PROTOCOL_VERSION};
-use qafel::quant::{parse_spec, QuantizedMsg};
+use qafel::quant::parse_spec;
 use qafel::runtime::{Backend as _, QuadraticBackend};
+use qafel::telemetry::{replay_events, Event};
 use qafel::util::prng::Prng;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -82,7 +84,7 @@ fn mixed_codec_loopback_replays_bit_identical_to_ingest_from() {
     let leader_x0 = x0.clone();
     let leader = std::thread::spawn(move || {
         let mut l = Leader::new(leader_cfg, leader_x0, 7);
-        l.record_trace = true;
+        l.record_events = true;
         l.run_on(listener, 3).unwrap()
     });
 
@@ -143,30 +145,35 @@ fn mixed_codec_loopback_replays_bit_identical_to_ingest_from() {
     assert_eq!(total_uploads, report.comm.uploads);
     assert_eq!(total_bytes, report.comm.upload_bytes);
 
-    // === the acceptance criterion: replay the recorded event order
-    // through the simulator's ingest_from path and demand bit-identity
-    let trace = report.trace.expect("record_trace was set");
-    assert_eq!(trace.updates.len() as u64, report.comm.uploads);
-    // registry: id 0 is the default, the rest replayed in recorded order
-    assert_eq!(trace.codecs[0], "qsgd:8");
-    let mut replay = Server::build(&cfg, x0.clone(), 7).unwrap();
-    for (i, spec) in trace.codecs.iter().enumerate().skip(1) {
-        assert_eq!(replay.register_client_codec(spec).unwrap(), i);
-    }
-    let mut broadcasts = Vec::new();
-    for u in &trace.updates {
-        let qmsg = QuantizedMsg { payload: u.payload.clone(), d: D };
-        if let ServerStep::Stepped(b) = replay.ingest_from(&qmsg, u.staleness, u.codec).unwrap() {
-            broadcasts.push(b.msg.payload);
-        }
-    }
-    assert_eq!(broadcasts.len(), 30);
-    assert_eq!(broadcasts, trace.broadcasts, "broadcast payloads diverged");
-    assert_eq!(replay.model(), &report.model[..], "final model diverged");
-    assert_eq!(replay.t(), report.server_steps);
-    assert_eq!(replay.comm.uploads, report.comm.uploads);
-    assert_eq!(replay.comm.upload_bytes, report.comm.upload_bytes);
-    assert_eq!(replay.staleness_max, report.staleness_max);
+    // === the acceptance criterion: the recorded event stream replays
+    // bit-identically through the shared journal replayer — the same
+    // machinery `qafel journal replay` runs on a journal file. Replay
+    // rebuilds the config from the Meta event, re-registers the codec
+    // registry in recorded order, feeds every ingest, and checks every
+    // broadcast payload and the final model byte-for-byte.
+    let events = report.events.expect("record_events was set");
+    let Some(Event::Meta { runtime, algorithm, fingerprint, .. }) = events.first() else {
+        panic!("event stream does not start with meta");
+    };
+    assert_eq!(runtime, "tcp");
+    assert_eq!(algorithm, "qafel");
+    assert_eq!(*fingerprint, report.fingerprint);
+    // the registry events cover the dynamically negotiated codecs (the
+    // explicit qsgd:4 override and the phone tier's top:0.1 preset)
+    let mut codec_specs: Vec<String> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::Codec { reg, spec, .. } if reg == "client" => Some(spec.clone()),
+            _ => None,
+        })
+        .collect();
+    codec_specs.sort();
+    assert_eq!(codec_specs, vec!["qsgd:4", "top:0.1"]);
+    let replay = replay_events(&events).unwrap();
+    assert_eq!(replay.steps, 30);
+    assert_eq!(replay.broadcasts_checked, 30);
+    assert_eq!(replay.uploads, report.comm.uploads);
+    assert!(replay.finalized, "event stream must end in a verified final event");
 }
 
 #[test]

@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""Schema + invariant check for flight-recorder journals (CI).
+
+A journal is the JSONL event log a `qafel run --journal` / `qafel
+leader --journal` writes (ARCHITECTURE.md §Telemetry). The Rust side
+already proves semantic bit-identity via `qafel journal replay`; this
+validator independently pins the *format* contract an external consumer
+relies on, without linking the crate:
+
+* every line is a standalone JSON object with a known `ev` discriminant
+  (a torn final line — a kill mid-write — is tolerated and reported);
+* the first event is `meta` with runtime/algorithm/d/seed/fingerprint,
+  and `init`/`codec` registration precedes any traffic;
+* hex payload fields decode (even length, hex digits); `init.x0` and
+  `final.model` are exactly `4*d` bytes of little-endian f32;
+* `step` events count 1, 2, 3, ... with nondecreasing `time` and
+  nondecreasing cumulative upload/broadcast byte totals;
+* each `step` is followed by its `broadcast` (same step number), and
+  `final`, when present, is the last event with totals matching the
+  last `step`.
+
+Usage: check_journal.py RUN.jsonl [RUN2.jsonl ...]
+       [--steps N]    require exactly N server steps
+       [--final]      require a final event (completed run)
+
+Exit code 0 when every file validates, 1 otherwise (each failure is
+printed as `file:line: problem`).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+KNOWN_EVENTS = {
+    "meta",
+    "codec",
+    "init",
+    "arrival",
+    "ingest",
+    "ingest_partial",
+    "step",
+    "broadcast",
+    "eval",
+    "checkpoint",
+    "final",
+}
+
+REQUIRED = {
+    "meta": ["runtime", "algorithm", "d", "seed", "fingerprint", "config"],
+    "codec": ["reg", "id", "spec"],
+    "init": ["x0", "server_seed"],
+    "arrival": ["time", "tier", "user", "trip", "t_start", "dropped"],
+    "ingest": ["time", "step", "worker", "codec", "staleness", "payload"],
+    "ingest_partial": [
+        "time",
+        "step",
+        "worker",
+        "codec",
+        "count",
+        "stale_counts",
+        "stale_sum",
+        "stale_max",
+        "stale_n",
+        "payload",
+    ],
+    "step": [
+        "time",
+        "step",
+        "k",
+        "uploads",
+        "upload_bytes",
+        "broadcast_bytes",
+        "stale_mean",
+        "stale_max",
+    ],
+    "broadcast": ["time", "step", "absolute", "payload"],
+    "eval": ["time", "step", "uploads", "val_loss", "val_accuracy"],
+    "checkpoint": ["time", "step", "state"],
+    "final": [
+        "step",
+        "uploads",
+        "upload_bytes",
+        "broadcasts",
+        "broadcast_bytes",
+        "model",
+    ],
+}
+
+HEX_FIELDS = {
+    "init": ["x0"],
+    "ingest": ["payload"],
+    "ingest_partial": ["payload"],
+    "broadcast": ["payload"],
+    "final": ["model"],
+}
+
+
+def hex_bytes(s, what, errs):
+    """Decode a lowercase-hex byte string, returning its byte length."""
+    if not isinstance(s, str) or len(s) % 2 != 0:
+        errs.append(f"{what}: not an even-length hex string")
+        return 0
+    try:
+        return len(bytes.fromhex(s))
+    except ValueError:
+        errs.append(f"{what}: invalid hex")
+        return 0
+
+
+def check_file(path, want_steps=None, want_final=False):
+    errs = []
+    lines = Path(path).read_text().split("\n")
+    while lines and lines[-1] == "":
+        lines.pop()
+    events = []  # (lineno, dict)
+    for i, line in enumerate(lines, 1):
+        if not line:
+            errs.append(f"{path}:{i}: empty interior line")
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines):
+                print(f"{path}:{i}: note: torn tail line dropped (killed run)")
+                continue
+            errs.append(f"{path}:{i}: unparsable line (not the tail — corruption)")
+            continue
+        events.append((i, ev))
+
+    def err(lineno, msg):
+        errs.append(f"{path}:{lineno}: {msg}")
+
+    if not events:
+        errs.append(f"{path}: no events")
+        return errs
+
+    # schema: every event known, required keys present, hex fields decode
+    d = None
+    for lineno, ev in events:
+        kind = ev.get("ev")
+        if kind not in KNOWN_EVENTS:
+            err(lineno, f"unknown event kind {kind!r}")
+            continue
+        for key in REQUIRED[kind]:
+            if key not in ev:
+                err(lineno, f"{kind}: missing field {key!r}")
+        for key in HEX_FIELDS.get(kind, []):
+            if key in ev:
+                n = hex_bytes(ev[key], f"{kind}.{key}", errs)
+                if kind in ("init", "final") and d is not None and n != 4 * d:
+                    err(lineno, f"{kind}.{key}: {n} bytes, want 4*d = {4 * d}")
+        if kind == "meta":
+            d = ev.get("d")
+
+    # ordering: meta first, init/codec before traffic
+    first_lineno, first = events[0]
+    if first.get("ev") != "meta":
+        err(first_lineno, f"first event is {first.get('ev')!r}, not meta")
+    kinds = [e.get("ev") for _, e in events]
+    if "init" not in kinds:
+        err(first_lineno, "no init event")
+    else:
+        init_at = kinds.index("init")
+        for lineno, ev in events[:init_at]:
+            if ev.get("ev") in ("ingest", "ingest_partial", "step", "broadcast"):
+                err(lineno, f"{ev['ev']} before init")
+
+    # step monotonicity + totals + broadcast pairing
+    prev_step = 0
+    prev_time = None
+    prev_up = 0
+    prev_down = 0
+    last_step_ev = None
+    pending_broadcast = None  # step number awaiting its broadcast event
+    for lineno, ev in events:
+        kind = ev.get("ev")
+        if kind == "step":
+            t = ev.get("step")
+            if t != prev_step + 1:
+                err(lineno, f"step {t} after step {prev_step} (want {prev_step + 1})")
+            prev_step = t if isinstance(t, int) else prev_step + 1
+            if ev.get("time") is not None:
+                if prev_time is not None and ev["time"] < prev_time:
+                    err(lineno, f"step time {ev['time']} < previous {prev_time}")
+                prev_time = ev["time"]
+            up, down = ev.get("upload_bytes", 0), ev.get("broadcast_bytes", 0)
+            if up < prev_up or down < prev_down:
+                err(lineno, "cumulative byte totals decreased")
+            prev_up, prev_down = up, down
+            if pending_broadcast is not None:
+                err(lineno, f"step {t} before broadcast of step {pending_broadcast}")
+            pending_broadcast = t
+            last_step_ev = ev
+        elif kind == "broadcast":
+            if ev.get("step") != pending_broadcast:
+                err(
+                    lineno,
+                    f"broadcast for step {ev.get('step')}, "
+                    f"expected {pending_broadcast}",
+                )
+            pending_broadcast = None
+
+    # final: last event, totals consistent with the last step
+    finals = [(lineno, ev) for lineno, ev in events if ev.get("ev") == "final"]
+    if want_final and not finals:
+        errs.append(f"{path}: no final event (run did not complete)")
+    for lineno, ev in finals:
+        if (lineno, ev) != events[-1]:
+            err(lineno, "final is not the last event")
+        if ev.get("step") != prev_step:
+            err(lineno, f"final.step {ev.get('step')} != last step {prev_step}")
+        if last_step_ev is not None:
+            for key in ("uploads", "upload_bytes", "broadcast_bytes"):
+                if ev.get(key) != last_step_ev.get(key):
+                    err(lineno, f"final.{key} != last step's {key}")
+
+    if want_steps is not None and prev_step != want_steps:
+        errs.append(f"{path}: {prev_step} steps, want {want_steps}")
+    return errs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("journals", nargs="+")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--final", action="store_true")
+    args = ap.parse_args()
+    failures = []
+    for path in args.journals:
+        errs = check_file(path, want_steps=args.steps, want_final=args.final)
+        if errs:
+            failures.extend(errs)
+        else:
+            print(f"{path}: OK")
+    for f in failures:
+        print(f, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
