@@ -188,6 +188,14 @@ pub struct TierConfig {
     /// baselines (FedBuff/FedAsync) ignore presets, exactly as they
     /// ignore `quant.client`.
     pub quant_client: Option<String>,
+    /// Per-tier *downlink* (broadcast) quantizer preset. `None` inherits
+    /// `quant.server`. Each distinct resolved server codec gets its own
+    /// hidden-state family x̂ in the server (deduped like client
+    /// presets), so a constrained tier can receive coarser broadcasts
+    /// without perturbing anyone else's error feedback. Full-precision
+    /// baselines (FedBuff/FedAsync) ignore presets, exactly as they
+    /// ignore `quant.server`.
+    pub quant_server: Option<String>,
     /// Probability that a *dropped* client submits the partial update
     /// from the local steps it did complete (scaled by m/P, FedBuff
     /// semantics) instead of discarding its work, in [0, 1]. Needs
@@ -213,6 +221,7 @@ impl TierConfig {
             on_fraction: 1.0,
             phase: 0.0,
             quant_client: None,
+            quant_server: None,
             partial_work: 0.0,
         }
     }
@@ -338,6 +347,14 @@ pub struct NetConfig {
     /// first (and only) spec both register, so registry id 0 is the
     /// wire contract.
     pub partial_codec: String,
+    /// Leader-side: cap on the *resident* broadcast bytes queued per
+    /// worker connection (0 = unlimited, the historical unbounded
+    /// behavior). When a slow or stalled worker's writer queue exceeds
+    /// the budget, the oldest queued delta frames are dropped and folded
+    /// into a catch-up marker; once the worker drains again it receives
+    /// the retained increments (or one bounded full-state sync) from the
+    /// per-codec `UpdateLog` instead of every individual frame.
+    pub broadcast_budget_bytes: u64,
 }
 
 impl Default for NetConfig {
@@ -351,6 +368,7 @@ impl Default for NetConfig {
             upstream: None,
             edge_buffer: 1,
             partial_codec: "none".into(),
+            broadcast_budget_bytes: 0,
         }
     }
 }
@@ -570,6 +588,12 @@ impl Config {
         }
         get_num!(doc, &["net", "edge_buffer"], self.net.edge_buffer, usize);
         get_str!(doc, &["net", "partial_codec"], self.net.partial_codec);
+        get_num!(
+            doc,
+            &["net", "broadcast_budget_bytes"],
+            self.net.broadcast_budget_bytes,
+            u64
+        );
 
         get_num!(doc, &["data", "num_users"], self.data.num_users, usize);
         get_num!(doc, &["data", "seed"], self.data.seed, u64);
@@ -755,11 +779,19 @@ impl Config {
                             .to_string(),
                     );
                 }
+                "quant_server" => {
+                    tier.quant_server = Some(
+                        val.as_str()
+                            .ok_or_else(|| anyhow!("config {what} must be a string"))?
+                            .to_string(),
+                    );
+                }
                 "partial_work" => tier.partial_work = scalar(val, &what)?,
                 other => bail!(
                     "unknown tier key 'scenario.tiers.{name}.{other}' (known: weight, \
                      duration, duration_sigma, upload_mbps, download_mbps, dropout, \
-                     day_period, on_fraction, phase, quant_client, partial_work)"
+                     day_period, on_fraction, phase, quant_client, quant_server, \
+                     partial_work)"
                 ),
             }
         }
@@ -862,6 +894,9 @@ impl Config {
                     if let Some(q) = &t.quant_client {
                         fields.push(("quant_client", Json::str(q)));
                     }
+                    if let Some(q) = &t.quant_server {
+                        fields.push(("quant_server", Json::str(q)));
+                    }
                     Json::obj(fields)
                 })
                 .collect();
@@ -873,6 +908,7 @@ impl Config {
             ("v1_grace_ms", num(self.net.v1_grace_ms as f64)),
             ("edge_buffer", num(self.net.edge_buffer as f64)),
             ("partial_codec", Json::str(&self.net.partial_codec)),
+            ("broadcast_budget_bytes", num(self.net.broadcast_budget_bytes as f64)),
         ];
         if let Some(t) = &self.net.tier {
             net.push(("tier", Json::str(t)));
@@ -1049,6 +1085,11 @@ impl Config {
             if let Some(spec) = &t.quant_client {
                 crate::quant::parse_spec(spec).map_err(|e| {
                     anyhow!("scenario tier '{name}': bad quant_client preset '{spec}': {e}")
+                })?;
+            }
+            if let Some(spec) = &t.quant_server {
+                crate::quant::parse_spec(spec).map_err(|e| {
+                    anyhow!("scenario tier '{name}': bad quant_server preset '{spec}': {e}")
                 })?;
             }
         }
@@ -1274,7 +1315,8 @@ mod tests {
     fn tier_codec_presets_and_partial_work_round_trip() {
         let doc = toml::parse(
             "[scenario]\nsampling = \"availability\"\n\
-             [scenario.tiers.slow]\nquant_client = \"top:0.05\"\npartial_work = 0.4\n",
+             [scenario.tiers.slow]\nquant_client = \"top:0.05\"\n\
+             quant_server = \"qsgd:2\"\npartial_work = 0.4\n",
         )
         .unwrap();
         let mut c = Config::default();
@@ -1282,18 +1324,22 @@ mod tests {
         assert_eq!(c.scenario.sampling, "availability");
         let slow = &c.scenario.tiers[0];
         assert_eq!(slow.quant_client.as_deref(), Some("top:0.05"));
+        assert_eq!(slow.quant_server.as_deref(), Some("qsgd:2"));
         assert_eq!(slow.partial_work, 0.4);
         c.validate().unwrap();
         // CLI --set reaches the same knobs and merges into the tier
         let mut c = Config::default();
         c.set("scenario.tiers.slow.quant_client=\"qsgd:2\"").unwrap();
+        c.set("scenario.tiers.slow.quant_server=\"qsgd:8\"").unwrap();
         c.set("scenario.tiers.slow.partial_work=0.25").unwrap();
         c.set("scenario.sampling=\"availability\"").unwrap();
         assert_eq!(c.scenario.tiers.len(), 1);
         assert_eq!(c.scenario.tiers[0].quant_client.as_deref(), Some("qsgd:2"));
+        assert_eq!(c.scenario.tiers[0].quant_server.as_deref(), Some("qsgd:8"));
         assert_eq!(c.scenario.tiers[0].partial_work, 0.25);
-        // no preset: the default stays None (inherit quant.client)
+        // no preset: the default stays None (inherit quant.client/server)
         assert_eq!(TierConfig::named("x").quant_client, None);
+        assert_eq!(TierConfig::named("x").quant_server, None);
         assert_eq!(TierConfig::named("x").partial_work, 0.0);
     }
 
@@ -1312,6 +1358,11 @@ mod tests {
         assert!(bad(&|t| t.quant_client = Some("qsgd:x".into())).is_err());
         assert!(bad(&|t| t.quant_client = Some("top:0.1".into())).is_ok());
         assert!(bad(&|t| t.quant_client = Some("none".into())).is_ok());
+        // the downlink preset goes through the same spec parser
+        let err = bad(&|t| t.quant_server = Some("huff:3".into())).unwrap_err().to_string();
+        assert!(err.contains("quant_server") && err.contains("huff:3"), "{err}");
+        assert!(bad(&|t| t.quant_server = Some("qsgd:2".into())).is_ok());
+        assert!(bad(&|t| t.quant_server = Some("none".into())).is_ok());
         // partial_work range
         assert!(bad(&|t| t.partial_work = -0.1).is_err());
         assert!(bad(&|t| t.partial_work = 1.5).is_err());
@@ -1352,8 +1403,13 @@ mod tests {
         let mut c = Config::default();
         c.set("net.workers=3").unwrap();
         c.set("net.quant_client=\"qsgd:2\"").unwrap();
+        c.set("net.broadcast_budget_bytes=65536").unwrap();
         assert_eq!(c.net.workers, 3);
         assert_eq!(c.net.quant_client.as_deref(), Some("qsgd:2"));
+        assert_eq!(c.net.broadcast_budget_bytes, 65536);
+        c.validate().unwrap();
+        // default: unlimited (the historical unbounded fan-out)
+        assert_eq!(Config::default().net.broadcast_budget_bytes, 0);
 
         // validation catches bad values loudly
         let mut c = Config::default();

@@ -79,8 +79,9 @@ impl PartialAggregate {
 pub enum AggOutcome {
     /// Buffered; this node's buffer is not yet full.
     Buffered,
-    /// Root only: buffer filled, server step taken, broadcast emitted.
-    Stepped(Broadcast),
+    /// Root only: buffer filled, server step taken, one broadcast per
+    /// downlink family emitted (family 0 first).
+    Stepped(Vec<Broadcast>),
     /// Edge only: buffer filled, partial aggregate ready to forward.
     Forward(PartialAggregate),
 }
@@ -651,9 +652,9 @@ mod tests {
                 let b = root.ingest_partial(&p.msg, p.count, &p.staleness, pc).unwrap();
                 match (a, b) {
                     (ServerStep::Stepped(ba), ServerStep::Stepped(bb)) => {
-                        assert_eq!(ba.msg.payload, bb.msg.payload, "S={shards} broadcast");
-                        assert_eq!(ba.bytes, bb.bytes);
-                        assert_eq!(ba.t, bb.t);
+                        assert_eq!(ba[0].msg.payload, bb[0].msg.payload, "S={shards} broadcast");
+                        assert_eq!(ba[0].bytes, bb[0].bytes);
+                        assert_eq!(ba[0].t, bb[0].t);
                     }
                     (ServerStep::Buffered, ServerStep::Buffered) => {}
                     _ => panic!("S={shards}: step/buffer divergence"),

@@ -198,22 +198,53 @@ impl HiddenReplica {
             Algorithm::Qafel | Algorithm::DirectQuant => cfg.quant.server.clone(),
             Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
         };
-        Ok(HiddenReplica { x_hat: x0, t: 0, quant_s: parse_spec(&spec)?, pool })
+        Self::with_spec(&spec, x0, pool)
     }
 
-    /// Apply one broadcast (Algorithm 3 line 4). Broadcasts must be
-    /// applied in order — the hidden state is a running sum.
+    /// Build from an already-resolved server-codec spec — the per-tier
+    /// downlink path, where a TCP worker decodes with the codec its tier
+    /// negotiated in `JoinV2` rather than the config default.
+    pub fn with_spec(spec: &str, x0: Vec<f32>, pool: Arc<ShardPool>) -> Result<HiddenReplica> {
+        Ok(HiddenReplica { x_hat: x0, t: 0, quant_s: parse_spec(spec)?, pool })
+    }
+
+    /// Apply one broadcast (Algorithm 3 line 4). Incremental broadcasts
+    /// must be applied in order — the hidden state is a running sum. An
+    /// *absolute* broadcast (DirectQuant) carries the whole quantized
+    /// model, so any forward jump is valid — load-bearing under budgeted
+    /// fan-out, where a slow link may legitimately skip absolute frames.
     pub fn apply(&mut self, b: &Broadcast) -> Result<()> {
-        if b.t != self.t + 1 {
-            bail!("hidden replica: got broadcast t={} while at t={}", b.t, self.t);
-        }
         if b.absolute {
-            // DirectQuant mode: message carries the whole quantized model
+            if b.t <= self.t {
+                bail!("hidden replica: stale absolute broadcast t={} while at t={}", b.t, self.t);
+            }
             sharded::dequantize_into(self.quant_s.as_ref(), &b.msg, &mut self.x_hat, &self.pool)?;
         } else {
+            if b.t != self.t + 1 {
+                bail!("hidden replica: got broadcast t={} while at t={}", b.t, self.t);
+            }
             sharded::accumulate(self.quant_s.as_ref(), &b.msg, 1.0, &mut self.x_hat, &self.pool)?;
         }
         self.t = b.t;
+        Ok(())
+    }
+
+    /// Re-base the replica on a full hidden state shipped by the server
+    /// (Appendix B.1's full-state catch-up — the budgeted fan-out path
+    /// when a worker fell further behind than the server's update log).
+    pub fn resync(&mut self, t: u64, x_hat: Vec<f32>) -> Result<()> {
+        if x_hat.len() != self.x_hat.len() {
+            bail!(
+                "hidden replica: full-state sync has dimension {} but the replica has {}",
+                x_hat.len(),
+                self.x_hat.len()
+            );
+        }
+        if t < self.t {
+            bail!("hidden replica: full-state sync t={} behind replica t={}", t, self.t);
+        }
+        self.x_hat = x_hat;
+        self.t = t;
         Ok(())
     }
 
@@ -258,10 +289,10 @@ mod tests {
             let snap = server.client_snapshot();
             let up = logic.run_round(&backend, &snap, (round % 4) as usize, round).unwrap();
             if let ServerStep::Stepped(b) = server.ingest(&up.msg, 0).unwrap() {
-                replica.apply(&b).unwrap();
+                replica.apply(&b[0]).unwrap();
                 // bit-identical replicas
                 assert_eq!(replica.state(), server.client_snapshot().as_slice(),
-                           "divergence at t={}", b.t);
+                           "divergence at t={}", b[0].t);
             }
         }
         assert_eq!(replica.t, 10);
@@ -276,8 +307,35 @@ mod tests {
             bytes: 0,
             msg: QuantizedMsg { payload: vec![], d: 8 },
             absolute: false,
+            codec: 0,
         };
         assert!(replica.apply(&fake).is_err());
+        // an absolute broadcast may jump forward (whole-model payload)
+        // but never backward
+        let mut cfg = qafel_cfg();
+        cfg.fl.algorithm = Algorithm::DirectQuant;
+        cfg.quant.server = "none".into();
+        let mut replica = HiddenReplica::new(&cfg, vec![0.0; 2]).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&7f32.to_le_bytes());
+        payload.extend_from_slice(&8f32.to_le_bytes());
+        let jump = Broadcast {
+            t: 5,
+            bytes: 8,
+            msg: QuantizedMsg { payload, d: 2 },
+            absolute: true,
+            codec: 0,
+        };
+        replica.apply(&jump).unwrap();
+        assert_eq!(replica.t, 5);
+        assert_eq!(replica.state(), &[7.0, 8.0]);
+        assert!(replica.apply(&jump).is_err(), "stale absolute must be rejected");
+        // full-state resync re-bases the replica
+        replica.resync(9, vec![1.0, 2.0]).unwrap();
+        assert_eq!(replica.t, 9);
+        assert_eq!(replica.state(), &[1.0, 2.0]);
+        assert!(replica.resync(3, vec![0.0, 0.0]).is_err());
+        assert!(replica.resync(10, vec![0.0]).is_err());
     }
 
     #[test]

@@ -50,8 +50,13 @@ pub struct UpdateLog {
 }
 
 impl UpdateLog {
-    /// `increment_bytes` is the expected size of one `Q_s` message; C_max
-    /// follows B.1's storage rule.
+    /// `increment_bytes` is the expected size of one `Q_s` message **for
+    /// this log's own codec**; C_max follows B.1's storage rule. With
+    /// per-tier downlink codecs every family keeps its own log, and each
+    /// must be sized from its own codec's wire size
+    /// ([`crate::coordinator::Server::server_codec_bytes`]) — sizing a
+    /// cheap-codec tier's log from the default codec evicts history at
+    /// the wrong horizon and forces spurious full-state syncs.
     pub fn new(x0: Vec<f32>, increment_bytes: usize) -> UpdateLog {
         let model_bytes = x0.len() * 4;
         let c_max = (model_bytes / increment_bytes.max(1)).max(1);
@@ -64,6 +69,15 @@ impl UpdateLog {
             full_syncs: 0,
             incremental_syncs: 0,
         }
+    }
+
+    /// Like [`UpdateLog::new`], but seeded at step `t0`: a leader resuming
+    /// from a checkpoint pushes its first increment at `t0 + 1`, so the
+    /// empty log must start at the resumed step rather than 0.
+    pub fn new_at(x0: Vec<f32>, increment_bytes: usize, t0: u64) -> UpdateLog {
+        let mut log = UpdateLog::new(x0, increment_bytes);
+        log.t = t0;
+        log
     }
 
     pub fn c_max(&self) -> usize {
@@ -155,7 +169,13 @@ mod tests {
     use crate::quant::QuantizedMsg;
 
     fn bc(t: u64, bytes: usize) -> Broadcast {
-        Broadcast { t, bytes, msg: QuantizedMsg { payload: vec![0; bytes], d: 4 }, absolute: false }
+        Broadcast {
+            t,
+            bytes,
+            msg: QuantizedMsg { payload: vec![0; bytes], d: 4 },
+            absolute: false,
+            codec: 0,
+        }
     }
 
     fn log_with(n: u64, inc_bytes: usize, d: usize) -> UpdateLog {
@@ -232,15 +252,24 @@ mod tests {
             let diff: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1 + t as f32).sin()).collect();
             let msg = qs.quantize(&diff, &mut rng);
             qs.accumulate(&msg, 1.0, &mut x_hat).unwrap();
-            let b = Broadcast { t, bytes: msg.wire_bytes(), msg, absolute: false };
+            let b = Broadcast { t, bytes: msg.wire_bytes(), msg, absolute: false, codec: 0 };
             log.push_quantized(b, qs.as_ref(), &pool).unwrap();
             assert_eq!(log.state(), &x_hat[..], "t={t}");
             assert_eq!(log.t(), t);
         }
         // gaps still rejected
         let msg = qs.quantize(&vec![0.0f32; d], &mut rng);
-        let bad = Broadcast { t: 99, bytes: msg.wire_bytes(), msg, absolute: false };
+        let bad = Broadcast { t: 99, bytes: msg.wire_bytes(), msg, absolute: false, codec: 0 };
         assert!(log.push_quantized(bad, qs.as_ref(), &pool).is_err());
+    }
+
+    #[test]
+    fn new_at_accepts_resumed_contiguity() {
+        let mut log = UpdateLog::new_at(vec![0.0; 100], 50, 7);
+        assert_eq!(log.t(), 7);
+        assert!(log.push(bc(7, 50), |_| {}).is_err(), "t0 itself is already logged history");
+        log.push(bc(8, 50), |x| x[0] += 1.0).unwrap();
+        assert_eq!(log.t(), 8);
     }
 
     #[test]

@@ -61,6 +61,10 @@ pub struct Broadcast {
     /// True if the message carries the absolute model (DirectQuant mode)
     /// rather than a hidden-state increment.
     pub absolute: bool,
+    /// Downlink family id this broadcast was encoded with (0 = the
+    /// default `Q_s`; further ids are per-tier presets registered via
+    /// [`Server::register_server_codec`]).
+    pub codec: usize,
 }
 
 /// Outcome of ingesting one client update.
@@ -68,8 +72,23 @@ pub struct Broadcast {
 pub enum ServerStep {
     /// Update buffered; buffer not yet full.
     Buffered,
-    /// Buffer filled: server step taken, broadcast emitted.
-    Stepped(Broadcast),
+    /// Buffer filled: server step taken, one broadcast emitted per
+    /// downlink family (family 0 first; a single-family server emits
+    /// exactly one, as before per-tier downlink codecs existed).
+    Stepped(Vec<Broadcast>),
+}
+
+/// One downlink family: a broadcast codec `Q_s` and the shared hidden
+/// state x̂ it maintains. QAFeL's hidden-state construction is what makes
+/// per-tier downlink quantization safe: every tier tracks its own
+/// `x̂_f^{t+1} = x̂_f^t + Q_{s,f}(x^{t+1} − x̂_f^t)`, so quantization error
+/// never propagates across tiers (or into the model).
+struct DownlinkFamily {
+    codec: Box<dyn Quantizer>,
+    /// This family's shared hidden state x̂^t (reference replica; clients
+    /// of this family hold copies in net mode). `Arc` so in-flight
+    /// clients can snapshot it for free.
+    x_hat: Arc<Vec<f32>>,
 }
 
 /// The QAFeL server state machine.
@@ -84,7 +103,16 @@ pub struct Server {
     /// no-thread pool; every stage runs inline). Shared with the sim's
     /// eval path via [`Server::pool`].
     pool: Arc<ShardPool>,
-    quant_s: Box<dyn Quantizer>,
+    /// Downlink families: one broadcast codec `Q_s` plus its own shared
+    /// hidden-state replica x̂ per *distinct resolved server codec*.
+    /// Family 0 is built from `cfg.quant.server` (resolved per
+    /// algorithm) at construction; further families are per-tier
+    /// `quant_server` presets added by
+    /// [`Server::register_server_codec`], deduplicated like client
+    /// presets. Every step broadcasts once per family (family 0 first,
+    /// drawing quantizer noise sequentially from the shared RNG), so a
+    /// single-family server is bit-identical to the pre-family engine.
+    families: Vec<DownlinkFamily>,
     /// Codecs for *decoding* client uploads. Id 0 is built from
     /// `cfg.quant.client` (resolved per algorithm) at construction;
     /// further ids are per-tier presets added by
@@ -103,9 +131,6 @@ pub struct Server {
     d: usize,
     /// Server model x^t.
     x: Vec<f32>,
-    /// Shared hidden state x̂^t (reference replica; clients hold copies in
-    /// net mode). `Arc` so in-flight clients can snapshot it for free.
-    x_hat: Arc<Vec<f32>>,
     /// Momentum buffer v.
     momentum: Vec<f32>,
     /// Aggregation buffer Δ̄ (pre-division).
@@ -175,9 +200,8 @@ impl Server {
             staleness_scaling,
             hidden_state_mode,
             pool: ShardPool::new(cfg.fl.shards.max(1)),
-            quant_s,
+            families: vec![DownlinkFamily { codec: quant_s, x_hat: Arc::new(x0.clone()) }],
             d,
-            x_hat: Arc::new(x0.clone()),
             momentum: vec![0.0; d],
             buffer: vec![0.0; d],
             x: x0,
@@ -222,7 +246,14 @@ impl Server {
     /// the shared hidden state in QAFeL/FedBuff mode, or the latest
     /// direct-quantized model in DirectQuant mode. Cheap Arc clone.
     pub fn client_snapshot(&self) -> Arc<Vec<f32>> {
-        self.x_hat.clone()
+        self.families[0].x_hat.clone()
+    }
+
+    /// The hidden-state snapshot of downlink family `f` — what a client
+    /// of a tier resolved to that family copies at round start. Family 0
+    /// is [`Server::client_snapshot`].
+    pub fn family_snapshot(&self, f: usize) -> Arc<Vec<f32>> {
+        self.families[f].x_hat.clone()
     }
 
     /// True server model x^t (for evaluation — the paper evaluates the
@@ -277,6 +308,70 @@ impl Server {
     /// Number of registered client codecs (>= 1; id 0 is the default).
     pub fn num_client_codecs(&self) -> usize {
         self.client_codecs.len()
+    }
+
+    /// Register a per-tier *downlink* codec preset and return its
+    /// family id. The spec is resolved per algorithm like
+    /// `cfg.quant.server` (full-precision baselines broadcast identity
+    /// regardless of preset) and identical resolved codecs are
+    /// deduplicated — registering the default spec returns 0, so tiers
+    /// without a `quant_server` preset share family 0 and no-preset
+    /// configs keep exactly one family. Registration order is the wire
+    /// contract, like client codecs. A *new* family seeds its x̂ from
+    /// x̂^0, so families must be registered before the first server step
+    /// — registering one later fails loudly (dedup hits stay fine).
+    pub fn register_server_codec(&mut self, spec: &str) -> Result<usize> {
+        let resolved = server_codec_spec(spec, self.algorithm);
+        let codec = parse_spec(&resolved)?;
+        if let Some(i) = self.families.iter().position(|f| f.codec.name() == codec.name()) {
+            return Ok(i);
+        }
+        if self.t > 0 || self.k_filled > 0 {
+            bail!(
+                "server: downlink codec '{}' registered at t={} with {} buffered update(s) — \
+                 families must be registered before the first ingest so every x̂ starts at x̂^0",
+                codec.name(),
+                self.t,
+                self.k_filled
+            );
+        }
+        let x_hat = self.families[0].x_hat.clone();
+        self.families.push(DownlinkFamily { codec, x_hat });
+        Ok(self.families.len() - 1)
+    }
+
+    /// Register every tier's `quant_server` preset from the config, in
+    /// tier order — the same order (and therefore the same family ids)
+    /// the scenario engine uses, so a TCP leader and the simulator agree
+    /// on the downlink registry for the same config. Returns the
+    /// per-tier family ids (0, the default `Q_s`, for tiers without a
+    /// preset).
+    pub fn register_tier_server_presets(&mut self, cfg: &Config) -> Result<Vec<usize>> {
+        cfg.resolved_tiers()
+            .iter()
+            .map(|t| match &t.quant_server {
+                Some(spec) => self.register_server_codec(spec),
+                None => Ok(0),
+            })
+            .collect()
+    }
+
+    /// Number of downlink families (>= 1; family 0 is the default).
+    pub fn num_server_codecs(&self) -> usize {
+        self.families.len()
+    }
+
+    /// Spec name of a downlink family's codec.
+    pub fn server_codec_name(&self, f: usize) -> String {
+        self.families[f].codec.name()
+    }
+
+    /// Expected wire bytes of one broadcast from downlink family `f` at
+    /// this model dimension — what sizes that family's `UpdateLog`
+    /// (each tier's log must use its *own* codec's increment size, or
+    /// cheap-codec tiers evict history at the wrong horizon).
+    pub fn server_codec_bytes(&self, f: usize) -> usize {
+        self.families[f].codec.expected_bytes(self.d)
     }
 
     /// Spec name of a registered client codec.
@@ -477,8 +572,12 @@ impl Server {
 
     /// The server step proper (Algorithm 1 lines 9–16), executed when
     /// the buffer fills. Stages run shard-parallel; see the module docs
-    /// for the determinism contract.
-    fn step(&mut self) -> Result<Broadcast> {
+    /// for the determinism contract. Emits one broadcast per downlink
+    /// family: family 0 encodes first and every family draws quantizer
+    /// noise sequentially from the shared server RNG, so a
+    /// single-family server's draws (and therefore its bytes) are
+    /// unchanged from the pre-family engine.
+    fn step(&mut self) -> Result<Vec<Broadcast>> {
         let inv_k = 1.0 / self.k_buffer as f32;
         let (beta, eta_g) = (self.beta, self.eta_g);
         let shards = self.pool.shards();
@@ -516,52 +615,69 @@ impl Server {
         self.t += 1;
         self.stages.steps += 1;
 
-        let broadcast = if self.hidden_state_mode {
-            // q^t = Q_s(x^{t+1} - x_hat^t); x_hat^{t+1} = x_hat^t + q^t
-            let timer = telemetry::span_start();
-            if shards > 1 && span < self.d {
-                let tasks: Vec<Task<'_>> = self
-                    .diff
-                    .chunks_mut(span)
-                    .zip(self.x.chunks(span))
-                    .zip(self.x_hat.chunks(span))
-                    .map(|((out, a), b)| Box::new(move || vecf::sub(out, a, b)) as Task<'_>)
-                    .collect();
-                self.pool.run(tasks);
+        let mut out = Vec::with_capacity(self.families.len());
+        for f in 0..self.families.len() {
+            let broadcast = if self.hidden_state_mode {
+                // q_f^t = Q_{s,f}(x^{t+1} - x̂_f^t); x̂_f^{t+1} = x̂_f^t + q_f^t
+                let timer = telemetry::span_start();
+                if shards > 1 && span < self.d {
+                    let tasks: Vec<Task<'_>> = self
+                        .diff
+                        .chunks_mut(span)
+                        .zip(self.x.chunks(span))
+                        .zip(self.families[f].x_hat.chunks(span))
+                        .map(|((out, a), b)| Box::new(move || vecf::sub(out, a, b)) as Task<'_>)
+                        .collect();
+                    self.pool.run(tasks);
+                } else {
+                    vecf::sub(&mut self.diff, &self.x, &self.families[f].x_hat);
+                }
+                self.stages.diff_ns += telemetry::span_ns(timer);
+                let timer = telemetry::span_start();
+                let msg = sharded::quantize(
+                    self.families[f].codec.as_ref(),
+                    &self.diff,
+                    &mut self.rng,
+                    &self.pool,
+                );
+                self.stages.encode_ns += telemetry::span_ns(timer);
+                let bytes = msg.wire_bytes();
+                self.comm.record_broadcast(bytes);
+                let timer = telemetry::span_start();
+                let fam = &mut self.families[f];
+                let x_hat = Arc::make_mut(&mut fam.x_hat);
+                sharded::accumulate(fam.codec.as_ref(), &msg, 1.0, x_hat, &self.pool)?;
+                self.stages.advance_ns += telemetry::span_ns(timer);
+                Broadcast { t: self.t, bytes, msg, absolute: false, codec: f }
             } else {
-                vecf::sub(&mut self.diff, &self.x, &self.x_hat);
-            }
-            self.stages.diff_ns += telemetry::span_ns(timer);
-            let timer = telemetry::span_start();
-            let msg = sharded::quantize(self.quant_s.as_ref(), &self.diff, &mut self.rng, &self.pool);
-            self.stages.encode_ns += telemetry::span_ns(timer);
-            let bytes = msg.wire_bytes();
-            self.comm.record_broadcast(bytes);
-            let timer = telemetry::span_start();
-            let x_hat = Arc::make_mut(&mut self.x_hat);
-            sharded::accumulate(self.quant_s.as_ref(), &msg, 1.0, x_hat, &self.pool)?;
-            self.stages.advance_ns += telemetry::span_ns(timer);
-            Broadcast { t: self.t, bytes, msg, absolute: false }
-        } else {
-            // DirectQuant baseline: broadcast Q_s(x^{t+1}) itself
-            let timer = telemetry::span_start();
-            let msg = sharded::quantize(self.quant_s.as_ref(), &self.x, &mut self.rng, &self.pool);
-            self.stages.encode_ns += telemetry::span_ns(timer);
-            let bytes = msg.wire_bytes();
-            self.comm.record_broadcast(bytes);
-            let timer = telemetry::span_start();
-            let x_hat = Arc::make_mut(&mut self.x_hat);
-            sharded::dequantize_into(self.quant_s.as_ref(), &msg, x_hat, &self.pool)?;
-            self.stages.advance_ns += telemetry::span_ns(timer);
-            Broadcast { t: self.t, bytes, msg, absolute: true }
-        };
-        Ok(broadcast)
+                // DirectQuant baseline: broadcast Q_{s,f}(x^{t+1}) itself
+                let timer = telemetry::span_start();
+                let msg = sharded::quantize(
+                    self.families[f].codec.as_ref(),
+                    &self.x,
+                    &mut self.rng,
+                    &self.pool,
+                );
+                self.stages.encode_ns += telemetry::span_ns(timer);
+                let bytes = msg.wire_bytes();
+                self.comm.record_broadcast(bytes);
+                let timer = telemetry::span_start();
+                let fam = &mut self.families[f];
+                let x_hat = Arc::make_mut(&mut fam.x_hat);
+                sharded::dequantize_into(fam.codec.as_ref(), &msg, x_hat, &self.pool)?;
+                self.stages.advance_ns += telemetry::span_ns(timer);
+                Broadcast { t: self.t, bytes, msg, absolute: true, codec: f }
+            };
+            out.push(broadcast);
+        }
+        Ok(out)
     }
 
-    /// Distance between the server model and the shared hidden state —
-    /// the "quantization" error term of Lemma F.9 (‖x^t − x̂^t‖²).
+    /// Distance between the server model and the shared hidden state of
+    /// family 0 — the "quantization" error term of Lemma F.9
+    /// (‖x^t − x̂^t‖²).
     pub fn hidden_state_error_sq(&self) -> f64 {
-        vecf::dist2_sq(&self.x, &self.x_hat)
+        vecf::dist2_sq(&self.x, &self.families[0].x_hat)
     }
 
     /// Cumulative per-stage wall time of the aggregation pipeline.
@@ -580,12 +696,12 @@ impl Server {
     /// part of the snapshot.
     pub fn state_json(&self) -> Json {
         let rng = self.rng.state();
-        Json::obj(vec![
+        let mut fields = vec![
             ("d", Json::num(self.d as f64)),
             ("t", Json::num(self.t as f64)),
             ("k_filled", Json::num(self.k_filled as f64)),
             ("x", Json::str(&hex_f32s(&self.x))),
-            ("x_hat", Json::str(&hex_f32s(&self.x_hat))),
+            ("x_hat", Json::str(&hex_f32s(&self.families[0].x_hat))),
             ("momentum", Json::str(&hex_f32s(&self.momentum))),
             ("buffer", Json::str(&hex_f32s(&self.buffer))),
             (
@@ -599,7 +715,22 @@ impl Server {
             ("staleness_max", Json::num(self.staleness_max as f64)),
             ("staleness_sum", Json::num(self.staleness_sum as f64)),
             ("staleness_n", Json::num(self.staleness_n as f64)),
-        ])
+        ];
+        // Per-tier downlink families beyond the default. Conditional so
+        // single-family snapshots stay byte-identical to the pre-family
+        // engine's — the no-preset golden contract.
+        if self.families.len() > 1 {
+            fields.push((
+                "x_hat_extra",
+                Json::Arr(
+                    self.families[1..]
+                        .iter()
+                        .map(|fam| Json::str(&hex_f32s(&fam.x_hat)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Restore the snapshot taken by [`Server::state_json`] into a
@@ -654,7 +785,45 @@ impl Server {
             words[i] = parse_hex_u64(text)?;
         }
         self.x = vector("x")?;
-        self.x_hat = Arc::new(vector("x_hat")?);
+        self.families[0].x_hat = Arc::new(vector("x_hat")?);
+        match state.get("x_hat_extra") {
+            None if self.families.len() > 1 => bail!(
+                "checkpoint state: server has {} downlink families but the snapshot \
+                 carries only the default x̂ — the checkpoint was taken under a \
+                 different config",
+                self.families.len()
+            ),
+            None => {}
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("checkpoint state: 'x_hat_extra' must be an array"))?;
+                if arr.len() != self.families.len().saturating_sub(1) {
+                    bail!(
+                        "checkpoint state: snapshot has {} extra downlink families but the \
+                         server has {} — the checkpoint was taken under a different config",
+                        arr.len(),
+                        self.families.len().saturating_sub(1)
+                    );
+                }
+                for (i, entry) in arr.iter().enumerate() {
+                    let text = entry.as_str().ok_or_else(|| {
+                        anyhow!("checkpoint state: 'x_hat_extra' entries must be hex strings")
+                    })?;
+                    let v = parse_hex_f32s(text)?;
+                    if v.len() != self.d {
+                        bail!(
+                            "checkpoint state: 'x_hat_extra[{i}]' has dimension {} but the \
+                             server has d={} — the checkpoint was taken under a different \
+                             config",
+                            v.len(),
+                            self.d
+                        );
+                    }
+                    self.families[i + 1].x_hat = Arc::new(v);
+                }
+            }
+        }
         self.momentum = vector("momentum")?;
         self.buffer = vector("buffer")?;
         self.k_filled = uint("k_filled")? as usize;
@@ -678,6 +847,17 @@ impl Server {
 pub(crate) fn client_codec_spec(client_spec: &str, algorithm: Algorithm) -> String {
     match algorithm {
         Algorithm::Qafel | Algorithm::DirectQuant => client_spec.to_string(),
+        Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
+    }
+}
+
+/// The server-codec spec a downlink preset resolves to, per algorithm
+/// (full-precision baselines always broadcast identity-coded state, so
+/// every preset collapses onto family 0). Shared with the TCP leader so
+/// negotiation resolves specs exactly like [`Server::new`] does.
+pub(crate) fn server_codec_spec(server_spec: &str, algorithm: Algorithm) -> String {
+    match algorithm {
+        Algorithm::Qafel | Algorithm::DirectQuant => server_spec.to_string(),
         Algorithm::FedBuff | Algorithm::FedAsync => "none".to_string(),
     }
 }
@@ -814,7 +994,11 @@ mod tests {
         let delta: Vec<f32> = (0..16).map(|i| i as f32).collect();
         let msg = qc.quantize(&delta, &mut rng);
         match s.ingest(&msg, 0).unwrap() {
-            ServerStep::Stepped(b) => assert!(b.absolute),
+            ServerStep::Stepped(bs) => {
+                assert_eq!(bs.len(), 1);
+                assert!(bs[0].absolute);
+                assert_eq!(bs[0].codec, 0);
+            }
             _ => panic!("expected step"),
         }
         // snapshot is the *quantized* model, not the exact one
@@ -964,7 +1148,7 @@ mod tests {
                 let b = s.ingest(&msg_b, round % 4).unwrap();
                 match (a, b) {
                     (ServerStep::Stepped(ba), ServerStep::Stepped(bb)) => {
-                        assert_eq!(ba.msg.payload, bb.msg.payload, "S={shards} broadcast");
+                        assert_eq!(ba[0].msg.payload, bb[0].msg.payload, "S={shards} broadcast");
                     }
                     (ServerStep::Buffered, ServerStep::Buffered) => {}
                     _ => panic!("S={shards}: step/buffer divergence"),
@@ -1035,8 +1219,8 @@ mod tests {
             let rb = b.ingest(msg, (r % 2) as u64).unwrap();
             match (ra, rb) {
                 (ServerStep::Stepped(x), ServerStep::Stepped(y)) => {
-                    assert_eq!(x.t, y.t, "round {r}");
-                    assert_eq!(x.msg.payload, y.msg.payload, "round {r} broadcast");
+                    assert_eq!(x[0].t, y[0].t, "round {r}");
+                    assert_eq!(x[0].msg.payload, y[0].msg.payload, "round {r} broadcast");
                 }
                 (ServerStep::Buffered, ServerStep::Buffered) => {}
                 _ => panic!("restored server diverged at round {r}"),
@@ -1099,12 +1283,145 @@ mod tests {
             qs.accumulate(&ref_msg, 1.0, &mut ref_xh).unwrap();
             match stepped {
                 ServerStep::Stepped(b) => {
-                    assert_eq!(b.msg.payload, ref_msg.payload, "round {round}");
+                    assert_eq!(b[0].msg.payload, ref_msg.payload, "round {round}");
                 }
                 ServerStep::Buffered => panic!("expected step at round {round}"),
             }
             assert_eq!(server.model(), &ref_x[..], "round {round} model");
             assert_eq!(server.client_snapshot().as_slice(), &ref_xh[..], "round {round} x_hat");
         }
+    }
+
+    #[test]
+    fn downlink_families_broadcast_per_tier() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into();
+        cfg.quant.server = "qsgd:8".into();
+        let d = 256;
+        let mut plain = Server::build(&cfg, vec![0.0; d], 7).unwrap();
+        let mut multi = Server::build(&cfg, vec![0.0; d], 7).unwrap();
+        // dedup: the default spec maps to family 0; a distinct preset
+        // opens family 1; repeats return the existing id
+        assert_eq!(multi.register_server_codec("qsgd:8").unwrap(), 0);
+        let fam = multi.register_server_codec("qsgd:2").unwrap();
+        assert_eq!(fam, 1);
+        assert_eq!(multi.register_server_codec("qsgd:2").unwrap(), fam);
+        assert_eq!(multi.num_server_codecs(), 2);
+        assert_eq!(multi.server_codec_name(fam), "qsgd:2");
+        assert!(multi.server_codec_bytes(fam) < multi.server_codec_bytes(0));
+
+        let qc = parse_spec("none").unwrap();
+        let mut rng_a = Prng::new(11);
+        let mut rng_b = Prng::new(11);
+        let mut steps = 0u32;
+        for round in 0..8u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.1 + round as f32).sin()).collect();
+            let ma = qc.quantize(&delta, &mut rng_a);
+            let mb = qc.quantize(&delta, &mut rng_b);
+            match (plain.ingest(&ma, 0).unwrap(), multi.ingest(&mb, 0).unwrap()) {
+                (ServerStep::Stepped(a), ServerStep::Stepped(b)) => {
+                    steps += 1;
+                    assert_eq!(a.len(), 1);
+                    assert_eq!(b.len(), 2);
+                    assert_eq!(b[0].codec, 0);
+                    assert_eq!(b[1].codec, 1);
+                    assert_eq!(b[0].t, b[1].t);
+                    // the extra family draws AFTER family 0 on the shared
+                    // stream, so the first step's family-0 bytes match the
+                    // single-family server exactly
+                    if steps == 1 {
+                        assert_eq!(a[0].msg.payload, b[0].msg.payload);
+                    }
+                    assert_ne!(b[0].msg.payload, b[1].msg.payload);
+                }
+                (ServerStep::Buffered, ServerStep::Buffered) => {}
+                _ => panic!("step/buffer divergence"),
+            }
+        }
+        assert_eq!(steps, 4);
+        // families touch only x̂ — the model itself is family-agnostic
+        assert_eq!(plain.model(), multi.model());
+        // each family holds its own hidden state
+        assert_ne!(
+            multi.family_snapshot(0).as_slice(),
+            multi.family_snapshot(1).as_slice()
+        );
+        // broadcast accounting counts every family's bytes
+        assert_eq!(multi.comm.broadcasts, 2 * plain.comm.broadcasts);
+    }
+
+    #[test]
+    fn downlink_family_registration_locked_after_first_ingest() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into();
+        cfg.quant.server = "qsgd:8".into();
+        let d = 64;
+        let mut s = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let qc = parse_spec("none").unwrap();
+        let mut rng = Prng::new(2);
+        let msg = qc.quantize(&vec![1.0f32; d], &mut rng);
+        assert!(matches!(s.ingest(&msg, 0).unwrap(), ServerStep::Buffered));
+        // dedup hits stay fine; a genuinely new family is rejected loudly
+        assert_eq!(s.register_server_codec("qsgd:8").unwrap(), 0);
+        let err = s.register_server_codec("qsgd:2").unwrap_err().to_string();
+        assert!(err.contains("before the first ingest"), "{err}");
+        // full-precision baselines resolve every preset onto family 0
+        let fb = cfg_with("fedbuff", 1);
+        let mut s = Server::build(&fb, vec![0.0; d], 1).unwrap();
+        assert_eq!(s.register_server_codec("qsgd:2").unwrap(), 0);
+        assert_eq!(s.num_server_codecs(), 1);
+    }
+
+    #[test]
+    fn multi_family_checkpoint_round_trips_and_guards_config() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into();
+        cfg.quant.server = "qsgd:8".into();
+        let d = 128;
+        let mut a = Server::build(&cfg, vec![0.0; d], 5).unwrap();
+        a.register_server_codec("qsgd:2").unwrap();
+        let qc = parse_spec("none").unwrap();
+        let mut up = Prng::new(21);
+        for round in 0..5u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.03 + round as f32).sin()).collect();
+            let msg = qc.quantize(&delta, &mut up);
+            let _ = a.ingest(&msg, 0).unwrap();
+        }
+        let snap = a.state_json();
+        assert!(snap.get("x_hat_extra").is_some());
+
+        let mut b = Server::build(&cfg, vec![0.0; d], 999).unwrap();
+        b.register_server_codec("qsgd:2").unwrap();
+        b.restore_state(&snap).unwrap();
+        assert_eq!(b.family_snapshot(1).as_slice(), a.family_snapshot(1).as_slice());
+        // both continue bit-identically across every family
+        for r in 0..4u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.07 + r as f32).cos()).collect();
+            let msg = qc.quantize(&delta, &mut up);
+            match (a.ingest(&msg, 0).unwrap(), b.ingest(&msg, 0).unwrap()) {
+                (ServerStep::Stepped(x), ServerStep::Stepped(y)) => {
+                    assert_eq!(x.len(), y.len());
+                    for (bx, by) in x.iter().zip(&y) {
+                        assert_eq!(bx.msg.payload, by.msg.payload, "round {r}");
+                    }
+                }
+                (ServerStep::Buffered, ServerStep::Buffered) => {}
+                _ => panic!("restored multi-family server diverged at round {r}"),
+            }
+        }
+        // a single-family server refuses a multi-family snapshot...
+        let mut plain = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let err = plain.restore_state(&snap).unwrap_err().to_string();
+        assert!(err.contains("different config"), "{err}");
+        // ...and a multi-family server refuses a single-family snapshot
+        let plain_snap = Server::build(&cfg, vec![0.0; d], 1).unwrap().state_json();
+        assert!(plain_snap.get("x_hat_extra").is_none());
+        let mut m = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        m.register_server_codec("qsgd:2").unwrap();
+        let err = m.restore_state(&plain_snap).unwrap_err().to_string();
+        assert!(err.contains("different config"), "{err}");
     }
 }

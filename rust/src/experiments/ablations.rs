@@ -125,6 +125,7 @@ pub fn non_broadcast_cost(
             bytes: inc_bytes,
             msg: QuantizedMsg { payload: vec![0; inc_bytes], d },
             absolute: false,
+            codec: 0,
         };
         // advance the reference hidden state through the real (sharded)
         // decode path — a zero payload decodes to a zero increment

@@ -467,6 +467,7 @@ fn cmd_leader(args: &Args) -> Result<()> {
         let mut workers_json = Vec::new();
         for ws in &report.worker_stats {
             let expected = qafel::quant::parse_spec(&ws.codec)?.expected_bytes(d);
+            let expected_down = qafel::quant::parse_spec(&ws.server_codec)?.expected_bytes(d);
             workers_json.push(Json::obj(vec![
                 ("worker_id", Json::num(ws.worker_id as f64)),
                 ("peer", Json::str(ws.peer.clone())),
@@ -477,8 +478,14 @@ fn cmd_leader(args: &Args) -> Result<()> {
                 ("upload_bytes", Json::num(ws.upload_bytes as f64)),
                 ("partials", Json::num(ws.partials as f64)),
                 ("expected_bytes_per_upload", Json::num(expected as f64)),
+                ("server_codec_id", Json::num(ws.server_codec_id as f64)),
+                ("server_codec", Json::str(ws.server_codec.clone())),
+                ("expected_bytes_per_download", Json::num(expected_down as f64)),
                 ("broadcast_frames", Json::num(ws.broadcast_frames as f64)),
                 ("broadcast_bytes", Json::num(ws.broadcast_bytes as f64)),
+                ("skipped_broadcasts", Json::num(ws.skipped_broadcasts as f64)),
+                ("catch_up_frames", Json::num(ws.catch_up_frames as f64)),
+                ("full_syncs", Json::num(ws.full_syncs as f64)),
                 ("staleness_mean", Json::num(ws.staleness.mean())),
                 ("staleness_max", Json::num(ws.staleness.max as f64)),
                 ("ingest_ns", Json::num(ws.ingest_ns as f64)),
@@ -703,9 +710,9 @@ fn cmd_journal(args: &Args) -> Result<()> {
                         }
                         prev_step = Some(ev.clone());
                     }
-                    Event::Broadcast { time, step, absolute, payload } => {
+                    Event::Broadcast { time, step, absolute, codec, payload } => {
                         println!(
-                            "broadcast  t={time:.3} step={step} {}B{}",
+                            "broadcast  t={time:.3} step={step} family={codec} {}B{}",
                             payload.len(),
                             if *absolute { " (absolute)" } else { "" }
                         );

@@ -21,22 +21,37 @@
 //! earlier; the histogram travels upstream inside the partial and is
 //! merged into the root's accounting.
 //!
+//! **Budgeted fan-out** (ISSUE 8): with `net.broadcast_budget_bytes >
+//! 0` the downstream writer queues are bounded [`FrameQueue`]s, and the
+//! edge gives up being model-free — it keeps a
+//! [`HiddenReplica`] of the relayed stream so that when a slow
+//! downstream worker's queue evicts frames, the writer can fold the
+//! gap into one full-state `Sync` (the edge has no
+//! [`crate::coordinator::UpdateLog`], so every fold is a full sync —
+//! bounded by one model, per Appendix B.1). Upstream `Sync` frames
+//! (the root folding for a slow *edge*) are relayed downstream as
+//! never-evicted control frames. The edge relays a single downlink
+//! family — its own, negotiated upstream; per-tier downlink *below* an
+//! edge is out of scope (downstream tiers still resolve per-tier
+//! *upload* codecs).
+//!
 //! Edge leaders are v2-only downstream: a silent (v1) worker fails the
 //! handshake loudly instead of being served legacy frames.
 
 use super::leader::WorkerStats;
 use super::message::{Message, PROTOCOL_VERSION};
+use super::queue::{FrameQueue, QueuedFrame};
 use super::transport::{frame_bytes, read_msg, read_msg_classified, write_msg, Conn, ReadOutcome};
 use crate::config::Config;
-use crate::coordinator::{AggOutcome, EdgeAggregator};
+use crate::coordinator::client::HiddenReplica;
+use crate::coordinator::{AggOutcome, Broadcast, EdgeAggregator};
 use crate::quant::QuantizedMsg;
 use crate::scenario::StalenessHist;
 use crate::util::pool::ShardPool;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::Write;
 use std::net::TcpListener;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// Synthetic "worker id" for messages arriving from upstream on the
@@ -106,13 +121,13 @@ impl EdgeLeader {
         let mut up = Conn::connect(upstream)?;
         up.send(&Message::Hello { version: PROTOCOL_VERSION, tier: None, quant_client: None })
             .context("sending Hello upstream")?;
-        let (edge_worker_id, d, x0, server_quant, client_lr) = match up
+        let (edge_worker_id, d, x0, server_quant, client_lr, sc_id) = match up
             .recv()
             .context("reading join from upstream")?
         {
-            Some(Message::JoinV2 { worker_id, d, x0, server_quant, client_lr, .. }) => {
-                (worker_id, d as usize, x0, server_quant, client_lr)
-            }
+            Some(Message::JoinV2 {
+                worker_id, d, x0, server_quant, client_lr, server_codec_id, ..
+            }) => (worker_id, d as usize, x0, server_quant, client_lr, server_codec_id),
             Some(Message::Join { .. }) => {
                 bail!("upstream answered with a v1 Join — edge leaders need a v2 root")
             }
@@ -136,9 +151,25 @@ impl EdgeLeader {
         let tier_codecs = edge.register_tier_presets(&self.cfg)?;
         let grace = Duration::from_millis(self.cfg.net.v1_grace_ms.max(1));
 
+        // Budgeted fan-out: the edge keeps its own replica of the
+        // relayed stream (decoded with the downlink codec negotiated
+        // upstream) so a slow downstream worker's fold can ship an
+        // exact full-state Sync. At the default budget 0 the edge
+        // stays model-free and never decodes a broadcast.
+        let budget = self.cfg.net.broadcast_budget_bytes;
+        let edge_replica: Option<Arc<Mutex<HiddenReplica>>> = if budget > 0 {
+            Some(Arc::new(Mutex::new(HiddenReplica::with_spec(
+                &server_quant,
+                x0.clone(),
+                ShardPool::new(self.cfg.fl.shards.max(1)),
+            )?)))
+        } else {
+            None
+        };
+
         // --- accept downstream workers (v2-only) -----------------------
         let (tx, rx) = mpsc::channel::<(u32, Result<Option<Message>>)>();
-        let mut writers: Vec<mpsc::Sender<Arc<[u8]>>> = Vec::new();
+        let mut queues: Vec<Arc<FrameQueue>> = Vec::new();
         let mut writer_handles = Vec::new();
         let mut reader_handles = Vec::new();
         let mut stats: Vec<WorkerStats> = Vec::new();
@@ -184,7 +215,9 @@ impl EdgeLeader {
                 0
             };
             // relay the upstream join material: same x^0, same server
-            // codec, same client lr everywhere in the tree
+            // codec (the edge's own downlink family — per-tier downlink
+            // below an edge is out of scope), same client lr everywhere
+            // in the tree
             write_msg(
                 &mut writer,
                 &Message::JoinV2 {
@@ -196,6 +229,7 @@ impl EdgeLeader {
                     server_quant: server_quant.clone(),
                     client_lr,
                     codec_id: codec_id as u32,
+                    server_codec_id: sc_id,
                 },
             )
             .with_context(|| format!("sending JoinV2 to worker {worker_id} ({peer})"))?;
@@ -223,12 +257,56 @@ impl EdgeLeader {
                     }
                 }
             }));
-            let (wtx, wrx) = mpsc::channel::<Arc<[u8]>>();
+            // persistent writer thread on a bounded queue. Under budget
+            // pressure a gap is folded into one full-state Sync from
+            // the edge replica (updated before any queue push, so the
+            // replica always covers the frame that exposed the gap).
+            let queue = FrameQueue::new(budget);
+            let q = Arc::clone(&queue);
+            let sync_src = edge_replica.clone();
             writer_handles.push(std::thread::spawn(move || {
                 let mut frames = 0u64;
                 let mut bytes = 0u64;
                 let mut send_ns = 0u64;
-                for frame in wrx {
+                let mut catch_up_frames = 0u64;
+                let mut full_syncs = 0u64;
+                // rebased on the first relayed frame (the edge does not
+                // know the root's join step)
+                let mut last_sent: Option<u64> = None;
+                while let Some(item) = q.pop() {
+                    let frame: Arc<[u8]> = match item {
+                        QueuedFrame::Control(frame) => frame,
+                        QueuedFrame::Step { t, frame } => {
+                            if let Some(src) = &sync_src {
+                                match last_sent {
+                                    Some(ls) if t <= ls => continue,
+                                    Some(ls) if t > ls + 1 => {
+                                        let (st, x) = {
+                                            let r = src.lock().unwrap();
+                                            (r.t, r.state().to_vec())
+                                        };
+                                        let Ok(f) = frame_bytes(&Message::Sync { t: st, x })
+                                        else {
+                                            break;
+                                        };
+                                        let timer = crate::telemetry::span_start();
+                                        if writer.write_all(&f).is_err() {
+                                            break;
+                                        }
+                                        send_ns += crate::telemetry::span_ns(timer);
+                                        frames += 1;
+                                        bytes += f.len() as u64;
+                                        catch_up_frames += 1;
+                                        full_syncs += 1;
+                                        last_sent = Some(st);
+                                        continue;
+                                    }
+                                    _ => last_sent = Some(t),
+                                }
+                            }
+                            frame
+                        }
+                    };
                     let timer = crate::telemetry::span_start();
                     if writer.write_all(&frame).is_err() {
                         break;
@@ -237,20 +315,25 @@ impl EdgeLeader {
                     frames += 1;
                     bytes += frame.len() as u64;
                 }
-                (frames, bytes, send_ns)
+                (frames, bytes, send_ns, catch_up_frames, full_syncs)
             }));
-            writers.push(wtx);
+            queues.push(queue);
             stats.push(WorkerStats {
                 worker_id,
                 peer,
                 protocol: version,
                 codec_id,
                 codec: edge.client_codec_name(codec_id),
+                server_codec_id: sc_id as usize,
+                server_codec: server_quant.clone(),
                 uploads: 0,
                 upload_bytes: 0,
                 partials: 0,
                 broadcast_frames: 0,
                 broadcast_bytes: 0,
+                skipped_broadcasts: 0,
+                catch_up_frames: 0,
+                full_syncs: 0,
                 ingest_ns: 0,
                 send_ns: 0,
                 staleness: StalenessHist::default(),
@@ -329,19 +412,58 @@ impl EdgeLeader {
                             bail!("edge {edge_worker_id}: broadcast gap {replica_t} -> {t}");
                         }
                         replica_t = t;
+                        // budgeted runs track the stream's full state
+                        // *before* any queue sees the frame, so a
+                        // writer's fold always covers what it skipped
+                        if let Some(src) = &edge_replica {
+                            let mut r = src.lock().unwrap();
+                            if r.t == 0 && t > 1 {
+                                r.t = t - 1;
+                            }
+                            let b = Broadcast {
+                                t,
+                                bytes: payload.len(),
+                                msg: QuantizedMsg { payload: payload.clone(), d },
+                                absolute,
+                                codec: sc_id as usize,
+                            };
+                            r.apply(&b).context("edge replica: applying relayed broadcast")?;
+                        }
                         // relay byte-identically (same deterministic
                         // encoding the root framed), shared across all
                         // downstream writer queues
                         let frame: Arc<[u8]> =
                             frame_bytes(&Message::Broadcast { t, absolute, payload })?.into();
-                        for w in &writers {
-                            let _ = w.send(frame.clone());
+                        for q in &queues {
+                            q.push_step(t, frame.clone());
+                        }
+                    }
+                    Message::Sync { t, x } => {
+                        // the root folded a backlog for *this edge* into
+                        // a full-state resync: every downstream replica
+                        // is equally behind, so relay it as a control
+                        // frame (never evicted)
+                        if t < replica_t {
+                            bail!(
+                                "edge {edge_worker_id}: stale upstream Sync t={t} at {replica_t}"
+                            );
+                        }
+                        replica_t = t;
+                        if let Some(src) = &edge_replica {
+                            src.lock()
+                                .unwrap()
+                                .resync(t, x.clone())
+                                .context("edge replica: applying upstream Sync")?;
+                        }
+                        let frame: Arc<[u8]> = frame_bytes(&Message::Sync { t, x })?.into();
+                        for q in &queues {
+                            q.push_control(frame.clone());
                         }
                     }
                     Message::Shutdown => {
                         let frame: Arc<[u8]> = frame_bytes(&Message::Shutdown)?.into();
-                        for w in &writers {
-                            let _ = w.send(frame.clone());
+                        for q in &queues {
+                            q.push_control(frame.clone());
                         }
                         shutdown_relayed = true;
                     }
@@ -410,13 +532,18 @@ impl EdgeLeader {
         // then drain: close the outbound queues, join writers + readers
         let _ = up.send(&Message::Bye { worker_id: edge_worker_id, uploads: edge.forwarded });
         drop(up);
-        drop(writers);
+        for q in &queues {
+            q.close();
+        }
         for (i, h) in writer_handles.into_iter().enumerate() {
-            if let Ok((frames, bytes, send_ns)) = h.join() {
+            if let Ok((frames, bytes, send_ns, catch_up_frames, full_syncs)) = h.join() {
                 stats[i].broadcast_frames = frames;
                 stats[i].broadcast_bytes = bytes;
                 stats[i].send_ns = send_ns;
+                stats[i].catch_up_frames = catch_up_frames;
+                stats[i].full_syncs = full_syncs;
             }
+            stats[i].skipped_broadcasts = queues[i].skipped();
         }
         for h in reader_handles {
             let _ = h.join();

@@ -4,40 +4,59 @@
 //! speak first with `Hello`; a v1 worker connects silently and waits
 //! for `Join`, so the leader classifies a connection that stays silent
 //! for `net.v1_grace_ms` as v1 and serves it the legacy frames
-//! bit-identically. Each v2 worker's upload codec is resolved from its
+//! bit-identically. Each connection is handshaked on its own thread —
+//! one peer that connects and stalls mid-`Hello` burns only its own
+//! grace deadline instead of serializing every later worker's join
+//! behind it. Each v2 worker's upload codec is resolved from its
 //! `Hello` (explicit `quant_client` override, else its tier's
 //! `scenario.tiers.<name>.quant_client` preset, else the default) and
 //! registered in the server's codec registry; every `UpdateV2` is then
 //! routed by its `codec_id` through [`Server::ingest_from`] — no
 //! payload-size guessing, no ambiguous-size failure mode.
 //!
-//! **Broadcast fan-out**: one persistent writer thread per worker with
-//! its own outbound queue. Each broadcast frame is encoded exactly once
-//! and shared as `Arc<[u8]>`, so a slow or dead worker can never stall
-//! the step loop; writers are joined on shutdown (like `ShardPool`
-//! workers) and report the bytes they actually put on the wire, which
-//! feeds the per-worker accounting in [`LeaderReport`].
+//! **Per-tier downlink** (ISSUE 8): the worker's tier also resolves its
+//! *downlink* codec via `scenario.tiers.<name>.quant_server` — the
+//! leader registers the tier presets as hidden-state families in the
+//! [`Server`] (dedup by resolved codec name; tiers without a preset
+//! share family 0) and tells the worker its family's codec in
+//! `JoinV2.server_quant` / `server_codec_id`. Every server step emits
+//! one broadcast per family; each writer queue receives only its own
+//! family's frames, encoded once per family and shared as `Arc<[u8]>`.
+//!
+//! **Budgeted fan-out**: with `net.broadcast_budget_bytes > 0` each v2
+//! writer queue is a bounded [`FrameQueue`] — when a slow worker falls
+//! behind, superseded frames are evicted (newest kept) and the writer
+//! folds the gap into a catch-up from its family's
+//! [`UpdateLog`] (Appendix B.1): the missed increments replayed
+//! bit-identically, or one full-state `Sync` frame when the log has
+//! evicted them. Leader memory stays bounded per connection and the
+//! step loop never stalls. v1 connections predate the `Sync` frame and
+//! keep the unbudgeted queue. At the default budget 0 the fold
+//! machinery is not even constructed and the fan-out behaves exactly
+//! as before.
 //!
 //! **Flight recorder** (ARCHITECTURE.md §Telemetry): with
 //! `telemetry.journal` set the leader streams the same typed
 //! [`Event`] vocabulary the simulator writes — `Meta`/`Init`/`Codec`,
 //! one `Ingest`/`IngestPartial` per upload that reached the server,
-//! `Step` + `Broadcast` per committed step, `Checkpoint` every
-//! `telemetry.checkpoint_every` steps, and a closing `Final`. Because
-//! the journal records what *reached the server* in arrival order,
-//! [`crate::telemetry::replay_events`] reproduces the run's broadcasts
-//! bit-exactly even though TCP delivery itself is nondeterministic.
-//! [`Leader::resume`] restores the server from the journal's last
-//! checkpoint and appends; rejoining workers receive the checkpointed
-//! hidden state as their x^0 and pick up the broadcast stream at the
-//! resumed step (their uploads are staleness-floored at the join step).
+//! `Step` + one `Broadcast` per downlink family per committed step,
+//! `Checkpoint` every `telemetry.checkpoint_every` steps, and a
+//! closing `Final`. Because the journal records what *reached the
+//! server* in arrival order, [`crate::telemetry::replay_events`]
+//! reproduces the run's broadcasts bit-exactly even though TCP
+//! delivery itself is nondeterministic. [`Leader::resume`] restores
+//! the server from the journal's last checkpoint and appends;
+//! rejoining workers receive the checkpointed hidden state as their
+//! x^0 and pick up the broadcast stream at the resumed step (their
+//! uploads are staleness-floored at the join step).
 
 use super::message::{Message, PROTOCOL_VERSION};
+use super::queue::{FrameQueue, QueuedFrame};
 use super::transport::{frame_bytes, read_msg, read_msg_classified, write_msg, ReadOutcome};
 use crate::config::Config;
-use crate::coordinator::{Server, ServerStep};
+use crate::coordinator::{CatchUp, Server, ServerStep, UpdateLog};
 use crate::metrics::CommMetrics;
-use crate::quant::QuantizedMsg;
+use crate::quant::{parse_spec, QuantizedMsg, Quantizer};
 use crate::scenario::StalenessHist;
 use crate::telemetry::event::{hex_u64, parse_hex_u64};
 use crate::telemetry::{
@@ -46,9 +65,8 @@ use crate::telemetry::{
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{ErrorKind, Write};
-use std::net::TcpListener;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Per-worker accounting, mirroring the simulator's per-tier
@@ -66,6 +84,12 @@ pub struct WorkerStats {
     pub codec_id: usize,
     /// Resolved spec name of that codec (e.g. `"top:0.1"`).
     pub codec: String,
+    /// The worker's downlink family in the server's hidden-state
+    /// registry (0 = default `quant.server`), resolved from its tier's
+    /// `quant_server` preset.
+    pub server_codec_id: usize,
+    /// Resolved spec name of that downlink codec.
+    pub server_codec: String,
     /// Ingested uploads from this worker (late post-shutdown uploads are
     /// dropped and not counted, matching the server's totals).
     pub uploads: u64,
@@ -77,11 +101,21 @@ pub struct WorkerStats {
     /// `codec` is the partial codec `Q_p` the frames were decoded with.
     pub partials: u64,
     /// Frames this worker's writer thread actually wrote (broadcasts +
-    /// the shutdown frame; the join frame is written before the writer
-    /// thread starts).
+    /// catch-up/Sync frames + the shutdown frame; the join frame is
+    /// written before the writer thread starts).
     pub broadcast_frames: u64,
     /// Bytes this worker's writer thread actually wrote.
     pub broadcast_bytes: u64,
+    /// Broadcast frames evicted from this worker's bounded queue under
+    /// `net.broadcast_budget_bytes` pressure (0 at the default budget);
+    /// each run of skips is folded into the catch-up below.
+    pub skipped_broadcasts: u64,
+    /// Of `broadcast_frames`, how many were catch-up frames (replayed
+    /// increments or `Sync`) covering skipped broadcasts.
+    pub catch_up_frames: u64,
+    /// How many catch-ups had to ship the full hidden state (`Sync`)
+    /// because the family's [`UpdateLog`] had evicted the increments.
+    pub full_syncs: u64,
     /// Wall time spent decoding + aggregating this worker's uploads
     /// (the leader-side recv cost). Captured only while telemetry spans
     /// are on ([`telemetry::set_enabled`]); zero otherwise.
@@ -156,6 +190,109 @@ impl Recorder {
     }
 }
 
+/// What a handshake thread hands back to the accept loop: a classified
+/// connection, ready for codec resolution (which needs the server) and
+/// the join frame.
+struct Handshake {
+    worker_id: u32,
+    peer: String,
+    reader: TcpStream,
+    writer: TcpStream,
+    /// `None` = silent v1 peer; `Some` = the v2 `Hello` fields
+    /// (version, tier, quant_client).
+    hello: Option<(u8, Option<String>, Option<String>)>,
+}
+
+/// Classify one fresh connection as v1/v2 and read its `Hello` if any,
+/// all under the `grace` deadline. Runs on its own thread so a stalled
+/// peer cannot block other workers' handshakes (it fails alone when its
+/// deadline expires).
+fn handshake(
+    stream: TcpStream,
+    worker_id: u32,
+    peer: String,
+    grace: Duration,
+) -> Result<Handshake> {
+    // v2 workers send Hello immediately on connect; a v1 worker waits
+    // silently for Join. Peek (never consume) with a bounded timeout to
+    // classify the peer without corrupting the stream.
+    stream
+        .set_read_timeout(Some(grace))
+        .with_context(|| format!("worker {worker_id} ({peer}): handshake timeout"))?;
+    let mut probe = [0u8; 1];
+    let spoke = match stream.peek(&mut probe) {
+        Ok(n) => n > 0,
+        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => false,
+        Err(e) => {
+            return Err(e).with_context(|| format!("probing worker {worker_id} ({peer})"));
+        }
+    };
+    // the read timeout stays armed through the Hello read: a peer that
+    // sends a partial frame and stalls fails its own handshake loudly
+    let mut reader = stream.try_clone().context("cloning tcp stream")?;
+    let writer = stream;
+    let hello = if spoke {
+        let msg = read_msg(&mut reader)
+            .with_context(|| {
+                format!(
+                    "reading Hello from worker {worker_id} ({peer}) \
+                     within the {}ms handshake deadline",
+                    grace.as_millis()
+                )
+            })?
+            .ok_or_else(|| anyhow!("worker {worker_id} ({peer}) disconnected during handshake"))?;
+        match msg {
+            Message::Hello { version, tier, quant_client } => Some((version, tier, quant_client)),
+            other => bail!("worker {worker_id} ({peer}): expected Hello, got {other:?}"),
+        }
+    } else {
+        None
+    };
+    // handshake over: the steady-state reader blocks as long as it
+    // likes (clears the deadline on the shared socket)
+    reader
+        .set_read_timeout(None)
+        .with_context(|| format!("worker {worker_id} ({peer}): clearing deadline"))?;
+    Ok(Handshake { worker_id, peer, reader, writer, hello })
+}
+
+/// What a writer thread reports when joined.
+#[derive(Default)]
+struct WriterTotals {
+    frames: u64,
+    bytes: u64,
+    send_ns: u64,
+    catch_up_frames: u64,
+    full_syncs: u64,
+}
+
+/// Turn a budgeted writer's skip-gap into wire frames: the family
+/// log's increments from `from_t + 1` (bit-identical to the originally
+/// skipped broadcasts) or one full-state [`Message::Sync`] when the
+/// log has evicted them. Returns the step the frames catch up to.
+fn materialize_catch_up(log: &Mutex<UpdateLog>, from_t: u64) -> Result<(u64, Vec<Vec<u8>>, bool)> {
+    let mut log = log.lock().unwrap();
+    let to_t = log.t();
+    Ok(match log.catch_up(from_t)? {
+        CatchUp::Increments(incs) => {
+            let frames = incs
+                .into_iter()
+                .map(|b| {
+                    frame_bytes(&Message::Broadcast {
+                        t: b.t,
+                        absolute: b.absolute,
+                        payload: b.msg.payload,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            (to_t, frames, false)
+        }
+        CatchUp::FullState { t, x_hat, .. } => {
+            (t, vec![frame_bytes(&Message::Sync { t, x: x_hat })?], true)
+        }
+    })
+}
+
 impl Leader {
     pub fn new(cfg: Config, x0: Vec<f32>, seed: u64) -> Leader {
         Leader { cfg, x0, seed, record_events: false, resume: false }
@@ -191,9 +328,12 @@ impl Leader {
         }
         // Tier presets are registered up front in tier order, exactly as
         // the scenario engine does, so codec ids agree with a simulator
-        // run of the same config.
+        // run of the same config. The downlink (`quant_server`) presets
+        // become hidden-state families; both registries are fixed before
+        // any state is restored or ingested.
         let tiers = self.cfg.resolved_tiers();
         let tier_codecs = server.register_tier_presets(&self.cfg)?;
+        let tier_server_codecs = server.register_tier_server_presets(&self.cfg)?;
         // Partial-aggregate codec (leader-to-leader v2 frames): registered
         // up front from config so edges and root agree on registry id 0 —
         // registration order is the wire contract, as for client codecs.
@@ -229,6 +369,7 @@ impl Leader {
                 if let Event::Codec { reg, id, spec } = ev {
                     let got = match reg.as_str() {
                         "client" => server.register_client_codec(spec)?,
+                        "server" => server.register_server_codec(spec)?,
                         "partial" => server.register_partial_codec(spec)?,
                         other => bail!("journal '{path}': unknown codec registry '{other}'"),
                     } as u64;
@@ -257,9 +398,11 @@ impl Leader {
                 server.t()
             ));
         }
-        // Client-codec ids at/above this are not yet in the journal (id 0
-        // is the implicit default; a resumed prefix covers its own).
+        // Codec ids at/above these are not yet in the journal (id 0 is
+        // the implicit default in each registry; a resumed prefix covers
+        // its own).
         let journaled_client = if self.resume { server.num_client_codecs() } else { 1 };
+        let journaled_server = if self.resume { server.num_server_codecs() } else { 1 };
         let mut recorder = Recorder {
             writer: match (tel.journal.as_deref(), self.resume) {
                 (Some(path), true) => Some(JournalWriter::append(path)?),
@@ -276,71 +419,75 @@ impl Leader {
         let x_join: Vec<f32> = server.client_snapshot().as_ref().clone();
         let join_step = server.t();
 
-        // accept all workers: negotiate the protocol, send the join
-        // frame, then spawn one reader and one writer thread each
+        // Budgeted fan-out state (`net.broadcast_budget_bytes > 0`):
+        // one Appendix-B.1 UpdateLog per downlink family, seeded from
+        // that family's hidden state at the join step and advanced by
+        // the exact broadcast payloads (before they reach any queue, so
+        // a writer's fold always covers every step it skipped). At the
+        // default budget 0 none of this exists.
+        let budget = self.cfg.net.broadcast_budget_bytes;
+        let fold_logs: Option<Vec<Arc<Mutex<UpdateLog>>>> = if budget > 0 {
+            Some(
+                (0..server.num_server_codecs())
+                    .map(|f| {
+                        Arc::new(Mutex::new(UpdateLog::new_at(
+                            server.family_snapshot(f).as_ref().clone(),
+                            server.server_codec_bytes(f),
+                            join_step,
+                        )))
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let fold_codecs: Vec<Box<dyn Quantizer>> = if budget > 0 {
+            (0..server.num_server_codecs())
+                .map(|f| parse_spec(&server.server_codec_name(f)))
+                .collect::<Result<_>>()?
+        } else {
+            Vec::new()
+        };
+        let fold_pool = server.pool().clone();
+
+        // accept all workers, handshake each on its own thread, then
+        // resolve codecs + send the join frame as each handshake lands
         let (tx, rx) = mpsc::channel::<(u32, Result<Option<Message>>)>();
-        let mut writers: Vec<mpsc::Sender<Arc<[u8]>>> = Vec::new();
-        let mut writer_handles = Vec::new();
-        let mut reader_handles = Vec::new();
-        let mut stats: Vec<WorkerStats> = Vec::new();
+        let (htx, hrx) = mpsc::channel::<Result<Handshake>>();
+        let mut handshake_handles = Vec::new();
         for worker_id in 0..n_workers as u32 {
             let (stream, peer) = listener.accept().context("accepting worker")?;
             stream.set_nodelay(true).ok();
             let peer = peer.to_string();
+            let htx = htx.clone();
+            handshake_handles.push(std::thread::spawn(move || {
+                let _ = htx.send(handshake(stream, worker_id, peer, grace));
+            }));
+        }
+        drop(htx);
+        // per-worker slots, indexed by worker id (handshakes complete
+        // in any order)
+        let mut queues: Vec<Option<(Arc<FrameQueue>, usize)>> = vec![None; n_workers];
+        let mut writer_handles: Vec<Option<std::thread::JoinHandle<WriterTotals>>> =
+            (0..n_workers).map(|_| None).collect();
+        let mut reader_handles = Vec::new();
+        let mut stats_slots: Vec<Option<WorkerStats>> = vec![None; n_workers];
+        for _ in 0..n_workers {
+            let hs = hrx.recv().map_err(|_| anyhow!("handshake threads gone"))??;
+            let Handshake { worker_id, peer, mut reader, mut writer, hello } = hs;
+            let wid = worker_id as usize;
 
-            // v2 workers send Hello immediately on connect; a v1 worker
-            // waits silently for Join. Peek (never consume) with a
-            // bounded timeout to classify the peer without corrupting
-            // the stream.
-            stream
-                .set_read_timeout(Some(grace))
-                .with_context(|| format!("worker {worker_id} ({peer}): handshake timeout"))?;
-            let mut probe = [0u8; 1];
-            let spoke = match stream.peek(&mut probe) {
-                Ok(n) => n > 0,
-                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => false,
-                Err(e) => {
-                    return Err(e)
-                        .with_context(|| format!("probing worker {worker_id} ({peer})"));
-                }
-            };
-            // the read timeout stays armed through the Hello read: a
-            // peer that sends a partial frame and stalls fails the
-            // handshake loudly instead of wedging the serial accept
-            // loop; it is cleared below before the reader thread (which
-            // must block indefinitely) takes over
-            let mut reader = stream.try_clone().context("cloning tcp stream")?;
-            let mut writer = stream;
-
-            let (protocol, codec_id) = if spoke {
-                let hello = read_msg(&mut reader)
-                    .with_context(|| {
-                        format!(
-                            "reading Hello from worker {worker_id} ({peer}) \
-                             within the {}ms handshake deadline",
-                            grace.as_millis()
-                        )
-                    })?
-                    .ok_or_else(|| {
-                        anyhow!("worker {worker_id} ({peer}) disconnected during handshake")
-                    })?;
-                let (version, tier, quant_client) = match hello {
-                    Message::Hello { version, tier, quant_client } => {
-                        (version, tier, quant_client)
-                    }
-                    other => bail!("worker {worker_id} ({peer}): expected Hello, got {other:?}"),
-                };
+            let (protocol, codec_id, server_codec_id) = if let Some(h) = hello {
+                let (version, tier, quant_client) = h;
                 // both ends run at the minimum version (decode already
                 // guarantees version >= 2)
                 let version = version.min(PROTOCOL_VERSION);
-                // per-worker codec: explicit override > tier preset > default
-                let codec_id = if let Some(spec) = quant_client {
-                    server.register_client_codec(&spec).with_context(|| {
-                        format!("worker {worker_id} ({peer}): bad quant_client '{spec}'")
-                    })?
-                } else if let Some(name) = tier {
-                    match tiers.iter().position(|t| t.name == name) {
-                        Some(i) => tier_codecs[i],
+                // the tier resolves both directions: upload codec
+                // (explicit override > tier preset > default) and the
+                // downlink family (tier preset > default)
+                let tier_idx = match tier {
+                    Some(name) => match tiers.iter().position(|t| t.name == name) {
+                        Some(i) => Some(i),
                         None => bail!(
                             "worker {worker_id} ({peer}): unknown tier '{name}' (known: {})",
                             tiers
@@ -349,9 +496,25 @@ impl Leader {
                                 .collect::<Vec<_>>()
                                 .join(", ")
                         ),
-                    }
+                    },
+                    None => None,
+                };
+                let codec_id = if let Some(spec) = quant_client {
+                    server.register_client_codec(&spec).with_context(|| {
+                        format!("worker {worker_id} ({peer}): bad quant_client '{spec}'")
+                    })?
+                } else if let Some(i) = tier_idx {
+                    tier_codecs[i]
                 } else {
                     0
+                };
+                let server_codec_id = tier_idx.map_or(0, |i| tier_server_codecs[i]);
+                // family 0 keeps the raw config spec (what v2 always
+                // sent); a preset family sends its resolved codec name
+                let server_quant = if server_codec_id == 0 {
+                    self.cfg.quant.server.clone()
+                } else {
+                    server.server_codec_name(server_codec_id)
                 };
                 write_msg(
                     &mut writer,
@@ -361,13 +524,14 @@ impl Leader {
                         d: d as u32,
                         x0: x_join.clone(),
                         client_quant: server.client_codec_name(codec_id),
-                        server_quant: self.cfg.quant.server.clone(),
+                        server_quant,
                         client_lr: self.cfg.fl.client_lr,
                         codec_id: codec_id as u32,
+                        server_codec_id: server_codec_id as u32,
                     },
                 )
                 .with_context(|| format!("sending JoinV2 to worker {worker_id} ({peer})"))?;
-                (version, codec_id)
+                (version, codec_id, server_codec_id)
             } else {
                 // v1 worker: the legacy Join, bit-identical to the
                 // pre-v2 protocol (pinned by a golden test)
@@ -383,13 +547,8 @@ impl Leader {
                     },
                 )
                 .with_context(|| format!("sending Join to worker {worker_id} ({peer})"))?;
-                (1u8, 0usize)
+                (1u8, 0usize, 0usize)
             };
-            // handshake over: the steady-state reader blocks as long as
-            // it likes (clears the deadline on the shared socket)
-            reader
-                .set_read_timeout(None)
-                .with_context(|| format!("worker {worker_id} ({peer}): clearing deadline"))?;
 
             // reader thread: a worker dying (EOF, reset) is a tolerable
             // disconnect, exactly as before v2; only *protocol*
@@ -416,48 +575,108 @@ impl Leader {
                 }
             }));
 
-            // persistent writer thread: its own outbound queue, frames
-            // pre-encoded and shared; returns what it actually wrote
-            // (and the span-gated wall time spent writing it)
-            let (wtx, wrx) = mpsc::channel::<Arc<[u8]>>();
-            writer_handles.push(std::thread::spawn(move || {
-                let mut frames = 0u64;
-                let mut bytes = 0u64;
-                let mut send_ns = 0u64;
-                for frame in wrx {
+            // persistent writer thread: its own bounded outbound queue,
+            // frames pre-encoded and shared; returns what it actually
+            // wrote (and the span-gated wall time spent writing it).
+            // v1 peers predate the Sync frame, so they keep an
+            // unbudgeted queue (budget 0) and never see a fold.
+            let queue = FrameQueue::new(if protocol >= 2 { budget } else { 0 });
+            let fold_log = if protocol >= 2 {
+                fold_logs.as_ref().map(|logs| logs[server_codec_id].clone())
+            } else {
+                None
+            };
+            let q = Arc::clone(&queue);
+            writer_handles[wid] = Some(std::thread::spawn(move || {
+                let mut tot = WriterTotals::default();
+                // last step this connection was brought up to (join
+                // frames carry the hidden state at join_step)
+                let mut last_sent = join_step;
+                'writer: while let Some(item) = q.pop() {
+                    let frame: Arc<[u8]> = match item {
+                        QueuedFrame::Control(frame) => frame,
+                        QueuedFrame::Step { t, frame } => {
+                            if let Some(log) = &fold_log {
+                                if t <= last_sent {
+                                    continue; // covered by an earlier fold
+                                }
+                                if t > last_sent + 1 {
+                                    // the queue evicted frames: fold the
+                                    // gap (this popped frame included —
+                                    // the log holds its exact payload)
+                                    let Ok((to_t, frames, full)) =
+                                        materialize_catch_up(log, last_sent)
+                                    else {
+                                        break 'writer;
+                                    };
+                                    for f in &frames {
+                                        let timer = telemetry::span_start();
+                                        if writer.write_all(f).is_err() {
+                                            break 'writer;
+                                        }
+                                        tot.send_ns += telemetry::span_ns(timer);
+                                        tot.frames += 1;
+                                        tot.bytes += f.len() as u64;
+                                        tot.catch_up_frames += 1;
+                                    }
+                                    if full {
+                                        tot.full_syncs += 1;
+                                    }
+                                    last_sent = to_t;
+                                    continue;
+                                }
+                                last_sent = t;
+                            }
+                            frame
+                        }
+                    };
                     let timer = telemetry::span_start();
                     if writer.write_all(&frame).is_err() {
                         break; // dead worker: its reader thread reports it
                     }
-                    send_ns += telemetry::span_ns(timer);
-                    frames += 1;
-                    bytes += frame.len() as u64;
+                    tot.send_ns += telemetry::span_ns(timer);
+                    tot.frames += 1;
+                    tot.bytes += frame.len() as u64;
                 }
-                (frames, bytes, send_ns)
+                tot
             }));
-            writers.push(wtx);
+            queues[wid] = Some((queue, server_codec_id));
 
             tracing_log(&format!(
-                "leader: worker {worker_id} joined from {peer} (protocol v{protocol}, codec '{}')",
-                server.client_codec_name(codec_id)
+                "leader: worker {worker_id} joined from {peer} (protocol v{protocol}, \
+                 codec '{}', downlink '{}')",
+                server.client_codec_name(codec_id),
+                server.server_codec_name(server_codec_id)
             ));
-            stats.push(WorkerStats {
+            stats_slots[wid] = Some(WorkerStats {
                 worker_id,
                 peer,
                 protocol,
                 codec_id,
                 codec: server.client_codec_name(codec_id),
+                server_codec_id,
+                server_codec: server.server_codec_name(server_codec_id),
                 uploads: 0,
                 upload_bytes: 0,
                 partials: 0,
                 broadcast_frames: 0,
                 broadcast_bytes: 0,
+                skipped_broadcasts: 0,
+                catch_up_frames: 0,
+                full_syncs: 0,
                 ingest_ns: 0,
                 send_ns: 0,
                 staleness: StalenessHist::default(),
             });
         }
         drop(tx);
+        for h in handshake_handles {
+            let _ = h.join();
+        }
+        let mut stats: Vec<WorkerStats> =
+            stats_slots.into_iter().map(|s| s.expect("all worker slots filled")).collect();
+        let queues: Vec<(Arc<FrameQueue>, usize)> =
+            queues.into_iter().map(|q| q.expect("all worker slots filled")).collect();
 
         // every codec is registered once the accept loop is done, so the
         // journal header (meta, init, codec registry) goes out before
@@ -480,6 +699,13 @@ impl Leader {
                     reg: "client".into(),
                     id: id as u64,
                     spec: server.client_codec_name(id),
+                })?;
+            }
+            for id in journaled_server..server.num_server_codecs() {
+                recorder.emit(Event::Codec {
+                    reg: "server".into(),
+                    id: id as u64,
+                    spec: server.server_codec_name(id),
                 })?;
             }
             if !self.resume {
@@ -559,7 +785,7 @@ impl Leader {
                 }
                 other => {
                     tracing_log(&format!(
-                        "leader: unexpected message from {worker_id}: {other:?}"
+                        "leader: unexpected message from worker {worker_id}: {other:?}"
                     ));
                     continue;
                 }
@@ -660,7 +886,7 @@ impl Leader {
                 }
             };
 
-            if let ServerStep::Stepped(b) = step {
+            if let ServerStep::Stepped(broadcasts) = step {
                 if recorder.on() || tel.progress > 0 {
                     let step_ev = Event::Step {
                         time: now,
@@ -675,12 +901,15 @@ impl Leader {
                     };
                     if recorder.on() {
                         recorder.emit(step_ev.clone())?;
-                        recorder.emit(Event::Broadcast {
-                            time: now,
-                            step: b.t,
-                            absolute: b.absolute,
-                            payload: b.msg.payload.clone(),
-                        })?;
+                        for b in &broadcasts {
+                            recorder.emit(Event::Broadcast {
+                                time: now,
+                                step: b.t,
+                                absolute: b.absolute,
+                                codec: b.codec as u64,
+                                payload: b.msg.payload.clone(),
+                            })?;
+                        }
                     }
                     if tel.progress > 0 && server.t() % tel.progress == 0 {
                         if let Some(line) =
@@ -703,35 +932,66 @@ impl Leader {
                         state,
                     })?;
                 }
-                // encode once, share with every writer queue
-                let frame: Arc<[u8]> = frame_bytes(&Message::Broadcast {
-                    t: b.t,
-                    absolute: b.absolute,
-                    payload: b.msg.payload,
-                })?
-                .into();
-                for w in &writers {
-                    let _ = w.send(frame.clone());
+                // one frame per downlink family, encoded once and shared
+                // with every writer queue of that family. Budgeted runs
+                // push into the family's UpdateLog FIRST: a writer that
+                // later finds a gap is guaranteed the log covers every
+                // step up to (at least) the frame it popped.
+                for b in broadcasts {
+                    let (t, absolute, fam) = (b.t, b.absolute, b.codec);
+                    let frame: Arc<[u8]> = if let Some(logs) = &fold_logs {
+                        let frame = frame_bytes(&Message::Broadcast {
+                            t,
+                            absolute,
+                            payload: b.msg.payload.clone(),
+                        })?;
+                        logs[fam]
+                            .lock()
+                            .unwrap()
+                            .push_quantized(b, fold_codecs[fam].as_ref(), &fold_pool)
+                            .context("advancing the downlink catch-up log")?;
+                        frame.into()
+                    } else {
+                        frame_bytes(&Message::Broadcast { t, absolute, payload: b.msg.payload })?
+                            .into()
+                    };
+                    for (q, q_fam) in &queues {
+                        if *q_fam == fam {
+                            q.push_step(t, frame.clone());
+                        }
+                    }
                 }
             }
             if server.t() >= self.cfg.stop.max_server_steps
                 || server.comm.uploads >= self.cfg.stop.max_uploads
             {
                 let frame: Arc<[u8]> = frame_bytes(&Message::Shutdown)?.into();
-                for w in &writers {
-                    let _ = w.send(frame.clone());
+                for (q, _) in &queues {
+                    q.push_control(frame.clone());
                 }
                 shutdown_sent = true;
             }
         }
         // shutdown: close the outbound queues, join the writer threads
         // (collecting what each actually wrote), then the readers
-        drop(writers);
+        for (q, _) in &queues {
+            q.close();
+        }
         for (i, h) in writer_handles.into_iter().enumerate() {
-            if let Ok((frames, bytes, send_ns)) = h.join() {
-                stats[i].broadcast_frames = frames;
-                stats[i].broadcast_bytes = bytes;
-                stats[i].send_ns = send_ns;
+            if let Ok(tot) = h.expect("all worker slots filled").join() {
+                stats[i].broadcast_frames = tot.frames;
+                stats[i].broadcast_bytes = tot.bytes;
+                stats[i].send_ns = tot.send_ns;
+                stats[i].catch_up_frames = tot.catch_up_frames;
+                stats[i].full_syncs = tot.full_syncs;
+            }
+            stats[i].skipped_broadcasts = queues[i].0.skipped();
+            if stats[i].skipped_broadcasts > 0 {
+                tracing_log(&format!(
+                    "leader: worker {i} fell behind — {} broadcasts folded into {} catch-up \
+                     frames ({} full syncs)",
+                    stats[i].skipped_broadcasts, stats[i].catch_up_frames, stats[i].full_syncs
+                ));
             }
         }
         for h in reader_handles {

@@ -72,7 +72,14 @@ pub enum Message {
     /// carries, plus the negotiated protocol version and the id of the
     /// worker's upload codec in the leader's registry. `client_quant` is
     /// the *resolved* per-worker spec (tier preset or override, already
-    /// normalized per algorithm), not the global default.
+    /// normalized per algorithm), not the global default. Likewise
+    /// `server_quant` is the worker's *resolved downlink* spec — the
+    /// tier's `quant_server` preset when one exists, the global default
+    /// otherwise — and `server_codec_id` is that codec's id in the
+    /// leader's downlink-family registry
+    /// ([`crate::coordinator::Server::register_server_codec`]), so every
+    /// `Broadcast` frame the worker receives was encoded by exactly
+    /// that codec against that family's hidden state.
     JoinV2 {
         version: u8,
         worker_id: u32,
@@ -82,6 +89,7 @@ pub enum Message {
         server_quant: String,
         client_lr: f32,
         codec_id: u32,
+        server_codec_id: u32,
     },
     /// worker -> leader, v2 upload: [`Message::Update`] plus the codec
     /// registry id the payload was encoded with.
@@ -111,6 +119,15 @@ pub enum Message {
         stale_n: u64,
         payload: Vec<u8>,
     },
+    /// leader -> worker: a full-state resynchronization. Sent when a
+    /// budgeted writer queue skipped broadcasts for this worker and the
+    /// server's [`crate::coordinator::UpdateLog`] has already evicted
+    /// the increments the worker would need
+    /// ([`crate::coordinator::CatchUp::FullState`]) — the worker
+    /// replaces its hidden replica with `x` at step `t`
+    /// ([`crate::coordinator::client::HiddenReplica::resync`]) instead
+    /// of replaying deltas.
+    Sync { t: u64, x: Vec<f32> },
 }
 
 const TAG_JOIN: u8 = 1;
@@ -122,6 +139,7 @@ const TAG_HELLO: u8 = 6;
 const TAG_JOIN2: u8 = 7;
 const TAG_UPDATE2: u8 = 8;
 const TAG_UPDATE_PARTIAL: u8 = 9;
+const TAG_SYNC: u8 = 10;
 
 struct Writer {
     buf: Vec<u8>,
@@ -298,6 +316,7 @@ impl Message {
                 server_quant,
                 client_lr,
                 codec_id,
+                server_codec_id,
             } => {
                 let mut w = Writer::new(TAG_JOIN2);
                 w.u8(*version);
@@ -308,6 +327,7 @@ impl Message {
                 w.str(server_quant);
                 w.f32(*client_lr);
                 w.u32(*codec_id);
+                w.u32(*server_codec_id);
                 w.buf
             }
             Message::UpdateV2 { worker_id, t_start, trip, train_loss, codec_id, payload } => {
@@ -339,6 +359,12 @@ impl Message {
                 w.u64(*stale_max);
                 w.u64(*stale_n);
                 w.bytes(payload);
+                w.buf
+            }
+            Message::Sync { t, x } => {
+                let mut w = Writer::new(TAG_SYNC);
+                w.u64(*t);
+                w.f32s(x);
                 w.buf
             }
         }
@@ -383,6 +409,7 @@ impl Message {
                 server_quant: r.str()?,
                 client_lr: r.f32()?,
                 codec_id: r.u32()?,
+                server_codec_id: r.u32()?,
             },
             TAG_UPDATE2 => Message::UpdateV2 {
                 worker_id: r.u32()?,
@@ -402,6 +429,7 @@ impl Message {
                 stale_n: r.u64()?,
                 payload: r.bytes()?,
             },
+            TAG_SYNC => Message::Sync { t: r.u64()?, x: r.f32s()? },
             tag => bail!("unknown message tag {tag}"),
         };
         r.done()?;
@@ -502,6 +530,7 @@ mod tests {
                 server_quant: "qsgd:4".into(),
                 client_lr: 0.05,
                 codec_id: 3,
+                server_codec_id: 1,
             },
             Message::UpdateV2 {
                 worker_id: 4,
@@ -539,6 +568,8 @@ mod tests {
                 stale_n: 0,
                 payload: vec![],
             },
+            Message::Sync { t: 12, x: vec![0.25, -1.5, 3.0] },
+            Message::Sync { t: 0, x: vec![] },
         ]
     }
 
@@ -620,6 +651,7 @@ mod tests {
                 server_quant: "none".into(),
                 client_lr: 0.1,
                 codec_id: 0,
+                server_codec_id: 0,
             }
             .encode();
             join[1] = v;

@@ -32,12 +32,19 @@
 //! writer thread per connection + an mpsc fan-in to the leader loop —
 //! the standard thread-per-connection design, adequate for the tens of
 //! workers a single-host deployment runs. Broadcasts are encoded once
-//! and fanned out through the per-worker writer queues, so one slow
-//! worker cannot stall the step loop.
+//! *per downlink family* (ISSUE 8: `scenario.tiers.<name>.quant_server`
+//! resolves each tier to its own `Q_s`, negotiated in `JoinV2`) and
+//! fanned out through per-worker [`queue::FrameQueue`]s, so one slow
+//! worker cannot stall the step loop. With `net.broadcast_budget_bytes`
+//! set, a backlogged worker's queue stays bounded: superseded frames are
+//! evicted and the writer folds the gap into an incremental catch-up
+//! from the server's [`crate::coordinator::UpdateLog`] — or one
+//! `Sync` frame when the log has evicted the increments (Appendix B.1).
 
 pub mod edge;
 pub mod leader;
 pub mod message;
+pub mod queue;
 pub mod transport;
 pub mod worker;
 

@@ -1,0 +1,233 @@
+//! Bounded per-connection broadcast queues for the fan-out writers.
+//!
+//! The v1/v2 leaders and edge relays used to hand each writer thread an
+//! unbounded `mpsc` channel: one stalled TCP peer (a phone on a dead
+//! radio, a throttled edge) made the leader buffer every broadcast frame
+//! it would never drain — memory grew linearly with server steps. A
+//! [`FrameQueue`] caps the bytes queued per connection
+//! (`net.broadcast_budget_bytes`) and, when over budget, evicts the
+//! *oldest* step frames first: the newest broadcast always survives, the
+//! skipped ones are folded into the writer's next send via the server's
+//! [`crate::coordinator::UpdateLog`] (incremental catch-up) or a full
+//! [`crate::net::message::Message::Sync`] when the log has evicted the
+//! increments (Appendix B.1's bounded catch-up rule).
+//!
+//! Control frames (Join, Shutdown, relayed Syncs) are never evicted and
+//! never count against the budget — dropping them would wedge the
+//! protocol, and they are O(1) per connection.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One frame queued for a writer thread.
+#[derive(Clone)]
+pub enum QueuedFrame {
+    /// A broadcast frame for server step `t`. Evictable under budget
+    /// pressure: a newer step supersedes it and the gap is folded into a
+    /// catch-up by the writer.
+    Step { t: u64, frame: Arc<[u8]> },
+    /// A protocol frame (Shutdown, relayed Sync). Never evicted, never
+    /// counted against the budget.
+    Control(Arc<[u8]>),
+}
+
+struct Inner {
+    items: VecDeque<QueuedFrame>,
+    /// Bytes held by `Step` items only.
+    step_bytes: u64,
+    /// 0 = unlimited (the pre-budget behavior, byte-for-byte).
+    budget: u64,
+    skipped: u64,
+    closed: bool,
+}
+
+/// A bounded MPSC frame queue: the main loop pushes, one writer pops.
+pub struct FrameQueue {
+    inner: Mutex<Inner>,
+    cond: Condvar,
+}
+
+impl FrameQueue {
+    /// `budget` bounds the bytes of queued `Step` frames; 0 = unlimited.
+    pub fn new(budget: u64) -> Arc<FrameQueue> {
+        Arc::new(FrameQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                step_bytes: 0,
+                budget,
+                skipped: 0,
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        })
+    }
+
+    /// Enqueue a broadcast frame for step `t`, evicting oldest step
+    /// frames while over budget. The newest frame is always enqueued,
+    /// even when it alone exceeds the budget — the writer needs *some*
+    /// frame to anchor its catch-up fold.
+    pub fn push_step(&self, t: u64, frame: Arc<[u8]>) {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return;
+        }
+        g.step_bytes += frame.len() as u64;
+        g.items.push_back(QueuedFrame::Step { t, frame });
+        if g.budget > 0 {
+            while g.step_bytes > g.budget && g.items.len() > 1 {
+                // Evict the oldest Step item, keeping Control frames and
+                // always keeping the just-pushed newest step.
+                let Some(pos) = g.items.iter().position(|i| matches!(i, QueuedFrame::Step { .. }))
+                else {
+                    break;
+                };
+                if pos == g.items.len() - 1 {
+                    break; // only the newest step remains
+                }
+                if let Some(QueuedFrame::Step { frame, .. }) = g.items.remove(pos) {
+                    g.step_bytes -= frame.len() as u64;
+                    g.skipped += 1;
+                }
+            }
+        }
+        drop(g);
+        self.cond.notify_one();
+    }
+
+    /// Enqueue a protocol frame. Exempt from the budget and eviction.
+    pub fn push_control(&self, frame: Arc<[u8]>) {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return;
+        }
+        g.items.push_back(QueuedFrame::Control(frame));
+        drop(g);
+        self.cond.notify_one();
+    }
+
+    /// Pop the next frame, blocking while the queue is open and empty.
+    /// After [`FrameQueue::close`], drains remaining items then returns
+    /// `None`.
+    pub fn pop(&self) -> Option<QueuedFrame> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                if let QueuedFrame::Step { frame, .. } = &item {
+                    g.step_bytes -= frame.len() as u64;
+                }
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cond.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: pushes become no-ops, `pop` drains then ends.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Step frames evicted under budget pressure so far.
+    pub fn skipped(&self) -> u64 {
+        self.inner.lock().unwrap().skipped
+    }
+
+    /// Bytes currently held by queued step frames.
+    pub fn queued_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().step_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(n: usize) -> Arc<[u8]> {
+        Arc::from(vec![0u8; n].into_boxed_slice())
+    }
+
+    fn pop_step_t(q: &FrameQueue) -> u64 {
+        match q.pop() {
+            Some(QueuedFrame::Step { t, .. }) => t,
+            other => panic!("expected a step frame, got none/control: {}", other.is_some()),
+        }
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let q = FrameQueue::new(0);
+        for t in 1..=100u64 {
+            q.push_step(t, frame(1000));
+        }
+        assert_eq!(q.skipped(), 0);
+        assert_eq!(q.queued_bytes(), 100_000);
+        for t in 1..=100u64 {
+            assert_eq!(pop_step_t(&q), t);
+        }
+    }
+
+    #[test]
+    fn over_budget_evicts_oldest_keeps_newest() {
+        let q = FrameQueue::new(2500); // fits 2 × 1000-byte frames + slack
+        for t in 1..=10u64 {
+            q.push_step(t, frame(1000));
+        }
+        assert_eq!(q.skipped(), 8);
+        assert!(q.queued_bytes() <= 2500);
+        assert_eq!(pop_step_t(&q), 9);
+        assert_eq!(pop_step_t(&q), 10);
+    }
+
+    #[test]
+    fn oversized_newest_frame_still_enqueued() {
+        let q = FrameQueue::new(10);
+        q.push_step(1, frame(1000));
+        assert_eq!(q.skipped(), 0, "a lone over-budget frame must survive");
+        assert_eq!(pop_step_t(&q), 1);
+    }
+
+    #[test]
+    fn control_frames_exempt_from_budget_and_eviction() {
+        let q = FrameQueue::new(1500);
+        q.push_control(frame(10_000));
+        q.push_step(1, frame(1000));
+        q.push_step(2, frame(1000));
+        q.push_step(3, frame(1000));
+        // steps 1 and 2 evicted; the huge control frame untouched
+        assert_eq!(q.skipped(), 2);
+        assert!(matches!(q.pop(), Some(QueuedFrame::Control(_))));
+        assert_eq!(pop_step_t(&q), 3);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = FrameQueue::new(0);
+        q.push_step(1, frame(8));
+        q.close();
+        q.push_step(2, frame(8)); // dropped: closed
+        assert_eq!(pop_step_t(&q), 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_blocks_until_push_or_close() {
+        let q = FrameQueue::new(0);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            while let Some(QueuedFrame::Step { t, .. }) = q2.pop() {
+                seen.push(t);
+            }
+            seen
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push_step(1, frame(4));
+        q.push_step(2, frame(4));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), vec![1, 2]);
+    }
+}

@@ -17,7 +17,7 @@
 
 use super::message::{Message, PROTOCOL_VERSION};
 use super::transport::Conn;
-use crate::quant::{parse_spec, Quantizer};
+use crate::quant::parse_spec;
 use crate::runtime::Backend;
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
@@ -36,6 +36,16 @@ pub struct WorkerReport {
     pub codec: String,
     /// Registry id of that codec on the leader (0 = default).
     pub codec_id: u32,
+    /// Resolved downlink-codec spec the leader assigned (the tier's
+    /// `quant_server` preset, else the default `quant.server`).
+    pub server_codec: String,
+    /// Downlink-family id of that codec on the leader (0 = default).
+    pub server_codec_id: u32,
+    /// Full-state `Sync` frames applied: budgeted fan-out catch-ups
+    /// that could not be expressed as replayed increments (0 unless
+    /// the leader runs with `net.broadcast_budget_bytes` and this
+    /// worker fell far behind).
+    pub syncs: u64,
     /// Wall time in local training rounds (`client_round`). All `_ns`
     /// counters are captured only while telemetry spans are on
     /// ([`crate::telemetry::set_enabled`]); zero otherwise.
@@ -91,7 +101,7 @@ impl<B: Backend> Worker<B> {
                 quant_client: self.quant_client.clone(),
             })?;
         }
-        let (protocol, worker_id, d, mut x_hat, client_quant, server_quant, client_lr, codec_id) =
+        let (protocol, worker_id, d, x0, client_quant, server_quant, client_lr, codec_id, sc_id) =
             match conn.recv()? {
                 Some(Message::JoinV2 {
                     version,
@@ -102,6 +112,7 @@ impl<B: Backend> Worker<B> {
                     server_quant,
                     client_lr,
                     codec_id,
+                    server_codec_id,
                 }) => {
                     if self.force_v1 {
                         bail!("worker: leader sent JoinV2 to a v1 worker");
@@ -115,6 +126,7 @@ impl<B: Backend> Worker<B> {
                         server_quant,
                         client_lr,
                         codec_id,
+                        server_codec_id,
                     )
                 }
                 // a leader that answers a Hello with the legacy Join is
@@ -122,7 +134,7 @@ impl<B: Backend> Worker<B> {
                 // id 0). A genuine pre-v2 leader never gets here — it
                 // fails to decode the Hello tag and drops us instead.
                 Some(Message::Join { worker_id, d, x0, client_quant, server_quant, client_lr }) => {
-                    (1u8, worker_id, d as usize, x0, client_quant, server_quant, client_lr, 0u32)
+                    (1u8, worker_id, d as usize, x0, client_quant, server_quant, client_lr, 0, 0)
                 }
                 other => bail!("expected Join/JoinV2, got {other:?}"),
             };
@@ -130,17 +142,24 @@ impl<B: Backend> Worker<B> {
             bail!("model dim mismatch: leader d={d}, backend d={}", self.backend.d());
         }
         let quant_c = parse_spec(&client_quant)?;
-        let quant_s: Box<dyn Quantizer> = parse_spec(&server_quant)?;
         let mut rng = Prng::new(0xC11E27 ^ worker_id as u64).stream("worker-quant");
-        // persistent decode pool, reused for every broadcast this run
+        // Algorithm 3's replica, decoding with the downlink codec this
+        // connection's tier negotiated (JoinV2.server_quant); the decode
+        // pool is persistent, reused for every broadcast this run
         let pool = crate::util::pool::ShardPool::new(self.shards.max(1));
+        let mut replica =
+            crate::coordinator::client::HiddenReplica::with_spec(&server_quant, x0, pool)?;
 
         // --- Algorithm 3: background replica thread -------------------------
         // The reader thread receives broadcasts and forwards them; the
         // training loop applies them in order between rounds (the replica
         // is only *read* at round start, so this is equivalent to applying
-        // them the moment they arrive).
-        let (tx, rx) = mpsc::channel::<Message>();
+        // them the moment they arrive). The channel is *bounded*: a worker
+        // whose training rounds can't keep up with the broadcast stream
+        // stops reading its socket, TCP backpressure fills the leader's
+        // budgeted writer queue, and the leader folds the backlog into a
+        // catch-up at the source instead of buffering it here unboundedly.
+        let (tx, rx) = mpsc::sync_channel::<Message>(256);
         let mut reader = conn.reader.try_clone()?;
         let bg = std::thread::spawn(move || {
             while let Ok(Some(msg)) = super::transport::read_msg(&mut reader) {
@@ -151,8 +170,8 @@ impl<B: Backend> Worker<B> {
             }
         });
 
-        let mut replica_t = 0u64;
         let mut uploads = 0u64;
+        let mut syncs = 0u64;
         let mut trip = 0u64;
         let mut train_ns = 0u64;
         let mut encode_ns = 0u64;
@@ -163,28 +182,37 @@ impl<B: Backend> Worker<B> {
             loop {
                 match rx.try_recv() {
                     Ok(Message::Broadcast { t, absolute, payload }) => {
-                        let qmsg = crate::quant::QuantizedMsg { payload, d };
-                        // the gap check admits one re-base: the leader of
+                        // the replica admits one re-base: the leader of
                         // a resumed run handed us its checkpointed hidden
                         // state as x^0, and the first broadcast we see is
                         // the resumed step + 1 (writer queues exist before
                         // the coordination loop starts, so nothing between
                         // join and that first frame can be missed)
-                        if t != replica_t + 1 && !(replica_t == 0 && t > 0) {
-                            bail!("worker {worker_id}: broadcast gap {replica_t} -> {t}");
+                        if replica.t == 0 && t > 1 {
+                            replica.t = t - 1;
                         }
+                        let b = crate::coordinator::Broadcast {
+                            t,
+                            bytes: payload.len(),
+                            msg: crate::quant::QuantizedMsg { payload, d },
+                            absolute,
+                            codec: sc_id as usize,
+                        };
                         let timer = crate::telemetry::span_start();
-                        if absolute {
-                            crate::quant::sharded::dequantize_into(
-                                quant_s.as_ref(), &qmsg, &mut x_hat, &pool,
-                            )?;
-                        } else {
-                            crate::quant::sharded::accumulate(
-                                quant_s.as_ref(), &qmsg, 1.0, &mut x_hat, &pool,
-                            )?;
-                        }
+                        replica
+                            .apply(&b)
+                            .map_err(|e| e.context(format!("worker {worker_id}")))?;
                         decode_ns += crate::telemetry::span_ns(timer);
-                        replica_t = t;
+                    }
+                    Ok(Message::Sync { t, x }) => {
+                        // budgeted fan-out: the leader folded a skipped
+                        // backlog into one full-state resync (B.1)
+                        let timer = crate::telemetry::span_start();
+                        replica
+                            .resync(t, x)
+                            .map_err(|e| e.context(format!("worker {worker_id}")))?;
+                        decode_ns += crate::telemetry::span_ns(timer);
+                        syncs += 1;
                     }
                     Ok(Message::Shutdown) => break 'train,
                     Ok(other) => bail!("worker {worker_id}: unexpected {other:?}"),
@@ -194,10 +222,10 @@ impl<B: Backend> Worker<B> {
             }
 
             // Algorithm 2: train from the replica snapshot
-            let t_start = replica_t;
+            let t_start = replica.t;
             let user = worker_id as usize;
             let timer = crate::telemetry::span_start();
-            let out = self.backend.client_round(&x_hat, user, trip, client_lr)?;
+            let out = self.backend.client_round(replica.state(), user, trip, client_lr)?;
             train_ns += crate::telemetry::span_ns(timer);
             let timer = crate::telemetry::span_start();
             let qmsg = quant_c.quantize(&out.delta, &mut rng);
@@ -223,10 +251,13 @@ impl<B: Backend> Worker<B> {
         Ok(WorkerReport {
             worker_id,
             uploads,
-            replica_t,
+            replica_t: replica.t,
             protocol,
             codec: quant_c.name(),
             codec_id,
+            server_codec: server_quant,
+            server_codec_id: sc_id,
+            syncs,
             train_ns,
             encode_ns,
             send_ns,
@@ -298,9 +329,13 @@ mod tests {
             total_uploads += r.uploads;
             max_replica_t = max_replica_t.max(r.replica_t);
             // plain workers negotiate v2 and land on the default codec
+            // in both directions; no budget means no full-state syncs
             assert_eq!(r.protocol, 2);
             assert_eq!(r.codec_id, 0);
             assert_eq!(r.codec, "qsgd:8");
+            assert_eq!(r.server_codec_id, 0);
+            assert_eq!(r.server_codec, "qsgd:8");
+            assert_eq!(r.syncs, 0);
         }
 
         assert_eq!(report.server_steps, 40);
@@ -319,9 +354,14 @@ mod tests {
         for ws in &report.worker_stats {
             assert_eq!(ws.protocol, 2);
             assert_eq!(ws.codec_id, 0);
+            assert_eq!(ws.server_codec_id, 0);
             assert!(ws.uploads > 0, "worker {} never uploaded", ws.worker_id);
-            // writer threads delivered every broadcast + the shutdown frame
+            // writer threads delivered every broadcast + the shutdown
+            // frame; the default budget (0) never skips or folds
             assert_eq!(ws.broadcast_frames, 41, "worker {}", ws.worker_id);
+            assert_eq!(ws.skipped_broadcasts, 0);
+            assert_eq!(ws.catch_up_frames, 0);
+            assert_eq!(ws.full_syncs, 0);
         }
         // training over TCP actually descends
         let g1 = mk_backend().grad_norm_sq(&report.model);

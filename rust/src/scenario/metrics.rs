@@ -169,6 +169,12 @@ pub struct TierMetrics {
     /// the tier's `quant_client` preset, resolved per algorithm). Set by
     /// the engine once codecs are registered.
     pub codec: String,
+    /// Broadcast (downlink) codec this tier decodes with — set by the
+    /// engine only when the tier's `quant_server` preset resolved to a
+    /// non-default downlink family; empty means the default `Q_s`.
+    /// Serialized conditionally so no-preset checkpoints stay
+    /// byte-identical to the pre-family engine.
+    pub download_codec: String,
     /// Clients of this tier that arrived while the tier was available.
     pub arrivals: u64,
     /// Arrivals skipped because the tier was in its off window.
@@ -297,9 +303,14 @@ impl ScenarioMetrics {
     /// are u64 (< 2^53 in practice) and histograms carry their parts.
     pub fn to_json(&self) -> Json {
         let tier = |t: &TierMetrics| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("name", Json::str(t.name.clone())),
                 ("codec", Json::str(t.codec.clone())),
+            ];
+            if !t.download_codec.is_empty() {
+                fields.push(("download_codec", Json::str(t.download_codec.clone())));
+            }
+            fields.extend([
                 ("arrivals", Json::num(t.arrivals as f64)),
                 ("unavailable", Json::num(t.unavailable as f64)),
                 ("dropouts", Json::num(t.dropouts as f64)),
@@ -312,7 +323,8 @@ impl ScenarioMetrics {
                     Json::num(t.wasted_download_bytes as f64),
                 ),
                 ("staleness", t.staleness.to_json()),
-            ])
+            ]);
+            Json::obj(fields)
         };
         Json::obj(vec![
             ("tiers", Json::arr(self.tiers.iter().map(tier).collect())),
@@ -347,6 +359,12 @@ impl ScenarioMetrics {
                 Ok(TierMetrics {
                     name: text(t, "name")?,
                     codec: text(t, "codec")?,
+                    // optional: absent on no-preset (and pre-family) runs
+                    download_codec: t
+                        .get("download_codec")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
                     arrivals: num(t, "arrivals")?,
                     unavailable: num(t, "unavailable")?,
                     dropouts: num(t, "dropouts")?,
@@ -478,6 +496,7 @@ mod tests {
         let mut m = ScenarioMetrics::with_tiers(["fast".to_string(), "slow".to_string()]);
         m.tiers[0].codec = "qsgd:4".into();
         m.tiers[1].codec = "top:0.1".into();
+        m.tiers[1].download_codec = "qsgd:2".into();
         m.record_arrival(0);
         m.record_upload(0, 2, 100, 50);
         m.record_dropout(1, 50);
@@ -489,6 +508,10 @@ mod tests {
         assert_eq!(back.tiers, m.tiers);
         assert_eq!(back.staleness, m.staleness);
         assert_eq!(back.arrivals_all_off, m.arrivals_all_off);
+        // the downlink-codec key only appears when a tier has a
+        // non-default downlink family (byte-identity for no-preset runs)
+        let text = j.to_string();
+        assert_eq!(text.matches("download_codec").count(), 1);
         // the parse is strict about schema
         assert!(ScenarioMetrics::from_json(&Json::obj(vec![])).is_err());
         assert!(StalenessHist::from_json(&Json::obj(vec![])).is_err());

@@ -141,12 +141,13 @@ impl Scenario {
     }
 
     /// (Re)calibrate the arrival rate from Little's law with one upload
-    /// wire size shared by every tier (no per-tier codec presets):
-    /// shorthand for [`Scenario::recalibrate_per_tier`] with a uniform
-    /// byte vector.
+    /// and one download wire size shared by every tier (no per-tier
+    /// codec presets): shorthand for [`Scenario::recalibrate_per_tier`]
+    /// with uniform byte vectors.
     pub fn recalibrate(&mut self, upload_bytes: usize, download_bytes: usize) {
-        let bytes = vec![upload_bytes; self.tiers.len()];
-        self.recalibrate_per_tier(&bytes, download_bytes);
+        let up = vec![upload_bytes; self.tiers.len()];
+        let down = vec![download_bytes; self.tiers.len()];
+        self.recalibrate_per_tier(&up, &down);
     }
 
     /// (Re)calibrate the arrival rate from Little's law:
@@ -162,7 +163,9 @@ impl Scenario {
     /// uniformly over the diurnal cycle, so `a_i = on_fraction`), `R_i`
     /// is the expected in-flight **residency** of a started client —
     /// training plus its deterministic transfer time on that tier's own
-    /// upload codec (`upload_bytes[i]`) — and `q_i` is the tier's
+    /// upload and download codecs (`upload_bytes[i]`,
+    /// `download_bytes[i]`; per-tier `quant_server` presets shrink a
+    /// tier's broadcast payload) — and `q_i` is the tier's
     /// effective `partial_work`: a mid-round dropper trains a uniform
     /// `m/P` prefix (mean exactly 1/2) and pays the upload delay, while
     /// a full dropper trains the whole round and never uploads. Without
@@ -176,19 +179,20 @@ impl Scenario {
     /// clock-dependent (`w_i x 1[on]` renormalized), so the expected
     /// residency per arrival is averaged numerically over the diurnal
     /// cycle instead of closed-form.
-    pub fn recalibrate_per_tier(&mut self, upload_bytes: &[usize], download_bytes: usize) {
+    pub fn recalibrate_per_tier(&mut self, upload_bytes: &[usize], download_bytes: &[usize]) {
         assert_eq!(upload_bytes.len(), self.tiers.len(), "one upload size per tier");
+        assert_eq!(download_bytes.len(), self.tiers.len(), "one download size per tier");
         let residency: Vec<f64> = self
             .tiers
             .iter()
-            .zip(upload_bytes)
-            .map(|(t, &up)| {
+            .zip(upload_bytes.iter().zip(download_bytes))
+            .map(|(t, (&up, &down))| {
                 let c = &t.cfg;
                 let q = if self.local_steps >= 2 { c.partial_work } else { 0.0 };
                 let df = 1.0 - c.dropout * q * 0.5;
                 let uf = 1.0 - c.dropout * (1.0 - q);
                 t.dist.mean() * df
-                    + bytes_delay(download_bytes, c.download_mbps)
+                    + bytes_delay(down, c.download_mbps)
                     + uf * bytes_delay(up, c.upload_mbps)
             })
             .collect();
@@ -304,6 +308,11 @@ impl Scenario {
     /// The tier's client-codec preset spec, if it has one.
     pub fn tier_quant_client(&self, tier: usize) -> Option<&str> {
         self.tiers[tier].cfg.quant_client.as_deref()
+    }
+
+    /// The tier's server-codec (downlink) preset spec, if it has one.
+    pub fn tier_quant_server(&self, tier: usize) -> Option<&str> {
+        self.tiers[tier].cfg.quant_server.as_deref()
     }
 
     /// For a client that just *dropped*: does it submit the partial
@@ -575,14 +584,25 @@ mod tests {
         let mut uniform = Scenario::build(&c).unwrap();
         let mut per_tier = Scenario::build(&c).unwrap();
         uniform.recalibrate(1_000_000, 0);
-        per_tier.recalibrate_per_tier(&[1_000_000, 1_000_000], 0);
+        per_tier.recalibrate_per_tier(&[1_000_000, 1_000_000], &[0, 0]);
         assert_eq!(uniform.rate(), per_tier.rate());
         // shrinking only the slow tier's payload raises the rate
-        per_tier.recalibrate_per_tier(&[1_000_000, 100_000], 0);
+        per_tier.recalibrate_per_tier(&[1_000_000, 100_000], &[0, 0]);
         assert!(per_tier.rate() > uniform.rate());
         // R_slow = 3 + 0.5 * 0.8 = 3.4, R_fast = 1 (unlimited links);
         // weighted: (1*1*1 + 3*0.5*3.4)/4 = 1.525
         let expect = c.sim.concurrency as f64 / 1.525;
+        assert!((per_tier.rate() - expect).abs() < 1e-9, "{} vs {expect}", per_tier.rate());
+        // per-tier downloads enter the residency too: a 1 MB broadcast
+        // on the slow downlink (2 Mbps) adds 4.0 of delay...
+        per_tier.recalibrate_per_tier(&[1_000_000, 100_000], &[0, 1_000_000]);
+        // R_slow = 3 + 4.0 + 0.4 = 7.4; weighted (1 + 1.5*7.4)/4 = 3.025
+        let expect = c.sim.concurrency as f64 / 3.025;
+        assert!((per_tier.rate() - expect).abs() < 1e-9, "{} vs {expect}", per_tier.rate());
+        // ...while a 100 kB per-tier `quant_server` broadcast adds 0.4
+        per_tier.recalibrate_per_tier(&[1_000_000, 100_000], &[0, 100_000]);
+        // R_slow = 3 + 0.4 + 0.4 = 3.8; weighted (1 + 1.5*3.8)/4 = 1.675
+        let expect = c.sim.concurrency as f64 / 1.675;
         assert!((per_tier.rate() - expect).abs() < 1e-9, "{} vs {expect}", per_tier.rate());
     }
 
@@ -595,7 +615,7 @@ mod tests {
         c.scenario.tiers[1].partial_work = 1.0;
         c.fl.local_steps = 2;
         let mut s = Scenario::build(&c).unwrap();
-        s.recalibrate_per_tier(&[1_000_000, 1_000_000], 0);
+        s.recalibrate_per_tier(&[1_000_000, 1_000_000], &[0, 0]);
         // df = 1 - 0.5*1*0.5 = 0.75 => training residency 3*0.75 = 2.25;
         // uf = 1 - 0.5*(1-1) = 1 => upload delay 8.0 always paid.
         // weighted: (1*1*1 + 3*0.5*(2.25 + 8.0))/4 = 4.09375

@@ -2,11 +2,10 @@
 //! [`Backend`], with the client population owned by the scenario engine
 //! ([`crate::scenario`], DESIGN_SCENARIOS.md).
 
-use crate::config::{Algorithm, Config, TierConfig};
+use crate::config::{Config, TierConfig};
 use crate::coordinator::{AggOutcome, Broadcast, ClientLogic, EdgeAggregator, Server, ServerStep};
 use crate::metrics::{CurvePoint, RunResult};
 use crate::scenario::metrics::EdgeMetrics;
-use crate::quant::parse_spec;
 use crate::runtime::Backend;
 use crate::scenario::{ArrivalProcess, Sampling, Scenario, ScenarioMetrics, SnapshotStore};
 use crate::telemetry::event::{hex_f32s, hex_u64, parse_hex_f32s, parse_hex_u64};
@@ -251,6 +250,29 @@ impl<'a> SimEngine<'a> {
             scenario.metrics.tiers[tier].codec = logic.codec_name(tier_codec[tier]);
         }
 
+        // Per-tier downlink (broadcast) codecs: each `quant_server`
+        // preset resolves to a downlink family in the server — its own
+        // Q_s plus its own hidden-state replica x̂_f, deduped by resolved
+        // spec so a no-preset run keeps exactly one family and the
+        // single-broadcast step path (bit-identical to the pre-family
+        // engine). Registrations are journaled in tier order; replay
+        // re-registers and asserts the same family ids.
+        let mut tier_family = vec![0usize; scenario.num_tiers()];
+        for tier in 0..scenario.num_tiers() {
+            if let Some(spec) = scenario.tier_quant_server(tier) {
+                let fid = server.register_server_codec(spec)?;
+                tier_family[tier] = fid;
+                codec_events.push(JEvent::Codec {
+                    reg: "server".into(),
+                    id: fid as u64,
+                    spec: spec.to_string(),
+                });
+                if fid != 0 {
+                    scenario.metrics.tiers[tier].download_codec = server.server_codec_name(fid);
+                }
+            }
+        }
+
         // Hierarchical aggregation (tree-of-leaders): K edge aggregators
         // each own a contiguous slice of the user population; uploads
         // route through the owning edge, which forwards a count-weighted
@@ -314,12 +336,11 @@ impl<'a> SimEngine<'a> {
             .iter()
             .map(|&codec| logic.upload_bytes_for(codec, d))
             .collect();
-        let download_spec = match self.cfg.fl.algorithm {
-            Algorithm::Qafel | Algorithm::DirectQuant => self.cfg.quant.server.as_str(),
-            Algorithm::FedBuff | Algorithm::FedAsync => "none",
-        };
-        let download_bytes = parse_spec(download_spec)?.expected_bytes(d);
-        scenario.recalibrate_per_tier(&tier_upload_bytes, download_bytes);
+        let tier_download_bytes: Vec<usize> = tier_family
+            .iter()
+            .map(|&f| server.server_codec_bytes(f))
+            .collect();
+        scenario.recalibrate_per_tier(&tier_upload_bytes, &tier_download_bytes);
         let mut arrival = scenario.arrival_process()?;
 
         // Eval reductions run on the server's persistent shard pool
@@ -331,9 +352,15 @@ impl<'a> SimEngine<'a> {
             s => ShardPool::new(s),
         };
 
-        // Versioned snapshot store: all clients arriving between two
-        // server steps share one Arc (O(versions) memory, not O(clients)).
-        let mut store = SnapshotStore::new(server.t(), server.client_snapshot());
+        // Versioned snapshot stores, one per downlink family: all
+        // clients of a family arriving between two server steps share
+        // one Arc (O(versions * families) memory, not O(clients)). A
+        // tier's clients copy *their family's* hidden state x̂_f at
+        // round start, mirroring what a real worker on that tier's
+        // downlink codec would hold.
+        let mut stores: Vec<SnapshotStore> = (0..server.num_server_codecs())
+            .map(|f| SnapshotStore::new(server.t(), server.family_snapshot(f)))
+            .collect();
 
         let mut queue = EventQueue::new();
         let mut trips = 0u64;
@@ -388,7 +415,33 @@ impl<'a> SimEngine<'a> {
                 .iter()
                 .filter(|e| matches!(e.kind, EventKind::Finish { .. }))
                 .count();
-            store = store_from_json(field(state, "store")?)?;
+            stores[0] = store_from_json(field(state, "store")?)?;
+            // extra downlink-family stores ride in a conditional field
+            // (absent on single-family checkpoints, byte-identity)
+            match state.get("store_extra") {
+                Some(extra) => {
+                    let parts = extra
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("checkpoint: store_extra is not an array"))?;
+                    if parts.len() != stores.len().saturating_sub(1) {
+                        bail!(
+                            "checkpoint has {} extra snapshot stores but this config \
+                             resolves {} downlink families — resume with the original config",
+                            parts.len(),
+                            stores.len()
+                        );
+                    }
+                    for (i, p) in parts.iter().enumerate() {
+                        stores[i + 1] = store_from_json(p)?;
+                    }
+                }
+                None if stores.len() > 1 => bail!(
+                    "checkpoint has a single snapshot store but this config resolves \
+                     {} downlink families — resume with the original config",
+                    stores.len()
+                ),
+                None => {}
+            }
             let metrics = ScenarioMetrics::from_json(field(state, "metrics")?)?;
             if metrics.tiers.len() != scenario.metrics.tiers.len() {
                 bail!(
@@ -494,7 +547,7 @@ impl<'a> SimEngine<'a> {
                         } else {
                             None
                         };
-                        let t_start = store.acquire();
+                        let t_start = stores[tier_family[tier]].acquire();
                         let trip = trips;
                         trips += 1;
                         in_flight += 1;
@@ -505,7 +558,8 @@ impl<'a> SimEngine<'a> {
                             Some(f) => dur * f as f64,
                             None => dur,
                         };
-                        let mut delay = scenario.download_delay(tier, download_bytes);
+                        let mut delay =
+                            scenario.download_delay(tier, tier_download_bytes[tier]);
                         if !dropped || partial.is_some() {
                             delay += scenario.upload_delay(tier, tier_upload_bytes[tier]);
                         }
@@ -534,14 +588,15 @@ impl<'a> SimEngine<'a> {
                     if dropped && partial.is_none() {
                         // trained, downloaded, never uploaded — skip the
                         // lazy compute entirely and release the version
-                        store.release(t_start);
-                        scenario.metrics.record_dropout(tier, download_bytes);
+                        stores[tier_family[tier]].release(t_start);
+                        scenario.metrics.record_dropout(tier, tier_download_bytes[tier]);
                         continue;
                     }
-                    // lazy compute against the start-time snapshot; a
-                    // partial dropper submits scale * delta on the
-                    // tier's own upload codec
-                    let snapshot = store
+                    // lazy compute against the start-time snapshot of
+                    // the tier's downlink family; a partial dropper
+                    // submits scale * delta on the tier's own upload
+                    // codec
+                    let snapshot = stores[tier_family[tier]]
                         .get(t_start)
                         .map_err(|e| anyhow!("{e} (trip {trip})"))?
                         .clone();
@@ -550,24 +605,24 @@ impl<'a> SimEngine<'a> {
                     let upload =
                         logic.run_round_with(self.backend, &snapshot, user, trip, codec, scale)?;
                     drop(snapshot);
-                    store.release(t_start);
+                    stores[tier_family[tier]].release(t_start);
                     let staleness = server.t() - t_start;
                     if partial.is_some() {
                         scenario.metrics.record_partial_upload(
                             tier,
                             staleness,
                             upload.msg.wire_bytes(),
-                            download_bytes,
+                            tier_download_bytes[tier],
                         );
                     } else {
                         scenario.metrics.record_upload(
                             tier,
                             staleness,
                             upload.msg.wire_bytes(),
-                            download_bytes,
+                            tier_download_bytes[tier],
                         );
                     }
-                    let produced: Option<Broadcast> = if edges.is_empty() {
+                    let produced: Option<Vec<Broadcast>> = if edges.is_empty() {
                         if let Some(j) = journal.as_mut() {
                             j.write(&JEvent::Ingest {
                                 time: clock,
@@ -616,8 +671,10 @@ impl<'a> SimEngine<'a> {
                         }
                     };
                     let stepped = produced.is_some();
-                    if let Some(b) = produced {
-                        store.publish(server.t(), server.client_snapshot());
+                    if let Some(bs) = produced {
+                        for (f, st) in stores.iter_mut().enumerate() {
+                            st.publish(server.t(), server.family_snapshot(f));
+                        }
                         let step_ev = JEvent::Step {
                             time: clock,
                             step: server.t(),
@@ -633,12 +690,18 @@ impl<'a> SimEngine<'a> {
                         slots_since_step = 0;
                         if let Some(j) = journal.as_mut() {
                             j.write(&step_ev)?;
-                            j.write(&JEvent::Broadcast {
-                                time: clock,
-                                step: b.t,
-                                absolute: b.absolute,
-                                payload: b.msg.payload,
-                            })?;
+                            // one broadcast event per downlink family,
+                            // family 0 first — replay checks each
+                            // payload bit-for-bit against its family
+                            for b in bs {
+                                j.write(&JEvent::Broadcast {
+                                    time: clock,
+                                    step: b.t,
+                                    absolute: b.absolute,
+                                    codec: b.codec as u64,
+                                    payload: b.msg.payload,
+                                })?;
+                            }
                         }
                         if tel.progress > 0 && server.t() % tel.progress == 0 {
                             if let Some(line) = progress_line(
@@ -709,7 +772,7 @@ impl<'a> SimEngine<'a> {
                                 ("partial", rng_json(partial_rng.state())),
                                 ("client", rng_json(logic.rng_state())),
                             ]);
-                            let state = Json::obj(vec![
+                            let mut state_fields = vec![
                                 ("clock", f64_json(clock)),
                                 ("seq", u64_json(queue.seq)),
                                 ("trips", u64_json(trips)),
@@ -726,12 +789,24 @@ impl<'a> SimEngine<'a> {
                                 ("rng", rng),
                                 ("arrival", f64s_json(&arrival.state())),
                                 ("heap", heap_json(&queue)),
-                                ("store", store_json(&store)),
+                                ("store", store_json(&stores[0])),
+                            ];
+                            if stores.len() > 1 {
+                                // extra family stores: conditional so
+                                // single-family checkpoints keep the
+                                // pre-family byte layout
+                                state_fields.push((
+                                    "store_extra",
+                                    Json::arr(stores[1..].iter().map(store_json).collect()),
+                                ));
+                            }
+                            state_fields.extend([
                                 ("metrics", scenario.metrics.to_json()),
                                 ("curve", curve_json(&curve)),
                                 ("reached", reached.map_or(Json::Null, |p| point_json(&p))),
                                 ("hidden_trace", f64s_json(&hidden_trace)),
                             ]);
+                            let state = Json::obj(state_fields);
                             j.write(&JEvent::Checkpoint {
                                 time: clock,
                                 step: server.t(),
@@ -779,7 +854,8 @@ impl<'a> SimEngine<'a> {
         scenario_metrics.mean_concurrency =
             if clock > 0.0 { in_flight_area / clock } else { 0.0 };
         scenario_metrics.max_in_flight = max_in_flight;
-        scenario_metrics.max_live_snapshots = store.max_live();
+        // total model vectors resident across all family stores
+        scenario_metrics.max_live_snapshots = stores.iter().map(|s| s.max_live()).sum();
         Ok((
             RunResult {
                 curve,
@@ -1291,6 +1367,77 @@ mod tests {
         // both tiers carried traffic and recorded transfer bytes
         assert!(sc.tiers[0].uploads > 0 && slow_m.uploads > 0);
         assert!(sc.tiers[0].download_bytes > 0);
+    }
+
+    #[test]
+    fn per_tier_downlink_codecs_split_broadcast_accounting() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.target_accuracy = 2.0; // fixed horizon
+        c.stop.max_server_steps = 60;
+        let mut fast = TierConfig::named("fast");
+        fast.weight = 0.5;
+        let mut slow = TierConfig::named("slow");
+        slow.weight = 0.5;
+        slow.quant_server = Some("qsgd:2".into());
+        c.scenario.tiers = vec![fast, slow];
+        c.validate().unwrap();
+        let r = SimEngine::new(&c, &b, 17).run().unwrap();
+        let sc = &r.scenario;
+        assert_eq!(sc.tiers.len(), 2);
+        // the default tier reports no downlink preset; the slow tier
+        // reports its resolved family codec
+        assert_eq!(sc.tiers[0].download_codec, "");
+        assert!(
+            sc.tiers[0].uploads > 0 && sc.tiers[1].uploads > 0,
+            "both tiers must carry traffic"
+        );
+        assert!(
+            sc.tiers[1].download_codec.starts_with("qsgd"),
+            "slow downlink codec: {:?}",
+            sc.tiers[1].download_codec
+        );
+        // every step broadcast once per family — comm totals double up
+        assert_eq!(r.comm.broadcasts, 2 * r.server_steps);
+        // distinct per-tier kB/download: each tier's downloads are
+        // billed at its own family's wire size (no dropouts/partials
+        // here, so downloads == uploads)
+        let per_dl =
+            |t: &crate::scenario::TierMetrics| t.download_bytes as f64 / t.uploads as f64;
+        assert!(
+            per_dl(&sc.tiers[1]) < per_dl(&sc.tiers[0]),
+            "2-bit downlink should be cheaper: {} vs {}",
+            per_dl(&sc.tiers[1]),
+            per_dl(&sc.tiers[0])
+        );
+    }
+
+    #[test]
+    fn duplicate_downlink_preset_keeps_single_family() {
+        // a quant_server preset equal to the resolved default dedups to
+        // family 0: same accounting and trajectory as no preset at all
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.target_accuracy = 2.0;
+        c.stop.max_server_steps = 60;
+        let mut fast = TierConfig::named("fast");
+        fast.weight = 0.5;
+        let mut slow = TierConfig::named("slow");
+        slow.weight = 0.5;
+        c.scenario.tiers = vec![fast, slow];
+        c.validate().unwrap();
+        let plain = SimEngine::new(&c, &b, 18).run().unwrap();
+        let mut cp = c.clone();
+        cp.scenario.tiers[1].quant_server = Some(c.quant.server.clone());
+        cp.validate().unwrap();
+        let preset = SimEngine::new(&cp, &b, 18).run().unwrap();
+        assert_eq!(preset.comm.broadcasts, plain.comm.broadcasts);
+        assert_eq!(preset.final_accuracy, plain.final_accuracy);
+        assert_eq!(preset.scenario.tiers[1].download_codec, "");
+        assert_eq!(
+            preset.scenario.tiers[1].download_bytes,
+            plain.scenario.tiers[1].download_bytes
+        );
     }
 
     #[test]

@@ -42,7 +42,8 @@ pub enum Event {
         config: Json,
     },
     /// Codec registry entry, in registration order (the wire contract:
-    /// ids are positional). `reg` is `"client"` or `"partial"`.
+    /// ids are positional). `reg` is `"client"`, `"server"` (downlink
+    /// family) or `"partial"`.
     Codec { reg: String, id: u64, spec: String },
     /// Initial model x^0 and the server's quantizer seed.
     Init { x0: Vec<f32>, server_seed: u64 },
@@ -99,12 +100,17 @@ pub enum Event {
         /// Cumulative stage timings at this step, when spans are on.
         stages: Option<StageTimings>,
     },
-    /// The broadcast emitted by a step. `absolute` marks DirectQuant
-    /// payloads (the model itself, not a hidden-state increment).
+    /// One broadcast emitted by a step — one event per downlink family,
+    /// family 0 first. `absolute` marks DirectQuant payloads (the model
+    /// itself, not a hidden-state increment); `codec` is the downlink
+    /// family id, serialized only when non-zero so single-family
+    /// journals stay byte-identical to the pre-family format (and old
+    /// journals parse as family 0).
     Broadcast {
         time: f64,
         step: u64,
         absolute: bool,
+        codec: u64,
         payload: Vec<u8>,
     },
     /// An evaluation point (sim only — the curve).
@@ -238,10 +244,13 @@ impl Event {
                     pairs.push(("stages", s.to_json()));
                 }
             }
-            Event::Broadcast { time, step, absolute, payload } => {
+            Event::Broadcast { time, step, absolute, codec, payload } => {
                 pairs.push(("time", Json::num(*time)));
                 pairs.push(("step", Json::num(*step as f64)));
                 pairs.push(("absolute", Json::Bool(*absolute)));
+                if *codec != 0 {
+                    pairs.push(("codec", Json::num(*codec as f64)));
+                }
                 pairs.push(("payload", Json::str(hex_bytes(payload))));
             }
             Event::Eval { time, step, uploads, val_loss, val_accuracy } => {
@@ -356,6 +365,13 @@ impl Event {
                 time: num(j, "time")?,
                 step: uint(j, "step")?,
                 absolute: boolean(j, "absolute")?,
+                codec: match j.get("codec") {
+                    Some(v) => v
+                        .as_f64()
+                        .map(|f| f as u64)
+                        .ok_or_else(|| anyhow!("event: 'codec' is not a number"))?,
+                    None => 0,
+                },
                 payload: parse_hex_bytes(&text(j, "payload")?)?,
             },
             "eval" => Event::Eval {
@@ -586,7 +602,14 @@ mod tests {
                 stale_max: 11,
                 stages: None,
             },
-            Event::Broadcast { time: 4.5, step: 7, absolute: false, payload: vec![1, 2, 3] },
+            Event::Broadcast {
+                time: 4.5,
+                step: 7,
+                absolute: false,
+                codec: 0,
+                payload: vec![1, 2, 3],
+            },
+            Event::Broadcast { time: 4.5, step: 7, absolute: true, codec: 2, payload: vec![4, 5] },
             Event::Eval { time: 5.0, step: 8, uploads: 24, val_loss: 0.3125, val_accuracy: 0.875 },
             Event::Checkpoint {
                 time: 6.0,
@@ -632,6 +655,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn broadcast_codec_key_only_appears_for_non_default_families() {
+        // byte-identity: family-0 broadcasts serialize exactly as the
+        // pre-family format did, and old lines parse as family 0
+        let b0 =
+            Event::Broadcast { time: 1.0, step: 2, absolute: false, codec: 0, payload: vec![9] };
+        assert!(!b0.to_line().contains("codec"));
+        let old =
+            "{\"ev\":\"broadcast\",\"time\":1,\"step\":2,\"absolute\":false,\"payload\":\"09\"}";
+        assert_eq!(Event::from_line(old).unwrap(), b0);
+        let b2 =
+            Event::Broadcast { time: 1.0, step: 2, absolute: false, codec: 2, payload: vec![9] };
+        assert!(b2.to_line().contains("\"codec\":2"));
     }
 
     #[test]

@@ -49,8 +49,9 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
     let mut cfg: Option<Config> = None;
     let mut meta_d = 0usize;
     let mut server: Option<Server> = None;
-    // a broadcast produced by an ingest, awaiting its journal event
-    let mut produced: Option<Broadcast> = None;
+    // broadcasts produced by an ingest-triggered step, awaiting their
+    // journal events (one per downlink family, family 0 first)
+    let mut produced: Vec<Broadcast> = Vec::new();
     // update slots since the last step (checked against Step.k)
     let mut slots: u64 = 0;
 
@@ -90,6 +91,7 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                 let s = server.as_mut().ok_or_else(|| at("codec before init"))?;
                 let got = match reg.as_str() {
                     "client" => s.register_client_codec(spec)?,
+                    "server" => s.register_server_codec(spec)?,
                     "partial" => s.register_partial_codec(spec)?,
                     other => bail!(at(&format!("unknown codec registry '{other}'"))),
                 } as u64;
@@ -102,7 +104,7 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
             }
             Event::Ingest { worker, codec, staleness, payload, .. } => {
                 let s = server.as_mut().ok_or_else(|| at("ingest before init"))?;
-                if produced.is_some() {
+                if !produced.is_empty() {
                     bail!(at("ingest while a produced broadcast is still unchecked"));
                 }
                 let msg = QuantizedMsg { payload: payload.clone(), d: s.d() };
@@ -111,7 +113,7 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                     anyhow!("journal event {i}: ingest from worker {worker} failed: {e}")
                 })? {
                     ServerStep::Buffered => {}
-                    ServerStep::Stepped(b) => produced = Some(b),
+                    ServerStep::Stepped(b) => produced = b,
                 }
                 report.uploads += 1;
             }
@@ -127,7 +129,7 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                 ..
             } => {
                 let s = server.as_mut().ok_or_else(|| at("ingest before init"))?;
-                if produced.is_some() {
+                if !produced.is_empty() {
                     bail!(at("ingest while a produced broadcast is still unchecked"));
                 }
                 let msg = QuantizedMsg { payload: payload.clone(), d: s.d() };
@@ -144,7 +146,7 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                         anyhow!("journal event {i}: partial from edge {worker} failed: {e}")
                     })? {
                     ServerStep::Buffered => {}
-                    ServerStep::Stepped(b) => produced = Some(b),
+                    ServerStep::Stepped(b) => produced = b,
                 }
                 report.uploads += 1;
             }
@@ -170,15 +172,23 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                 slots = 0;
                 report.steps += 1;
             }
-            Event::Broadcast { step, absolute, payload, .. } => {
-                let b = produced
-                    .take()
-                    .ok_or_else(|| at("broadcast event without a produced broadcast"))?;
+            Event::Broadcast { step, absolute, codec, payload, .. } => {
+                if produced.is_empty() {
+                    bail!(at("broadcast event without a produced broadcast"));
+                }
+                let b = produced.remove(0);
                 if b.t != *step {
                     bail!(at(&format!("broadcast at t={} but journal says {step}", b.t)));
                 }
                 if b.absolute != *absolute {
                     bail!(at("broadcast absolute flag diverged"));
+                }
+                if b.codec as u64 != *codec {
+                    bail!(at(&format!(
+                        "broadcast family diverged at step {step}: replay \
+                         produced family {}, journal says {codec}",
+                        b.codec
+                    )));
                 }
                 if &b.msg.payload != payload {
                     bail!(at(&format!(
@@ -196,6 +206,12 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                 let s = server.as_ref().ok_or_else(|| at("final before init"))?;
                 if i + 1 != events.len() {
                     bail!(at("final event is not the last event"));
+                }
+                if !produced.is_empty() {
+                    bail!(at(&format!(
+                        "final event with {} unchecked broadcasts",
+                        produced.len()
+                    )));
                 }
                 if s.t() != *step {
                     bail!(at(&format!("final step {step} but replay reached t={}", s.t())));
@@ -278,7 +294,7 @@ mod tests {
                 staleness: round % 2,
                 payload: msg.payload.clone(),
             });
-            if let ServerStep::Stepped(b) =
+            if let ServerStep::Stepped(bs) =
                 server.ingest_from(&msg, round % 2, codec as usize).unwrap()
             {
                 events.push(Event::Step {
@@ -292,12 +308,15 @@ mod tests {
                     stale_max: server.staleness_max,
                     stages: None,
                 });
-                events.push(Event::Broadcast {
-                    time: round as f64,
-                    step: b.t,
-                    absolute: b.absolute,
-                    payload: b.msg.payload,
-                });
+                for b in bs {
+                    events.push(Event::Broadcast {
+                        time: round as f64,
+                        step: b.t,
+                        absolute: b.absolute,
+                        codec: b.codec as u64,
+                        payload: b.msg.payload,
+                    });
+                }
             }
         }
         events.push(Event::Final {
@@ -334,6 +353,114 @@ mod tests {
         let back: Vec<Event> =
             lines.iter().map(|l| Event::from_line(l).unwrap()).collect();
         assert_eq!(replay_events(&back).unwrap(), report);
+    }
+
+    /// Record a run with a second downlink family (per-tier
+    /// `quant_server` preset): every step emits one broadcast per
+    /// family, journaled family 0 first with its family id.
+    fn record_multi_family_run(tamper_family: bool) -> Vec<Event> {
+        let mut cfg = Config::default();
+        cfg.fl.buffer_size = 2;
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:4".into();
+        let d = 96 + 5;
+        let seed = 13u64;
+        let mut server = Server::build(&cfg, vec![0.0; d], seed).unwrap();
+        let mut events = vec![
+            Event::Meta {
+                runtime: "sim".into(),
+                algorithm: cfg.fl.algorithm.name().into(),
+                d: d as u64,
+                seed,
+                fingerprint: crate::telemetry::run_fingerprint(&cfg, seed),
+                git: None,
+                config: cfg.to_json(),
+            },
+            Event::Init { x0: vec![0.0; d], server_seed: seed },
+        ];
+        let fam = server.register_server_codec("qsgd:2").unwrap();
+        assert_eq!(fam, 1);
+        events.push(Event::Codec { reg: "server".into(), id: fam as u64, spec: "qsgd:2".into() });
+
+        let qc = parse_spec("qsgd:8").unwrap();
+        let mut rng = Prng::new(5);
+        for round in 0..6u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.07 + round as f32).cos()).collect();
+            let msg = qc.quantize(&delta, &mut rng);
+            events.push(Event::Ingest {
+                time: round as f64,
+                step: server.t(),
+                worker: round,
+                codec: 0,
+                staleness: 0,
+                payload: msg.payload.clone(),
+            });
+            if let ServerStep::Stepped(bs) = server.ingest_from(&msg, 0, 0).unwrap() {
+                assert_eq!(bs.len(), 2, "one broadcast per family");
+                events.push(Event::Step {
+                    time: round as f64,
+                    step: server.t(),
+                    k: 2,
+                    uploads: server.comm.uploads,
+                    upload_bytes: server.comm.upload_bytes,
+                    broadcast_bytes: server.comm.broadcast_bytes,
+                    stale_mean: server.staleness_mean(),
+                    stale_max: server.staleness_max,
+                    stages: None,
+                });
+                for b in bs {
+                    events.push(Event::Broadcast {
+                        time: round as f64,
+                        step: b.t,
+                        absolute: b.absolute,
+                        codec: b.codec as u64,
+                        payload: b.msg.payload,
+                    });
+                }
+            }
+        }
+        events.push(Event::Final {
+            step: server.t(),
+            uploads: server.comm.uploads,
+            upload_bytes: server.comm.upload_bytes,
+            broadcasts: server.comm.broadcasts,
+            broadcast_bytes: server.comm.broadcast_bytes,
+            model: server.model().to_vec(),
+        });
+        if tamper_family {
+            // swap a family-1 broadcast's recorded family id
+            for ev in events.iter_mut() {
+                if let Event::Broadcast { codec, .. } = ev {
+                    if *codec == 1 {
+                        *codec = 0;
+                        break;
+                    }
+                }
+            }
+        }
+        events
+    }
+
+    #[test]
+    fn multi_family_run_replays_per_family_broadcasts() {
+        let events = record_multi_family_run(false);
+        let report = replay_events(&events).unwrap();
+        assert_eq!(report.steps, 3);
+        assert_eq!(report.broadcasts_checked, 6, "two families per step");
+        assert!(report.finalized);
+        // survives the JSONL round trip (including the codec field)
+        let lines: Vec<String> = events.iter().map(Event::to_line).collect();
+        let back: Vec<Event> =
+            lines.iter().map(|l| Event::from_line(l).unwrap()).collect();
+        assert_eq!(replay_events(&back).unwrap(), report);
+    }
+
+    #[test]
+    fn tampered_broadcast_family_fails_the_replay() {
+        let events = record_multi_family_run(true);
+        let err = replay_events(&events).unwrap_err().to_string();
+        assert!(err.contains("family diverged"), "{err}");
     }
 
     #[test]

@@ -251,7 +251,7 @@ fn tcp_trivial_tree_broadcasts_bit_identical_to_flat_server() {
         );
         let staleness = reference.t(); // == round; t_start was 0
         let b = match reference.ingest_from(&msg, staleness, 0).unwrap() {
-            ServerStep::Stepped(b) => b,
+            ServerStep::Stepped(mut b) => b.remove(0),
             other => panic!("K=1 must step, got {other:?}"),
         };
         let bcast = read_frame(&mut sock);

@@ -1,0 +1,228 @@
+//! Budgeted broadcast fan-out regression tests (ISSUE 8):
+//!
+//! * a consumer that stops reading its socket cannot make the leader
+//!   buffer frames unboundedly: with `net.broadcast_budget_bytes` set,
+//!   its writer queue evicts superseded frames (bounded memory), the
+//!   step loop never stalls behind it (the live worker keeps receiving
+//!   every broadcast promptly — the test would hang otherwise), and
+//!   once the consumer drains again it reconverges **bit-exactly**
+//!   through the per-family `UpdateLog` catch-up: replayed increments
+//!   or a full-state `Sync` frame;
+//! * a peer that connects and stalls mid-handshake fails alone: other
+//!   workers' joins complete while it burns its own grace deadline
+//!   (handshakes run on per-connection threads, not a serial accept
+//!   loop).
+
+use qafel::config::{Algorithm, Config};
+use qafel::coordinator::client::HiddenReplica;
+use qafel::coordinator::Broadcast;
+use qafel::net::{Leader, Message};
+use qafel::quant::{parse_spec, QuantizedMsg};
+use qafel::util::pool::ShardPool;
+use qafel::util::prng::Prng;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Read one raw frame (length prefix + body), returning the body bytes.
+fn read_frame(s: &mut TcpStream) -> Vec<u8> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).unwrap();
+    let n = u32::from_le_bytes(len) as usize;
+    let mut body = vec![0u8; n];
+    s.read_exact(&mut body).unwrap();
+    body
+}
+
+/// Write one raw frame around the given body bytes.
+fn write_frame(s: &mut TcpStream, body: &[u8]) {
+    s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+}
+
+/// Big enough that the run's broadcast volume (~26 MiB of identity
+/// frames) overflows loopback socket buffering: the stalled worker's
+/// writer genuinely blocks and its queue must evict.
+const D: usize = 16384;
+const STEPS: u64 = 400;
+
+fn budget_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = "none".into();
+    c.quant.server = "none".into();
+    c.fl.buffer_size = 1;
+    c.fl.client_lr = 0.05;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.stop.max_server_steps = STEPS;
+    c.stop.max_uploads = 1_000_000;
+    c.net.v1_grace_ms = 2000;
+    // room for ~3 of the ~64 KiB identity frames per writer queue
+    c.net.broadcast_budget_bytes = 200_000;
+    c
+}
+
+/// v2 handshake over a raw socket; returns (worker_id, x0, server_quant).
+fn hello(sock: &mut TcpStream) -> (u32, Vec<f32>, String) {
+    let h = Message::Hello { version: 2, tier: None, quant_client: None };
+    write_frame(sock, &h.encode());
+    match Message::decode(&read_frame(sock)).unwrap() {
+        Message::JoinV2 { worker_id, x0, server_quant, server_codec_id, .. } => {
+            assert_eq!(server_codec_id, 0, "no tier: default downlink family");
+            (worker_id, x0, server_quant)
+        }
+        other => panic!("expected JoinV2, got {other:?}"),
+    }
+}
+
+/// Apply one wire broadcast to a client-side hidden replica.
+fn apply_broadcast(rep: &mut HiddenReplica, t: u64, absolute: bool, payload: Vec<u8>) {
+    let b = Broadcast {
+        t,
+        bytes: payload.len(),
+        msg: QuantizedMsg { payload, d: D },
+        absolute,
+        codec: 0,
+    };
+    rep.apply(&b).unwrap();
+}
+
+#[test]
+fn slow_consumer_bounded_queue_reconverges_via_catch_up() {
+    let cfg = budget_cfg();
+    let x0: Vec<f32> = (0..D).map(|i| (i as f32 * 0.001).sin()).collect();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || {
+        Leader::new(leader_cfg, leader_x0, 11).run_on(listener, 2).unwrap()
+    });
+
+    // worker 0 drives every step and drains promptly; worker 1 joins,
+    // then never reads its socket until the run is over
+    let mut fast = TcpStream::connect(&addr).unwrap();
+    fast.set_nodelay(true).unwrap();
+    let (fast_id, fast_x0, fast_sq) = hello(&mut fast);
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    let (slow_id, slow_x0, slow_sq) = hello(&mut slow);
+    assert_eq!(fast_sq, "none");
+    assert_eq!(slow_sq, "none");
+
+    let pool = ShardPool::new(1);
+    let mut fast_rep = HiddenReplica::with_spec("none", fast_x0, pool.clone()).unwrap();
+    let mut slow_rep = HiddenReplica::with_spec("none", slow_x0, pool).unwrap();
+
+    let codec = parse_spec("none").unwrap();
+    let mut rng = Prng::new(3);
+    for round in 0..STEPS {
+        let delta: Vec<f32> =
+            (0..D).map(|i| ((i as f64 * 0.37 + round as f64).cos() * 0.1) as f32).collect();
+        let msg = codec.quantize(&delta, &mut rng);
+        let up = Message::update_v2_from(fast_id, fast_rep.t, round, 0.0, 0, &msg);
+        write_frame(&mut fast, &up.encode());
+        match Message::decode(&read_frame(&mut fast)).unwrap() {
+            Message::Broadcast { t, absolute, payload } => {
+                apply_broadcast(&mut fast_rep, t, absolute, payload);
+            }
+            other => panic!("round {round}: expected Broadcast, got {other:?}"),
+        }
+    }
+    assert_eq!(fast_rep.t, STEPS);
+    assert!(matches!(Message::decode(&read_frame(&mut fast)).unwrap(), Message::Shutdown));
+    write_frame(&mut fast, &Message::Bye { worker_id: fast_id, uploads: STEPS }.encode());
+    drop(fast);
+
+    // the stalled worker wakes up after the run and drains everything:
+    // whatever the budget kept, folded gaps arriving as catch-up
+    // increments and/or full-state Sync frames
+    let mut syncs = 0u64;
+    loop {
+        match Message::decode(&read_frame(&mut slow)).unwrap() {
+            Message::Broadcast { t, absolute, payload } => {
+                apply_broadcast(&mut slow_rep, t, absolute, payload);
+            }
+            Message::Sync { t, x } => {
+                slow_rep.resync(t, x).unwrap();
+                syncs += 1;
+            }
+            Message::Shutdown => break,
+            other => panic!("unexpected frame for the stalled worker: {other:?}"),
+        }
+    }
+    write_frame(&mut slow, &Message::Bye { worker_id: slow_id, uploads: 0 }.encode());
+    drop(slow);
+
+    let report = leader.join().unwrap();
+    assert_eq!(report.server_steps, STEPS);
+
+    // the stalled replica caught all the way up, bit-identical to the
+    // replica that followed the live stream frame by frame
+    assert_eq!(slow_rep.t, STEPS);
+    assert_eq!(slow_rep.state(), fast_rep.state(), "catch-up diverged from the live stream");
+
+    let fast_ws = &report.worker_stats[fast_id as usize];
+    let slow_ws = &report.worker_stats[slow_id as usize];
+    // the live worker saw every broadcast + Shutdown, nothing skipped
+    assert_eq!(fast_ws.broadcast_frames, STEPS + 1);
+    assert_eq!(fast_ws.skipped_broadcasts, 0);
+    assert_eq!(fast_ws.catch_up_frames, 0);
+    assert_eq!(fast_ws.full_syncs, 0);
+    // the stalled worker's queue stayed within budget by evicting, and
+    // the gap was folded instead of being replayed frame by frame. An
+    // identity downlink retains a single increment (C_max = 1), so the
+    // folds here must ship full-state Syncs.
+    assert!(slow_ws.skipped_broadcasts > 0, "budget never evicted: {slow_ws:?}");
+    assert!(slow_ws.catch_up_frames > 0, "no catch-up frames: {slow_ws:?}");
+    assert!(slow_ws.full_syncs > 0, "expected at least one full-state Sync: {slow_ws:?}");
+    assert_eq!(slow_ws.full_syncs, syncs, "leader accounting vs frames actually received");
+    assert!(
+        slow_ws.broadcast_frames < fast_ws.broadcast_frames,
+        "the stalled worker should receive fewer frames: {} vs {}",
+        slow_ws.broadcast_frames,
+        fast_ws.broadcast_frames
+    );
+}
+
+#[test]
+fn stalled_handshake_does_not_block_other_joins() {
+    let mut cfg = Config::default();
+    cfg.fl.algorithm = Algorithm::Qafel;
+    cfg.quant.client = "qsgd:8".into();
+    cfg.quant.server = "qsgd:8".into();
+    cfg.stop.max_server_steps = 1;
+    cfg.net.v1_grace_ms = 3000;
+    let x0 = vec![0.0f32; 8];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || Leader::new(cfg, x0, 1).run_on(listener, 2));
+
+    // peer A connects first and sends a partial frame, then stalls.
+    // Under a serial accept loop every later join would wait out A's
+    // 3 s grace; with per-connection handshake threads only A pays it.
+    let mut stalled = TcpStream::connect(&addr).unwrap();
+    stalled.write_all(&[7, 0]).unwrap(); // 2 bytes of a 4-byte length prefix
+    stalled.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // A is accepted first
+
+    // peer B is a well-behaved v2 worker; its JoinV2 must arrive while
+    // A is still wedged (well inside A's grace window)
+    let mut ok = TcpStream::connect(&addr).unwrap();
+    let h = Message::Hello { version: 2, tier: None, quant_client: None };
+    write_frame(&mut ok, &h.encode());
+    ok.set_read_timeout(Some(Duration::from_millis(1500))).unwrap();
+    match Message::decode(&read_frame(&mut ok)).unwrap() {
+        Message::JoinV2 { worker_id, .. } => assert_eq!(worker_id, 1),
+        other => panic!("expected JoinV2, got {other:?}"),
+    }
+
+    // A's own deadline still fires: the leader aborts naming worker 0
+    let err = leader.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("worker 0"), "error should name the stalled peer: {err}");
+    assert!(err.contains("handshake deadline"), "{err}");
+    drop(stalled);
+    drop(ok);
+}

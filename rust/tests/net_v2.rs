@@ -243,7 +243,7 @@ fn v1_worker_served_bit_identically_golden() {
         );
         let staleness = reference.t().saturating_sub(round);
         let b = match reference.ingest(&msg, staleness).unwrap() {
-            ServerStep::Stepped(b) => b,
+            ServerStep::Stepped(mut b) => b.remove(0),
             other => panic!("K=1 must step, got {other:?}"),
         };
         let bcast = read_frame(&mut sock);

@@ -48,7 +48,7 @@ fn drive(server: &mut Server, qc: &str, seed: u64, rounds: u64) -> Vec<Vec<u8>> 
             (0..d).map(|i| ((i as f64 * 0.13 + round as f64).cos() * 0.2) as f32).collect();
         let msg = codec.quantize(&delta, &mut rng);
         if let ServerStep::Stepped(b) = server.ingest(&msg, round % 4).unwrap() {
-            broadcasts.push(b.msg.payload);
+            broadcasts.extend(b.into_iter().map(|bc| bc.msg.payload));
         }
     }
     broadcasts

@@ -647,6 +647,10 @@ fn golden_nopreset_tiers_bit_identical_to_pr3_engine() {
     let cfg = hetero_cfg();
     cfg.validate().unwrap();
     assert!(cfg.scenario.tiers.iter().all(|t| t.quant_client.is_none()));
+    // also pins the per-tier-downlink refactor: without quant_server
+    // presets there is exactly one downlink family and the engine must
+    // stay bit-identical to the single-broadcast reference below
+    assert!(cfg.scenario.tiers.iter().all(|t| t.quant_server.is_none()));
     assert!(cfg.scenario.tiers.iter().all(|t| t.partial_work == 0.0));
     for seed in [21u64, 4] {
         let b = backend(17);

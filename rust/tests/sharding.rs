@@ -201,10 +201,10 @@ fn assert_servers_identical(client: &str, server: &str, d: usize, seed: u64, sha
         match (r1, r2) {
             (ServerStep::Stepped(b1), ServerStep::Stepped(b2)) => {
                 assert_eq!(
-                    b1.msg.payload, b2.msg.payload,
+                    b1[0].msg.payload, b2[0].msg.payload,
                     "{client}/{server} d={d} S={shards}: broadcast bytes"
                 );
-                assert_eq!(b1.t, b2.t);
+                assert_eq!(b1[0].t, b2[0].t);
             }
             (ServerStep::Buffered, ServerStep::Buffered) => {}
             _ => panic!("{client}/{server} d={d} S={shards}: step/buffer divergence"),
@@ -306,8 +306,8 @@ fn directquant_sharded_matches_sequential() {
         let r1 = s1.ingest(&msg, 0).unwrap();
         let r4 = s4.ingest(&msg, 0).unwrap();
         if let (ServerStep::Stepped(b1), ServerStep::Stepped(b4)) = (r1, r4) {
-            assert!(b1.absolute && b4.absolute);
-            assert_eq!(b1.msg.payload, b4.msg.payload, "round {round}");
+            assert!(b1[0].absolute && b4[0].absolute);
+            assert_eq!(b1[0].msg.payload, b4[0].msg.payload, "round {round}");
         }
     }
     assert_eq!(s1.model(), s4.model());

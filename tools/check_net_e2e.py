@@ -13,7 +13,20 @@ check asserts, from the leader's JSON report:
   wire frames and expected_bytes_per_upload comes from the codec
   formula — two independent measurements;
 * the set of negotiated per-worker codecs is exactly the requested one;
-* per-worker totals sum to the server's totals.
+* per-worker totals sum to the server's totals;
+* downlink byte accounting is exact per worker: a Broadcast frame is
+  `expected_bytes_per_download + 18` on the wire (4 B length prefix +
+  14 B header) and the Shutdown frame is 5 B, so a worker whose folds
+  never shipped a full-state `Sync` must show `broadcast_bytes ==
+  steps * (expected_bytes_per_download + 18) + 5` — catch-up
+  *increments* replay the exact evicted payloads, so the formula
+  survives budget evictions; only a `Sync` (17 B + 4 B/coordinate)
+  changes it;
+* skip/fold consistency under `net.broadcast_budget_bytes`: skipped
+  broadcasts imply catch-up frames (the throttled worker's gap was
+  folded, not dropped), and catch-up frames imply skips;
+* with `--downlinks`, the negotiated per-tier downlink codec multiset
+  (`server_codec`) is exactly the requested one.
 
 Tree mode (`--edge report.json`, repeatable): the root's "workers" are
 edge leaders forwarding `UpdatePartial` frames. Each `--edge` file is a
@@ -50,6 +63,8 @@ def main() -> int:
     ap.add_argument("--steps", type=int, required=True)
     ap.add_argument("--workers", type=int, required=True)
     ap.add_argument("--codecs", required=True, help="comma-separated expected codec multiset")
+    ap.add_argument("--downlinks", default=None,
+                    help="comma-separated expected downlink codec multiset (server_codec)")
     ap.add_argument("--max-grad-ratio", type=float, default=0.9)
     ap.add_argument("--edge", action="append", default=[],
                     help="edge-leader report JSON (tree mode; one per root worker)")
@@ -86,6 +101,11 @@ def main() -> int:
     want_codecs = sorted(args.codecs.split(","))
     check(got_codecs == want_codecs,
           f"negotiated codecs {got_codecs} != requested {want_codecs}")
+    if args.downlinks is not None:
+        got_down = sorted(w.get("server_codec", "?") for w in workers)
+        want_down = sorted(args.downlinks.split(","))
+        check(got_down == want_down,
+              f"negotiated downlink codecs {got_down} != requested {want_down}")
 
     total_uploads = 0
     total_bytes = 0
@@ -106,9 +126,40 @@ def main() -> int:
         else:
             check(w.get("partials", 0) == 0,
                   f"worker {wid}: unexpected partials {w.get('partials')} in a flat run")
-        # every live worker's writer delivered all broadcasts + Shutdown
-        check(w.get("broadcast_frames") == args.steps + 1,
-              f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} != {args.steps + 1}")
+        # downlink accounting: Broadcast frame = payload + 18 B, Shutdown
+        # frame = 5 B, Sync frame = 17 B + 4 B/coordinate. Catch-up
+        # increments replay the exact evicted payloads, so unless a fold
+        # shipped a full-state Sync both formulas hold exactly even for
+        # a throttled worker under a broadcast budget.
+        down = w.get("expected_bytes_per_download", 0)
+        check(down > 0, f"worker {wid}: bad expected_bytes_per_download {down!r}")
+        skipped = w.get("skipped_broadcasts", 0)
+        folds = w.get("catch_up_frames", 0)
+        syncs = w.get("full_syncs", 0)
+        clean_bytes = args.steps * (down + 18) + 5
+        if syncs == 0:
+            check(w.get("broadcast_frames") == args.steps + 1,
+                  f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} "
+                  f"!= {args.steps + 1}")
+            check(w.get("broadcast_bytes") == clean_bytes,
+                  f"worker {wid} ({w.get('server_codec')}): broadcast_bytes "
+                  f"{w.get('broadcast_bytes')} != {args.steps} x ({down} + 18) + 5")
+        else:
+            # full-state syncs compress runs of steps into one frame
+            check(w.get("broadcast_frames") <= args.steps + 1,
+                  f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} "
+                  f"> {args.steps + 1} despite {syncs} full syncs")
+            sync_frame = 17 + 4 * doc.get("d", 0)
+            check(w.get("broadcast_bytes") <= clean_bytes + syncs * sync_frame,
+                  f"worker {wid}: broadcast_bytes {w.get('broadcast_bytes')} exceeds "
+                  f"{clean_bytes} + {syncs} x {sync_frame}")
+        # skipped frames are always folded into a catch-up, never dropped
+        check(skipped == 0 or folds > 0,
+              f"worker {wid}: {skipped} skipped broadcasts but no catch-up frames")
+        check(folds == 0 or skipped > 0,
+              f"worker {wid}: {folds} catch-up frames without any skipped broadcast")
+        check(syncs == 0 or folds > 0,
+              f"worker {wid}: {syncs} full syncs without any catch-up frame")
         total_uploads += uploads
         total_bytes += w.get("upload_bytes", 0)
     check(total_uploads == doc.get("uploads"),
