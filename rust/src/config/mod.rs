@@ -255,6 +255,50 @@ impl Default for AggregatorsConfig {
     }
 }
 
+/// The adaptive-quantization control loop (`[net.adaptive]` on the TCP
+/// leader, `[scenario.adaptive]` in the simulator; ARCHITECTURE.md
+/// §Adaptive quantization control loop). Every `interval` server steps the
+/// controller scores each worker (tier, in the simulator) by its
+/// announced bandwidth hint or observed upload rate and walks the
+/// slowest ones down the `levels` ladder until the projected uplink
+/// traffic fits `budget_bytes_per_step`, switching codecs mid-run via
+/// `Rekey` frames. Disabled by default — an absent table leaves every
+/// run bit-identical to the static-codec engine.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Master switch. `false` (the default) means no controller runs
+    /// and no `Rekey` frame is ever sent.
+    pub enabled: bool,
+    /// Controller cadence: re-evaluate codec assignments every this
+    /// many server steps (>= 1).
+    pub interval: u64,
+    /// Global uplink budget in bytes per server step. The controller
+    /// downshifts workers until `sum(rate_w x bytes_w) <= budget`
+    /// (projected over the next interval). Must be > 0 when enabled.
+    pub budget_bytes_per_step: u64,
+    /// Codec ladder as a comma-separated string of `quant::parse_spec`
+    /// specs, e.g. `"qsgd:8,qsgd:4,qsgd:2,top:0.05"` (stored split).
+    /// The controller sorts it by encoded size at runtime; order in
+    /// the config is cosmetic. Must be non-empty when enabled.
+    pub levels: Vec<String>,
+    /// A worker (tier) is only eligible for a switch once it has at
+    /// least this many uploads in the current observation window —
+    /// protects cold workers from being downshifted on no data.
+    pub min_uploads: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: false,
+            interval: 10,
+            budget_bytes_per_step: 0,
+            levels: Vec::new(),
+            min_uploads: 1,
+        }
+    }
+}
+
 /// The `[scenario]` table: client-population model for the simulator
 /// (DESIGN_SCENARIOS.md). When `tiers` is empty the `sim.arrival` /
 /// `sim.duration*` knobs desugar to a single-tier scenario, keeping old
@@ -290,6 +334,11 @@ pub struct ScenarioConfig {
     pub tier_user_pools: bool,
     /// Optional tree-of-leaders layer (`[scenario.aggregators]`).
     pub aggregators: AggregatorsConfig,
+    /// Optional adaptive-quantization controller
+    /// (`[scenario.adaptive]`): per-tier mid-run codec switches under
+    /// a global uplink budget, mirroring the TCP leader's
+    /// `net.adaptive` policy.
+    pub adaptive: AdaptiveConfig,
 }
 
 impl Default for ScenarioConfig {
@@ -303,6 +352,7 @@ impl Default for ScenarioConfig {
             tiers: Vec::new(),
             tier_user_pools: false,
             aggregators: AggregatorsConfig::default(),
+            adaptive: AdaptiveConfig::default(),
         }
     }
 }
@@ -355,6 +405,10 @@ pub struct NetConfig {
     /// the retained increments (or one bounded full-state sync) from the
     /// per-codec `UpdateLog` instead of every individual frame.
     pub broadcast_budget_bytes: u64,
+    /// Leader-side adaptive-quantization controller (`[net.adaptive]`):
+    /// mid-run per-worker codec switches via `Rekey` frames, driven by
+    /// the per-worker byte accounting the leader already keeps.
+    pub adaptive: AdaptiveConfig,
 }
 
 impl Default for NetConfig {
@@ -369,6 +423,7 @@ impl Default for NetConfig {
             edge_buffer: 1,
             partial_codec: "none".into(),
             broadcast_budget_bytes: 0,
+            adaptive: AdaptiveConfig::default(),
         }
     }
 }
@@ -594,6 +649,9 @@ impl Config {
             self.net.broadcast_budget_bytes,
             u64
         );
+        if let Some(a) = doc.at(&["net", "adaptive"]) {
+            apply_adaptive(&mut self.net.adaptive, a, "net.adaptive")?;
+        }
 
         get_num!(doc, &["data", "num_users"], self.data.num_users, usize);
         get_num!(doc, &["data", "seed"], self.data.seed, u64);
@@ -705,10 +763,13 @@ impl Config {
                         .ok_or_else(|| anyhow!("scenario.tier_user_pools must be a bool"))?;
                 }
                 "aggregators" => self.apply_aggregators(val)?,
+                "adaptive" => {
+                    apply_adaptive(&mut self.scenario.adaptive, val, "scenario.adaptive")?;
+                }
                 other => bail!(
                     "unknown [scenario] key '{other}' \
                      (known: arrival, sampling, burst_factor, burst_on, burst_off, tiers, \
-                      tier_user_pools, aggregators)"
+                      tier_user_pools, aggregators, adaptive)"
                 ),
             }
         }
@@ -869,6 +930,11 @@ impl Config {
             ("tier_user_pools", Json::Bool(self.scenario.tier_user_pools)),
             ("aggregators", aggregators),
         ];
+        if self.scenario.adaptive.enabled {
+            // Emitted only when enabled: an adaptive-off config keeps
+            // its pre-adaptive fingerprint byte-identical.
+            scenario.push(("adaptive", adaptive_to_json(&self.scenario.adaptive)));
+        }
         if let Some(a) = &self.scenario.arrival {
             scenario.push(("arrival", Json::str(a)));
         }
@@ -918,6 +984,9 @@ impl Config {
         }
         if let Some(u) = &self.net.upstream {
             net.push(("upstream", Json::str(u)));
+        }
+        if self.net.adaptive.enabled {
+            net.push(("adaptive", adaptive_to_json(&self.net.adaptive)));
         }
         let data = Json::obj(vec![
             ("num_users", num(self.data.num_users as f64)),
@@ -1015,6 +1084,8 @@ impl Config {
         }
         crate::quant::parse_spec(&self.net.partial_codec)
             .map_err(|e| anyhow!("bad net.partial_codec spec '{}': {e}", self.net.partial_codec))?;
+        validate_adaptive(&self.net.adaptive, "net.adaptive")?;
+        validate_adaptive(&self.scenario.adaptive, "scenario.adaptive")?;
         if self.telemetry.checkpoint_every > 0 && self.telemetry.journal.is_none() {
             bail!("telemetry.checkpoint_every needs telemetry.journal (checkpoints live in it)");
         }
@@ -1115,6 +1186,77 @@ impl Config {
 /// Numeric config cell with a path-qualified error.
 fn scalar(v: &Json, what: &str) -> Result<f64> {
     v.as_f64().ok_or_else(|| anyhow!("config {what} must be a number"))
+}
+
+/// Overlay an `[net.adaptive]` / `[scenario.adaptive]` sub-table.
+/// Unknown keys are rejected loudly, like the other strict sub-tables.
+fn apply_adaptive(dst: &mut AdaptiveConfig, doc: &Json, what: &str) -> Result<()> {
+    let obj = doc.as_obj().ok_or_else(|| anyhow!("[{what}] must be a table"))?;
+    for (key, val) in obj {
+        let path = format!("{what}.{key}");
+        match key.as_str() {
+            "enabled" => {
+                dst.enabled =
+                    val.as_bool().ok_or_else(|| anyhow!("config {path} must be a bool"))?;
+            }
+            "interval" => dst.interval = scalar(val, &path)? as u64,
+            "budget_bytes_per_step" => {
+                dst.budget_bytes_per_step = scalar(val, &path)? as u64;
+            }
+            "min_uploads" => dst.min_uploads = scalar(val, &path)? as u64,
+            "levels" => {
+                // Comma-separated codec ladder (the vendored TOML
+                // parser keeps config values scalar-or-table).
+                let s = val.as_str().ok_or_else(|| {
+                    anyhow!("config {path} must be a comma-separated string of codec specs")
+                })?;
+                dst.levels = s
+                    .split(',')
+                    .map(|p| p.trim().to_string())
+                    .filter(|p| !p.is_empty())
+                    .collect();
+            }
+            other => bail!(
+                "unknown [{what}] key '{other}' \
+                 (known: enabled, interval, budget_bytes_per_step, levels, min_uploads)"
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// Validate one adaptive-controller table (only when enabled — a
+/// disabled controller may carry any half-edited knob values).
+fn validate_adaptive(a: &AdaptiveConfig, what: &str) -> Result<()> {
+    if !a.enabled {
+        return Ok(());
+    }
+    if a.interval == 0 {
+        bail!("{what}.interval must be >= 1 when the controller is enabled");
+    }
+    if a.budget_bytes_per_step == 0 {
+        bail!("{what}.budget_bytes_per_step must be > 0 when the controller is enabled");
+    }
+    if a.levels.is_empty() {
+        bail!("{what}.levels must list at least one codec spec when the controller is enabled");
+    }
+    for spec in &a.levels {
+        crate::quant::parse_spec(spec)
+            .map_err(|e| anyhow!("bad {what}.levels spec '{spec}': {e}"))?;
+    }
+    Ok(())
+}
+
+/// The adaptive table as a TOML-shaped JSON object (levels re-joined
+/// into the comma-separated form `apply_adaptive` parses).
+fn adaptive_to_json(a: &AdaptiveConfig) -> Json {
+    Json::obj(vec![
+        ("enabled", Json::Bool(a.enabled)),
+        ("interval", Json::num(a.interval as f64)),
+        ("budget_bytes_per_step", Json::num(a.budget_bytes_per_step as f64)),
+        ("levels", Json::str(&a.levels.join(","))),
+        ("min_uploads", Json::num(a.min_uploads as f64)),
+    ])
 }
 
 #[cfg(test)]
@@ -1493,6 +1635,91 @@ mod tests {
         let mut c = Config::default();
         c.net.partial_codec = "qsgd:x".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_knobs_round_trip_and_validate() {
+        // defaults: both controllers off, invisible in the resolved doc
+        let c = Config::default();
+        assert!(!c.net.adaptive.enabled);
+        assert!(!c.scenario.adaptive.enabled);
+        assert_eq!(c.net.adaptive.interval, 10);
+        assert_eq!(c.net.adaptive.min_uploads, 1);
+        assert!(c.net.adaptive.levels.is_empty());
+        assert!(
+            !c.to_json().to_string().contains("adaptive"),
+            "adaptive-off configs must keep their pre-adaptive fingerprint"
+        );
+        c.validate().unwrap();
+
+        // TOML overlay reaches both tables; levels split on commas
+        let doc = toml::parse(
+            "[net.adaptive]\nenabled = true\ninterval = 5\n\
+             budget_bytes_per_step = 4096\nlevels = \"qsgd:8, qsgd:4,qsgd:2\"\n\
+             min_uploads = 2\n\
+             [scenario.adaptive]\nenabled = true\ninterval = 20\n\
+             budget_bytes_per_step = 65536\nlevels = \"qsgd:4,top:0.05\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert!(c.net.adaptive.enabled);
+        assert_eq!(c.net.adaptive.interval, 5);
+        assert_eq!(c.net.adaptive.budget_bytes_per_step, 4096);
+        assert_eq!(c.net.adaptive.levels, vec!["qsgd:8", "qsgd:4", "qsgd:2"]);
+        assert_eq!(c.net.adaptive.min_uploads, 2);
+        assert!(c.scenario.adaptive.enabled);
+        assert_eq!(c.scenario.adaptive.interval, 20);
+        assert_eq!(c.scenario.adaptive.levels, vec!["qsgd:4", "top:0.05"]);
+        assert_eq!(c.scenario.adaptive.min_uploads, 1); // default kept
+        c.validate().unwrap();
+
+        // enabled controllers round-trip through to_json/apply exactly
+        let doc = c.to_json();
+        let mut back = Config::default();
+        back.apply(&doc).unwrap();
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+        assert_eq!(back.scenario.adaptive.levels, vec!["qsgd:4", "top:0.05"]);
+
+        // CLI --set reaches the same knobs
+        let mut c = Config::default();
+        c.set("scenario.adaptive.enabled=true").unwrap();
+        c.set("scenario.adaptive.budget_bytes_per_step=8192").unwrap();
+        c.set("scenario.adaptive.levels=\"qsgd:8,qsgd:2\"").unwrap();
+        assert!(c.scenario.adaptive.enabled);
+        assert_eq!(c.scenario.adaptive.budget_bytes_per_step, 8192);
+        assert_eq!(c.scenario.adaptive.levels, vec!["qsgd:8", "qsgd:2"]);
+        c.validate().unwrap();
+
+        // unknown keys rejected loudly, naming the table
+        let mut c = Config::default();
+        let doc = toml::parse("[net.adaptive]\nbudget = 3\n").unwrap();
+        let err = c.apply(&doc).unwrap_err().to_string();
+        assert!(err.contains("net.adaptive") && err.contains("budget"), "{err}");
+        let doc = toml::parse("[scenario.adaptive]\ncadence = 3\n").unwrap();
+        let err = c.apply(&doc).unwrap_err().to_string();
+        assert!(err.contains("scenario.adaptive") && err.contains("cadence"), "{err}");
+
+        // validation (enabled only): interval, budget, ladder specs
+        let enabled = |f: &dyn Fn(&mut AdaptiveConfig)| {
+            let mut c = Config::default();
+            c.net.adaptive.enabled = true;
+            c.net.adaptive.budget_bytes_per_step = 1024;
+            c.net.adaptive.levels = vec!["qsgd:4".into()];
+            f(&mut c.net.adaptive);
+            c.validate()
+        };
+        assert!(enabled(&|_| {}).is_ok());
+        assert!(enabled(&|a| a.interval = 0).is_err());
+        assert!(enabled(&|a| a.budget_bytes_per_step = 0).is_err());
+        assert!(enabled(&|a| a.levels.clear()).is_err());
+        let err = enabled(&|a| a.levels = vec!["huff:3".into()]).unwrap_err().to_string();
+        assert!(err.contains("net.adaptive.levels") && err.contains("huff:3"), "{err}");
+        // a disabled controller never validates its knobs
+        let mut c = Config::default();
+        c.net.adaptive.budget_bytes_per_step = 0;
+        c.scenario.adaptive.levels = vec!["huff:3".into()];
+        c.validate().unwrap();
     }
 
     #[test]

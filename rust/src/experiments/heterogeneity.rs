@@ -19,6 +19,13 @@
 //! partial updates (`partial_work = 0.5`); its per-tier rows — codec,
 //! partial-upload counts, wasted downlink bytes — land in
 //! `heterogeneity_presets.csv`.
+//!
+//! A fifth **adaptive arm** (ISSUE 9) replaces the hand-picked static
+//! presets with the `[scenario.adaptive]` control loop: the same
+//! population starts uniform on `quant.client` and the controller walks
+//! tiers down a codec ladder to meet a hard uplink budget, discovering
+//! the per-tier codecs mid-run. Its per-tier rows (including the
+//! `codec_switches` count) land in `heterogeneity_adaptive.csv`.
 
 use super::runner::{aggregate, report, run_seeds, BackendFactory, Row};
 use crate::config::{Algorithm, Config, TierConfig};
@@ -74,11 +81,31 @@ pub fn slow_dominated_presets(base: &Config) -> Config {
     cfg
 }
 
-const TIER_COLUMNS: [&str; 18] = [
+/// The adaptive variant of [`slow_dominated`]: no static presets —
+/// instead a three-level codec ladder (the base `quant.client`, then
+/// `qsgd:2`, then `top:0.05`) under a deliberately unmeetable 1-byte
+/// uplink budget, so the controller walks every tier that carries
+/// traffic down to the cheapest level at its first scored window. The
+/// slow tier (thin 2 Mbps uplink, hence the lowest score) downshifts
+/// first — the control loop discovers mid-run what
+/// [`slow_dominated_presets`] hard-codes.
+pub fn slow_dominated_adaptive(base: &Config) -> Config {
+    let mut cfg = slow_dominated(base);
+    cfg.scenario.adaptive.enabled = true;
+    cfg.scenario.adaptive.interval = 10;
+    cfg.scenario.adaptive.budget_bytes_per_step = 1;
+    cfg.scenario.adaptive.levels =
+        vec![base.quant.client.clone(), "qsgd:2".into(), "top:0.05".into()];
+    cfg.scenario.adaptive.min_uploads = 1;
+    cfg
+}
+
+const TIER_COLUMNS: [&str; 19] = [
     "algorithm",
     "seed",
     "tier",
     "codec",
+    "codec_switches",
     "arrivals",
     "unavailable",
     "dropouts",
@@ -96,9 +123,11 @@ const TIER_COLUMNS: [&str; 18] = [
 ];
 
 /// Run the ablation. Returns the aggregate rows (qafel, fedbuff,
-/// directquant, qafel+presets) and writes `heterogeneity.{csv,md}` plus
-/// the per-tier `heterogeneity_tiers.csv` and — for the per-tier-codec
-/// arm — `heterogeneity_presets.csv` under `out_dir`.
+/// directquant, qafel+presets, qafel+adaptive) and writes
+/// `heterogeneity.{csv,md}` plus the per-tier `heterogeneity_tiers.csv`
+/// and — for the per-tier-codec and adaptive arms —
+/// `heterogeneity_presets.csv` / `heterogeneity_adaptive.csv` under
+/// `out_dir`.
 pub fn run(
     base: &Config,
     make_backend: &BackendFactory,
@@ -135,12 +164,27 @@ pub fn run(
     }
     rows.push(aggregate(&set));
 
+    // adaptive-controller arm (ISSUE 9): the same population under a
+    // codec ladder and a hard uplink budget instead of static presets —
+    // the control loop discovers the per-tier codecs mid-run, and the
+    // codec_switches column records how often it re-keyed each tier.
+    let mut cfg_adaptive = slow_dominated_adaptive(base);
+    cfg_adaptive.fl.algorithm = Algorithm::Qafel;
+    let mut adaptive_csv = CsvWriter::new(&TIER_COLUMNS);
+    let set = run_seeds(&cfg_adaptive, make_backend, opts, "qafel+adaptive")?;
+    for (result, &seed) in set.results.iter().zip(&cfg_adaptive.seeds) {
+        tier_rows(&mut adaptive_csv, "qafel+adaptive", seed, &result.scenario);
+    }
+    rows.push(aggregate(&set));
+
     let md = report("heterogeneity", out_dir, base, &rows)?;
     println!("{md}");
     super::runner::stamp(&mut tiers_csv, base);
     super::runner::stamp(&mut presets_csv, base);
+    super::runner::stamp(&mut adaptive_csv, base);
     tiers_csv.save(format!("{out_dir}/heterogeneity_tiers.csv"))?;
     presets_csv.save(format!("{out_dir}/heterogeneity_presets.csv"))?;
+    adaptive_csv.save(format!("{out_dir}/heterogeneity_adaptive.csv"))?;
     Ok(rows)
 }
 
@@ -152,6 +196,7 @@ fn tier_rows(csv: &mut CsvWriter, label: &str, seed: u64, m: &ScenarioMetrics) {
             seed.to_string(),
             t.name.clone(),
             t.codec.clone(),
+            t.codec_switches.to_string(),
             t.arrivals.to_string(),
             t.unavailable.to_string(),
             t.dropouts.to_string(),
@@ -208,7 +253,7 @@ mod tests {
         let cfg = base();
         cfg.validate().unwrap();
         let rows = run(&cfg, &factory, &dir_s, &Default::default()).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             assert!(r.uploads_k_mean > 0.0, "{} ran no uploads", r.label);
         }
@@ -246,8 +291,33 @@ mod tests {
         assert!(text.contains("top:0.05") && text.contains("qsgd:4"), "{text}");
         let slow_line = lines.iter().find(|l| l.contains(",slow,")).unwrap();
         let fields: Vec<&str> = slow_line.split(',').collect();
-        let partials: u64 = fields[8].parse().unwrap();
+        let partials: u64 = fields[9].parse().unwrap();
         assert!(partials > 0, "no partial uploads recorded: {slow_line}");
+        // adaptive arm: the controller discovers codecs mid-run, and on
+        // the bytes axis it strictly beats the uniform static arm
+        // (accuracy-vs-uplink Pareto under the 80%-slow population)
+        let adaptive = &rows[4];
+        assert_eq!(adaptive.label, "qafel+adaptive");
+        assert!(
+            adaptive.kb_per_upload < qafel.kb_per_upload,
+            "adaptive {} vs uniform {}",
+            adaptive.kb_per_upload,
+            qafel.kb_per_upload
+        );
+        // adaptive csv: header + 1 arm x 1 seed x 2 tiers; the slow tier
+        // was rekeyed onto the bottom ladder level
+        let text =
+            std::fs::read_to_string(dir.join("heterogeneity_adaptive.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + 2, "{text}");
+        assert!(lines[0].starts_with("algorithm,seed,tier,codec,codec_switches"));
+        let slow_line = lines.iter().find(|l| l.contains(",slow,")).unwrap();
+        let fields: Vec<&str> = slow_line.split(',').collect();
+        let switches: u64 = fields[4].parse().unwrap();
+        assert!(switches >= 1, "slow tier never rekeyed: {slow_line}");
+        // the cheapest ladder level by wire size is qsgd:2 (top:0.05
+        // pays 8 bytes per kept coordinate), so that's the bottom
+        assert!(fields[3].starts_with("qsgd:2"), "slow codec: {slow_line}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -271,5 +341,18 @@ mod tests {
         assert_eq!(slow.partial_work, 0.5);
         let fast = cfg.scenario.tiers.iter().find(|t| t.name == "fast").unwrap();
         assert_eq!(fast.quant_client, None, "fast tier inherits quant.client");
+    }
+
+    #[test]
+    fn adaptive_population_is_valid_and_budgeted() {
+        let cfg = slow_dominated_adaptive(&base());
+        cfg.validate().unwrap();
+        let a = &cfg.scenario.adaptive;
+        assert!(a.enabled);
+        assert_eq!(a.levels.len(), 3);
+        assert_eq!(a.levels[0], cfg.quant.client, "ladder starts at the default");
+        assert_eq!(a.budget_bytes_per_step, 1, "unmeetable: every tier downshifts");
+        // no static presets: the controller, not the config, picks codecs
+        assert!(cfg.scenario.tiers.iter().all(|t| t.quant_client.is_none()));
     }
 }

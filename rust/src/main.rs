@@ -76,6 +76,8 @@ net options (wire protocol v2, ARCHITECTURE.md; defaults from [net]):
   --tier NAME        worker: device tier announced in the Hello; leader
                      resolves scenario.tiers.NAME.quant_client
   --quant-client SPEC worker: explicit upload codec (wins over --tier)
+  --bandwidth-mbps X worker: advertise uplink bandwidth in the Hello;
+                     scores the leader's net.adaptive codec controller
   --v1               worker: speak the legacy v1 protocol (no Hello)
   --round-delay-ms N worker: sleep between rounds (default 5)
 
@@ -448,14 +450,15 @@ fn cmd_leader(args: &Args) -> Result<()> {
         println!("[leader] |grad f|^2: {g0:.4} -> {g1:.4} (ratio {ratio:.4})");
         ratio
     });
-    println!("[leader] worker    peer                  proto codec         uploads      kB-up  stale-mean  stale-max");
+    println!("[leader] worker    peer                  proto codec         rekeys uploads      kB-up  stale-mean  stale-max");
     for ws in &report.worker_stats {
         println!(
-            "[leader] {:<9} {:<21} v{:<4} {:<13} {:>7} {:>10.3} {:>11.2} {:>10}",
+            "[leader] {:<9} {:<21} v{:<4} {:<13} {:>6} {:>7} {:>10.3} {:>11.2} {:>10}",
             ws.worker_id,
             ws.peer,
             ws.protocol,
             ws.codec,
+            ws.rekeys,
             ws.uploads,
             ws.upload_bytes as f64 / 1000.0,
             ws.staleness.mean(),
@@ -468,12 +471,28 @@ fn cmd_leader(args: &Args) -> Result<()> {
         for ws in &report.worker_stats {
             let expected = qafel::quant::parse_spec(&ws.codec)?.expected_bytes(d);
             let expected_down = qafel::quant::parse_spec(&ws.server_codec)?.expected_bytes(d);
+            // per-codec-epoch accounting: the join codec first, then one
+            // entry per mid-run Rekey (tools/check_net_e2e.py --adaptive)
+            let mut epochs_json = Vec::new();
+            for ep in &ws.epochs {
+                let ep_expected = qafel::quant::parse_spec(&ep.codec)?.expected_bytes(d);
+                epochs_json.push(Json::obj(vec![
+                    ("codec_id", Json::num(ep.codec_id as f64)),
+                    ("codec", Json::str(ep.codec.clone())),
+                    ("uploads", Json::num(ep.uploads as f64)),
+                    ("upload_bytes", Json::num(ep.upload_bytes as f64)),
+                    ("expected_bytes_per_upload", Json::num(ep_expected as f64)),
+                ]));
+            }
             workers_json.push(Json::obj(vec![
                 ("worker_id", Json::num(ws.worker_id as f64)),
                 ("peer", Json::str(ws.peer.clone())),
                 ("protocol", Json::num(ws.protocol as f64)),
                 ("codec_id", Json::num(ws.codec_id as f64)),
                 ("codec", Json::str(ws.codec.clone())),
+                ("bandwidth_hint", ws.bandwidth_hint.map(|h| Json::num(h as f64)).unwrap_or(Json::Null)),
+                ("rekeys", Json::num(ws.rekeys as f64)),
+                ("epochs", Json::arr(epochs_json)),
                 ("uploads", Json::num(ws.uploads as f64)),
                 ("upload_bytes", Json::num(ws.upload_bytes as f64)),
                 ("partials", Json::num(ws.partials as f64)),
@@ -604,6 +623,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
     w.tier = args.opt("tier").map(str::to_string).or_else(|| cfg.net.tier.clone());
     w.quant_client =
         args.opt("quant-client").map(str::to_string).or_else(|| cfg.net.quant_client.clone());
+    // advertised uplink bandwidth (Mbit/s) for the leader's adaptive
+    // controller; v1 peers never send it (net.adaptive, ARCHITECTURE.md)
+    w.bandwidth_hint = args.opt_parse::<f32>("bandwidth-mbps")?;
     w.force_v1 = args.flag("v1");
     let timings = args.flag("timings");
     if timings {

@@ -38,7 +38,7 @@
 //! Edge leaders are v2-only downstream: a silent (v1) worker fails the
 //! handshake loudly instead of being served legacy frames.
 
-use super::leader::WorkerStats;
+use super::leader::{CodecEpoch, WorkerStats};
 use super::message::{Message, PROTOCOL_VERSION};
 use super::queue::{FrameQueue, QueuedFrame};
 use super::transport::{frame_bytes, read_msg, read_msg_classified, write_msg, Conn, ReadOutcome};
@@ -119,8 +119,13 @@ impl EdgeLeader {
         // client-codec frames, only UpdatePartial frames decoded through
         // the root's partial-codec registry (config-ordered, id 0).
         let mut up = Conn::connect(upstream)?;
-        up.send(&Message::Hello { version: PROTOCOL_VERSION, tier: None, quant_client: None })
-            .context("sending Hello upstream")?;
+        up.send(&Message::Hello {
+            version: PROTOCOL_VERSION,
+            tier: None,
+            quant_client: None,
+            bandwidth_hint: None,
+        })
+        .context("sending Hello upstream")?;
         let (edge_worker_id, d, x0, server_quant, client_lr, sc_id) = match up
             .recv()
             .context("reading join from upstream")?
@@ -193,8 +198,13 @@ impl EdgeLeader {
                 .ok_or_else(|| {
                     anyhow!("worker {worker_id} ({peer}) disconnected during handshake")
                 })?;
+            // the bandwidth hint is accepted but unused here: only the
+            // root leader runs the adaptive controller, and an edge
+            // never forwards Rekey frames downstream
             let (version, tier, quant_client) = match hello {
-                Message::Hello { version, tier, quant_client } => (version, tier, quant_client),
+                Message::Hello { version, tier, quant_client, bandwidth_hint: _ } => {
+                    (version, tier, quant_client)
+                }
                 other => bail!("worker {worker_id} ({peer}): expected Hello, got {other:?}"),
             };
             let version = version.min(PROTOCOL_VERSION);
@@ -324,6 +334,14 @@ impl EdgeLeader {
                 protocol: version,
                 codec_id,
                 codec: edge.client_codec_name(codec_id),
+                bandwidth_hint: None,
+                rekeys: 0,
+                epochs: vec![CodecEpoch {
+                    codec_id,
+                    codec: edge.client_codec_name(codec_id),
+                    uploads: 0,
+                    upload_bytes: 0,
+                }],
                 server_codec_id: sc_id as usize,
                 server_codec: server_quant.clone(),
                 uploads: 0,
@@ -515,6 +533,10 @@ impl EdgeLeader {
             stats[wid].ingest_ns += crate::telemetry::span_ns(timer);
             stats[wid].uploads += 1;
             stats[wid].upload_bytes += wire as u64;
+            // edges never rekey their downstream workers, so every
+            // upload lands in the single join-time epoch
+            stats[wid].epochs[0].uploads += 1;
+            stats[wid].epochs[0].upload_bytes += wire as u64;
             stats[wid].staleness.record(staleness);
             match outcome {
                 AggOutcome::Buffered => {}

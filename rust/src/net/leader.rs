@@ -69,6 +69,26 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// One negotiated-codec epoch of a worker's upload accounting: the
+/// codec the connection used from its join (or a `Rekey`) until the
+/// next `Rekey`. In-flight old-codec uploads accepted during a
+/// transition window attribute to *their* epoch, so
+/// `upload_bytes == uploads x expected_bytes(d)` holds exactly per
+/// epoch even across a switch. Partial aggregates from edge leaders
+/// travel in the separate partial-codec registry and are not
+/// attributed to epochs.
+#[derive(Clone, Debug)]
+pub struct CodecEpoch {
+    /// Registry id of this epoch's upload codec.
+    pub codec_id: usize,
+    /// Resolved spec name of that codec (e.g. `"qsgd:4"`).
+    pub codec: String,
+    /// Uploads ingested under this epoch's codec.
+    pub uploads: u64,
+    /// Wire payload bytes of those uploads.
+    pub upload_bytes: u64,
+}
+
 /// Per-worker accounting, mirroring the simulator's per-tier
 /// [`crate::scenario::TierMetrics`]: what each connection uploaded,
 /// what was actually written to it, and the staleness it produced.
@@ -80,10 +100,20 @@ pub struct WorkerStats {
     /// Negotiated protocol version (1 = legacy silent join, 2 = Hello
     /// handshake with per-worker codec).
     pub protocol: u8,
-    /// The worker's upload codec in the server registry (0 = default).
+    /// The worker's *current* upload codec in the server registry
+    /// (0 = default); updated by `Rekey` switches.
     pub codec_id: usize,
     /// Resolved spec name of that codec (e.g. `"top:0.1"`).
     pub codec: String,
+    /// Uplink bandwidth hint the worker announced in `Hello`
+    /// (Mbit/s), if any — the adaptive controller's preferred score.
+    pub bandwidth_hint: Option<f32>,
+    /// Mid-run codec switches applied to this worker (`Rekey` frames
+    /// sent by the adaptive controller).
+    pub rekeys: u64,
+    /// Per-epoch upload accounting, one entry per negotiated codec in
+    /// order (the join codec first, then one per `Rekey`).
+    pub epochs: Vec<CodecEpoch>,
     /// The worker's downlink family in the server's hidden-state
     /// registry (0 = default `quant.server`), resolved from its tier's
     /// `quant_server` preset.
@@ -199,8 +229,8 @@ struct Handshake {
     reader: TcpStream,
     writer: TcpStream,
     /// `None` = silent v1 peer; `Some` = the v2 `Hello` fields
-    /// (version, tier, quant_client).
-    hello: Option<(u8, Option<String>, Option<String>)>,
+    /// (version, tier, quant_client, bandwidth_hint).
+    hello: Option<(u8, Option<String>, Option<String>, Option<f32>)>,
 }
 
 /// Classify one fresh connection as v1/v2 and read its `Hello` if any,
@@ -242,7 +272,9 @@ fn handshake(
             })?
             .ok_or_else(|| anyhow!("worker {worker_id} ({peer}) disconnected during handshake"))?;
         match msg {
-            Message::Hello { version, tier, quant_client } => Some((version, tier, quant_client)),
+            Message::Hello { version, tier, quant_client, bandwidth_hint } => {
+                Some((version, tier, quant_client, bandwidth_hint))
+            }
             other => bail!("worker {worker_id} ({peer}): expected Hello, got {other:?}"),
         }
     } else {
@@ -338,6 +370,27 @@ impl Leader {
         // up front from config so edges and root agree on registry id 0 —
         // registration order is the wire contract, as for client codecs.
         server.register_partial_codec(&self.cfg.net.partial_codec)?;
+        // Adaptive controller (`net.adaptive`): the codec ladder is
+        // registered up front — before any Hello negotiation or resume
+        // replay — so every level's registry entry is in the journal
+        // header and a mid-run Rekey never races a Codec event. The
+        // registry dedups by resolved name, so ladder levels shared
+        // with tier presets (or with each other) cost nothing. Sorted
+        // by encoded size ascending: "one level down" = the next
+        // cheaper entry.
+        let adaptive = self.cfg.net.adaptive.clone();
+        let mut ladder: Vec<(usize, String, u64)> = Vec::new(); // (id, name, bytes/upload)
+        if adaptive.enabled {
+            for spec in &adaptive.levels {
+                let id = server.register_client_codec(spec)?;
+                if !ladder.iter().any(|&(lid, ..)| lid == id) {
+                    let name = server.client_codec_name(id);
+                    let bytes = parse_spec(&name)?.expected_bytes(d) as u64;
+                    ladder.push((id, name, bytes));
+                }
+            }
+            ladder.sort_by_key(|&(_, _, b)| b);
+        }
         let grace = Duration::from_millis(self.cfg.net.v1_grace_ms.max(1));
 
         // --- resume: cut the journal back to its last checkpoint and
@@ -477,8 +530,10 @@ impl Leader {
             let Handshake { worker_id, peer, mut reader, mut writer, hello } = hs;
             let wid = worker_id as usize;
 
+            let mut bandwidth_hint: Option<f32> = None;
             let (protocol, codec_id, server_codec_id) = if let Some(h) = hello {
-                let (version, tier, quant_client) = h;
+                let (version, tier, quant_client, hint) = h;
+                bandwidth_hint = hint;
                 // both ends run at the minimum version (decode already
                 // guarantees version >= 2)
                 let version = version.min(PROTOCOL_VERSION);
@@ -654,6 +709,14 @@ impl Leader {
                 protocol,
                 codec_id,
                 codec: server.client_codec_name(codec_id),
+                bandwidth_hint,
+                rekeys: 0,
+                epochs: vec![CodecEpoch {
+                    codec_id,
+                    codec: server.client_codec_name(codec_id),
+                    uploads: 0,
+                    upload_bytes: 0,
+                }],
                 server_codec_id,
                 server_codec: server.server_codec_name(server_codec_id),
                 uploads: 0,
@@ -721,6 +784,15 @@ impl Leader {
         let mut live = n_workers;
         let mut byes = 0usize;
         let mut shutdown_sent = false;
+        // Adaptive-controller state: per-worker transition windows (old
+        // codec ids whose in-flight uploads are still accepted after a
+        // Rekey, cleared on the first upload tagged with the current
+        // id — frames are ordered per connection, so once the new tag
+        // arrives no older-tagged frame can follow) and the per-window
+        // upload/byte counters the policy scores and projects from.
+        let mut transition: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+        let mut win_uploads: Vec<u64> = vec![0; n_workers];
+        let mut win_bytes: Vec<u64> = vec![0; n_workers];
         // journal step/progress state: slots since the last step (the
         // Step event's k), the run-wide staleness histogram quantiles on
         // the progress line draw from, the previous Step event (deltas)
@@ -797,19 +869,31 @@ impl Leader {
             let step = match inbound {
                 Inbound::Update { t_start, codec_id, payload } => {
                     // the tag must be the codec this connection negotiated
-                    // at join: two registered codecs can share a wire size
-                    // at some d, so accepting a mismatched (even
-                    // registered) id could silently mis-decode into the
-                    // aggregation buffer — and per-worker accounting is
-                    // keyed by the negotiated codec
+                    // (at join or via the latest Rekey): two registered
+                    // codecs can share a wire size at some d, so accepting
+                    // a mismatched (even registered) id could silently
+                    // mis-decode into the aggregation buffer — and
+                    // per-worker accounting is keyed by the negotiated
+                    // codec. During a Rekey transition window, uploads
+                    // still tagged with a superseded id are in flight
+                    // from before the worker saw the frame and stay
+                    // accepted until the first current-id upload cuts
+                    // the window over.
                     if codec_id != stats[wid].codec_id {
-                        bail!(
-                            "worker {worker_id} ({}): upload tagged codec id {codec_id}, but \
-                             this connection negotiated codec id {} ('{}')",
-                            stats[wid].peer,
-                            stats[wid].codec_id,
-                            stats[wid].codec
-                        );
+                        if !transition[wid].contains(&codec_id) {
+                            bail!(
+                                "worker {worker_id} ({}): upload tagged codec id {codec_id}, but \
+                                 this connection negotiated codec id {} ('{}')",
+                                stats[wid].peer,
+                                stats[wid].codec_id,
+                                stats[wid].codec
+                            );
+                        }
+                    } else if !transition[wid].is_empty() {
+                        // cutover: the worker switched — per-connection
+                        // frame order guarantees no older-tagged upload
+                        // can still arrive
+                        transition[wid].clear();
                     }
                     let qmsg = QuantizedMsg { payload, d };
                     let wire = qmsg.wire_bytes();
@@ -840,6 +924,22 @@ impl Leader {
                     stats[wid].ingest_ns += telemetry::span_ns(timer);
                     stats[wid].uploads += 1;
                     stats[wid].upload_bytes += wire as u64;
+                    // per-epoch attribution: the current epoch, or —
+                    // for an in-flight old-codec upload — the most
+                    // recent earlier epoch that used this codec
+                    let ep = if codec_id == stats[wid].codec_id {
+                        stats[wid].epochs.len() - 1
+                    } else {
+                        stats[wid]
+                            .epochs
+                            .iter()
+                            .rposition(|e| e.codec_id == codec_id)
+                            .expect("transition window ids always have an epoch")
+                    };
+                    stats[wid].epochs[ep].uploads += 1;
+                    stats[wid].epochs[ep].upload_bytes += wire as u64;
+                    win_uploads[wid] += 1;
+                    win_bytes[wid] += wire as u64;
                     stats[wid].staleness.record(staleness);
                     hist_all.record(staleness);
                     slots_since_step += 1;
@@ -960,6 +1060,132 @@ impl Leader {
                             q.push_step(t, frame.clone());
                         }
                     }
+                }
+
+                // Adaptive-quantization controller: every `interval`
+                // steps, project the next window's uplink traffic from
+                // the window just observed and walk the slowest
+                // workers down the ladder until it fits the budget.
+                if adaptive.enabled
+                    && !ladder.is_empty()
+                    && server.t() % adaptive.interval == 0
+                {
+                    let interval = adaptive.interval as f64;
+                    // Eligible for a switch: plain v2 workers (edges
+                    // forward partials and never rekey; v1 peers
+                    // predate the frame) with enough window uploads to
+                    // score and no transition still in flight. Score:
+                    // the announced bandwidth hint when given, else
+                    // the observed window upload rate — lower score =
+                    // first to downshift.
+                    let mut eligible: Vec<(usize, f64)> = Vec::new();
+                    for (w, s) in stats.iter().enumerate() {
+                        if s.protocol < 2 || s.partials > 0 || !transition[w].is_empty() {
+                            continue;
+                        }
+                        if win_uploads[w] < adaptive.min_uploads.max(1) {
+                            continue;
+                        }
+                        let score = match s.bandwidth_hint {
+                            Some(h) => f64::from(h),
+                            None => win_uploads[w] as f64 / interval,
+                        };
+                        eligible.push((w, score));
+                    }
+                    // Projected bytes/step if nothing changes: what
+                    // each worker actually shipped over the window.
+                    // Every worker counts toward the projection (the
+                    // budget is global), movable or not.
+                    let mut rate: Vec<f64> = vec![0.0; n_workers];
+                    let mut bytes_now: Vec<u64> = vec![0; n_workers];
+                    let mut projected = 0.0f64;
+                    for w in 0..n_workers {
+                        rate[w] = win_uploads[w] as f64 / interval;
+                        bytes_now[w] = if win_uploads[w] > 0 {
+                            win_bytes[w] / win_uploads[w]
+                        } else {
+                            0
+                        };
+                        projected += win_bytes[w] as f64 / interval;
+                    }
+                    // Greedy: move the lowest-scored movable worker one
+                    // ladder level down (the largest entry strictly
+                    // cheaper than its current codec), cycling until
+                    // the projection fits or everyone is at the bottom.
+                    let mut switches: Vec<(usize, usize)> = Vec::new(); // (wid, ladder idx)
+                    let budget = adaptive.budget_bytes_per_step as f64;
+                    while projected > budget {
+                        let mut pick: Option<(usize, f64, usize)> = None; // (wid, score, idx)
+                        for &(w, score) in &eligible {
+                            let cur = switches
+                                .iter()
+                                .rev()
+                                .find(|&&(sw, _)| sw == w)
+                                .map(|&(_, idx)| ladder[idx].2)
+                                .unwrap_or(bytes_now[w]);
+                            let Some(down) =
+                                ladder.iter().rposition(|&(_, _, b)| b < cur)
+                            else {
+                                continue; // already at (or below) the bottom
+                            };
+                            if pick.map_or(true, |(_, best, _)| score < best) {
+                                pick = Some((w, score, down));
+                            }
+                        }
+                        let Some((w, _, idx)) = pick else { break };
+                        let cur = switches
+                            .iter()
+                            .rev()
+                            .find(|&&(sw, _)| sw == w)
+                            .map(|&(_, i)| ladder[i].2)
+                            .unwrap_or(bytes_now[w]);
+                        projected -= rate[w] * (cur - ladder[idx].2) as f64;
+                        switches.retain(|&(sw, _)| sw != w);
+                        switches.push((w, idx));
+                    }
+                    for (w, idx) in switches {
+                        let (new_id, ref name, _) = ladder[idx];
+                        let old_id = stats[w].codec_id;
+                        if new_id == old_id {
+                            continue;
+                        }
+                        if recorder.on() {
+                            recorder.emit(Event::Rekey {
+                                time: now,
+                                step: server.t(),
+                                worker: w as u64,
+                                old: old_id as u64,
+                                new: new_id as u64,
+                                spec: name.clone(),
+                            })?;
+                        }
+                        let frame: Arc<[u8]> = frame_bytes(&Message::Rekey {
+                            worker_id: w as u32,
+                            codec_id: new_id as u32,
+                            spec: name.clone(),
+                            t: server.t(),
+                        })?
+                        .into();
+                        queues[w].0.push_control(frame);
+                        transition[w].push(old_id);
+                        stats[w].codec_id = new_id;
+                        stats[w].codec = name.clone();
+                        stats[w].rekeys += 1;
+                        stats[w].epochs.push(CodecEpoch {
+                            codec_id: new_id,
+                            codec: name.clone(),
+                            uploads: 0,
+                            upload_bytes: 0,
+                        });
+                        tracing_log(&format!(
+                            "leader: rekeyed worker {w} to '{name}' (codec id {new_id}) at \
+                             step {}",
+                            server.t()
+                        ));
+                    }
+                    // fresh observation window
+                    win_uploads.iter_mut().for_each(|v| *v = 0);
+                    win_bytes.iter_mut().for_each(|v| *v = 0);
                 }
             }
             if server.t() >= self.cfg.stop.max_server_steps

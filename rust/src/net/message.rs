@@ -66,8 +66,18 @@ pub enum Message {
     /// device-tier name the leader resolves against
     /// `scenario.tiers.<name>.quant_client`, or an explicit spec
     /// (`--quant-client`, which wins over the tier). Both `None` means
-    /// the default `quant.client` codec.
-    Hello { version: u8, tier: Option<String>, quant_client: Option<String> },
+    /// the default `quant.client` codec. `bandwidth_hint` is the
+    /// worker's advertised uplink bandwidth in Mbps; the adaptive
+    /// controller (`net.adaptive`) uses it to rank workers when picking
+    /// per-worker codecs under the byte budget. A hint-less `Hello`
+    /// encodes byte-identically to the pre-hint layout (its own wire
+    /// tag), so old leaders and old goldens are untouched.
+    Hello {
+        version: u8,
+        tier: Option<String>,
+        quant_client: Option<String>,
+        bandwidth_hint: Option<f32>,
+    },
     /// leader -> worker, v2 reply to `Hello`: everything [`Message::Join`]
     /// carries, plus the negotiated protocol version and the id of the
     /// worker's upload codec in the leader's registry. `client_quant` is
@@ -119,6 +129,17 @@ pub enum Message {
         stale_n: u64,
         payload: Vec<u8>,
     },
+    /// leader -> worker, v2 only: switch the worker's *upload* codec
+    /// mid-run (adaptive quantization control, `net.adaptive`). `spec`
+    /// is the resolved codec spec and `codec_id` its id in the leader's
+    /// registry (deduped by resolved name, so repeated rekeys between
+    /// the same specs never grow the registry); `t` is the server step
+    /// the controller issued the switch at. The worker swaps codecs at
+    /// its next round boundary and tags subsequent `UpdateV2` frames
+    /// with the new id; the leader keeps accepting frames tagged with
+    /// the old id until the first new-id upload lands (the transition
+    /// window). v1 peers never see this frame.
+    Rekey { worker_id: u32, codec_id: u32, spec: String, t: u64 },
     /// leader -> worker: a full-state resynchronization. Sent when a
     /// budgeted writer queue skipped broadcasts for this worker and the
     /// server's [`crate::coordinator::UpdateLog`] has already evicted
@@ -140,6 +161,13 @@ const TAG_JOIN2: u8 = 7;
 const TAG_UPDATE2: u8 = 8;
 const TAG_UPDATE_PARTIAL: u8 = 9;
 const TAG_SYNC: u8 = 10;
+const TAG_REKEY: u8 = 11;
+// A Hello carrying a bandwidth hint gets its own tag: appending a
+// trailing optional field to TAG_HELLO would make a cut-before-the-hint
+// prefix decode as a valid hint-less Hello, breaking the
+// every-strict-prefix-fails property (and the hint-less layout must stay
+// byte-identical to the pre-hint contract).
+const TAG_HELLO_HINT: u8 = 12;
 
 struct Writer {
     buf: Vec<u8>,
@@ -300,11 +328,24 @@ impl Message {
                 w.u64(*uploads);
                 w.buf
             }
-            Message::Hello { version, tier, quant_client } => {
-                let mut w = Writer::new(TAG_HELLO);
+            Message::Hello { version, tier, quant_client, bandwidth_hint } => {
+                // hint-less Hello keeps the original tag and byte layout
+                let mut w =
+                    Writer::new(if bandwidth_hint.is_some() { TAG_HELLO_HINT } else { TAG_HELLO });
                 w.u8(*version);
                 w.opt_str(tier);
                 w.opt_str(quant_client);
+                if let Some(mbps) = bandwidth_hint {
+                    w.f32(*mbps);
+                }
+                w.buf
+            }
+            Message::Rekey { worker_id, codec_id, spec, t } => {
+                let mut w = Writer::new(TAG_REKEY);
+                w.u32(*worker_id);
+                w.u32(*codec_id);
+                w.str(spec);
+                w.u64(*t);
                 w.buf
             }
             Message::JoinV2 {
@@ -399,6 +440,19 @@ impl Message {
                 version: check_version(r.u8()?, "Hello")?,
                 tier: r.opt_str()?,
                 quant_client: r.opt_str()?,
+                bandwidth_hint: None,
+            },
+            TAG_HELLO_HINT => Message::Hello {
+                version: check_version(r.u8()?, "Hello")?,
+                tier: r.opt_str()?,
+                quant_client: r.opt_str()?,
+                bandwidth_hint: Some(r.f32()?),
+            },
+            TAG_REKEY => Message::Rekey {
+                worker_id: r.u32()?,
+                codec_id: r.u32()?,
+                spec: r.str()?,
+                t: r.u64()?,
             },
             TAG_JOIN2 => Message::JoinV2 {
                 version: check_version(r.u8()?, "JoinV2")?,
@@ -514,13 +568,33 @@ mod tests {
             Message::Broadcast { t: u64::MAX, absolute: false, payload: vec![] },
             Message::Shutdown,
             Message::Bye { worker_id: 2, uploads: 41 },
-            Message::Hello { version: 2, tier: None, quant_client: None },
-            Message::Hello { version: 2, tier: Some("phone".into()), quant_client: None },
+            Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None },
+            Message::Hello {
+                version: 2,
+                tier: Some("phone".into()),
+                quant_client: None,
+                bandwidth_hint: None,
+            },
             Message::Hello {
                 version: 7,
                 tier: Some("tier-β".into()),
                 quant_client: Some("top:0.1".into()),
+                bandwidth_hint: None,
             },
+            Message::Hello {
+                version: 2,
+                tier: None,
+                quant_client: None,
+                bandwidth_hint: Some(2.5),
+            },
+            Message::Hello {
+                version: 2,
+                tier: Some("phone".into()),
+                quant_client: Some("qsgd:4".into()),
+                bandwidth_hint: Some(0.125),
+            },
+            Message::Rekey { worker_id: 3, codec_id: 2, spec: "qsgd:4".into(), t: 40 },
+            Message::Rekey { worker_id: 0, codec_id: 0, spec: "".into(), t: 0 },
             Message::JoinV2 {
                 version: 2,
                 worker_id: 9,
@@ -615,7 +689,19 @@ mod tests {
         assert!(Message::decode(&[42]).is_err()); // unknown tag
         assert!(Message::decode(&[0]).is_err()); // tag 0 is reserved
         // bad option-presence byte in Hello (must be 0 or 1)
-        let mut hello = Message::Hello { version: 2, tier: None, quant_client: None }.encode();
+        let mut hello =
+            Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                .encode();
+        hello[2] = 9;
+        assert!(Message::decode(&hello).is_err());
+        // same poke on the hint-carrying layout
+        let mut hello = Message::Hello {
+            version: 2,
+            tier: None,
+            quant_client: None,
+            bandwidth_hint: Some(1.0),
+        }
+        .encode();
         hello[2] = 9;
         assert!(Message::decode(&hello).is_err());
         // bad utf8 inside a Join string
@@ -638,10 +724,22 @@ mod tests {
         // A v1 peer never emits Hello/JoinV2, so a version field of 0 or
         // 1 is a protocol confusion and must fail at decode time.
         for v in [0u8, 1] {
-            let mut hello = Message::Hello { version: 2, tier: None, quant_client: None }.encode();
+            let mut hello =
+                Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                    .encode();
             hello[1] = v;
             let err = Message::decode(&hello).unwrap_err().to_string();
             assert!(err.contains("version"), "{err}");
+            // the hint-carrying layout runs the same version gate
+            let mut hinted = Message::Hello {
+                version: 2,
+                tier: None,
+                quant_client: None,
+                bandwidth_hint: Some(8.0),
+            }
+            .encode();
+            hinted[1] = v;
+            assert!(Message::decode(&hinted).is_err());
             let mut join = Message::JoinV2 {
                 version: 2,
                 worker_id: 0,
@@ -659,8 +757,60 @@ mod tests {
         }
         // future versions decode fine (the connection then runs at the
         // minimum of the two ends' versions)
-        let hello = Message::Hello { version: 9, tier: None, quant_client: None };
+        let hello =
+            Message::Hello { version: 9, tier: None, quant_client: None, bandwidth_hint: None };
         assert_eq!(Message::decode(&hello.encode()).unwrap(), hello);
+    }
+
+    #[test]
+    fn hintless_hello_layout_pinned_byte_for_byte() {
+        // The hint-less Hello is the v2 handshake contract from the
+        // codec-negotiation PR: adding the bandwidth hint must not move
+        // a single byte of it (old leaders keep decoding new workers
+        // that send no hint).
+        let hello = Message::Hello {
+            version: 2,
+            tier: Some("phone".into()),
+            quant_client: None,
+            bandwidth_hint: None,
+        };
+        let mut expect = vec![6u8]; // TAG_HELLO, unchanged
+        expect.push(2); // version
+        expect.push(1); // tier present
+        expect.extend_from_slice(&5u32.to_le_bytes());
+        expect.extend_from_slice(b"phone");
+        expect.push(0); // quant_client absent
+        assert_eq!(hello.encode(), expect);
+
+        // the hint rides under its own tag, after the same fields
+        let hinted = Message::Hello {
+            version: 2,
+            tier: Some("phone".into()),
+            quant_client: None,
+            bandwidth_hint: Some(2.5),
+        };
+        let mut expect_hint = vec![12u8]; // TAG_HELLO_HINT
+        expect_hint.extend_from_slice(&expect[1..]);
+        expect_hint.extend_from_slice(&2.5f32.to_le_bytes());
+        assert_eq!(hinted.encode(), expect_hint);
+    }
+
+    #[test]
+    fn rekey_layout_pinned_byte_for_byte() {
+        let rekey = Message::Rekey { worker_id: 9, codec_id: 3, spec: "qsgd:4".into(), t: 17 };
+        let mut expect = vec![11u8]; // TAG_REKEY
+        expect.extend_from_slice(&9u32.to_le_bytes());
+        expect.extend_from_slice(&3u32.to_le_bytes());
+        expect.extend_from_slice(&6u32.to_le_bytes());
+        expect.extend_from_slice(b"qsgd:4");
+        expect.extend_from_slice(&17u64.to_le_bytes());
+        assert_eq!(rekey.encode(), expect);
+        assert_eq!(Message::decode(&expect).unwrap(), rekey);
+        // bad utf8 in the spec string is rejected
+        let spec_start = 1 + 4 + 4 + 4;
+        let mut bad = expect.clone();
+        bad[spec_start] = 0xFF;
+        assert!(Message::decode(&bad).is_err());
     }
 
     #[test]

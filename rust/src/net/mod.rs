@@ -40,6 +40,19 @@
 //! evicted and the writer folds the gap into an incremental catch-up
 //! from the server's [`crate::coordinator::UpdateLog`] — or one
 //! `Sync` frame when the log has evicted the increments (Appendix B.1).
+//!
+//! **Adaptive quantization** (ISSUE 9): with `net.adaptive` enabled the
+//! leader re-scores every plain v2 worker each `interval` steps — by
+//! the bandwidth hint its `Hello` announced, else its observed upload
+//! rate — and walks the slowest workers down a codec ladder until the
+//! projected uplink traffic fits `budget_bytes_per_step`, switching a
+//! worker's upload codec mid-run with a `Rekey` frame (tag 11). The
+//! switch lands at a step boundary: uploads still in flight under the
+//! old codec id stay accepted until the first new-tagged upload cuts
+//! the transition window over, and per-epoch accounting in
+//! [`leader::CodecEpoch`] keeps `upload_bytes == uploads x
+//! expected_bytes` exact on both sides of the switch. v1 peers and
+//! edge leaders never see the frame.
 
 pub mod edge;
 pub mod leader;
@@ -49,6 +62,6 @@ pub mod transport;
 pub mod worker;
 
 pub use edge::{EdgeLeader, EdgeReport};
-pub use leader::{Leader, LeaderReport, WorkerStats};
+pub use leader::{CodecEpoch, Leader, LeaderReport, WorkerStats};
 pub use message::{Message, PROTOCOL_VERSION};
 pub use worker::{Worker, WorkerReport};

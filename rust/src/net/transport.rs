@@ -141,7 +141,12 @@ mod tests {
     fn frame_bytes_matches_write_msg() {
         let msgs = vec![
             Message::Shutdown,
-            Message::Hello { version: 2, tier: Some("slow".into()), quant_client: None },
+            Message::Hello {
+                version: 2,
+                tier: Some("slow".into()),
+                quant_client: None,
+                bandwidth_hint: None,
+            },
             Message::Broadcast { t: 3, absolute: false, payload: vec![1, 2, 3] },
         ];
         for m in &msgs {

@@ -34,8 +34,12 @@ pub struct WorkerReport {
     pub protocol: u8,
     /// Resolved upload-codec spec the leader assigned.
     pub codec: String,
-    /// Registry id of that codec on the leader (0 = default).
+    /// Registry id of that codec on the leader (0 = default). After a
+    /// mid-run `Rekey` this (and `codec`) reflects the *final* codec.
     pub codec_id: u32,
+    /// Mid-run `Rekey` switches this worker applied (0 when the leader
+    /// runs without `net.adaptive`).
+    pub rekeys: u64,
     /// Resolved downlink-codec spec the leader assigned (the tier's
     /// `quant_server` preset, else the default `quant.server`).
     pub server_codec: String,
@@ -73,6 +77,11 @@ pub struct Worker<B: Backend> {
     /// Explicit upload-codec spec sent in the v2 Hello; wins over
     /// `tier` on the leader (`net.quant_client` / `--quant-client`).
     pub quant_client: Option<String>,
+    /// Uplink bandwidth hint in Mbit/s sent in the v2 Hello
+    /// (`--bandwidth-mbps`); the leader's adaptive controller scores
+    /// this worker by it. `None` = no hint (byte-identical Hello to
+    /// the pre-hint layout).
+    pub bandwidth_hint: Option<f32>,
     /// Speak the legacy v1 protocol (no Hello, untagged uploads).
     pub force_v1: bool,
 }
@@ -85,6 +94,7 @@ impl<B: Backend> Worker<B> {
             shards: 1,
             tier: None,
             quant_client: None,
+            bandwidth_hint: None,
             force_v1: false,
         }
     }
@@ -99,9 +109,10 @@ impl<B: Backend> Worker<B> {
                 version: PROTOCOL_VERSION,
                 tier: self.tier.clone(),
                 quant_client: self.quant_client.clone(),
+                bandwidth_hint: self.bandwidth_hint,
             })?;
         }
-        let (protocol, worker_id, d, x0, client_quant, server_quant, client_lr, codec_id, sc_id) =
+        let (protocol, worker_id, d, x0, client_quant, server_quant, client_lr, mut codec_id, sc_id) =
             match conn.recv()? {
                 Some(Message::JoinV2 {
                     version,
@@ -141,7 +152,7 @@ impl<B: Backend> Worker<B> {
         if d != self.backend.d() {
             bail!("model dim mismatch: leader d={d}, backend d={}", self.backend.d());
         }
-        let quant_c = parse_spec(&client_quant)?;
+        let mut quant_c = parse_spec(&client_quant)?;
         let mut rng = Prng::new(0xC11E27 ^ worker_id as u64).stream("worker-quant");
         // Algorithm 3's replica, decoding with the downlink codec this
         // connection's tier negotiated (JoinV2.server_quant); the decode
@@ -172,6 +183,7 @@ impl<B: Backend> Worker<B> {
 
         let mut uploads = 0u64;
         let mut syncs = 0u64;
+        let mut rekeys = 0u64;
         let mut trip = 0u64;
         let mut train_ns = 0u64;
         let mut encode_ns = 0u64;
@@ -214,6 +226,26 @@ impl<B: Backend> Worker<B> {
                         decode_ns += crate::telemetry::span_ns(timer);
                         syncs += 1;
                     }
+                    Ok(Message::Rekey { worker_id: wid2, codec_id: new_id, spec, t: _ }) => {
+                        // mid-run codec switch from the adaptive
+                        // controller: applies from the *next* round —
+                        // the upload already in flight keeps its old
+                        // tag and the leader's transition window
+                        // accepts it
+                        if protocol < 2 {
+                            bail!("worker {worker_id}: Rekey on a v1 connection");
+                        }
+                        if wid2 != worker_id {
+                            bail!(
+                                "worker {worker_id}: Rekey addressed to worker {wid2}"
+                            );
+                        }
+                        quant_c = parse_spec(&spec).map_err(|e| {
+                            e.context(format!("worker {worker_id}: bad Rekey spec '{spec}'"))
+                        })?;
+                        codec_id = new_id;
+                        rekeys += 1;
+                    }
                     Ok(Message::Shutdown) => break 'train,
                     Ok(other) => bail!("worker {worker_id}: unexpected {other:?}"),
                     Err(mpsc::TryRecvError::Empty) => break,
@@ -255,6 +287,7 @@ impl<B: Backend> Worker<B> {
             protocol,
             codec: quant_c.name(),
             codec_id,
+            rekeys,
             server_codec: server_quant,
             server_codec_id: sc_id,
             syncs,

@@ -195,6 +195,11 @@ pub struct TierMetrics {
     /// Downlink bytes spent on clients that contributed nothing (full
     /// dropouts): the communication the population wasted.
     pub wasted_download_bytes: u64,
+    /// Mid-run upload-codec switches the adaptive controller
+    /// (`[scenario.adaptive]`) applied to this tier. Serialized
+    /// conditionally so adaptive-off checkpoints stay byte-identical to
+    /// the pre-adaptive engine.
+    pub codec_switches: u64,
     pub staleness: StalenessHist,
 }
 
@@ -322,8 +327,11 @@ impl ScenarioMetrics {
                     "wasted_download_bytes",
                     Json::num(t.wasted_download_bytes as f64),
                 ),
-                ("staleness", t.staleness.to_json()),
             ]);
+            if t.codec_switches != 0 {
+                fields.push(("codec_switches", Json::num(t.codec_switches as f64)));
+            }
+            fields.push(("staleness", t.staleness.to_json()));
             Json::obj(fields)
         };
         Json::obj(vec![
@@ -373,6 +381,12 @@ impl ScenarioMetrics {
                     upload_bytes: num(t, "upload_bytes")?,
                     download_bytes: num(t, "download_bytes")?,
                     wasted_download_bytes: num(t, "wasted_download_bytes")?,
+                    // optional: absent on adaptive-off (and pre-adaptive) runs
+                    codec_switches: t
+                        .get("codec_switches")
+                        .and_then(|v| v.as_f64())
+                        .map(|f| f as u64)
+                        .unwrap_or(0),
                     staleness: StalenessHist::from_json(
                         t.get("staleness")
                             .ok_or_else(|| anyhow!("scenario metrics: tier missing 'staleness'"))?,
@@ -497,6 +511,7 @@ mod tests {
         m.tiers[0].codec = "qsgd:4".into();
         m.tiers[1].codec = "top:0.1".into();
         m.tiers[1].download_codec = "qsgd:2".into();
+        m.tiers[1].codec_switches = 2;
         m.record_arrival(0);
         m.record_upload(0, 2, 100, 50);
         m.record_dropout(1, 50);
@@ -512,6 +527,8 @@ mod tests {
         // non-default downlink family (byte-identity for no-preset runs)
         let text = j.to_string();
         assert_eq!(text.matches("download_codec").count(), 1);
+        // likewise codec_switches: only the rekeyed tier carries the key
+        assert_eq!(text.matches("codec_switches").count(), 1);
         // the parse is strict about schema
         assert!(ScenarioMetrics::from_json(&Json::obj(vec![])).is_err());
         assert!(StalenessHist::from_json(&Json::obj(vec![])).is_err());

@@ -153,6 +153,12 @@ impl<'a> SimEngine<'a> {
                  scenario.aggregators.edges > 0 (edge buffers are not checkpointed)"
             );
         }
+        if tel.checkpoint_every > 0 && self.cfg.scenario.adaptive.enabled {
+            bail!(
+                "telemetry.checkpoint_every is not supported with \
+                 [scenario.adaptive] (controller window state is not checkpointed)"
+            );
+        }
         if opts.resume && tel.journal.is_none() {
             bail!("resume needs telemetry.journal (the journal to resume from)");
         }
@@ -246,6 +252,44 @@ impl<'a> SimEngine<'a> {
                 });
             }
         }
+        // Adaptive codec ladder (`[scenario.adaptive]`): registered up
+        // front — right after the tier presets, mirroring the TCP
+        // leader's ordering — so every level's registry entry is in the
+        // journal header and a mid-run Rekey never races a Codec event.
+        // The registry dedups by resolved name, so levels shared with
+        // tier presets (or resolving identically, e.g. under fedbuff)
+        // cost nothing. Sorted by encoded size ascending: "one level
+        // down" = the next cheaper entry.
+        let adaptive = self.cfg.scenario.adaptive.clone();
+        let mut ladder: Vec<(usize, String, u64)> = Vec::new(); // (id, name, bytes/upload)
+        if adaptive.enabled {
+            for spec in &adaptive.levels {
+                let sid = server.register_client_codec(spec)?;
+                let cid = logic.register_codec(spec)?;
+                if sid != cid {
+                    bail!(
+                        "internal: codec id mismatch for adaptive level '{spec}' \
+                         (server {sid}, client {cid})"
+                    );
+                }
+                if !ladder.iter().any(|&(lid, ..)| lid == sid) {
+                    let name = logic.codec_name(sid);
+                    let bytes = logic.upload_bytes_for(sid, d) as u64;
+                    ladder.push((sid, name, bytes));
+                    codec_events.push(JEvent::Codec {
+                        reg: "client".into(),
+                        id: sid as u64,
+                        spec: spec.to_string(),
+                    });
+                }
+            }
+            ladder.sort_by_key(|&(_, _, b)| b);
+        }
+        // Tier score for the controller: the configured uplink bandwidth
+        // (the sim analog of a TCP worker's Hello hint; 0 = unlimited).
+        let tier_mbps: Vec<f64> =
+            self.cfg.resolved_tiers().iter().map(|t| t.upload_mbps).collect();
+
         for tier in 0..scenario.num_tiers() {
             scenario.metrics.tiers[tier].codec = logic.codec_name(tier_codec[tier]);
         }
@@ -332,7 +376,9 @@ impl<'a> SimEngine<'a> {
         // bigger payloads would otherwise run at different effective
         // concurrency from the same config) — per tier, since preset
         // codecs change a tier's upload size.
-        let tier_upload_bytes: Vec<usize> = tier_codec
+        // (`mut`: a mid-run adaptive rekey re-prices the tier's uplink;
+        // the arrival-rate calibration below is start-of-run only.)
+        let mut tier_upload_bytes: Vec<usize> = tier_codec
             .iter()
             .map(|&codec| logic.upload_bytes_for(codec, d))
             .collect();
@@ -361,6 +407,13 @@ impl<'a> SimEngine<'a> {
         let mut stores: Vec<SnapshotStore> = (0..server.num_server_codecs())
             .map(|f| SnapshotStore::new(server.t(), server.family_snapshot(f)))
             .collect();
+
+        // Adaptive-controller observation window: per-tier uploads and
+        // wire bytes since the last controller pass. Plain counting —
+        // never serialized, never drawn from — so recording it cannot
+        // perturb an adaptive-off run.
+        let mut win_uploads: Vec<u64> = vec![0; scenario.num_tiers()];
+        let mut win_bytes: Vec<u64> = vec![0; scenario.num_tiers()];
 
         let mut queue = EventQueue::new();
         let mut trips = 0u64;
@@ -622,6 +675,8 @@ impl<'a> SimEngine<'a> {
                             tier_download_bytes[tier],
                         );
                     }
+                    win_uploads[tier] += 1;
+                    win_bytes[tier] += upload.msg.wire_bytes() as u64;
                     let produced: Option<Vec<Broadcast>> = if edges.is_empty() {
                         if let Some(j) = journal.as_mut() {
                             j.write(&JEvent::Ingest {
@@ -702,6 +757,119 @@ impl<'a> SimEngine<'a> {
                                     payload: b.msg.payload,
                                 })?;
                             }
+                        }
+                        // Adaptive-quantization controller mirror
+                        // (`[scenario.adaptive]`): every `interval`
+                        // steps, project the next window's uplink
+                        // traffic from the window just observed and
+                        // walk the slowest tiers down the ladder until
+                        // it fits the budget — the same greedy pass the
+                        // TCP leader runs per worker (`net.adaptive`),
+                        // keyed by tier. Switches land exactly at this
+                        // step boundary: every later ingest (including
+                        // trips already in flight, whose compute is
+                        // lazy) encodes with the new codec, and the
+                        // journal's Rekey event pins the cutover so
+                        // replay stays bit-exact.
+                        if adaptive.enabled
+                            && !ladder.is_empty()
+                            && server.t() % adaptive.interval == 0
+                        {
+                            let interval = adaptive.interval as f64;
+                            let n_tiers = scenario.num_tiers();
+                            // Eligible for a switch: tiers with enough
+                            // window uploads to score. Score: the
+                            // configured uplink bandwidth when bounded,
+                            // else the observed window upload rate —
+                            // lower score = first to downshift.
+                            let mut eligible: Vec<(usize, f64)> = Vec::new();
+                            for t in 0..n_tiers {
+                                if win_uploads[t] < adaptive.min_uploads.max(1) {
+                                    continue;
+                                }
+                                let score = if tier_mbps[t] > 0.0 {
+                                    tier_mbps[t]
+                                } else {
+                                    win_uploads[t] as f64 / interval
+                                };
+                                eligible.push((t, score));
+                            }
+                            // Projected bytes/step if nothing changes:
+                            // what each tier actually shipped over the
+                            // window. Every tier counts toward the
+                            // projection (the budget is global).
+                            let mut rate: Vec<f64> = vec![0.0; n_tiers];
+                            let mut bytes_now: Vec<u64> = vec![0; n_tiers];
+                            let mut projected = 0.0f64;
+                            for t in 0..n_tiers {
+                                rate[t] = win_uploads[t] as f64 / interval;
+                                bytes_now[t] = if win_uploads[t] > 0 {
+                                    win_bytes[t] / win_uploads[t]
+                                } else {
+                                    0
+                                };
+                                projected += win_bytes[t] as f64 / interval;
+                            }
+                            // Greedy: move the lowest-scored movable
+                            // tier one ladder level down (the largest
+                            // entry strictly cheaper than its current
+                            // codec), cycling until the projection fits
+                            // or everyone is at the bottom.
+                            let mut switches: Vec<(usize, usize)> = Vec::new();
+                            let budget = adaptive.budget_bytes_per_step as f64;
+                            while projected > budget {
+                                let mut pick: Option<(usize, f64, usize)> = None;
+                                for &(t, score) in &eligible {
+                                    let cur = switches
+                                        .iter()
+                                        .rev()
+                                        .find(|&&(st, _)| st == t)
+                                        .map(|&(_, idx)| ladder[idx].2)
+                                        .unwrap_or(bytes_now[t]);
+                                    let Some(down) =
+                                        ladder.iter().rposition(|&(_, _, b)| b < cur)
+                                    else {
+                                        continue; // already at the bottom
+                                    };
+                                    if pick.map_or(true, |(_, best, _)| score < best) {
+                                        pick = Some((t, score, down));
+                                    }
+                                }
+                                let Some((t, _, idx)) = pick else { break };
+                                let cur = switches
+                                    .iter()
+                                    .rev()
+                                    .find(|&&(st, _)| st == t)
+                                    .map(|&(_, i)| ladder[i].2)
+                                    .unwrap_or(bytes_now[t]);
+                                projected -= rate[t] * (cur - ladder[idx].2) as f64;
+                                switches.retain(|&(st, _)| st != t);
+                                switches.push((t, idx));
+                            }
+                            for (t, idx) in switches {
+                                let (new_id, ref name, bytes) = ladder[idx];
+                                let old_id = tier_codec[t];
+                                if new_id == old_id {
+                                    continue;
+                                }
+                                if let Some(j) = journal.as_mut() {
+                                    j.write(&JEvent::Rekey {
+                                        time: clock,
+                                        step: server.t(),
+                                        worker: t as u64,
+                                        old: old_id as u64,
+                                        new: new_id as u64,
+                                        spec: name.clone(),
+                                    })?;
+                                }
+                                tier_codec[t] = new_id;
+                                tier_upload_bytes[t] = bytes as usize;
+                                scenario.metrics.tiers[t].codec = name.clone();
+                                scenario.metrics.tiers[t].codec_switches += 1;
+                            }
+                            // fresh observation window
+                            win_uploads.iter_mut().for_each(|v| *v = 0);
+                            win_bytes.iter_mut().for_each(|v| *v = 0);
                         }
                         if tel.progress > 0 && server.t() % tel.progress == 0 {
                             if let Some(line) = progress_line(
@@ -1630,5 +1798,145 @@ mod tests {
         c.telemetry.checkpoint_every = 5;
         let err = SimEngine::new(&c, &b, 1).run().unwrap_err().to_string();
         assert!(err.contains("edge buffers are not checkpointed"), "{err}");
+    }
+
+    /// Two-tier population with the slow tier on a thin uplink, plus an
+    /// adaptive controller whose budget of 1 byte/step can never be met
+    /// — every pass walks every eligible tier to the bottom of the
+    /// ladder, so downshifts are guaranteed without hand-computing
+    /// codec wire sizes.
+    fn adaptive_cfg() -> Config {
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.max_server_steps = 60;
+        c.stop.target_accuracy = 2.0; // fixed horizon
+        let mut fast = TierConfig::named("fast");
+        fast.weight = 0.5;
+        fast.upload_mbps = 100.0;
+        let mut slow = TierConfig::named("slow");
+        slow.weight = 0.5;
+        slow.upload_mbps = 0.5;
+        c.scenario.tiers = vec![fast, slow];
+        c.scenario.adaptive.enabled = true;
+        c.scenario.adaptive.interval = 5;
+        c.scenario.adaptive.budget_bytes_per_step = 1;
+        c.scenario.adaptive.levels =
+            vec!["qsgd:8".into(), "qsgd:4".into(), "qsgd:2".into()];
+        c.scenario.adaptive.min_uploads = 1;
+        c.validate().unwrap();
+        c
+    }
+
+    #[test]
+    fn adaptive_disabled_knobs_are_inert() {
+        // a fully-populated but disabled [scenario.adaptive] table draws
+        // nothing, registers nothing and fingerprints identically to a
+        // config that never mentions it (PR 8 byte-identity)
+        let b = backend();
+        let mut c = adaptive_cfg();
+        c.scenario.adaptive.enabled = false;
+        let mut plain = c.clone();
+        plain.scenario.adaptive = Default::default();
+        plain.validate().unwrap();
+        let r_off = SimEngine::new(&c, &b, 41).run().unwrap();
+        let r_plain = SimEngine::new(&plain, &b, 41).run().unwrap();
+        assert_eq!(r_off.fingerprint, r_plain.fingerprint);
+        assert_eq!(r_off.comm.uploads, r_plain.comm.uploads);
+        assert_eq!(r_off.curve.len(), r_plain.curve.len());
+        for (p, q) in r_off.curve.iter().zip(&r_plain.curve) {
+            assert_eq!(p.time.to_bits(), q.time.to_bits());
+            assert_eq!(p.val_loss.to_bits(), q.val_loss.to_bits());
+        }
+        assert!(r_off.scenario.tiers.iter().all(|t| t.codec_switches == 0));
+    }
+
+    #[test]
+    fn adaptive_controller_downshifts_and_is_deterministic() {
+        // acceptance: same-seed determinism under mid-run rekeys for
+        // S in {1, 4}, tiers end on the cheapest ladder level, and the
+        // adaptive run ships strictly fewer bytes per upload than the
+        // same population pinned to the static default codec
+        let b = backend();
+        for buffer in [1usize, 4] {
+            let mut c = adaptive_cfg();
+            c.fl.buffer_size = buffer;
+            let r1 = SimEngine::new(&c, &b, 42).run().unwrap();
+            let r2 = SimEngine::new(&c, &b, 42).run().unwrap();
+            assert_eq!(r1.comm.uploads, r2.comm.uploads);
+            assert_eq!(r1.comm.upload_bytes, r2.comm.upload_bytes);
+            assert_eq!(
+                r1.final_accuracy.to_bits(),
+                r2.final_accuracy.to_bits(),
+                "S={buffer}: rekeyed run not deterministic"
+            );
+            assert_eq!(r1.scenario.tiers, r2.scenario.tiers);
+            let switches: u64 =
+                r1.scenario.tiers.iter().map(|t| t.codec_switches).sum();
+            assert!(switches >= 1, "S={buffer}: controller never switched");
+            // the 1-byte budget walks every scored tier to the bottom in
+            // one Rekey (qsgd:8 -> qsgd:2 directly, skipping qsgd:4)
+            for t in &r1.scenario.tiers {
+                if t.codec_switches > 0 {
+                    assert!(
+                        t.codec.starts_with("qsgd:2"),
+                        "tier {} ended on {:?}",
+                        t.name,
+                        t.codec
+                    );
+                    assert_eq!(t.codec_switches, 1, "tier {}", t.name);
+                }
+            }
+            // per-tier byte accounting still sums to the server's totals
+            let bytes: u64 =
+                r1.scenario.tiers.iter().map(|t| t.upload_bytes).sum();
+            assert_eq!(bytes, r1.comm.upload_bytes);
+            let mut s = c.clone();
+            s.scenario.adaptive = Default::default();
+            s.validate().unwrap();
+            let r_static = SimEngine::new(&s, &b, 42).run().unwrap();
+            assert!(
+                r1.comm.kb_per_upload() < r_static.comm.kb_per_upload(),
+                "S={buffer}: adaptive {} kb/up >= static {}",
+                r1.comm.kb_per_upload(),
+                r_static.comm.kb_per_upload()
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_journal_records_rekeys_and_replays() {
+        // the journal carries the ladder registrations in its header and
+        // a Rekey event at each switch; replay re-executes the run —
+        // mixed-codec ingests on both sides of the cutover — bit-exactly
+        let b = backend();
+        let mut c = adaptive_cfg();
+        let path = temp_journal("adaptive_replay");
+        c.telemetry.journal = Some(path.clone());
+        let r = SimEngine::new(&c, &b, 43).run().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let count = |kind: &str| {
+            let tag = format!("\"ev\":\"{kind}\"");
+            text.lines().filter(|l| l.contains(&tag)).count() as u64
+        };
+        let switches: u64 = r.scenario.tiers.iter().map(|t| t.codec_switches).sum();
+        assert!(switches >= 1);
+        assert_eq!(count("rekey"), switches, "one journal event per applied switch");
+        // ladder levels are registered in the header: codec events for
+        // qsgd:4 and qsgd:2 (qsgd:8 dedups into the default id 0)
+        assert_eq!(count("codec"), 2, "ladder registrations missing");
+        let report = crate::telemetry::replay_file(&path).unwrap();
+        assert!(report.finalized);
+        assert_eq!(report.steps, r.server_steps);
+        assert_eq!(report.uploads, r.comm.uploads);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn checkpointed_adaptive_run_is_rejected() {
+        let b = backend();
+        let mut c = adaptive_cfg();
+        c.telemetry.journal = Some(temp_journal("adaptive_reject"));
+        c.telemetry.checkpoint_every = 5;
+        let err = SimEngine::new(&c, &b, 1).run().unwrap_err().to_string();
+        assert!(err.contains("scenario.adaptive"), "{err}");
     }
 }

@@ -113,6 +113,14 @@ pub enum Event {
         codec: u64,
         payload: Vec<u8>,
     },
+    /// The adaptive controller switched a client's upload codec
+    /// mid-run (`net.adaptive` on the TCP leader, `[scenario.adaptive]`
+    /// in the simulator). `worker` is the TCP worker id or the sim tier
+    /// index; `old`/`new` are client-registry codec ids and `spec` the
+    /// resolved spec of the new codec. Informational for replay — the
+    /// ingest events carry their own codec ids — but it pins the switch
+    /// point so a journal is a complete record of the control loop.
+    Rekey { time: f64, step: u64, worker: u64, old: u64, new: u64, spec: String },
     /// An evaluation point (sim only — the curve).
     Eval {
         time: f64,
@@ -147,6 +155,7 @@ impl Event {
             Event::IngestPartial { .. } => "ingest_partial",
             Event::Step { .. } => "step",
             Event::Broadcast { .. } => "broadcast",
+            Event::Rekey { .. } => "rekey",
             Event::Eval { .. } => "eval",
             Event::Checkpoint { .. } => "checkpoint",
             Event::Final { .. } => "final",
@@ -252,6 +261,14 @@ impl Event {
                     pairs.push(("codec", Json::num(*codec as f64)));
                 }
                 pairs.push(("payload", Json::str(hex_bytes(payload))));
+            }
+            Event::Rekey { time, step, worker, old, new, spec } => {
+                pairs.push(("time", Json::num(*time)));
+                pairs.push(("step", Json::num(*step as f64)));
+                pairs.push(("worker", Json::num(*worker as f64)));
+                pairs.push(("old", Json::num(*old as f64)));
+                pairs.push(("new", Json::num(*new as f64)));
+                pairs.push(("spec", Json::str(spec.clone())));
             }
             Event::Eval { time, step, uploads, val_loss, val_accuracy } => {
                 pairs.push(("time", Json::num(*time)));
@@ -373,6 +390,14 @@ impl Event {
                     None => 0,
                 },
                 payload: parse_hex_bytes(&text(j, "payload")?)?,
+            },
+            "rekey" => Event::Rekey {
+                time: num(j, "time")?,
+                step: uint(j, "step")?,
+                worker: uint(j, "worker")?,
+                old: uint(j, "old")?,
+                new: uint(j, "new")?,
+                spec: text(j, "spec")?,
             },
             "eval" => Event::Eval {
                 time: num(j, "time")?,
@@ -610,6 +635,7 @@ mod tests {
                 payload: vec![1, 2, 3],
             },
             Event::Broadcast { time: 4.5, step: 7, absolute: true, codec: 2, payload: vec![4, 5] },
+            Event::Rekey { time: 4.75, step: 8, worker: 3, old: 0, new: 2, spec: "qsgd:2".into() },
             Event::Eval { time: 5.0, step: 8, uploads: 24, val_loss: 0.3125, val_accuracy: 0.875 },
             Event::Checkpoint {
                 time: 6.0,
@@ -683,6 +709,11 @@ mod tests {
         assert!(Event::from_line("{\"ev\":\"codec\",\"reg\":\"client\"}").is_err());
         // right kind, wrong type
         assert!(Event::from_line("{\"ev\":\"codec\",\"reg\":7,\"id\":0,\"spec\":\"x\"}").is_err());
+        // rekey without its new codec id (or any other field) is rejected
+        assert!(Event::from_line(
+            "{\"ev\":\"rekey\",\"time\":1,\"step\":2,\"worker\":0,\"old\":0,\"spec\":\"qsgd:2\"}"
+        )
+        .is_err());
     }
 
     #[test]

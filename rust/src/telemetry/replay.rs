@@ -198,6 +198,26 @@ pub fn replay_events(events: &[Event]) -> Result<ReplayReport> {
                 }
                 report.broadcasts_checked += 1;
             }
+            Event::Rekey { worker, old, new, spec, .. } => {
+                // the switch itself moves no server state (ingests carry
+                // their own codec ids), but the ids it names must exist —
+                // a rekey to an unregistered codec means the journal lost
+                // a Codec event
+                let s = server.as_ref().ok_or_else(|| at("rekey before init"))?;
+                let n = s.num_client_codecs() as u64;
+                if *old >= n || *new >= n {
+                    bail!(at(&format!(
+                        "rekey of worker {worker} switches codec {old} -> {new}, but only \
+                         {n} client codecs are registered at this point"
+                    )));
+                }
+                if s.client_codec_name(*new as usize) != *spec {
+                    bail!(at(&format!(
+                        "rekey spec '{spec}' disagrees with registry entry '{}' at id {new}",
+                        s.client_codec_name(*new as usize)
+                    )));
+                }
+            }
             // informational for replay: arrivals/evals describe the
             // population and the curve, not the server's input stream
             Event::Arrival { .. } | Event::Eval { .. } => {}
@@ -454,6 +474,131 @@ mod tests {
         let back: Vec<Event> =
             lines.iter().map(|l| Event::from_line(l).unwrap()).collect();
         assert_eq!(replay_events(&back).unwrap(), report);
+    }
+
+    /// Record a run whose single worker is rekeyed mid-run (qsgd:8 ->
+    /// top:0.25 after the second step): the new codec's registration and
+    /// the Rekey event land between two ingests, exactly as the adaptive
+    /// controller journals them.
+    fn record_rekey_run(lose_codec_event: bool) -> Vec<Event> {
+        let mut cfg = Config::default();
+        cfg.fl.buffer_size = 2;
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:4".into();
+        let d = 64 + 3;
+        let seed = 17u64;
+        let mut server = Server::build(&cfg, vec![0.0; d], seed).unwrap();
+        let mut events = vec![
+            Event::Meta {
+                runtime: "tcp".into(),
+                algorithm: cfg.fl.algorithm.name().into(),
+                d: d as u64,
+                seed,
+                fingerprint: crate::telemetry::run_fingerprint(&cfg, seed),
+                git: None,
+                config: cfg.to_json(),
+            },
+            Event::Init { x0: vec![0.0; d], server_seed: seed },
+        ];
+        let qc = parse_spec("qsgd:8").unwrap();
+        let qt = parse_spec("top:0.25").unwrap();
+        let mut rng = Prng::new(9);
+        let mut codec = 0u64;
+        for round in 0..8u64 {
+            if round == 4 {
+                // the controller downshifts worker 0 at a step boundary
+                let new = server.register_client_codec("top:0.25").unwrap();
+                events.push(Event::Codec {
+                    reg: "client".into(),
+                    id: new as u64,
+                    spec: "top:0.25".into(),
+                });
+                events.push(Event::Rekey {
+                    time: round as f64,
+                    step: server.t(),
+                    worker: 0,
+                    old: codec,
+                    new: new as u64,
+                    spec: server.client_codec_name(new),
+                });
+                codec = new as u64;
+            }
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.03 + round as f32).sin()).collect();
+            let msg = if codec == 0 {
+                qc.quantize(&delta, &mut rng)
+            } else {
+                qt.quantize(&delta, &mut rng)
+            };
+            events.push(Event::Ingest {
+                time: round as f64,
+                step: server.t(),
+                worker: 0,
+                codec,
+                staleness: 0,
+                payload: msg.payload.clone(),
+            });
+            if let ServerStep::Stepped(bs) = server.ingest_from(&msg, 0, codec as usize).unwrap()
+            {
+                events.push(Event::Step {
+                    time: round as f64,
+                    step: server.t(),
+                    k: 2,
+                    uploads: server.comm.uploads,
+                    upload_bytes: server.comm.upload_bytes,
+                    broadcast_bytes: server.comm.broadcast_bytes,
+                    stale_mean: server.staleness_mean(),
+                    stale_max: server.staleness_max,
+                    stages: None,
+                });
+                for b in bs {
+                    events.push(Event::Broadcast {
+                        time: round as f64,
+                        step: b.t,
+                        absolute: b.absolute,
+                        codec: b.codec as u64,
+                        payload: b.msg.payload,
+                    });
+                }
+            }
+        }
+        events.push(Event::Final {
+            step: server.t(),
+            uploads: server.comm.uploads,
+            upload_bytes: server.comm.upload_bytes,
+            broadcasts: server.comm.broadcasts,
+            broadcast_bytes: server.comm.broadcast_bytes,
+            model: server.model().to_vec(),
+        });
+        if lose_codec_event {
+            events.retain(|ev| {
+                !matches!(ev, Event::Codec { spec, .. } if spec == "top:0.25")
+            });
+        }
+        events
+    }
+
+    #[test]
+    fn rekeyed_run_replays_bit_identically() {
+        let events = record_rekey_run(false);
+        let report = replay_events(&events).unwrap();
+        assert_eq!(report.steps, 4);
+        assert_eq!(report.uploads, 8);
+        assert!(report.finalized);
+        // the rekey + mid-run codec events survive the JSONL round trip
+        let lines: Vec<String> = events.iter().map(Event::to_line).collect();
+        let back: Vec<Event> =
+            lines.iter().map(|l| Event::from_line(l).unwrap()).collect();
+        assert_eq!(replay_events(&back).unwrap(), report);
+    }
+
+    #[test]
+    fn rekey_to_an_unregistered_codec_fails_the_replay() {
+        // dropping the Codec event makes the Rekey point at an id the
+        // registry does not have — replay must refuse, not guess
+        let events = record_rekey_run(true);
+        let err = replay_events(&events).unwrap_err().to_string();
+        assert!(err.contains("rekey"), "{err}");
     }
 
     #[test]

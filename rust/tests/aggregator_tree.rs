@@ -214,7 +214,13 @@ fn tcp_trivial_tree_broadcasts_bit_identical_to_flat_server() {
     sock.set_nodelay(true).unwrap();
     write_frame(
         &mut sock,
-        &Message::Hello { version: PROTOCOL_VERSION, tier: None, quant_client: None }.encode(),
+        &Message::Hello {
+            version: PROTOCOL_VERSION,
+            tier: None,
+            quant_client: None,
+            bandwidth_hint: None,
+        }
+        .encode(),
     );
     let (client_quant, join_x0) = match Message::decode(&read_frame(&mut sock)).unwrap() {
         Message::JoinV2 { version, codec_id, d: jd, x0, client_quant, .. } => {

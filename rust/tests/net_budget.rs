@@ -67,7 +67,8 @@ fn budget_cfg() -> Config {
 
 /// v2 handshake over a raw socket; returns (worker_id, x0, server_quant).
 fn hello(sock: &mut TcpStream) -> (u32, Vec<f32>, String) {
-    let h = Message::Hello { version: 2, tier: None, quant_client: None };
+    let h =
+        Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None };
     write_frame(sock, &h.encode());
     match Message::decode(&read_frame(sock)).unwrap() {
         Message::JoinV2 { worker_id, x0, server_quant, server_codec_id, .. } => {
@@ -211,7 +212,8 @@ fn stalled_handshake_does_not_block_other_joins() {
     // peer B is a well-behaved v2 worker; its JoinV2 must arrive while
     // A is still wedged (well inside A's grace window)
     let mut ok = TcpStream::connect(&addr).unwrap();
-    let h = Message::Hello { version: 2, tier: None, quant_client: None };
+    let h =
+        Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None };
     write_frame(&mut ok, &h.encode());
     ok.set_read_timeout(Some(Duration::from_millis(1500))).unwrap();
     match Message::decode(&read_frame(&mut ok)).unwrap() {

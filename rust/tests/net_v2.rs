@@ -16,6 +16,14 @@
 //! Everything runs under the `QAFEL_TEST_SHARDS` matrix: broadcast
 //! payloads are bit-identical for every shard count, so the goldens and
 //! replays hold at S=1 and S=4 alike.
+//!
+//! The adaptive-quantization control loop (ISSUE 9) adds the `Rekey`
+//! renegotiation state machine on top: a scripted raw-socket worker
+//! pins the Broadcast-then-Rekey frame order, the in-flight-old-codec
+//! transition window, per-epoch byte accounting across a switch, and
+//! the cutover after which a stale tag is a hard error; a loopback run
+//! under an unmeetable byte budget drives every worker down the ladder
+//! and still replays bit-identically.
 
 use qafel::config::{Algorithm, Config, TierConfig};
 use qafel::coordinator::{Server, ServerStep};
@@ -347,7 +355,8 @@ fn future_version_hello_negotiates_down_to_v2() {
     let mut sock = TcpStream::connect(&addr).unwrap();
     write_frame(
         &mut sock,
-        &Message::Hello { version: 9, tier: None, quant_client: None }.encode(),
+        &Message::Hello { version: 9, tier: None, quant_client: None, bandwidth_hint: None }
+            .encode(),
     );
     let join = Message::decode(&read_frame(&mut sock)).unwrap();
     match join {
@@ -381,7 +390,8 @@ fn mismatched_codec_id_error_names_worker_and_peer() {
         let mut sock = TcpStream::connect(&addr).unwrap();
         write_frame(
             &mut sock,
-            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+            &Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                .encode(),
         );
         let _join = read_frame(&mut sock);
         write_frame(
@@ -422,7 +432,8 @@ fn wrong_sized_upload_error_names_worker_and_codec() {
         let mut sock = TcpStream::connect(&addr).unwrap();
         write_frame(
             &mut sock,
-            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+            &Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                .encode(),
         );
         let _join = read_frame(&mut sock);
         // a 3-byte payload is no valid qsgd:8 encoding at d=8
@@ -467,7 +478,8 @@ fn garbage_frame_is_fatal_with_worker_context_but_disconnect_is_not() {
         let mut sock = TcpStream::connect(&addr0).unwrap();
         write_frame(
             &mut sock,
-            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+            &Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                .encode(),
         );
         let _join = read_frame(&mut sock);
         drop(sock);
@@ -479,7 +491,8 @@ fn garbage_frame_is_fatal_with_worker_context_but_disconnect_is_not() {
         let mut sock = TcpStream::connect(&addr).unwrap();
         write_frame(
             &mut sock,
-            &Message::Hello { version: 2, tier: None, quant_client: None }.encode(),
+            &Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                .encode(),
         );
         let _join = read_frame(&mut sock);
         write_frame(&mut sock, &[99u8]); // unknown message tag
@@ -491,6 +504,365 @@ fn garbage_frame_is_fatal_with_worker_context_but_disconnect_is_not() {
     assert!(err.contains("worker 1"), "wrong or missing worker id: {err}");
     assert!(err.contains("127.0.0.1"), "missing peer addr: {err}");
     client.join().unwrap();
+}
+
+/// Config for the scripted renegotiation tests: d=8, K=1 (every upload
+/// steps), the controller scores every step, and the byte budget equals
+/// qsgd:4's wire size — so a lone worker uploading qsgd:8 overshoots
+/// and is walked exactly one ladder level down.
+fn adaptive_cfg(budget_bytes_per_step: u64, steps: u64) -> Config {
+    let mut c = mixed_cfg();
+    c.scenario.tiers.clear();
+    c.fl.buffer_size = 1;
+    c.stop.max_server_steps = steps;
+    c.net.adaptive.enabled = true;
+    c.net.adaptive.interval = 1;
+    c.net.adaptive.min_uploads = 1;
+    c.net.adaptive.budget_bytes_per_step = budget_bytes_per_step;
+    c.net.adaptive.levels = vec!["qsgd:8".into(), "qsgd:4".into(), "qsgd:2".into()];
+    c
+}
+
+#[test]
+fn rekey_transition_accepts_in_flight_uploads_and_accounts_per_epoch() {
+    // One scripted worker, four uploads: the first overshoots the
+    // budget and triggers a Rekey qsgd:8 -> qsgd:4; the second is still
+    // tagged with the old codec (in flight across the switch) and must
+    // be accepted and attributed to the *old* epoch; the third carries
+    // the new tag and cuts the transition window over; the fourth shows
+    // the downshifted worker now fits the budget (no further Rekey).
+    let d = 8usize;
+    let q8 = parse_spec("qsgd:8").unwrap();
+    let q4 = parse_spec("qsgd:4").unwrap();
+    let b8 = q8.expected_bytes(d) as u64;
+    let b4 = q4.expected_bytes(d) as u64;
+    assert!(b8 > b4, "ladder must be strictly ordered at d={d}");
+    let cfg = adaptive_cfg(b4, 4);
+    let x0 = vec![0.0f32; d];
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || {
+        let mut l = Leader::new(cfg, x0, 5);
+        l.record_events = true;
+        l.run_on(listener, 1).unwrap()
+    });
+
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    write_frame(
+        &mut sock,
+        &Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+            .encode(),
+    );
+    match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::JoinV2 { codec_id, d: jd, .. } => {
+            assert_eq!(codec_id, 0);
+            assert_eq!(jd as usize, d);
+        }
+        other => panic!("expected JoinV2, got {other:?}"),
+    }
+
+    let mut rng = Prng::new(3);
+    let delta: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).sin() * 0.1).collect();
+    let mut upload = |sock: &mut TcpStream, tag: u32, t_start: u64, q: &dyn qafel::quant::Quantizer, rng: &mut Prng| {
+        let msg = q.quantize(&delta, rng);
+        write_frame(
+            sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start,
+                trip: t_start,
+                train_loss: 0.0,
+                codec_id: tag,
+                payload: msg.payload,
+            }
+            .encode(),
+        );
+    };
+
+    // upload 1 (qsgd:8): steps to t=1, overshoots the budget. The wire
+    // order is pinned: Broadcast for the step FIRST, then the Rekey —
+    // the writer queue is FIFO across step and control frames.
+    upload(&mut sock, 0, 0, q8.as_ref(), &mut rng);
+    match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::Broadcast { t, .. } => assert_eq!(t, 1),
+        other => panic!("expected Broadcast before Rekey, got {other:?}"),
+    }
+    let new_id = match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::Rekey { worker_id, codec_id, spec, t } => {
+            assert_eq!(worker_id, 0);
+            assert_eq!(spec, "qsgd:4");
+            assert_eq!(t, 1, "Rekey must carry the step it was decided at");
+            codec_id
+        }
+        other => panic!("expected Rekey after Broadcast, got {other:?}"),
+    };
+
+    // upload 2: still tagged 0 — in flight from before the worker saw
+    // the Rekey. Accepted, and no second Rekey while the transition
+    // window is open (the controller skips workers mid-switch).
+    upload(&mut sock, 0, 1, q8.as_ref(), &mut rng);
+    match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::Broadcast { t, .. } => assert_eq!(t, 2),
+        other => panic!("expected Broadcast, got {other:?}"),
+    }
+
+    // uploads 3+4: the new tag cuts the window over; at qsgd:4 the
+    // projection fits the budget, so no further Rekey arrives.
+    upload(&mut sock, new_id, 2, q4.as_ref(), &mut rng);
+    match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::Broadcast { t, .. } => assert_eq!(t, 3),
+        other => panic!("expected Broadcast, got {other:?}"),
+    }
+    upload(&mut sock, new_id, 3, q4.as_ref(), &mut rng);
+    match Message::decode(&read_frame(&mut sock)).unwrap() {
+        Message::Broadcast { t, .. } => assert_eq!(t, 4),
+        other => panic!("expected Broadcast, got {other:?}"),
+    }
+    assert!(matches!(Message::decode(&read_frame(&mut sock)).unwrap(), Message::Shutdown));
+    write_frame(&mut sock, &Message::Bye { worker_id: 0, uploads: 4 }.encode());
+    drop(sock);
+
+    let report = leader.join().unwrap();
+    assert_eq!(report.server_steps, 4);
+    assert_eq!(report.comm.uploads, 4);
+
+    // exact per-epoch byte accounting across the switch: two uploads on
+    // each codec, in-flight old-tag uploads attributed to their epoch
+    let ws = &report.worker_stats[0];
+    assert_eq!(ws.rekeys, 1);
+    assert_eq!(ws.codec, "qsgd:4");
+    assert_eq!(ws.codec_id, new_id as usize);
+    assert_eq!(ws.epochs.len(), 2);
+    assert_eq!(ws.epochs[0].codec, "qsgd:8");
+    assert_eq!(ws.epochs[0].codec_id, 0);
+    assert_eq!(ws.epochs[0].uploads, 2);
+    assert_eq!(ws.epochs[0].upload_bytes, 2 * b8);
+    assert_eq!(ws.epochs[1].codec, "qsgd:4");
+    assert_eq!(ws.epochs[1].codec_id, new_id as usize);
+    assert_eq!(ws.epochs[1].uploads, 2);
+    assert_eq!(ws.epochs[1].upload_bytes, 2 * b4);
+    assert_eq!(ws.upload_bytes, 2 * b8 + 2 * b4);
+    assert_eq!(report.comm.upload_bytes, ws.upload_bytes);
+
+    // registry dedup pinned: "qsgd:8" is the config default (id 0), so
+    // the ladder registers exactly qsgd:4 and qsgd:2 — once each
+    let events = report.events.expect("record_events was set");
+    let mut client_codecs: Vec<String> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::Codec { reg, spec, .. } if reg == "client" => Some(spec.clone()),
+            _ => None,
+        })
+        .collect();
+    client_codecs.sort();
+    assert_eq!(client_codecs, vec!["qsgd:2", "qsgd:4"]);
+    let rekeys: Vec<_> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::Rekey { step, worker, old, new, spec, .. } => {
+                Some((*step, *worker, *old, *new, spec.clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(rekeys, vec![(1, 0, 0, new_id as u64, "qsgd:4".to_string())]);
+
+    // the recorded stream — ingests under both codec ids straddling the
+    // Rekey — replays bit-identically through the journal machinery
+    let replay = replay_events(&events).unwrap();
+    assert_eq!(replay.steps, 4);
+    assert_eq!(replay.uploads, 4);
+    assert!(replay.finalized);
+}
+
+#[test]
+fn stale_codec_tag_after_cutover_is_rejected_with_context() {
+    // Once a worker has uploaded under its post-Rekey codec, the
+    // transition window is closed: per-connection frame order means no
+    // older-tagged frame can legitimately follow, so one arriving is
+    // the same hard error as any other mismatched tag.
+    let d = 8usize;
+    let q8 = parse_spec("qsgd:8").unwrap();
+    let q4 = parse_spec("qsgd:4").unwrap();
+    let budget = q4.expected_bytes(d) as u64;
+    let cfg = adaptive_cfg(budget, 10);
+    let x0 = vec![0.0f32; d];
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || Leader::new(cfg, x0, 5).run_on(listener, 1));
+
+    let client = std::thread::spawn(move || -> u32 {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        sock.set_nodelay(true).unwrap();
+        write_frame(
+            &mut sock,
+            &Message::Hello { version: 2, tier: None, quant_client: None, bandwidth_hint: None }
+                .encode(),
+        );
+        let _join = read_frame(&mut sock);
+        let mut rng = Prng::new(4);
+        let delta: Vec<f32> = (0..d).map(|i| (i as f32 * 0.2).cos() * 0.1).collect();
+        let m8 = q8.quantize(&delta, &mut rng);
+        write_frame(
+            &mut sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 0,
+                trip: 0,
+                train_loss: 0.0,
+                codec_id: 0,
+                payload: m8.payload,
+            }
+            .encode(),
+        );
+        let _bcast = read_frame(&mut sock);
+        let new_id = match Message::decode(&read_frame(&mut sock)).unwrap() {
+            Message::Rekey { codec_id, .. } => codec_id,
+            other => panic!("expected Rekey, got {other:?}"),
+        };
+        // cutover: first upload under the new tag closes the window
+        let m4 = q4.quantize(&delta, &mut rng);
+        write_frame(
+            &mut sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 1,
+                trip: 1,
+                train_loss: 0.0,
+                codec_id: new_id,
+                payload: m4.payload,
+            }
+            .encode(),
+        );
+        let _bcast = read_frame(&mut sock);
+        // a frame with the superseded tag after the cutover is fatal
+        let m8b = q8.quantize(&delta, &mut rng);
+        write_frame(
+            &mut sock,
+            &Message::UpdateV2 {
+                worker_id: 0,
+                t_start: 2,
+                trip: 2,
+                train_loss: 0.0,
+                codec_id: 0,
+                payload: m8b.payload,
+            }
+            .encode(),
+        );
+        let mut rest = Vec::new();
+        let _ = sock.read_to_end(&mut rest);
+        new_id
+    });
+
+    let err = leader.join().unwrap().unwrap_err().to_string();
+    let new_id = client.join().unwrap();
+    assert!(err.contains("worker 0"), "missing worker id: {err}");
+    assert!(err.contains("upload tagged codec id 0"), "missing stale tag: {err}");
+    assert!(
+        err.contains(&format!("negotiated codec id {new_id}")),
+        "missing negotiated id: {err}"
+    );
+    assert!(err.contains("qsgd:4"), "missing negotiated codec name: {err}");
+}
+
+#[test]
+fn adaptive_loopback_downshifts_every_worker_and_replays() {
+    // Full control loop against real Workers: a byte budget nobody can
+    // meet walks every scoreable worker straight down to the ladder
+    // bottom (one Rekey each — the greedy projection moves a worker
+    // repeatedly within one decision, emitting a single frame). One
+    // worker announces a bandwidth hint, exercising the hinted scoring
+    // path; the run still converges and replays bit-identically.
+    let mut cfg = mixed_cfg();
+    cfg.scenario.tiers.clear();
+    cfg.net.adaptive.enabled = true;
+    cfg.net.adaptive.interval = 2;
+    cfg.net.adaptive.min_uploads = 1;
+    cfg.net.adaptive.budget_bytes_per_step = 1; // unmeetable by design
+    cfg.net.adaptive.levels = vec!["qsgd:8".into(), "qsgd:4".into(), "qsgd:2".into()];
+    let x0 = backend(33).init_params(0).unwrap();
+    let g0 = backend(33).grad_norm_sq(&x0);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader_x0 = x0.clone();
+    let leader = std::thread::spawn(move || {
+        let mut l = Leader::new(leader_cfg, leader_x0, 11);
+        l.record_events = true;
+        l.run_on(listener, 3).unwrap()
+    });
+
+    let mut workers = Vec::new();
+    for hint in [Some(0.25f32), None, None] {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut w = Worker::new(backend(33));
+            w.round_delay = std::time::Duration::from_millis(1);
+            w.bandwidth_hint = hint;
+            w.run(&addr).unwrap()
+        }));
+    }
+    let report = leader.join().unwrap();
+    let worker_reports: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    assert_eq!(report.server_steps, 30);
+    let g1 = backend(33).grad_norm_sq(&report.model);
+    assert!(g1 < g0 * 0.9, "run must still converge under rekeying: {g0} -> {g1}");
+
+    // every worker was downshifted to the ladder bottom in one Rekey,
+    // and both sides agree on the final codec
+    for r in &worker_reports {
+        assert_eq!(r.rekeys, 1, "worker {}", r.worker_id);
+        assert_eq!(r.codec, "qsgd:2", "worker {}", r.worker_id);
+    }
+    let hinted = report
+        .worker_stats
+        .iter()
+        .find(|w| w.bandwidth_hint == Some(0.25))
+        .expect("the announced bandwidth hint must reach the leader's stats");
+    assert_eq!(hinted.rekeys, 1);
+
+    // per-epoch accounting stays exact across the switch, including
+    // whatever old-codec uploads were in flight when the Rekey landed
+    for ws in &report.worker_stats {
+        assert_eq!(ws.rekeys, 1, "worker {}", ws.worker_id);
+        assert_eq!(ws.codec, "qsgd:2");
+        assert_eq!(ws.epochs.len(), 2);
+        assert_eq!(ws.epochs[0].codec, "qsgd:8");
+        assert_eq!(ws.epochs[1].codec, "qsgd:2");
+        let mut ep_uploads = 0u64;
+        let mut ep_bytes = 0u64;
+        for ep in &ws.epochs {
+            let per = parse_spec(&ep.codec).unwrap().expected_bytes(D) as u64;
+            assert_eq!(
+                ep.upload_bytes,
+                ep.uploads * per,
+                "worker {} epoch '{}' byte accounting",
+                ws.worker_id,
+                ep.codec
+            );
+            ep_uploads += ep.uploads;
+            ep_bytes += ep.upload_bytes;
+        }
+        assert_eq!(ep_uploads, ws.uploads, "worker {}", ws.worker_id);
+        assert_eq!(ep_bytes, ws.upload_bytes, "worker {}", ws.worker_id);
+    }
+    let total_bytes: u64 = report.worker_stats.iter().map(|w| w.upload_bytes).sum();
+    assert_eq!(total_bytes, report.comm.upload_bytes);
+
+    // the journal records one Rekey per worker and replays bit-exactly
+    let events = report.events.expect("record_events was set");
+    let rekey_events =
+        events.iter().filter(|ev| matches!(ev, Event::Rekey { .. })).count() as u64;
+    assert_eq!(rekey_events, report.worker_stats.iter().map(|w| w.rekeys).sum::<u64>());
+    let replay = replay_events(&events).unwrap();
+    assert_eq!(replay.steps, 30);
+    assert_eq!(replay.uploads, report.comm.uploads);
+    assert!(replay.finalized);
 }
 
 #[test]
@@ -505,8 +877,13 @@ fn unknown_tier_is_rejected_loudly() {
         let mut sock = TcpStream::connect(&addr).unwrap();
         write_frame(
             &mut sock,
-            &Message::Hello { version: 2, tier: Some("nosuch".into()), quant_client: None }
-                .encode(),
+            &Message::Hello {
+                version: 2,
+                tier: Some("nosuch".into()),
+                quant_client: None,
+                bandwidth_hint: None,
+            }
+            .encode(),
         );
         let mut rest = Vec::new();
         let _ = sock.read_to_end(&mut rest);

@@ -17,7 +17,10 @@ relies on, without linking the crate:
   nondecreasing cumulative upload/broadcast byte totals;
 * each `step` is followed by its `broadcast` (same step number), and
   `final`, when present, is the last event with totals matching the
-  last `step`.
+  last `step`;
+* `rekey` events (the adaptive controller switching a worker's upload
+  codec mid-run) carry the full old->new transition and never precede
+  `init`.
 
 Usage: check_journal.py RUN.jsonl [RUN2.jsonl ...]
        [--steps N]    require exactly N server steps
@@ -44,6 +47,7 @@ KNOWN_EVENTS = {
     "eval",
     "checkpoint",
     "final",
+    "rekey",
 }
 
 REQUIRED = {
@@ -75,6 +79,7 @@ REQUIRED = {
         "stale_max",
     ],
     "broadcast": ["time", "step", "absolute", "payload"],
+    "rekey": ["time", "step", "worker", "old", "new", "spec"],
     "eval": ["time", "step", "uploads", "val_loss", "val_accuracy"],
     "checkpoint": ["time", "step", "state"],
     "final": [
@@ -152,6 +157,8 @@ def check_file(path, want_steps=None, want_final=False):
                     err(lineno, f"{kind}.{key}: {n} bytes, want 4*d = {4 * d}")
         if kind == "meta":
             d = ev.get("d")
+        if kind == "rekey" and ev.get("old") == ev.get("new"):
+            err(lineno, f"rekey: old == new == {ev.get('old')} (no-op switch)")
 
     # ordering: meta first, init/codec before traffic
     first_lineno, first = events[0]
@@ -163,7 +170,7 @@ def check_file(path, want_steps=None, want_final=False):
     else:
         init_at = kinds.index("init")
         for lineno, ev in events[:init_at]:
-            if ev.get("ev") in ("ingest", "ingest_partial", "step", "broadcast"):
+            if ev.get("ev") in ("ingest", "ingest_partial", "step", "broadcast", "rekey"):
                 err(lineno, f"{ev['ev']} before init")
 
     # step monotonicity + totals + broadcast pairing

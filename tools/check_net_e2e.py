@@ -28,6 +28,25 @@ check asserts, from the leader's JSON report:
 * with `--downlinks`, the negotiated per-tier downlink codec multiset
   (`server_codec`) is exactly the requested one.
 
+Adaptive mode (`--adaptive`): the run had `net.adaptive` enabled, so
+workers may have been rekeyed to cheaper codecs mid-run. The checks
+change shape:
+
+* `--codecs` compares the *join-time* codecs (epoch 0), since final
+  codecs are whatever the controller negotiated;
+* upload accounting is exact **per codec epoch**: each epoch's
+  `upload_bytes == uploads * expected_bytes_per_upload`, and the epochs
+  sum to the worker's totals — in-flight old-codec uploads accepted
+  during a transition window attribute to their own epoch, so this
+  holds exactly across every switch;
+* at least one worker was rekeyed, every rekeyed worker's epoch sizes
+  strictly decrease (the controller only downshifts), its final codec
+  is its last epoch's, and every worker that announced a
+  `--bandwidth-mbps` hint was among the rekeyed;
+* downlink accounting absorbs the control frames: a Rekey frame is
+  `25 + len(spec)` B on the wire, so `broadcast_frames == steps + 1 +
+  rekeys` and the clean-run byte formula gains the rekey frame bytes.
+
 Tree mode (`--edge report.json`, repeatable): the root's "workers" are
 edge leaders forwarding `UpdatePartial` frames. Each `--edge` file is a
 `qafel leader --upstream` report; the check additionally asserts:
@@ -66,6 +85,9 @@ def main() -> int:
     ap.add_argument("--downlinks", default=None,
                     help="comma-separated expected downlink codec multiset (server_codec)")
     ap.add_argument("--max-grad-ratio", type=float, default=0.9)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="run had net.adaptive enabled: per-epoch accounting, "
+                         "--codecs matches join-time codecs, downshift asserted")
     ap.add_argument("--edge", action="append", default=[],
                     help="edge-leader report JSON (tree mode; one per root worker)")
     ap.add_argument("--edge-buffer", type=int, default=1,
@@ -97,7 +119,14 @@ def main() -> int:
           f"{len(workers) if isinstance(workers, list) else workers!r}")
     workers = workers if isinstance(workers, list) else []
 
-    got_codecs = sorted(w.get("codec", "?") for w in workers)
+    def join_codec(w):
+        """The codec the worker joined on (epoch 0); its `codec` field
+        tracks the current post-Rekey codec."""
+        eps = w.get("epochs") or []
+        return eps[0].get("codec", "?") if eps else w.get("codec", "?")
+
+    got_codecs = sorted(join_codec(w) if args.adaptive else w.get("codec", "?")
+                        for w in workers)
     want_codecs = sorted(args.codecs.split(","))
     check(got_codecs == want_codecs,
           f"negotiated codecs {got_codecs} != requested {want_codecs}")
@@ -116,9 +145,41 @@ def main() -> int:
         check(uploads > 0, f"worker {wid}: never uploaded")
         expected = w.get("expected_bytes_per_upload", 0)
         check(expected > 0, f"worker {wid}: bad expected_bytes_per_upload {expected!r}")
-        check(w.get("upload_bytes") == uploads * expected,
-              f"worker {wid} ({w.get('codec')}): upload_bytes {w.get('upload_bytes')} != "
-              f"{uploads} uploads x {expected} B")
+        rekeys = w.get("rekeys", 0) if args.adaptive else 0
+        if args.adaptive:
+            # exact accounting per codec epoch: the join codec's epoch,
+            # then one per Rekey. In-flight old-codec uploads accepted
+            # during a transition window land in their own epoch, so
+            # every epoch satisfies the wire-size formula exactly.
+            eps = w.get("epochs") or []
+            check(bool(eps), f"worker {wid}: no codec epochs in an adaptive run")
+            check(len(eps) == rekeys + 1,
+                  f"worker {wid}: {len(eps)} epochs != {rekeys} rekeys + 1")
+            for e in eps:
+                e_expected = e.get("expected_bytes_per_upload", 0)
+                check(e_expected > 0,
+                      f"worker {wid} epoch '{e.get('codec')}': bad "
+                      f"expected_bytes_per_upload {e_expected!r}")
+                check(e.get("upload_bytes") == e.get("uploads", 0) * e_expected,
+                      f"worker {wid} epoch '{e.get('codec')}': upload_bytes "
+                      f"{e.get('upload_bytes')} != {e.get('uploads')} uploads x "
+                      f"{e_expected} B")
+            check(sum(e.get("uploads", 0) for e in eps) == uploads,
+                  f"worker {wid}: epoch uploads do not sum to {uploads}")
+            check(sum(e.get("upload_bytes", 0) for e in eps) == w.get("upload_bytes"),
+                  f"worker {wid}: epoch bytes do not sum to {w.get('upload_bytes')}")
+            if rekeys:
+                sizes = [e.get("expected_bytes_per_upload", 0) for e in eps]
+                check(all(a > b for a, b in zip(sizes, sizes[1:])),
+                      f"worker {wid}: epoch sizes not strictly decreasing: {sizes} "
+                      f"(the controller only downshifts)")
+                check(w.get("codec") == eps[-1].get("codec"),
+                      f"worker {wid}: final codec {w.get('codec')} != last epoch "
+                      f"{eps[-1].get('codec')}")
+        else:
+            check(w.get("upload_bytes") == uploads * expected,
+                  f"worker {wid} ({w.get('codec')}): upload_bytes {w.get('upload_bytes')} != "
+                  f"{uploads} uploads x {expected} B")
         if tree_mode:
             check(w.get("partials") == uploads,
                   f"worker {wid}: {w.get('partials')} partials != {uploads} uploads "
@@ -136,19 +197,25 @@ def main() -> int:
         skipped = w.get("skipped_broadcasts", 0)
         folds = w.get("catch_up_frames", 0)
         syncs = w.get("full_syncs", 0)
-        clean_bytes = args.steps * (down + 18) + 5
+        # a Rekey frame is 21 B + the spec string, +4 B length prefix;
+        # the writer counts it like any other control frame
+        rekey_wire = sum(25 + len(e.get("codec", ""))
+                         for e in (w.get("epochs") or [])[1:]) if args.adaptive else 0
+        clean_frames = args.steps + 1 + rekeys
+        clean_bytes = args.steps * (down + 18) + 5 + rekey_wire
         if syncs == 0:
-            check(w.get("broadcast_frames") == args.steps + 1,
+            check(w.get("broadcast_frames") == clean_frames,
                   f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} "
-                  f"!= {args.steps + 1}")
+                  f"!= {clean_frames}")
             check(w.get("broadcast_bytes") == clean_bytes,
                   f"worker {wid} ({w.get('server_codec')}): broadcast_bytes "
-                  f"{w.get('broadcast_bytes')} != {args.steps} x ({down} + 18) + 5")
+                  f"{w.get('broadcast_bytes')} != {args.steps} x ({down} + 18) + 5 "
+                  f"+ {rekey_wire} rekey B")
         else:
             # full-state syncs compress runs of steps into one frame
-            check(w.get("broadcast_frames") <= args.steps + 1,
+            check(w.get("broadcast_frames") <= clean_frames,
                   f"worker {wid}: broadcast_frames {w.get('broadcast_frames')} "
-                  f"> {args.steps + 1} despite {syncs} full syncs")
+                  f"> {clean_frames} despite {syncs} full syncs")
             sync_frame = 17 + 4 * doc.get("d", 0)
             check(w.get("broadcast_bytes") <= clean_bytes + syncs * sync_frame,
                   f"worker {wid}: broadcast_bytes {w.get('broadcast_bytes')} exceeds "
@@ -166,6 +233,18 @@ def main() -> int:
           f"per-worker uploads {total_uploads} != server total {doc.get('uploads')}")
     check(total_bytes == doc.get("upload_bytes"),
           f"per-worker bytes {total_bytes} != server total {doc.get('upload_bytes')}")
+
+    if args.adaptive:
+        rekeyed = [w for w in workers if w.get("rekeys", 0) > 0]
+        check(bool(rekeyed), "adaptive run but no worker was ever rekeyed")
+        hinted = [w for w in workers if w.get("bandwidth_hint") is not None]
+        check(bool(hinted),
+              "adaptive run but no worker announced a bandwidth hint "
+              "(was --bandwidth-mbps passed to a worker?)")
+        for w in hinted:
+            check(w.get("rekeys", 0) > 0,
+                  f"worker {w.get('worker_id')}: announced bandwidth hint "
+                  f"{w.get('bandwidth_hint')} Mbit/s but was never rekeyed")
 
     # --- tree mode: per-edge accounting ------------------------------
     check(not tree_mode or len(args.edge) == args.workers,
@@ -227,6 +306,8 @@ def main() -> int:
         print(f"{args.report}: {p}", file=sys.stderr)
     if not problems:
         shape = f"{len(args.edge)}-edge tree" if tree_mode else "flat"
+        if args.adaptive:
+            shape += f", {sum(w.get('rekeys', 0) for w in workers)} rekeys"
         print(f"{args.report}: ok ({shape}, {args.workers} workers, {args.steps} steps, "
               f"codecs {', '.join(want_codecs)}, grad_ratio {ratio:.4f})")
     return 1 if problems else 0
