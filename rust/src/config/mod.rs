@@ -46,6 +46,53 @@ impl Algorithm {
     }
 }
 
+/// Server-side robust aggregation (`[fl.robust]`, ARCHITECTURE.md
+/// §Robust aggregation). Per-update norm bounding before accumulate and
+/// a coordinate-wise trimmed mean over the buffer, both running as
+/// range-sharded stages on the shard pool. Disabled by default — an
+/// absent table leaves every run byte-identical to the plain buffered
+/// mean (and invisible in the config fingerprint).
+#[derive(Clone, Debug)]
+pub struct RobustConfig {
+    /// Master switch. `false` (the default) means the plain mean runs
+    /// and none of the knobs below are even validated.
+    pub enabled: bool,
+    /// Bound each decoded client update to this l2 norm *at the server*
+    /// (scale = min(1, clip_norm / ||u||), folded into the staleness
+    /// weight so sharded accumulate stays bit-identical). 0 = no
+    /// clipping. Distinct from `fl.clip_norm`, which clips on the
+    /// client before quantization — this one defends against updates
+    /// the client lied about.
+    pub clip_norm: f64,
+    /// Rescale every update to *exactly* `clip_norm` instead of only
+    /// shrinking oversized ones (norm-normalization; requires
+    /// `clip_norm > 0`). Equalizes honest and hostile magnitudes.
+    pub normalize: bool,
+    /// Coordinate-wise trimmed mean over the K-update buffer: drop the
+    /// `floor(trim_frac * K)` lowest and highest values per coordinate
+    /// before averaging. 0 = plain mean; must stay < 0.5 (trimming
+    /// everything leaves no mass).
+    pub trim_frac: f64,
+}
+
+impl Default for RobustConfig {
+    fn default() -> Self {
+        RobustConfig { enabled: false, clip_norm: 0.0, normalize: false, trim_frac: 0.0 }
+    }
+}
+
+impl RobustConfig {
+    /// Is per-update norm bounding on?
+    pub fn clip_enabled(&self) -> bool {
+        self.enabled && self.clip_norm > 0.0
+    }
+
+    /// Is the coordinate-wise trimmed mean on?
+    pub fn trim_enabled(&self) -> bool {
+        self.enabled && self.trim_frac > 0.0
+    }
+}
+
 /// Federated-optimization hyperparameters (paper Appendix D).
 #[derive(Clone, Debug)]
 pub struct FlConfig {
@@ -78,6 +125,9 @@ pub struct FlConfig {
     /// pool; any other value sizes a dedicated eval pool. Eval results
     /// are bit-identical for every value (fixed-block reductions).
     pub eval_shards: usize,
+    /// Robust aggregation (`[fl.robust]`): server-side norm bounding +
+    /// trimmed mean. Off by default.
+    pub robust: RobustConfig,
 }
 
 /// The `QAFEL_TEST_SHARDS` override (CI's shard matrix), if set and
@@ -114,6 +164,7 @@ impl Default for FlConfig {
             clip_norm: 1.0,
             shards: default_shards(),
             eval_shards: 0,
+            robust: RobustConfig::default(),
         }
     }
 }
@@ -202,6 +253,17 @@ pub struct TierConfig {
     /// `fl.local_steps >= 2` to take effect (a 1-step round has no
     /// mid-round state to submit).
     pub partial_work: f64,
+    /// Heavy-tailed gradient-noise injection applied to this tier's
+    /// uploads before quantization (`scenario::GradNoise::parse`
+    /// grammar: `"student_t:<dof>:<scale>"` or `"pareto:<alpha>:<scale>"`).
+    /// Draws come from their own named PRNG stream, so `None` (the
+    /// default) stays bit-identical to pre-robustness configs.
+    pub grad_noise: Option<String>,
+    /// Adversarial upload behavior for every client in this tier
+    /// (`scenario::Adversary::parse` grammar: `"sign_flip"`,
+    /// `"scale:<c>"` (scaled garbage), `"stale_replay"`). `None` = an
+    /// honest tier.
+    pub adversary: Option<String>,
 }
 
 impl TierConfig {
@@ -223,6 +285,8 @@ impl TierConfig {
             quant_client: None,
             quant_server: None,
             partial_work: 0.0,
+            grad_noise: None,
+            adversary: None,
         }
     }
 }
@@ -605,6 +669,9 @@ impl Config {
         get_num!(doc, &["fl", "clip_norm"], self.fl.clip_norm, f32);
         get_num!(doc, &["fl", "shards"], self.fl.shards, usize);
         get_num!(doc, &["fl", "eval_shards"], self.fl.eval_shards, usize);
+        if let Some(r) = doc.at(&["fl", "robust"]) {
+            apply_robust(&mut self.fl.robust, r)?;
+        }
 
         get_str!(doc, &["quant", "client"], self.quant.client);
         get_str!(doc, &["quant", "server"], self.quant.server);
@@ -848,11 +915,25 @@ impl Config {
                     );
                 }
                 "partial_work" => tier.partial_work = scalar(val, &what)?,
+                "grad_noise" => {
+                    tier.grad_noise = Some(
+                        val.as_str()
+                            .ok_or_else(|| anyhow!("config {what} must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "adversary" => {
+                    tier.adversary = Some(
+                        val.as_str()
+                            .ok_or_else(|| anyhow!("config {what} must be a string"))?
+                            .to_string(),
+                    );
+                }
                 other => bail!(
                     "unknown tier key 'scenario.tiers.{name}.{other}' (known: weight, \
                      duration, duration_sigma, upload_mbps, download_mbps, dropout, \
                      day_period, on_fraction, phase, quant_client, quant_server, \
-                     partial_work)"
+                     partial_work, grad_noise, adversary)"
                 ),
             }
         }
@@ -894,7 +975,7 @@ impl Config {
     /// trajectory, so recording a run must not change its fingerprint.
     pub fn to_json(&self) -> Json {
         let num = Json::num;
-        let fl = Json::obj(vec![
+        let mut fl = vec![
             ("algorithm", Json::str(self.fl.algorithm.name())),
             ("buffer_size", num(self.fl.buffer_size as f64)),
             ("client_lr", num(f64::from(self.fl.client_lr))),
@@ -905,7 +986,13 @@ impl Config {
             ("clip_norm", num(f64::from(self.fl.clip_norm))),
             ("shards", num(self.fl.shards as f64)),
             ("eval_shards", num(self.fl.eval_shards as f64)),
-        ]);
+        ];
+        if self.fl.robust.enabled {
+            // Emitted only when enabled: a robust-off config keeps its
+            // pre-robustness fingerprint byte-identical.
+            fl.push(("robust", robust_to_json(&self.fl.robust)));
+        }
+        let fl = Json::obj(fl);
         let quant = Json::obj(vec![
             ("client", Json::str(&self.quant.client)),
             ("server", Json::str(&self.quant.server)),
@@ -962,6 +1049,12 @@ impl Config {
                     }
                     if let Some(q) = &t.quant_server {
                         fields.push(("quant_server", Json::str(q)));
+                    }
+                    if let Some(g) = &t.grad_noise {
+                        fields.push(("grad_noise", Json::str(g)));
+                    }
+                    if let Some(a) = &t.adversary {
+                        fields.push(("adversary", Json::str(a)));
                     }
                     Json::obj(fields)
                 })
@@ -1038,6 +1131,7 @@ impl Config {
         if self.fl.eval_shards > 256 {
             bail!("fl.eval_shards must be <= 256 (0 = inherit fl.shards)");
         }
+        validate_robust(&self.fl.robust)?;
         if self.seeds.is_empty() {
             bail!("need at least one seed");
         }
@@ -1163,6 +1257,18 @@ impl Config {
                     anyhow!("scenario tier '{name}': bad quant_server preset '{spec}': {e}")
                 })?;
             }
+            // one source of truth for the spec grammars: the scenario
+            // engine's own parsers (config and engine can never drift)
+            if let Some(spec) = &t.grad_noise {
+                crate::scenario::GradNoise::parse(spec).map_err(|e| {
+                    anyhow!("scenario tier '{name}': bad grad_noise spec '{spec}': {e}")
+                })?;
+            }
+            if let Some(spec) = &t.adversary {
+                crate::scenario::Adversary::parse(spec).map_err(|e| {
+                    anyhow!("scenario tier '{name}': bad adversary spec '{spec}': {e}")
+                })?;
+            }
         }
         if !(total_weight.is_finite() && total_weight > 0.0) {
             bail!("scenario tier weights must sum to a positive finite value");
@@ -1174,6 +1280,14 @@ impl Config {
             }
             if agg.edges > 4096 {
                 bail!("scenario.aggregators.edges must be <= 4096, got {}", agg.edges);
+            }
+            if self.fl.robust.trim_enabled() {
+                bail!(
+                    "fl.robust.trim_frac needs individual client rows at the root, but \
+                     scenario.aggregators.edges = {} forwards collapsed partial \
+                     aggregates — use clip_norm at the edges instead, or set edges = 0",
+                    agg.edges
+                );
             }
         }
         crate::quant::parse_spec(&agg.partial_codec).map_err(|e| {
@@ -1245,6 +1359,74 @@ fn validate_adaptive(a: &AdaptiveConfig, what: &str) -> Result<()> {
             .map_err(|e| anyhow!("bad {what}.levels spec '{spec}': {e}"))?;
     }
     Ok(())
+}
+
+/// Overlay the `[fl.robust]` sub-table. Unknown keys are rejected
+/// loudly, like the other strict sub-tables.
+fn apply_robust(dst: &mut RobustConfig, doc: &Json) -> Result<()> {
+    let obj = doc.as_obj().ok_or_else(|| anyhow!("[fl.robust] must be a table"))?;
+    for (key, val) in obj {
+        let path = format!("fl.robust.{key}");
+        match key.as_str() {
+            "enabled" => {
+                dst.enabled =
+                    val.as_bool().ok_or_else(|| anyhow!("config {path} must be a bool"))?;
+            }
+            "clip_norm" => dst.clip_norm = scalar(val, &path)?,
+            "normalize" => {
+                dst.normalize =
+                    val.as_bool().ok_or_else(|| anyhow!("config {path} must be a bool"))?;
+            }
+            "trim_frac" => dst.trim_frac = scalar(val, &path)?,
+            other => bail!(
+                "unknown [fl.robust] key '{other}' \
+                 (known: enabled, clip_norm, normalize, trim_frac)"
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// Validate the robust-aggregation table (only when enabled — a
+/// disabled table may carry any half-edited knob values, exactly like
+/// the adaptive controller).
+fn validate_robust(r: &RobustConfig) -> Result<()> {
+    if !r.enabled {
+        return Ok(());
+    }
+    if !(r.clip_norm.is_finite() && r.clip_norm >= 0.0) {
+        bail!(
+            "fl.robust.clip_norm must be a finite value >= 0 (0 = no clipping), got {}",
+            r.clip_norm
+        );
+    }
+    if !(r.trim_frac.is_finite() && (0.0..0.5).contains(&r.trim_frac)) {
+        bail!(
+            "fl.robust.trim_frac must be in [0, 0.5) — trimming half or more of the \
+             buffer from each end leaves nothing to average — got {}",
+            r.trim_frac
+        );
+    }
+    if r.clip_norm == 0.0 && r.trim_frac == 0.0 {
+        bail!(
+            "fl.robust.enabled = true but clip_norm = 0 and trim_frac = 0: nothing to \
+             do (set a positive clip_norm and/or trim_frac, or drop the table)"
+        );
+    }
+    if r.normalize && r.clip_norm == 0.0 {
+        bail!("fl.robust.normalize needs a positive fl.robust.clip_norm (the target norm)");
+    }
+    Ok(())
+}
+
+/// The robust table as a TOML-shaped JSON object.
+fn robust_to_json(r: &RobustConfig) -> Json {
+    Json::obj(vec![
+        ("enabled", Json::Bool(r.enabled)),
+        ("clip_norm", Json::num(r.clip_norm)),
+        ("normalize", Json::Bool(r.normalize)),
+        ("trim_frac", Json::num(r.trim_frac)),
+    ])
 }
 
 /// The adaptive table as a TOML-shaped JSON object (levels re-joined
@@ -1720,6 +1902,155 @@ mod tests {
         c.net.adaptive.budget_bytes_per_step = 0;
         c.scenario.adaptive.levels = vec!["huff:3".into()];
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn robust_knobs_round_trip_and_validate() {
+        // defaults: off, invisible in the resolved doc (fingerprint
+        // byte-identical to the pre-robustness engine)
+        let c = Config::default();
+        assert!(!c.fl.robust.enabled);
+        assert!(!c.fl.robust.clip_enabled() && !c.fl.robust.trim_enabled());
+        assert!(
+            !c.to_json().to_string().contains("robust"),
+            "robust-off configs must keep their pre-robustness fingerprint"
+        );
+        c.validate().unwrap();
+
+        // TOML overlay
+        let doc = toml::parse(
+            "[fl.robust]\nenabled = true\nclip_norm = 2.5\nnormalize = true\n\
+             trim_frac = 0.2\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert!(c.fl.robust.enabled);
+        assert_eq!(c.fl.robust.clip_norm, 2.5);
+        assert!(c.fl.robust.normalize);
+        assert_eq!(c.fl.robust.trim_frac, 0.2);
+        assert!(c.fl.robust.clip_enabled() && c.fl.robust.trim_enabled());
+        c.validate().unwrap();
+
+        // enabled tables round-trip through to_json/apply exactly
+        let doc = c.to_json();
+        let mut back = Config::default();
+        back.apply(&doc).unwrap();
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+        assert_eq!(back.fl.robust.trim_frac, 0.2);
+
+        // CLI --set reaches the same knobs
+        let mut c = Config::default();
+        c.set("fl.robust.enabled=true").unwrap();
+        c.set("fl.robust.trim_frac=0.3").unwrap();
+        assert!(c.fl.robust.trim_enabled());
+        assert!(!c.fl.robust.clip_enabled());
+        c.validate().unwrap();
+
+        // unknown keys rejected loudly, naming the table
+        let mut c = Config::default();
+        let doc = toml::parse("[fl.robust]\nmedian = true\n").unwrap();
+        let err = c.apply(&doc).unwrap_err().to_string();
+        assert!(err.contains("fl.robust") && err.contains("median"), "{err}");
+
+        // validation (enabled only): clip range, trim range, dead table
+        let enabled = |f: &dyn Fn(&mut RobustConfig)| {
+            let mut c = Config::default();
+            c.fl.robust.enabled = true;
+            c.fl.robust.clip_norm = 1.0;
+            f(&mut c.fl.robust);
+            c.validate()
+        };
+        assert!(enabled(&|_| {}).is_ok());
+        assert!(enabled(&|r| r.clip_norm = -1.0).is_err());
+        assert!(enabled(&|r| r.clip_norm = f64::NAN).is_err());
+        assert!(enabled(&|r| r.trim_frac = 0.5).is_err());
+        assert!(enabled(&|r| r.trim_frac = 0.7).is_err());
+        assert!(enabled(&|r| r.trim_frac = -0.1).is_err());
+        assert!(enabled(&|r| r.trim_frac = 0.49).is_ok());
+        let err = enabled(&|r| r.clip_norm = 0.0).unwrap_err().to_string();
+        assert!(err.contains("nothing to do"), "{err}");
+        assert!(enabled(&|r| {
+            r.clip_norm = 0.0;
+            r.trim_frac = 0.2;
+        })
+        .is_ok());
+        let err = enabled(&|r| {
+            r.clip_norm = 0.0;
+            r.trim_frac = 0.2;
+            r.normalize = true;
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("normalize"), "{err}");
+        // a disabled table never validates its knobs
+        let mut c = Config::default();
+        c.fl.robust.clip_norm = -3.0;
+        c.fl.robust.trim_frac = 0.9;
+        c.validate().unwrap();
+
+        // trimming needs individual rows at the root: trim + edge
+        // aggregators is rejected (clip + edges stays fine)
+        let mut c = Config::default();
+        c.fl.robust.enabled = true;
+        c.fl.robust.trim_frac = 0.2;
+        c.scenario.aggregators.edges = 2;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("trim_frac") && err.contains("edges"), "{err}");
+        c.fl.robust.trim_frac = 0.0;
+        c.fl.robust.clip_norm = 1.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn tier_noise_and_adversary_round_trip_and_validate() {
+        let doc = toml::parse(
+            "[scenario.tiers.hostile]\nadversary = \"sign_flip\"\n\
+             [scenario.tiers.noisy]\ngrad_noise = \"student_t:3:0.5\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.scenario.tiers[0].adversary.as_deref(), Some("sign_flip"));
+        assert_eq!(c.scenario.tiers[1].grad_noise.as_deref(), Some("student_t:3:0.5"));
+        c.validate().unwrap();
+        // round trip through to_json (declaration order kept)
+        let doc = c.to_json();
+        let mut back = Config::default();
+        back.apply(&doc).unwrap();
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+        // knobs absent by default — and absent from the emitted doc
+        assert_eq!(TierConfig::named("x").grad_noise, None);
+        assert_eq!(TierConfig::named("x").adversary, None);
+        assert!(!Config::default().to_json().to_string().contains("grad_noise"));
+
+        // CLI --set reaches the same knobs and merges into the tier
+        let mut c = Config::default();
+        c.set("scenario.tiers.bad.adversary=\"scale:10\"").unwrap();
+        c.set("scenario.tiers.bad.grad_noise=\"pareto:2:0.1\"").unwrap();
+        assert_eq!(c.scenario.tiers.len(), 1);
+        assert_eq!(c.scenario.tiers[0].adversary.as_deref(), Some("scale:10"));
+        assert_eq!(c.scenario.tiers[0].grad_noise.as_deref(), Some("pareto:2:0.1"));
+        c.validate().unwrap();
+
+        // bad spec strings fail loudly, naming the tier and the spec
+        let bad = |f: &dyn Fn(&mut TierConfig)| {
+            let mut c = Config::default();
+            let mut t = TierConfig::named("x");
+            f(&mut t);
+            c.scenario.tiers = vec![t];
+            c.validate()
+        };
+        let err = bad(&|t| t.grad_noise = Some("cauchy:1".into())).unwrap_err().to_string();
+        assert!(err.contains("grad_noise") && err.contains("cauchy:1"), "{err}");
+        assert!(bad(&|t| t.grad_noise = Some("student_t:0:1".into())).is_err());
+        assert!(bad(&|t| t.grad_noise = Some("pareto:2:-1".into())).is_err());
+        assert!(bad(&|t| t.grad_noise = Some("pareto:1.5:0.1".into())).is_ok());
+        let err = bad(&|t| t.adversary = Some("byzantine".into())).unwrap_err().to_string();
+        assert!(err.contains("adversary") && err.contains("byzantine"), "{err}");
+        assert!(bad(&|t| t.adversary = Some("scale:0".into())).is_err());
+        assert!(bad(&|t| t.adversary = Some("stale_replay".into())).is_ok());
+        assert!(bad(&|t| t.adversary = Some("sign_flip".into())).is_ok());
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //! (`fl(1.0 · v) = v`). The golden tests in this module and
 //! `rust/tests/aggregator_tree.rs` pin the contract.
 
-use crate::config::{Algorithm, Config};
+use crate::config::{Algorithm, Config, RobustConfig};
 use crate::coordinator::server::{client_codec_spec, Broadcast, Server, ServerStep};
 use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
 use crate::scenario::metrics::StalenessHist;
@@ -160,6 +160,16 @@ pub struct EdgeAggregator {
     client_codecs: Vec<Box<dyn Quantizer>>,
     /// `Q_p`: encodes the forwarded partial buffer.
     partial_codec: Box<dyn Quantizer>,
+    /// Robust knobs ([`EdgeAggregator::with_robust`]). Edges apply the
+    /// per-update norm clip at *their* ingest point — the partial then
+    /// travels upstream pre-clipped, so clipping commutes with
+    /// count-weighted forwarding exactly like the staleness weight
+    /// does. Trimming never runs at an edge (config validation rejects
+    /// trim+edges: a partial has already collapsed its rows).
+    robust: RobustConfig,
+    /// Scratch for one decoded update when clipping is on (empty
+    /// otherwise).
+    robust_scratch: Vec<f32>,
     pool: Arc<ShardPool>,
     /// Randomness for `Q_p` (drawn only by stochastic partial codecs;
     /// the identity codec consumes nothing — load-bearing for the
@@ -183,6 +193,8 @@ pub struct EdgeAggregator {
     pub forwarded_bytes: u64,
     /// Lifetime staleness histogram over everything ingested here.
     pub staleness: StalenessHist,
+    /// Updates shrunk by the norm clip at this edge.
+    pub clipped_updates: u64,
 }
 
 impl EdgeAggregator {
@@ -218,12 +230,25 @@ impl EdgeAggregator {
             buffer: vec![0.0; d],
             k_filled: 0,
             hist: StalenessHist::default(),
+            robust: RobustConfig::default(),
+            robust_scratch: Vec::new(),
             updates: 0,
             update_bytes: 0,
             forwarded: 0,
             forwarded_bytes: 0,
             staleness: StalenessHist::default(),
+            clipped_updates: 0,
         })
+    }
+
+    /// Enable robust ingest at this edge (builder). Only the clip knobs
+    /// apply here — trimming is a root-only stage, and config
+    /// validation rejects trim with edge trees before a tree is built.
+    pub fn with_robust(mut self, robust: &RobustConfig) -> EdgeAggregator {
+        self.robust = robust.clone();
+        self.robust_scratch =
+            if self.robust.clip_enabled() { vec![0.0; self.d] } else { Vec::new() };
+        self
     }
 
     pub fn buffer_size(&self) -> usize {
@@ -326,7 +351,23 @@ impl EdgeAggregator {
             1.0
         };
         let quant_c = self.client_codecs[codec].as_ref();
-        sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
+        if self.robust.clip_enabled() {
+            // Same robust path as [`Server::ingest_from`]: decode to
+            // scratch, bound the norm, fold the scale into the weight.
+            sharded::dequantize_into(quant_c, update, &mut self.robust_scratch, &self.pool)?;
+            let norm = vecf::norm2(&self.robust_scratch);
+            let clip = self.robust.clip_norm;
+            let mut w_eff = w;
+            if norm > clip {
+                self.clipped_updates += 1;
+            }
+            if norm > 0.0 && (self.robust.normalize || norm > clip) {
+                w_eff *= (clip / norm) as f32;
+            }
+            sharded::accumulate(quant_c, update, w_eff, &mut self.buffer, &self.pool)?;
+        } else {
+            sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
+        }
         self.k_filled += 1;
 
         if self.k_filled < self.buffer_size {
@@ -671,6 +712,66 @@ mod tests {
             // merged histograms == mean over the flat uploads)
             assert_eq!(flat.staleness_mean(), root.staleness_mean(), "S={shards}");
             assert_eq!(flat.staleness_max, root.staleness_max);
+        }
+    }
+
+    #[test]
+    fn trivial_tree_with_clipping_matches_flat_server_with_clipping() {
+        // Edge-clipped partials must replay bit-identical to a flat
+        // server clipping the same updates: the clip scale folds into
+        // the ingest weight at whichever node sees the raw update, and
+        // the root ingests partials verbatim (never re-clipped).
+        let mut base = cfg("qafel", 2);
+        base.quant.client = "qsgd:8".into();
+        base.quant.server = "qsgd:4".into();
+        base.fl.staleness_scaling = true;
+        base.fl.robust.enabled = true;
+        base.fl.robust.clip_norm = 2.0;
+        let d = 128 + 19;
+        for shards in [1usize, 4] {
+            let mut cfg = base.clone();
+            cfg.fl.shards = shards;
+            let mut flat = Server::build(&cfg, vec![0.0; d], 7).unwrap();
+            // the root of the tree must NOT clip partials, so it runs
+            // with the same robust config but only sees pre-clipped
+            // partial aggregates
+            let mut root = Server::build(&cfg, vec![0.0; d], 7).unwrap();
+            let pc = root.register_partial_codec("none").unwrap();
+            let mut edge = EdgeAggregator::new(
+                d, 1, "none", &cfg.quant.client, cfg.fl.algorithm,
+                cfg.fl.staleness_scaling, ShardPool::new(shards), 99,
+            )
+            .unwrap()
+            .with_robust(&cfg.fl.robust);
+            let qc = parse_spec("qsgd:8").unwrap();
+            let mut rng_a = Prng::new(11);
+            let mut rng_b = Prng::new(11);
+            for round in 0..10u64 {
+                let scale = if round % 2 == 0 { 30.0 } else { 0.1 }; // half oversized
+                let delta: Vec<f32> =
+                    (0..d).map(|i| scale * ((i as f32) * 0.05 + round as f32).sin()).collect();
+                let msg_a = qc.quantize(&delta, &mut rng_a);
+                let msg_b = qc.quantize(&delta, &mut rng_b);
+                let a = flat.ingest(&msg_a, round % 3).unwrap();
+                let p = match edge.ingest(&msg_b, round % 3).unwrap() {
+                    AggOutcome::Forward(p) => p,
+                    other => panic!("trivial edge must forward, got {other:?}"),
+                };
+                let b = root.ingest_partial(&p.msg, p.count, &p.staleness, pc).unwrap();
+                match (a, b) {
+                    (ServerStep::Stepped(ba), ServerStep::Stepped(bb)) => {
+                        assert_eq!(ba[0].msg.payload, bb[0].msg.payload, "S={shards} broadcast");
+                    }
+                    (ServerStep::Buffered, ServerStep::Buffered) => {}
+                    _ => panic!("S={shards}: step/buffer divergence"),
+                }
+            }
+            assert_eq!(flat.model(), root.model(), "S={shards} model");
+            // attribution: the edge counted exactly what the flat
+            // server counted, and the root clipped nothing itself
+            assert_eq!(flat.clipped_updates, edge.clipped_updates, "S={shards}");
+            assert!(edge.clipped_updates > 0);
+            assert_eq!(root.clipped_updates, 0);
         }
     }
 

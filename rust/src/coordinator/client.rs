@@ -109,6 +109,26 @@ impl ClientLogic {
         codec: usize,
         scale: f32,
     ) -> Result<Upload> {
+        self.run_round_transformed(backend, snapshot, user, round_seed, codec, scale, None)
+    }
+
+    /// [`ClientLogic::run_round_with`] plus an upload-time transform: the
+    /// hostile-population hook (heavy-tailed gradient noise, adversarial
+    /// rewrites — `scenario/robust.rs`). The transform sees the final
+    /// honest delta — after partial-work scaling and client-side clipping
+    /// — and whatever it leaves behind is quantized and shipped, exactly
+    /// what a malicious client controls in the real protocol. `None` is
+    /// the honest path, bit-identical to [`ClientLogic::run_round_with`].
+    pub fn run_round_transformed(
+        &self,
+        backend: &dyn Backend,
+        snapshot: &[f32],
+        user: usize,
+        round_seed: u64,
+        codec: usize,
+        scale: f32,
+        transform: Option<&mut dyn FnMut(&mut [f32])>,
+    ) -> Result<Upload> {
         let quant_c = self
             .codecs
             .get(codec)
@@ -124,6 +144,9 @@ impl ClientLogic {
             if norm > self.clip_norm {
                 crate::util::vecf::scale(&mut out.delta, self.clip_norm / norm);
             }
+        }
+        if let Some(t) = transform {
+            t(&mut out.delta);
         }
         let msg = quant_c.quantize(&out.delta, &mut self.rng.borrow_mut());
         Ok(Upload { msg, train_loss: out.loss, train_acc: out.acc })
@@ -419,6 +442,42 @@ mod tests {
         assert_eq!(ra.msg.payload, rb.msg.payload);
         // unknown codec id is rejected
         assert!(a.run_round_with(&backend, &x0, 1, 3, 5, 1.0).is_err());
+    }
+
+    #[test]
+    fn upload_transform_rewrites_the_outgoing_delta() {
+        let mut cfg = qafel_cfg();
+        cfg.quant.client = "none".into(); // exact wire format: easy to decode
+        let d = 16;
+        let backend = QuadraticBackend::new(d, 4, 1.0, 0.1, 0.3, 0.05, 2, 5);
+        let x0 = backend.init_params(0).unwrap();
+        let logic = ClientLogic::new(&cfg, 2).unwrap();
+        let honest = logic.run_round_with(&backend, &x0, 0, 7, 0, 1.0).unwrap();
+        let mut flip = |delta: &mut [f32]| {
+            for x in delta.iter_mut() {
+                *x = -*x;
+            }
+        };
+        let hostile = logic
+            .run_round_transformed(&backend, &x0, 0, 7, 0, 1.0, Some(&mut flip))
+            .unwrap();
+        let qc = crate::quant::parse_spec("none").unwrap();
+        let dh = qc.dequantize(&honest.msg).unwrap();
+        let da = qc.dequantize(&hostile.msg).unwrap();
+        for i in 0..d {
+            assert_eq!(da[i], -dh[i], "coord {i}");
+        }
+        // the transform runs after client-side clipping: a clip-bounded
+        // honest delta is what the adversary gets to rewrite
+        let mut clipped_cfg = cfg.clone();
+        clipped_cfg.fl.clip_norm = 1e-3;
+        let clipped = ClientLogic::new(&clipped_cfg, 2).unwrap();
+        let up = clipped
+            .run_round_transformed(&backend, &x0, 0, 7, 0, 1.0, Some(&mut flip))
+            .unwrap();
+        let dc = qc.dequantize(&up.msg).unwrap();
+        let norm: f64 = dc.iter().map(|&x| f64::from(x) * f64::from(x)).sum::<f64>();
+        assert!(norm.sqrt() <= 1e-3 + 1e-6, "transform saw unclipped delta");
     }
 
     #[test]

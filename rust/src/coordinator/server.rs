@@ -35,7 +35,7 @@
 //! stitching per-range parts, top_k by a cross-shard candidate merge,
 //! rand_k through per-bucket index streams.
 
-use crate::config::{Algorithm, Config};
+use crate::config::{Algorithm, Config, RobustConfig};
 use crate::metrics::CommMetrics;
 use crate::quant::{parse_spec, sharded, QuantizedMsg, Quantizer};
 use crate::telemetry::event::{hex_f32s, hex_u64, parse_hex_f32s, parse_hex_u64};
@@ -127,6 +127,9 @@ pub struct Server {
     /// resolution): a partial carries already-decoded buffer values.
     partial_codecs: Vec<Box<dyn Quantizer>>,
     algorithm: Algorithm,
+    /// Robust-aggregation knobs (`[fl.robust]`). All-off by default;
+    /// the plain buffered mean runs byte-identically when disabled.
+    robust: RobustConfig,
     // --- state ---------------------------------------------------------------
     d: usize,
     /// Server model x^t.
@@ -141,6 +144,26 @@ pub struct Server {
     rng: Prng,
     /// Scratch for x^{t+1} - x̂^t.
     diff: Vec<f32>,
+    /// Scratch for one decoded update when a robust stage needs its
+    /// values (norm for clipping, row storage for trimming). Empty when
+    /// robust is off — the plain path never allocates it.
+    robust_scratch: Vec<f32>,
+    /// Decoded, w·clip-scaled rows of the current buffer, pending the
+    /// coordinate-wise trimmed mean (trim mode only; ingest order).
+    trim_rows: Vec<Vec<f32>>,
+    /// Retired row allocations, reused across steps.
+    trim_spare: Vec<Vec<f32>>,
+    /// Per-row verdicts of the *last* step's trimmed mean, in ingest
+    /// order: true = the row was excluded at more than half of its
+    /// coordinates (counted as one `trimmed_updates`).
+    last_trim_flags: Vec<bool>,
+    /// Did the most recent `ingest_from` shrink its update's norm?
+    last_ingest_clipped: bool,
+    /// Updates shrunk by the norm clip so far (normalization counts
+    /// only updates that came in *over* `clip_norm`).
+    pub clipped_updates: u64,
+    /// Rows excluded at a majority of coordinates by the trimmed mean.
+    pub trimmed_updates: u64,
     // --- accounting --------------------------------------------------------
     pub comm: CommMetrics,
     /// Per-stage wall time of the aggregation pipeline (`steps` counts
@@ -190,6 +213,8 @@ impl Server {
             };
         let quant_s = parse_spec(&quant_s_spec)?;
         let quant_c = parse_spec(&client_codec_spec(&cfg.quant.client, cfg.fl.algorithm))?;
+        let robust = cfg.fl.robust.clone();
+        let needs_scratch = robust.clip_enabled() || robust.trim_enabled();
         Ok(Server {
             client_codecs: vec![quant_c],
             partial_codecs: Vec::new(),
@@ -209,6 +234,14 @@ impl Server {
             t: 0,
             rng: Prng::new(seed).stream("server-quant"),
             diff: vec![0.0; d],
+            robust_scratch: if needs_scratch { vec![0.0; d] } else { Vec::new() },
+            trim_rows: Vec::new(),
+            trim_spare: Vec::new(),
+            last_trim_flags: Vec::new(),
+            last_ingest_clipped: false,
+            clipped_updates: 0,
+            trimmed_updates: 0,
+            robust,
             comm: CommMetrics::default(),
             stages: StageTimings::default(),
             staleness_max: 0,
@@ -471,7 +504,42 @@ impl Server {
         // alloc), shard-parallel on the persistent pool when S > 1.
         let quant_c = self.client_codecs[codec].as_ref();
         let timer = telemetry::span_start();
-        sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
+        self.last_ingest_clipped = false;
+        if self.robust.clip_enabled() || self.robust.trim_enabled() {
+            // Robust path: decode to scratch first — clipping needs the
+            // update's norm and trimming needs its values. The norm is
+            // a sequential f64 reduction over the decoded vector and
+            // the decode itself is shard-bit-identical, so every
+            // robust quantity is independent of `fl.shards`.
+            sharded::dequantize_into(quant_c, update, &mut self.robust_scratch, &self.pool)?;
+            let mut w_eff = w;
+            if self.robust.clip_enabled() {
+                let norm = vecf::norm2(&self.robust_scratch);
+                let clip = self.robust.clip_norm;
+                if norm > clip {
+                    self.last_ingest_clipped = true;
+                    self.clipped_updates += 1;
+                }
+                if norm > 0.0 && (self.robust.normalize || norm > clip) {
+                    // scale = clip/‖u‖ (normalize) or min(1, clip/‖u‖),
+                    // folded into the staleness weight so the actual
+                    // accumulate runs unchanged.
+                    w_eff *= (clip / norm) as f32;
+                }
+            }
+            if self.robust.trim_enabled() {
+                // Store the w·clip-scaled row; the trimmed mean runs
+                // over the whole buffer when it fills (`step`).
+                let mut row = self.trim_spare.pop().unwrap_or_default();
+                row.clear();
+                row.extend(self.robust_scratch.iter().map(|&v| v * w_eff));
+                self.trim_rows.push(row);
+            } else {
+                sharded::accumulate(quant_c, update, w_eff, &mut self.buffer, &self.pool)?;
+            }
+        } else {
+            sharded::accumulate(quant_c, update, w, &mut self.buffer, &self.pool)?;
+        }
         self.stages.accumulate_ns += telemetry::span_ns(timer);
         self.k_filled += 1;
 
@@ -553,6 +621,17 @@ impl Server {
         if count == 0 {
             bail!("server: partial aggregate with count 0");
         }
+        if self.robust.trim_enabled() {
+            // A partial has already collapsed its rows into one vector;
+            // a coordinate-wise trimmed mean needs the individual
+            // client rows back. Config validation rejects trim+edges,
+            // so reaching this means the caller bypassed it.
+            bail!(
+                "server: [fl.robust] trim_frac is incompatible with edge partial \
+                 aggregates — trimming needs individual client rows (clip at the \
+                 edges instead)"
+            );
+        }
         self.comm.record_upload(update.wire_bytes());
         self.staleness_sum += staleness.sum;
         self.staleness_max = self.staleness_max.max(staleness.max);
@@ -578,6 +657,9 @@ impl Server {
     /// single-family server's draws (and therefore its bytes) are
     /// unchanged from the pre-family engine.
     fn step(&mut self) -> Result<Vec<Broadcast>> {
+        if self.robust.trim_enabled() {
+            self.apply_trimmed_mean();
+        }
         let inv_k = 1.0 / self.k_buffer as f32;
         let (beta, eta_g) = (self.beta, self.eta_g);
         let shards = self.pool.shards();
@@ -673,6 +755,88 @@ impl Server {
         Ok(out)
     }
 
+    /// Coordinate-wise trimmed mean over the buffered rows, written into
+    /// `self.buffer` scaled by K so the unchanged `buffer/K` step applies
+    /// exactly the trimmed mean. Per coordinate, the g = ⌊trim_frac·R⌋
+    /// smallest and largest of the R row values are dropped and the rest
+    /// averaged (f64, in sorted order — every per-coordinate quantity is
+    /// coordinate-local, so the result is bit-identical for any shard
+    /// split; ties break by ingest order via `total_cmp` + index).
+    /// Rows excluded at more than half of their coordinates are flagged
+    /// in `last_trim_flags` (ingest order) and counted as trimmed.
+    fn apply_trimmed_mean(&mut self) {
+        let r_n = self.trim_rows.len();
+        self.last_trim_flags.clear();
+        if r_n == 0 {
+            return;
+        }
+        let g = (self.robust.trim_frac * r_n as f64).floor() as usize;
+        let keep = (r_n - 2 * g) as f64;
+        let k = self.k_buffer as f64;
+        let d = self.d;
+        let span = span_for(d, self.pool.shards(), 1);
+        let chunks = d.div_ceil(span);
+        let rows = &self.trim_rows;
+        // per-chunk exclusion tallies (integer, order-independent), so
+        // every lane writes its own slice and the merge is exact
+        let mut excluded: Vec<Vec<u32>> = (0..chunks).map(|_| vec![0u32; r_n]).collect();
+        let tasks: Vec<Task<'_>> = self
+            .buffer
+            .chunks_mut(span)
+            .zip(excluded.iter_mut())
+            .enumerate()
+            .map(|(ci, (buf, excl))| {
+                Box::new(move || {
+                    let mut order: Vec<usize> = Vec::with_capacity(r_n);
+                    let mut vals = vec![0.0f32; r_n];
+                    for (j, out) in buf.iter_mut().enumerate() {
+                        let i = ci * span + j;
+                        for (r, v) in vals.iter_mut().enumerate() {
+                            *v = rows[r][i];
+                        }
+                        order.clear();
+                        order.extend(0..r_n);
+                        order.sort_by(|&a, &b| vals[a].total_cmp(&vals[b]).then(a.cmp(&b)));
+                        for &r in order[..g].iter().chain(&order[r_n - g..]) {
+                            excl[r] += 1;
+                        }
+                        let mut sum = 0.0f64;
+                        for &r in &order[g..r_n - g] {
+                            sum += vals[r] as f64;
+                        }
+                        *out = ((sum / keep) * k) as f32;
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        self.pool.run(tasks);
+        for r in 0..r_n {
+            let total: u64 = excluded.iter().map(|e| e[r] as u64).sum();
+            let trimmed = total * 2 > d as u64;
+            if trimmed {
+                self.trimmed_updates += 1;
+            }
+            self.last_trim_flags.push(trimmed);
+        }
+        self.trim_spare.append(&mut self.trim_rows);
+    }
+
+    /// The robust-aggregation knobs this server was built with.
+    pub fn robust(&self) -> &RobustConfig {
+        &self.robust
+    }
+
+    /// Did the most recent `ingest_from` shrink its update's norm?
+    pub fn last_ingest_clipped(&self) -> bool {
+        self.last_ingest_clipped
+    }
+
+    /// Per-row trimmed verdicts of the last server step, in ingest
+    /// order (empty unless trimming is on and a step has run).
+    pub fn last_trim_flags(&self) -> &[bool] {
+        &self.last_trim_flags
+    }
+
     /// Distance between the server model and the shared hidden state of
     /// family 0 — the "quantization" error term of Lemma F.9
     /// (‖x^t − x̂^t‖²).
@@ -716,6 +880,20 @@ impl Server {
             ("staleness_sum", Json::num(self.staleness_sum as f64)),
             ("staleness_n", Json::num(self.staleness_n as f64)),
         ];
+        // Robust-aggregation state. Conditional so robust-off snapshots
+        // stay byte-identical to the pre-robustness engine's — the
+        // robust-off golden contract.
+        if self.robust.enabled {
+            fields.push(("clipped_updates", Json::num(self.clipped_updates as f64)));
+            fields.push(("trimmed_updates", Json::num(self.trimmed_updates as f64)));
+            if self.robust.trim_enabled() {
+                // pending rows of a half-filled buffer (ingest order)
+                fields.push((
+                    "trim_rows",
+                    Json::Arr(self.trim_rows.iter().map(|r| Json::str(&hex_f32s(r))).collect()),
+                ));
+            }
+        }
         // Per-tier downlink families beyond the default. Conditional so
         // single-family snapshots stay byte-identical to the pre-family
         // engine's — the no-preset golden contract.
@@ -821,6 +999,55 @@ impl Server {
                         );
                     }
                     self.families[i + 1].x_hat = Arc::new(v);
+                }
+            }
+        }
+        match state.get("clipped_updates") {
+            None if self.robust.enabled => bail!(
+                "checkpoint state: server has [fl.robust] enabled but the snapshot \
+                 carries no robust counters — the checkpoint was taken under a \
+                 different config"
+            ),
+            Some(_) if !self.robust.enabled => bail!(
+                "checkpoint state: snapshot carries robust counters but [fl.robust] \
+                 is disabled — the checkpoint was taken under a different config"
+            ),
+            None => {}
+            Some(_) => {
+                self.clipped_updates = uint("clipped_updates")?;
+                self.trimmed_updates = uint("trimmed_updates")?;
+            }
+        }
+        self.trim_spare.append(&mut self.trim_rows);
+        match state.get("trim_rows") {
+            None if self.robust.trim_enabled() => bail!(
+                "checkpoint state: server trims its buffer but the snapshot carries \
+                 no 'trim_rows' — the checkpoint was taken under a different config"
+            ),
+            Some(_) if !self.robust.trim_enabled() => bail!(
+                "checkpoint state: snapshot carries 'trim_rows' but trimming is \
+                 disabled — the checkpoint was taken under a different config"
+            ),
+            None => {}
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("checkpoint state: 'trim_rows' must be an array"))?;
+                for (i, entry) in arr.iter().enumerate() {
+                    let text = entry.as_str().ok_or_else(|| {
+                        anyhow!("checkpoint state: 'trim_rows' entries must be hex strings")
+                    })?;
+                    let row = parse_hex_f32s(text)?;
+                    if row.len() != self.d {
+                        bail!(
+                            "checkpoint state: 'trim_rows[{i}]' has dimension {} but the \
+                             server has d={} — the checkpoint was taken under a \
+                             different config",
+                            row.len(),
+                            self.d
+                        );
+                    }
+                    self.trim_rows.push(row);
                 }
             }
         }
@@ -1423,5 +1650,198 @@ mod tests {
         m.register_server_codec("qsgd:2").unwrap();
         let err = m.restore_state(&plain_snap).unwrap_err().to_string();
         assert!(err.contains("different config"), "{err}");
+    }
+
+    #[test]
+    fn robust_clip_bounds_update_norms() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into();
+        cfg.quant.server = "none".into();
+        cfg.fl.robust.enabled = true;
+        cfg.fl.robust.clip_norm = 2.0;
+        let d = 4;
+        let mut s = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let qc = parse_spec("none").unwrap();
+        let mut rng = Prng::new(3);
+        // norm exactly at the bound passes untouched
+        let m1 = qc.quantize(&[2.0, 0.0, 0.0, 0.0], &mut rng);
+        assert!(matches!(s.ingest(&m1, 0).unwrap(), ServerStep::Buffered));
+        assert!(!s.last_ingest_clipped());
+        // norm 6 shrinks to 2: the oversized update cannot move the
+        // model further than an honest clip-sized one
+        let m2 = qc.quantize(&[6.0, 0.0, 0.0, 0.0], &mut rng);
+        assert!(matches!(s.ingest(&m2, 0).unwrap(), ServerStep::Stepped(_)));
+        assert!(s.last_ingest_clipped());
+        assert_eq!(s.clipped_updates, 1);
+        assert_eq!(s.model(), &[2.0, 0.0, 0.0, 0.0]);
+
+        // normalize mode rescales *every* update to exactly clip_norm,
+        // but only over-norm ones count as clipped
+        let mut cfg = cfg.clone();
+        cfg.fl.robust.normalize = true;
+        let mut s = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let m1 = qc.quantize(&[1.0, 0.0, 0.0, 0.0], &mut rng);
+        let m2 = qc.quantize(&[0.0, 8.0, 0.0, 0.0], &mut rng);
+        let _ = s.ingest(&m1, 0).unwrap();
+        let _ = s.ingest(&m2, 0).unwrap();
+        assert_eq!(s.clipped_updates, 1);
+        assert_eq!(s.model(), &[1.0, 1.0, 0.0, 0.0]); // both land at norm 2, /K
+    }
+
+    #[test]
+    fn robust_trim_excludes_outlier_rows() {
+        let mut cfg = cfg_with("qafel", 5);
+        cfg.quant.client = "none".into();
+        cfg.quant.server = "none".into();
+        cfg.fl.robust.enabled = true;
+        cfg.fl.robust.trim_frac = 0.2; // g = floor(0.2*5) = 1 per side
+        let d = 4;
+        let mut s = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let qc = parse_spec("none").unwrap();
+        let mut rng = Prng::new(7);
+        // honest rows are rotations of [1,2,3,4]: per coordinate the
+        // honest values are {1,2,3,4}, so the per-coordinate trim drops
+        // the adversary (lowest) and one honest 4 (highest), keeping
+        // {1,2,3} -> mean 2. No honest row is excluded at a majority of
+        // coordinates; the adversary is excluded at all of them.
+        let honest = [
+            [1.0f32, 2.0, 3.0, 4.0],
+            [2.0, 3.0, 4.0, 1.0],
+            [3.0, 4.0, 1.0, 2.0],
+            [4.0, 1.0, 2.0, 3.0],
+        ];
+        for row in &honest {
+            let m = qc.quantize(row, &mut rng);
+            assert!(matches!(s.ingest(&m, 0).unwrap(), ServerStep::Buffered));
+        }
+        let adv = qc.quantize(&[-100.0, -100.0, -100.0, -100.0], &mut rng);
+        assert!(matches!(s.ingest(&adv, 0).unwrap(), ServerStep::Stepped(_)));
+        assert_eq!(s.model(), &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(s.trimmed_updates, 1);
+        assert_eq!(s.last_trim_flags(), &[false, false, false, false, true]);
+    }
+
+    #[test]
+    fn robust_sharded_bit_identical_across_shard_counts() {
+        let mut cfg = cfg_with("qafel", 4);
+        cfg.quant.client = "qsgd:4".into();
+        cfg.quant.server = "qsgd:4".into();
+        cfg.fl.server_momentum = 0.3;
+        cfg.fl.staleness_scaling = true;
+        cfg.fl.robust.enabled = true;
+        cfg.fl.robust.clip_norm = 3.0;
+        cfg.fl.robust.trim_frac = 0.25; // g = 1 of 4 rows per side
+        let d = 3 * 128 + 57; // ragged tail
+        let mk = |shards: usize| {
+            let mut c = cfg.clone();
+            c.fl.shards = shards;
+            Server::build(&c, vec![0.0; d], 7).unwrap()
+        };
+        for shards in [2usize, 4, 8] {
+            let mut reference = mk(1);
+            let mut s = mk(shards);
+            let qc = parse_spec("qsgd:4").unwrap();
+            let mut rng_a = Prng::new(11);
+            let mut rng_b = Prng::new(11);
+            for round in 0..12u64 {
+                let scale = if round % 3 == 0 { 40.0 } else { 1.0 }; // some rows oversized
+                let delta: Vec<f32> = (0..d)
+                    .map(|i| scale * ((i as f32) + round as f32).sin())
+                    .collect();
+                let msg_a = qc.quantize(&delta, &mut rng_a);
+                let msg_b = qc.quantize(&delta, &mut rng_b);
+                let a = reference.ingest(&msg_a, round % 4).unwrap();
+                let b = s.ingest(&msg_b, round % 4).unwrap();
+                match (a, b) {
+                    (ServerStep::Stepped(ba), ServerStep::Stepped(bb)) => {
+                        assert_eq!(ba[0].msg.payload, bb[0].msg.payload, "S={shards} broadcast");
+                        assert_eq!(
+                            reference.last_trim_flags(),
+                            s.last_trim_flags(),
+                            "S={shards} trim attribution"
+                        );
+                    }
+                    (ServerStep::Buffered, ServerStep::Buffered) => {}
+                    _ => panic!("S={shards}: step/buffer divergence"),
+                }
+            }
+            assert_eq!(reference.model(), s.model(), "S={shards} model");
+            assert_eq!(reference.clipped_updates, s.clipped_updates, "S={shards} clips");
+            assert_eq!(reference.trimmed_updates, s.trimmed_updates, "S={shards} trims");
+            assert!(reference.clipped_updates > 0 && reference.trimmed_updates > 0);
+        }
+    }
+
+    #[test]
+    fn robust_checkpoint_round_trips_and_guards_config() {
+        let mut cfg = cfg_with("qafel", 3);
+        cfg.quant.client = "qsgd:8".into();
+        cfg.quant.server = "qsgd:4".into();
+        cfg.fl.robust.enabled = true;
+        cfg.fl.robust.clip_norm = 2.0;
+        cfg.fl.robust.trim_frac = 0.34; // g = 1 of 3
+        let d = 96;
+        let mut a = Server::build(&cfg, vec![0.0; d], 5).unwrap();
+        let qc = parse_spec("qsgd:8").unwrap();
+        let mut up = Prng::new(21);
+        // 5 ingests = 1 step + two pending trim rows in the snapshot
+        for round in 0..5u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.05 + round as f32).sin()).collect();
+            let msg = qc.quantize(&delta, &mut up);
+            let _ = a.ingest(&msg, round % 2).unwrap();
+        }
+        let snap = a.state_json();
+        assert!(snap.get("clipped_updates").is_some());
+        assert_eq!(snap.get("trim_rows").unwrap().as_arr().unwrap().len(), 2);
+
+        let mut b = Server::build(&cfg, vec![0.0; d], 999).unwrap();
+        b.restore_state(&snap).unwrap();
+        assert_eq!(b.clipped_updates, a.clipped_updates);
+        assert_eq!(b.trimmed_updates, a.trimmed_updates);
+        // both continue bit-identically through the next trimmed step
+        for r in 0..4u64 {
+            let delta: Vec<f32> =
+                (0..d).map(|i| (i as f32 * 0.09 + r as f32).cos()).collect();
+            let msg = qc.quantize(&delta, &mut up);
+            match (a.ingest(&msg, 0).unwrap(), b.ingest(&msg, 0).unwrap()) {
+                (ServerStep::Stepped(x), ServerStep::Stepped(y)) => {
+                    assert_eq!(x[0].msg.payload, y[0].msg.payload, "round {r}");
+                }
+                (ServerStep::Buffered, ServerStep::Buffered) => {}
+                _ => panic!("restored robust server diverged at round {r}"),
+            }
+        }
+        assert_eq!(a.model(), b.model());
+
+        // robust-off snapshots carry no robust fields at all...
+        let plain_cfg = cfg_with("qafel", 3);
+        let plain_snap = Server::build(&plain_cfg, vec![0.0; d], 1).unwrap().state_json();
+        assert!(plain_snap.get("clipped_updates").is_none());
+        assert!(plain_snap.get("trim_rows").is_none());
+        // ...and config mismatches are refused in both directions
+        let mut robust = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let err = robust.restore_state(&plain_snap).unwrap_err().to_string();
+        assert!(err.contains("different config"), "{err}");
+        let mut plain = Server::build(&plain_cfg, vec![0.0; d], 1).unwrap();
+        let err = plain.restore_state(&snap).unwrap_err().to_string();
+        assert!(err.contains("different config"), "{err}");
+    }
+
+    #[test]
+    fn trim_rejects_partial_aggregates() {
+        let mut cfg = cfg_with("qafel", 2);
+        cfg.quant.client = "none".into();
+        cfg.fl.robust.enabled = true;
+        cfg.fl.robust.trim_frac = 0.2;
+        let d = 8;
+        let mut s = Server::build(&cfg, vec![0.0; d], 1).unwrap();
+        let p = s.register_partial_codec("none").unwrap();
+        let qc = parse_spec("none").unwrap();
+        let mut rng = Prng::new(2);
+        let msg = qc.quantize(&vec![1.0f32; d], &mut rng);
+        let hist = crate::scenario::metrics::StalenessHist::default();
+        let err = s.ingest_partial(&msg, 2, &hist, p).unwrap_err().to_string();
+        assert!(err.contains("trim"), "{err}");
     }
 }

@@ -276,9 +276,10 @@ mod tests {
             qafel.kb_per_upload
         );
         // per-tier csv: header + 3 algorithms x 1 seed x 2 tiers
+        // (provenance '# config'/'# git' comments filtered out)
         let text =
             std::fs::read_to_string(dir.join("heterogeneity_tiers.csv")).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
         assert_eq!(lines.len(), 1 + 3 * 2, "{text}");
         assert!(lines[0].starts_with("algorithm,seed,tier,codec"));
         assert!(text.contains("fast") && text.contains("slow"));
@@ -286,7 +287,7 @@ mod tests {
         // with their own codecs and the slow tier salvaging partials
         let text =
             std::fs::read_to_string(dir.join("heterogeneity_presets.csv")).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
         assert_eq!(lines.len(), 1 + 2, "{text}");
         assert!(text.contains("top:0.05") && text.contains("qsgd:4"), "{text}");
         let slow_line = lines.iter().find(|l| l.contains(",slow,")).unwrap();
@@ -308,7 +309,7 @@ mod tests {
         // was rekeyed onto the bottom ladder level
         let text =
             std::fs::read_to_string(dir.join("heterogeneity_adaptive.csv")).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
         assert_eq!(lines.len(), 1 + 2, "{text}");
         assert!(lines[0].starts_with("algorithm,seed,tier,codec,codec_switches"));
         let slow_line = lines.iter().find(|l| l.contains(",slow,")).unwrap();

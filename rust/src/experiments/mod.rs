@@ -9,6 +9,7 @@
 //! | E4 | Prop. 3.5 order validation              | [`convergence`] |
 //! | E5–E7 | hidden-state / K / staleness ablations | [`ablations`] |
 //! | E8 | heterogeneous-population ablation       | [`heterogeneity`] |
+//! | E9 | robust-aggregation ablation             | [`robustness`] |
 //!
 //! Each experiment writes `reports/<name>.csv` (raw rows) and
 //! `reports/<name>.md` (a paper-style table) and prints the table.
@@ -17,6 +18,7 @@ pub mod ablations;
 pub mod convergence;
 pub mod fig3;
 pub mod heterogeneity;
+pub mod robustness;
 pub mod runner;
 pub mod table1;
 pub mod table2;

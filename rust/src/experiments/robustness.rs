@@ -1,0 +1,301 @@
+//! E9 — robustness ablation: QAFeL under Byzantine and heavy-tailed
+//! client populations, with and without robust aggregation (ISSUE 10,
+//! DESIGN_SCENARIOS.md §Adversaries).
+//!
+//! The grid crosses three aggregation rules with four populations:
+//!
+//! * aggregation — `mean` (plain QAFeL buffer average), `clip`
+//!   (per-update norm bounding, `[fl.robust] clip_norm`), `trim`
+//!   (coordinate-wise trimmed mean over the buffer, `trim_frac`);
+//! * population — `honest` (every tier clean), `heavy_tail` (30% of
+//!   arrivals add Student-t(2) gradient noise), `sign_flip` (30% upload
+//!   negated deltas), `scaled_garbage` (30% upload 50x-scaled deltas —
+//!   the classic large-norm Byzantine attack).
+//!
+//! The headline table (`robustness.csv/.md`) reports the usual
+//! uploads/bytes/accuracy aggregates per arm; `robustness_tiers.csv`
+//! adds the per-tier forensics — which tier was hostile, how many of its
+//! updates the server clipped, and how many the trimmed mean excluded.
+//! The expected shape: the plain mean degrades under every attack
+//! (catastrophically under `scaled_garbage`), clipping restores the
+//! norm-bounded attacks, and the trimmed mean restores `sign_flip`,
+//! which clipping cannot touch (flipping preserves the norm).
+
+use super::runner::{aggregate, report, run_seeds, BackendFactory, Row};
+use crate::config::{Algorithm, Config, TierConfig};
+use crate::metrics::csv::CsvWriter;
+use crate::scenario::ScenarioMetrics;
+use crate::sim::SimOptions;
+use anyhow::Result;
+
+/// The aggregation rules under ablation.
+const RULES: [&str; 3] = ["mean", "clip", "trim"];
+
+/// The attack populations.
+const ATTACKS: [&str; 4] = ["honest", "heavy_tail", "sign_flip", "scaled_garbage"];
+
+/// Fraction of arrivals owned by the hostile tier.
+const HOSTILE_WEIGHT: f64 = 0.3;
+
+/// Two-tier population for one attack: a 70% honest `good` tier and a
+/// 30% `bad` tier running the named attack (`honest` leaves the bad
+/// tier clean, so the split itself is identical across arms and only
+/// the hostile knob varies).
+pub fn attack_population(base: &Config, attack: &str) -> Config {
+    let mut cfg = base.clone();
+    cfg.fl.algorithm = Algorithm::Qafel;
+    let mut good = TierConfig::named("good");
+    good.weight = 1.0 - HOSTILE_WEIGHT;
+    let mut bad = TierConfig::named("bad");
+    bad.weight = HOSTILE_WEIGHT;
+    match attack {
+        "honest" => {}
+        "heavy_tail" => bad.grad_noise = Some("student_t:2:0.5".into()),
+        "sign_flip" => bad.adversary = Some("sign_flip".into()),
+        "scaled_garbage" => bad.adversary = Some("scale:50".into()),
+        other => panic!("unknown attack '{other}'"),
+    }
+    cfg.scenario.tiers = vec![good, bad];
+    cfg
+}
+
+/// Apply one aggregation rule to a population config. `clip_norm = 1.0`
+/// bounds every update to unit norm (a uniform shrink on honest
+/// updates, a 50-245x shrink on the garbage); `trim_frac = 0.4` over
+/// the K=5 buffer keeps the per-coordinate median.
+pub fn with_rule(cfg: &Config, rule: &str) -> Config {
+    let mut c = cfg.clone();
+    match rule {
+        "mean" => c.fl.robust.enabled = false,
+        "clip" => {
+            c.fl.robust.enabled = true;
+            c.fl.robust.clip_norm = 1.0;
+        }
+        "trim" => {
+            c.fl.robust.enabled = true;
+            c.fl.robust.trim_frac = 0.4;
+        }
+        other => panic!("unknown rule '{other}'"),
+    }
+    c
+}
+
+const TIER_COLUMNS: [&str; 15] = [
+    "rule",
+    "attack",
+    "seed",
+    "tier",
+    "grad_noise",
+    "adversary",
+    "arrivals",
+    "uploads",
+    "clipped_updates",
+    "trimmed_updates",
+    "upload_mb",
+    "download_mb",
+    "staleness_mean",
+    "staleness_max",
+    "staleness_hist",
+];
+
+/// Run the full rule x attack grid. Returns the 12 aggregate rows (in
+/// RULES-major order) and writes `robustness.{csv,md}` plus the
+/// per-tier `robustness_tiers.csv` under `out_dir`.
+pub fn run(
+    base: &Config,
+    make_backend: &BackendFactory,
+    out_dir: &str,
+    opts: &SimOptions,
+) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    let mut tiers_csv = CsvWriter::new(&TIER_COLUMNS);
+    for rule in RULES {
+        for attack in ATTACKS {
+            let cfg = with_rule(&attack_population(base, attack), rule);
+            cfg.validate()?;
+            let label = format!("qafel {rule} {attack}");
+            let set = run_seeds(&cfg, make_backend, opts, &label)?;
+            for (result, &seed) in set.results.iter().zip(&cfg.seeds) {
+                tier_rows(&mut tiers_csv, rule, attack, seed, &result.scenario);
+            }
+            rows.push(aggregate(&set));
+        }
+    }
+    let md = report("robustness", out_dir, base, &rows)?;
+    println!("{md}");
+    for f in findings(&rows) {
+        println!("{f}");
+    }
+    super::runner::stamp(&mut tiers_csv, base);
+    tiers_csv.save(format!("{out_dir}/robustness_tiers.csv"))?;
+    Ok(rows)
+}
+
+/// Look up one grid cell by rule and attack.
+fn cell<'a>(rows: &'a [Row], rule: &str, attack: &str) -> &'a Row {
+    let label = format!("qafel {rule} {attack}");
+    rows.iter().find(|r| r.label == label).unwrap_or_else(|| panic!("missing arm {label}"))
+}
+
+/// Human-readable takeaways printed after the table.
+pub fn findings(rows: &[Row]) -> Vec<String> {
+    let acc = |rule: &str, attack: &str| cell(rows, rule, attack).final_acc_mean;
+    vec![
+        format!(
+            "scaled_garbage: plain mean acc {:.4} vs clip {:.4} (norm bounding contains \
+             large-norm Byzantine updates)",
+            acc("mean", "scaled_garbage"),
+            acc("clip", "scaled_garbage"),
+        ),
+        format!(
+            "sign_flip: plain mean acc {:.4} vs trimmed mean {:.4} (coordinate-wise \
+             trimming excludes norm-preserving flips that clipping cannot touch)",
+            acc("mean", "sign_flip"),
+            acc("trim", "sign_flip"),
+        ),
+        format!(
+            "heavy_tail: plain mean acc {:.4} vs clip {:.4} vs trim {:.4}",
+            acc("mean", "heavy_tail"),
+            acc("clip", "heavy_tail"),
+            acc("trim", "heavy_tail"),
+        ),
+        format!(
+            "honest baseline: mean {:.4}, clip {:.4}, trim {:.4} (robustness is \
+             near-free when nobody attacks)",
+            acc("mean", "honest"),
+            acc("clip", "honest"),
+            acc("trim", "honest"),
+        ),
+    ]
+}
+
+/// Flatten one run's per-tier metrics into CSV rows.
+fn tier_rows(csv: &mut CsvWriter, rule: &str, attack: &str, seed: u64, m: &ScenarioMetrics) {
+    for t in &m.tiers {
+        csv.row(&[
+            rule.to_string(),
+            attack.to_string(),
+            seed.to_string(),
+            t.name.clone(),
+            t.grad_noise.clone(),
+            t.adversary.clone(),
+            t.arrivals.to_string(),
+            t.uploads.to_string(),
+            t.clipped_updates.to_string(),
+            t.trimmed_updates.to_string(),
+            format!("{:.4}", t.upload_bytes as f64 / 1e6),
+            format!("{:.4}", t.download_bytes as f64 / 1e6),
+            format!("{:.3}", t.staleness.mean()),
+            t.staleness.max.to_string(),
+            t.staleness.spec_string(),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::QuadraticBackend;
+
+    fn base() -> Config {
+        let mut c = Config::default();
+        c.fl.algorithm = Algorithm::Qafel;
+        c.quant.client = "qsgd:4".into();
+        c.quant.server = "qsgd:4".into();
+        c.fl.buffer_size = 5; // trim_frac 0.4 -> per-coordinate median
+        c.fl.client_lr = 0.15;
+        c.fl.server_lr = 1.0;
+        c.fl.server_momentum = 0.0;
+        c.fl.clip_norm = 0.0;
+        c.sim.concurrency = 10;
+        c.sim.eval_every = 10;
+        c.seeds = vec![52];
+        c.stop.target_accuracy = 2.0; // fixed horizon
+        c.stop.max_uploads = 100_000;
+        c.stop.max_server_steps = 120;
+        c
+    }
+
+    fn factory(seed: u64) -> Result<Box<dyn crate::runtime::Backend>> {
+        Ok(Box::new(QuadraticBackend::new(64, 10, 1.0, 0.3, 0.2, 0.02, 2, seed)))
+    }
+
+    #[test]
+    fn robustness_grid_runs_and_defends() {
+        let dir = std::env::temp_dir().join(format!("qafel-robust-{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let cfg = base();
+        cfg.validate().unwrap();
+        let rows = run(&cfg, &factory, &dir_s, &Default::default()).unwrap();
+        assert_eq!(rows.len(), RULES.len() * ATTACKS.len());
+        for r in &rows {
+            assert!(r.uploads_k_mean > 0.0, "{} ran no uploads", r.label);
+        }
+        let acc = |rule: &str, attack: &str| cell(&rows, rule, attack).final_acc_mean;
+        // the large-norm attack wrecks the plain mean; clipping contains it
+        assert!(
+            acc("mean", "scaled_garbage") < acc("mean", "honest"),
+            "scaled garbage did not degrade the mean"
+        );
+        assert!(
+            acc("clip", "scaled_garbage") > acc("mean", "scaled_garbage"),
+            "clip {:.4} did not beat mean {:.4} under scaled_garbage",
+            acc("clip", "scaled_garbage"),
+            acc("mean", "scaled_garbage"),
+        );
+        // sign flips preserve the norm, so only trimming excludes them
+        assert!(
+            acc("trim", "sign_flip") > acc("mean", "sign_flip"),
+            "trim {:.4} did not beat mean {:.4} under sign_flip",
+            acc("trim", "sign_flip"),
+            acc("mean", "sign_flip"),
+        );
+        // per-tier forensics: the bad tier shows up in the robust counters
+        let text = std::fs::read_to_string(dir.join("robustness_tiers.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
+        // header + 12 arms x 1 seed x 2 tiers
+        assert_eq!(lines.len(), 1 + 12 * 2, "{text}");
+        assert!(lines[0].starts_with("rule,attack,seed,tier,grad_noise,adversary"));
+        let field = |line: &str, i: usize| line.split(',').nth(i).unwrap().to_string();
+        let bad = |rule: &str, attack: &str| {
+            lines
+                .iter()
+                .find(|l| l.starts_with(&format!("{rule},{attack},")) && l.contains(",bad,"))
+                .copied()
+                .unwrap_or_else(|| panic!("missing bad-tier row for {rule}/{attack}"))
+                .to_string()
+        };
+        let clip_garbage = bad("clip", "scaled_garbage");
+        assert_eq!(field(&clip_garbage, 5), "scale:50");
+        assert!(field(&clip_garbage, 8).parse::<u64>().unwrap() > 0, "{clip_garbage}");
+        let trim_flip = bad("trim", "sign_flip");
+        assert_eq!(field(&trim_flip, 5), "sign_flip");
+        assert!(field(&trim_flip, 9).parse::<u64>().unwrap() > 0, "{trim_flip}");
+        let mean_flip = bad("mean", "sign_flip");
+        assert_eq!(field(&mean_flip, 8), "0", "{mean_flip}");
+        assert_eq!(field(&mean_flip, 9), "0", "{mean_flip}");
+        let heavy = bad("mean", "heavy_tail");
+        assert_eq!(field(&heavy, 4), "student_t:2:0.5");
+        // headline files landed
+        assert!(dir.join("robustness.csv").exists());
+        assert!(dir.join("robustness.md").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn populations_and_rules_are_valid() {
+        for attack in ATTACKS {
+            for rule in RULES {
+                let cfg = with_rule(&attack_population(&base(), attack), rule);
+                cfg.validate().unwrap_or_else(|e| panic!("{rule}/{attack}: {e}"));
+            }
+        }
+        let flip = attack_population(&base(), "sign_flip");
+        assert_eq!(flip.scenario.tiers[1].adversary.as_deref(), Some("sign_flip"));
+        assert_eq!(flip.scenario.tiers[0].adversary, None);
+        let trim = with_rule(&flip, "trim");
+        assert!(trim.fl.robust.enabled && trim.fl.robust.trim_frac == 0.4);
+        let mean = with_rule(&flip, "mean");
+        assert!(!mean.fl.robust.enabled);
+    }
+}

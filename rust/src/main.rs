@@ -1,9 +1,9 @@
 //! `qafel` — command-line entry point.
 //!
 //! Subcommands:
-//! * `exp fig3|table1|table2|convergence|ablate|heterogeneity` —
-//!   regenerate the paper's figures/tables (DESIGN.md §6) and the
-//!   scenario-engine ablation into `reports/`.
+//! * `exp fig3|table1|table2|convergence|ablate|heterogeneity|robustness`
+//!   — regenerate the paper's figures/tables (DESIGN.md §6) and the
+//!   scenario-engine / robust-aggregation ablations into `reports/`.
 //! * `run` — one simulated training run, printing the curve.
 //! * `leader` / `worker` — the real TCP distributed runtime.
 //! * `journal tail|replay` — inspect or bit-verify a flight-recorder
@@ -30,7 +30,7 @@ const USAGE: &str = "\
 qafel <command> [options]
 
 commands:
-  exp <fig3|table1|table2|convergence|ablate|heterogeneity>
+  exp <fig3|table1|table2|convergence|ablate|heterogeneity|robustness>
                                                 regenerate paper results
   run                                           single simulated run
   scenario calibrate TRACE.csv [--out FILE]     fit tier weights/durations
@@ -54,7 +54,7 @@ options:
   --out DIR          report output directory (default: reports)
   --horizons LIST    convergence: comma-separated T values
   --which LIST       ablate: hidden-state,k-sweep,staleness,non-broadcast
-  --fast             heterogeneity: tiny population smoke (CI)
+  --fast             heterogeneity/robustness: tiny population smoke (CI)
   --verbose          progress logging
 
 flight recorder (run + leader; ARCHITECTURE.md §Telemetry):
@@ -80,6 +80,9 @@ net options (wire protocol v2, ARCHITECTURE.md; defaults from [net]):
                      scores the leader's net.adaptive codec controller
   --v1               worker: speak the legacy v1 protocol (no Hello)
   --round-delay-ms N worker: sleep between rounds (default 5)
+  --adversary SPEC   worker: corrupt every upload before quantization —
+                     sign_flip | scale:<c> | stale_replay (robustness
+                     drills against a live leader; [fl.robust] defends)
 
 scenario overrides (heterogeneous populations, DESIGN_SCENARIOS.md):
   --set 'scenario.arrival=\"bursty\"'          constant | poisson | bursty
@@ -213,7 +216,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .ok_or_else(|| {
-            anyhow!("exp needs a target: fig3|table1|table2|convergence|ablate|heterogeneity")
+            anyhow!(
+                "exp needs a target: fig3|table1|table2|convergence|ablate|\
+                 heterogeneity|robustness"
+            )
         })?
         .clone();
     let mut cfg = load_config(args)?;
@@ -227,12 +233,18 @@ fn cmd_exp(args: &Args) -> Result<()> {
     }
     let out = args.opt("out").unwrap_or("reports").to_string();
     let opts = SimOptions { verbose: args.flag("verbose"), ..Default::default() };
-    if which == "heterogeneity" && args.flag("fast") {
+    if matches!(which.as_str(), "heterogeneity" | "robustness") && args.flag("fast") {
         // CI smoke: tiny population, 2 tiers, single seed
         cfg.seeds.truncate(1);
         cfg.sim.concurrency = cfg.sim.concurrency.min(20);
         cfg.stop.max_server_steps = cfg.stop.max_server_steps.min(120);
         cfg.stop.max_uploads = cfg.stop.max_uploads.min(3000);
+    }
+    if which == "robustness" {
+        // every arm runs the same fixed horizon — attacked and defended
+        // runs are compared at equal step counts, not at time-to-target
+        // (the attacked mean may never reach it)
+        cfg.stop.target_accuracy = 2.0;
     }
     if which == "heterogeneity" && matches!(kind, BackendKind::Quadratic) {
         // the qafel+presets arm samples m-of-P partial prefixes, which
@@ -272,6 +284,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
         }
         "heterogeneity" => {
             experiments::heterogeneity::run(&cfg, factory, &out, &opts)?;
+        }
+        "robustness" => {
+            experiments::robustness::run(&cfg, factory, &out, &opts)?;
         }
         "ablate" => {
             let which = args.opt("which").unwrap_or("hidden-state,k-sweep,staleness,non-broadcast");
@@ -434,6 +449,17 @@ fn cmd_leader(args: &Args) -> Result<()> {
         }
     };
     let d = x0.len();
+    // captured before cfg moves into the leader: the report JSON names
+    // the aggregation rule the per-worker robust counters ran under
+    let robust_json = {
+        use qafel::util::json::Json;
+        Json::obj(vec![
+            ("enabled", Json::Bool(cfg.fl.robust.enabled)),
+            ("clip_norm", Json::num(cfg.fl.robust.clip_norm)),
+            ("normalize", Json::Bool(cfg.fl.robust.normalize)),
+            ("trim_frac", Json::num(cfg.fl.robust.trim_frac)),
+        ])
+    };
     println!("[leader] serving on {addr}, waiting for {workers} workers ...");
     let mut leader = Leader::new(cfg, x0.clone(), 1);
     leader.resume = resume;
@@ -509,6 +535,8 @@ fn cmd_leader(args: &Args) -> Result<()> {
                 ("staleness_max", Json::num(ws.staleness.max as f64)),
                 ("ingest_ns", Json::num(ws.ingest_ns as f64)),
                 ("send_ns", Json::num(ws.send_ns as f64)),
+                ("clipped_updates", Json::num(ws.clipped_updates as f64)),
+                ("trimmed_updates", Json::num(ws.trimmed_updates as f64)),
             ]));
         }
         let doc = Json::obj(vec![
@@ -523,6 +551,7 @@ fn cmd_leader(args: &Args) -> Result<()> {
             ("staleness_max", Json::num(report.staleness_max as f64)),
             ("staleness_mean", Json::num(report.staleness_mean)),
             ("grad_ratio", grad_ratio.map(Json::num).unwrap_or(Json::Null)),
+            ("robust", robust_json),
             ("workers", Json::arr(workers_json)),
         ]);
         std::fs::write(&path, doc.pretty())
@@ -627,13 +656,21 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // controller; v1 peers never send it (net.adaptive, ARCHITECTURE.md)
     w.bandwidth_hint = args.opt_parse::<f32>("bandwidth-mbps")?;
     w.force_v1 = args.flag("v1");
+    // robustness drills: corrupt every upload before quantization
+    // (sign_flip | scale:<c> | stale_replay; bad specs fail fast in run)
+    w.adversary = args.opt("adversary").map(str::to_string);
     let timings = args.flag("timings");
     if timings {
         qafel::telemetry::set_enabled(true);
     }
     let report = w.run(&addr)?;
+    let adv = if report.adversary.is_empty() {
+        String::new()
+    } else {
+        format!(", adversary {}", report.adversary)
+    };
     println!(
-        "[worker {}] {} uploads, replica t={}, protocol v{}, codec {}",
+        "[worker {}] {} uploads, replica t={}, protocol v{}, codec {}{adv}",
         report.worker_id, report.uploads, report.replica_t, report.protocol, report.codec
     );
     if timings && report.uploads > 0 {

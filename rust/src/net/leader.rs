@@ -155,6 +155,12 @@ pub struct WorkerStats {
     pub send_ns: u64,
     /// Staleness histogram over this worker's ingested uploads.
     pub staleness: StalenessHist,
+    /// Uploads from this worker the robust server shrank to the clip
+    /// norm (`[fl.robust]` clip_norm; 0 with robust aggregation off).
+    pub clipped_updates: u64,
+    /// Uploads from this worker the trimmed mean excluded at a majority
+    /// of coordinates (`[fl.robust]` trim_frac; 0 with trimming off).
+    pub trimmed_updates: u64,
 }
 
 /// Final report of a leader run.
@@ -730,6 +736,8 @@ impl Leader {
                 ingest_ns: 0,
                 send_ns: 0,
                 staleness: StalenessHist::default(),
+                clipped_updates: 0,
+                trimmed_updates: 0,
             });
         }
         drop(tx);
@@ -799,6 +807,12 @@ impl Leader {
         let mut slots_since_step: u64 = 0;
         let mut hist_all = StalenessHist::default();
         let mut prev_step_ev: Option<Event> = None;
+        // robust-aggregation attribution: which worker fed each live
+        // buffer row, zipped against the server's per-row trim flags
+        // when a step fires. Flat uploads only — `ingest_partial`
+        // rejects trimming, so with trim on every row is an Update.
+        let trim_on = self.cfg.fl.robust.trim_enabled();
+        let mut buffer_workers: Vec<usize> = Vec::new();
         while live > 0 {
             let (worker_id, incoming) = rx.recv().map_err(|_| anyhow!("all workers gone"))?;
             let wid = worker_id as usize;
@@ -912,6 +926,9 @@ impl Leader {
                             payload: qmsg.payload.clone(),
                         })?;
                     }
+                    if trim_on {
+                        buffer_workers.push(wid);
+                    }
                     let timer = telemetry::span_start();
                     let step =
                         server.ingest_from(&qmsg, staleness, codec_id).with_context(|| {
@@ -922,6 +939,9 @@ impl Leader {
                             )
                         })?;
                     stats[wid].ingest_ns += telemetry::span_ns(timer);
+                    if server.last_ingest_clipped() {
+                        stats[wid].clipped_updates += 1;
+                    }
                     stats[wid].uploads += 1;
                     stats[wid].upload_bytes += wire as u64;
                     // per-epoch attribution: the current epoch, or —
@@ -987,6 +1007,12 @@ impl Leader {
             };
 
             if let ServerStep::Stepped(broadcasts) = step {
+                for (&w, &flagged) in buffer_workers.iter().zip(server.last_trim_flags()) {
+                    if flagged {
+                        stats[w].trimmed_updates += 1;
+                    }
+                }
+                buffer_workers.clear();
                 if recorder.on() || tel.progress > 0 {
                     let step_ev = Event::Step {
                         time: now,

@@ -61,6 +61,8 @@ pub struct WorkerReport {
     /// Wall time applying received broadcasts to the replica (Q_s
     /// decode + hidden-state advance, Algorithm 3).
     pub decode_ns: u64,
+    /// Adversary spec this worker ran with (`""` = honest).
+    pub adversary: String,
 }
 
 /// A worker: owns a compute backend and a hidden-state replica.
@@ -84,6 +86,12 @@ pub struct Worker<B: Backend> {
     pub bandwidth_hint: Option<f32>,
     /// Speak the legacy v1 protocol (no Hello, untagged uploads).
     pub force_v1: bool,
+    /// Adversarial upload behavior (`qafel worker --adversary`):
+    /// `sign_flip` | `scale:<c>` | `stale_replay`, applied to every
+    /// delta after local training and before quantization — the same
+    /// transform point as a hostile simulator tier
+    /// (`crate::scenario::Adversary`). `None` is an honest worker.
+    pub adversary: Option<String>,
 }
 
 impl<B: Backend> Worker<B> {
@@ -96,11 +104,19 @@ impl<B: Backend> Worker<B> {
             quant_client: None,
             bandwidth_hint: None,
             force_v1: false,
+            adversary: None,
         }
     }
 
     /// Connect to the leader at `addr` and train until Shutdown.
     pub fn run(&self, addr: &str) -> Result<WorkerReport> {
+        // parse the adversary spec before connecting: a bad spec fails
+        // fast instead of joining and then dying mid-run
+        let adversary = match &self.adversary {
+            Some(spec) => Some(crate::scenario::Adversary::parse(spec)?),
+            None => None,
+        };
+        let mut replay_cache: Option<Vec<f32>> = None;
         let mut conn = Conn::connect(addr)?;
         // --- join -----------------------------------------------------------
         // v2 opens with Hello; the legacy flow waits silently for Join.
@@ -154,6 +170,9 @@ impl<B: Backend> Worker<B> {
         }
         let mut quant_c = parse_spec(&client_quant)?;
         let mut rng = Prng::new(0xC11E27 ^ worker_id as u64).stream("worker-quant");
+        // adversary draws (scale:<c> garbage) live on their own stream,
+        // so an honest worker's quantizer noise is untouched
+        let mut adv_rng = Prng::new(0xC11E27 ^ worker_id as u64).stream("worker-adversary");
         // Algorithm 3's replica, decoding with the downlink codec this
         // connection's tier negotiated (JoinV2.server_quant); the decode
         // pool is persistent, reused for every broadcast this run
@@ -257,8 +276,11 @@ impl<B: Backend> Worker<B> {
             let t_start = replica.t;
             let user = worker_id as usize;
             let timer = crate::telemetry::span_start();
-            let out = self.backend.client_round(replica.state(), user, trip, client_lr)?;
+            let mut out = self.backend.client_round(replica.state(), user, trip, client_lr)?;
             train_ns += crate::telemetry::span_ns(timer);
+            if let Some(a) = &adversary {
+                a.apply(&mut out.delta, &mut replay_cache, &mut adv_rng);
+            }
             let timer = crate::telemetry::span_start();
             let qmsg = quant_c.quantize(&out.delta, &mut rng);
             encode_ns += crate::telemetry::span_ns(timer);
@@ -295,6 +317,7 @@ impl<B: Backend> Worker<B> {
             encode_ns,
             send_ns,
             decode_ns,
+            adversary: self.adversary.clone().unwrap_or_default(),
         })
     }
 }

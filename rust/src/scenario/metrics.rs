@@ -200,6 +200,20 @@ pub struct TierMetrics {
     /// conditionally so adaptive-off checkpoints stay byte-identical to
     /// the pre-adaptive engine.
     pub codec_switches: u64,
+    /// Gradient-noise spec this tier injects (`grad_noise` preset);
+    /// empty for honest tiers. Tag only — drawn counters live on the
+    /// robust side. Serialized conditionally, like `download_codec`.
+    pub grad_noise: String,
+    /// Adversary behavior this tier runs (`adversary` preset); empty
+    /// for honest tiers. Serialized conditionally.
+    pub adversary: String,
+    /// Uploads from this tier the robust server shrank with the norm
+    /// clip ([fl.robust] clip_norm). Serialized conditionally so
+    /// robust-off checkpoints stay byte-identical.
+    pub clipped_updates: u64,
+    /// Uploads from this tier the trimmed mean excluded at a majority
+    /// of coordinates. Serialized conditionally.
+    pub trimmed_updates: u64,
     pub staleness: StalenessHist,
 }
 
@@ -304,6 +318,18 @@ impl ScenarioMetrics {
         self.tiers[tier].partial_uploads += 1;
     }
 
+    /// The robust server shrank one of this tier's uploads to the clip
+    /// norm.
+    pub fn record_clipped(&mut self, tier: usize) {
+        self.tiers[tier].clipped_updates += 1;
+    }
+
+    /// The trimmed mean excluded one of this tier's uploads at a
+    /// majority of its coordinates.
+    pub fn record_trimmed(&mut self, tier: usize) {
+        self.tiers[tier].trimmed_updates += 1;
+    }
+
     /// Serialize every counter — the checkpoint form. Exact: counters
     /// are u64 (< 2^53 in practice) and histograms carry their parts.
     pub fn to_json(&self) -> Json {
@@ -330,6 +356,21 @@ impl ScenarioMetrics {
             ]);
             if t.codec_switches != 0 {
                 fields.push(("codec_switches", Json::num(t.codec_switches as f64)));
+            }
+            // hostile-tier tags and robust counters: conditional so
+            // honest/robust-off checkpoints keep their pre-robustness
+            // byte layout
+            if !t.grad_noise.is_empty() {
+                fields.push(("grad_noise", Json::str(t.grad_noise.clone())));
+            }
+            if !t.adversary.is_empty() {
+                fields.push(("adversary", Json::str(t.adversary.clone())));
+            }
+            if t.clipped_updates != 0 {
+                fields.push(("clipped_updates", Json::num(t.clipped_updates as f64)));
+            }
+            if t.trimmed_updates != 0 {
+                fields.push(("trimmed_updates", Json::num(t.trimmed_updates as f64)));
             }
             fields.push(("staleness", t.staleness.to_json()));
             Json::obj(fields)
@@ -387,6 +428,27 @@ impl ScenarioMetrics {
                         .and_then(|v| v.as_f64())
                         .map(|f| f as u64)
                         .unwrap_or(0),
+                    // optional: absent on honest / robust-off runs
+                    grad_noise: t
+                        .get("grad_noise")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    adversary: t
+                        .get("adversary")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    clipped_updates: t
+                        .get("clipped_updates")
+                        .and_then(|v| v.as_f64())
+                        .map(|f| f as u64)
+                        .unwrap_or(0),
+                    trimmed_updates: t
+                        .get("trimmed_updates")
+                        .and_then(|v| v.as_f64())
+                        .map(|f| f as u64)
+                        .unwrap_or(0),
                     staleness: StalenessHist::from_json(
                         t.get("staleness")
                             .ok_or_else(|| anyhow!("scenario metrics: tier missing 'staleness'"))?,
@@ -410,11 +472,11 @@ impl ScenarioMetrics {
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(
-            "  tier         codec        arrivals  unavail  dropped  uploads  partial      MB-up    MB-down  MB-wasted  stale-mean  stale-max\n",
+            "  tier         codec        arrivals  unavail  dropped  uploads  partial  clipped  trimmed      MB-up    MB-down  MB-wasted  stale-mean  stale-max\n",
         );
         for t in &self.tiers {
             out.push_str(&format!(
-                "  {:<12} {:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>11.2} {:>10}\n",
+                "  {:<12} {:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>11.2} {:>10}\n",
                 t.name,
                 t.codec,
                 t.arrivals,
@@ -422,6 +484,8 @@ impl ScenarioMetrics {
                 t.dropouts,
                 t.uploads,
                 t.partial_uploads,
+                t.clipped_updates,
+                t.trimmed_updates,
                 t.upload_bytes as f64 / 1e6,
                 t.download_bytes as f64 / 1e6,
                 t.wasted_download_bytes as f64 / 1e6,
@@ -512,6 +576,10 @@ mod tests {
         m.tiers[1].codec = "top:0.1".into();
         m.tiers[1].download_codec = "qsgd:2".into();
         m.tiers[1].codec_switches = 2;
+        m.tiers[1].grad_noise = "student_t:3:0.5".into();
+        m.tiers[1].adversary = "sign_flip".into();
+        m.record_clipped(1);
+        m.record_trimmed(1);
         m.record_arrival(0);
         m.record_upload(0, 2, 100, 50);
         m.record_dropout(1, 50);
@@ -529,6 +597,12 @@ mod tests {
         assert_eq!(text.matches("download_codec").count(), 1);
         // likewise codec_switches: only the rekeyed tier carries the key
         assert_eq!(text.matches("codec_switches").count(), 1);
+        // hostile tags and robust counters: only the hostile tier
+        // carries the keys (honest/robust-off layout is unchanged)
+        assert_eq!(text.matches("grad_noise").count(), 1);
+        assert_eq!(text.matches("adversary").count(), 1);
+        assert_eq!(text.matches("clipped_updates").count(), 1);
+        assert_eq!(text.matches("trimmed_updates").count(), 1);
         // the parse is strict about schema
         assert!(ScenarioMetrics::from_json(&Json::obj(vec![])).is_err());
         assert!(StalenessHist::from_json(&Json::obj(vec![])).is_err());

@@ -50,10 +50,12 @@ pub mod arrival;
 pub mod calibrate;
 pub mod metrics;
 pub mod population;
+pub mod robust;
 pub mod snapshots;
 
 pub use arrival::{build_arrival, ArrivalProcess};
 pub use calibrate::{fit_trace, FittedTier};
 pub use metrics::{ScenarioMetrics, StalenessHist, TierMetrics};
 pub use population::{duration_dist, Sampling, Scenario, Tier};
+pub use robust::{Adversary, GradNoise};
 pub use snapshots::SnapshotStore;

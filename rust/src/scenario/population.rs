@@ -4,6 +4,7 @@
 
 use crate::config::{Config, TierConfig};
 use crate::scenario::metrics::ScenarioMetrics;
+use crate::scenario::robust::{Adversary, GradNoise};
 use crate::util::dist::{DurationDist, HalfNormal, LogNormal};
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
@@ -28,6 +29,11 @@ pub fn duration_dist(kind: &str, sigma: f64) -> Result<DurationDist> {
 pub struct Tier {
     pub cfg: TierConfig,
     dist: DurationDist,
+    /// Parsed `grad_noise` spec (parsed once at build — the hot loop
+    /// never re-parses strings).
+    grad_noise: Option<GradNoise>,
+    /// Parsed `adversary` spec.
+    adversary: Option<Adversary>,
 }
 
 /// How arriving clients are matched to tiers (`scenario.sampling`).
@@ -97,7 +103,12 @@ impl Scenario {
         let tier_cfgs = cfg.resolved_tiers();
         let mut tiers = Vec::with_capacity(tier_cfgs.len());
         for tc in tier_cfgs {
-            tiers.push(Tier { dist: duration_dist(&tc.duration, tc.duration_sigma)?, cfg: tc });
+            tiers.push(Tier {
+                dist: duration_dist(&tc.duration, tc.duration_sigma)?,
+                grad_noise: tc.grad_noise.as_deref().map(GradNoise::parse).transpose()?,
+                adversary: tc.adversary.as_deref().map(Adversary::parse).transpose()?,
+                cfg: tc,
+            });
         }
         let mut cum = Vec::with_capacity(tiers.len());
         let mut total_weight = 0.0;
@@ -315,6 +326,23 @@ impl Scenario {
         self.tiers[tier].cfg.quant_server.as_deref()
     }
 
+    /// The tier's heavy-tailed gradient-noise model, if it has one.
+    pub fn tier_grad_noise(&self, tier: usize) -> Option<GradNoise> {
+        self.tiers[tier].grad_noise
+    }
+
+    /// The tier's adversarial upload behavior, if it has one.
+    pub fn tier_adversary(&self, tier: usize) -> Option<Adversary> {
+        self.tiers[tier].adversary
+    }
+
+    /// Does any tier inject noise or act adversarially? (The engine
+    /// skips the whole upload-transform path — and its streams stay
+    /// untouched — when this is false.)
+    pub fn any_hostile(&self) -> bool {
+        self.tiers.iter().any(|t| t.grad_noise.is_some() || t.adversary.is_some())
+    }
+
     /// For a client that just *dropped*: does it submit the partial
     /// update from the `m` local steps it completed instead of
     /// discarding its work (FedBuff partial-work semantics)? Returns the
@@ -520,6 +548,27 @@ mod tests {
         // slow tier: 1 Mbps up, 2 Mbps down; 1000 bytes each way
         let d = s.upload_delay(1, 1000) + s.download_delay(1, 1000);
         assert!((d - (8000.0 / 1e6 + 8000.0 / 2e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hostile_tier_knobs_resolve_and_default_off() {
+        let mut c = two_tier_cfg();
+        let s = Scenario::build(&c).unwrap();
+        assert!(!s.any_hostile());
+        assert_eq!(s.tier_grad_noise(0), None);
+        assert_eq!(s.tier_adversary(1), None);
+        c.scenario.tiers[0].grad_noise = Some("student_t:3:0.5".into());
+        c.scenario.tiers[1].adversary = Some("sign_flip".into());
+        let s = Scenario::build(&c).unwrap();
+        assert!(s.any_hostile());
+        assert_eq!(
+            s.tier_grad_noise(0),
+            Some(GradNoise::StudentT { dof: 3.0, scale: 0.5 })
+        );
+        assert_eq!(s.tier_adversary(1), Some(Adversary::SignFlip));
+        // bad specs fail at build, not mid-run
+        c.scenario.tiers[0].grad_noise = Some("bogus".into());
+        assert!(Scenario::build(&c).is_err());
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Hostile-population primitives: heavy-tailed gradient noise and
+//! adversarial upload behaviors (`scenario.tiers.<name>.grad_noise` /
+//! `.adversary`, ARCHITECTURE.md §Robust aggregation).
+//!
+//! Both transforms mutate the client's delta **at upload time** — after
+//! local training and any client-side clipping, immediately before
+//! quantization — in the simulator ([`crate::sim::SimEngine`]) and on a
+//! real TCP worker (`qafel worker --adversary`). Noise draws come from
+//! their own named PRNG streams ("scenario-noise" /
+//! "scenario-adversary" in the simulator), so configs without these
+//! knobs draw nothing and replay bit-identically to the pre-robustness
+//! engine.
+//!
+//! The config layer validates specs through [`GradNoise::parse`] and
+//! [`Adversary::parse`] — one source of truth for the grammars, so
+//! config and engine can never drift apart (the `Sampling::parse`
+//! idiom).
+
+use crate::util::dist::Normal;
+use crate::util::prng::Prng;
+use anyhow::{anyhow, bail, Result};
+
+/// Heavy-tailed additive gradient noise
+/// (`"student_t:<dof>:<scale>"` | `"pareto:<alpha>:<scale>"`).
+///
+/// Models the unbounded-gradient regime of Toghani & Uribe (PAPERS.md):
+/// every coordinate of the delta gets an independent heavy-tailed draw
+/// added to it. Student-t with small `dof` has polynomial tails (no
+/// variance for `dof <= 2`); the symmetric Pareto (Lomax magnitude with
+/// a random sign) has tail index `alpha` (no mean for `alpha <= 1`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GradNoise {
+    /// Scaled Student-t: `scale * t(dof)` per coordinate.
+    StudentT { dof: f64, scale: f64 },
+    /// Symmetric Pareto (Lomax): `±scale * (U^{-1/alpha} - 1)`.
+    Pareto { alpha: f64, scale: f64 },
+}
+
+impl GradNoise {
+    pub fn parse(s: &str) -> Result<GradNoise> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |p: &str, what: &str| -> Result<f64> {
+            let v: f64 = p
+                .parse()
+                .map_err(|_| anyhow!("grad_noise '{s}': {what} '{p}' is not a number"))?;
+            if !(v.is_finite() && v > 0.0) {
+                bail!("grad_noise '{s}': {what} must be > 0, got {p}");
+            }
+            Ok(v)
+        };
+        Ok(match parts.as_slice() {
+            ["student_t", dof, scale] => GradNoise::StudentT {
+                dof: num(dof, "dof")?,
+                scale: num(scale, "scale")?,
+            },
+            ["pareto", alpha, scale] => GradNoise::Pareto {
+                alpha: num(alpha, "alpha")?,
+                scale: num(scale, "scale")?,
+            },
+            _ => bail!(
+                "unknown grad_noise spec '{s}' \
+                 (student_t:<dof>:<scale> | pareto:<alpha>:<scale>)"
+            ),
+        })
+    }
+
+    /// Canonical spec string (round-trips through [`GradNoise::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            GradNoise::StudentT { dof, scale } => format!("student_t:{dof}:{scale}"),
+            GradNoise::Pareto { alpha, scale } => format!("pareto:{alpha}:{scale}"),
+        }
+    }
+
+    /// Add one heavy-tailed draw to every coordinate of `delta`.
+    pub fn apply(&self, delta: &mut [f32], rng: &mut Prng) {
+        match *self {
+            GradNoise::StudentT { dof, scale } => {
+                for x in delta.iter_mut() {
+                    *x += (scale * sample_student_t(dof, rng)) as f32;
+                }
+            }
+            GradNoise::Pareto { alpha, scale } => {
+                for x in delta.iter_mut() {
+                    // Lomax magnitude: U in (0, 1] avoids the pole at 0.
+                    let u = 1.0 - rng.f64();
+                    let mag = scale * (u.powf(-1.0 / alpha) - 1.0);
+                    *x += if rng.bool(0.5) { -mag } else { mag } as f32;
+                }
+            }
+        }
+    }
+}
+
+/// One Student-t(dof) sample via Bailey's polar method (exact for any
+/// dof > 0, no chi-square intermediate): accept (u, v) uniform in the
+/// unit disc, return `u * sqrt(dof * (w^{-2/dof} - 1) / w)`.
+fn sample_student_t(dof: f64, rng: &mut Prng) -> f64 {
+    loop {
+        let u = 2.0 * rng.f64() - 1.0;
+        let v = 2.0 * rng.f64() - 1.0;
+        let w = u * u + v * v;
+        if w > 0.0 && w < 1.0 {
+            return u * (dof * (w.powf(-2.0 / dof) - 1.0) / w).sqrt();
+        }
+    }
+}
+
+/// Adversarial upload behavior
+/// (`"sign_flip"` | `"scale:<c>"` | `"stale_replay"`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Adversary {
+    /// Upload `-delta`: honest magnitude (norm clipping is blind to it),
+    /// maximally wrong direction — the case that forces the
+    /// coordinate-wise trimmed mean.
+    SignFlip,
+    /// Scaled garbage: replace the delta with iid `N(0, c^2)` draws —
+    /// the classic Gaussian-noise Byzantine attack; caught by norm
+    /// bounding when `c` is large.
+    ScaledGarbage(f64),
+    /// Replay the client's *first* honest delta forever: the first
+    /// upload passes through (and is cached); every later upload sends
+    /// that same stale update again. Draws nothing.
+    StaleReplay,
+}
+
+impl Adversary {
+    pub fn parse(s: &str) -> Result<Adversary> {
+        if let Some(c) = s.strip_prefix("scale:") {
+            let c: f64 = c
+                .parse()
+                .map_err(|_| anyhow!("adversary '{s}': scale '{c}' is not a number"))?;
+            if !(c.is_finite() && c > 0.0) {
+                bail!("adversary '{s}': scale must be > 0");
+            }
+            return Ok(Adversary::ScaledGarbage(c));
+        }
+        Ok(match s {
+            "sign_flip" | "sign-flip" => Adversary::SignFlip,
+            "stale_replay" | "stale-replay" => Adversary::StaleReplay,
+            other => bail!(
+                "unknown adversary '{other}' (sign_flip | scale:<c> | stale_replay)"
+            ),
+        })
+    }
+
+    /// Canonical spec string (round-trips through [`Adversary::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Adversary::SignFlip => "sign_flip".into(),
+            Adversary::ScaledGarbage(c) => format!("scale:{c}"),
+            Adversary::StaleReplay => "stale_replay".into(),
+        }
+    }
+
+    /// Apply the behavior to the outgoing delta. `cache` is the replay
+    /// slot for [`Adversary::StaleReplay`] (per tier in the simulator,
+    /// per worker on TCP); the other behaviors never touch it. Only
+    /// [`Adversary::ScaledGarbage`] draws from `rng`.
+    pub fn apply(&self, delta: &mut [f32], cache: &mut Option<Vec<f32>>, rng: &mut Prng) {
+        match *self {
+            Adversary::SignFlip => {
+                for x in delta.iter_mut() {
+                    *x = -*x;
+                }
+            }
+            Adversary::ScaledGarbage(c) => {
+                let mut normal = Normal::new();
+                for x in delta.iter_mut() {
+                    *x = (c * normal.sample(rng)) as f32;
+                }
+            }
+            Adversary::StaleReplay => match cache {
+                Some(old) if old.len() == delta.len() => delta.copy_from_slice(old),
+                _ => *cache = Some(delta.to_vec()),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_noise_parse_round_trips_and_rejects() {
+        let g = GradNoise::parse("student_t:3:0.5").unwrap();
+        assert_eq!(g, GradNoise::StudentT { dof: 3.0, scale: 0.5 });
+        assert_eq!(GradNoise::parse(&g.name()).unwrap(), g);
+        let p = GradNoise::parse("pareto:1.5:0.1").unwrap();
+        assert_eq!(p, GradNoise::Pareto { alpha: 1.5, scale: 0.1 });
+        assert_eq!(GradNoise::parse(&p.name()).unwrap(), p);
+        for bad in [
+            "cauchy:1", "student_t:3", "student_t:0:1", "student_t:-2:1",
+            "student_t:3:0", "pareto:2:-1", "pareto:x:1", "pareto:2:0.1:9", "",
+        ] {
+            assert!(GradNoise::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn adversary_parse_round_trips_and_rejects() {
+        assert_eq!(Adversary::parse("sign_flip").unwrap(), Adversary::SignFlip);
+        assert_eq!(Adversary::parse("sign-flip").unwrap(), Adversary::SignFlip);
+        assert_eq!(Adversary::parse("scale:10").unwrap(), Adversary::ScaledGarbage(10.0));
+        assert_eq!(Adversary::parse("stale_replay").unwrap(), Adversary::StaleReplay);
+        for a in ["sign_flip", "scale:2.5", "stale_replay"] {
+            let parsed = Adversary::parse(a).unwrap();
+            assert_eq!(Adversary::parse(&parsed.name()).unwrap(), parsed);
+        }
+        for bad in ["byzantine", "scale:0", "scale:-2", "scale:x", "scale:", ""] {
+            assert!(Adversary::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn student_t_moments_and_tails() {
+        // dof = 30 is close to N(0,1): mean ~ 0, var ~ dof/(dof-2).
+        let mut rng = Prng::new(11);
+        let n = 100_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = sample_student_t(30.0, &mut rng);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 30.0 / 28.0).abs() < 0.05, "var {var}");
+        // dof = 2 has heavier tails than any normal: big excursions
+        let mut big = 0usize;
+        for _ in 0..n {
+            if sample_student_t(2.0, &mut rng).abs() > 6.0 {
+                big += 1;
+            }
+        }
+        // P(|t_2| > 6) ~ 2.6%; P(|N(0,1)| > 6) ~ 2e-9
+        assert!(big > n / 200, "only {big} of {n} beyond 6 sigma");
+    }
+
+    #[test]
+    fn noise_apply_perturbs_every_coordinate() {
+        let mut rng = Prng::new(3);
+        let mut delta = vec![1.0f32; 64];
+        GradNoise::parse("student_t:3:0.5").unwrap().apply(&mut delta, &mut rng);
+        assert!(delta.iter().filter(|&&x| x != 1.0).count() > 60);
+        let mut delta = vec![0.0f32; 64];
+        GradNoise::parse("pareto:2:0.1").unwrap().apply(&mut delta, &mut rng);
+        assert!(delta.iter().filter(|&&x| x != 0.0).count() > 60);
+        // pareto noise is two-sided
+        assert!(delta.iter().any(|&x| x > 0.0) && delta.iter().any(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn sign_flip_negates_and_draws_nothing() {
+        let mut rng = Prng::new(5);
+        let before = rng.clone().next_u64();
+        let mut delta = vec![1.0f32, -2.0, 0.5];
+        let mut cache = None;
+        Adversary::SignFlip.apply(&mut delta, &mut cache, &mut rng);
+        assert_eq!(delta, vec![-1.0, 2.0, -0.5]);
+        assert!(cache.is_none());
+        assert_eq!(rng.next_u64(), before, "sign_flip must not draw");
+    }
+
+    #[test]
+    fn scaled_garbage_replaces_with_noise_of_the_right_scale() {
+        let mut rng = Prng::new(6);
+        let mut delta = vec![0.001f32; 4096];
+        let mut cache = None;
+        Adversary::ScaledGarbage(10.0).apply(&mut delta, &mut cache, &mut rng);
+        let var: f64 =
+            delta.iter().map(|&x| f64::from(x) * f64::from(x)).sum::<f64>() / 4096.0;
+        assert!((var - 100.0).abs() < 10.0, "sample var {var}");
+    }
+
+    #[test]
+    fn stale_replay_caches_first_and_replays_forever() {
+        let mut rng = Prng::new(7);
+        let before = rng.clone().next_u64();
+        let mut cache = None;
+        let mut first = vec![1.0f32, 2.0];
+        Adversary::StaleReplay.apply(&mut first, &mut cache, &mut rng);
+        // first upload is honest and cached
+        assert_eq!(first, vec![1.0, 2.0]);
+        assert_eq!(cache.as_deref(), Some(&[1.0f32, 2.0][..]));
+        // later uploads replay the cached delta
+        let mut second = vec![9.0f32, 9.0];
+        Adversary::StaleReplay.apply(&mut second, &mut cache, &mut rng);
+        assert_eq!(second, vec![1.0, 2.0]);
+        assert_eq!(rng.next_u64(), before, "stale_replay must not draw");
+    }
+}

@@ -7,7 +7,9 @@ use crate::coordinator::{AggOutcome, Broadcast, ClientLogic, EdgeAggregator, Ser
 use crate::metrics::{CurvePoint, RunResult};
 use crate::scenario::metrics::EdgeMetrics;
 use crate::runtime::Backend;
-use crate::scenario::{ArrivalProcess, Sampling, Scenario, ScenarioMetrics, SnapshotStore};
+use crate::scenario::{
+    Adversary, ArrivalProcess, Sampling, Scenario, ScenarioMetrics, SnapshotStore,
+};
 use crate::telemetry::event::{hex_f32s, hex_u64, parse_hex_f32s, parse_hex_u64};
 use crate::telemetry::{
     self, progress_line, truncate_after_last_checkpoint, Event as JEvent, JournalWriter,
@@ -214,8 +216,25 @@ impl<'a> SimEngine<'a> {
         let mut tier_rng = root.stream("scenario-tier");
         let mut dropout_rng = root.stream("scenario-dropout");
         let mut partial_rng = root.stream("scenario-partial");
+        // Hostile-population streams: heavy-tailed gradient noise and
+        // adversarial rewrites draw here and only here, so populations
+        // without grad_noise/adversary specs consume exactly the same
+        // randomness as before and replay bit-identically.
+        let mut noise_rng = root.stream("scenario-noise");
+        let mut adversary_rng = root.stream("scenario-adversary");
 
         let mut scenario = Scenario::build(self.cfg)?;
+
+        // Stale-replay caches, one per tier: the adversarial cohort acts
+        // in concert, replaying the tier's first honest delta forever.
+        let mut replay_caches: Vec<Option<Vec<f32>>> = vec![None; scenario.num_tiers()];
+        let has_replay = (0..scenario.num_tiers())
+            .any(|t| scenario.tier_adversary(t) == Some(Adversary::StaleReplay));
+        // Ingest-order tiers of the rows in the server's current trim
+        // buffer: maps the per-row trim flags back to tiers at each step.
+        // Checkpoints land right after a step, where this is empty.
+        let mut buffer_tiers: Vec<usize> = Vec::new();
+        let trim_on = self.cfg.fl.robust.trim_enabled();
 
         // initial model: shared x^0 (Algorithm 1 line 1 / Algorithm 3)
         let x0 = self.backend.init_params(self.seed as i32 & 0x7FFF_FFFF)?;
@@ -292,6 +311,12 @@ impl<'a> SimEngine<'a> {
 
         for tier in 0..scenario.num_tiers() {
             scenario.metrics.tiers[tier].codec = logic.codec_name(tier_codec[tier]);
+            if let Some(n) = scenario.tier_grad_noise(tier) {
+                scenario.metrics.tiers[tier].grad_noise = n.name();
+            }
+            if let Some(a) = scenario.tier_adversary(tier) {
+                scenario.metrics.tiers[tier].adversary = a.name();
+            }
         }
 
         // Per-tier downlink (broadcast) codecs: each `quant_server`
@@ -346,7 +371,12 @@ impl<'a> SimEngine<'a> {
                     self.cfg.fl.staleness_scaling,
                     server.pool().clone(),
                     edge_seeds.stream_u64(e as u64).next_u64_here(),
-                )?;
+                )?
+                // robust clipping commutes with count-weighted partial
+                // forwarding when applied at the tree's ingest points:
+                // edges clip raw updates, the root ingests the pre-
+                // clipped partials untouched (trim is rejected upstream)
+                .with_robust(&self.cfg.fl.robust);
                 // same registration order as the server/client pair above
                 // => same codec ids on every node of the tree
                 let ids = edge.register_tier_presets(self.cfg)?;
@@ -454,6 +484,10 @@ impl<'a> SimEngine<'a> {
             tier_rng = Prng::from_state(rng_from_json(r, "tier")?);
             dropout_rng = Prng::from_state(rng_from_json(r, "dropout")?);
             partial_rng = Prng::from_state(rng_from_json(r, "partial")?);
+            if scenario.any_hostile() {
+                noise_rng = Prng::from_state(rng_from_json(r, "noise")?);
+                adversary_rng = Prng::from_state(rng_from_json(r, "adversary")?);
+            }
             arrival.restore(&f64s_from_json(state, "arrival")?)?;
             clock = jf64(state, "clock")?;
             trips = ju64(state, "trips")?;
@@ -494,6 +528,26 @@ impl<'a> SimEngine<'a> {
                     stores.len()
                 ),
                 None => {}
+            }
+            if has_replay {
+                let parts = field(state, "replay")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("checkpoint: replay is not an array"))?;
+                if parts.len() != replay_caches.len() {
+                    bail!(
+                        "checkpoint has {} stale-replay caches but the scenario has {} tiers",
+                        parts.len(),
+                        replay_caches.len()
+                    );
+                }
+                for (c, p) in replay_caches.iter_mut().zip(parts) {
+                    *c = match p {
+                        Json::Null => None,
+                        s => Some(parse_hex_f32s(s.as_str().ok_or_else(|| {
+                            anyhow!("checkpoint: stale-replay cache is not a string")
+                        })?)?),
+                    };
+                }
             }
             let metrics = ScenarioMetrics::from_json(field(state, "metrics")?)?;
             if metrics.tiers.len() != scenario.metrics.tiers.len() {
@@ -655,8 +709,34 @@ impl<'a> SimEngine<'a> {
                         .clone();
                     let codec = tier_codec[tier];
                     let scale = partial.unwrap_or(1.0);
-                    let upload =
-                        logic.run_round_with(self.backend, &snapshot, user, trip, codec, scale)?;
+                    let noise = scenario.tier_grad_noise(tier);
+                    let adversary = scenario.tier_adversary(tier);
+                    let upload = if noise.is_some() || adversary.is_some() {
+                        // hostile tier: rewrite the honest delta on the
+                        // scenario streams — noise first (a "bad data"
+                        // client), then the adversary (which controls
+                        // whatever bytes it ships)
+                        let cache = &mut replay_caches[tier];
+                        let mut hostile = |delta: &mut [f32]| {
+                            if let Some(n) = &noise {
+                                n.apply(delta, &mut noise_rng);
+                            }
+                            if let Some(a) = &adversary {
+                                a.apply(delta, cache, &mut adversary_rng);
+                            }
+                        };
+                        logic.run_round_transformed(
+                            self.backend,
+                            &snapshot,
+                            user,
+                            trip,
+                            codec,
+                            scale,
+                            Some(&mut hostile),
+                        )?
+                    } else {
+                        logic.run_round_with(self.backend, &snapshot, user, trip, codec, scale)?
+                    };
                     drop(snapshot);
                     stores[tier_family[tier]].release(t_start);
                     let staleness = server.t() - t_start;
@@ -689,15 +769,39 @@ impl<'a> SimEngine<'a> {
                             })?;
                         }
                         slots_since_step += 1;
-                        match server.ingest_from(&upload.msg, staleness, codec)? {
+                        if trim_on {
+                            buffer_tiers.push(tier);
+                        }
+                        let outcome = server.ingest_from(&upload.msg, staleness, codec)?;
+                        if server.last_ingest_clipped() {
+                            scenario.metrics.record_clipped(tier);
+                        }
+                        match outcome {
                             ServerStep::Buffered => None,
-                            ServerStep::Stepped(b) => Some(b),
+                            ServerStep::Stepped(b) => {
+                                // per-row trim flags are in ingest order,
+                                // the same order buffer_tiers recorded
+                                for (&t, &flagged) in
+                                    buffer_tiers.iter().zip(server.last_trim_flags())
+                                {
+                                    if flagged {
+                                        scenario.metrics.record_trimmed(t);
+                                    }
+                                }
+                                buffer_tiers.clear();
+                                Some(b)
+                            }
                         }
                     } else {
                         // contiguous ownership: edge e owns users
                         // [e*n/K, (e+1)*n/K)
                         let e = user * edges.len() / n_users;
-                        match edges[e].ingest_from(&upload.msg, staleness, codec)? {
+                        let clipped_before = edges[e].clipped_updates;
+                        let edge_outcome = edges[e].ingest_from(&upload.msg, staleness, codec)?;
+                        if edges[e].clipped_updates > clipped_before {
+                            scenario.metrics.record_clipped(tier);
+                        }
+                        match edge_outcome {
                             AggOutcome::Buffered => None,
                             AggOutcome::Forward(p) => {
                                 if let Some(j) = journal.as_mut() {
@@ -931,7 +1035,7 @@ impl<'a> SimEngine<'a> {
                     if stepped && tel.checkpoint_every > 0 && server.t() % tel.checkpoint_every == 0
                     {
                         if let Some(j) = journal.as_mut() {
-                            let rng = Json::obj(vec![
+                            let mut rng_fields = vec![
                                 ("arrivals", rng_json(arrival_rng.state())),
                                 ("durations", rng_json(duration_rng.state())),
                                 ("sampling", rng_json(sampling_rng.state())),
@@ -939,7 +1043,15 @@ impl<'a> SimEngine<'a> {
                                 ("dropout", rng_json(dropout_rng.state())),
                                 ("partial", rng_json(partial_rng.state())),
                                 ("client", rng_json(logic.rng_state())),
-                            ]);
+                            ];
+                            if scenario.any_hostile() {
+                                // conditional: honest checkpoints keep
+                                // the pre-robustness byte layout
+                                rng_fields.push(("noise", rng_json(noise_rng.state())));
+                                rng_fields
+                                    .push(("adversary", rng_json(adversary_rng.state())));
+                            }
+                            let rng = Json::obj(rng_fields);
                             let mut state_fields = vec![
                                 ("clock", f64_json(clock)),
                                 ("seq", u64_json(queue.seq)),
@@ -966,6 +1078,20 @@ impl<'a> SimEngine<'a> {
                                 state_fields.push((
                                     "store_extra",
                                     Json::arr(stores[1..].iter().map(store_json).collect()),
+                                ));
+                            }
+                            if has_replay {
+                                state_fields.push((
+                                    "replay",
+                                    Json::arr(
+                                        replay_caches
+                                            .iter()
+                                            .map(|c| match c {
+                                                Some(v) => Json::str(hex_f32s(v)),
+                                                None => Json::Null,
+                                            })
+                                            .collect(),
+                                    ),
                                 ));
                             }
                             state_fields.extend([
@@ -1938,5 +2064,138 @@ mod tests {
         c.telemetry.checkpoint_every = 5;
         let err = SimEngine::new(&c, &b, 1).run().unwrap_err().to_string();
         assert!(err.contains("scenario.adaptive"), "{err}");
+    }
+
+    /// Two-tier population with a hostile minority: `weight` of arrivals
+    /// run `adversary`, the rest are honest.
+    fn two_tier_attack_cfg(adversary: &str, weight: f64) -> Config {
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.fl.buffer_size = 5;
+        c.stop.target_accuracy = 2.0; // fixed horizon
+        c.stop.max_server_steps = 120;
+        c.stop.max_uploads = 100_000;
+        let mut good = TierConfig::named("good");
+        good.weight = 1.0 - weight;
+        let mut bad = TierConfig::named("bad");
+        bad.weight = weight;
+        bad.adversary = Some(adversary.into());
+        c.scenario.tiers = vec![good, bad];
+        c
+    }
+
+    #[test]
+    fn hostile_population_is_deterministic_and_tagged() {
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.target_accuracy = 2.0;
+        c.stop.max_server_steps = 80;
+        let mut good = TierConfig::named("good");
+        good.weight = 0.5;
+        let mut noisy = TierConfig::named("noisy");
+        noisy.weight = 0.3;
+        noisy.grad_noise = Some("student_t:3:0.05".into());
+        let mut stale = TierConfig::named("stale");
+        stale.weight = 0.2;
+        stale.adversary = Some("stale_replay".into());
+        c.scenario.tiers = vec![good, noisy, stale];
+        c.fl.robust.enabled = true;
+        c.fl.robust.clip_norm = 5.0;
+        c.fl.robust.trim_frac = 0.25;
+        c.validate().unwrap();
+        let r1 = SimEngine::new(&c, &b, 53).run().unwrap();
+        let r2 = SimEngine::new(&c, &b, 53).run().unwrap();
+        assert_eq!(r1.final_accuracy.to_bits(), r2.final_accuracy.to_bits());
+        assert_eq!(r1.comm.uploads, r2.comm.uploads);
+        assert_eq!(r1.scenario.tiers, r2.scenario.tiers);
+        let sc = &r1.scenario;
+        assert_eq!(sc.tiers[1].grad_noise, "student_t:3:0.05");
+        assert_eq!(sc.tiers[2].adversary, "stale_replay");
+        assert_eq!(sc.tiers[0].grad_noise, "");
+        assert_eq!(sc.tiers[0].adversary, "");
+        assert!(sc.tiers.iter().all(|t| t.uploads > 0), "a tier starved");
+    }
+
+    #[test]
+    fn norm_clipping_defends_scaled_garbage() {
+        // the classic Gaussian Byzantine attack: huge-norm garbage wrecks
+        // the plain mean; per-update norm bounding contains it
+        let b = backend();
+        let plain = two_tier_attack_cfg("scale:50", 0.3);
+        plain.validate().unwrap();
+        let r_mean = SimEngine::new(&plain, &b, 51).run().unwrap();
+        let mut clip = plain.clone();
+        clip.fl.robust.enabled = true;
+        clip.fl.robust.clip_norm = 1.0;
+        clip.validate().unwrap();
+        let r_clip = SimEngine::new(&clip, &b, 51).run().unwrap();
+        let lm = r_mean.curve.last().unwrap().val_loss;
+        let lc = r_clip.curve.last().unwrap().val_loss;
+        assert!(lc < lm * 0.5, "clip loss {lc} not clearly below mean loss {lm}");
+        // clipped uploads are attributed per tier; the garbage tier's
+        // norm-245 updates are always bounded
+        assert!(r_clip.scenario.tiers[1].clipped_updates > 0);
+        assert_eq!(r_mean.scenario.tiers[1].clipped_updates, 0);
+    }
+
+    #[test]
+    fn trimmed_mean_recovers_sign_flip() {
+        let b = backend();
+        let mean = two_tier_attack_cfg("sign_flip", 0.3);
+        mean.validate().unwrap();
+        let honest = {
+            let mut h = mean.clone();
+            h.scenario.tiers[1].adversary = None;
+            h.validate().unwrap();
+            SimEngine::new(&h, &b, 52).run().unwrap()
+        };
+        let r_mean = SimEngine::new(&mean, &b, 52).run().unwrap();
+        let mut trim = mean.clone();
+        trim.fl.robust.enabled = true;
+        trim.fl.robust.trim_frac = 0.4; // K=5: keep the per-coordinate median
+        trim.validate().unwrap();
+        let r_trim = SimEngine::new(&trim, &b, 52).run().unwrap();
+        let lh = honest.curve.last().unwrap().val_loss;
+        let lm = r_mean.curve.last().unwrap().val_loss;
+        let lt = r_trim.curve.last().unwrap().val_loss;
+        assert!(lm > lh, "sign flip did not degrade the mean: {lm} vs honest {lh}");
+        assert!(lt < lm, "trimmed mean did not recover: {lt} vs mean {lm}");
+        assert!(r_trim.scenario.tiers[1].trimmed_updates > 0);
+        assert_eq!(r_mean.scenario.tiers[1].trimmed_updates, 0);
+    }
+
+    #[test]
+    fn hostile_checkpoint_resumes_bit_identical() {
+        // kill-and-resume across the full robustness surface: robust
+        // server state, the scenario noise/adversary streams and the
+        // stale-replay caches all restore; the finished journal is
+        // bit-identical to the uninterrupted run's
+        let b = backend();
+        let mut c = quad_cfg(Algorithm::Qafel);
+        c.stop.target_accuracy = 2.0;
+        c.stop.max_server_steps = 60;
+        let mut good = TierConfig::named("good");
+        good.weight = 0.6;
+        let mut bad = TierConfig::named("bad");
+        bad.weight = 0.4;
+        bad.adversary = Some("stale_replay".into());
+        bad.grad_noise = Some("pareto:2:0.02".into());
+        c.scenario.tiers = vec![good, bad];
+        c.fl.robust.enabled = true;
+        c.fl.robust.clip_norm = 8.0;
+        c.fl.robust.trim_frac = 0.25;
+        let path = temp_journal("hostile_resume");
+        c.telemetry.journal = Some(path.clone());
+        c.telemetry.checkpoint_every = 25;
+        c.validate().unwrap();
+        let full = SimEngine::new(&c, &b, 54).run().unwrap();
+        let text_full = std::fs::read_to_string(&path).unwrap();
+        // resume truncates to the last checkpoint (step 50) and
+        // re-executes the tail
+        let opts = SimOptions { resume: true, ..Default::default() };
+        let resumed = SimEngine::new(&c, &b, 54).run_with(&opts).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text_full);
+        assert_eq!(resumed.final_accuracy.to_bits(), full.final_accuracy.to_bits());
+        assert_eq!(resumed.scenario.tiers, full.scenario.tiers);
+        std::fs::remove_file(&path).unwrap();
     }
 }

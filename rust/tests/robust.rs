@@ -1,0 +1,285 @@
+//! Robust-aggregation property tests (ISSUE 10 acceptance criteria):
+//!
+//! * **robust-off is free**: with `[fl.robust]` disabled the config
+//!   serializes without any robust keys, fingerprints identically, and
+//!   a journaled run is **byte-identical** to one that never mentioned
+//!   the section — the robust pipeline cannot perturb existing runs;
+//! * **sharded == sequential**: clipping and trimming run as
+//!   range-sharded stages on the ShardPool, so a robust server at
+//!   `fl.shards ∈ {2,4,8, $QAFEL_TEST_SHARDS}` evolves bit-identically
+//!   to the sequential `S=1` server across codecs, dimensions, seeds
+//!   and staleness weights;
+//! * **full-sim shard invariance**: a hostile population (heavy-tailed
+//!   noise + sign flips) under clip+trim produces bit-identical
+//!   training curves at `S=1` and `S=4`;
+//! * **the trivial tree commutes with clipping**: one edge,
+//!   forward-every-update buffer, identity partial codec, per-update
+//!   clipping at the edge — the whole curve and the per-tier
+//!   clipped-update counters match the flat clipped server bit for bit
+//!   (the edge clips raw updates; the root never re-clips partials).
+
+use qafel::config::{Algorithm, Config, TierConfig};
+use qafel::coordinator::{Server, ServerStep};
+use qafel::quant::parse_spec;
+use qafel::runtime::QuadraticBackend;
+use qafel::sim::SimEngine;
+use qafel::util::prng::Prng;
+
+fn shard_counts() -> Vec<usize> {
+    let mut counts = vec![2usize, 4, 8];
+    if let Some(s) = qafel::config::env_shards_override() {
+        if !counts.contains(&s) && s > 1 {
+            counts.push(s);
+        }
+    }
+    counts
+}
+
+fn robust_cfg(client: &str, server: &str, shards: usize) -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.quant.client = client.into();
+    c.quant.server = server.into();
+    c.fl.buffer_size = 3;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.3;
+    c.fl.shards = shards;
+    c.fl.robust.enabled = true;
+    c.fl.robust.clip_norm = 0.5; // low enough that large test deltas clip
+    c.fl.robust.trim_frac = 0.34; // K=3: drop min and max per coordinate
+    c
+}
+
+/// Drive a sequential and a sharded robust server with identical upload
+/// streams and assert bit-equal evolution.
+fn assert_robust_servers_identical(client: &str, server: &str, d: usize, seed: u64, shards: usize) {
+    let mut s1 = Server::build(&robust_cfg(client, server, 1), vec![0.0; d], seed).unwrap();
+    let mut sn = Server::build(&robust_cfg(client, server, shards), vec![0.0; d], seed).unwrap();
+    let qc = parse_spec(client).unwrap();
+    let mut rng1 = Prng::new(seed ^ 0xF00D);
+    let mut rng2 = Prng::new(seed ^ 0xF00D);
+    for round in 0..9u64 {
+        // alternate small and large deltas so both the clipped and the
+        // unclipped accumulate paths run
+        let scale = if round % 2 == 0 { 0.01 } else { 10.0 };
+        let delta: Vec<f32> = (0..d)
+            .map(|i| ((i as f64 * 0.37 + round as f64).sin() * scale) as f32)
+            .collect();
+        let m1 = qc.quantize(&delta, &mut rng1);
+        let m2 = qc.quantize(&delta, &mut rng2);
+        let r1 = s1.ingest(&m1, round % 5).unwrap();
+        let r2 = sn.ingest(&m2, round % 5).unwrap();
+        assert_eq!(
+            s1.last_ingest_clipped(),
+            sn.last_ingest_clipped(),
+            "{client}/{server} d={d} S={shards} round {round}: clip decision"
+        );
+        match (r1, r2) {
+            (ServerStep::Stepped(b1), ServerStep::Stepped(b2)) => {
+                assert_eq!(
+                    b1[0].msg.payload, b2[0].msg.payload,
+                    "{client}/{server} d={d} S={shards}: broadcast bytes"
+                );
+                assert_eq!(
+                    s1.last_trim_flags(),
+                    sn.last_trim_flags(),
+                    "{client}/{server} d={d} S={shards}: trim attribution"
+                );
+            }
+            (ServerStep::Buffered, ServerStep::Buffered) => {}
+            _ => panic!("{client}/{server} d={d} S={shards}: step/buffer divergence"),
+        }
+    }
+    assert_eq!(s1.model(), sn.model(), "{client}/{server} d={d} S={shards}: model");
+    assert_eq!(
+        s1.client_snapshot().as_slice(),
+        sn.client_snapshot().as_slice(),
+        "{client}/{server} d={d} S={shards}: hidden state"
+    );
+    assert_eq!(s1.clipped_updates, sn.clipped_updates);
+    assert_eq!(s1.trimmed_updates, sn.trimmed_updates);
+    assert!(s1.clipped_updates > 0, "{client}/{server} d={d}: clip never fired");
+}
+
+#[test]
+fn robust_sharded_server_bit_identical_across_codecs_dims_seeds() {
+    // dims straddle shard-bucket boundaries: below one bucket, exact
+    // multiples, ragged tails, and a dimension smaller than shard count
+    for &d in &[5usize, 128, 384, 500] {
+        for seed in [1u64, 2, 3] {
+            for (qc, qs) in [
+                ("qsgd:4", "qsgd:4"),
+                ("none", "qsgd:4"),
+                ("qsgd:8", "top:0.1"),
+                // biased *client* codecs exercise the sparse accumulate
+                // under the clip weight
+                ("top:0.2", "qsgd:4"),
+                ("rand:0.2", "qsgd:4"),
+            ] {
+                for shards in shard_counts() {
+                    assert_robust_servers_identical(qc, qs, d, seed, shards);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- sim --
+
+fn sim_cfg() -> Config {
+    let mut c = Config::default();
+    c.fl.algorithm = Algorithm::Qafel;
+    c.fl.buffer_size = 4;
+    c.fl.client_lr = 0.15;
+    c.fl.server_lr = 1.0;
+    c.fl.server_momentum = 0.0;
+    c.fl.clip_norm = 0.0;
+    c.quant.client = "qsgd:8".into();
+    c.quant.server = "qsgd:8".into();
+    c.sim.concurrency = 20;
+    c.sim.eval_every = 10;
+    c.stop.target_accuracy = 2.0; // unreachable: run the full horizon
+    c.stop.max_uploads = 100_000;
+    c.stop.max_server_steps = 120;
+    c
+}
+
+fn sim_backend() -> QuadraticBackend {
+    QuadraticBackend::new(24, 10, 1.0, 0.3, 0.3, 0.02, 2, 11)
+}
+
+fn temp_journal(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("qafel-robust-{tag}-{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn robust_off_run_is_byte_identical_to_plain() {
+    // the acceptance bar for retrofitting the robust pipeline: a config
+    // that never heard of [fl.robust] and one with every knob set but
+    // `enabled = false` must fingerprint the same and journal the same
+    // bytes — disabled robustness is unobservable
+    let b = sim_backend();
+    let path = temp_journal("off-vs-plain");
+    let mut plain = sim_cfg();
+    plain.telemetry.journal = Some(path.clone());
+    plain.validate().unwrap();
+
+    // same journal path (the Meta event embeds the resolved config, so
+    // the path must be identical for byte comparison): run sequentially
+    let mut off = plain.clone();
+    off.fl.robust.enabled = false;
+    off.fl.robust.clip_norm = 9.0;
+    off.fl.robust.normalize = true;
+    off.fl.robust.trim_frac = 0.25;
+    off.validate().unwrap();
+
+    assert_eq!(
+        qafel::telemetry::config_fingerprint(&plain),
+        qafel::telemetry::config_fingerprint(&off),
+        "disabled robust knobs leaked into the config fingerprint"
+    );
+
+    let rp = SimEngine::new(&plain, &b, 33).run().unwrap();
+    let text_plain = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let ro = SimEngine::new(&off, &b, 33).run().unwrap();
+    let text_off = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    assert_eq!(rp.final_accuracy.to_bits(), ro.final_accuracy.to_bits());
+    assert_eq!(rp.comm.uploads, ro.comm.uploads);
+    assert_eq!(rp.comm.upload_bytes, ro.comm.upload_bytes);
+    assert_eq!(rp.comm.broadcast_bytes, ro.comm.broadcast_bytes);
+    assert_eq!(rp.scenario.tiers, ro.scenario.tiers);
+    for t in &rp.scenario.tiers {
+        assert_eq!(t.clipped_updates, 0);
+        assert_eq!(t.trimmed_updates, 0);
+    }
+    assert_eq!(text_plain, text_off, "robust-off journal diverged from plain");
+}
+
+/// Hostile two-tier population under clip + trim.
+fn hostile_robust_cfg() -> Config {
+    let mut c = sim_cfg();
+    let mut good = TierConfig::named("good");
+    good.weight = 0.6;
+    let mut noisy = TierConfig::named("noisy");
+    noisy.weight = 0.25;
+    noisy.grad_noise = Some("student_t:3:0.1".into());
+    let mut flip = TierConfig::named("flip");
+    flip.weight = 0.15;
+    flip.adversary = Some("sign_flip".into());
+    c.scenario.tiers = vec![good, noisy, flip];
+    c.fl.robust.enabled = true;
+    c.fl.robust.clip_norm = 1.0;
+    c.fl.robust.trim_frac = 0.25;
+    c
+}
+
+#[test]
+fn robust_hostile_sim_is_bit_identical_across_shards() {
+    let b = sim_backend();
+    let mut s1 = hostile_robust_cfg();
+    s1.fl.shards = 1;
+    s1.validate().unwrap();
+    let mut s4 = hostile_robust_cfg();
+    s4.fl.shards = 4;
+    s4.validate().unwrap();
+    let r1 = SimEngine::new(&s1, &b, 61).run().unwrap();
+    let r4 = SimEngine::new(&s4, &b, 61).run().unwrap();
+    assert_eq!(r1.server_steps, r4.server_steps);
+    assert_eq!(r1.comm.uploads, r4.comm.uploads);
+    assert_eq!(r1.final_accuracy.to_bits(), r4.final_accuracy.to_bits());
+    assert_eq!(r1.curve.len(), r4.curve.len());
+    for (p1, p4) in r1.curve.iter().zip(r4.curve.iter()) {
+        assert_eq!(p1.val_loss.to_bits(), p4.val_loss.to_bits());
+        assert_eq!(p1.val_accuracy.to_bits(), p4.val_accuracy.to_bits());
+    }
+    // per-tier robust forensics are part of the invariant surface
+    assert_eq!(r1.scenario.tiers, r4.scenario.tiers);
+    let total_trimmed: u64 = r1.scenario.tiers.iter().map(|t| t.trimmed_updates).sum();
+    assert!(total_trimmed > 0, "trim never excluded anything");
+}
+
+#[test]
+fn trivial_tree_with_clipping_is_bit_identical_to_flat() {
+    // one edge, buffer 1, identity partial codec, per-update clipping:
+    // the edge clips raw updates with the same scale the flat server
+    // would, forwards exact f32s, and the root accumulates them at
+    // weight 1 without re-clipping — the curve and the per-tier
+    // clipped-update counters must match bit for bit
+    let b = sim_backend();
+    let mut flat = sim_cfg();
+    flat.fl.robust.enabled = true;
+    flat.fl.robust.clip_norm = 0.2; // deep enough to fire regularly
+    let mut tree = flat.clone();
+    tree.scenario.aggregators.edges = 1;
+    tree.scenario.aggregators.buffer_size = 1;
+    tree.scenario.aggregators.partial_codec = "none".into();
+    flat.validate().unwrap();
+    tree.validate().unwrap();
+
+    let rf = SimEngine::new(&flat, &b, 31).run().unwrap();
+    let rt = SimEngine::new(&tree, &b, 31).run().unwrap();
+
+    assert_eq!(rf.server_steps, rt.server_steps);
+    assert_eq!(rf.final_accuracy.to_bits(), rt.final_accuracy.to_bits());
+    assert_eq!(rf.comm.uploads, rt.comm.uploads);
+    assert_eq!(rf.curve.len(), rt.curve.len());
+    for (i, (f, t)) in rf.curve.iter().zip(rt.curve.iter()).enumerate() {
+        assert_eq!(f.val_loss.to_bits(), t.val_loss.to_bits(), "curve[{i}].val_loss");
+        assert_eq!(f.val_accuracy.to_bits(), t.val_accuracy.to_bits(), "curve[{i}].val_accuracy");
+    }
+    // clip attribution commutes with the tree: the flat server counted
+    // at the root, the tree counted at the edge — same updates clipped
+    let flat_clipped: Vec<u64> = rf.scenario.tiers.iter().map(|t| t.clipped_updates).collect();
+    let tree_clipped: Vec<u64> = rt.scenario.tiers.iter().map(|t| t.clipped_updates).collect();
+    assert_eq!(flat_clipped, tree_clipped);
+    assert!(flat_clipped.iter().sum::<u64>() > 0, "clip never fired");
+    assert_eq!(rt.scenario.edges.len(), 1);
+    assert_eq!(rt.scenario.edges[0].updates, rf.comm.uploads);
+}

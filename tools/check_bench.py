@@ -14,10 +14,10 @@ Exit code 0 when every file validates, 1 otherwise (each failure is
 printed as `file: problem`).
 """
 
-import json
-import math
 import sys
 from pathlib import Path
+
+from checklib import load_json, numeric
 
 # field -> must be strictly positive (False allows zero, e.g. dropouts)
 SHARDED_ROW_FIELDS = {
@@ -56,21 +56,6 @@ SCENARIO_FIELDS = {
     "max_in_flight": True,
     "max_live_snapshots": True,
 }
-
-
-def numeric(doc: dict, field: str, positive: bool) -> list[str]:
-    if field not in doc:
-        return [f"missing key '{field}'"]
-    v = doc[field]
-    if isinstance(v, bool) or not isinstance(v, (int, float)):
-        return [f"'{field}' must be a number, got {v!r}"]
-    if not math.isfinite(v):
-        return [f"'{field}' must be finite, got {v!r}"]
-    if positive and v <= 0:
-        return [f"'{field}' must be > 0, got {v!r}"]
-    if not positive and v < 0:
-        return [f"'{field}' must be >= 0, got {v!r}"]
-    return []
 
 
 def check_sharded(doc: dict) -> list[str]:
@@ -148,10 +133,9 @@ def check_scenario(doc: dict) -> list[str]:
 
 
 def check_file(path: Path) -> list[str]:
-    try:
-        doc = json.loads(path.read_text(encoding="utf-8"))
-    except (OSError, json.JSONDecodeError) as e:
-        return [f"unreadable: {e}"]
+    doc, problem = load_json(path)
+    if problem:
+        return [problem]
     if not isinstance(doc, dict):
         return ["top level must be an object"]
     bench = doc.get("bench")

@@ -35,6 +35,8 @@ import json
 import sys
 from pathlib import Path
 
+from checklib import hex_bytes
+
 KNOWN_EVENTS = {
     "meta",
     "codec",
@@ -99,18 +101,6 @@ HEX_FIELDS = {
     "broadcast": ["payload"],
     "final": ["model"],
 }
-
-
-def hex_bytes(s, what, errs):
-    """Decode a lowercase-hex byte string, returning its byte length."""
-    if not isinstance(s, str) or len(s) % 2 != 0:
-        errs.append(f"{what}: not an even-length hex string")
-        return 0
-    try:
-        return len(bytes.fromhex(s))
-    except ValueError:
-        errs.append(f"{what}: invalid hex")
-        return 0
 
 
 def check_file(path, want_steps=None, want_final=False):

@@ -70,10 +70,10 @@ Usage:
 """
 
 import argparse
-import json
 import math
 import sys
-from pathlib import Path
+
+from checklib import Checker, load_json
 
 
 def main() -> int:
@@ -94,13 +94,13 @@ def main() -> int:
                     help="net.edge_buffer the edges ran with (tree mode)")
     args = ap.parse_args()
 
-    doc = json.loads(Path(args.report).read_text(encoding="utf-8"))
-    problems: list[str] = []
+    checker = Checker(args.report)
+    check = checker.check
+    doc, problem = load_json(args.report)
+    if problem:
+        checker.fail(problem)
+        return checker.finish()
     tree_mode = bool(args.edge)
-
-    def check(cond: bool, msg: str) -> None:
-        if not cond:
-            problems.append(msg)
 
     check(doc.get("server_steps") == args.steps,
           f"server_steps {doc.get('server_steps')} != {args.steps}")
@@ -251,7 +251,10 @@ def main() -> int:
           f"{len(args.edge)} --edge reports for {args.workers} root workers")
     root_rows = {w.get("worker_id"): w for w in workers}
     for path in args.edge:
-        edoc = json.loads(Path(path).read_text(encoding="utf-8"))
+        edoc, problem = load_json(path)
+        if problem:
+            checker.fail(f"{path}: {problem}")
+            continue
         eid = edoc.get("edge_worker_id")
         tag = f"edge {eid} ({path})"
 
@@ -302,15 +305,14 @@ def main() -> int:
                   f"{tag}: partial wire size {expected_p} != root's "
                   f"{row.get('expected_bytes_per_upload')}")
 
-    for p in problems:
-        print(f"{args.report}: {p}", file=sys.stderr)
-    if not problems:
-        shape = f"{len(args.edge)}-edge tree" if tree_mode else "flat"
-        if args.adaptive:
-            shape += f", {sum(w.get('rekeys', 0) for w in workers)} rekeys"
-        print(f"{args.report}: ok ({shape}, {args.workers} workers, {args.steps} steps, "
-              f"codecs {', '.join(want_codecs)}, grad_ratio {ratio:.4f})")
-    return 1 if problems else 0
+    shape = f"{len(args.edge)}-edge tree" if tree_mode else "flat"
+    if args.adaptive:
+        shape += f", {sum(w.get('rekeys', 0) for w in workers)} rekeys"
+    ratio_s = f"{ratio:.4f}" if isinstance(ratio, (int, float)) else repr(ratio)
+    return checker.finish(
+        f"{shape}, {args.workers} workers, {args.steps} steps, "
+        f"codecs {', '.join(want_codecs)}, grad_ratio {ratio_s}"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Validate `qafel leader --report-json` from the adversarial net-e2e leg.
+
+The robustness CI job runs a real leader with `[fl.robust]` enabled plus
+N worker processes on loopback, one of them launched with
+`--adversary sign_flip` (or `scale:<c>`). This check asserts, from the
+leader's JSON report:
+
+* the run completed the configured number of server steps and every
+  worker joined on protocol v2 and uploaded at least once;
+* byte accounting is **exact** per worker (`upload_bytes == uploads *
+  expected_bytes_per_upload`) and per-worker totals sum to the server's
+  totals — corrupting payload *values* must not change payload *sizes*;
+* the report carries the `robust` config block and per-worker
+  `clipped_updates` / `trimmed_updates` counters, all consistent with
+  the aggregation rule the run used;
+* the rule-specific exclusion invariant:
+  - ``--rule trim``: the trimmed mean **excluded the adversary** — the
+    adversarial worker has `trimmed_updates > 0` and its exclusion rate
+    (trimmed/uploads) strictly exceeds the honest workers' mean rate
+    (sign flips are per-coordinate extremes, honest updates agree);
+  - ``--rule clip``: the adversarial worker has `clipped_updates > 0`
+    and a higher clip rate than the honest mean (for large-norm
+    attacks such as `scale:50`);
+  - ``--rule mean``: every robust counter is zero and the `robust`
+    block reports disabled — the undefended baseline.
+
+Usage:
+  check_robustness.py report.json --steps N --workers N
+                      --adversary-worker ID --rule trim|clip|mean
+                      [--max-grad-ratio X]
+
+Exit code 0 when the report validates, 1 otherwise.
+"""
+
+import argparse
+import math
+import sys
+
+from checklib import Checker, load_json
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report")
+    ap.add_argument("--steps", type=int, required=True)
+    ap.add_argument("--workers", type=int, required=True)
+    ap.add_argument("--adversary-worker", type=int, required=True,
+                    help="worker_id launched with --adversary")
+    ap.add_argument("--rule", choices=["trim", "clip", "mean"], required=True,
+                    help="the [fl.robust] aggregation rule the leader ran")
+    ap.add_argument("--max-grad-ratio", type=float, default=None,
+                    help="require grad_ratio < X (the defended run still descends)")
+    args = ap.parse_args()
+
+    checker = Checker(args.report)
+    check = checker.check
+    doc, problem = load_json(args.report)
+    if problem:
+        checker.fail(problem)
+        return checker.finish()
+
+    check(doc.get("server_steps") == args.steps,
+          f"server_steps {doc.get('server_steps')} != {args.steps}")
+    check(doc.get("broadcasts") == args.steps,
+          f"broadcasts {doc.get('broadcasts')} != {args.steps}")
+    ratio = doc.get("grad_ratio")
+    check(isinstance(ratio, (int, float)) and math.isfinite(ratio),
+          f"grad_ratio missing or non-finite: {ratio!r}")
+    if args.max_grad_ratio is not None and isinstance(ratio, (int, float)):
+        check(ratio < args.max_grad_ratio,
+              f"defended run did not descend: grad_ratio {ratio} >= {args.max_grad_ratio}")
+
+    # the robust config block must match the rule under test
+    robust = doc.get("robust")
+    check(isinstance(robust, dict), f"missing 'robust' config block: {robust!r}")
+    robust = robust if isinstance(robust, dict) else {}
+    if args.rule == "mean":
+        check(robust.get("enabled") is False,
+              f"rule mean but robust.enabled = {robust.get('enabled')!r}")
+    else:
+        check(robust.get("enabled") is True,
+              f"rule {args.rule} but robust.enabled = {robust.get('enabled')!r}")
+    if args.rule == "trim":
+        check(isinstance(robust.get("trim_frac"), (int, float)) and robust["trim_frac"] > 0,
+              f"rule trim but trim_frac = {robust.get('trim_frac')!r}")
+    if args.rule == "clip":
+        check(isinstance(robust.get("clip_norm"), (int, float)) and robust["clip_norm"] > 0,
+              f"rule clip but clip_norm = {robust.get('clip_norm')!r}")
+
+    workers = doc.get("workers")
+    check(isinstance(workers, list) and len(workers) == args.workers,
+          f"expected {args.workers} worker entries, got "
+          f"{len(workers) if isinstance(workers, list) else workers!r}")
+    workers = workers if isinstance(workers, list) else []
+
+    total_uploads = 0
+    total_bytes = 0
+    adversary = None
+    honest = []
+    for w in workers:
+        wid = w.get("worker_id")
+        check(w.get("protocol") == 2, f"worker {wid}: protocol {w.get('protocol')} != 2")
+        uploads = w.get("uploads", 0)
+        check(uploads > 0, f"worker {wid}: never uploaded")
+        # exact byte accounting: the adversary corrupts values, never sizes
+        expected = w.get("expected_bytes_per_upload", 0)
+        check(expected > 0, f"worker {wid}: bad expected_bytes_per_upload {expected!r}")
+        check(w.get("upload_bytes") == uploads * expected,
+              f"worker {wid} ({w.get('codec')}): upload_bytes {w.get('upload_bytes')} != "
+              f"{uploads} uploads x {expected} B")
+        for key in ("clipped_updates", "trimmed_updates"):
+            v = w.get(key)
+            check(isinstance(v, (int, float)) and not isinstance(v, bool) and v >= 0,
+                  f"worker {wid}: bad {key} {v!r}")
+            check(not isinstance(v, (int, float)) or v <= uploads,
+                  f"worker {wid}: {key} {v} exceeds {uploads} uploads")
+        total_uploads += uploads
+        total_bytes += w.get("upload_bytes", 0)
+        if wid == args.adversary_worker:
+            adversary = w
+        else:
+            honest.append(w)
+    check(total_uploads == doc.get("uploads"),
+          f"per-worker uploads {total_uploads} != server total {doc.get('uploads')}")
+    check(total_bytes == doc.get("upload_bytes"),
+          f"per-worker bytes {total_bytes} != server total {doc.get('upload_bytes')}")
+    check(adversary is not None,
+          f"no worker row with the adversarial id {args.adversary_worker}")
+    check(bool(honest), "no honest workers to compare against")
+
+    def rate(w, key):
+        return w.get(key, 0) / max(w.get("uploads", 0), 1)
+
+    if adversary is not None and honest:
+        if args.rule == "trim":
+            # the headline invariant: the trimmed mean excludes the
+            # adversary. Sign-flipped updates are per-coordinate extremes
+            # against an honest majority, so the adversary's rows are
+            # trimmed at a strictly higher rate than the honest mean.
+            check(adversary.get("trimmed_updates", 0) > 0,
+                  "trimmed mean never excluded the adversary")
+            adv_rate = rate(adversary, "trimmed_updates")
+            honest_mean = sum(rate(w, "trimmed_updates") for w in honest) / len(honest)
+            check(adv_rate > honest_mean,
+                  f"adversary trim rate {adv_rate:.3f} not above honest mean "
+                  f"{honest_mean:.3f}")
+        elif args.rule == "clip":
+            check(adversary.get("clipped_updates", 0) > 0,
+                  "clipping never bounded the adversary")
+            adv_rate = rate(adversary, "clipped_updates")
+            honest_mean = sum(rate(w, "clipped_updates") for w in honest) / len(honest)
+            check(adv_rate > honest_mean,
+                  f"adversary clip rate {adv_rate:.3f} not above honest mean "
+                  f"{honest_mean:.3f}")
+        else:  # mean: the undefended baseline records nothing
+            for w in workers:
+                wid = w.get("worker_id")
+                check(w.get("clipped_updates", 0) == 0,
+                      f"worker {wid}: clipped_updates {w.get('clipped_updates')} "
+                      f"with robust aggregation off")
+                check(w.get("trimmed_updates", 0) == 0,
+                      f"worker {wid}: trimmed_updates {w.get('trimmed_updates')} "
+                      f"with robust aggregation off")
+
+    detail = f"rule {args.rule}, {args.workers} workers, {args.steps} steps"
+    if adversary is not None:
+        detail += (f", adversary {args.adversary_worker}: "
+                   f"{adversary.get('clipped_updates', 0)} clipped / "
+                   f"{adversary.get('trimmed_updates', 0)} trimmed "
+                   f"of {adversary.get('uploads', 0)} uploads")
+    return checker.finish(detail)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

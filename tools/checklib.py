@@ -1,0 +1,94 @@
+"""Shared helpers for the `tools/check_*.py` CI validators.
+
+Every validator follows the same shape: load a JSON artifact, accumulate
+human-readable problem strings, print them to stderr and exit non-zero
+if any. The pieces that were copy-pasted between `check_bench.py`,
+`check_journal.py` and `check_net_e2e.py` live here instead:
+
+* ``load_json(path)`` — parse a JSON file, returning ``(doc, problem)``
+  where exactly one side is ``None``;
+* ``numeric(doc, field, positive)`` — require a finite number, either
+  strictly positive or merely non-negative;
+* ``hex_bytes(s, what, errs)`` — decode an even-length hex string,
+  appending problems and returning the byte length;
+* ``Checker`` — a named problem accumulator with the standard
+  ``name: problem`` stderr / ``name: ok`` stdout reporting.
+
+No third-party imports — CI runs these on the stock interpreter.
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def load_json(path):
+    """Parse a JSON file. Returns ``(doc, None)`` or ``(None, problem)``."""
+    try:
+        doc = json.loads(Path(path).read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return None, f"unreadable: {e}"
+    return doc, None
+
+
+def numeric(doc, field, positive):
+    """Problems for a required finite numeric field.
+
+    ``positive=True`` requires ``> 0`` (a zero counter means the thing
+    never ran); ``positive=False`` allows zero but rejects negatives.
+    Returns a list of problem strings (empty when the field is fine).
+    """
+    if field not in doc:
+        return [f"missing key '{field}'"]
+    v = doc[field]
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return [f"'{field}' must be a number, got {v!r}"]
+    if not math.isfinite(v):
+        return [f"'{field}' must be finite, got {v!r}"]
+    if positive and v <= 0:
+        return [f"'{field}' must be > 0, got {v!r}"]
+    if not positive and v < 0:
+        return [f"'{field}' must be >= 0, got {v!r}"]
+    return []
+
+
+def hex_bytes(s, what, errs):
+    """Decode a lowercase-hex byte string, returning its byte length.
+
+    Appends a problem to ``errs`` (and returns 0) when the string is not
+    valid even-length hex.
+    """
+    if not isinstance(s, str) or len(s) % 2 != 0:
+        errs.append(f"{what}: not an even-length hex string")
+        return 0
+    try:
+        return len(bytes.fromhex(s))
+    except ValueError:
+        errs.append(f"{what}: invalid hex")
+        return 0
+
+
+class Checker:
+    """Accumulate problems for one artifact and report them CI-style."""
+
+    def __init__(self, name):
+        self.name = name
+        self.problems = []
+
+    def check(self, cond, msg):
+        if not cond:
+            self.problems.append(msg)
+
+    def fail(self, msg):
+        self.problems.append(msg)
+
+    def finish(self, ok_detail=""):
+        """Print ``name: problem`` lines (stderr) or one ``name: ok``
+        line (stdout); returns the process exit code (0 ok, 1 not)."""
+        for p in self.problems:
+            print(f"{self.name}: {p}", file=sys.stderr)
+        if not self.problems:
+            detail = f" ({ok_detail})" if ok_detail else ""
+            print(f"{self.name}: ok{detail}")
+        return 1 if self.problems else 0
